@@ -1,0 +1,123 @@
+//! End-to-end system driver (DESIGN.md §"End-to-end validation").
+//!
+//! Exercises EVERY layer on a real (synthetic-Europarl) workload:
+//!   data generator → feature hashing → shard files on disk →
+//!   leader/worker coordinator → chunk engine (AOT-compiled XLA via PJRT if
+//!   `make artifacts` has run, else the native engine) → RandomizedCCA →
+//!   train/test objective + feasibility + Horst comparison,
+//! and prints the paper's headline metric (sum of the first k canonical
+//! correlations) plus the pass ledger. The run is recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example synthparl_e2e
+//! ```
+
+use rcca::cca::horst::{Horst, HorstConfig};
+use rcca::cca::objective::{evaluate, feasibility};
+use rcca::cca::rcca::{RandomizedCca, RccaConfig};
+use rcca::experiments::{build_engine, EngineKind, Scale, Workload};
+use rcca::util::timer::Timer;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale {
+        n: 20_000,
+        dims: 4096, // matches the production artifact grid (m=256, d=4096, r=160)
+        topics: 96,
+        k: 60,
+        ..Default::default()
+    };
+    let nu = scale.nu;
+    println!(
+        "== SynthParl end-to-end: n={} d={} k={} nu={} ==",
+        scale.n, scale.dims, scale.k, nu
+    );
+    let t_gen = Timer::start();
+    let workload = Workload::generate(scale);
+    println!(
+        "generate+hash+split: {:.1}s (train {} / test {} rows)",
+        t_gen.secs(),
+        workload.train.rows(),
+        workload.test.rows()
+    );
+
+    // Prefer the AOT/XLA path when artifacts exist; fall back to native.
+    let have_artifacts = Path::new("artifacts/manifest.json").exists();
+    let kind = if have_artifacts {
+        EngineKind::ShardedPjrt
+    } else {
+        eprintln!("note: artifacts/ missing — run `make artifacts` for the XLA path; using native engine");
+        EngineKind::ShardedNative
+    };
+    let workdir = Path::new("work");
+    std::fs::create_dir_all(workdir)?;
+    let mut engine = build_engine(&workload, kind, workdir, 2, 256)?;
+    println!(
+        "engine: {} (coordinator: 2 workers, 256-row chunks, shards on disk)",
+        if have_artifacts { "pjrt (AOT XLA)" } else { "native" }
+    );
+
+    // RandomizedCCA at the paper's headline setting: q=1 → 2 data passes.
+    let (la, lb) = workload.lambdas(nu);
+    let t_fit = Timer::start();
+    let model = RandomizedCca::new(RccaConfig {
+        k: workload.scale.k,
+        p: 100, // k+p = 160 = the compiled artifact width
+        q: 1,
+        lambda_a: la,
+        lambda_b: lb,
+        seed: 0xe2e,
+    })
+    .fit(engine.as_mut())?;
+    let fit_secs = t_fit.secs();
+
+    let train = evaluate(&model, engine.as_mut());
+    let test = evaluate(&model, &mut workload.test_engine());
+    let feas = feasibility(&model, engine.as_mut(), la, lb);
+
+    println!("\n-- RandomizedCCA (k=60, p=100, q=1) --");
+    println!("fit wall time:        {fit_secs:.1}s");
+    println!("data passes (fit):    {}", model.passes);
+    println!("train objective:      {:.3}  (sum of first 60 canonical correlations)", train.sum_corr);
+    println!("test objective:       {:.3}", test.sum_corr);
+    println!(
+        "feasibility:          cov {:.1e}, offdiag {:.1e}",
+        feas.cov_a_err.max(feas.cov_b_err),
+        feas.cross_offdiag
+    );
+
+    // Horst baseline, budgeted at 30 passes, on the sharded *native* engine
+    // (same math, same coordinator; 30 interpret-mode XLA passes would take
+    // ~15 min on one core — `repro table2b` runs the full comparison).
+    let t_h = Timer::start();
+    let mut h_engine = build_engine(&workload, EngineKind::ShardedNative, workdir, 2, 256)?;
+    let (hm, _) = Horst::new(HorstConfig {
+        k: workload.scale.k,
+        lambda_a: la,
+        lambda_b: lb,
+        pass_budget: 30,
+        augment: true,
+        seed: 0x4057,
+        tol: 0.0,
+    })
+    .fit(h_engine.as_mut())?;
+    let h_secs = t_h.secs();
+    let h_train = evaluate(&hm, h_engine.as_mut());
+    let h_test = evaluate(&hm, &mut workload.test_engine());
+    println!("\n-- Horst baseline (30-pass budget, native engine) --");
+    println!("wall time:            {h_secs:.1}s");
+    println!("data passes:          {}", hm.passes);
+    println!("train objective:      {:.3}", h_train.sum_corr);
+    println!("test objective:       {:.3}", h_test.sum_corr);
+
+    println!("\n-- headline --");
+    println!(
+        "RandomizedCCA reached {:.1}% of the Horst-30 train objective in {} passes vs {}.",
+        100.0 * train.sum_corr / h_train.sum_corr,
+        model.passes,
+        30
+    );
+    println!("record this block in EXPERIMENTS.md §E2E");
+    Ok(())
+}

@@ -1,0 +1,107 @@
+"""AOT bridge: lower the L2 chunk programs to HLO text + manifest.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+runtime (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+The shape grid below must cover what the Rust side requests (the PJRT
+engine pads chunks up to the nearest compiled (m, r); see
+rust/src/runtime/pjrt.rs).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (m, d, r) grid: small shapes for the test suite, production shapes for
+# the end-to-end example / benches.  d is both views' hashed dimension.
+DEFAULT_GRID = [
+    (64, 256, 32),       # integration-test shapes
+    (256, 4096, 64),     # k=60 evaluation / Horst power passes
+    (256, 4096, 160),    # k+p = 160 production rcca
+    (256, 4096, 192),    # Horst augmented basis (3k = 180, padded)
+]
+
+ENTRIES = {
+    "power": model.power_chunk,
+    "final": model.final_chunk,
+}
+
+
+def to_hlo_text(fn, shapes) -> str:
+    """Lower a jitted function to HLO text via stablehlo -> XlaComputation.
+
+    return_tuple=True so the Rust side unwraps one tuple regardless of the
+    number of outputs.
+    """
+    lowered = jax.jit(fn).lower(*shapes)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name, fn, m, d, r):
+    f32 = jnp.float32
+    shapes = (
+        jax.ShapeDtypeStruct((m, d), f32),   # a chunk
+        jax.ShapeDtypeStruct((m, d), f32),   # b chunk
+        jax.ShapeDtypeStruct((d, r), f32),   # qa
+        jax.ShapeDtypeStruct((d, r), f32),   # qb
+    )
+    return to_hlo_text(fn, shapes)
+
+
+def build(out_dir: str, grid=None, quiet: bool = False) -> dict:
+    grid = grid or DEFAULT_GRID
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "rcca-artifacts-v1", "entries": []}
+    for (m, d, r) in grid:
+        for name, fn in ENTRIES.items():
+            fname = f"{name}_m{m}_d{d}_r{r}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            text = lower_entry(name, fn, m, d, r)
+            with open(path, "w") as fh:
+                fh.write(text)
+            manifest["entries"].append(
+                {"entry": name, "m": m, "d": d, "r": r, "path": fname}
+            )
+            if not quiet:
+                print(f"lowered {fname}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    if not quiet:
+        print(f"manifest: {len(manifest['entries'])} entries -> {out_dir}/manifest.json")
+    return manifest
+
+
+def parse_grid(text: str):
+    """--grid "64x256x32,256x4096x160" -> [(64,256,32), (256,4096,160)]"""
+    grid = []
+    for part in text.split(","):
+        m, d, r = (int(t) for t in part.strip().split("x"))
+        grid.append((m, d, r))
+    return grid
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--grid", default=None, help="comma list of MxDxR shapes")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    grid = parse_grid(args.grid) if args.grid else None
+    build(args.out, grid, args.quiet)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""L1 Gram-product kernels: thin, documented specializations of matmul_tn.
+
+``gram(p) = P^T P`` and ``cross(p, r) = P^T R`` are the final-pass products
+(Algorithm 1 lines 15-17). They reuse the transposed-read matmul kernel —
+the only difference from a generic matmul is that ``gram``'s output is
+symmetric, which the (symmetric-blind) kernel reproduces to float rounding;
+the pytest suite asserts that symmetry as a kernel invariant.
+"""
+
+from . import matmul
+
+
+def gram(p, **kw):
+    """P^T P for a (m, r) projection chunk -> (r, r)."""
+    return matmul.matmul_tn(p, p, **kw)
+
+
+def cross(p, r, **kw):
+    """P^T R for (m, ra) x (m, rb) projection chunks -> (ra, rb)."""
+    return matmul.matmul_tn(p, r, **kw)

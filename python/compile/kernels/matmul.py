@@ -1,0 +1,111 @@
+"""L1 Pallas kernels: tiled matmuls.
+
+Two variants cover every product in the chunk programs without
+materializing transposes:
+
+  * ``matmul_nn(x, y)``  -> x @ y        (m,k) x (k,n) -> (m,n)
+  * ``matmul_tn(x, y)``  -> x.T @ y      (m,r) x (m,n) -> (r,n)
+
+Kernel structure (the TPU mapping, per DESIGN.md §Hardware-Adaptation):
+the grid iterates over (rows/bm, cols/bn, contraction/bk); each step
+streams one (bm, bk) x (bk, bn) tile pair HBM->VMEM via BlockSpec and
+accumulates a (bm, bn) f32 tile that stays resident in VMEM across the
+contraction loop (`out` block index is independent of the k grid axis, so
+Pallas keeps it in place).  On a real TPU the tiles are 128x128 to match
+the MXU systolic array and inputs would be cast to bf16; under
+``interpret=True`` (mandatory for CPU-PJRT execution, see
+/opt/xla-example/README.md) the same schedule runs as XLA ops.
+
+All executed artifacts use interpret mode; MXU utilization / VMEM
+footprints are estimated analytically in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (keeps the grid exact —
+    no masking needed on any backend)."""
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _mm_kernel(x_ref, y_ref, o_ref, *, k_steps: int):
+    """Shared accumulate kernel: o += x_tile @ y_tile with VMEM-resident o."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_nn(x, y, bm: int = 128, bn: int = 128, bk: int = 256):
+    """x @ y via the tiled Pallas kernel. Shapes (m,k) @ (k,n) -> (m,n)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU-PJRT execution path; see module docstring
+    )(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bn", "bm"))
+def matmul_tn(x, y, br: int = 128, bn: int = 128, bm: int = 256):
+    """x.T @ y via a transposed-index BlockSpec (no transpose materialized).
+
+    Shapes: x is (m, r), y is (m, n) -> (r, n); the contraction runs over m.
+    """
+    m, r = x.shape
+    m2, n = y.shape
+    assert m == m2, f"contraction mismatch {m} vs {m2}"
+    br = _pick_block(r, br)
+    bn = _pick_block(n, bn)
+    bm = _pick_block(m, bm)
+    grid = (r // br, n // bn, m // bm)
+
+    def kernel(x_ref, y_ref, o_ref):
+        ki = pl.program_id(2)
+
+        @pl.when(ki == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        # x tile arrives as (bm, br); contract its leading axis.
+        o_ref[...] += jnp.dot(
+            x_ref[...].T, y_ref[...], preferred_element_type=jnp.float32
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, br), lambda i, j, l: (l, i)),
+            pl.BlockSpec((bm, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=True,
+    )(x, y)

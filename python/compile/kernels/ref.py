@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels and the chunk programs.
+
+Everything here is straight textbook math; the kernels and the lowered
+artifacts are validated against these by pytest (and the Rust integration
+tests validate the PJRT engine against the Rust native engine, closing the
+chain end to end).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_nn(x, y):
+    return jnp.matmul(x, y)
+
+
+def matmul_tn(x, y):
+    return jnp.matmul(x.T, y)
+
+
+def power_chunk(a, b, qa, qb):
+    """Algorithm 1 lines 7-8, restricted to one chunk:
+    Ya = A^T (B Qb), Yb = B^T (A Qa)."""
+    ya = jnp.matmul(a.T, jnp.matmul(b, qb))
+    yb = jnp.matmul(b.T, jnp.matmul(a, qa))
+    return ya, yb
+
+
+def final_chunk(a, b, qa, qb):
+    """Algorithm 1 lines 15-17, one chunk:
+    Ca = Qa^T A^T A Qa, Cb = Qb^T B^T B Qb, F = Qa^T A^T B Qb."""
+    pa = jnp.matmul(a, qa)
+    pb = jnp.matmul(b, qb)
+    return jnp.matmul(pa.T, pa), jnp.matmul(pb.T, pb), jnp.matmul(pa.T, pb)

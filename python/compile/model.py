@@ -1,0 +1,38 @@
+"""L2: chunk-level compute graphs, composed from the L1 Pallas kernels.
+
+These are the functions the Rust coordinator executes per chunk through
+PJRT. They are lowered ONCE by ``aot.py`` to HLO text; Python never runs on
+the request path.
+
+Shapes (all f32):
+  a, b   : (m, d)   -- densified chunk rows of the two views
+  qa, qb : (d, r)   -- current projection bases (broadcast by the leader)
+"""
+
+from .kernels import gram, matmul
+
+
+def power_chunk(a, b, qa, qb):
+    """Range-finder pass products (Algorithm 1 lines 7-8) for one chunk.
+
+    Returns (Ya_partial, Yb_partial), each (d, r); the leader sums partials
+    over chunks/shards.
+    """
+    bq = matmul.matmul_nn(b, qb)      # (m, r)
+    ya = matmul.matmul_tn(a, bq)      # (d, r)
+    aq = matmul.matmul_nn(a, qa)
+    yb = matmul.matmul_tn(b, aq)
+    return ya, yb
+
+
+def final_chunk(a, b, qa, qb):
+    """Final-optimization pass products (lines 15-17) for one chunk.
+
+    Returns (Ca, Cb, F) partials, each (r, r).
+    """
+    pa = matmul.matmul_nn(a, qa)      # (m, r)
+    pb = matmul.matmul_nn(b, qb)
+    ca = gram.gram(pa)
+    cb = gram.gram(pb)
+    f = gram.cross(pa, pb)
+    return ca, cb, f

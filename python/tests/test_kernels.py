@@ -1,0 +1,120 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; fixed cases pin the production tile shapes.
+This is the core correctness signal for the compute layer.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import gram, matmul, ref
+
+RNG = np.random.default_rng(0xCCA)
+
+
+def randf(*shape):
+    return RNG.standard_normal(shape, dtype=np.float32)
+
+
+def assert_close(got, want, rtol=5e-5, atol=5e-5):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol)
+
+
+# --------------------------------------------------------------------
+# matmul_nn
+# --------------------------------------------------------------------
+
+dims = st.integers(min_value=1, max_value=96)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims)
+def test_matmul_nn_matches_ref(m, k, n):
+    x, y = randf(m, k), randf(k, n)
+    assert_close(matmul.matmul_nn(x, y), ref.matmul_nn(x, y))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, r=dims, n=dims)
+def test_matmul_tn_matches_ref(m, r, n):
+    x, y = randf(m, r), randf(m, n)
+    assert_close(matmul.matmul_tn(x, y), ref.matmul_tn(x, y))
+
+
+@pytest.mark.parametrize("shape", [(64, 256, 32), (256, 512, 160), (128, 128, 128)])
+def test_production_tile_shapes_nn(shape):
+    m, k, n = shape
+    x, y = randf(m, k), randf(k, n)
+    assert_close(matmul.matmul_nn(x, y), ref.matmul_nn(x, y))
+
+
+@pytest.mark.parametrize("shape", [(64, 32, 32), (256, 160, 160)])
+def test_production_tile_shapes_tn(shape):
+    m, r, n = shape
+    x, y = randf(m, r), randf(m, n)
+    assert_close(matmul.matmul_tn(x, y), ref.matmul_tn(x, y))
+
+
+def test_matmul_identity():
+    x = randf(32, 32)
+    assert_close(matmul.matmul_nn(x, np.eye(32, dtype=np.float32)), x)
+
+
+def test_matmul_zero():
+    x = randf(16, 24)
+    z = np.zeros((24, 8), dtype=np.float32)
+    out = np.asarray(matmul.matmul_nn(x, z))
+    assert np.all(out == 0.0)
+
+
+def test_block_sizes_do_not_change_result():
+    x, y = randf(64, 96), randf(96, 48)
+    want = ref.matmul_nn(x, y)
+    for bm, bn, bk in [(8, 8, 8), (16, 48, 32), (64, 48, 96), (128, 128, 256)]:
+        assert_close(matmul.matmul_nn(x, y, bm=bm, bn=bn, bk=bk), want)
+
+
+def test_prime_shapes_exercise_block_fallback():
+    # 17, 7, 13 share no factors with the preferred blocks; _pick_block must
+    # fall back to exact divisors.
+    x, y = randf(17, 7), randf(7, 13)
+    assert_close(matmul.matmul_nn(x, y), ref.matmul_nn(x, y))
+
+
+def test_f64_inputs_are_accumulated_as_f32():
+    # Kernel contract is f32; passing f64 must still produce f32 output.
+    x = RNG.standard_normal((8, 8))
+    y = RNG.standard_normal((8, 8))
+    out = matmul.matmul_nn(x.astype(np.float32), y.astype(np.float32))
+    assert np.asarray(out).dtype == np.float32
+
+
+# --------------------------------------------------------------------
+# gram kernels
+# --------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, r=st.integers(min_value=1, max_value=48))
+def test_gram_matches_ref_and_is_symmetric(m, r):
+    p = randf(m, r)
+    g = np.asarray(gram.gram(p))
+    assert_close(g, ref.matmul_tn(p, p))
+    assert_close(g, g.T, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, ra=st.integers(min_value=1, max_value=32), rb=st.integers(min_value=1, max_value=32))
+def test_cross_matches_ref(m, ra, rb):
+    p, q = randf(m, ra), randf(m, rb)
+    assert_close(gram.cross(p, q), ref.matmul_tn(p, q))
+
+
+def test_gram_psd():
+    p = randf(40, 12)
+    g = np.asarray(gram.gram(p), dtype=np.float64)
+    w = np.linalg.eigvalsh((g + g.T) / 2)
+    assert w.min() > -1e-3

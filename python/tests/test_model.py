@@ -1,0 +1,105 @@
+"""L2 correctness: chunk programs vs oracles + chunk-additivity invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xF00D)
+
+
+def randf(*shape):
+    return RNG.standard_normal(shape, dtype=np.float32)
+
+
+def assert_close(got, want, tol=5e-4):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+small = st.integers(min_value=1, max_value=48)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=small, d=small, r=st.integers(min_value=1, max_value=24))
+def test_power_chunk_matches_ref(m, d, r):
+    a, b = randf(m, d), randf(m, d)
+    qa, qb = randf(d, r), randf(d, r)
+    ya, yb = model.power_chunk(a, b, qa, qb)
+    rya, ryb = ref.power_chunk(a, b, qa, qb)
+    assert_close(ya, rya)
+    assert_close(yb, ryb)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=small, d=small, r=st.integers(min_value=1, max_value=24))
+def test_final_chunk_matches_ref(m, d, r):
+    a, b = randf(m, d), randf(m, d)
+    qa, qb = randf(d, r), randf(d, r)
+    ca, cb, f = model.final_chunk(a, b, qa, qb)
+    rca, rcb, rf = ref.final_chunk(a, b, qa, qb)
+    assert_close(ca, rca)
+    assert_close(cb, rcb)
+    assert_close(f, rf)
+
+
+def test_power_chunk_additive_over_rows():
+    # The coordinator's reduction invariant at the L2 level: partials over
+    # row-slices sum to the whole-chunk result.
+    m, d, r = 64, 96, 8
+    a, b = randf(m, d), randf(m, d)
+    qa, qb = randf(d, r), randf(d, r)
+    whole_a, whole_b = model.power_chunk(a, b, qa, qb)
+    h = m // 2
+    top = model.power_chunk(a[:h], b[:h], qa, qb)
+    bot = model.power_chunk(a[h:], b[h:], qa, qb)
+    assert_close(np.asarray(top[0]) + np.asarray(bot[0]), whole_a)
+    assert_close(np.asarray(top[1]) + np.asarray(bot[1]), whole_b)
+
+
+def test_zero_row_padding_is_exact():
+    # PJRT engine pads chunks with zero rows: results must be identical.
+    m, d, r = 40, 64, 6
+    a, b = randf(m, d), randf(m, d)
+    qa, qb = randf(d, r), randf(d, r)
+    pad = np.zeros((24, d), dtype=np.float32)
+    ya, yb = model.power_chunk(a, b, qa, qb)
+    pya, pyb = model.power_chunk(
+        np.vstack([a, pad]), np.vstack([b, pad]), qa, qb
+    )
+    assert_close(pya, ya, tol=1e-5)
+    assert_close(pyb, yb, tol=1e-5)
+    ca, cb, f = model.final_chunk(a, b, qa, qb)
+    pca, pcb, pf = model.final_chunk(np.vstack([a, pad]), np.vstack([b, pad]), qa, qb)
+    assert_close(pca, ca, tol=1e-5)
+    assert_close(pcb, cb, tol=1e-5)
+    assert_close(pf, f, tol=1e-5)
+
+
+def test_zero_column_padding_is_exact():
+    # PJRT engine pads Q with zero columns; the extra output columns must be
+    # exactly the zero function of the inputs and the leading block unchanged.
+    m, d, r, rp = 32, 64, 5, 8
+    a, b = randf(m, d), randf(m, d)
+    qa, qb = randf(d, r), randf(d, r)
+    qa_p = np.hstack([qa, np.zeros((d, rp - r), dtype=np.float32)])
+    qb_p = np.hstack([qb, np.zeros((d, rp - r), dtype=np.float32)])
+    ya, yb = model.power_chunk(a, b, qa, qb)
+    pya, pyb = model.power_chunk(a, b, qa_p, qb_p)
+    assert_close(np.asarray(pya)[:, :r], ya, tol=1e-5)
+    assert_close(np.asarray(pyb)[:, :r], yb, tol=1e-5)
+    ca, cb, f = model.final_chunk(a, b, qa, qb)
+    pca, pcb, pf = model.final_chunk(a, b, qa_p, qb_p)
+    assert_close(np.asarray(pca)[:r, :r], ca, tol=1e-5)
+    assert_close(np.asarray(pf)[:r, :r], f, tol=1e-5)
+    assert_close(np.asarray(pcb)[:r, :r], cb, tol=1e-5)
+
+
+def test_gram_outputs_symmetric_psd():
+    m, d, r = 48, 32, 6
+    a, b = randf(m, d), randf(m, d)
+    qa, qb = randf(d, r), randf(d, r)
+    ca, cb, _ = model.final_chunk(a, b, qa, qb)
+    for g in (np.asarray(ca, dtype=np.float64), np.asarray(cb, dtype=np.float64)):
+        np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-5)
+        assert np.linalg.eigvalsh((g + g.T) / 2).min() > -1e-3

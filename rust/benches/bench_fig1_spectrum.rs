@@ -1,0 +1,38 @@
+//! Bench E1 — regenerates Figure 1: spectrum of (1/n)AᵀB via two-pass
+//! randomized SVD, with wall-time measurement of the estimator.
+
+mod common;
+
+use rcca::experiments::{e1_spectrum, Workload};
+use rcca::util::timer::Timer;
+
+fn main() {
+    let scale = common::bench_scale();
+    println!(
+        "# Figure 1 bench (n={}, d={}, scale via RCCA_BENCH_SCALE)\n",
+        scale.n, scale.dims
+    );
+    let top = (scale.dims / 8).clamp(32, 512);
+    let t = Timer::start();
+    let workload = Workload::generate(scale);
+    println!("workload generation: {:.1}s", t.secs());
+
+    let mut engine = workload.train_engine();
+    let t = Timer::start();
+    let res = e1_spectrum::run(&mut engine, &workload, top, top / 4, 0x57ec);
+    println!(
+        "two-pass randomized SVD (top {top} values): {:.2}s, {} passes\n",
+        t.secs(),
+        res.passes
+    );
+    common::emit(&e1_spectrum::report(&res, (top / 32).max(1)));
+
+    // Paper-shape assertions (who wins / what decays), not absolute values.
+    assert_eq!(res.passes, 2, "Figure 1 estimator must use two passes");
+    assert!(
+        res.loglog_slope < -0.2,
+        "spectrum must show power-law decay (slope {})",
+        res.loglog_slope
+    );
+    println!("shape check: PASS (two passes, power-law decay slope {:.3})", res.loglog_slope);
+}

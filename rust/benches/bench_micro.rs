@@ -1,0 +1,217 @@
+//! Micro-benches (P1–P4 in DESIGN.md §6): engine and substrate hot paths.
+//!
+//!   P1  GEMM roofline — f32 dense matmul GFLOP/s (the native final-pass core)
+//!   P2  sparse-native vs dense-PJRT chunk crossover (the engine choice)
+//!   P3  hashing + generator throughput (data-plane cost)
+//!   P4  coordinator overhead — pass cost vs raw engine cost, pool latency
+//!
+//! These feed EXPERIMENTS.md §Perf (before/after iteration log).
+
+mod common;
+
+use rcca::bench::bench_fn;
+use rcca::data::synthparl::{SynthParl, SynthParlConfig};
+use rcca::data::TwoViewChunk;
+use rcca::linalg::gemm::{sgemm_nn, sgemm_tn};
+use rcca::linalg::Mat;
+use rcca::runtime::{mat_to_f32, ChunkEngine, NativeEngine};
+use rcca::util::pool::Pool;
+use rcca::util::rng::Rng;
+use std::path::Path;
+
+fn main() {
+    println!("# micro benches (P1–P4)\n");
+    p1_gemm();
+    p2_engines();
+    p3_dataplane();
+    p4_coordinator();
+}
+
+fn p1_gemm() {
+    println!("## P1: f32 GEMM");
+    let mut rng = Rng::new(1);
+    for &(m, k, n) in &[(256usize, 1024usize, 160usize), (256, 4096, 160), (512, 512, 512)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut c = vec![0f32; m * n];
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let stats = bench_fn(&format!("sgemm_nn {m}x{k}x{n}"), || {
+            c.fill(0.0);
+            sgemm_nn(m, k, n, &a, &b, &mut c);
+        });
+        println!("    -> {:.2} GFLOP/s", flops / stats.p50 / 1e9);
+        let mut ct = vec![0f32; k.min(1024) * n];
+        let kt = k.min(1024);
+        let at: Vec<f32> = (0..m * kt).map(|_| rng.normal() as f32).collect();
+        let bt: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        let flops_t = 2.0 * m as f64 * kt as f64 * n as f64;
+        let stats = bench_fn(&format!("sgemm_tn {m}x{kt}x{n}"), || {
+            ct.fill(0.0);
+            sgemm_tn(m, kt, n, &at, &bt, &mut ct);
+        });
+        println!("    -> {:.2} GFLOP/s", flops_t / stats.p50 / 1e9);
+    }
+    println!();
+}
+
+fn bench_chunk(dims: usize, mean_len: f64) -> TwoViewChunk {
+    let d = SynthParl::generate(SynthParlConfig {
+        n: 256,
+        dims,
+        topics: 16,
+        words_per_topic: 20,
+        background_words: 64,
+        mean_len,
+        seed: 3,
+        ..Default::default()
+    });
+    TwoViewChunk { a: d.a, b: d.b }
+}
+
+fn p2_engines() {
+    println!("## P2: chunk engines — sparse-native vs dense-XLA (PJRT)");
+    let have_artifacts = Path::new("artifacts/manifest.json").exists();
+    let native = NativeEngine::new();
+    let pjrt = if have_artifacts {
+        match rcca::runtime::PjrtEngine::open(Path::new("artifacts")) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                println!("  (pjrt unavailable: {e})");
+                None
+            }
+        }
+    } else {
+        println!("  (artifacts missing; run `make artifacts` for the PJRT side)");
+        None
+    };
+
+    // Density sweep: hashed BoW is ~0.4% dense at mean_len 16 / d 4096; at
+    // shorter docs the native path wins harder. The artifact d=256 grid is
+    // used for the PJRT side (r=32), matching chunk m=64.
+    for &mean_len in &[8.0f64, 32.0, 128.0] {
+        let chunk = {
+            let d = SynthParl::generate(SynthParlConfig {
+                n: 64,
+                dims: 256,
+                topics: 8,
+                words_per_topic: 16,
+                background_words: 32,
+                mean_len,
+                seed: 5,
+                ..Default::default()
+            });
+            TwoViewChunk { a: d.a, b: d.b }
+        };
+        let density = chunk.a.density();
+        let mut rng = Rng::new(7);
+        let qa = mat_to_f32(&Mat::randn(256, 32, &mut rng));
+        let qb = mat_to_f32(&Mat::randn(256, 32, &mut rng));
+        let sn = bench_fn(&format!("native power_chunk d=256 r=32 density={density:.3}"), || {
+            native.power_chunk(&chunk, &qa, &qb, 32).unwrap();
+        });
+        if let Some(p) = &pjrt {
+            let sp = bench_fn(&format!("pjrt   power_chunk d=256 r=32 density={density:.3}"), || {
+                p.power_chunk(&chunk, &qa, &qb, 32).unwrap();
+            });
+            println!(
+                "    -> native/pjrt p50 ratio: {:.2} (native {} at this density)",
+                sp.p50 / sn.p50,
+                if sp.p50 > sn.p50 { "wins" } else { "loses" }
+            );
+        }
+    }
+    println!();
+}
+
+fn p3_dataplane() {
+    println!("## P3: data plane");
+    let stats = bench_fn("synthparl generate+hash n=2000 d=2048", || {
+        let _ = bench_chunk(2048, 16.0);
+        // bench_chunk generates 256 rows; generate a bigger one inline:
+    });
+    let _ = stats;
+    let mut chunk = bench_chunk(2048, 16.0);
+    let rows = chunk.rows();
+    let nnz = chunk.a.nnz();
+    let stats = bench_fn("csr densify 256x2048", || {
+        let mut buf = vec![0f32; rows * 2048];
+        chunk.a.densify_rows(0, rows, &mut buf);
+    });
+    println!(
+        "    -> {:.1} MB/s densified ({nnz} nnz)",
+        (rows * 2048 * 4) as f64 / stats.p50 / 1e6
+    );
+    let enc = rcca::data::shards::encode_shard(&chunk);
+    println!("  shard encode: {} bytes for {} rows", enc.len(), rows);
+    let stats = bench_fn("shard decode+validate", || {
+        let _ = rcca::data::shards::decode_shard(&enc).unwrap();
+    });
+    println!(
+        "    -> {:.1} MB/s decode",
+        enc.len() as f64 / stats.p50 / 1e6
+    );
+    chunk.a.values[0] += 0.0; // keep mutable binding honest
+    println!();
+}
+
+fn p4_coordinator() {
+    println!("## P4: coordinator overhead");
+    // Pool task round-trip latency.
+    let pool = Pool::new(2, 64);
+    let stats = bench_fn("pool submit+wait_idle x64 noop tasks", || {
+        for _ in 0..64 {
+            pool.submit(|| {});
+        }
+        pool.wait_idle();
+    });
+    println!(
+        "    -> {:.2} µs/task scheduling overhead",
+        stats.p50 / 64.0 * 1e6
+    );
+
+    // Full pass cost vs sum of raw engine chunk costs.
+    use rcca::coordinator::{ShardedPass, ShardedPassConfig};
+    use rcca::data::shards::{ShardStore, ShardWriter};
+    let d = SynthParl::generate(SynthParlConfig {
+        n: 4096,
+        dims: 1024,
+        topics: 16,
+        words_per_topic: 20,
+        background_words: 64,
+        mean_len: 16.0,
+        seed: 11,
+        ..Default::default()
+    });
+    let dir = std::env::temp_dir().join("rcca_bench_micro");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut w = ShardWriter::create(&dir, 512).unwrap();
+    w.write_dataset(&d.a, &d.b).unwrap();
+    let store = ShardStore::open(&dir).unwrap();
+    let mut sharded = ShardedPass::new(
+        store,
+        std::sync::Arc::new(NativeEngine::new()),
+        ShardedPassConfig {
+            workers: 2,
+            chunk_rows: 256,
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(13);
+    let qa = Mat::randn(1024, 64, &mut rng);
+    let qb = Mat::randn(1024, 64, &mut rng);
+    use rcca::cca::pass::PassEngine;
+    let stats = bench_fn("coordinator power_pass n=4096 d=1024 r=64", || {
+        let _ = sharded.power_pass(&qa, &qb);
+    });
+    let m = sharded.metrics.snapshot();
+    println!(
+        "    -> pass p50 {:.1}ms; engine share {:.0}%; metrics {m}",
+        stats.p50 * 1e3,
+        100.0 * m.get("engine_secs").unwrap().as_f64().unwrap()
+            / (m.get("engine_secs").unwrap().as_f64().unwrap()
+                + m.get("load_secs").unwrap().as_f64().unwrap()
+                + m.get("reduce_secs").unwrap().as_f64().unwrap()).max(1e-9)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    println!();
+}

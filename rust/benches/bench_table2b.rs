@@ -1,0 +1,71 @@
+//! Bench E3 — regenerates Table 2b: running times, train/test canonical
+//! correlations for RandomizedCCA (q,p grid), Horst (same ν), Horst (best
+//! ν), and Horst+rcca, including the pass-count-to-accuracy comparison.
+
+mod common;
+
+use rcca::experiments::{e3_table, Workload};
+use rcca::util::timer::Timer;
+
+fn main() {
+    let scale = common::gen_scale();
+    println!("# Table 2b bench (n={}, d={}, k={})\n", scale.n, scale.dims, scale.k);
+    let workload = Workload::generate(scale);
+    let cfg = e3_table::TableConfig::scaled(&workload);
+    let t = Timer::start();
+    let res = e3_table::run(&workload, &cfg).expect("table");
+    println!("table wall time: {:.1}s\n", t.secs());
+    common::emit(&e3_table::report(&res));
+
+    // Paper-shape checks.
+    let row = |label: &str| {
+        res.rows
+            .iter()
+            .find(|r| r.label == label)
+            .unwrap_or_else(|| panic!("missing row {label}"))
+    };
+    let horst_same = row("Horst (same nu)");
+    let horst_best = row("Horst (best nu)");
+    let rcca_rows: Vec<_> = res.rows.iter().filter(|r| r.label == "rcca").collect();
+    let best_rcca_test = rcca_rows.iter().map(|r| r.test).fold(f64::MIN, f64::max);
+
+    let mut ok = true;
+    // 1. Horst (same ν) overfits: its train-test gap exceeds rcca's best.
+    let rcca_gap = rcca_rows
+        .iter()
+        .map(|r| r.train - r.test)
+        .fold(f64::MIN, f64::max);
+    if horst_same.train - horst_same.test <= rcca_gap {
+        println!("shape DEVIATION: Horst(same nu) gap not larger than rcca's");
+        ok = false;
+    }
+    // 2. Best-ν Horst fixes the test objective (close to or above rcca's).
+    if horst_best.test < best_rcca_test * 0.9 {
+        println!("shape DEVIATION: Horst(best nu) test far below rcca");
+        ok = false;
+    }
+    // 3. Warm start no slower than cold to the same accuracy.
+    if res.passes_warm_to_target > res.passes_cold_to_target {
+        println!(
+            "shape DEVIATION: warm {} > cold {} passes",
+            res.passes_warm_to_target, res.passes_cold_to_target
+        );
+        ok = false;
+    }
+    // 4. Time grows with q at fixed p.
+    let times: Vec<f64> = rcca_rows
+        .iter()
+        .filter(|r| r.p == Some(workload.scale.p_large))
+        .map(|r| r.secs)
+        .collect();
+    // Generous 2x tolerance: single-core wall times have multi-second
+    // scheduling spikes; the content columns are what the table pins.
+    if times.windows(2).any(|w| w[1] < w[0] * 0.5) {
+        println!("shape DEVIATION: time not increasing with q: {times:?}");
+        ok = false;
+    }
+    println!(
+        "shape check: {}",
+        if ok { "PASS (overfit gap, best-nu recovery, warm-start wins, time↑q)" } else { "see deviations above" }
+    );
+}

@@ -1,0 +1,47 @@
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+//! Shared bench-scale config. `RCCA_BENCH_SCALE=full` reproduces the
+//! EXPERIMENTS.md numbers; the default `quick` keeps `cargo bench` under a
+//! few minutes on one core while preserving every qualitative shape.
+
+use rcca::experiments::Scale;
+
+pub fn bench_scale() -> Scale {
+    match std::env::var("RCCA_BENCH_SCALE").as_deref() {
+        Ok("full") => Scale::default(), // n=30k, d=4096, k=60
+        Ok("tiny") => Scale::tiny(),
+        _ => Scale {
+            n: 8_000,
+            dims: 1024,
+            topics: 64,
+            k: 30,
+            p_small: 20,
+            p_large: 120,
+            nu: 0.01,
+            test_fraction: 0.1,
+            seed: 0xbe9c4,
+            ..Scale::default()
+        },
+    }
+}
+
+/// Workload for the generalization experiments (Table 2b, Figure 3):
+/// Scale::generalization() reproduces the paper's overfitting regime
+/// (raw counts, weak-tail correlations, large d/n — DESIGN.md §3).
+pub fn gen_scale() -> Scale {
+    match std::env::var("RCCA_BENCH_SCALE").as_deref() {
+        Ok("tiny") => Scale::tiny(),
+        _ => Scale::generalization(),
+    }
+}
+
+pub fn report_dir() -> String {
+    std::env::var("RCCA_REPORT_DIR").unwrap_or_else(|_| "reports".to_string())
+}
+
+pub fn emit(report: &rcca::bench::Report) {
+    println!("{}", report.render());
+    match report.write_json(&report_dir()) {
+        Ok(p) => println!("json: {p}\n"),
+        Err(e) => eprintln!("warning: could not write json: {e}"),
+    }
+}

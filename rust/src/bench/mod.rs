@@ -1,0 +1,135 @@
+//! Benchmark harness (criterion replacement).
+//!
+//! Two kinds of measurement:
+//! * [`bench_fn`] — micro-benchmark: warmup, then repeated timed iterations
+//!   with mean / p50 / p95 / stddev reporting;
+//! * [`Report`] — table builder used by the paper-reproduction benches so
+//!   that every bench target prints the same rows/series the paper reports,
+//!   and can dump machine-readable JSON next to the human table.
+
+pub mod report;
+
+pub use report::Report;
+
+use crate::util::timer::{fmt_secs, Timer};
+
+/// Summary statistics over per-iteration wall times (seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        let pct = |q: f64| samples[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            iters: n,
+            mean,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            min: samples[0],
+            max: samples[n - 1],
+            stddev: var.sqrt(),
+        }
+    }
+
+    pub fn line(&self, name: &str) -> String {
+        format!(
+            "{name:<44} {:>10}/iter  p50 {:>10}  p95 {:>10}  ±{:>9}  ({} iters)",
+            fmt_secs(self.mean),
+            fmt_secs(self.p50),
+            fmt_secs(self.p95),
+            fmt_secs(self.stddev),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then timed runs until both
+/// `min_iters` iterations and `min_secs` seconds of measurement accumulate
+/// (capped at `max_iters`).
+pub fn bench_fn<F: FnMut()>(name: &str, mut f: F) -> Stats {
+    bench_fn_cfg(name, 2, 5, 200, 0.5, &mut f)
+}
+
+pub fn bench_fn_cfg<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    min_iters: usize,
+    max_iters: usize,
+    min_secs: f64,
+    f: &mut F,
+) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let total = Timer::start();
+    loop {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+        if samples.len() >= max_iters {
+            break;
+        }
+        if samples.len() >= min_iters && total.secs() >= min_secs {
+            break;
+        }
+    }
+    let stats = Stats::from_samples(samples);
+    println!("{}", stats.line(name));
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_samples() {
+        let s = Stats::from_samples(vec![2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.p95, 2.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.iters, 10);
+    }
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let s = Stats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!((s.p95 - 95.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn bench_fn_runs_at_least_min_iters() {
+        let mut count = 0usize;
+        let stats = bench_fn_cfg("noop", 1, 7, 7, 0.0, &mut || {
+            count += 1;
+        });
+        assert_eq!(stats.iters, 7);
+        assert_eq!(count, 8); // warmup + 7 timed
+    }
+
+    #[test]
+    fn line_formats() {
+        let s = Stats::from_samples(vec![0.001, 0.002, 0.003]);
+        let l = s.line("gemm");
+        assert!(l.contains("gemm"));
+        assert!(l.contains("iters"));
+    }
+}

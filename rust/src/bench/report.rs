@@ -1,0 +1,190 @@
+//! Tabular report builder: each paper table/figure bench prints rows in the
+//! paper's own format and dumps a JSON twin for tooling.
+
+use crate::util::json::{jarr, jnum, jstr, Json};
+
+/// A column-aligned table with a title, mirroring one paper artifact.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes printed under the table (e.g. "dashed line = Horst 120").
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: &str, columns: &[&str]) -> Report {
+        Report {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn note(&mut self, s: &str) {
+        self.notes.push(s.to_string());
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect();
+        out.push_str(&header.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    /// JSON twin (written next to bench output for tooling / EXPERIMENTS.md).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("title", jstr(&self.title));
+        o.set(
+            "columns",
+            jarr(self.columns.iter().map(|c| jstr(c)).collect()),
+        );
+        o.set(
+            "rows",
+            jarr(self
+                .rows
+                .iter()
+                .map(|r| {
+                    jarr(r
+                        .iter()
+                        .map(|c| match c.parse::<f64>() {
+                            Ok(x) => jnum(x),
+                            Err(_) => jstr(c),
+                        })
+                        .collect())
+                })
+                .collect()),
+        );
+        o.set("notes", jarr(self.notes.iter().map(|n| jstr(n)).collect()));
+        o
+    }
+
+    /// Write the JSON twin under `dir/<slug>.json`.
+    pub fn write_json(&self, dir: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let slug: String = self
+            .title
+            .to_lowercase()
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c } else { '_' })
+            .collect();
+        let path = format!("{dir}/{slug}.json");
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+/// Format helper: fixed 3-decimal cell.
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Format helper: seconds cell with 1 decimal (matches paper's "time (s)").
+pub fn secs1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut r = Report::new("Table 2b", &["q", "p", "Train", "Test", "time (s)"]);
+        r.row(&[
+            "0".into(),
+            "910".into(),
+            "38.942".into(),
+            "38.797".into(),
+            "190".into(),
+        ]);
+        r.row(&[
+            "Horst".into(),
+            "".into(),
+            "58.100".into(),
+            "45.773".into(),
+            "899".into(),
+        ]);
+        r.note("same-ν overfits");
+        let s = r.render();
+        assert!(s.contains("Table 2b"));
+        assert!(s.contains("38.942"));
+        assert!(s.contains("note: same-ν overfits"));
+        // alignment: all data lines same width
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut r = Report::new("t", &["a", "b"]);
+        r.row(&["1".into()]);
+    }
+
+    #[test]
+    fn json_twin_parses_numbers() {
+        let mut r = Report::new("Fig 1", &["rank", "sigma"]);
+        r.row(&["1".into(), "0.25".into()]);
+        r.row(&["2".into(), "0.125".into()]);
+        let j = r.to_json();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].as_arr().unwrap()[1].as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn write_json_roundtrip() {
+        let mut r = Report::new("unit test table", &["x"]);
+        r.row(&["1".into()]);
+        let dir = std::env::temp_dir().join("rcca_report_test");
+        let path = r.write_json(dir.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("title").unwrap().as_str().unwrap(),
+            "unit test table"
+        );
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f3(1.23456), "1.235");
+        assert_eq!(secs1(12.34), "12.3");
+    }
+}

@@ -1,0 +1,157 @@
+//! Exact CCA oracle for small dense problems (test reference).
+//!
+//! Solves the regularized CCA problem by explicit whitening:
+//! `T = (AᵀA + λaI)^{-1/2} · AᵀB · (BᵀB + λbI)^{-1/2}`, SVD of T, and
+//! mapping back. O(d³) — only for test-scale d, as the paper notes ("for
+//! moderate sized design matrices an SVD directly reveals the solution").
+
+use super::CcaModel;
+use crate::linalg::eig::inv_sqrt_spd;
+use crate::linalg::svd::svd_truncated;
+use crate::linalg::{matmul, matmul_tn, Mat};
+
+/// Exact regularized CCA via whitened SVD on dense views.
+pub fn exact_cca(a: &Mat, b: &Mat, k: usize, lambda_a: f64, lambda_b: f64) -> CcaModel {
+    assert_eq!(a.rows, b.rows, "views must be row-aligned");
+    let n = a.rows;
+    let mut ca = matmul_tn(a, a);
+    ca.add_diag(lambda_a);
+    let mut cb = matmul_tn(b, b);
+    cb.add_diag(lambda_b);
+    let cab = matmul_tn(a, b);
+
+    let wa = inv_sqrt_spd(&ca, 1e-12);
+    let wb = inv_sqrt_spd(&cb, 1e-12);
+    let t = matmul(&matmul(&wa, &cab), &wb);
+    let (u, sigma, v) = svd_truncated(&t, k);
+
+    let sqrt_n = (n as f64).sqrt();
+    let xa = matmul(&wa, &u).scaled(sqrt_n);
+    let xb = matmul(&wb, &v).scaled(sqrt_n);
+    CcaModel {
+        xa,
+        xb,
+        sigma,
+        passes: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Construct two views with a known shared latent signal:
+    /// A = Z·Wa + noise, B = Z·Wb + noise.
+    fn correlated_views(
+        n: usize,
+        d: usize,
+        latent: usize,
+        noise: f64,
+        rng: &mut Rng,
+    ) -> (Mat, Mat) {
+        let z = Mat::randn(n, latent, rng);
+        let wa = Mat::randn(latent, d, rng);
+        let wb = Mat::randn(latent, d, rng);
+        let mut a = matmul(&z, &wa);
+        let mut b = matmul(&z, &wb);
+        for v in a.data.iter_mut() {
+            *v += noise * rng.normal();
+        }
+        for v in b.data.iter_mut() {
+            *v += noise * rng.normal();
+        }
+        (a, b)
+    }
+
+    #[test]
+    fn identical_views_have_unit_correlations() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(200, 8, &mut rng);
+        let m = exact_cca(&a, &a, 3, 1e-9, 1e-9);
+        for s in &m.sigma {
+            assert!((s - 1.0).abs() < 1e-6, "σ {s}");
+        }
+    }
+
+    #[test]
+    fn independent_views_have_near_zero_correlations() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(4000, 4, &mut rng);
+        let b = Mat::randn(4000, 4, &mut rng);
+        let m = exact_cca(&a, &b, 2, 1e-6, 1e-6);
+        // Sample correlations of independent data scale as ~sqrt(d/n).
+        assert!(m.sigma[0] < 0.15, "σ0 {}", m.sigma[0]);
+    }
+
+    #[test]
+    fn shared_latent_signal_detected() {
+        let mut rng = Rng::new(3);
+        let (a, b) = correlated_views(500, 10, 3, 0.1, &mut rng);
+        let m = exact_cca(&a, &b, 5, 1e-3, 1e-3);
+        // Three strong canonical directions, then a gap.
+        assert!(m.sigma[2] > 0.9, "{:?}", m.sigma);
+        assert!(m.sigma[3] < 0.5, "{:?}", m.sigma);
+    }
+
+    #[test]
+    fn feasibility_of_exact_solution() {
+        prop::check("exact-cca-feasible", 10, |g| {
+            let n = 100 + g.size(0, 100);
+            let d = 4 + g.size(0, 8);
+            let mut rng = Rng::new(g.seed);
+            let (a, b) = correlated_views(n, d, 2, 0.5, &mut rng);
+            let la = 0.1;
+            let m = exact_cca(&a, &b, 2, la, la);
+            // Xaᵀ(AᵀA+λI)Xa = n·I
+            let mut ca = matmul_tn(&a, &a);
+            ca.add_diag(la);
+            let cov = matmul(&matmul_tn(&m.xa, &ca), &m.xa).scaled(1.0 / n as f64);
+            assert!(
+                cov.rel_diff(&Mat::eye(2)) < 1e-6,
+                "cov err {}",
+                cov.rel_diff(&Mat::eye(2))
+            );
+        });
+    }
+
+    #[test]
+    fn invariant_to_joint_row_permutation() {
+        let mut rng = Rng::new(4);
+        let (a, b) = correlated_views(80, 6, 2, 0.3, &mut rng);
+        let m1 = exact_cca(&a, &b, 2, 0.05, 0.05);
+        // Permute rows of both views identically.
+        let mut perm: Vec<usize> = (0..80).collect();
+        rng.shuffle(&mut perm);
+        let pa = Mat::from_rows(&perm.iter().map(|&i| a.row(i)).collect::<Vec<_>>());
+        let pb = Mat::from_rows(&perm.iter().map(|&i| b.row(i)).collect::<Vec<_>>());
+        let m2 = exact_cca(&pa, &pb, 2, 0.05, 0.05);
+        for i in 0..2 {
+            assert!((m1.sigma[i] - m2.sigma[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn regularization_shrinks_correlations() {
+        let mut rng = Rng::new(5);
+        let (a, b) = correlated_views(120, 8, 2, 0.4, &mut rng);
+        let weak = exact_cca(&a, &b, 2, 1e-6, 1e-6);
+        let strong = exact_cca(&a, &b, 2, 100.0, 100.0);
+        assert!(strong.sigma[0] < weak.sigma[0]);
+    }
+
+    #[test]
+    fn correlations_bounded_by_one() {
+        prop::check("exact-cca-bounded", 10, |g| {
+            let n = 50 + g.size(0, 50);
+            let d = 3 + g.size(0, 5);
+            let mut rng = Rng::new(g.seed);
+            let (a, b) = correlated_views(n, d, 2, 0.2, &mut rng);
+            let m = exact_cca(&a, &b, d.min(3), 1e-4, 1e-4);
+            for s in &m.sigma {
+                assert!(*s <= 1.0 + 1e-9 && *s >= -1e-12, "σ {s}");
+            }
+        });
+    }
+}

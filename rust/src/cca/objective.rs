@@ -1,0 +1,202 @@
+//! Objective and feasibility evaluation.
+//!
+//! The paper's reported metric is `(1/n)·Tr(XaᵀAᵀBXb)` — the sum of the
+//! first k canonical correlations at the fitted point (Figure 2a's y-axis
+//! and Table 2b's Train/Test columns). Feasibility (§4: "solutions found
+//! are feasible to machine precision") means the regularized projection
+//! covariances equal n·I and the cross covariance is diagonal.
+
+use super::pass::PassEngine;
+use super::CcaModel;
+use crate::linalg::{matmul_tn, Mat};
+
+/// Evaluation result on one dataset (train or test).
+#[derive(Debug, Clone)]
+pub struct Objective {
+    /// `(1/n)·Tr(XaᵀAᵀBXb)` — sum of canonical correlations.
+    pub sum_corr: f64,
+    /// Per-direction correlations `diag(XaᵀAᵀBXb)/n`.
+    pub corrs: Vec<f64>,
+}
+
+/// Evaluate the objective of a fitted model on the engine's dataset
+/// (one data pass). Works for held-out data by constructing the engine
+/// over the test split.
+pub fn evaluate<E: PassEngine + ?Sized>(model: &CcaModel, engine: &mut E) -> Objective {
+    let (n, _, _) = engine.dims();
+    let (_ca, _cb, f) = engine.final_pass(&model.xa, &model.xb);
+    let inv_n = 1.0 / n as f64;
+    let corrs: Vec<f64> = (0..model.k()).map(|i| f[(i, i)] * inv_n).collect();
+    Objective {
+        sum_corr: corrs.iter().sum(),
+        corrs,
+    }
+}
+
+/// Feasibility diagnostics (one data pass).
+#[derive(Debug, Clone)]
+pub struct Feasibility {
+    /// ‖Xaᵀ(AᵀA + λa·I)Xa/n − I‖_max
+    pub cov_a_err: f64,
+    /// ‖Xbᵀ(BᵀB + λb·I)Xb/n − I‖_max
+    pub cov_b_err: f64,
+    /// max off-diagonal |(XaᵀAᵀBXb)_ij| / n
+    pub cross_offdiag: f64,
+}
+
+/// Check the KKT feasibility conditions of a fitted model.
+pub fn feasibility<E: PassEngine + ?Sized>(
+    model: &CcaModel,
+    engine: &mut E,
+    lambda_a: f64,
+    lambda_b: f64,
+) -> Feasibility {
+    let (n, _, _) = engine.dims();
+    let inv_n = 1.0 / n as f64;
+    let (ca, cb, f) = engine.final_pass(&model.xa, &model.xb);
+
+    let reg_cov = |c: &Mat, x: &Mat, lambda: f64| -> f64 {
+        let mut g = c.clone();
+        g.add_assign(&matmul_tn(x, x).scaled(lambda));
+        g.scale(inv_n);
+        let k = g.rows;
+        g.sub(&Mat::eye(k)).max_abs()
+    };
+
+    let cov_a_err = reg_cov(&ca, &model.xa, lambda_a);
+    let cov_b_err = reg_cov(&cb, &model.xb, lambda_b);
+
+    let mut cross_offdiag = 0.0f64;
+    for i in 0..f.rows {
+        for j in 0..f.cols {
+            if i != j {
+                cross_offdiag = cross_offdiag.max((f[(i, j)] * inv_n).abs());
+            }
+        }
+    }
+    Feasibility {
+        cov_a_err,
+        cov_b_err,
+        cross_offdiag,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cca::pass::InMemoryPass;
+    use crate::cca::rcca::{RandomizedCca, RccaConfig};
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::data::TwoViewChunk;
+
+    fn fit_small() -> (CcaModel, InMemoryPass, f64) {
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 400,
+            dims: 64,
+            topics: 6,
+            words_per_topic: 10,
+            background_words: 20,
+            mean_len: 8.0,
+            seed: 123,
+            ..Default::default()
+        });
+        let chunk = TwoViewChunk { a: d.a, b: d.b };
+        let mut eng = InMemoryPass::new(chunk);
+        let lambda = 0.05;
+        let model = RandomizedCca::new(RccaConfig {
+            k: 4,
+            p: 16,
+            q: 2,
+            lambda_a: lambda,
+            lambda_b: lambda,
+            seed: 5,
+        })
+        .fit(&mut eng)
+        .unwrap();
+        (model, eng, lambda)
+    }
+
+    #[test]
+    fn objective_matches_model_sigma() {
+        // At the fitted point on the training data, evaluate() must agree
+        // with the σ the algorithm returned.
+        let (model, mut eng, _) = fit_small();
+        let obj = evaluate(&model, &mut eng);
+        assert!((obj.sum_corr - model.sum_correlations()).abs() < 1e-8);
+        for (a, b) in obj.corrs.iter().zip(&model.sigma) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn corrs_are_descending_at_fit() {
+        let (model, mut eng, _) = fit_small();
+        let obj = evaluate(&model, &mut eng);
+        for w in obj.corrs.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9);
+        }
+    }
+
+    #[test]
+    fn feasibility_near_zero_at_fit() {
+        let (model, mut eng, lambda) = fit_small();
+        let f = feasibility(&model, &mut eng, lambda, lambda);
+        assert!(f.cov_a_err < 1e-8);
+        assert!(f.cov_b_err < 1e-8);
+        assert!(f.cross_offdiag < 1e-8);
+    }
+
+    #[test]
+    fn feasibility_detects_violations() {
+        // Scale one projection — covariance constraint must fire.
+        let (mut model, mut eng, lambda) = fit_small();
+        model.xa.scale(2.0);
+        let f = feasibility(&model, &mut eng, lambda, lambda);
+        assert!(f.cov_a_err > 1.0, "{}", f.cov_a_err);
+    }
+
+    #[test]
+    fn held_out_objective_lower_than_train() {
+        // Generic learning sanity on a split: test ≤ train (+slack).
+        use crate::data::split::{gather_rows, split_indices};
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 1200,
+            dims: 64,
+            topics: 6,
+            words_per_topic: 10,
+            background_words: 20,
+            mean_len: 8.0,
+            seed: 321,
+            ..Default::default()
+        });
+        let (tr, te) = split_indices(1200, 0.25, 9);
+        let train = TwoViewChunk {
+            a: gather_rows(&d.a, &tr),
+            b: gather_rows(&d.b, &tr),
+        };
+        let test = TwoViewChunk {
+            a: gather_rows(&d.a, &te),
+            b: gather_rows(&d.b, &te),
+        };
+        let mut eng_tr = InMemoryPass::new(train);
+        let model = RandomizedCca::new(RccaConfig {
+            k: 4,
+            p: 20,
+            q: 2,
+            lambda_a: 0.05,
+            lambda_b: 0.05,
+            seed: 31,
+        })
+        .fit(&mut eng_tr)
+        .unwrap();
+        let train_obj = evaluate(&model, &mut eng_tr).sum_corr;
+        let mut eng_te = InMemoryPass::new(test);
+        let test_obj = evaluate(&model, &mut eng_te).sum_corr;
+        assert!(
+            test_obj <= train_obj + 0.1,
+            "test {test_obj} train {train_obj}"
+        );
+        // And the learned structure must transfer at all.
+        assert!(test_obj > 0.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! The data-pass abstraction and its in-memory implementation.
+
+use crate::data::TwoViewChunk;
+use crate::linalg::{matmul_tn, Mat};
+
+/// One logical sweep over the two-view dataset, producing batched matrix
+/// products. Every method that touches the data increments the pass ledger
+/// by exactly one — the experiments report pass counts, mirroring the
+/// paper's accounting ("as few as two data passes").
+pub trait PassEngine {
+    /// (n, da, db).
+    fn dims(&self) -> (usize, usize, usize);
+
+    /// Range-finder pass (Algorithm 1 lines 6–9):
+    /// `Ya = Aᵀ(B·Qb)`, `Yb = Bᵀ(A·Qa)` — one pass.
+    fn power_pass(&mut self, qa: &Mat, qb: &Mat) -> (Mat, Mat);
+
+    /// Final-optimization pass (Algorithm 1 lines 14–18):
+    /// `Ca = QaᵀAᵀAQa`, `Cb = QbᵀBᵀBQb`, `F = QaᵀAᵀBQb` — one pass.
+    fn final_pass(&mut self, qa: &Mat, qb: &Mat) -> (Mat, Mat, Mat);
+
+    /// `tr(AᵀA)` and `tr(BᵀB)` for the scale-free λ parameterization.
+    /// Cheap enough to piggyback on any pass; implementations may cache it
+    /// (it does not count as an extra pass when cached).
+    fn gram_traces(&mut self) -> (f64, f64);
+
+    /// Total data passes consumed so far.
+    fn passes(&self) -> usize;
+}
+
+/// Single-node in-core implementation over CSR views.
+pub struct InMemoryPass {
+    pub chunk: TwoViewChunk,
+    passes: usize,
+    traces: Option<(f64, f64)>,
+}
+
+impl InMemoryPass {
+    pub fn new(chunk: TwoViewChunk) -> InMemoryPass {
+        InMemoryPass {
+            chunk,
+            passes: 0,
+            traces: None,
+        }
+    }
+}
+
+impl PassEngine for InMemoryPass {
+    fn dims(&self) -> (usize, usize, usize) {
+        (self.chunk.rows(), self.chunk.a.cols, self.chunk.b.cols)
+    }
+
+    fn power_pass(&mut self, qa: &Mat, qb: &Mat) -> (Mat, Mat) {
+        self.passes += 1;
+        let (a, b) = (&self.chunk.a, &self.chunk.b);
+        // Ya = Aᵀ(B Qb): gather then scatter, O(nnz·r).
+        let bq = b.times_mat(qb);
+        let ya = a.t_times_mat(&bq);
+        let aq = a.times_mat(qa);
+        let yb = b.t_times_mat(&aq);
+        (ya, yb)
+    }
+
+    fn final_pass(&mut self, qa: &Mat, qb: &Mat) -> (Mat, Mat, Mat) {
+        self.passes += 1;
+        let (a, b) = (&self.chunk.a, &self.chunk.b);
+        let pa = a.times_mat(qa); // n × r
+        let pb = b.times_mat(qb);
+        let ca = matmul_tn(&pa, &pa);
+        let cb = matmul_tn(&pb, &pb);
+        let f = matmul_tn(&pa, &pb);
+        (ca, cb, f)
+    }
+
+    fn gram_traces(&mut self) -> (f64, f64) {
+        if let Some(t) = self.traces {
+            return t;
+        }
+        // Counted as a pass the first time (it reads all values); real
+        // deployments fold this into shard-writing statistics.
+        self.passes += 1;
+        let t = (self.chunk.a.gram_trace(), self.chunk.b.gram_trace());
+        self.traces = Some(t);
+        t
+    }
+
+    fn passes(&self) -> usize {
+        self.passes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::linalg::gemm::matmul;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> TwoViewChunk {
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 200,
+            dims: 48,
+            topics: 4,
+            words_per_topic: 8,
+            background_words: 16,
+            mean_len: 6.0,
+            seed: 71,
+            ..Default::default()
+        });
+        TwoViewChunk { a: d.a, b: d.b }
+    }
+
+    #[test]
+    fn power_pass_matches_dense_math() {
+        let chunk = tiny();
+        let (da_dense, db_dense) = (chunk.a.to_dense(), chunk.b.to_dense());
+        let mut eng = InMemoryPass::new(chunk);
+        let mut rng = Rng::new(1);
+        let qa = Mat::randn(48, 5, &mut rng);
+        let qb = Mat::randn(48, 5, &mut rng);
+        let (ya, yb) = eng.power_pass(&qa, &qb);
+        let want_ya = matmul_tn(&da_dense, &matmul(&db_dense, &qb));
+        let want_yb = matmul_tn(&db_dense, &matmul(&da_dense, &qa));
+        assert!(ya.rel_diff(&want_ya) < 1e-5);
+        assert!(yb.rel_diff(&want_yb) < 1e-5);
+        assert_eq!(eng.passes(), 1);
+    }
+
+    #[test]
+    fn final_pass_matches_dense_math() {
+        let chunk = tiny();
+        let (da_dense, db_dense) = (chunk.a.to_dense(), chunk.b.to_dense());
+        let mut eng = InMemoryPass::new(chunk);
+        let mut rng = Rng::new(2);
+        let qa = Mat::randn(48, 4, &mut rng);
+        let qb = Mat::randn(48, 4, &mut rng);
+        let (ca, cb, f) = eng.final_pass(&qa, &qb);
+        let pa = matmul(&da_dense, &qa);
+        let pb = matmul(&db_dense, &qb);
+        assert!(ca.rel_diff(&matmul_tn(&pa, &pa)) < 1e-5);
+        assert!(cb.rel_diff(&matmul_tn(&pb, &pb)) < 1e-5);
+        assert!(f.rel_diff(&matmul_tn(&pa, &pb)) < 1e-5);
+    }
+
+    #[test]
+    fn pass_ledger_counts_each_sweep() {
+        let mut eng = InMemoryPass::new(tiny());
+        let mut rng = Rng::new(3);
+        let q = Mat::randn(48, 3, &mut rng);
+        assert_eq!(eng.passes(), 0);
+        eng.power_pass(&q, &q);
+        eng.power_pass(&q, &q);
+        eng.final_pass(&q, &q);
+        assert_eq!(eng.passes(), 3);
+        eng.gram_traces();
+        assert_eq!(eng.passes(), 4);
+        eng.gram_traces(); // cached — no extra pass
+        assert_eq!(eng.passes(), 4);
+    }
+
+    #[test]
+    fn gram_traces_match_dense() {
+        let chunk = tiny();
+        let dense_a = chunk.a.to_dense();
+        let mut eng = InMemoryPass::new(chunk);
+        let (ta, _tb) = eng.gram_traces();
+        let want = matmul_tn(&dense_a, &dense_a).trace();
+        assert!((ta - want).abs() / want < 1e-5);
+    }
+}

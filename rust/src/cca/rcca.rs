@@ -1,0 +1,342 @@
+//! RandomizedCCA — the paper's Algorithm 1, verbatim over a [`PassEngine`].
+
+use super::pass::PassEngine;
+use super::CcaModel;
+use crate::linalg::{
+    cholesky, matmul, matmul_tn, orth, solve_lower, solve_lower_transpose, svd::svd_truncated, Mat,
+};
+use crate::linalg::solve::right_solve_lower_transpose;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+
+/// Hyperparameters of Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct RccaConfig {
+    /// Target embedding dimension `k` (paper uses k = 60).
+    pub k: usize,
+    /// Oversampling `p` — the paper's central knob (effective rank k+p).
+    pub p: usize,
+    /// Power-iteration passes `q` (0 = pure sketch, 1–3 in the paper).
+    pub q: usize,
+    /// Ridge regularizers λa, λb. Use [`super::scale_free_lambda`] for the
+    /// paper's ν-parameterization.
+    pub lambda_a: f64,
+    pub lambda_b: f64,
+    pub seed: u64,
+}
+
+impl Default for RccaConfig {
+    fn default() -> Self {
+        RccaConfig {
+            k: 60,
+            p: 100,
+            q: 1,
+            lambda_a: 1e-3,
+            lambda_b: 1e-3,
+            seed: 0xcca,
+        }
+    }
+}
+
+/// The RandomizedCCA solver.
+pub struct RandomizedCca {
+    pub config: RccaConfig,
+}
+
+impl RandomizedCca {
+    pub fn new(config: RccaConfig) -> RandomizedCca {
+        RandomizedCca { config }
+    }
+
+    /// Run Algorithm 1. Pass count: `q` range-finder passes + 1 final pass.
+    ///
+    /// Returns the model and, for reuse by warm-started baselines
+    /// (Horst+rcca), the orthonormal bases `(Qa, Qb)` of the final step.
+    pub fn fit_with_bases<E: PassEngine + ?Sized>(
+        &self,
+        engine: &mut E,
+    ) -> Result<(CcaModel, Mat, Mat)> {
+        let cfg = &self.config;
+        let (n, da, db) = engine.dims();
+        let r = cfg.k + cfg.p;
+        anyhow::ensure!(cfg.k > 0, "k must be positive");
+        anyhow::ensure!(r <= da.min(db), "k+p={} exceeds min(da,db)={}", r, da.min(db));
+        anyhow::ensure!(
+            cfg.lambda_a > 0.0 && cfg.lambda_b > 0.0,
+            "regularizers must be positive (paper §3: λ controls the relevant rank)"
+        );
+        let mut rng = Rng::new(cfg.seed);
+
+        // Lines 2–4: Gaussian test matrices. (The paper's "structured
+        // randomness suitable for dense A,B" alternative — an SRHT — applies
+        // when the views are dense; hashed BoW is sparse, so Gaussian.)
+        let mut qa = Mat::randn(da, r, &mut rng);
+        let mut qb = Mat::randn(db, r, &mut rng);
+
+        // Lines 5–12: randomized range finder with q power iterations.
+        for _ in 0..cfg.q {
+            let (ya, yb) = engine.power_pass(&qa, &qb);
+            qa = orth(&ya);
+            qb = orth(&yb);
+        }
+
+        // Lines 14–18: final pass for the small matrices.
+        let (ca, cb, f) = engine.final_pass(&qa, &qb);
+
+        // Lines 19–20: La = chol(Ca + λa QaᵀQa). For q ≥ 1, QaᵀQa = I, but
+        // for q = 0 the Gaussian Qa is not orthonormal and the general form
+        // is required.
+        let mut ga = ca;
+        let qa_gram = matmul_tn(&qa, &qa).scaled(cfg.lambda_a);
+        ga.add_assign(&qa_gram);
+        let la = cholesky(&ga).context("view A: Ca + λa·QaᵀQa not PD")?;
+
+        let mut gb = cb;
+        let qb_gram = matmul_tn(&qb, &qb).scaled(cfg.lambda_b);
+        gb.add_assign(&qb_gram);
+        let lb = cholesky(&gb).context("view B: Cb + λb·QbᵀQb not PD")?;
+
+        // Line 21: F ← La⁻ᵀ F Lb⁻¹ (paper uses Matlab's upper-triangular
+        // chol; with our lower-triangular La = chol(·) this is
+        // F_w = La⁻¹ · F · Lb⁻ᵀ, so that (QaLa⁻ᵀ)ᵀ(AᵀA+λI)(QaLa⁻ᵀ) = I).
+        let fw = right_solve_lower_transpose(&solve_lower(&la, &f), &lb);
+
+        // Line 22: rank-k SVD.
+        let (u, sigma, v) = svd_truncated(&fw, cfg.k);
+
+        // Lines 23–24: map back, Xa = √n Qa La⁻¹ U (Matlab) = √n Qa La⁻ᵀ U.
+        let sqrt_n = (n as f64).sqrt();
+        let xa = matmul(&qa, &solve_lower_transpose(&la, &u)).scaled(sqrt_n);
+        let xb = matmul(&qb, &solve_lower_transpose(&lb, &v)).scaled(sqrt_n);
+
+        // σ returned by the algorithm is the singular values of the
+        // whitened F; with the √n scaling these are the canonical
+        // correlation estimates directly (unit-variance constraint holds).
+        Ok((
+            CcaModel {
+                xa,
+                xb,
+                sigma,
+                passes: engine.passes(),
+            },
+            qa,
+            qb,
+        ))
+    }
+
+    pub fn fit<E: PassEngine + ?Sized>(&self, engine: &mut E) -> Result<CcaModel> {
+        Ok(self.fit_with_bases(engine)?.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cca::exact::exact_cca;
+    use crate::cca::objective::{evaluate, feasibility};
+    use crate::cca::pass::InMemoryPass;
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::data::TwoViewChunk;
+
+    fn dataset(n: usize, dims: usize, seed: u64) -> TwoViewChunk {
+        let d = SynthParl::generate(SynthParlConfig {
+            n,
+            dims,
+            topics: 8,
+            words_per_topic: 10,
+            background_words: 30,
+            mean_len: 8.0,
+            seed,
+            ..Default::default()
+        });
+        TwoViewChunk { a: d.a, b: d.b }
+    }
+
+    #[test]
+    fn pass_count_is_q_plus_one() {
+        let mut eng = InMemoryPass::new(dataset(300, 64, 1));
+        for q in 0..4 {
+            let mut eng2 = InMemoryPass::new(eng.chunk.clone());
+            let model = RandomizedCca::new(RccaConfig {
+                k: 4,
+                p: 8,
+                q,
+                ..Default::default()
+            })
+            .fit(&mut eng2)
+            .unwrap();
+            assert_eq!(model.passes, q + 1, "q={q}");
+        }
+    }
+
+    #[test]
+    fn output_shapes_and_sigma_order() {
+        let mut eng = InMemoryPass::new(dataset(300, 64, 2));
+        let model = RandomizedCca::new(RccaConfig {
+            k: 5,
+            p: 10,
+            q: 1,
+            ..Default::default()
+        })
+        .fit(&mut eng)
+        .unwrap();
+        assert_eq!((model.xa.rows, model.xa.cols), (64, 5));
+        assert_eq!((model.xb.rows, model.xb.cols), (64, 5));
+        assert_eq!(model.sigma.len(), 5);
+        for w in model.sigma.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        // Canonical correlations are in [0, 1] up to numerical slack.
+        assert!(model.sigma[0] <= 1.0 + 1e-6);
+        assert!(model.sigma.iter().all(|&s| s >= -1e-12));
+    }
+
+    #[test]
+    fn solution_is_feasible_to_machine_precision() {
+        // Paper §4: "in all cases the solutions found are feasible to
+        // machine precision".
+        let chunk = dataset(400, 64, 3);
+        let mut eng = InMemoryPass::new(chunk);
+        let cfg = RccaConfig {
+            k: 4,
+            p: 12,
+            q: 2,
+            lambda_a: 0.05,
+            lambda_b: 0.05,
+            seed: 7,
+        };
+        let model = RandomizedCca::new(cfg.clone()).fit(&mut eng).unwrap();
+        let feas = feasibility(&model, &mut eng, cfg.lambda_a, cfg.lambda_b);
+        assert!(feas.cov_a_err < 1e-8, "cov_a {}", feas.cov_a_err);
+        assert!(feas.cov_b_err < 1e-8, "cov_b {}", feas.cov_b_err);
+        assert!(feas.cross_offdiag < 1e-8, "offdiag {}", feas.cross_offdiag);
+    }
+
+    #[test]
+    fn full_oversampling_matches_exact_cca() {
+        // With k+p = d and q ≥ 2 the range finder spans everything, so
+        // RandomizedCCA must agree with the exact (dense, whitened-SVD)
+        // oracle on correlations.
+        let chunk = dataset(500, 32, 4);
+        let lambda = 0.1;
+        let exact = exact_cca(
+            &chunk.a.to_dense(),
+            &chunk.b.to_dense(),
+            4,
+            lambda,
+            lambda,
+        );
+        let mut eng = InMemoryPass::new(chunk);
+        let model = RandomizedCca::new(RccaConfig {
+            k: 4,
+            p: 28, // k+p = 32 = d
+            q: 2,
+            lambda_a: lambda,
+            lambda_b: lambda,
+            seed: 11,
+        })
+        .fit(&mut eng)
+        .unwrap();
+        for i in 0..4 {
+            assert!(
+                (model.sigma[i] - exact.sigma[i]).abs() < 1e-6,
+                "σ_{i}: rcca {} exact {}",
+                model.sigma[i],
+                exact.sigma[i]
+            );
+        }
+    }
+
+    #[test]
+    fn more_oversampling_is_better() {
+        // The paper's Figure 2a trend: objective increases with p (at fixed
+        // q), approaching the exact optimum.
+        let chunk = dataset(600, 96, 5);
+        let mut sums = Vec::new();
+        for p in [2usize, 16, 64] {
+            let mut eng = InMemoryPass::new(chunk.clone());
+            let model = RandomizedCca::new(RccaConfig {
+                k: 6,
+                p,
+                q: 1,
+                lambda_a: 0.05,
+                lambda_b: 0.05,
+                seed: 13,
+            })
+            .fit(&mut eng)
+            .unwrap();
+            let obj = evaluate(&model, &mut eng);
+            sums.push(obj.sum_corr);
+        }
+        assert!(sums[0] <= sums[1] + 1e-3, "{sums:?}");
+        assert!(sums[1] <= sums[2] + 1e-3, "{sums:?}");
+    }
+
+    #[test]
+    fn power_iterations_help_at_fixed_p() {
+        // Figure 2a's other axis: q=1 ≫ q=0.
+        let chunk = dataset(600, 96, 6);
+        let run = |q: usize| {
+            let mut eng = InMemoryPass::new(chunk.clone());
+            let model = RandomizedCca::new(RccaConfig {
+                k: 6,
+                p: 10,
+                q,
+                lambda_a: 0.05,
+                lambda_b: 0.05,
+                seed: 17,
+            })
+            .fit(&mut eng)
+            .unwrap();
+            evaluate(&model, &mut eng).sum_corr
+        };
+        let (s0, s1) = (run(0), run(1));
+        assert!(s1 > s0, "q=1 ({s1}) should beat q=0 ({s0})");
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let mut eng = InMemoryPass::new(dataset(100, 32, 7));
+        assert!(RandomizedCca::new(RccaConfig {
+            k: 0,
+            ..Default::default()
+        })
+        .fit(&mut eng)
+        .is_err());
+        assert!(RandomizedCca::new(RccaConfig {
+            k: 30,
+            p: 10,
+            ..Default::default()
+        })
+        .fit(&mut eng)
+        .is_err());
+        assert!(RandomizedCca::new(RccaConfig {
+            k: 4,
+            p: 4,
+            lambda_a: 0.0,
+            ..Default::default()
+        })
+        .fit(&mut eng)
+        .is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let chunk = dataset(300, 48, 8);
+        let cfg = RccaConfig {
+            k: 3,
+            p: 8,
+            q: 1,
+            seed: 99,
+            ..Default::default()
+        };
+        let m1 = RandomizedCca::new(cfg.clone())
+            .fit(&mut InMemoryPass::new(chunk.clone()))
+            .unwrap();
+        let m2 = RandomizedCca::new(cfg)
+            .fit(&mut InMemoryPass::new(chunk))
+            .unwrap();
+        assert!(m1.xa.rel_diff(&m2.xa) < 1e-14);
+        assert_eq!(m1.sigma, m2.sigma);
+    }
+}

@@ -1,0 +1,147 @@
+//! Fault injection: a wrapper engine that fails deterministically-randomly,
+//! used to test the coordinator's retry path (and in chaos examples).
+
+use crate::data::TwoViewChunk;
+use crate::linalg::Mat;
+use crate::runtime::ChunkEngine;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Wraps an engine and makes each chunk call fail with probability
+/// `fail_prob` (deterministic in the call sequence given `seed`). Failures
+/// alternate between clean errors and panics, so the coordinator's
+/// containment of *both* is exercised.
+pub struct FaultyEngine<E: ChunkEngine> {
+    inner: E,
+    /// Failure probability in [0,1), applied per chunk call.
+    fail_prob: f64,
+    calls: AtomicU64,
+    pub injected: AtomicU64,
+    seed: u64,
+}
+
+impl<E: ChunkEngine> FaultyEngine<E> {
+    pub fn new(inner: E, fail_prob: f64, seed: u64) -> Self {
+        assert!((0.0..1.0).contains(&fail_prob));
+        FaultyEngine {
+            inner,
+            fail_prob,
+            calls: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+            seed,
+        }
+    }
+
+    fn maybe_fail(&self) -> anyhow::Result<()> {
+        let call = self.calls.fetch_add(1, Ordering::SeqCst);
+        // Deterministic hash of (seed, call index) → uniform in [0,1).
+        let mut z = self.seed ^ call.wrapping_mul(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        let u = (z >> 11) as f64 / (1u64 << 53) as f64;
+        if u < self.fail_prob {
+            let n = self.injected.fetch_add(1, Ordering::SeqCst);
+            if n % 2 == 0 {
+                anyhow::bail!("injected fault (call {call})");
+            } else {
+                panic!("injected panic (call {call})");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: ChunkEngine> ChunkEngine for FaultyEngine<E> {
+    fn name(&self) -> &str {
+        "faulty"
+    }
+
+    fn power_chunk(
+        &self,
+        chunk: &TwoViewChunk,
+        qa32: &[f32],
+        qb32: &[f32],
+        r: usize,
+    ) -> anyhow::Result<(Mat, Mat)> {
+        self.maybe_fail()?;
+        self.inner.power_chunk(chunk, qa32, qb32, r)
+    }
+
+    fn final_chunk(
+        &self,
+        chunk: &TwoViewChunk,
+        qa32: &[f32],
+        qb32: &[f32],
+        r: usize,
+    ) -> anyhow::Result<(Mat, Mat, Mat)> {
+        self.maybe_fail()?;
+        self.inner.final_chunk(chunk, qa32, qb32, r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::runtime::{mat_to_f32, NativeEngine};
+    use crate::util::rng::Rng;
+
+    fn chunk() -> TwoViewChunk {
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 50,
+            dims: 32,
+            topics: 2,
+            words_per_topic: 6,
+            background_words: 10,
+            mean_len: 5.0,
+            seed: 1,
+            ..Default::default()
+        });
+        TwoViewChunk { a: d.a, b: d.b }
+    }
+
+    #[test]
+    fn zero_prob_never_fails() {
+        let eng = FaultyEngine::new(NativeEngine::new(), 0.0, 7);
+        let ch = chunk();
+        let mut rng = Rng::new(2);
+        let q = mat_to_f32(&Mat::randn(32, 3, &mut rng));
+        for _ in 0..50 {
+            eng.power_chunk(&ch, &q, &q, 3).unwrap();
+        }
+        assert_eq!(eng.injected.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn failures_injected_at_roughly_requested_rate() {
+        let eng = FaultyEngine::new(NativeEngine::new(), 0.3, 13);
+        let ch = chunk();
+        let mut rng = Rng::new(3);
+        let q = mat_to_f32(&Mat::randn(32, 3, &mut rng));
+        let mut errors = 0;
+        for _ in 0..200 {
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                eng.power_chunk(&ch, &q, &q, 3)
+            }));
+            match res {
+                Err(_) => errors += 1,          // injected panic
+                Ok(Err(_)) => errors += 1,      // injected error
+                Ok(Ok(_)) => {}
+            }
+        }
+        assert!((30..=90).contains(&errors), "injected {errors}/200");
+        assert_eq!(eng.injected.load(Ordering::SeqCst), errors);
+    }
+
+    #[test]
+    fn success_results_pass_through_unmodified() {
+        let faulty = FaultyEngine::new(NativeEngine::new(), 0.0, 1);
+        let plain = NativeEngine::new();
+        let ch = chunk();
+        let mut rng = Rng::new(4);
+        let q = mat_to_f32(&Mat::randn(32, 3, &mut rng));
+        let (a1, b1) = faulty.power_chunk(&ch, &q, &q, 3).unwrap();
+        let (a2, b2) = plain.power_chunk(&ch, &q, &q, 3).unwrap();
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+    }
+}

@@ -1,0 +1,102 @@
+//! Coordinator metrics: cheap atomic counters + a JSON snapshot.
+
+use crate::util::json::{jnum, Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counters for one coordinator instance. All methods are thread-safe and
+/// wait-free; workers bump them from task context.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub passes: AtomicU64,
+    pub tasks_completed: AtomicU64,
+    pub tasks_failed: AtomicU64,
+    pub retries: AtomicU64,
+    pub shard_bytes_read: AtomicU64,
+    pub chunks_processed: AtomicU64,
+    /// Nanoseconds spent inside chunk engines (across workers).
+    pub engine_nanos: AtomicU64,
+    /// Nanoseconds spent loading shards from disk.
+    pub load_nanos: AtomicU64,
+    /// Nanoseconds spent reducing partials on the leader.
+    pub reduce_nanos: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn add(&self, counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let g = |c: &AtomicU64| jnum(c.load(Ordering::Relaxed) as f64);
+        let mut o = Json::obj();
+        o.set("passes", g(&self.passes))
+            .set("tasks_completed", g(&self.tasks_completed))
+            .set("tasks_failed", g(&self.tasks_failed))
+            .set("retries", g(&self.retries))
+            .set("shard_bytes_read", g(&self.shard_bytes_read))
+            .set("chunks_processed", g(&self.chunks_processed))
+            .set(
+                "engine_secs",
+                jnum(self.engine_nanos.load(Ordering::Relaxed) as f64 / 1e9),
+            )
+            .set(
+                "load_secs",
+                jnum(self.load_nanos.load(Ordering::Relaxed) as f64 / 1e9),
+            )
+            .set(
+                "reduce_secs",
+                jnum(self.reduce_nanos.load(Ordering::Relaxed) as f64 / 1e9),
+            );
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.add(&m.tasks_completed, 3);
+        m.add(&m.tasks_completed, 2);
+        m.add(&m.retries, 1);
+        let s = m.snapshot();
+        assert_eq!(s.get("tasks_completed").unwrap().as_usize(), Some(5));
+        assert_eq!(s.get("retries").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("tasks_failed").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn nanos_exposed_as_secs() {
+        let m = Metrics::new();
+        m.add(&m.engine_nanos, 2_500_000_000);
+        let s = m.snapshot();
+        assert!((s.get("engine_secs").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_bumps() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.add(&m.chunks_processed, 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            m.chunks_processed.load(Ordering::Relaxed),
+            4000
+        );
+    }
+}

@@ -1,0 +1,30 @@
+//! L3 coordinator: distributed data-pass orchestration.
+//!
+//! The paper targets "large datasets stored either out of core or on a
+//! distributed file system" processed by frameworks "in which iteration is
+//! expensive (e.g., Hadoop)". The coordinator reproduces that dataflow on a
+//! leader + worker-pool topology:
+//!
+//! * the dataset lives on disk as validated shards ([`crate::data::shards`]);
+//! * a **pass** schedules one map task per shard on the worker pool
+//!   (bounded queue → backpressure), each task loads its shard, slices it
+//!   into fixed-size chunks, runs the [`crate::runtime::ChunkEngine`]
+//!   (native or PJRT), and emits a partial result;
+//! * the leader **reduces** partials commutatively (order-invariance is a
+//!   property test), retries failed shards (fault injection is built in),
+//!   and finishes the pass when every shard has contributed exactly once;
+//! * a pass **ledger** (passes, tasks, retries, bytes, wall time) feeds the
+//!   experiment reports — the paper's claims are pass-count claims.
+//!
+//! [`ShardedPass`] implements [`crate::cca::PassEngine`], so RandomizedCCA,
+//! Horst, and the spectrum estimator run unchanged on top of it.
+
+pub mod fault;
+pub mod metrics;
+pub mod reduce;
+pub mod sharded;
+
+pub use fault::FaultyEngine;
+pub use metrics::Metrics;
+pub use reduce::Accumulator;
+pub use sharded::{ShardedPass, ShardedPassConfig};

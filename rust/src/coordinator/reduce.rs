@@ -1,0 +1,114 @@
+//! Commutative reduction of per-shard partial results.
+//!
+//! Every pass output is a sum over shards of matrix partials, so reduction
+//! is elementwise addition — commutative and associative up to float
+//! rounding. The property test pins the order-invariance the leader relies
+//! on when partials arrive in arbitrary worker order (rounding differences
+//! are bounded well below the f32 noise floor of the inputs).
+
+use crate::linalg::Mat;
+
+/// Accumulates a fixed arity of matrix partials.
+#[derive(Debug, Clone)]
+pub struct Accumulator {
+    mats: Vec<Mat>,
+    contributions: usize,
+}
+
+impl Accumulator {
+    /// `shapes`: (rows, cols) of each slot.
+    pub fn new(shapes: &[(usize, usize)]) -> Accumulator {
+        Accumulator {
+            mats: shapes.iter().map(|&(r, c)| Mat::zeros(r, c)).collect(),
+            contributions: 0,
+        }
+    }
+
+    pub fn arity(&self) -> usize {
+        self.mats.len()
+    }
+
+    pub fn contributions(&self) -> usize {
+        self.contributions
+    }
+
+    /// Add one shard's partials (must match arity and shapes).
+    pub fn add(&mut self, partials: &[Mat]) {
+        assert_eq!(partials.len(), self.mats.len(), "partial arity mismatch");
+        for (acc, p) in self.mats.iter_mut().zip(partials) {
+            acc.add_assign(p);
+        }
+        self.contributions += 1;
+    }
+
+    /// Consume, returning the reduced matrices.
+    pub fn finish(self) -> Vec<Mat> {
+        self.mats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sums_partials() {
+        let mut acc = Accumulator::new(&[(2, 2)]);
+        acc.add(&[Mat::eye(2)]);
+        acc.add(&[Mat::eye_scaled(2, 3.0)]);
+        assert_eq!(acc.contributions(), 2);
+        let out = acc.finish();
+        assert_eq!(out[0], Mat::eye_scaled(2, 4.0));
+    }
+
+    #[test]
+    fn order_invariance() {
+        prop::check("reduce-order-invariant", 20, |g| {
+            let slots = g.size(1, 3);
+            let parts = g.size(2, 10);
+            let rows = g.size(1, 6);
+            let cols = g.size(1, 6);
+            let mut rng = Rng::new(g.seed);
+            let shapes: Vec<(usize, usize)> = (0..slots).map(|_| (rows, cols)).collect();
+            let partials: Vec<Vec<Mat>> = (0..parts)
+                .map(|_| {
+                    (0..slots)
+                        .map(|_| Mat::randn(rows, cols, &mut rng))
+                        .collect()
+                })
+                .collect();
+            let mut fwd = Accumulator::new(&shapes);
+            for p in &partials {
+                fwd.add(p);
+            }
+            let mut perm: Vec<usize> = (0..parts).collect();
+            rng.shuffle(&mut perm);
+            let mut shuf = Accumulator::new(&shapes);
+            for &i in &perm {
+                shuf.add(&partials[i]);
+            }
+            let a = fwd.finish();
+            let b = shuf.finish();
+            for (x, y) in a.iter().zip(&b) {
+                assert!(x.rel_diff(y) < 1e-12, "order-dependent reduction");
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut acc = Accumulator::new(&[(2, 2), (3, 3)]);
+        acc.add(&[Mat::eye(2)]);
+    }
+
+    #[test]
+    fn empty_reduction_is_zero() {
+        let acc = Accumulator::new(&[(3, 2)]);
+        assert_eq!(acc.contributions(), 0);
+        let out = acc.finish();
+        assert_eq!(out[0], Mat::zeros(3, 2));
+    }
+}

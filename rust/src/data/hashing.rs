@@ -1,0 +1,217 @@
+//! Feature hashing (Weinberger et al., ICML 2009 — reference [16]).
+//!
+//! Each token is mapped to a slot `h(x) mod d` with a sign `ξ(x) ∈ {±1}`
+//! drawn from an independent hash bit; the signed sum preserves inner
+//! products in expectation. This is exactly the paper's preprocessing
+//! ("bag of words composed with inner-product preserving hashing").
+
+use crate::sparse::CsrBuilder;
+
+/// A stateless 64-bit mix hash (splitmix-style finalizer over a keyed
+/// input). Distinct `salt`s give independent hash functions per view.
+#[derive(Debug, Clone, Copy)]
+pub struct Hasher {
+    pub dims: usize,
+    salt: u64,
+}
+
+impl Hasher {
+    pub fn new(dims: usize, salt: u64) -> Hasher {
+        assert!(dims > 0);
+        Hasher { dims, salt }
+    }
+
+    #[inline]
+    fn mix(&self, x: u64) -> u64 {
+        let mut z = x ^ self.salt.wrapping_mul(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// Slot index for a token id.
+    #[inline]
+    pub fn slot(&self, token: u64) -> u32 {
+        (self.mix(token) % self.dims as u64) as u32
+    }
+
+    /// ±1 sign for a token id (independent bit from the same mix).
+    #[inline]
+    pub fn sign(&self, token: u64) -> f32 {
+        // Use a high bit not consumed by the modulo.
+        if self.mix(token ^ 0xabcdef1234567890) >> 63 == 1 {
+            -1.0
+        } else {
+            1.0
+        }
+    }
+
+    /// Hash a string token (e.g. real corpus words) to an id first.
+    pub fn slot_str(&self, token: &str) -> u32 {
+        self.slot(str_id(token))
+    }
+
+    pub fn sign_str(&self, token: &str) -> f32 {
+        self.sign(str_id(token))
+    }
+
+    /// Hash a bag of token ids into a signed-count CSR row (appended to the
+    /// builder). `l2_normalize` divides by the row's L2 norm so every
+    /// document has unit energy (keeps tr(AᵀA) ≈ n regardless of length).
+    pub fn hash_row(
+        &self,
+        tokens: &[u64],
+        l2_normalize: bool,
+        builder: &mut CsrBuilder,
+        scratch: &mut Vec<(u32, f32)>,
+    ) {
+        scratch.clear();
+        for &t in tokens {
+            scratch.push((self.slot(t), self.sign(t)));
+        }
+        if l2_normalize && !scratch.is_empty() {
+            // Builder will merge duplicates; compute the post-merge norm by
+            // merging locally first.
+            scratch.sort_by_key(|&(j, _)| j);
+            let mut merged: Vec<(u32, f32)> = Vec::with_capacity(scratch.len());
+            for &(j, v) in scratch.iter() {
+                match merged.last_mut() {
+                    Some((pj, pv)) if *pj == j => *pv += v,
+                    _ => merged.push((j, v)),
+                }
+            }
+            let norm: f32 = merged.iter().map(|(_, v)| v * v).sum::<f32>().sqrt();
+            if norm > 0.0 {
+                for (_, v) in merged.iter_mut() {
+                    *v /= norm;
+                }
+            }
+            *scratch = merged;
+        }
+        builder.push_row(scratch);
+    }
+}
+
+/// FNV-1a over a string for stable string → id mapping.
+pub fn str_id(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn deterministic() {
+        let h = Hasher::new(128, 7);
+        assert_eq!(h.slot(42), h.slot(42));
+        assert_eq!(h.sign(42), h.sign(42));
+    }
+
+    #[test]
+    fn salt_changes_function() {
+        let h1 = Hasher::new(1 << 16, 1);
+        let h2 = Hasher::new(1 << 16, 2);
+        let collisions = (0..1000u64).filter(|&t| h1.slot(t) == h2.slot(t)).count();
+        assert!(collisions < 10, "salts not independent: {collisions}");
+    }
+
+    #[test]
+    fn slots_in_range_and_spread() {
+        let d = 256;
+        let h = Hasher::new(d, 3);
+        let mut counts = vec![0usize; d];
+        for t in 0..51_200u64 {
+            let s = h.slot(t) as usize;
+            assert!(s < d);
+            counts[s] += 1;
+        }
+        // Each slot expects 200; allow generous deviation.
+        for (i, c) in counts.iter().enumerate() {
+            assert!(*c > 100 && *c < 320, "slot {i} count {c}");
+        }
+    }
+
+    #[test]
+    fn signs_balanced() {
+        let h = Hasher::new(1 << 10, 5);
+        let pos = (0..10_000u64).filter(|&t| h.sign(t) > 0.0).count();
+        assert!((4_500..5_500).contains(&pos), "{pos}");
+    }
+
+    #[test]
+    fn inner_product_preserved_in_expectation() {
+        // <φ(x), φ(y)> ≈ <x, y> for disjoint bags: signed hashing makes the
+        // cross terms mean-zero. Empirically check relative error over
+        // random bags at high dimension.
+        let d = 1 << 14;
+        let h = Hasher::new(d, 11);
+        let mut rng = Rng::new(1);
+        let mut dots = Vec::new();
+        for _ in 0..30 {
+            // Two bags sharing exactly 5 tokens.
+            let shared: Vec<u64> = (0..5).map(|_| rng.next_u64()).collect();
+            let xa: Vec<u64> = shared
+                .iter()
+                .cloned()
+                .chain((0..20).map(|_| rng.next_u64()))
+                .collect();
+            let xb: Vec<u64> = shared
+                .iter()
+                .cloned()
+                .chain((0..20).map(|_| rng.next_u64()))
+                .collect();
+            // φ(xa)·φ(xb) computed sparsely.
+            let mut va = std::collections::HashMap::new();
+            for &t in &xa {
+                *va.entry(h.slot(t)).or_insert(0.0f64) += h.sign(t) as f64;
+            }
+            let mut dot = 0.0;
+            for &t in &xb {
+                if let Some(&v) = va.get(&h.slot(t)) {
+                    dot += v * h.sign(t) as f64;
+                }
+            }
+            dots.push(dot);
+        }
+        let mean: f64 = dots.iter().sum::<f64>() / dots.len() as f64;
+        // True inner product is 5 (shared tokens), all distinct otherwise.
+        assert!((mean - 5.0).abs() < 1.0, "mean dot {mean}");
+    }
+
+    #[test]
+    fn hash_row_l2_normalizes() {
+        let h = Hasher::new(64, 13);
+        let mut b = CsrBuilder::new(64);
+        let mut scratch = Vec::new();
+        h.hash_row(&[1, 2, 3, 4, 5], true, &mut b, &mut scratch);
+        let c = b.finish();
+        let norm: f32 = c.values.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5, "norm {norm}");
+    }
+
+    #[test]
+    fn hash_row_empty_ok() {
+        let h = Hasher::new(64, 13);
+        let mut b = CsrBuilder::new(64);
+        let mut scratch = Vec::new();
+        h.hash_row(&[], true, &mut b, &mut scratch);
+        let c = b.finish();
+        assert_eq!(c.rows, 1);
+        assert_eq!(c.nnz(), 0);
+    }
+
+    #[test]
+    fn str_tokens_stable() {
+        let h = Hasher::new(1 << 12, 17);
+        assert_eq!(h.slot_str("parliament"), h.slot_str("parliament"));
+        assert_eq!(str_id("a"), str_id("a"));
+        assert_ne!(str_id("a"), str_id("b"));
+        let _ = h.sign_str("parliament");
+    }
+}

@@ -1,0 +1,18 @@
+//! Data layer: synthetic parallel corpus, feature hashing, shard storage.
+//!
+//! The paper's workload is Europarl (n = 1.24M aligned English/Greek
+//! sentences) turned into two hashed bag-of-words views with 2^19 slots.
+//! Europarl is not available in this environment, so [`synthparl`]
+//! implements the documented substitution (DESIGN.md §3): a latent-topic
+//! parallel-corpus generator whose cross-covariance spectrum has the same
+//! power-law decay the paper's Figure 1 shows, followed by the identical
+//! inner-product-preserving hashing trick ([16] in the paper).
+
+pub mod hashing;
+pub mod shards;
+pub mod split;
+pub mod synthparl;
+
+pub use hashing::Hasher;
+pub use shards::{ShardStore, ShardWriter, TwoViewChunk};
+pub use synthparl::{SynthParl, SynthParlConfig};

@@ -1,0 +1,431 @@
+//! On-disk sharded two-view dataset.
+//!
+//! The coordinator's unit of work is a *shard*: a row-aligned slice of both
+//! views stored in one binary file. Format (little-endian):
+//!
+//! ```text
+//! magic  "RCCA"            4 bytes
+//! version u32              (currently 1)
+//! rows    u64
+//! dims_a  u64
+//! dims_b  u64
+//! view A: nnz u64, indptr (rows+1)×u64, indices nnz×u32, values nnz×f32
+//! view B: same layout
+//! crc32   u32              over everything after the magic
+//! ```
+//!
+//! A dataset directory holds `meta.json` (row/shard counts, dims, seed) and
+//! `shard-NNNNN.bin` files. Readers validate the CRC and CSR structure, so
+//! torn writes and corruption are detected rather than silently computed on.
+
+use crate::sparse::Csr;
+use crate::util::json::{jnum, jstr, Json};
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 4] = b"RCCA";
+const VERSION: u32 = 1;
+
+/// A row-aligned pair of CSR chunks (one shard's content).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TwoViewChunk {
+    pub a: Csr,
+    pub b: Csr,
+}
+
+impl TwoViewChunk {
+    pub fn rows(&self) -> usize {
+        debug_assert_eq!(self.a.rows, self.b.rows);
+        self.a.rows
+    }
+}
+
+/// CRC-32 (IEEE) — small table-driven implementation.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xedb88320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = 0xffffffffu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xff) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn encode_view(buf: &mut Vec<u8>, c: &Csr) {
+    push_u64(buf, c.nnz() as u64);
+    for &p in &c.indptr {
+        push_u64(buf, p as u64);
+    }
+    for &i in &c.indices {
+        push_u32(buf, i);
+    }
+    for &v in &c.values {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.data.len() {
+            return Err(format!("shard truncated at byte {}", self.pos));
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+fn decode_view(cur: &mut Cursor, rows: usize, cols: usize) -> Result<Csr, String> {
+    let nnz = cur.u64()? as usize;
+    let mut indptr = Vec::with_capacity(rows + 1);
+    for _ in 0..=rows {
+        indptr.push(cur.u64()? as usize);
+    }
+    let mut indices = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        indices.push(cur.u32()?);
+    }
+    let mut values = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        values.push(cur.f32()?);
+    }
+    let c = Csr {
+        rows,
+        cols,
+        indptr,
+        indices,
+        values,
+    };
+    c.validate()?;
+    Ok(c)
+}
+
+/// Serialize a shard to bytes.
+pub fn encode_shard(chunk: &TwoViewChunk) -> Vec<u8> {
+    assert_eq!(chunk.a.rows, chunk.b.rows, "views must be row-aligned");
+    let mut body = Vec::new();
+    push_u32(&mut body, VERSION);
+    push_u64(&mut body, chunk.a.rows as u64);
+    push_u64(&mut body, chunk.a.cols as u64);
+    push_u64(&mut body, chunk.b.cols as u64);
+    encode_view(&mut body, &chunk.a);
+    encode_view(&mut body, &chunk.b);
+    let crc = crc32(&body);
+    let mut out = Vec::with_capacity(4 + body.len() + 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&body);
+    push_u32(&mut out, crc);
+    out
+}
+
+/// Deserialize and validate a shard.
+pub fn decode_shard(data: &[u8]) -> Result<TwoViewChunk, String> {
+    if data.len() < 8 || &data[..4] != MAGIC {
+        return Err("bad magic".into());
+    }
+    let body = &data[4..data.len() - 4];
+    let stored_crc = u32::from_le_bytes(data[data.len() - 4..].try_into().unwrap());
+    let crc = crc32(body);
+    if crc != stored_crc {
+        return Err(format!("crc mismatch: stored {stored_crc:08x} computed {crc:08x}"));
+    }
+    let mut cur = Cursor { data: body, pos: 0 };
+    let version = cur.u32()?;
+    if version != VERSION {
+        return Err(format!("unsupported shard version {version}"));
+    }
+    let rows = cur.u64()? as usize;
+    let dims_a = cur.u64()? as usize;
+    let dims_b = cur.u64()? as usize;
+    let a = decode_view(&mut cur, rows, dims_a)?;
+    let b = decode_view(&mut cur, rows, dims_b)?;
+    if cur.pos != body.len() {
+        return Err("trailing bytes in shard".into());
+    }
+    Ok(TwoViewChunk { a, b })
+}
+
+/// Writer that splits a stream of row-aligned chunks into shard files.
+pub struct ShardWriter {
+    dir: PathBuf,
+    rows_per_shard: usize,
+    shards_written: usize,
+    total_rows: usize,
+    dims_a: usize,
+    dims_b: usize,
+}
+
+impl ShardWriter {
+    pub fn create(dir: &Path, rows_per_shard: usize) -> std::io::Result<ShardWriter> {
+        fs::create_dir_all(dir)?;
+        Ok(ShardWriter {
+            dir: dir.to_path_buf(),
+            rows_per_shard,
+            shards_written: 0,
+            total_rows: 0,
+            dims_a: 0,
+            dims_b: 0,
+        })
+    }
+
+    /// Write a full dataset by slicing row ranges into shards.
+    pub fn write_dataset(&mut self, a: &Csr, b: &Csr) -> std::io::Result<()> {
+        assert_eq!(a.rows, b.rows);
+        self.dims_a = a.cols;
+        self.dims_b = b.cols;
+        let mut lo = 0;
+        while lo < a.rows {
+            let hi = (lo + self.rows_per_shard).min(a.rows);
+            let chunk = TwoViewChunk {
+                a: a.slice_rows(lo, hi),
+                b: b.slice_rows(lo, hi),
+            };
+            let bytes = encode_shard(&chunk);
+            let path = self.dir.join(format!("shard-{:05}.bin", self.shards_written));
+            let tmp = self.dir.join(format!(".shard-{:05}.tmp", self.shards_written));
+            // Write-then-rename so a crashed writer never leaves a torn shard
+            // under the final name.
+            fs::File::create(&tmp)?.write_all(&bytes)?;
+            fs::rename(&tmp, &path)?;
+            self.shards_written += 1;
+            self.total_rows += hi - lo;
+            lo = hi;
+        }
+        self.write_meta()
+    }
+
+    fn write_meta(&self) -> std::io::Result<()> {
+        let mut meta = Json::obj();
+        meta.set("format", jstr("rcca-shards-v1"))
+            .set("shards", jnum(self.shards_written as f64))
+            .set("rows", jnum(self.total_rows as f64))
+            .set("dims_a", jnum(self.dims_a as f64))
+            .set("dims_b", jnum(self.dims_b as f64))
+            .set("rows_per_shard", jnum(self.rows_per_shard as f64));
+        fs::write(self.dir.join("meta.json"), meta.to_string_pretty())
+    }
+}
+
+/// Read access to a shard directory.
+#[derive(Debug, Clone)]
+pub struct ShardStore {
+    pub dir: PathBuf,
+    pub shards: usize,
+    pub rows: usize,
+    pub dims_a: usize,
+    pub dims_b: usize,
+}
+
+impl ShardStore {
+    pub fn open(dir: &Path) -> Result<ShardStore, String> {
+        let meta_text = fs::read_to_string(dir.join("meta.json"))
+            .map_err(|e| format!("cannot read meta.json: {e}"))?;
+        let meta = crate::util::json::parse(&meta_text).map_err(|e| e.to_string())?;
+        let get = |k: &str| -> Result<usize, String> {
+            meta.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| format!("meta.json missing '{k}'"))
+        };
+        Ok(ShardStore {
+            dir: dir.to_path_buf(),
+            shards: get("shards")?,
+            rows: get("rows")?,
+            dims_a: get("dims_a")?,
+            dims_b: get("dims_b")?,
+        })
+    }
+
+    pub fn shard_path(&self, i: usize) -> PathBuf {
+        self.dir.join(format!("shard-{i:05}.bin"))
+    }
+
+    /// Load and validate one shard.
+    pub fn load(&self, i: usize) -> Result<TwoViewChunk, String> {
+        assert!(i < self.shards, "shard index out of range");
+        let mut bytes = Vec::new();
+        fs::File::open(self.shard_path(i))
+            .map_err(|e| format!("open shard {i}: {e}"))?
+            .read_to_end(&mut bytes)
+            .map_err(|e| format!("read shard {i}: {e}"))?;
+        decode_shard(&bytes).map_err(|e| format!("shard {i}: {e}"))
+    }
+
+    /// Load all shards concatenated (test-scale convenience).
+    pub fn load_all(&self) -> Result<TwoViewChunk, String> {
+        let mut chunks = Vec::new();
+        for i in 0..self.shards {
+            chunks.push(self.load(i)?);
+        }
+        Ok(concat_chunks(&chunks))
+    }
+}
+
+/// Concatenate row-aligned chunks (reduce-side helper and test utility).
+pub fn concat_chunks(chunks: &[TwoViewChunk]) -> TwoViewChunk {
+    assert!(!chunks.is_empty());
+    let concat = |pick: &dyn Fn(&TwoViewChunk) -> &Csr| -> Csr {
+        let cols = pick(&chunks[0]).cols;
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for ch in chunks {
+            let c = pick(ch);
+            assert_eq!(c.cols, cols);
+            let base = *indptr.last().unwrap();
+            indptr.extend(c.indptr[1..].iter().map(|p| p + base));
+            indices.extend_from_slice(&c.indices);
+            values.extend_from_slice(&c.values);
+        }
+        Csr {
+            rows: indptr.len() - 1,
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    };
+    TwoViewChunk {
+        a: concat(&|c| &c.a),
+        b: concat(&|c| &c.b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+
+    fn tiny_dataset() -> (Csr, Csr) {
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 300,
+            dims: 64,
+            topics: 4,
+            words_per_topic: 10,
+            background_words: 20,
+            mean_len: 6.0,
+            seed: 5,
+            ..Default::default()
+        });
+        (d.a, d.b)
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // Standard test vector: crc32("123456789") = 0xcbf43926.
+        assert_eq!(crc32(b"123456789"), 0xcbf43926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn shard_roundtrip() {
+        let (a, b) = tiny_dataset();
+        let chunk = TwoViewChunk { a, b };
+        let bytes = encode_shard(&chunk);
+        let back = decode_shard(&bytes).unwrap();
+        assert_eq!(chunk, back);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let (a, b) = tiny_dataset();
+        let mut bytes = encode_shard(&TwoViewChunk { a, b });
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        let err = decode_shard(&bytes).unwrap_err();
+        assert!(err.contains("crc") || err.contains("indices") || err.contains("indptr"), "{err}");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let (a, b) = tiny_dataset();
+        let bytes = encode_shard(&TwoViewChunk { a, b });
+        assert!(decode_shard(&bytes[..bytes.len() - 10]).is_err());
+        assert!(decode_shard(&bytes[..3]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_detected() {
+        let mut bytes = encode_shard(&TwoViewChunk {
+            a: tiny_dataset().0,
+            b: tiny_dataset().1,
+        });
+        bytes[0] = b'X';
+        assert_eq!(decode_shard(&bytes).unwrap_err(), "bad magic");
+    }
+
+    #[test]
+    fn store_roundtrip_with_sharding() {
+        let (a, b) = tiny_dataset();
+        let dir = std::env::temp_dir().join("rcca_shard_test");
+        let _ = fs::remove_dir_all(&dir);
+        let mut w = ShardWriter::create(&dir, 64).unwrap();
+        w.write_dataset(&a, &b).unwrap();
+        let store = ShardStore::open(&dir).unwrap();
+        assert_eq!(store.rows, 300);
+        assert_eq!(store.shards, 5); // ceil(300/64)
+        assert_eq!(store.dims_a, 64);
+        // Per-shard rows sum to total; concatenation reproduces the dataset.
+        let all = store.load_all().unwrap();
+        assert_eq!(all.a, a);
+        assert_eq!(all.b, b);
+        // Row alignment: every shard has equal rows in both views.
+        for i in 0..store.shards {
+            let ch = store.load(i).unwrap();
+            assert_eq!(ch.a.rows, ch.b.rows);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concat_of_slices_is_identity() {
+        let (a, b) = tiny_dataset();
+        let c1 = TwoViewChunk {
+            a: a.slice_rows(0, 100),
+            b: b.slice_rows(0, 100),
+        };
+        let c2 = TwoViewChunk {
+            a: a.slice_rows(100, 300),
+            b: b.slice_rows(100, 300),
+        };
+        let whole = concat_chunks(&[c1, c2]);
+        assert_eq!(whole.a, a);
+        assert_eq!(whole.b, b);
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(ShardStore::open(Path::new("/nonexistent/rcca")).is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Deterministic train/test splitting (paper §4: "a single random 9:1 split
+//! of sentences into train and test sets").
+
+use crate::sparse::Csr;
+
+/// Split row indices into (train, test) by hashing the row index with the
+//  seed — stable under re-generation and independent of shard layout.
+pub fn split_indices(n: usize, test_fraction: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+    assert!((0.0..1.0).contains(&test_fraction));
+    let threshold = (test_fraction * u64::MAX as f64) as u64;
+    let mut train = Vec::new();
+    let mut test = Vec::new();
+    for i in 0..n {
+        let mut z = (i as u64).wrapping_add(seed.rotate_left(32)) ^ 0x9e3779b97f4a7c15;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^= z >> 31;
+        if z < threshold {
+            test.push(i);
+        } else {
+            train.push(i);
+        }
+    }
+    (train, test)
+}
+
+/// Gather a subset of rows into a new CSR.
+pub fn gather_rows(c: &Csr, rows: &[usize]) -> Csr {
+    let mut indptr = vec![0usize];
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    for &i in rows {
+        let (idx, vals) = c.row(i);
+        indices.extend_from_slice(idx);
+        values.extend_from_slice(vals);
+        indptr.push(indices.len());
+    }
+    let out = Csr {
+        rows: rows.len(),
+        cols: c.cols,
+        indptr,
+        indices,
+        values,
+    };
+    debug_assert!(out.validate().is_ok());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CsrBuilder;
+
+    #[test]
+    fn partition_is_complete_and_disjoint() {
+        let (train, test) = split_indices(10_000, 0.1, 42);
+        assert_eq!(train.len() + test.len(), 10_000);
+        let mut all: Vec<usize> = train.iter().chain(test.iter()).cloned().collect();
+        all.sort();
+        assert_eq!(all, (0..10_000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fraction_approximate() {
+        let (_, test) = split_indices(50_000, 0.1, 7);
+        let frac = test.len() as f64 / 50_000.0;
+        assert!((frac - 0.1).abs() < 0.01, "{frac}");
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let s1 = split_indices(1000, 0.2, 1);
+        let s2 = split_indices(1000, 0.2, 1);
+        assert_eq!(s1, s2);
+        let s3 = split_indices(1000, 0.2, 2);
+        assert_ne!(s1.1, s3.1);
+    }
+
+    #[test]
+    fn zero_fraction_gives_all_train() {
+        let (train, test) = split_indices(100, 0.0, 3);
+        assert_eq!(train.len(), 100);
+        assert!(test.is_empty());
+    }
+
+    #[test]
+    fn gather_preserves_rows() {
+        let mut b = CsrBuilder::new(8);
+        for i in 0..5u32 {
+            let mut p = vec![(i % 8, (i + 1) as f32)];
+            b.push_row(&mut p);
+        }
+        let c = b.finish();
+        let g = gather_rows(&c, &[4, 0, 2]);
+        assert_eq!(g.rows, 3);
+        assert_eq!(g.row(0).1, &[5.0]);
+        assert_eq!(g.row(1).1, &[1.0]);
+        assert_eq!(g.row(2).1, &[3.0]);
+    }
+
+    #[test]
+    fn gather_empty_selection() {
+        let mut b = CsrBuilder::new(4);
+        let mut p = vec![(0u32, 1.0f32)];
+        b.push_row(&mut p);
+        let c = b.finish();
+        let g = gather_rows(&c, &[]);
+        assert_eq!(g.rows, 0);
+        assert_eq!(g.nnz(), 0);
+    }
+}

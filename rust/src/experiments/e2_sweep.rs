@@ -1,0 +1,171 @@
+//! E2 — Figure 2a: Σ of the first k canonical correlations as q and p vary,
+//! with the Horst-120-pass result as the dashed reference line.
+
+use super::Workload;
+use crate::bench::Report;
+use crate::cca::horst::{Horst, HorstConfig};
+use crate::cca::objective::evaluate;
+use crate::cca::rcca::{RandomizedCca, RccaConfig};
+
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub q: usize,
+    pub p: usize,
+    pub train_obj: f64,
+    pub passes: usize,
+}
+
+pub struct SweepResult {
+    pub points: Vec<SweepPoint>,
+    pub horst_objective: f64,
+    pub horst_passes: usize,
+}
+
+/// Run the (q, p) grid on the training split (Figure 2a plots the training
+/// objective) plus the Horst reference.
+pub fn run(
+    workload: &Workload,
+    qs: &[usize],
+    ps: &[usize],
+    horst_pass_budget: usize,
+) -> anyhow::Result<SweepResult> {
+    let (la, lb) = workload.lambdas(workload.scale.nu);
+    let k = workload.scale.k;
+    let mut points = Vec::new();
+    for &q in qs {
+        for &p in ps {
+            let mut eng = workload.train_engine();
+            let model = RandomizedCca::new(RccaConfig {
+                k,
+                p,
+                q,
+                lambda_a: la,
+                lambda_b: lb,
+                seed: workload.scale.seed ^ ((q as u64) << 32 | p as u64),
+            })
+            .fit(&mut eng)?;
+            let passes = model.passes;
+            let obj = evaluate(&model, &mut eng).sum_corr;
+            points.push(SweepPoint {
+                q,
+                p,
+                train_obj: obj,
+                passes,
+            });
+        }
+    }
+    let mut eng = workload.train_engine();
+    let (hm, _) = Horst::new(HorstConfig {
+        k,
+        lambda_a: la,
+        lambda_b: lb,
+        pass_budget: horst_pass_budget,
+        augment: true,
+        seed: workload.scale.seed ^ 0x4057,
+        tol: 0.0,
+    })
+    .fit(&mut eng)?;
+    Ok(SweepResult {
+        points,
+        horst_objective: hm.sum_correlations(),
+        horst_passes: horst_pass_budget,
+    })
+}
+
+pub fn report(res: &SweepResult, k: usize) -> Report {
+    let mut r = Report::new(
+        &format!("Figure 2a: (1/n) Tr(Xa' A'B Xb), k={k}, as q and p vary"),
+        &["q", "p", "objective", "passes"],
+    );
+    for pt in &res.points {
+        r.row(&[
+            pt.q.to_string(),
+            pt.p.to_string(),
+            format!("{:.3}", pt.train_obj),
+            pt.passes.to_string(),
+        ]);
+    }
+    r.note(&format!(
+        "dashed line (Horst, {} passes): {:.3}",
+        res.horst_passes, res.horst_objective
+    ));
+    r
+}
+
+/// The monotonicity structure Figure 2a shows: objective non-decreasing in
+/// p at fixed q and in q at fixed p (up to sketching noise `slack`), and
+/// approaching the Horst reference from below at the largest (q, p).
+pub fn check_shape(res: &SweepResult, slack: f64) -> Result<(), String> {
+    let get = |q: usize, p: usize| {
+        res.points
+            .iter()
+            .find(|pt| pt.q == q && pt.p == p)
+            .map(|pt| pt.train_obj)
+    };
+    for pt in &res.points {
+        // Monotone in p.
+        for other in &res.points {
+            if other.q == pt.q && other.p > pt.p && other.train_obj < pt.train_obj - slack {
+                return Err(format!(
+                    "objective decreased in p at q={}: p={} -> {} gave {} -> {}",
+                    pt.q, pt.p, other.p, pt.train_obj, other.train_obj
+                ));
+            }
+            if other.p == pt.p && other.q > pt.q && other.train_obj < pt.train_obj - slack {
+                return Err(format!(
+                    "objective decreased in q at p={}: q={} -> {} gave {} -> {}",
+                    pt.p, pt.q, other.q, pt.train_obj, other.train_obj
+                ));
+            }
+        }
+    }
+    // Best rcca point is below Horst + slack but within striking distance.
+    let best = res
+        .points
+        .iter()
+        .map(|p| p.train_obj)
+        .fold(f64::NEG_INFINITY, f64::max);
+    if best > res.horst_objective + slack {
+        return Err(format!(
+            "rcca ({best}) exceeded Horst reference ({}) beyond slack",
+            res.horst_objective
+        ));
+    }
+    let _ = get(0, 0);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::Scale;
+
+    #[test]
+    fn sweep_shape_matches_figure_2a() {
+        let w = Workload::generate(Scale::tiny());
+        let res = run(&w, &[0, 1, 2], &[4, 16, 32], 40).unwrap();
+        assert_eq!(res.points.len(), 9);
+        // Pass accounting: q+1 per point.
+        for pt in &res.points {
+            assert_eq!(pt.passes, pt.q + 1);
+        }
+        check_shape(&res, 0.35).expect("figure 2a shape");
+        // q=1 materially better than q=0 at small p (the paper's headline).
+        let get = |q: usize, p: usize| {
+            res.points
+                .iter()
+                .find(|pt| pt.q == q && pt.p == p)
+                .unwrap()
+                .train_obj
+        };
+        assert!(get(1, 4) > get(0, 4));
+    }
+
+    #[test]
+    fn report_includes_horst_note() {
+        let w = Workload::generate(Scale::tiny());
+        let res = run(&w, &[0], &[8], 10).unwrap();
+        let rep = report(&res, w.scale.k);
+        assert!(rep.render().contains("Horst"));
+    }
+}

@@ -1,0 +1,298 @@
+//! E3 — Table 2b: running times, train and test objectives for
+//! RandomizedCCA across (q, p), Horst with the same ν, Horst with the best
+//! ν (in-hindsight), and Horst warm-started from RandomizedCCA
+//! ("Horst+rcca"), including the pass-count-to-target comparison
+//! (paper: 120 → 34).
+
+use super::Workload;
+use crate::bench::Report;
+use crate::cca::horst::{Horst, HorstConfig};
+use crate::cca::objective::evaluate;
+use crate::cca::rcca::{RandomizedCca, RccaConfig};
+use crate::util::timer::Timer;
+
+#[derive(Debug, Clone)]
+pub struct TableRow {
+    pub label: String,
+    pub q: Option<usize>,
+    pub p: Option<usize>,
+    pub train: f64,
+    pub test: f64,
+    pub secs: f64,
+    pub passes: usize,
+}
+
+pub struct TableResult {
+    pub rows: Vec<TableRow>,
+    /// Passes for cold Horst to reach its own final objective (the budget),
+    /// vs warm-started passes (incl. the rcca initializer's passes) to reach
+    /// the same objective.
+    pub passes_cold_to_target: usize,
+    pub passes_warm_to_target: usize,
+}
+
+pub struct TableConfig {
+    pub qs: Vec<usize>,
+    pub ps: Vec<usize>,
+    pub horst_budget: usize,
+    /// ν grid searched for "Horst (best ν)".
+    pub nu_grid: Vec<f64>,
+    /// (p, q) of the rcca initializer for Horst+rcca (paper: p=1000, q=1).
+    pub init_p: usize,
+    pub init_q: usize,
+}
+
+impl TableConfig {
+    pub fn scaled(workload: &Workload) -> TableConfig {
+        TableConfig {
+            qs: vec![0, 1, 2, 3],
+            ps: vec![workload.scale.p_small, workload.scale.p_large],
+            horst_budget: 120,
+            nu_grid: vec![0.001, 0.01, 0.1, 0.3],
+            init_p: workload.scale.p_large / 2,
+            init_q: 1,
+        }
+    }
+}
+
+pub fn run(workload: &Workload, cfg: &TableConfig) -> anyhow::Result<TableResult> {
+    let (la, lb) = workload.lambdas(workload.scale.nu);
+    let k = workload.scale.k;
+    let mut rows = Vec::new();
+
+    // RandomizedCCA grid.
+    for &q in &cfg.qs {
+        for &p in &cfg.ps {
+            let mut eng = workload.train_engine();
+            let t = Timer::start();
+            let model = RandomizedCca::new(RccaConfig {
+                k,
+                p,
+                q,
+                lambda_a: la,
+                lambda_b: lb,
+                seed: workload.scale.seed ^ ((q as u64) << 40 | p as u64),
+            })
+            .fit(&mut eng)?;
+            let secs = t.secs();
+            let passes = model.passes;
+            let train = evaluate(&model, &mut eng).sum_corr;
+            let test = evaluate(&model, &mut workload.test_engine()).sum_corr;
+            rows.push(TableRow {
+                label: "rcca".into(),
+                q: Some(q),
+                p: Some(p),
+                train,
+                test,
+                secs,
+                passes,
+            });
+        }
+    }
+
+    // Horst (same ν).
+    let run_horst = |nu: f64, seed: u64| -> anyhow::Result<(TableRow, Vec<crate::cca::horst::HorstTrace>)> {
+        let (ha, hb) = workload.lambdas(nu);
+        let mut eng = workload.train_engine();
+        let t = Timer::start();
+        let (model, trace) = Horst::new(HorstConfig {
+            k,
+            lambda_a: ha,
+            lambda_b: hb,
+            pass_budget: cfg.horst_budget,
+            augment: true,
+            seed,
+            tol: 0.0,
+        })
+        .fit(&mut eng)?;
+        let secs = t.secs();
+        let train = evaluate(&model, &mut eng).sum_corr;
+        let test = evaluate(&model, &mut workload.test_engine()).sum_corr;
+        Ok((
+            TableRow {
+                label: format!("Horst (nu={nu})"),
+                q: None,
+                p: None,
+                train,
+                test,
+                secs,
+                passes: model.passes,
+            },
+            trace,
+        ))
+    };
+
+    let (mut same_nu_row, cold_trace) = run_horst(workload.scale.nu, 0x4057)?;
+    same_nu_row.label = "Horst (same nu)".into();
+    let cold_final_obj = cold_trace.last().map(|t| t.objective).unwrap_or(0.0);
+    rows.push(same_nu_row);
+
+    // Horst (best ν): in-hindsight best *test* objective over the grid.
+    let mut best: Option<TableRow> = None;
+    for &nu in &cfg.nu_grid {
+        let (row, _) = run_horst(nu, 0xbe57)?;
+        if best.as_ref().map(|b| row.test > b.test).unwrap_or(true) {
+            best = Some(row);
+        }
+    }
+    let mut best_row = best.expect("nu grid non-empty");
+    best_row.label = "Horst (best nu)".into();
+    rows.push(best_row);
+
+    // Horst+rcca: warm start from RandomizedCCA(p=init_p, q=init_q).
+    let mut eng = workload.train_engine();
+    let t = Timer::start();
+    let init = RandomizedCca::new(RccaConfig {
+        k,
+        p: cfg.init_p,
+        q: cfg.init_q,
+        lambda_a: la,
+        lambda_b: lb,
+        seed: workload.scale.seed ^ 0x1217,
+    })
+    .fit(&mut eng)?;
+    let init_passes = init.passes;
+    let (wmodel, warm_trace) = Horst::new(HorstConfig {
+        k,
+        lambda_a: la,
+        lambda_b: lb,
+        pass_budget: cfg.horst_budget,
+        augment: true,
+        seed: 0x3a3a,
+        tol: 0.0,
+    })
+    .fit_from(&mut eng, init.xa.clone(), init.xb.clone())?;
+    let secs = t.secs();
+    let train = evaluate(&wmodel, &mut eng).sum_corr;
+    let test = evaluate(&wmodel, &mut workload.test_engine()).sum_corr;
+
+    // Pass counts to reach the cold run's final objective (99.9% of it, the
+    // same-accuracy criterion the paper uses).
+    let target = cold_final_obj * 0.999;
+    let passes_cold = cold_trace
+        .iter()
+        .find(|t| t.objective >= target)
+        .map(|t| t.passes)
+        .unwrap_or(cfg.horst_budget);
+    let passes_warm = warm_trace
+        .iter()
+        .find(|t| t.objective >= target)
+        .map(|t| t.passes + init_passes)
+        .unwrap_or(cfg.horst_budget + init_passes);
+
+    rows.push(TableRow {
+        label: "Horst+rcca".into(),
+        q: Some(cfg.init_q),
+        p: Some(cfg.init_p),
+        train,
+        test,
+        secs,
+        passes: passes_warm,
+    });
+
+    Ok(TableResult {
+        rows,
+        passes_cold_to_target: passes_cold,
+        passes_warm_to_target: passes_warm,
+    })
+}
+
+pub fn report(res: &TableResult) -> Report {
+    let mut r = Report::new(
+        "Table 2b: running times, train/test canonical correlations",
+        &["method", "q", "p", "Train", "Test", "time (s)", "passes"],
+    );
+    for row in &res.rows {
+        r.row(&[
+            row.label.clone(),
+            row.q.map(|q| q.to_string()).unwrap_or_default(),
+            row.p.map(|p| p.to_string()).unwrap_or_default(),
+            format!("{:.3}", row.train),
+            format!("{:.3}", row.test),
+            format!("{:.1}", row.secs),
+            row.passes.to_string(),
+        ]);
+    }
+    r.note(&format!(
+        "passes to same accuracy: Horst cold {} vs Horst+rcca {} (paper: 120 -> 34)",
+        res.passes_cold_to_target, res.passes_warm_to_target
+    ));
+    r.note("paper shape: rcca train/test close; Horst(same nu) train >> test (overfit); Horst+rcca cheapest to target");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::Scale;
+
+    fn quick_cfg() -> TableConfig {
+        TableConfig {
+            qs: vec![0, 1],
+            ps: vec![8, 32],
+            horst_budget: 30,
+            nu_grid: vec![0.01, 0.1],
+            init_p: 16,
+            init_q: 1,
+        }
+    }
+
+    #[test]
+    fn table_has_all_row_kinds() {
+        let w = Workload::generate(Scale::tiny());
+        let res = run(&w, &quick_cfg()).unwrap();
+        let labels: Vec<&str> = res.rows.iter().map(|r| r.label.as_str()).collect();
+        assert!(labels.contains(&"rcca"));
+        assert!(labels.contains(&"Horst (same nu)"));
+        assert!(labels.contains(&"Horst (best nu)"));
+        assert!(labels.contains(&"Horst+rcca"));
+        assert_eq!(res.rows.len(), 4 + 3); // 2x2 rcca + 3 horst rows
+    }
+
+    #[test]
+    fn warm_start_reaches_target_no_slower() {
+        let w = Workload::generate(Scale::tiny());
+        let res = run(&w, &quick_cfg()).unwrap();
+        assert!(
+            res.passes_warm_to_target <= res.passes_cold_to_target + 4,
+            "warm {} cold {}",
+            res.passes_warm_to_target,
+            res.passes_cold_to_target
+        );
+    }
+
+    #[test]
+    fn rcca_generalization_gap_is_small() {
+        // The paper's central learning claim: rcca's train/test gap is small
+        // relative to Horst (same nu)'s.
+        let w = Workload::generate(Scale::tiny());
+        let res = run(&w, &quick_cfg()).unwrap();
+        let rcca_best = res
+            .rows
+            .iter()
+            .filter(|r| r.label == "rcca")
+            .max_by(|a, b| a.train.partial_cmp(&b.train).unwrap())
+            .unwrap();
+        let horst_same = res
+            .rows
+            .iter()
+            .find(|r| r.label == "Horst (same nu)")
+            .unwrap();
+        let rcca_gap = rcca_best.train - rcca_best.test;
+        let horst_gap = horst_same.train - horst_same.test;
+        assert!(
+            rcca_gap <= horst_gap + 0.05,
+            "rcca gap {rcca_gap} vs horst gap {horst_gap}"
+        );
+    }
+
+    #[test]
+    fn report_renders_paper_columns() {
+        let w = Workload::generate(Scale::tiny());
+        let res = run(&w, &quick_cfg()).unwrap();
+        let text = report(&res).render();
+        assert!(text.contains("Train"));
+        assert!(text.contains("time (s)"));
+        assert!(text.contains("passes to same accuracy"));
+    }
+}

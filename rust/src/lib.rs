@@ -1,0 +1,29 @@
+//! # rcca — RandomizedCCA, reproduced as a deployable system
+//!
+//! A Rust + JAX + Pallas implementation of *"A Randomized Algorithm for
+//! CCA"* (Mineiro & Karampatziakis, 2014): a two-pass randomized solver for
+//! large-scale canonical correlation analysis, plus the Horst-iteration
+//! baseline, a leader/worker data-pass coordinator, and an XLA/PJRT compute
+//! runtime whose kernels are authored in JAX/Pallas and AOT-compiled to HLO.
+//!
+//! Layering (Python never runs on the request path):
+//! * **L3** (`coordinator`, `main.rs`) — pass orchestration over sharded
+//!   two-view datasets; scheduling, tree reduction, backpressure, metrics.
+//! * **L2** (`python/compile/model.py`) — chunk-level JAX functions
+//!   (`power_chunk`, `final_chunk`, …) lowered once to `artifacts/*.hlo.txt`.
+//! * **L1** (`python/compile/kernels/`) — Pallas matmul/gram kernels called
+//!   by L2, verified against pure-jnp oracles.
+//! * `runtime` — loads the artifacts via the PJRT C API (`xla` crate) or
+//!   falls back to the native Rust engine (`linalg` + `sparse`).
+//!
+//! See DESIGN.md for the full system inventory and the per-experiment index.
+
+pub mod bench;
+pub mod cca;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod runtime;
+pub mod linalg;
+pub mod sparse;
+pub mod util;

@@ -1,0 +1,134 @@
+//! Cholesky factorization — Algorithm 1 lines 19–20
+//! (`La = chol(Ca + λa QaᵀQa)`).
+
+use super::mat::Mat;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct NotPositiveDefinite {
+    pub pivot: usize,
+    pub value: f64,
+}
+
+impl fmt::Display for NotPositiveDefinite {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "cholesky: matrix not positive definite at pivot {} (value {:.3e})",
+            self.pivot, self.value
+        )
+    }
+}
+impl std::error::Error for NotPositiveDefinite {}
+
+/// Lower-triangular Cholesky factor L with A = L·Lᵀ.
+///
+/// Input must be symmetric positive definite; asymmetry up to roundoff is
+/// tolerated (the lower triangle is used). In the paper's algorithm the
+/// regularizer λ·QᵀQ (λ > 0, Q full column rank) guarantees positive
+/// definiteness; a failure here therefore signals a configuration error
+/// (λ ≤ 0) and is surfaced as a typed error rather than a panic.
+pub fn cholesky(a: &Mat) -> Result<Mat, NotPositiveDefinite> {
+    assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for j in 0..n {
+        // Diagonal entry.
+        let mut d = a[(j, j)];
+        for k in 0..j {
+            d -= l[(j, k)] * l[(j, k)];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(NotPositiveDefinite { pivot: j, value: d });
+        }
+        let djj = d.sqrt();
+        l[(j, j)] = djj;
+        // Column below the diagonal.
+        for i in (j + 1)..n {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            l[(i, j)] = s / djj;
+        }
+    }
+    Ok(l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_nt, matmul_tn};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_factors_to_identity() {
+        let l = cholesky(&Mat::eye(5)).unwrap();
+        assert!(l.rel_diff(&Mat::eye(5)) < 1e-14);
+    }
+
+    #[test]
+    fn known_3x3() {
+        // A = [[4,12,-16],[12,37,-43],[-16,-43,98]] → L = [[2,0,0],[6,1,0],[-8,5,3]]
+        let a = Mat::from_rows(&[
+            &[4.0, 12.0, -16.0],
+            &[12.0, 37.0, -43.0],
+            &[-16.0, -43.0, 98.0],
+        ]);
+        let l = cholesky(&a).unwrap();
+        let want = Mat::from_rows(&[&[2.0, 0.0, 0.0], &[6.0, 1.0, 0.0], &[-8.0, 5.0, 3.0]]);
+        assert!(l.rel_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_random_spd() {
+        prop::check("chol-reconstruct", 25, |g| {
+            let n = g.size(1, 30);
+            let mut rng = Rng::new(g.seed);
+            let x = Mat::randn(n + 5, n, &mut rng);
+            let mut a = matmul_tn(&x, &x); // XᵀX ⪰ 0, almost surely PD
+            a.add_diag(1e-6);
+            let l = cholesky(&a).unwrap();
+            let rec = matmul_nt(&l, &l);
+            assert!(rec.rel_diff(&a) < 1e-10, "rel {}", rec.rel_diff(&a));
+            // L strictly lower+diagonal
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    assert_eq!(l[(i, j)], 0.0);
+                }
+                assert!(l[(i, i)] > 0.0);
+            }
+        });
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        let e = cholesky(&a).unwrap_err();
+        assert_eq!(e.pivot, 1);
+        assert!(e.value < 0.0);
+    }
+
+    #[test]
+    fn rejects_zero_matrix() {
+        assert!(cholesky(&Mat::zeros(3, 3)).is_err());
+    }
+
+    #[test]
+    fn regularized_gram_always_factors() {
+        // The paper's construction: C + λQᵀQ with λ>0 must be PD even when
+        // C is rank-deficient.
+        let mut rng = Rng::new(8);
+        let q = crate::linalg::qr::orth(&Mat::randn(40, 10, &mut rng));
+        let c = Mat::zeros(10, 10); // degenerate C
+        let mut reg = matmul_tn(&q, &q);
+        reg.scale(0.5);
+        let mut a = c.clone();
+        a.add_assign(&reg);
+        assert!(cholesky(&a).is_ok());
+        // Sanity: QᵀQ = I for orthonormal Q.
+        assert!(matmul_tn(&q, &q).rel_diff(&Mat::eye(10)) < 1e-10);
+        let _ = matmul(&q, &Mat::eye(10)); // exercise
+    }
+}

@@ -1,0 +1,205 @@
+//! Symmetric Jacobi eigensolver — used by the exact CCA oracle (whitening
+//! by C^{-1/2}) and by spectrum diagnostics.
+
+use super::mat::Mat;
+
+/// Eigendecomposition of a symmetric matrix: A = V·diag(w)·Vᵀ with
+/// eigenvalues descending and V orthonormal columns.
+pub fn sym_eig(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols, "sym_eig needs square input");
+    let n = a.rows;
+    let mut m = a.clone();
+    // Symmetrize defensively (inputs are Gram matrices up to roundoff).
+    for i in 0..n {
+        for j in 0..i {
+            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = avg;
+            m[(j, i)] = avg;
+        }
+    }
+    let mut v = Mat::eye(n);
+    let eps = 1e-14;
+    for _sweep in 0..100 {
+        // Largest off-diagonal magnitude for convergence test.
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off = off.max(m[(i, j)].abs());
+            }
+        }
+        let scale = m.frob_norm().max(1e-300);
+        if off <= eps * scale {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= eps * scale {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // Update rows/cols p and q of M (symmetric rotation).
+                for i in 0..n {
+                    let mip = m[(i, p)];
+                    let miq = m[(i, q)];
+                    m[(i, p)] = c * mip - s * miq;
+                    m[(i, q)] = s * mip + c * miq;
+                }
+                for i in 0..n {
+                    let mpi = m[(p, i)];
+                    let mqi = m[(q, i)];
+                    m[(p, i)] = c * mpi - s * mqi;
+                    m[(q, i)] = s * mpi + c * mqi;
+                }
+                for i in 0..n {
+                    let vip = v[(i, p)];
+                    let viq = v[(i, q)];
+                    v[(i, p)] = c * vip - s * viq;
+                    v[(i, q)] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    let mut w: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    // Sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| w[b].partial_cmp(&w[a]).unwrap());
+    let mut v_s = Mat::zeros(n, n);
+    let mut w_s = vec![0.0; n];
+    for (newj, &oldj) in order.iter().enumerate() {
+        w_s[newj] = w[oldj];
+        for i in 0..n {
+            v_s[(i, newj)] = v[(i, oldj)];
+        }
+    }
+    w = w_s;
+    (w, v_s)
+}
+
+/// Inverse square root of an SPD matrix: A^{-1/2} = V·diag(w^{-1/2})·Vᵀ.
+/// Eigenvalues below `floor` are clamped (pseudo-inverse behaviour) — the
+/// exact CCA oracle uses this to whiten potentially ill-conditioned Grams.
+pub fn inv_sqrt_spd(a: &Mat, floor: f64) -> Mat {
+    let (w, v) = sym_eig(a);
+    let n = a.rows;
+    let mut out = Mat::zeros(n, n);
+    // out = Σ_j w_j^{-1/2} v_j v_jᵀ
+    for j in 0..n {
+        let wj = w[j];
+        if wj <= floor {
+            continue;
+        }
+        let s = 1.0 / wj.sqrt();
+        for i in 0..n {
+            let vi = v[(i, j)] * s;
+            for k in 0..n {
+                out[(i, k)] += vi * v[(k, j)];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn reconstruct(w: &[f64], v: &Mat) -> Mat {
+        let n = v.rows;
+        let mut vs = v.clone();
+        for j in 0..n {
+            for i in 0..n {
+                vs[(i, j)] *= w[j];
+            }
+        }
+        matmul(&vs, &v.transpose())
+    }
+
+    #[test]
+    fn diagonal_eigs() {
+        let a = Mat::from_rows(&[&[2.0, 0.0], &[0.0, 7.0]]);
+        let (w, _) = sym_eig(&a);
+        assert!((w[0] - 7.0).abs() < 1e-12);
+        assert!((w[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → eigenvalues 3, 1.
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let (w, v) = sym_eig(&a);
+        assert!((w[0] - 3.0).abs() < 1e-12);
+        assert!((w[1] - 1.0).abs() < 1e-12);
+        assert!(reconstruct(&w, &v).rel_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_random_symmetric() {
+        prop::check("eig-reconstruct", 20, |g| {
+            let n = g.size(1, 16);
+            let mut rng = Rng::new(g.seed);
+            let x = Mat::randn(n, n, &mut rng);
+            let mut a = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    a[(i, j)] = 0.5 * (x[(i, j)] + x[(j, i)]);
+                }
+            }
+            let (w, v) = sym_eig(&a);
+            assert!(reconstruct(&w, &v).rel_diff(&a) < 1e-9);
+            assert!(matmul_tn(&v, &v).rel_diff(&Mat::eye(n)) < 1e-9);
+            for win in w.windows(2) {
+                assert!(win[0] >= win[1] - 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn trace_is_eig_sum() {
+        let mut rng = Rng::new(50);
+        let x = Mat::randn(10, 10, &mut rng);
+        let a = matmul_tn(&x, &x);
+        let (w, _) = sym_eig(&a);
+        assert!((a.trace() - w.iter().sum::<f64>()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inv_sqrt_whitens() {
+        prop::check("inv-sqrt", 15, |g| {
+            let n = g.size(1, 12);
+            let mut rng = Rng::new(g.seed);
+            let x = Mat::randn(n + 6, n, &mut rng);
+            let mut a = matmul_tn(&x, &x);
+            a.add_diag(0.1);
+            let w = inv_sqrt_spd(&a, 1e-12);
+            // W A W = I
+            let id = matmul(&matmul(&w, &a), &w);
+            assert!(id.rel_diff(&Mat::eye(n)) < 1e-8, "{}", id.rel_diff(&Mat::eye(n)));
+        });
+    }
+
+    #[test]
+    fn inv_sqrt_clamps_null_directions() {
+        // Rank-1 PSD matrix: pseudo-inverse square root must not blow up.
+        let a = Mat::from_rows(&[&[1.0, 0.0], &[0.0, 0.0]]);
+        let w = inv_sqrt_spd(&a, 1e-9);
+        assert!((w[(0, 0)] - 1.0).abs() < 1e-12);
+        assert_eq!(w[(1, 1)], 0.0);
+    }
+
+    #[test]
+    fn negative_eigenvalues_handled() {
+        let a = Mat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]); // eigs ±1
+        let (w, _) = sym_eig(&a);
+        assert!((w[0] - 1.0).abs() < 1e-12);
+        assert!((w[1] + 1.0).abs() < 1e-12);
+    }
+}

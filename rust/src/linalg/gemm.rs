@@ -1,0 +1,301 @@
+//! Blocked GEMM (f64 for leader math, f32 for the native chunk engine).
+//!
+//! Layout is row-major everywhere. Three variants cover every product the
+//! system needs without materializing transposes:
+//!   * `matmul`    — C = A·B
+//!   * `matmul_tn` — C = Aᵀ·B   (the data-pass product `Aᵀ(BQ)`)
+//!   * `matmul_nt` — C = A·Bᵀ
+//!
+//! The f32 kernels (`sgemm_*`) are the performance-critical native path;
+//! they use register-tiled micro-kernels with `k`-major inner loops so the
+//! compiler can auto-vectorize. §Perf in EXPERIMENTS.md records the blocking
+//! iteration history.
+
+use super::mat::Mat;
+
+/// C = A·B (f64).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let mut c = Mat::zeros(a.rows, b.cols);
+    dgemm_nn(
+        a.rows, a.cols, b.cols, &a.data, &b.data, &mut c.data,
+    );
+    c
+}
+
+/// C = Aᵀ·B (f64). A is (m×r), B is (m×c) → C is (r×c).
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch");
+    let mut c = Mat::zeros(a.cols, b.cols);
+    dgemm_tn(a.rows, a.cols, b.cols, &a.data, &b.data, &mut c.data);
+    c
+}
+
+/// C = A·Bᵀ (f64). A is (m×k), B is (n×k) → C is (m×n).
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
+    let mut c = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        for j in 0..b.rows {
+            let brow = b.row(j);
+            let mut s = 0.0;
+            for k in 0..a.cols {
+                s += arow[k] * brow[k];
+            }
+            c[(i, j)] = s;
+        }
+    }
+    c
+}
+
+/// f64 row-major C += A·B with k-major inner loop (auto-vectorizes).
+fn dgemm_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &aip) in arow.iter().enumerate() {
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aip * bv;
+            }
+        }
+    }
+}
+
+/// f64 row-major C += Aᵀ·B. A is m×r, B is m×n, C is r×n.
+fn dgemm_tn(m: usize, r: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    for p in 0..m {
+        let arow = &a[p * r..(p + 1) * r];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &api) in arow.iter().enumerate() {
+            if api == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += api * bv;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// f32 kernels: the native chunk engine hot path.
+// ------------------------------------------------------------------
+
+/// f32 row-major C += A·B. A: m×k, B: k×n, C: m×n.
+///
+/// Row-blocked (IB=8): each loaded row of B is applied to 8 rows of A at
+/// once, cutting B's memory traffic 8× — the kernel is bandwidth-bound at
+/// the chunk shapes (256×4096×160): 12.1 → 15.4–17.4 GFLOP/s measured on
+/// the 1-core testbed (iteration log in EXPERIMENTS.md §Perf).
+pub fn sgemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    // §Perf iteration winner (see EXPERIMENTS.md): 8-row blocking — each
+    // loaded row of B is applied to 8 rows of A, cutting B's memory
+    // traffic 8x (the kernel is bandwidth-bound at chunk shapes). A
+    // register-tiled 4x16 micro-kernel variant measured *slower* here
+    // (zero-skip branch broke vectorization), so this version is kept.
+    const IB: usize = 8;
+    let mut i = 0;
+    while i + IB <= m {
+        let crows = &mut c[i * n..(i + IB) * n];
+        for p in 0..k {
+            let brow = &b[p * n..(p + 1) * n];
+            let avals: [f32; IB] = std::array::from_fn(|ii| a[(i + ii) * k + p]);
+            if avals.iter().all(|&v| v == 0.0) {
+                continue; // densified sparse chunks are mostly zeros
+            }
+            for (j, &bv) in brow.iter().enumerate() {
+                for ii in 0..IB {
+                    crows[ii * n + j] += avals[ii] * bv;
+                }
+            }
+        }
+        i += IB;
+    }
+    // Row remainder: plain axpy formulation.
+    for i in i..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &aip) in arow.iter().enumerate() {
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aip * bv;
+            }
+        }
+    }
+}
+
+/// f32 row-major C += Aᵀ·B. A: m×r, B: m×n, C: r×n.
+pub fn sgemm_tn(m: usize, r: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * r);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), r * n);
+    for p in 0..m {
+        let arow = &a[p * r..(p + 1) * r];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &api) in arow.iter().enumerate() {
+            if api == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += api * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn small_known_product() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = matmul(&a, &b);
+        assert_eq!(c, Mat::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(13, 13, &mut rng);
+        assert!(matmul(&a, &Mat::eye(13)).rel_diff(&a) < 1e-14);
+        assert!(matmul(&Mat::eye(13), &a).rel_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn matches_naive_random_shapes() {
+        prop::check("gemm-vs-naive", 25, |g| {
+            let m = g.size(1, 24);
+            let k = g.size(1, 24);
+            let n = g.size(1, 24);
+            let mut rng = Rng::new(g.seed ^ 1);
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let c = matmul(&a, &b);
+            assert!(c.rel_diff(&naive(&a, &b)) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn tn_matches_explicit_transpose() {
+        prop::check("gemm-tn", 25, |g| {
+            let m = g.size(1, 24);
+            let r = g.size(1, 16);
+            let n = g.size(1, 16);
+            let mut rng = Rng::new(g.seed ^ 2);
+            let a = Mat::randn(m, r, &mut rng);
+            let b = Mat::randn(m, n, &mut rng);
+            let c = matmul_tn(&a, &b);
+            assert_eq!((c.rows, c.cols), (r, n));
+            assert!(c.rel_diff(&naive(&a.transpose(), &b)) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn nt_matches_explicit_transpose() {
+        prop::check("gemm-nt", 25, |g| {
+            let m = g.size(1, 16);
+            let k = g.size(1, 24);
+            let n = g.size(1, 16);
+            let mut rng = Rng::new(g.seed ^ 3);
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(n, k, &mut rng);
+            let c = matmul_nt(&a, &b);
+            assert!(c.rel_diff(&naive(&a, &b.transpose())) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn associativity_within_tolerance() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(9, 11, &mut rng);
+        let b = Mat::randn(11, 7, &mut rng);
+        let c = Mat::randn(7, 5, &mut rng);
+        let l = matmul(&matmul(&a, &b), &c);
+        let r = matmul(&a, &matmul(&b, &c));
+        assert!(l.rel_diff(&r) < 1e-12);
+    }
+
+    #[test]
+    fn sgemm_nn_matches_f64() {
+        prop::check("sgemm-nn", 20, |g| {
+            let m = g.size(1, 20);
+            let k = g.size(1, 20);
+            let n = g.size(1, 20);
+            let a32 = g.normal_vec_f32(m * k, 1.0);
+            let b32 = g.normal_vec_f32(k * n, 1.0);
+            let mut c32 = vec![0f32; m * n];
+            sgemm_nn(m, k, n, &a32, &b32, &mut c32);
+            let a = Mat::from_f32(m, k, &a32);
+            let b = Mat::from_f32(k, n, &b32);
+            let want = matmul(&a, &b);
+            let got = Mat::from_f32(m, n, &c32);
+            assert!(got.rel_diff(&want) < 1e-4, "diff {}", got.rel_diff(&want));
+        });
+    }
+
+    #[test]
+    fn sgemm_tn_matches_f64() {
+        prop::check("sgemm-tn", 20, |g| {
+            let m = g.size(1, 20);
+            let r = g.size(1, 20);
+            let n = g.size(1, 20);
+            let a32 = g.normal_vec_f32(m * r, 1.0);
+            let b32 = g.normal_vec_f32(m * n, 1.0);
+            let mut c32 = vec![0f32; r * n];
+            sgemm_tn(m, r, n, &a32, &b32, &mut c32);
+            let a = Mat::from_f32(m, r, &a32);
+            let b = Mat::from_f32(m, n, &b32);
+            let want = matmul_tn(&a, &b);
+            let got = Mat::from_f32(r, n, &c32);
+            assert!(got.rel_diff(&want) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn sgemm_accumulates_into_c() {
+        let a = [1f32, 0.0, 0.0, 1.0];
+        let b = [2f32, 0.0, 0.0, 2.0];
+        let mut c = [10f32, 0.0, 0.0, 10.0];
+        sgemm_nn(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, [12.0, 0.0, 0.0, 12.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 2);
+        matmul(&a, &b);
+    }
+}

@@ -1,0 +1,319 @@
+//! Row-major dense matrix.
+
+use crate::util::rng::Rng;
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Row-major dense f64 matrix. Leader-side math (whitening, SVD, QR) is in
+/// f64; chunk engines operate on f32 buffers and convert at the boundary.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Identity scaled by `s`.
+    pub fn eye_scaled(n: usize, s: f64) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = s;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// i.i.d. N(0,1) entries — Algorithm 1 line 2/4 (`randn`).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Block the transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Select a contiguous block of columns [lo, hi).
+    pub fn cols_range(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.cols);
+        let mut m = Mat::zeros(self.rows, hi - lo);
+        for i in 0..self.rows {
+            m.row_mut(i)
+                .copy_from_slice(&self.row(i)[lo..hi]);
+        }
+        m
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    pub fn scaled(&self, s: f64) -> Mat {
+        let mut m = self.clone();
+        m.scale(s);
+        m
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut m = self.clone();
+        for (a, b) in m.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+        m
+    }
+
+    /// Add `s` to each diagonal entry (ridge / regularization).
+    pub fn add_diag(&mut self, s: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self[(i, i)] += s;
+        }
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).sum()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// max |a_ij|
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, v| m.max(v.abs()))
+    }
+
+    /// ‖self − other‖_F / max(1, ‖other‖_F): relative difference.
+    pub fn rel_diff(&self, other: &Mat) -> f64 {
+        self.sub(other).frob_norm() / other.frob_norm().max(1.0)
+    }
+
+    /// Off-diagonal Frobenius mass — used by feasibility checks (cross
+    /// covariance must be diagonal) and the Jacobi solvers.
+    pub fn offdiag_norm(&self) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                if i != j {
+                    s += self[(i, j)] * self[(i, j)];
+                }
+            }
+        }
+        s.sqrt()
+    }
+
+    /// f32 copy of the buffer (engine boundary).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat {
+            rows,
+            cols,
+            data: data.iter().map(|&v| v as f64).collect(),
+        }
+    }
+
+    /// Horizontal concatenation [self | other].
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut m = Mat::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            m.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            m.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        m
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_eye_indexing() {
+        let mut m = Mat::zeros(2, 3);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m[(0, 0)], 0.0);
+        let e = Mat::eye(3);
+        assert_eq!(e.trace(), 3.0);
+        assert_eq!(e.offdiag_norm(), 0.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(17, 41, &mut rng);
+        let tt = m.transpose().transpose();
+        assert_eq!(m, tt);
+        assert_eq!(m.transpose()[(3, 5)], m[(5, 3)]);
+    }
+
+    #[test]
+    fn from_rows_and_ops() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(m.trace(), 5.0);
+        assert!((m.frob_norm() - 30f64.sqrt()).abs() < 1e-12);
+        let s = m.scaled(2.0);
+        assert_eq!(s[(1, 1)], 8.0);
+        let d = s.sub(&m);
+        assert_eq!(d, m);
+    }
+
+    #[test]
+    fn add_diag_and_trace() {
+        let mut m = Mat::zeros(3, 3);
+        m.add_diag(2.5);
+        assert_eq!(m.trace(), 7.5);
+    }
+
+    #[test]
+    fn cols_range_extracts() {
+        let m = Mat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let c = m.cols_range(1, 3);
+        assert_eq!(c, Mat::from_rows(&[&[2.0, 3.0], &[5.0, 6.0]]));
+    }
+
+    #[test]
+    fn hcat_layout() {
+        let a = Mat::from_rows(&[&[1.0], &[2.0]]);
+        let b = Mat::from_rows(&[&[3.0, 4.0], &[5.0, 6.0]]);
+        let c = a.hcat(&b);
+        assert_eq!(c, Mat::from_rows(&[&[1.0, 3.0, 4.0], &[2.0, 5.0, 6.0]]));
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut rng = Rng::new(2);
+        let m = Mat::randn(5, 7, &mut rng);
+        let r = Mat::from_f32(5, 7, &m.to_f32());
+        assert!(m.rel_diff(&r) < 1e-6);
+    }
+
+    #[test]
+    fn rel_diff_zero_for_identical() {
+        let m = Mat::eye(4);
+        assert_eq!(m.rel_diff(&m), 0.0);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Rng::new(3);
+        let m = Mat::randn(200, 200, &mut rng);
+        let mean: f64 = m.data.iter().sum::<f64>() / m.data.len() as f64;
+        let var: f64 =
+            m.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / m.data.len() as f64;
+        assert!(mean.abs() < 0.02);
+        assert!((var - 1.0).abs() < 0.03);
+    }
+}

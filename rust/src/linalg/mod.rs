@@ -1,0 +1,36 @@
+//! Dense linear algebra substrate.
+//!
+//! The paper's Algorithm 1 needs, on the leader: `orth` (QR), `chol`,
+//! triangular solves, and a dense SVD of a (k+p)×(k+p) matrix; the Horst
+//! baseline additionally needs symmetric solves. No LAPACK is available to
+//! the Rust runtime (jax's LAPACK custom-calls are not registered in
+//! xla_extension 0.5.1), so this module implements the required kernels
+//! directly:
+//!
+//! * [`mat::Mat`] — row-major dense matrix with f64 storage (leader math is
+//!   done in f64 for stability; the data-pass engines use f32 and convert).
+//! * [`gemm`] — blocked matrix multiply with transpose variants. This is
+//!   also the compute core of the *native* chunk engine.
+//! * [`qr`] — Householder QR; `orth()` is Algorithm 1's `orth`.
+//! * [`chol`] — Cholesky with jitter-free failure reporting.
+//! * [`svd`] — one-sided Jacobi SVD (full, square or tall); robust for the
+//!   (k+p) ≤ few-thousand sizes the paper targets ("can be done on a single
+//!   commodity machine as long as k+p ≲ 10000").
+//! * [`eig`] — symmetric Jacobi eigensolver (used by the exact CCA oracle).
+//! * [`solve`] — triangular / Cholesky solves.
+
+pub mod chol;
+pub mod eig;
+pub mod gemm;
+pub mod mat;
+pub mod qr;
+pub mod solve;
+pub mod svd;
+
+pub use chol::cholesky;
+pub use eig::sym_eig;
+pub use gemm::{matmul, matmul_nt, matmul_tn};
+pub use mat::Mat;
+pub use qr::{orth, qr_thin};
+pub use solve::{solve_lower, solve_lower_transpose, solve_upper};
+pub use svd::svd_thin;

@@ -1,0 +1,224 @@
+//! Householder QR; `orth()` implements Algorithm 1 lines 10–11.
+
+use super::mat::Mat;
+
+/// Thin QR of an m×n matrix with m ≥ n: returns (Q: m×n with orthonormal
+/// columns, R: n×n upper triangular) such that A = Q·R.
+///
+/// Classic Householder triangularization followed by explicit thin-Q
+/// accumulation (backward application of the reflectors to the first n
+/// columns of I). Numerically stable for the tall-skinny (d × (k+p))
+/// matrices the range finder produces.
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr_thin requires rows >= cols ({m} < {n})");
+    let mut w = a.clone(); // working copy; reflectors stored below diagonal
+    let mut betas = vec![0.0f64; n];
+
+    for j in 0..n {
+        // Build the Householder vector for column j, rows j..m.
+        let mut norm2 = 0.0;
+        for i in j..m {
+            norm2 += w[(i, j)] * w[(i, j)];
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            betas[j] = 0.0;
+            continue;
+        }
+        let alpha = if w[(j, j)] >= 0.0 { -norm } else { norm };
+        let v0 = w[(j, j)] - alpha;
+        // Normalize v so v[0] = 1 (stored implicitly); beta = -v0/alpha form.
+        let mut vnorm2 = v0 * v0;
+        for i in (j + 1)..m {
+            vnorm2 += w[(i, j)] * w[(i, j)];
+        }
+        if vnorm2 == 0.0 {
+            betas[j] = 0.0;
+            w[(j, j)] = alpha;
+            continue;
+        }
+        let beta = 2.0 / vnorm2;
+        betas[j] = beta;
+        // Apply H = I − beta v vᵀ to the trailing columns j..n.
+        for c in (j + 1)..n {
+            let mut dot = v0 * w[(j, c)];
+            for i in (j + 1)..m {
+                dot += w[(i, j)] * w[(i, c)];
+            }
+            let s = beta * dot;
+            w[(j, c)] -= s * v0;
+            for i in (j + 1)..m {
+                let vij = w[(i, j)];
+                w[(i, c)] -= s * vij;
+            }
+        }
+        // Store: R diagonal entry, reflector tail below (v0 kept separately).
+        w[(j, j)] = alpha;
+        // Normalize the stored tail by v0 so that v = (1, tail/v0).
+        if v0 != 0.0 {
+            for i in (j + 1)..m {
+                w[(i, j)] /= v0;
+            }
+            betas[j] = beta * v0 * v0;
+        }
+    }
+
+    // Extract R (upper n×n triangle).
+    let mut r = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r[(i, j)] = w[(i, j)];
+        }
+    }
+
+    // Accumulate thin Q: apply reflectors H_0 … H_{n-1} in reverse to I_mn.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for j in (0..n).rev() {
+        let beta = betas[j];
+        if beta == 0.0 {
+            continue;
+        }
+        for c in 0..n {
+            // v = (1 at row j, w[(i,j)] for i>j)
+            let mut dot = q[(j, c)];
+            for i in (j + 1)..m {
+                dot += w[(i, j)] * q[(i, c)];
+            }
+            let s = beta * dot;
+            q[(j, c)] -= s;
+            for i in (j + 1)..m {
+                let vij = w[(i, j)];
+                q[(i, c)] -= s * vij;
+            }
+        }
+    }
+
+    // Sign normalization: make R's diagonal non-negative (flip matching
+    // Q column / R row). Gives the unique "positive" thin QR when A has
+    // full column rank, and makes qr(I) = (I, I).
+    for j in 0..n {
+        if r[(j, j)] < 0.0 {
+            for c in j..n {
+                r[(j, c)] = -r[(j, c)];
+            }
+            for i in 0..m {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+    (q, r)
+}
+
+/// Orthonormal basis for the column space of A — Algorithm 1's `orth`.
+///
+/// Rank deficiency (possible when the range finder's Y has linearly
+/// dependent columns, e.g. q=0 with duplicate random draws) is handled by
+/// replacing null columns of Q with fresh Gram–Schmidt-completed directions:
+/// a zero R diagonal marks the column, and the corresponding Q column from
+/// Householder accumulation is already a valid orthonormal completion, so no
+/// extra work is required — Householder Q always has exactly orthonormal
+/// columns regardless of A's rank.
+pub fn orth(a: &Mat) -> Mat {
+    qr_thin(a).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn assert_orthonormal(q: &Mat, tol: f64) {
+        let g = matmul_tn(q, q);
+        let d = g.rel_diff(&Mat::eye(q.cols));
+        assert!(d < tol, "QᵀQ deviates from I by {d}");
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        prop::check("qr-reconstruct", 25, |g| {
+            let n = g.size(1, 20);
+            let m = n + g.size(0, 30);
+            let mut rng = Rng::new(g.seed);
+            let a = Mat::randn(m, n, &mut rng);
+            let (q, r) = qr_thin(&a);
+            assert_eq!((q.rows, q.cols), (m, n));
+            assert_eq!((r.rows, r.cols), (n, n));
+            assert_orthonormal(&q, 1e-10);
+            let rec = matmul(&q, &r);
+            assert!(rec.rel_diff(&a) < 1e-10, "rel {}", rec.rel_diff(&a));
+            // R upper triangular
+            for i in 0..n {
+                for j in 0..i {
+                    assert_eq!(r[(i, j)], 0.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn orth_of_orthonormal_is_orthonormal() {
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(50, 8, &mut rng);
+        let q = orth(&a);
+        let q2 = orth(&q);
+        assert_orthonormal(&q2, 1e-12);
+        // Same column space: Q2 Q2ᵀ Q = Q
+        let proj = matmul(&q2, &matmul_tn(&q2, &q));
+        assert!(proj.rel_diff(&q) < 1e-10);
+    }
+
+    #[test]
+    fn square_identity() {
+        let (q, r) = qr_thin(&Mat::eye(6));
+        assert!(q.rel_diff(&Mat::eye(6)) < 1e-14);
+        assert!(r.rel_diff(&Mat::eye(6)) < 1e-14);
+    }
+
+    #[test]
+    fn rank_deficient_input_still_orthonormal_q() {
+        // Duplicate columns → rank 1, but Q must still be orthonormal.
+        let a = Mat::from_rows(&[&[1.0, 1.0], &[2.0, 2.0], &[3.0, 3.0]]);
+        let q = orth(&a);
+        assert_orthonormal(&q, 1e-12);
+        let (qq, r) = qr_thin(&a);
+        assert!(matmul(&qq, &r).rel_diff(&a) < 1e-12);
+        assert!(r[(1, 1)].abs() < 1e-12, "second pivot should vanish");
+    }
+
+    #[test]
+    fn zero_matrix_does_not_blow_up() {
+        let a = Mat::zeros(5, 3);
+        let (q, r) = qr_thin(&a);
+        assert!(r.max_abs() < 1e-300);
+        assert_orthonormal(&q, 1e-12); // completion directions
+    }
+
+    #[test]
+    fn preserves_column_space() {
+        prop::check("orth-colspace", 15, |g| {
+            let n = g.size(1, 10);
+            let m = n + g.size(2, 20);
+            let mut rng = Rng::new(g.seed);
+            let a = Mat::randn(m, n, &mut rng);
+            let q = orth(&a);
+            // A must be exactly representable in the Q basis: Q Qᵀ A = A.
+            let rec = matmul(&q, &matmul_tn(&q, &a));
+            assert!(rec.rel_diff(&a) < 1e-9);
+        });
+    }
+
+    #[test]
+    fn sign_stability_large_entries() {
+        // Column whose head is negative (exercises the alpha sign choice).
+        let a = Mat::from_rows(&[&[-5.0, 1.0], &[1.0, 2.0], &[0.5, -3.0]]);
+        let (q, r) = qr_thin(&a);
+        assert!(matmul(&q, &r).rel_diff(&a) < 1e-12);
+        assert_orthonormal(&q, 1e-12);
+    }
+}

@@ -1,0 +1,226 @@
+//! Triangular solves — used to apply L⁻¹ / L⁻ᵀ in Algorithm 1 line 21
+//! (`F ← La⁻ᵀ F Lb⁻¹`) and in the Horst baseline's approximate LS solves.
+
+use super::mat::Mat;
+
+/// Solve L·X = B for X, with L lower triangular (forward substitution),
+/// column-blocked over B.
+pub fn solve_lower(l: &Mat, b: &Mat) -> Mat {
+    assert_eq!(l.rows, l.cols);
+    assert_eq!(l.rows, b.rows);
+    let n = l.rows;
+    let m = b.cols;
+    let mut x = b.clone();
+    for i in 0..n {
+        let lii = l[(i, i)];
+        assert!(lii != 0.0, "singular triangular factor at {i}");
+        for k in 0..i {
+            let lik = l[(i, k)];
+            if lik == 0.0 {
+                continue;
+            }
+            // x[i,:] -= l[i,k] * x[k,:]
+            let (head, tail) = x.data.split_at_mut(i * m);
+            let xk = &head[k * m..(k + 1) * m];
+            let xi = &mut tail[..m];
+            for (a, b) in xi.iter_mut().zip(xk) {
+                *a -= lik * b;
+            }
+        }
+        for v in x.row_mut(i) {
+            *v /= lii;
+        }
+    }
+    x
+}
+
+/// Solve Lᵀ·X = B for X, with L lower triangular (back substitution on Lᵀ).
+pub fn solve_lower_transpose(l: &Mat, b: &Mat) -> Mat {
+    assert_eq!(l.rows, l.cols);
+    assert_eq!(l.rows, b.rows);
+    let n = l.rows;
+    let m = b.cols;
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        let lii = l[(i, i)];
+        assert!(lii != 0.0, "singular triangular factor at {i}");
+        for k in (i + 1)..n {
+            let lki = l[(k, i)]; // (Lᵀ)[i,k]
+            if lki == 0.0 {
+                continue;
+            }
+            let (head, tail) = x.data.split_at_mut(k * m);
+            let xi = &mut head[i * m..(i + 1) * m];
+            let xk = &tail[..m];
+            for (a, b) in xi.iter_mut().zip(xk) {
+                *a -= lki * b;
+            }
+        }
+        for v in x.row_mut(i) {
+            *v /= lii;
+        }
+    }
+    x
+}
+
+/// Solve U·X = B for X, with U upper triangular.
+pub fn solve_upper(u: &Mat, b: &Mat) -> Mat {
+    assert_eq!(u.rows, u.cols);
+    assert_eq!(u.rows, b.rows);
+    let n = u.rows;
+    let m = b.cols;
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        let uii = u[(i, i)];
+        assert!(uii != 0.0, "singular triangular factor at {i}");
+        for k in (i + 1)..n {
+            let uik = u[(i, k)];
+            if uik == 0.0 {
+                continue;
+            }
+            let (head, tail) = x.data.split_at_mut(k * m);
+            let xi = &mut head[i * m..(i + 1) * m];
+            let xk = &tail[..m];
+            for (a, b) in xi.iter_mut().zip(xk) {
+                *a -= uik * b;
+            }
+        }
+        for v in x.row_mut(i) {
+            *v /= uii;
+        }
+    }
+    x
+}
+
+/// Solve (L·Lᵀ)·X = B given the Cholesky factor L (SPD solve).
+pub fn solve_chol(l: &Mat, b: &Mat) -> Mat {
+    solve_lower_transpose(l, &solve_lower(l, b))
+}
+
+/// X·L⁻¹ for lower-triangular L, i.e. solve X_out · L = X ⇔ Lᵀ·X_outᵀ = Xᵀ.
+/// Used for `F Lb⁻¹` in Algorithm 1 line 21.
+pub fn right_solve_lower(x: &Mat, l: &Mat) -> Mat {
+    solve_lower_transpose(l, &x.transpose()).transpose()
+}
+
+/// X·L⁻ᵀ for lower-triangular L, i.e. solve X_out · Lᵀ = X ⇔ L·X_outᵀ = Xᵀ.
+/// This is Algorithm 1's `F Lb⁻¹` under the Matlab upper-Cholesky
+/// convention (paper's L is our Lᵀ).
+pub fn right_solve_lower_transpose(x: &Mat, l: &Mat) -> Mat {
+    solve_lower(l, &x.transpose()).transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol::cholesky;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_lower(n: usize, rng: &mut Rng) -> Mat {
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                l[(i, j)] = rng.normal();
+            }
+            l[(i, i)] = 1.0 + rng.f64(); // well-conditioned diagonal
+        }
+        l
+    }
+
+    #[test]
+    fn forward_solve_inverts() {
+        prop::check("solve-lower", 25, |g| {
+            let n = g.size(1, 20);
+            let m = g.size(1, 8);
+            let mut rng = Rng::new(g.seed);
+            let l = random_lower(n, &mut rng);
+            let b = Mat::randn(n, m, &mut rng);
+            let x = solve_lower(&l, &b);
+            assert!(matmul(&l, &x).rel_diff(&b) < 1e-10);
+        });
+    }
+
+    #[test]
+    fn transpose_solve_inverts() {
+        prop::check("solve-lower-t", 25, |g| {
+            let n = g.size(1, 20);
+            let m = g.size(1, 8);
+            let mut rng = Rng::new(g.seed);
+            let l = random_lower(n, &mut rng);
+            let b = Mat::randn(n, m, &mut rng);
+            let x = solve_lower_transpose(&l, &b);
+            assert!(matmul(&l.transpose(), &x).rel_diff(&b) < 1e-10);
+        });
+    }
+
+    #[test]
+    fn upper_solve_inverts() {
+        prop::check("solve-upper", 25, |g| {
+            let n = g.size(1, 20);
+            let m = g.size(1, 8);
+            let mut rng = Rng::new(g.seed);
+            let u = random_lower(n, &mut rng).transpose();
+            let b = Mat::randn(n, m, &mut rng);
+            let x = solve_upper(&u, &b);
+            assert!(matmul(&u, &x).rel_diff(&b) < 1e-10);
+        });
+    }
+
+    #[test]
+    fn chol_solve_solves_spd() {
+        prop::check("solve-chol", 20, |g| {
+            let n = g.size(1, 16);
+            let mut rng = Rng::new(g.seed);
+            let x = Mat::randn(n + 4, n, &mut rng);
+            let mut a = matmul_tn(&x, &x);
+            a.add_diag(0.1);
+            let l = cholesky(&a).unwrap();
+            let b = Mat::randn(n, 3, &mut rng);
+            let sol = solve_chol(&l, &b);
+            assert!(matmul(&a, &sol).rel_diff(&b) < 1e-8);
+        });
+    }
+
+    #[test]
+    fn right_solve_matches_inverse() {
+        let mut rng = Rng::new(21);
+        let l = random_lower(6, &mut rng);
+        let x = Mat::randn(4, 6, &mut rng);
+        let y = right_solve_lower(&x, &l);
+        // y * l == x
+        assert!(matmul(&y, &l).rel_diff(&x) < 1e-10);
+    }
+
+    #[test]
+    fn identity_solves_are_noops() {
+        let b = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert!(solve_lower(&Mat::eye(2), &b).rel_diff(&b) < 1e-15);
+        assert!(solve_upper(&Mat::eye(2), &b).rel_diff(&b) < 1e-15);
+    }
+
+    #[test]
+    #[should_panic]
+    fn singular_diagonal_panics() {
+        let mut l = Mat::eye(3);
+        l[(1, 1)] = 0.0;
+        solve_lower(&l, &Mat::eye(3));
+    }
+
+    #[test]
+    fn whitening_identity_paper_line21() {
+        // The exact operation in Algorithm 1: L⁻ᵀ F L⁻¹ must equal
+        // (inv(La))ᵀ F inv(Lb) computed explicitly.
+        let mut rng = Rng::new(33);
+        let la = random_lower(5, &mut rng);
+        let lb = random_lower(5, &mut rng);
+        let f = Mat::randn(5, 5, &mut rng);
+        let got = right_solve_lower(&solve_lower_transpose(&la, &f), &lb);
+        // Explicit inverses via solves against I.
+        let la_inv = solve_lower(&la, &Mat::eye(5));
+        let lb_inv = solve_lower(&lb, &Mat::eye(5));
+        let want = matmul(&matmul(&la_inv.transpose(), &f), &lb_inv);
+        assert!(got.rel_diff(&want) < 1e-10);
+    }
+}

@@ -1,0 +1,238 @@
+//! One-sided Jacobi SVD — Algorithm 1 line 22 (`svd(F, k)`).
+//!
+//! One-sided Jacobi orthogonalizes the columns of the working matrix by
+//! plane rotations; it is simple, numerically robust, and more than fast
+//! enough for the (k+p)×(k+p) matrices of the final optimization (the paper
+//! notes these fit on "a single commodity machine as long as k+p ≲ 10000").
+
+use super::mat::Mat;
+
+/// Thin SVD of an m×n matrix with m ≥ n:
+/// A = U·diag(σ)·Vᵀ with U m×n, σ descending, V n×n.
+pub fn svd_thin(a: &Mat) -> (Mat, Vec<f64>, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "svd_thin requires rows >= cols");
+    let mut u = a.clone(); // columns rotated in place
+    let mut v = Mat::eye(n);
+
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Compute the 2x2 Gram entries for columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation that zeroes the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    u[(i, p)] = c * up - s * uq;
+                    u[(i, q)] = s * up + c * uq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+
+    // Column norms are the singular values; normalize U.
+    let mut sigma: Vec<f64> = (0..n)
+        .map(|j| {
+            let mut s = 0.0;
+            for i in 0..m {
+                s += u[(i, j)] * u[(i, j)];
+            }
+            s.sqrt()
+        })
+        .collect();
+    for j in 0..n {
+        if sigma[j] > 1e-300 {
+            for i in 0..m {
+                u[(i, j)] /= sigma[j];
+            }
+        }
+    }
+
+    // Sort descending by sigma (stable index sort, then permute columns).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| sigma[b].partial_cmp(&sigma[a]).unwrap());
+    let mut u_s = Mat::zeros(m, n);
+    let mut v_s = Mat::zeros(n, n);
+    let mut sig_s = vec![0.0; n];
+    for (newj, &oldj) in order.iter().enumerate() {
+        sig_s[newj] = sigma[oldj];
+        for i in 0..m {
+            u_s[(i, newj)] = u[(i, oldj)];
+        }
+        for i in 0..n {
+            v_s[(i, newj)] = v[(i, oldj)];
+        }
+    }
+    sigma = sig_s;
+    (u_s, sigma, v_s)
+}
+
+/// Rank-k truncation helper: returns (U_k, σ_k, V_k).
+pub fn svd_truncated(a: &Mat, k: usize) -> (Mat, Vec<f64>, Mat) {
+    let (u, s, v) = svd_thin(a);
+    let k = k.min(s.len());
+    (u.cols_range(0, k), s[..k].to_vec(), v.cols_range(0, k))
+}
+
+/// Spectral norm estimate via the largest singular value.
+pub fn spectral_norm(a: &Mat) -> f64 {
+    // For tall matrices compute on the Gram matrix's square root via svd of A
+    // directly (cheap at our sizes).
+    if a.rows >= a.cols {
+        svd_thin(a).1.first().copied().unwrap_or(0.0)
+    } else {
+        svd_thin(&a.transpose()).1.first().copied().unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn reconstruct(u: &Mat, s: &[f64], v: &Mat) -> Mat {
+        let mut us = u.clone();
+        for j in 0..s.len() {
+            for i in 0..us.rows {
+                us[(i, j)] *= s[j];
+            }
+        }
+        matmul(&us, &v.transpose())
+    }
+
+    fn assert_orthonormal_cols(q: &Mat, tol: f64) {
+        let g = matmul_tn(q, q);
+        assert!(
+            g.rel_diff(&Mat::eye(q.cols)) < tol,
+            "orthonormality violated: {}",
+            g.rel_diff(&Mat::eye(q.cols))
+        );
+    }
+
+    #[test]
+    fn diagonal_matrix_svd() {
+        let a = Mat::from_rows(&[&[3.0, 0.0], &[0.0, 5.0]]);
+        let (u, s, v) = svd_thin(&a);
+        assert!((s[0] - 5.0).abs() < 1e-12);
+        assert!((s[1] - 3.0).abs() < 1e-12);
+        assert!(reconstruct(&u, &s, &v).rel_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_random() {
+        prop::check("svd-reconstruct", 20, |g| {
+            let n = g.size(1, 16);
+            let m = n + g.size(0, 16);
+            let mut rng = Rng::new(g.seed);
+            let a = Mat::randn(m, n, &mut rng);
+            let (u, s, v) = svd_thin(&a);
+            assert!(reconstruct(&u, &s, &v).rel_diff(&a) < 1e-9);
+            assert_orthonormal_cols(&u, 1e-9);
+            assert_orthonormal_cols(&v, 1e-9);
+            // descending, non-negative
+            for w in s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+            assert!(s.iter().all(|&x| x >= 0.0));
+        });
+    }
+
+    #[test]
+    fn known_rank_one() {
+        // A = 2 * outer(e1, [3/5, 4/5]) → sigma = 2, rank 1.
+        let a = Mat::from_rows(&[&[1.2, 1.6], &[0.0, 0.0], &[0.0, 0.0]]);
+        let (_, s, _) = svd_thin(&a);
+        assert!((s[0] - 2.0).abs() < 1e-12, "{s:?}");
+        assert!(s[1].abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_values_match_eig_of_gram() {
+        let mut rng = Rng::new(42);
+        let a = Mat::randn(20, 8, &mut rng);
+        let (_, s, _) = svd_thin(&a);
+        let gram = matmul_tn(&a, &a);
+        // trace(AᵀA) = Σ σ²
+        let tr = gram.trace();
+        let ssum: f64 = s.iter().map(|x| x * x).sum();
+        assert!((tr - ssum).abs() / tr < 1e-10);
+    }
+
+    #[test]
+    fn truncated_svd_shapes() {
+        let mut rng = Rng::new(43);
+        let a = Mat::randn(12, 9, &mut rng);
+        let (u, s, v) = svd_truncated(&a, 4);
+        assert_eq!((u.rows, u.cols), (12, 4));
+        assert_eq!(s.len(), 4);
+        assert_eq!((v.rows, v.cols), (9, 4));
+    }
+
+    #[test]
+    fn truncation_is_best_approx() {
+        // Eckart–Young sanity: rank-k truncation error equals σ_{k+1} in
+        // spectral norm (checked loosely in Frobenius).
+        let mut rng = Rng::new(44);
+        let a = Mat::randn(15, 10, &mut rng);
+        let (u, s, v) = svd_thin(&a);
+        let k = 4;
+        let rec = reconstruct(
+            &u.cols_range(0, k),
+            &s[..k],
+            &v.cols_range(0, k),
+        );
+        let err = a.sub(&rec).frob_norm();
+        let want: f64 = s[k..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((err - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let (u, s, _v) = svd_thin(&Mat::zeros(6, 3));
+        assert!(s.iter().all(|&x| x == 0.0));
+        assert_eq!(u.rows, 6);
+    }
+
+    #[test]
+    fn spectral_norm_of_orthonormal_is_one() {
+        let mut rng = Rng::new(45);
+        let q = crate::linalg::qr::orth(&Mat::randn(30, 6, &mut rng));
+        assert!((spectral_norm(&q) - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn wide_matrix_spectral_norm() {
+        let a = Mat::from_rows(&[&[0.0, 2.0, 0.0]]);
+        assert!((spectral_norm(&a) - 2.0).abs() < 1e-12);
+    }
+}

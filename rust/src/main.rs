@@ -1,0 +1,338 @@
+//! `repro` — the RandomizedCCA system launcher.
+//!
+//! Subcommands map 1:1 to the paper's artifacts (DESIGN.md §6):
+//!   gen        generate + shard a SynthParl workload
+//!   rcca       run RandomizedCCA end to end (any engine), report objective
+//!   horst      run the Horst baseline (optionally rcca-initialized)
+//!   spectrum   E1 / Figure 1 — two-pass randomized SVD spectrum
+//!   fig2a      E2 / Figure 2a — (q, p) sweep vs Horst reference
+//!   table2b    E3 / Table 2b — times + train/test + Horst rows
+//!   nu-sweep   E4 / Figure 3 — ν sensitivity, rcca vs Horst
+//!
+//! Every experiment writes its JSON twin under --report-dir.
+
+use rcca::bench::Report;
+use rcca::cca::horst::{Horst, HorstConfig};
+use rcca::cca::objective::{evaluate, feasibility};
+use rcca::cca::rcca::{RandomizedCca, RccaConfig};
+use rcca::experiments::{self, EngineKind, Scale, Workload};
+use rcca::util::cli::{Args, Spec};
+use rcca::util::timer::Timer;
+use std::path::Path;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "repro — RandomizedCCA reproduction (Mineiro & Karampatziakis, 2014)\n\
+     \n\
+     USAGE: repro <subcommand> [--flags]\n\
+     \n\
+     SUBCOMMANDS:\n\
+       gen        generate + shard a SynthParl workload\n\
+       rcca       run RandomizedCCA, print objective + feasibility\n\
+       horst      run the Horst baseline\n\
+       spectrum   Figure 1 — spectrum of (1/n) A'B\n\
+       fig2a      Figure 2a — objective vs (q, p) with Horst reference\n\
+       table2b    Table 2b — times, train/test, Horst rows\n\
+       nu-sweep   Figure 3 — nu sensitivity\n\
+     \n\
+     Run `repro <subcommand> --help` for flags.\n"
+        .to_string()
+}
+
+fn scale_flags(spec: Spec) -> Spec {
+    spec.opt("n", "30000", "sentence pairs")
+        .opt("dims", "4096", "hashed feature dimension per view")
+        .opt("topics", "96", "latent topics in the generator")
+        .opt("k", "60", "embedding dimension k")
+        .opt("seed", "246813579", "corpus seed")
+        .switch("tiny", "use the tiny CI scale (overrides n/dims/topics/k)")
+}
+
+fn scale_from(args: &Args) -> anyhow::Result<Scale> {
+    if args.bool("tiny")? {
+        return Ok(Scale::tiny());
+    }
+    if args.get("workload") == Some("generalization") {
+        return Ok(Scale::generalization());
+    }
+    Ok(Scale {
+        n: args.usize("n")?,
+        dims: args.usize("dims")?,
+        topics: args.usize("topics")?,
+        k: args.usize("k")?,
+        seed: args.u64("seed")?,
+        ..Default::default()
+    })
+}
+
+fn engine_kind(args: &Args) -> anyhow::Result<EngineKind> {
+    match args.str("engine") {
+        "inmemory" => Ok(EngineKind::InMemory),
+        "native" => Ok(EngineKind::ShardedNative),
+        "pjrt" => Ok(EngineKind::ShardedPjrt),
+        other => anyhow::bail!("unknown engine '{other}' (inmemory|native|pjrt)"),
+    }
+}
+
+fn emit(report: &Report, dir: &str) -> anyhow::Result<()> {
+    print!("{}", report.render());
+    let path = report.write_json(dir)?;
+    println!("json: {path}\n");
+    Ok(())
+}
+
+fn run(argv: Vec<String>) -> anyhow::Result<()> {
+    let Some((cmd, rest)) = argv.split_first() else {
+        print!("{}", usage());
+        return Ok(());
+    };
+    let rest = rest.to_vec();
+    match cmd.as_str() {
+        "gen" => cmd_gen(rest),
+        "rcca" => cmd_rcca(rest),
+        "horst" => cmd_horst(rest),
+        "spectrum" => cmd_spectrum(rest),
+        "fig2a" => cmd_fig2a(rest),
+        "table2b" => cmd_table2b(rest),
+        "nu-sweep" => cmd_nu(rest),
+        "--help" | "-h" | "help" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}'\n\n{}", usage()),
+    }
+}
+
+fn parse(spec: Spec, argv: &[String]) -> anyhow::Result<Args> {
+    spec.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+fn cmd_gen(argv: Vec<String>) -> anyhow::Result<()> {
+    let spec = scale_flags(Spec::new("gen", "generate + shard a SynthParl workload"))
+        .opt("out", "work/shards", "output shard directory")
+        .opt("rows-per-shard", "1024", "rows per shard file");
+    let args = parse(spec, &argv)?;
+    let scale = scale_from(&args)?;
+    let t = Timer::start();
+    let w = Workload::generate(scale);
+    let mut writer = rcca::data::shards::ShardWriter::create(
+        Path::new(args.str("out")),
+        args.usize("rows-per-shard")?,
+    )?;
+    writer.write_dataset(&w.train.a, &w.train.b)?;
+    println!(
+        "generated n={} (train {} / test {}), d={}, nnz a={} b={} in {:.1}s -> {}",
+        w.scale.n,
+        w.train.rows(),
+        w.test.rows(),
+        w.scale.dims,
+        w.train.a.nnz(),
+        w.train.b.nnz(),
+        t.secs(),
+        args.str("out")
+    );
+    Ok(())
+}
+
+fn common_run_flags(spec: Spec) -> Spec {
+    scale_flags(spec)
+        .opt("engine", "inmemory", "compute path: inmemory|native|pjrt")
+        .opt("workers", "2", "coordinator worker threads")
+        .opt("chunk-rows", "256", "rows per engine chunk")
+        .opt("workdir", "work", "scratch dir for shards")
+        .opt("report-dir", "reports", "where JSON twins are written")
+        .opt("nu", "0.01", "scale-free regularization nu")
+}
+
+fn cmd_rcca(argv: Vec<String>) -> anyhow::Result<()> {
+    let spec = common_run_flags(Spec::new("rcca", "run RandomizedCCA (Algorithm 1)"))
+        .opt("p", "240", "oversampling")
+        .opt("q", "1", "power iterations");
+    let args = parse(spec, &argv)?;
+    let scale = scale_from(&args)?;
+    let k = scale.k;
+    let w = Workload::generate(scale);
+    let (la, lb) = w.lambdas(args.f64("nu")?);
+    let mut engine = experiments::build_engine(
+        &w,
+        engine_kind(&args)?,
+        Path::new(args.str("workdir")),
+        args.usize("workers")?,
+        args.usize("chunk-rows")?,
+    )?;
+    let t = Timer::start();
+    let model = RandomizedCca::new(RccaConfig {
+        k,
+        p: args.usize("p")?,
+        q: args.usize("q")?,
+        lambda_a: la,
+        lambda_b: lb,
+        seed: w.scale.seed ^ 0xacca,
+    })
+    .fit(engine.as_mut())?;
+    let fit_secs = t.secs();
+    let train = evaluate(&model, engine.as_mut());
+    let test = evaluate(&model, &mut w.test_engine());
+    let feas = feasibility(&model, engine.as_mut(), la, lb);
+
+    let mut r = Report::new("RandomizedCCA run", &["metric", "value"]);
+    r.row(&["engine".into(), args.str("engine").into()]);
+    r.row(&["k / p / q".into(), format!("{k} / {} / {}", args.str("p"), args.str("q"))]);
+    r.row(&["fit time (s)".into(), format!("{fit_secs:.2}")]);
+    r.row(&["data passes (fit)".into(), model.passes.to_string()]);
+    r.row(&["train objective".into(), format!("{:.4}", train.sum_corr)]);
+    r.row(&["test objective".into(), format!("{:.4}", test.sum_corr)]);
+    r.row(&["feasibility cov err".into(), format!("{:.2e}", feas.cov_a_err.max(feas.cov_b_err))]);
+    r.row(&["feasibility offdiag".into(), format!("{:.2e}", feas.cross_offdiag)]);
+    emit(&r, args.str("report-dir"))
+}
+
+fn cmd_horst(argv: Vec<String>) -> anyhow::Result<()> {
+    let spec = common_run_flags(Spec::new("horst", "run the Horst-iteration baseline"))
+        .opt("passes", "120", "data-pass budget")
+        .opt("init", "none", "initializer: none|rcca")
+        .opt("init-p", "120", "rcca initializer oversampling")
+        .opt("init-q", "1", "rcca initializer power iterations");
+    let args = parse(spec, &argv)?;
+    let scale = scale_from(&args)?;
+    let k = scale.k;
+    let w = Workload::generate(scale);
+    let (la, lb) = w.lambdas(args.f64("nu")?);
+    let mut engine = experiments::build_engine(
+        &w,
+        engine_kind(&args)?,
+        Path::new(args.str("workdir")),
+        args.usize("workers")?,
+        args.usize("chunk-rows")?,
+    )?;
+    let t = Timer::start();
+    let horst = Horst::new(HorstConfig {
+        k,
+        lambda_a: la,
+        lambda_b: lb,
+        pass_budget: args.usize("passes")?,
+        augment: true,
+        seed: 0x4057,
+        tol: 0.0,
+    });
+    let (model, trace) = match args.str("init") {
+        "rcca" => {
+            let init = RandomizedCca::new(RccaConfig {
+                k,
+                p: args.usize("init-p")?,
+                q: args.usize("init-q")?,
+                lambda_a: la,
+                lambda_b: lb,
+                seed: 0x1217,
+            })
+            .fit(engine.as_mut())?;
+            horst.fit_from(engine.as_mut(), init.xa.clone(), init.xb.clone())?
+        }
+        "none" => horst.fit(engine.as_mut())?,
+        other => anyhow::bail!("unknown --init '{other}'"),
+    };
+    let secs = t.secs();
+    let train = evaluate(&model, engine.as_mut());
+    let test = evaluate(&model, &mut w.test_engine());
+    let mut r = Report::new("Horst run", &["metric", "value"]);
+    r.row(&["init".into(), args.str("init").into()]);
+    r.row(&["time (s)".into(), format!("{secs:.2}")]);
+    r.row(&["passes".into(), model.passes.to_string()]);
+    r.row(&["iterations".into(), trace.len().to_string()]);
+    r.row(&["train objective".into(), format!("{:.4}", train.sum_corr)]);
+    r.row(&["test objective".into(), format!("{:.4}", test.sum_corr)]);
+    emit(&r, args.str("report-dir"))
+}
+
+fn cmd_spectrum(argv: Vec<String>) -> anyhow::Result<()> {
+    let spec = common_run_flags(Spec::new("spectrum", "Figure 1: spectrum of (1/n) A'B"))
+        .opt("top", "512", "singular values to estimate")
+        .opt("oversample", "64", "sketch oversampling");
+    let args = parse(spec, &argv)?;
+    let scale = scale_from(&args)?;
+    let w = Workload::generate(scale);
+    let mut engine = experiments::build_engine(
+        &w,
+        engine_kind(&args)?,
+        Path::new(args.str("workdir")),
+        args.usize("workers")?,
+        args.usize("chunk-rows")?,
+    )?;
+    let res = experiments::e1_spectrum::run(
+        engine.as_mut(),
+        &w,
+        args.usize("top")?,
+        args.usize("oversample")?,
+        w.scale.seed ^ 0x57ec,
+    );
+    emit(
+        &experiments::e1_spectrum::report(&res, (args.usize("top")? / 32).max(1)),
+        args.str("report-dir"),
+    )
+}
+
+fn cmd_fig2a(argv: Vec<String>) -> anyhow::Result<()> {
+    let spec = scale_flags(Spec::new("fig2a", "Figure 2a: objective vs (q, p)"))
+        .opt("qs", "0,1,2,3", "q values")
+        .opt("ps", "10,40,100,240", "p values")
+        .opt("horst-passes", "120", "Horst reference budget")
+        .opt("report-dir", "reports", "where JSON twins are written");
+    let args = parse(spec, &argv)?;
+    let w = Workload::generate(scale_from(&args)?);
+    let res = experiments::e2_sweep::run(
+        &w,
+        &args.usize_list("qs")?,
+        &args.usize_list("ps")?,
+        args.usize("horst-passes")?,
+    )?;
+    emit(
+        &experiments::e2_sweep::report(&res, w.scale.k),
+        args.str("report-dir"),
+    )
+}
+
+fn cmd_table2b(argv: Vec<String>) -> anyhow::Result<()> {
+    let spec = scale_flags(Spec::new("table2b", "Table 2b: times + train/test objectives"))
+        .opt("workload", "generalization", "workload preset: generalization|standard")
+        .opt("horst-passes", "120", "Horst budget")
+        .opt("report-dir", "reports", "where JSON twins are written");
+    let args = parse(spec, &argv)?;
+    let w = Workload::generate(scale_from(&args)?);
+    let mut cfg = experiments::e3_table::TableConfig::scaled(&w);
+    cfg.horst_budget = args.usize("horst-passes")?;
+    let res = experiments::e3_table::run(&w, &cfg)?;
+    emit(&experiments::e3_table::report(&res), args.str("report-dir"))
+}
+
+fn cmd_nu(argv: Vec<String>) -> anyhow::Result<()> {
+    let spec = scale_flags(Spec::new("nu-sweep", "Figure 3: nu sensitivity"))
+        .opt("workload", "generalization", "workload preset: generalization|standard")
+        .opt("nus", "0.0005,0.002,0.01,0.05,0.2,1.0", "nu grid")
+        .opt("q", "2", "rcca power iterations")
+        .opt("p", "240", "rcca oversampling")
+        .opt("horst-passes", "120", "Horst budget")
+        .opt("report-dir", "reports", "where JSON twins are written");
+    let args = parse(spec, &argv)?;
+    let w = Workload::generate(scale_from(&args)?);
+    let (q, p) = (args.usize("q")?, args.usize("p")?);
+    let budget = args.usize("horst-passes")?;
+    let pts = experiments::e4_nu::run(&w, &args.f64_list("nus")?, q, p, budget)?;
+    if let Err(msg) = experiments::e4_nu::check_shape(&pts) {
+        eprintln!("warning: figure-3 shape check: {msg}");
+    }
+    emit(
+        &experiments::e4_nu::report(&pts, q, p, budget),
+        args.str("report-dir"),
+    )
+}

@@ -1,0 +1,135 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json` + `*.hlo.txt`) and the PJRT engine.
+
+use crate::util::json::{parse, Json};
+use std::path::{Path, PathBuf};
+
+/// One compiled entry: a chunk function specialized to concrete shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    /// "power" or "final".
+    pub entry: String,
+    /// Chunk rows the artifact was lowered for.
+    pub m: usize,
+    /// Feature dims (da = db = d in our artifact grid).
+    pub d: usize,
+    /// Projection columns (k+p) the artifact was lowered for.
+    pub r: usize,
+    /// HLO text file, relative to the manifest's directory.
+    pub path: PathBuf,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("cannot read manifest in {dir:?}: {e}"))?;
+        Self::from_json(dir, &text)
+    }
+
+    pub fn from_json(dir: &Path, text: &str) -> anyhow::Result<Manifest> {
+        let v = parse(text).map_err(|e| anyhow::anyhow!("manifest parse error: {e}"))?;
+        let arr = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'entries'"))?;
+        let mut entries = Vec::new();
+        for (i, e) in arr.iter().enumerate() {
+            let get_usize = |k: &str| {
+                e.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("entry {i}: missing '{k}'"))
+            };
+            let entry = e
+                .get("entry")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("entry {i}: missing 'entry'"))?
+                .to_string();
+            anyhow::ensure!(
+                entry == "power" || entry == "final",
+                "entry {i}: unknown kind '{entry}'"
+            );
+            let path = e
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("entry {i}: missing 'path'"))?;
+            entries.push(ManifestEntry {
+                entry,
+                m: get_usize("m")?,
+                d: get_usize("d")?,
+                r: get_usize("r")?,
+                path: PathBuf::from(path),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    /// Find the smallest compiled (m, r) covering the requested shape for
+    /// a given entry kind and feature dim — padding rule of the PJRT engine.
+    pub fn best_fit(&self, entry: &str, d: usize, m: usize, r: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.entry == entry && e.d == d && e.m >= m && e.r >= r)
+            .min_by_key(|e| (e.m, e.r))
+    }
+
+    pub fn hlo_path(&self, e: &ManifestEntry) -> PathBuf {
+        self.dir.join(&e.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "entries": [
+            {"entry": "power", "m": 64, "d": 256, "r": 32, "path": "power_m64_d256_r32.hlo.txt"},
+            {"entry": "power", "m": 256, "d": 256, "r": 64, "path": "power_m256_d256_r64.hlo.txt"},
+            {"entry": "final", "m": 64, "d": 256, "r": 32, "path": "final_m64_d256_r32.hlo.txt"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::from_json(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.entries[0].entry, "power");
+        assert_eq!(m.entries[0].m, 64);
+        assert_eq!(
+            m.hlo_path(&m.entries[0]),
+            PathBuf::from("/tmp/a/power_m64_d256_r32.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn best_fit_picks_smallest_cover() {
+        let m = Manifest::from_json(Path::new("/x"), SAMPLE).unwrap();
+        let e = m.best_fit("power", 256, 50, 30).unwrap();
+        assert_eq!((e.m, e.r), (64, 32));
+        let e = m.best_fit("power", 256, 65, 30).unwrap();
+        assert_eq!((e.m, e.r), (256, 64));
+        assert!(m.best_fit("power", 256, 300, 30).is_none());
+        assert!(m.best_fit("power", 512, 10, 10).is_none());
+        assert!(m.best_fit("final", 256, 64, 40).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::from_json(Path::new("/x"), "{}").is_err());
+        assert!(Manifest::from_json(Path::new("/x"), "not json").is_err());
+        let bad_kind = r#"{"entries":[{"entry":"bogus","m":1,"d":1,"r":1,"path":"p"}]}"#;
+        assert!(Manifest::from_json(Path::new("/x"), bad_kind).is_err());
+        let missing = r#"{"entries":[{"entry":"power","m":1,"d":1,"path":"p"}]}"#;
+        assert!(Manifest::from_json(Path::new("/x"), missing).is_err());
+    }
+}

@@ -1,0 +1,72 @@
+//! Compute runtime: chunk-level engines.
+//!
+//! The coordinator slices each shard into fixed-size row chunks and hands
+//! them to a [`ChunkEngine`]. Two engines implement the same contract:
+//!
+//! * [`NativeEngine`] — pure-Rust sparse products (O(nnz·r)); the fast path
+//!   for the extremely sparse hashed BoW views, and the fallback when no
+//!   artifacts are built.
+//! * [`PjrtEngine`] — executes the AOT-compiled JAX/Pallas chunk programs
+//!   (`artifacts/*.hlo.txt`, built once by `make artifacts`) through the
+//!   PJRT C API. Chunks are densified at the boundary; shapes are padded up
+//!   to the compiled artifact grid (zero rows/columns are exact no-ops for
+//!   every product we compute).
+//!
+//! The integration tests assert both engines agree to f32 precision on
+//! identical chunks, which is the rust-side half of the correctness chain
+//! (the python-side half is `pytest python/tests`, kernels vs `ref.py`).
+
+pub mod manifest;
+pub mod native;
+pub mod pjrt;
+
+pub use manifest::{Manifest, ManifestEntry};
+pub use native::NativeEngine;
+pub use pjrt::PjrtEngine;
+
+use crate::data::TwoViewChunk;
+use crate::linalg::Mat;
+
+/// Chunk-level compute contract. `r` is the number of projection columns
+/// (k+p in Algorithm 1). Implementations must be thread-safe — the
+/// coordinator calls them from worker threads.
+pub trait ChunkEngine: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Power-pass products for one chunk:
+    /// `(Aᵀcₕᵤₙₖ·(Bchunk·Qb), Bᵀchunk·(Achunk·Qa))` — shapes (da×r, db×r).
+    /// `qa32`/`qb32` are row-major (da×r)/(db×r) f32 broadcasts.
+    fn power_chunk(
+        &self,
+        chunk: &TwoViewChunk,
+        qa32: &[f32],
+        qb32: &[f32],
+        r: usize,
+    ) -> anyhow::Result<(Mat, Mat)>;
+
+    /// Final-pass products for one chunk:
+    /// `(PaᵀPa, PbᵀPb, PaᵀPb)` with `Pa = Achunk·Qa` — shapes (r×r each).
+    fn final_chunk(
+        &self,
+        chunk: &TwoViewChunk,
+        qa32: &[f32],
+        qb32: &[f32],
+        r: usize,
+    ) -> anyhow::Result<(Mat, Mat, Mat)>;
+}
+
+/// Row-major f32 copy of a leader-side matrix (engine boundary helper).
+pub fn mat_to_f32(m: &Mat) -> Vec<f32> {
+    m.to_f32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_to_f32_layout() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(mat_to_f32(&m), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,164 @@
+//! Native (pure Rust) chunk engine: sparse products straight off the CSR.
+
+use super::ChunkEngine;
+use crate::data::TwoViewChunk;
+use crate::linalg::gemm::sgemm_tn;
+use crate::linalg::Mat;
+
+/// Direct sparse-dense products, O(nnz·r) per chunk. No densification.
+#[derive(Debug, Default)]
+pub struct NativeEngine;
+
+impl NativeEngine {
+    pub fn new() -> NativeEngine {
+        NativeEngine
+    }
+}
+
+impl ChunkEngine for NativeEngine {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn power_chunk(
+        &self,
+        chunk: &TwoViewChunk,
+        qa32: &[f32],
+        qb32: &[f32],
+        r: usize,
+    ) -> anyhow::Result<(Mat, Mat)> {
+        let m = chunk.rows();
+        let (da, db) = (chunk.a.cols, chunk.b.cols);
+        anyhow::ensure!(qa32.len() == da * r && qb32.len() == db * r, "Q shape mismatch");
+        // BQb (m×r) then scatter Aᵀ·(BQb).
+        let mut bq = vec![0f32; m * r];
+        chunk.b.times_dense(qb32, r, &mut bq);
+        let mut ya = vec![0f64; da * r];
+        chunk.a.add_t_times_dense(&bq, r, &mut ya);
+        // AQa then Bᵀ·(AQa).
+        let mut aq = vec![0f32; m * r];
+        chunk.a.times_dense(qa32, r, &mut aq);
+        let mut yb = vec![0f64; db * r];
+        chunk.b.add_t_times_dense(&aq, r, &mut yb);
+        Ok((Mat::from_vec(da, r, ya), Mat::from_vec(db, r, yb)))
+    }
+
+    fn final_chunk(
+        &self,
+        chunk: &TwoViewChunk,
+        qa32: &[f32],
+        qb32: &[f32],
+        r: usize,
+    ) -> anyhow::Result<(Mat, Mat, Mat)> {
+        let m = chunk.rows();
+        let (da, db) = (chunk.a.cols, chunk.b.cols);
+        anyhow::ensure!(qa32.len() == da * r && qb32.len() == db * r, "Q shape mismatch");
+        let mut pa = vec![0f32; m * r];
+        chunk.a.times_dense(qa32, r, &mut pa);
+        let mut pb = vec![0f32; m * r];
+        chunk.b.times_dense(qb32, r, &mut pb);
+        // Small dense Grams in f32 with f64 result conversion.
+        let mut ca = vec![0f32; r * r];
+        sgemm_tn(m, r, r, &pa, &pa, &mut ca);
+        let mut cb = vec![0f32; r * r];
+        sgemm_tn(m, r, r, &pb, &pb, &mut cb);
+        let mut f = vec![0f32; r * r];
+        sgemm_tn(m, r, r, &pa, &pb, &mut f);
+        Ok((
+            Mat::from_f32(r, r, &ca),
+            Mat::from_f32(r, r, &cb),
+            Mat::from_f32(r, r, &f),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cca::pass::{InMemoryPass, PassEngine};
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::runtime::mat_to_f32;
+    use crate::util::rng::Rng;
+
+    fn chunk() -> TwoViewChunk {
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 150,
+            dims: 64,
+            topics: 4,
+            words_per_topic: 8,
+            background_words: 16,
+            mean_len: 6.0,
+            seed: 202,
+            ..Default::default()
+        });
+        TwoViewChunk { a: d.a, b: d.b }
+    }
+
+    #[test]
+    fn power_chunk_matches_inmemory_pass() {
+        let ch = chunk();
+        let mut rng = Rng::new(1);
+        let qa = Mat::randn(64, 7, &mut rng);
+        let qb = Mat::randn(64, 7, &mut rng);
+        let eng = NativeEngine::new();
+        let (ya, yb) = eng
+            .power_chunk(&ch, &mat_to_f32(&qa), &mat_to_f32(&qb), 7)
+            .unwrap();
+        let mut reference = InMemoryPass::new(ch);
+        let (rya, ryb) = reference.power_pass(&qa, &qb);
+        assert!(ya.rel_diff(&rya) < 1e-5, "{}", ya.rel_diff(&rya));
+        assert!(yb.rel_diff(&ryb) < 1e-5);
+    }
+
+    #[test]
+    fn final_chunk_matches_inmemory_pass() {
+        let ch = chunk();
+        let mut rng = Rng::new(2);
+        let qa = Mat::randn(64, 5, &mut rng);
+        let qb = Mat::randn(64, 5, &mut rng);
+        let eng = NativeEngine::new();
+        let (ca, cb, f) = eng
+            .final_chunk(&ch, &mat_to_f32(&qa), &mat_to_f32(&qb), 5)
+            .unwrap();
+        let mut reference = InMemoryPass::new(ch);
+        let (rca, rcb, rf) = reference.final_pass(&qa, &qb);
+        assert!(ca.rel_diff(&rca) < 1e-4);
+        assert!(cb.rel_diff(&rcb) < 1e-4);
+        assert!(f.rel_diff(&rf) < 1e-4);
+    }
+
+    #[test]
+    fn chunk_additivity() {
+        // Engine results over row-slices must sum to the whole: the
+        // coordinator's reduction invariant.
+        let ch = chunk();
+        let c1 = TwoViewChunk {
+            a: ch.a.slice_rows(0, 70),
+            b: ch.b.slice_rows(0, 70),
+        };
+        let c2 = TwoViewChunk {
+            a: ch.a.slice_rows(70, 150),
+            b: ch.b.slice_rows(70, 150),
+        };
+        let mut rng = Rng::new(3);
+        let qa = mat_to_f32(&Mat::randn(64, 4, &mut rng));
+        let qb = mat_to_f32(&Mat::randn(64, 4, &mut rng));
+        let eng = NativeEngine::new();
+        let (w1, w2) = eng.power_chunk(&ch, &qa, &qb, 4).unwrap();
+        let (p1a, p1b) = eng.power_chunk(&c1, &qa, &qb, 4).unwrap();
+        let (p2a, p2b) = eng.power_chunk(&c2, &qa, &qb, 4).unwrap();
+        let mut sa = p1a.clone();
+        sa.add_assign(&p2a);
+        let mut sb = p1b.clone();
+        sb.add_assign(&p2b);
+        assert!(sa.rel_diff(&w1) < 1e-6);
+        assert!(sb.rel_diff(&w2) < 1e-6);
+    }
+
+    #[test]
+    fn rejects_wrong_q_shape() {
+        let ch = chunk();
+        let eng = NativeEngine::new();
+        assert!(eng.power_chunk(&ch, &[0.0; 10], &[0.0; 10], 4).is_err());
+    }
+}

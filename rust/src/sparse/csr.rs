@@ -1,0 +1,424 @@
+//! Compressed sparse row matrices (f32 values, u32 column indices).
+
+use crate::linalg::Mat;
+
+/// CSR sparse matrix. Values f32 (the data is hashed counts scaled to unit-
+/// ish magnitude), indices u32 (d ≤ 2^32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row i occupies indices/values in [indptr[i], indptr[i+1]).
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Structural + numeric validation (used after deserialization).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.rows + 1 {
+            return Err("indptr length mismatch".into());
+        }
+        if self.indptr[0] != 0 || *self.indptr.last().unwrap() != self.nnz() {
+            return Err("indptr endpoints invalid".into());
+        }
+        if self.indices.len() != self.values.len() {
+            return Err("indices/values length mismatch".into());
+        }
+        for w in self.indptr.windows(2) {
+            if w[0] > w[1] {
+                return Err("indptr not monotone".into());
+            }
+        }
+        for i in 0..self.rows {
+            let (idx, _) = self.row(i);
+            for w in idx.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {i}: indices not strictly increasing"));
+                }
+            }
+            if let Some(&last) = idx.last() {
+                if last as usize >= self.cols {
+                    return Err(format!("row {i}: column index out of range"));
+                }
+            }
+        }
+        if self.values.iter().any(|v| !v.is_finite()) {
+            return Err("non-finite value".into());
+        }
+        Ok(())
+    }
+
+    /// Y += Aᵀ·M where M is dense row-major (rows × r), Y is dense (cols × r).
+    /// This is the range-finder product `Aᵀ(BQ)` with M = B·Q precomputed.
+    pub fn add_t_times_dense(&self, m: &[f32], r: usize, y: &mut [f64]) {
+        debug_assert_eq!(m.len(), self.rows * r);
+        debug_assert_eq!(y.len(), self.cols * r);
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            let mrow = &m[i * r..(i + 1) * r];
+            for (&j, &v) in idx.iter().zip(vals) {
+                let yrow = &mut y[j as usize * r..(j as usize + 1) * r];
+                let v = v as f64;
+                for (yv, mv) in yrow.iter_mut().zip(mrow) {
+                    *yv += v * *mv as f64;
+                }
+            }
+        }
+    }
+
+    /// P = A·Q where Q is dense row-major (cols × r); returns dense (rows × r).
+    pub fn times_dense(&self, q: &[f32], r: usize, out: &mut [f32]) {
+        debug_assert_eq!(q.len(), self.cols * r);
+        debug_assert_eq!(out.len(), self.rows * r);
+        out.fill(0.0);
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            let orow = &mut out[i * r..(i + 1) * r];
+            for (&j, &v) in idx.iter().zip(vals) {
+                let qrow = &q[j as usize * r..(j as usize + 1) * r];
+                for (ov, qv) in orow.iter_mut().zip(qrow) {
+                    *ov += v * qv;
+                }
+            }
+        }
+    }
+
+    /// Same as [`times_dense`] but with an f64 dense Q (leader-side matrices)
+    /// producing f64 output.
+    pub fn times_mat(&self, q: &Mat) -> Mat {
+        assert_eq!(q.rows, self.cols);
+        let mut out = Mat::zeros(self.rows, q.cols);
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            for (&j, &v) in idx.iter().zip(vals) {
+                let qrow = q.row(j as usize);
+                let orow = out.row_mut(i);
+                let v = v as f64;
+                for (ov, qv) in orow.iter_mut().zip(qrow) {
+                    *ov += v * qv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Aᵀ·M with dense f64 M (rows × r) → (cols × r).
+    pub fn t_times_mat(&self, m: &Mat) -> Mat {
+        assert_eq!(m.rows, self.rows);
+        let mut out = Mat::zeros(self.cols, m.cols);
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            let mrow = m.row(i);
+            for (&j, &v) in idx.iter().zip(vals) {
+                let orow = out.row_mut(j as usize);
+                let v = v as f64;
+                for (ov, mv) in orow.iter_mut().zip(mrow) {
+                    *ov += v * mv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Densify rows [lo, hi) into a row-major f32 buffer of shape
+    /// ((hi-lo) × cols). The chunk boundary for the PJRT engine.
+    pub fn densify_rows(&self, lo: usize, hi: usize, out: &mut [f32]) {
+        let width = self.cols;
+        debug_assert_eq!(out.len(), (hi - lo) * width);
+        out.fill(0.0);
+        for (local, i) in (lo..hi).enumerate() {
+            let (idx, vals) = self.row(i);
+            let orow = &mut out[local * width..(local + 1) * width];
+            for (&j, &v) in idx.iter().zip(vals) {
+                orow[j as usize] = v;
+            }
+        }
+    }
+
+    /// Extract rows [lo, hi) as a new CSR (shard slicing).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Csr {
+        assert!(lo <= hi && hi <= self.rows);
+        let start = self.indptr[lo];
+        let end = self.indptr[hi];
+        Csr {
+            rows: hi - lo,
+            cols: self.cols,
+            indptr: self.indptr[lo..=hi].iter().map(|p| p - start).collect(),
+            indices: self.indices[start..end].to_vec(),
+            values: self.values[start..end].to_vec(),
+        }
+    }
+
+    /// Full densification (test-sized matrices only).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            for (&j, &v) in idx.iter().zip(vals) {
+                m[(i, j as usize)] = v as f64;
+            }
+        }
+        m
+    }
+
+    /// tr(AᵀA) = Σ a_ij² — used by the scale-free regularization
+    /// λ = ν·tr(AᵀA)/d from the paper's §4.
+    pub fn gram_trace(&self) -> f64 {
+        self.values.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+}
+
+/// Incremental row-by-row CSR builder (used by the hashing vectorizer).
+#[derive(Debug, Default)]
+pub struct CsrBuilder {
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrBuilder {
+    pub fn new(cols: usize) -> CsrBuilder {
+        CsrBuilder {
+            cols,
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Append a row given (possibly unsorted, possibly duplicated) pairs;
+    /// duplicates are summed, zeros dropped.
+    pub fn push_row(&mut self, pairs: &mut Vec<(u32, f32)>) {
+        pairs.sort_by_key(|&(j, _)| j);
+        let mut write: Option<(u32, f32)> = None;
+        for &(j, v) in pairs.iter() {
+            debug_assert!((j as usize) < self.cols);
+            match write {
+                Some((pj, pv)) if pj == j => write = Some((pj, pv + v)),
+                Some((pj, pv)) => {
+                    if pv != 0.0 {
+                        self.indices.push(pj);
+                        self.values.push(pv);
+                    }
+                    write = Some((j, v));
+                }
+                None => write = Some((j, v)),
+            }
+        }
+        if let Some((pj, pv)) = write {
+            if pv != 0.0 {
+                self.indices.push(pj);
+                self.values.push(pv);
+            }
+        }
+        self.indptr.push(self.indices.len());
+        pairs.clear();
+    }
+
+    pub fn rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    pub fn finish(self) -> Csr {
+        let rows = self.indptr.len() - 1;
+        let csr = Csr {
+            rows,
+            cols: self.cols,
+            indptr: self.indptr,
+            indices: self.indices,
+            values: self.values,
+        };
+        debug_assert!(csr.validate().is_ok());
+        csr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rows: usize, cols: usize, nnz_per_row: usize, rng: &mut Rng) -> Csr {
+        let mut b = CsrBuilder::new(cols);
+        let mut pairs = Vec::new();
+        for _ in 0..rows {
+            for _ in 0..nnz_per_row {
+                pairs.push((rng.below(cols as u64) as u32, rng.normal() as f32));
+            }
+            b.push_row(&mut pairs);
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn builder_sorts_and_merges_duplicates() {
+        let mut b = CsrBuilder::new(10);
+        let mut pairs = vec![(5u32, 1.0f32), (2, 2.0), (5, 3.0), (0, -1.0)];
+        b.push_row(&mut pairs);
+        let c = b.finish();
+        assert_eq!(c.row(0).0, &[0, 2, 5]);
+        assert_eq!(c.row(0).1, &[-1.0, 2.0, 4.0]);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn builder_drops_cancelled_entries() {
+        let mut b = CsrBuilder::new(4);
+        let mut pairs = vec![(1u32, 1.0f32), (1, -1.0)];
+        b.push_row(&mut pairs);
+        let c = b.finish();
+        assert_eq!(c.nnz(), 0);
+        assert_eq!(c.rows, 1);
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let mut b = CsrBuilder::new(3);
+        let mut empty = Vec::new();
+        b.push_row(&mut empty);
+        let mut p = vec![(2u32, 1.5f32)];
+        b.push_row(&mut p);
+        b.push_row(&mut empty);
+        let c = b.finish();
+        assert_eq!(c.rows, 3);
+        assert_eq!(c.row(0).0.len(), 0);
+        assert_eq!(c.row(1).0, &[2]);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut rng = Rng::new(1);
+        let mut c = random_csr(5, 8, 3, &mut rng);
+        c.indices[0] = 100; // out of range
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn t_times_dense_matches_dense_math() {
+        prop::check("csr-at-m", 20, |g| {
+            let rows = g.size(1, 20);
+            let cols = g.size(1, 20);
+            let r = g.size(1, 8);
+            let mut rng = Rng::new(g.seed);
+            let a = random_csr(rows, cols, 3.min(cols), &mut rng);
+            let m32 = g.normal_vec_f32(rows * r, 1.0);
+            let mut y = vec![0f64; cols * r];
+            a.add_t_times_dense(&m32, r, &mut y);
+            let want = matmul_tn(&a.to_dense(), &Mat::from_f32(rows, r, &m32));
+            let got = Mat::from_vec(cols, r, y);
+            assert!(got.rel_diff(&want) < 1e-5, "{}", got.rel_diff(&want));
+        });
+    }
+
+    #[test]
+    fn times_dense_matches_dense_math() {
+        prop::check("csr-aq", 20, |g| {
+            let rows = g.size(1, 20);
+            let cols = g.size(1, 20);
+            let r = g.size(1, 8);
+            let mut rng = Rng::new(g.seed);
+            let a = random_csr(rows, cols, 3.min(cols), &mut rng);
+            let q32 = g.normal_vec_f32(cols * r, 1.0);
+            let mut p = vec![0f32; rows * r];
+            a.times_dense(&q32, r, &mut p);
+            let want = matmul(&a.to_dense(), &Mat::from_f32(cols, r, &q32));
+            let got = Mat::from_f32(rows, r, &p);
+            assert!(got.rel_diff(&want) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn mat_variants_match() {
+        let mut rng = Rng::new(7);
+        let a = random_csr(12, 9, 4, &mut rng);
+        let q = Mat::randn(9, 5, &mut rng);
+        let want = matmul(&a.to_dense(), &q);
+        assert!(a.times_mat(&q).rel_diff(&want) < 1e-12);
+        let m = Mat::randn(12, 5, &mut rng);
+        let want_t = matmul_tn(&a.to_dense(), &m);
+        assert!(a.t_times_mat(&m).rel_diff(&want_t) < 1e-12);
+    }
+
+    #[test]
+    fn densify_roundtrip() {
+        let mut rng = Rng::new(9);
+        let a = random_csr(10, 7, 3, &mut rng);
+        let mut buf = vec![0f32; 4 * 7];
+        a.densify_rows(3, 7, &mut buf);
+        let dense = a.to_dense();
+        for i in 0..4 {
+            for j in 0..7 {
+                assert!((buf[i * 7 + j] as f64 - dense[(i + 3, j)]).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn slice_rows_preserves_content() {
+        let mut rng = Rng::new(10);
+        let a = random_csr(20, 15, 4, &mut rng);
+        let s = a.slice_rows(5, 12);
+        s.validate().unwrap();
+        assert_eq!(s.rows, 7);
+        let d_full = a.to_dense();
+        let d_slice = s.to_dense();
+        for i in 0..7 {
+            for j in 0..15 {
+                assert_eq!(d_slice[(i, j)], d_full[(i + 5, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn slice_composition() {
+        // slice(slice(a)) == slice with composed bounds
+        let mut rng = Rng::new(11);
+        let a = random_csr(30, 10, 3, &mut rng);
+        let s1 = a.slice_rows(4, 24);
+        let s2 = s1.slice_rows(6, 16);
+        let direct = a.slice_rows(10, 20);
+        assert_eq!(s2, direct);
+    }
+
+    #[test]
+    fn gram_trace_matches_dense() {
+        let mut rng = Rng::new(12);
+        let a = random_csr(15, 9, 4, &mut rng);
+        let d = a.to_dense();
+        let want = matmul_tn(&d, &d).trace();
+        assert!((a.gram_trace() - want).abs() / want.abs().max(1.0) < 1e-6);
+    }
+
+    #[test]
+    fn density_and_nnz() {
+        let mut b = CsrBuilder::new(10);
+        let mut p = vec![(0u32, 1.0f32), (9, 2.0)];
+        b.push_row(&mut p);
+        let c = b.finish();
+        assert_eq!(c.nnz(), 2);
+        assert!((c.density() - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! Sparse-matrix substrate: CSR storage and the sparse-dense products the
+//! data passes need.
+//!
+//! The paper's design matrices are hashed bags-of-words — extremely sparse
+//! (tens of non-zeros per row out of 2^19 columns). Every per-pass product
+//! has the form "tall sparse matrix times skinny dense matrix":
+//!
+//!   * `Y += Aᵀ·M`  (scatter rows of M into Y at A's column indices),
+//!   * `P  = A·Q`   (gather rows of Q at A's column indices),
+//!
+//! both O(nnz·r). The native engine uses these directly; the PJRT engine
+//! densifies chunks first (see `runtime::buffers`).
+
+pub mod csr;
+
+pub use csr::{Csr, CsrBuilder};

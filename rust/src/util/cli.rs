@@ -1,0 +1,305 @@
+//! Declarative command-line parsing (clap replacement).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean switches, defaults,
+//! required flags, typed accessors, subcommands, and generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    required: bool,
+    is_switch: bool,
+}
+
+/// A flag-set specification for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Spec {
+    command: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+}
+
+impl Spec {
+    pub fn new(command: &str, about: &str) -> Spec {
+        Spec {
+            command: command.to_string(),
+            about: about.to_string(),
+            flags: Vec::new(),
+        }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Spec {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            required: false,
+            is_switch: false,
+        });
+        self
+    }
+
+    /// `--name <value>`, required.
+    pub fn req(mut self, name: &str, help: &str) -> Spec {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            required: true,
+            is_switch: false,
+        });
+        self
+    }
+
+    /// Boolean `--name` switch (defaults to false).
+    pub fn switch(mut self, name: &str, help: &str) -> Spec {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some("false".to_string()),
+            required: false,
+            is_switch: true,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nFLAGS:\n", self.command, self.about);
+        for f in &self.flags {
+            let val = if f.is_switch { "" } else { " <value>" };
+            let def = match (&f.default, f.is_switch) {
+                (Some(d), false) => format!(" [default: {d}]"),
+                _ if f.required => " [required]".to_string(),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  --{}{val}\n      {}{def}\n", f.name, f.help));
+        }
+        s
+    }
+
+    /// Parse argv (not including the program/subcommand name).
+    pub fn parse(&self, args: &[String]) -> Result<Args, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.help_text()));
+            }
+            let stripped = a
+                .strip_prefix("--")
+                .ok_or_else(|| CliError(format!("unexpected argument '{a}'")))?;
+            let (name, inline_val) = match stripped.split_once('=') {
+                Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                None => (stripped.to_string(), None),
+            };
+            let spec = self
+                .flags
+                .iter()
+                .find(|f| f.name == name)
+                .ok_or_else(|| CliError(format!("unknown flag '--{name}'")))?;
+            let value = if spec.is_switch {
+                match inline_val {
+                    Some(v) => v,
+                    None => "true".to_string(),
+                }
+            } else {
+                match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        args.get(i)
+                            .cloned()
+                            .ok_or_else(|| CliError(format!("flag '--{name}' needs a value")))?
+                    }
+                }
+            };
+            values.insert(name, value);
+            i += 1;
+        }
+        for f in &self.flags {
+            if !values.contains_key(&f.name) {
+                match &f.default {
+                    Some(d) => {
+                        values.insert(f.name.clone(), d.clone());
+                    }
+                    None if f.required => {
+                        return Err(CliError(format!("missing required flag '--{}'", f.name)))
+                    }
+                    None => {}
+                }
+            }
+        }
+        Ok(Args { values })
+    }
+}
+
+/// Parsed flag values with typed accessors.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Value of a flag if it was declared in the Spec (None otherwise).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag '--{name}' not declared in Spec"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected unsigned integer, got '{}'", self.str(name))))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected u64, got '{}'", self.str(name))))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected float, got '{}'", self.str(name))))
+    }
+
+    pub fn bool(&self, name: &str) -> Result<bool, CliError> {
+        match self.str(name) {
+            "true" | "1" | "yes" => Ok(true),
+            "false" | "0" | "no" => Ok(false),
+            other => Err(CliError(format!("--{name}: expected bool, got '{other}'"))),
+        }
+    }
+
+    /// Comma-separated list of usize.
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| CliError(format!("--{name}: bad list element '{s}'")))
+            })
+            .collect()
+    }
+
+    /// Comma-separated list of f64.
+    pub fn f64_list(&self, name: &str) -> Result<Vec<f64>, CliError> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| CliError(format!("--{name}: bad list element '{s}'")))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn spec() -> Spec {
+        Spec::new("demo", "test spec")
+            .opt("n", "100", "rows")
+            .req("out", "output path")
+            .switch("verbose", "chatty")
+            .opt("ps", "10,20", "p values")
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = spec().parse(&strs(&["--out", "/tmp/x"])).unwrap();
+        assert_eq!(a.usize("n").unwrap(), 100);
+        assert_eq!(a.str("out"), "/tmp/x");
+        assert!(!a.bool("verbose").unwrap());
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = spec().parse(&strs(&["--out=/o", "--n=42"])).unwrap();
+        assert_eq!(a.usize("n").unwrap(), 42);
+        assert_eq!(a.str("out"), "/o");
+    }
+
+    #[test]
+    fn switch_toggles() {
+        let a = spec().parse(&strs(&["--out", "x", "--verbose"])).unwrap();
+        assert!(a.bool("verbose").unwrap());
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(spec().parse(&strs(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let e = spec().parse(&strs(&["--out", "x", "--bogus", "1"]));
+        assert!(e.is_err());
+        assert!(format!("{}", e.unwrap_err()).contains("bogus"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(spec().parse(&strs(&["--out"])).is_err());
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = spec()
+            .parse(&strs(&["--out", "x", "--ps", "1, 2,3"]))
+            .unwrap();
+        assert_eq!(a.usize_list("ps").unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn bad_number_reports_flag() {
+        let a = spec().parse(&strs(&["--out", "x", "--n", "abc"])).unwrap();
+        let e = a.usize("n").unwrap_err();
+        assert!(format!("{e}").contains("--n"));
+    }
+
+    #[test]
+    fn help_contains_flags() {
+        let h = spec().help_text();
+        assert!(h.contains("--out"));
+        assert!(h.contains("[default: 100]"));
+        assert!(h.contains("[required]"));
+    }
+
+    #[test]
+    fn help_flag_short_circuits() {
+        let e = spec().parse(&strs(&["--help"])).unwrap_err();
+        assert!(e.0.contains("FLAGS"));
+    }
+}

@@ -1,0 +1,14 @@
+//! General-purpose substrates.
+//!
+//! The build environment is fully offline and the usual ecosystem crates
+//! (serde/serde_json, rand, tokio/rayon, clap, proptest, criterion) are not
+//! available, so this module implements the subset of each that the rest of
+//! the system needs. Everything here is exercised by its own unit tests and
+//! by the property harness in [`prop`].
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod timer;

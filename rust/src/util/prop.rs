@@ -1,0 +1,170 @@
+//! Mini property-testing harness (proptest replacement).
+//!
+//! `check(name, cases, |g| { ... })` runs a property closure against `cases`
+//! independently-seeded generators. On failure it panics with the case seed
+//! so the exact counterexample can be replayed with `replay(seed, f)`.
+//! The base seed can be pinned via the `RCCA_PROP_SEED` env var.
+//!
+//! There is no shrinking; generators are encouraged to produce small cases
+//! with meaningful probability instead (all `Gen` size helpers are biased
+//! towards minima), which in practice gives readable counterexamples.
+
+use crate::util::rng::Rng;
+
+/// Case-level generator handle passed to property closures.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Size in [lo, hi], biased towards small values (p=0.25 forces lo..lo+2).
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        if hi > lo && self.rng.f64() < 0.25 {
+            return lo + self.rng.below((3.min(hi - lo) + 1) as u64) as usize;
+        }
+        self.rng.range(lo, hi + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.f64()
+    }
+
+    /// Vector of N(0, scale) values.
+    pub fn normal_vec(&mut self, n: usize, scale: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal() * scale).collect()
+    }
+
+    pub fn normal_vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal() as f32 * scale).collect()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.f64() < p
+    }
+}
+
+fn base_seed() -> u64 {
+    match std::env::var("RCCA_PROP_SEED") {
+        Ok(s) => s.parse().expect("RCCA_PROP_SEED must be a u64"),
+        // Fixed default: CI-deterministic. Change the env var to explore.
+        Err(_) => 0xc0ffee,
+    }
+}
+
+/// Run `f` against `cases` random cases. Panics with the replay seed on the
+/// first failing case (assertion failure inside `f`).
+pub fn check<F: Fn(&mut Gen)>(name: &str, cases: usize, f: F) {
+    let mut meta = Rng::new(base_seed() ^ fxhash(name));
+    for case in 0..cases {
+        let seed = meta.next_u64();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen {
+                rng: Rng::new(seed),
+                seed,
+            };
+            f(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (replay seed {seed:#x}):\n{msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F: Fn(&mut Gen)>(seed: u64, f: F) {
+    let mut g = Gen {
+        rng: Rng::new(seed),
+        seed,
+    };
+    f(&mut g);
+}
+
+/// FxHash-style string hash for decorrelating property names.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always-true", 50, |_g| {}); // would panic otherwise
+        // count via a second run with side effect
+        check("count", 10, |_g| {});
+        count += 10;
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-false", 5, |_g| panic!("boom"));
+        });
+        let msg = match r {
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("always-false"), "{msg}");
+    }
+
+    #[test]
+    fn replay_reproduces_case() {
+        use std::cell::Cell;
+        let mut g1 = Gen {
+            rng: Rng::new(123),
+            seed: 123,
+        };
+        let v1 = g1.size(0, 1000);
+        let observed = Cell::new(usize::MAX);
+        replay(123, |g| observed.set(g.size(0, 1000)));
+        assert_eq!(v1, observed.get());
+    }
+
+    #[test]
+    fn size_respects_bounds() {
+        check("size-bounds", 200, |g| {
+            let s = g.size(3, 17);
+            assert!((3..=17).contains(&s));
+        });
+    }
+
+    #[test]
+    fn size_hits_minimum_often() {
+        let mut g = Gen {
+            rng: Rng::new(9),
+            seed: 9,
+        };
+        let hits = (0..1000).filter(|_| g.size(2, 100) <= 5).count();
+        assert!(hits > 150, "small-bias broken: {hits}");
+    }
+
+    #[test]
+    fn distinct_names_get_distinct_streams() {
+        use std::cell::Cell;
+        let a = Cell::new(0u64);
+        let b = Cell::new(0u64);
+        check("stream-a", 1, |g| a.set(g.seed));
+        check("stream-b", 1, |g| b.set(g.seed));
+        assert_ne!(a.get(), b.get());
+    }
+}

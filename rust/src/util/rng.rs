@@ -1,0 +1,436 @@
+//! Deterministic random number generation.
+//!
+//! `xoshiro256++` core with SplitMix64 seeding (the reference construction),
+//! plus the distributions the system needs: uniform, standard normal
+//! (Box–Muller with cached spare), bounded integers (Lemire rejection),
+//! Zipf (rejection-inversion), permutation shuffles, and multinomial-ish
+//! categorical sampling via alias tables.
+//!
+//! Everything is seedable and streams are splittable (`fork`) so that
+//! shard-level work in the coordinator is reproducible regardless of worker
+//! scheduling order — an invariant the coordinator property tests rely on.
+
+/// SplitMix64: used for seeding and stream splitting.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box–Muller variate.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Seed deterministically from a single u64.
+    pub fn new(seed: u64) -> Rng {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng {
+            s,
+            spare_normal: None,
+        }
+    }
+
+    /// Derive an independent stream for a sub-task (e.g. a shard id).
+    /// Streams derived from distinct `tag`s are decorrelated by hashing the
+    /// tag through SplitMix64 together with fresh output from `self`.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let mix = self.next_u64() ^ tag.wrapping_mul(0xd1342543de82ef95).rotate_left(17);
+        Rng::new(mix)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits → [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0,1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift with rejection.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "Rng::below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (polar form avoided; trig is fine here).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // u1 in (0,1] to avoid ln(0).
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Fill a slice with i.i.d. N(0,1) f32s.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.normal() as f32;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k << n expected; uses a
+    /// partial Fisher–Yates over an index map for exactness).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = self.range(i, n);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Geometric-ish document length: 1 + Poisson(mean-1) approximated by
+    /// inversion on an exponential mixture — good enough for corpus shapes.
+    pub fn doc_len(&mut self, mean: f64) -> usize {
+        let lambda = (mean - 1.0).max(0.0);
+        // Knuth Poisson for small lambda.
+        let l = (-lambda).exp();
+        let mut k = 0usize;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                break;
+            }
+            k += 1;
+            if k > 10_000 {
+                break; // guard
+            }
+        }
+        1 + k
+    }
+}
+
+/// Zipf(α) sampler over {0, 1, …, n-1} (rank 0 is the most frequent).
+/// Precomputes the CDF once; sampling is a binary search. n is vocabulary
+/// sized (≤ ~1e6) so the O(n) table is fine and exact.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, alpha: f64) -> Zipf {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for r in 0..n {
+            acc += 1.0 / ((r + 1) as f64).powf(alpha);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+/// Walker alias table for O(1) categorical sampling (topic → word draws in
+/// the SynthParl generator are the hot loop of data generation).
+#[derive(Debug, Clone)]
+pub struct Alias {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl Alias {
+    pub fn new(weights: &[f64]) -> Alias {
+        let n = weights.len();
+        assert!(n > 0);
+        let sum: f64 = weights.iter().sum();
+        assert!(sum > 0.0, "alias table needs positive total weight");
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * n as f64 / sum).collect();
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        for (i, p) in prob.iter().enumerate() {
+            if *p < 1.0 {
+                small.push(i)
+            } else {
+                large.push(i)
+            }
+        }
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s] = l;
+            prob[l] = (prob[l] + prob[s]) - 1.0;
+            if prob[l] < 1.0 {
+                small.push(l)
+            } else {
+                large.push(l)
+            }
+        }
+        // Anything left is numerically 1.0.
+        for i in small.into_iter().chain(large) {
+            prob[i] = 1.0;
+        }
+        Alias { prob, alias }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let n = self.prob.len();
+        let i = rng.below(n as u64) as usize;
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn fork_streams_are_decorrelated() {
+        let mut root = Rng::new(42);
+        let mut c1 = root.fork(0);
+        let mut c2 = root.fork(1);
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.f64();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 5e-3, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 5e-3, "var {var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let (mut s, mut s2, mut s3) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+            s3 += x * x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        let skew = s3 / n as f64;
+        assert!(mean.abs() < 1e-2, "mean {mean}");
+        assert!((var - 1.0).abs() < 2e-2, "var {var}");
+        assert!(skew.abs() < 3e-2, "skew {skew}");
+    }
+
+    #[test]
+    fn below_is_unbiased_for_small_n() {
+        let mut r = Rng::new(9);
+        let n = 7u64;
+        let mut counts = [0usize; 7];
+        let trials = 70_000;
+        for _ in 0..trials {
+            counts[r.below(n) as usize] += 1;
+        }
+        let expect = trials as f64 / n as f64;
+        for c in counts {
+            assert!((c as f64 - expect).abs() < 0.05 * expect, "count {c}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn below_zero_panics() {
+        Rng::new(0).below(0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(13);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut r = Rng::new(17);
+        let s = r.sample_distinct(50, 10);
+        assert_eq!(s.len(), 10);
+        let mut u = s.clone();
+        u.sort();
+        u.dedup();
+        assert_eq!(u.len(), 10);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing_in_rank() {
+        let z = Zipf::new(1000, 1.1);
+        let mut r = Rng::new(23);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..200_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        // Head ranks dominate tail ranks.
+        let head: usize = counts[..10].iter().sum();
+        let tail: usize = counts[500..510].iter().sum();
+        assert!(head > 20 * tail.max(1), "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn alias_matches_weights() {
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let a = Alias::new(&w);
+        let mut r = Rng::new(29);
+        let mut counts = [0usize; 4];
+        let trials = 100_000;
+        for _ in 0..trials {
+            counts[a.sample(&mut r)] += 1;
+        }
+        let total: f64 = w.iter().sum();
+        for (i, c) in counts.iter().enumerate() {
+            let expect = trials as f64 * w[i] / total;
+            assert!(
+                (*c as f64 - expect).abs() < 0.05 * expect,
+                "i={i} c={c} expect={expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn alias_handles_degenerate_weight() {
+        let a = Alias::new(&[0.0, 1.0]);
+        let mut r = Rng::new(31);
+        for _ in 0..1000 {
+            assert_eq!(a.sample(&mut r), 1);
+        }
+    }
+
+    #[test]
+    fn doc_len_positive_and_near_mean() {
+        let mut r = Rng::new(37);
+        let n = 20_000;
+        let mut s = 0usize;
+        for _ in 0..n {
+            let l = r.doc_len(12.0);
+            assert!(l >= 1);
+            s += l;
+        }
+        let mean = s as f64 / n as f64;
+        assert!((mean - 12.0).abs() < 0.3, "mean {mean}");
+    }
+}

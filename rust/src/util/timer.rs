@@ -1,0 +1,151 @@
+//! Wall-clock timing helpers shared by the bench harness and the
+//! coordinator's pass ledger.
+
+use std::time::{Duration, Instant};
+
+/// A simple scoped timer.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Accumulates named durations — the coordinator tags each phase of a pass
+/// (densify / execute / reduce) so the perf report can break time down.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    entries: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Stopwatch {
+        Stopwatch::default()
+    }
+
+    pub fn record(&mut self, name: &str, secs: f64) {
+        self.entries.push((name.to_string(), secs));
+    }
+
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.record(name, t.secs());
+        out
+    }
+
+    /// Total seconds per distinct name, in first-seen order.
+    pub fn totals(&self) -> Vec<(String, f64)> {
+        let mut order: Vec<String> = Vec::new();
+        let mut sums: std::collections::BTreeMap<String, f64> = Default::default();
+        for (name, secs) in &self.entries {
+            if !sums.contains_key(name) {
+                order.push(name.clone());
+            }
+            *sums.entry(name.clone()).or_insert(0.0) += secs;
+        }
+        order
+            .into_iter()
+            .map(|n| {
+                let s = sums[&n];
+                (n, s)
+            })
+            .collect()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn merge(&mut self, other: &Stopwatch) {
+        self.entries.extend(other.entries.iter().cloned());
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+        assert!(t.millis() >= 4.0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates_by_name() {
+        let mut sw = Stopwatch::new();
+        sw.record("a", 1.0);
+        sw.record("b", 2.0);
+        sw.record("a", 3.0);
+        let t = sw.totals();
+        assert_eq!(t, vec![("a".to_string(), 4.0), ("b".to_string(), 2.0)]);
+        assert!((sw.total() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopwatch_time_returns_value() {
+        let mut sw = Stopwatch::new();
+        let v = sw.time("op", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(sw.totals().len(), 1);
+    }
+
+    #[test]
+    fn stopwatch_merge() {
+        let mut a = Stopwatch::new();
+        a.record("x", 1.0);
+        let mut b = Stopwatch::new();
+        b.record("x", 2.0);
+        b.record("y", 5.0);
+        a.merge(&b);
+        assert_eq!(
+            a.totals(),
+            vec![("x".to_string(), 3.0), ("y".to_string(), 5.0)]
+        );
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+        assert!(fmt_secs(2e-6).ends_with("µs"));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+        assert!(fmt_secs(200.0).ends_with("min"));
+    }
+}

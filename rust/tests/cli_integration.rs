@@ -1,0 +1,141 @@
+//! CLI smoke tests: drive the real `repro` binary end to end.
+
+use std::process::Command;
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = repro().args(args).output().expect("spawn repro");
+    assert!(
+        out.status.success(),
+        "repro {:?} failed:\nstdout: {}\nstderr: {}",
+        args,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let text = run_ok(&[]);
+    assert!(text.contains("SUBCOMMANDS"));
+    assert!(text.contains("table2b"));
+}
+
+#[test]
+fn unknown_subcommand_errors() {
+    let out = repro().arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn help_flag_per_subcommand() {
+    let out = repro().args(["rcca", "--help"]).output().unwrap();
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--p") && err.contains("--engine"), "{err}");
+}
+
+#[test]
+fn tiny_rcca_inmemory_runs() {
+    let dir = std::env::temp_dir().join("rcca_cli_rcca");
+    let _ = std::fs::remove_dir_all(&dir);
+    let text = run_ok(&[
+        "rcca",
+        "--tiny",
+        "--p",
+        "16",
+        "--report-dir",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(text.contains("train objective"));
+    assert!(text.contains("feasibility"));
+    // JSON twin written and parseable.
+    let json_path = dir.join("randomizedcca_run.json");
+    let parsed = rcca::util::json::parse(&std::fs::read_to_string(json_path).unwrap()).unwrap();
+    assert!(parsed.get("rows").is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tiny_spectrum_runs() {
+    let dir = std::env::temp_dir().join("rcca_cli_spec");
+    let _ = std::fs::remove_dir_all(&dir);
+    let text = run_ok(&[
+        "spectrum",
+        "--tiny",
+        "--top",
+        "16",
+        "--oversample",
+        "8",
+        "--report-dir",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(text.contains("Figure 1"));
+    assert!(text.contains("data passes: 2"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tiny_fig2a_runs() {
+    let dir = std::env::temp_dir().join("rcca_cli_fig2a");
+    let _ = std::fs::remove_dir_all(&dir);
+    let text = run_ok(&[
+        "fig2a",
+        "--tiny",
+        "--qs",
+        "0,1",
+        "--ps",
+        "4,16",
+        "--horst-passes",
+        "10",
+        "--report-dir",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(text.contains("Figure 2a"));
+    assert!(text.contains("Horst"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tiny_gen_writes_shards() {
+    let dir = std::env::temp_dir().join("rcca_cli_gen");
+    let _ = std::fs::remove_dir_all(&dir);
+    let text = run_ok(&[
+        "gen",
+        "--tiny",
+        "--out",
+        dir.to_str().unwrap(),
+        "--rows-per-shard",
+        "256",
+    ]);
+    assert!(text.contains("generated"));
+    let store = rcca::data::shards::ShardStore::open(&dir).unwrap();
+    assert!(store.shards >= 7); // ~1800 train rows / 256
+    store.load(0).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tiny_horst_with_rcca_init_runs() {
+    let dir = std::env::temp_dir().join("rcca_cli_horst");
+    let _ = std::fs::remove_dir_all(&dir);
+    let text = run_ok(&[
+        "horst",
+        "--tiny",
+        "--passes",
+        "10",
+        "--init",
+        "rcca",
+        "--init-p",
+        "16",
+        "--report-dir",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(text.contains("Horst run"));
+    assert!(text.contains("train objective"));
+    let _ = std::fs::remove_dir_all(&dir);
+}

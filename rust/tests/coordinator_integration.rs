@@ -1,0 +1,231 @@
+//! Coordinator-level integration: fault tolerance under a full algorithm
+//! run, metrics accounting, backpressure configs, and scheduling
+//! determinism — behaviors that only appear with the whole stack wired.
+
+use rcca::cca::pass::PassEngine;
+use rcca::cca::rcca::{RandomizedCca, RccaConfig};
+use rcca::coordinator::{FaultyEngine, Metrics, ShardedPass, ShardedPassConfig};
+use rcca::data::shards::{ShardStore, ShardWriter};
+use rcca::data::synthparl::{SynthParl, SynthParlConfig};
+use rcca::linalg::Mat;
+use rcca::runtime::NativeEngine;
+use rcca::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn make_store(n: usize, dims: usize, rows_per_shard: usize, tag: &str) -> ShardStore {
+    let d = SynthParl::generate(SynthParlConfig {
+        n,
+        dims,
+        topics: 8,
+        words_per_topic: 10,
+        background_words: 24,
+        mean_len: 8.0,
+        seed: 42,
+        ..Default::default()
+    });
+    let dir = PathBuf::from(std::env::temp_dir()).join(format!("rcca_coord_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut w = ShardWriter::create(&dir, rows_per_shard).unwrap();
+    w.write_dataset(&d.a, &d.b).unwrap();
+    ShardStore::open(&dir).unwrap()
+}
+
+#[test]
+fn full_rcca_run_survives_15pct_fault_rate() {
+    let store = make_store(1200, 96, 100, "rcca_faults");
+    let faulty = Arc::new(FaultyEngine::new(NativeEngine::new(), 0.15, 7));
+    let mut sharded = ShardedPass::new(
+        store.clone(),
+        Arc::clone(&faulty) as Arc<dyn rcca::runtime::ChunkEngine>,
+        ShardedPassConfig {
+            workers: 3,
+            chunk_rows: 64,
+            max_retries: 100,
+            ..Default::default()
+        },
+    );
+    let model = RandomizedCca::new(RccaConfig {
+        k: 4,
+        p: 12,
+        q: 2,
+        lambda_a: 0.05,
+        lambda_b: 0.05,
+        seed: 3,
+    })
+    .fit(&mut sharded)
+    .unwrap();
+
+    // Reference without faults.
+    let mut clean = ShardedPass::new(
+        store,
+        Arc::new(NativeEngine::new()),
+        ShardedPassConfig {
+            workers: 2,
+            chunk_rows: 64,
+            ..Default::default()
+        },
+    );
+    let reference = RandomizedCca::new(RccaConfig {
+        k: 4,
+        p: 12,
+        q: 2,
+        lambda_a: 0.05,
+        lambda_b: 0.05,
+        seed: 3,
+    })
+    .fit(&mut clean)
+    .unwrap();
+
+    // Fault-injected run must produce IDENTICAL results (retries are exact).
+    for i in 0..4 {
+        assert!(
+            (model.sigma[i] - reference.sigma[i]).abs() < 1e-12,
+            "retries changed results at σ_{i}"
+        );
+    }
+    assert!(faulty.injected.load(Ordering::SeqCst) > 0, "no faults injected");
+    assert!(sharded.metrics.retries.load(Ordering::Relaxed) > 0);
+}
+
+#[test]
+fn metrics_account_for_all_tasks_and_passes() {
+    let store = make_store(600, 64, 64, "metrics");
+    let shards = store.shards;
+    let mut sharded = ShardedPass::new(
+        store,
+        Arc::new(NativeEngine::new()),
+        ShardedPassConfig {
+            workers: 2,
+            chunk_rows: 32,
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(1);
+    let qa = Mat::randn(64, 4, &mut rng);
+    let qb = Mat::randn(64, 4, &mut rng);
+    sharded.power_pass(&qa, &qb);
+    sharded.final_pass(&qa, &qb);
+    let m: &Metrics = &sharded.metrics;
+    assert_eq!(m.passes.load(Ordering::Relaxed), 2);
+    assert_eq!(
+        m.tasks_completed.load(Ordering::Relaxed) as usize,
+        2 * shards
+    );
+    assert_eq!(m.tasks_failed.load(Ordering::Relaxed), 0);
+    // 600 rows, 64-row shards sliced into 32-row chunks → 2 chunks per full
+    // shard per pass.
+    assert!(m.chunks_processed.load(Ordering::Relaxed) >= (2 * shards) as u64);
+    assert!(m.engine_nanos.load(Ordering::Relaxed) > 0);
+    assert!(m.shard_bytes_read.load(Ordering::Relaxed) > 0);
+}
+
+#[test]
+fn tight_backpressure_still_completes() {
+    // queue_capacity 1 with many shards: submission must interleave with
+    // completion without deadlock.
+    let store = make_store(900, 48, 30, "backpressure"); // 30 shards
+    let mut sharded = ShardedPass::new(
+        store,
+        Arc::new(NativeEngine::new()),
+        ShardedPassConfig {
+            workers: 1,
+            queue_capacity: 1,
+            chunk_rows: 30,
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(2);
+    let qa = Mat::randn(48, 3, &mut rng);
+    let qb = Mat::randn(48, 3, &mut rng);
+    let (ya, _) = sharded.power_pass(&qa, &qb);
+    assert_eq!(ya.rows, 48);
+    assert_eq!(
+        sharded.metrics.tasks_completed.load(Ordering::Relaxed),
+        30
+    );
+}
+
+#[test]
+fn chunk_size_does_not_change_results() {
+    let store = make_store(500, 64, 125, "chunks");
+    let mut rng = Rng::new(3);
+    let qa = Mat::randn(64, 5, &mut rng);
+    let qb = Mat::randn(64, 5, &mut rng);
+    let mut results = Vec::new();
+    for chunk_rows in [16usize, 50, 125, 500] {
+        let mut sharded = ShardedPass::new(
+            store.clone(),
+            Arc::new(NativeEngine::new()),
+            ShardedPassConfig {
+                workers: 2,
+                chunk_rows,
+                ..Default::default()
+            },
+        );
+        results.push(sharded.power_pass(&qa, &qb).0);
+    }
+    for r in &results[1..] {
+        assert!(
+            r.rel_diff(&results[0]) < 1e-9,
+            "chunking changed the math: {}",
+            r.rel_diff(&results[0])
+        );
+    }
+}
+
+#[test]
+fn worker_count_does_not_change_results() {
+    let store = make_store(600, 48, 60, "workers");
+    let mut rng = Rng::new(4);
+    let qa = Mat::randn(48, 4, &mut rng);
+    let qb = Mat::randn(48, 4, &mut rng);
+    let run = |workers: usize| {
+        let mut sharded = ShardedPass::new(
+            store.clone(),
+            Arc::new(NativeEngine::new()),
+            ShardedPassConfig {
+                workers,
+                chunk_rows: 40,
+                ..Default::default()
+            },
+        );
+        sharded.final_pass(&qa, &qb)
+    };
+    let (ca1, cb1, f1) = run(1);
+    let (ca4, cb4, f4) = run(4);
+    assert!(ca1.rel_diff(&ca4) < 1e-12);
+    assert!(cb1.rel_diff(&cb4) < 1e-12);
+    assert!(f1.rel_diff(&f4) < 1e-12);
+}
+
+#[test]
+fn corrupted_shard_fails_pass_with_clear_error() {
+    let store = make_store(300, 32, 100, "corrupt");
+    // Corrupt shard 1 on disk.
+    let path = store.shard_path(1);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(&path, bytes).unwrap();
+
+    let mut sharded = ShardedPass::new(
+        store,
+        Arc::new(NativeEngine::new()),
+        ShardedPassConfig {
+            workers: 2,
+            chunk_rows: 50,
+            max_retries: 1,
+            cache_shards: false,
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(5);
+    let qa = Mat::randn(32, 3, &mut rng);
+    let qb = Mat::randn(32, 3, &mut rng);
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        sharded.power_pass(&qa, &qb)
+    }));
+    assert!(res.is_err(), "corrupted shard must abort the pass");
+}

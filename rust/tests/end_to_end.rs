@@ -1,0 +1,188 @@
+//! Full-pipeline integration: generator → hashing → shards → coordinator →
+//! CCA algorithms → evaluation, across engine kinds, plus algorithm-level
+//! cross-checks that only make sense above module level.
+
+use rcca::cca::exact::exact_cca;
+use rcca::cca::horst::{Horst, HorstConfig};
+use rcca::cca::objective::{evaluate, feasibility};
+use rcca::cca::rcca::{RandomizedCca, RccaConfig};
+use rcca::experiments::{build_engine, EngineKind, Scale, Workload};
+use std::path::PathBuf;
+
+fn workdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("rcca_e2e_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn inmemory_and_sharded_native_agree_end_to_end() {
+    let w = Workload::generate(Scale::tiny());
+    let (la, lb) = w.lambdas(0.01);
+    let cfg = RccaConfig {
+        k: 6,
+        p: 24,
+        q: 1,
+        lambda_a: la,
+        lambda_b: lb,
+        seed: 99,
+    };
+    let dir = workdir("agree");
+    let mut m1 = build_engine(&w, EngineKind::InMemory, &dir, 1, 128).unwrap();
+    let model1 = RandomizedCca::new(cfg.clone()).fit(m1.as_mut()).unwrap();
+    let mut m2 = build_engine(&w, EngineKind::ShardedNative, &dir, 3, 100).unwrap();
+    let model2 = RandomizedCca::new(cfg).fit(m2.as_mut()).unwrap();
+    for i in 0..6 {
+        assert!(
+            (model1.sigma[i] - model2.sigma[i]).abs() < 1e-4,
+            "σ_{i}: {} vs {}",
+            model1.sigma[i],
+            model2.sigma[i]
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rcca_beats_horst_per_pass_and_horst_wins_eventually() {
+    // The paper's central tradeoff at system level: at equal (tiny) pass
+    // budgets rcca with big p wins; with many passes Horst matches/exceeds.
+    let w = Workload::generate(Scale::tiny());
+    let (la, lb) = w.lambdas(0.01);
+    let k = w.scale.k;
+
+    let mut e1 = w.train_engine();
+    let rcca = RandomizedCca::new(RccaConfig {
+        k,
+        p: w.scale.p_large,
+        q: 1,
+        lambda_a: la,
+        lambda_b: lb,
+        seed: 1,
+    })
+    .fit(&mut e1)
+    .unwrap(); // 2 passes
+    let rcca_obj = evaluate(&rcca, &mut e1).sum_corr;
+
+    let mut e2 = w.train_engine();
+    let (horst2, _) = Horst::new(HorstConfig {
+        k,
+        lambda_a: la,
+        lambda_b: lb,
+        pass_budget: 2,
+        augment: true,
+        seed: 2,
+        tol: 0.0,
+    })
+    .fit(&mut e2)
+    .unwrap();
+    let horst2_obj = evaluate(&horst2, &mut e2).sum_corr;
+    assert!(
+        rcca_obj > horst2_obj,
+        "2-pass rcca ({rcca_obj:.3}) must beat 2-pass horst ({horst2_obj:.3})"
+    );
+
+    let mut e3 = w.train_engine();
+    let (horst_full, _) = Horst::new(HorstConfig {
+        k,
+        lambda_a: la,
+        lambda_b: lb,
+        pass_budget: 80,
+        augment: true,
+        seed: 3,
+        tol: 0.0,
+    })
+    .fit(&mut e3)
+    .unwrap();
+    let horst_full_obj = evaluate(&horst_full, &mut e3).sum_corr;
+    assert!(
+        horst_full_obj >= rcca_obj - 0.02,
+        "80-pass horst ({horst_full_obj:.3}) should match/exceed 2-pass rcca ({rcca_obj:.3})"
+    );
+}
+
+#[test]
+fn rcca_full_rank_matches_exact_oracle_through_whole_pipeline() {
+    // Through shards + coordinator (not just in-memory): full oversampling
+    // must reproduce the exact whitened-SVD solution.
+    let scale = Scale {
+        n: 800,
+        dims: 48,
+        topics: 8,
+        k: 4,
+        p_small: 8,
+        p_large: 16,
+        nu: 0.05,
+        test_fraction: 0.1,
+        seed: 0xabc,
+        ..Scale::tiny()
+    };
+    let w = Workload::generate(scale);
+    let (la, lb) = w.lambdas(0.05);
+    let exact = exact_cca(&w.train.a.to_dense(), &w.train.b.to_dense(), 4, la, lb);
+    let dir = workdir("oracle");
+    let mut eng = build_engine(&w, EngineKind::ShardedNative, &dir, 2, 64).unwrap();
+    let model = RandomizedCca::new(RccaConfig {
+        k: 4,
+        p: 44, // k+p = 48 = d
+        q: 2,
+        lambda_a: la,
+        lambda_b: lb,
+        seed: 5,
+    })
+    .fit(eng.as_mut())
+    .unwrap();
+    for i in 0..4 {
+        assert!(
+            (model.sigma[i] - exact.sigma[i]).abs() < 1e-6,
+            "σ_{i}: pipeline {} exact {}",
+            model.sigma[i],
+            exact.sigma[i]
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn feasibility_holds_across_engines_and_algorithms() {
+    let w = Workload::generate(Scale::tiny());
+    let (la, lb) = w.lambdas(0.01);
+    let dir = workdir("feas");
+    for kind in [EngineKind::InMemory, EngineKind::ShardedNative] {
+        let mut eng = build_engine(&w, kind, &dir, 2, 128).unwrap();
+        let model = RandomizedCca::new(RccaConfig {
+            k: 5,
+            p: 16,
+            q: 1,
+            lambda_a: la,
+            lambda_b: lb,
+            seed: 11,
+        })
+        .fit(eng.as_mut())
+        .unwrap();
+        let f = feasibility(&model, eng.as_mut(), la, lb);
+        assert!(f.cov_a_err < 1e-5, "{kind:?}: {}", f.cov_a_err);
+        assert!(f.cross_offdiag < 1e-5, "{kind:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spectrum_estimate_stable_across_engines() {
+    let w = Workload::generate(Scale::tiny());
+    let dir = workdir("spec");
+    let mut e1 = build_engine(&w, EngineKind::InMemory, &dir, 1, 128).unwrap();
+    let mut e2 = build_engine(&w, EngineKind::ShardedNative, &dir, 2, 90).unwrap();
+    let s1 = rcca::cca::rsvd::rsvd_spectrum(e1.as_mut(), 16, 16, 7);
+    let s2 = rcca::cca::rsvd::rsvd_spectrum(e2.as_mut(), 16, 16, 7);
+    for i in 0..16 {
+        assert!(
+            (s1[i] - s2[i]).abs() < 1e-6 * s1[0].max(1e-12),
+            "rank {i}: {} vs {}",
+            s1[i],
+            s2[i]
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

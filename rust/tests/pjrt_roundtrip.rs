@@ -1,0 +1,157 @@
+//! End-to-end AOT chain: JAX/Pallas → HLO text → Rust PJRT engine, checked
+//! against the native Rust engine on identical chunks. Requires
+//! `make artifacts` (skips with a notice otherwise — `make test` orders it).
+
+use rcca::data::synthparl::{SynthParl, SynthParlConfig};
+use rcca::data::TwoViewChunk;
+use rcca::linalg::Mat;
+use rcca::runtime::{mat_to_f32, ChunkEngine, NativeEngine, PjrtEngine};
+use rcca::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing; run `make artifacts`");
+        None
+    }
+}
+
+fn dataset(n: usize, dims: usize, seed: u64) -> TwoViewChunk {
+    let d = SynthParl::generate(SynthParlConfig {
+        n,
+        dims,
+        topics: 6,
+        words_per_topic: 10,
+        background_words: 24,
+        mean_len: 8.0,
+        seed,
+        ..Default::default()
+    });
+    TwoViewChunk { a: d.a, b: d.b }
+}
+
+#[test]
+fn pjrt_power_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtEngine::open(dir).expect("open artifacts");
+    let native = NativeEngine::new();
+    // d must match an artifact (d=256); chunk m=64 exactly.
+    let chunk = dataset(64, 256, 1);
+    let mut rng = Rng::new(2);
+    let qa = mat_to_f32(&Mat::randn(256, 32, &mut rng));
+    let qb = mat_to_f32(&Mat::randn(256, 32, &mut rng));
+    let (ya_p, yb_p) = pjrt.power_chunk(&chunk, &qa, &qb, 32).unwrap();
+    let (ya_n, yb_n) = native.power_chunk(&chunk, &qa, &qb, 32).unwrap();
+    assert!(
+        ya_p.rel_diff(&ya_n) < 1e-4,
+        "power Ya mismatch: {}",
+        ya_p.rel_diff(&ya_n)
+    );
+    assert!(yb_p.rel_diff(&yb_n) < 1e-4);
+    assert!(pjrt.executions.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn pjrt_final_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtEngine::open(dir).expect("open artifacts");
+    let native = NativeEngine::new();
+    let chunk = dataset(64, 256, 3);
+    let mut rng = Rng::new(4);
+    let qa = mat_to_f32(&Mat::randn(256, 32, &mut rng));
+    let qb = mat_to_f32(&Mat::randn(256, 32, &mut rng));
+    let (ca_p, cb_p, f_p) = pjrt.final_chunk(&chunk, &qa, &qb, 32).unwrap();
+    let (ca_n, cb_n, f_n) = native.final_chunk(&chunk, &qa, &qb, 32).unwrap();
+    assert!(ca_p.rel_diff(&ca_n) < 1e-4, "{}", ca_p.rel_diff(&ca_n));
+    assert!(cb_p.rel_diff(&cb_n) < 1e-4);
+    assert!(f_p.rel_diff(&f_n) < 1e-4);
+}
+
+#[test]
+fn pjrt_pads_short_chunks_and_narrow_q() {
+    // m=50 < 64 and r=20 < 32: engine must pad and slice exactly.
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtEngine::open(dir).expect("open artifacts");
+    let native = NativeEngine::new();
+    let chunk = dataset(50, 256, 5);
+    let mut rng = Rng::new(6);
+    let qa = mat_to_f32(&Mat::randn(256, 20, &mut rng));
+    let qb = mat_to_f32(&Mat::randn(256, 20, &mut rng));
+    let (ya_p, yb_p) = pjrt.power_chunk(&chunk, &qa, &qb, 20).unwrap();
+    let (ya_n, yb_n) = native.power_chunk(&chunk, &qa, &qb, 20).unwrap();
+    assert_eq!((ya_p.rows, ya_p.cols), (256, 20));
+    assert!(ya_p.rel_diff(&ya_n) < 1e-4);
+    assert!(yb_p.rel_diff(&yb_n) < 1e-4);
+    let (ca_p, _cb_p, f_p) = pjrt.final_chunk(&chunk, &qa, &qb, 20).unwrap();
+    let (ca_n, _cb_n, f_n) = native.final_chunk(&chunk, &qa, &qb, 20).unwrap();
+    assert_eq!((ca_p.rows, ca_p.cols), (20, 20));
+    assert!(ca_p.rel_diff(&ca_n) < 1e-4);
+    assert!(f_p.rel_diff(&f_n) < 1e-4);
+}
+
+#[test]
+fn pjrt_rejects_uncovered_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtEngine::open(dir).expect("open artifacts");
+    // d=128 has no artifact.
+    let chunk = dataset(64, 128, 7);
+    let qa = vec![0f32; 128 * 8];
+    let err = pjrt.power_chunk(&chunk, &qa, &qa, 8).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("no artifact"), "{msg}");
+}
+
+#[test]
+fn pjrt_full_rcca_through_coordinator() {
+    // The whole stack: shards on disk → coordinator → PJRT engine →
+    // RandomizedCCA, compared against the in-memory reference fit.
+    use rcca::cca::pass::InMemoryPass;
+    use rcca::cca::rcca::{RandomizedCca, RccaConfig};
+    use rcca::coordinator::{ShardedPass, ShardedPassConfig};
+    use rcca::data::shards::{ShardStore, ShardWriter};
+    use std::sync::Arc;
+
+    let Some(dir) = artifacts_dir() else { return };
+    let whole = dataset(400, 256, 8);
+    let shard_dir = std::env::temp_dir().join("rcca_pjrt_e2e");
+    let _ = std::fs::remove_dir_all(&shard_dir);
+    let mut w = ShardWriter::create(&shard_dir, 128).unwrap();
+    w.write_dataset(&whole.a, &whole.b).unwrap();
+    let store = ShardStore::open(&shard_dir).unwrap();
+
+    let pjrt = Arc::new(PjrtEngine::open(dir).unwrap());
+    let mut sharded = ShardedPass::new(
+        store,
+        pjrt,
+        ShardedPassConfig {
+            workers: 2,
+            chunk_rows: 64,
+            ..Default::default()
+        },
+    );
+    let cfg = RccaConfig {
+        k: 4,
+        p: 12,
+        q: 1,
+        lambda_a: 0.05,
+        lambda_b: 0.05,
+        seed: 42,
+    };
+    let model_pjrt = RandomizedCca::new(cfg.clone()).fit(&mut sharded).unwrap();
+
+    let mut inmem = InMemoryPass::new(whole);
+    let model_ref = RandomizedCca::new(cfg).fit(&mut inmem).unwrap();
+
+    for i in 0..4 {
+        assert!(
+            (model_pjrt.sigma[i] - model_ref.sigma[i]).abs() < 1e-3,
+            "σ_{i}: pjrt {} ref {}",
+            model_pjrt.sigma[i],
+            model_ref.sigma[i]
+        );
+    }
+    let _ = std::fs::remove_dir_all(&shard_dir);
+}
