@@ -1,8 +1,9 @@
 //! Cross-lingual sentence retrieval — the application the paper's intro
 //! motivates (multilingual representation learning, refs [5][7]).
 //!
-//! Fit CCA on aligned training pairs, embed held-out sentences from both
-//! "languages" into the shared latent space, and retrieve each English
+//! Fit CCA on aligned training pairs through the api session layer, embed
+//! held-out sentences from both "languages" with
+//! `FittedModel::transform_a/transform_b`, and retrieve each English
 //! sentence's Greek translation by cosine similarity. Reports P@1 / P@5
 //! against the chance baseline 1/n_test.
 //!
@@ -10,8 +11,7 @@
 //! cargo run --release --example bilingual_retrieval
 //! ```
 
-use rcca::cca::pass::InMemoryPass;
-use rcca::cca::rcca::{RandomizedCca, RccaConfig};
+use rcca::api::{Cca, Engine};
 use rcca::data::split::{gather_rows, split_indices};
 use rcca::data::synthparl::{SynthParl, SynthParlConfig};
 use rcca::data::TwoViewChunk;
@@ -41,24 +41,23 @@ fn main() -> anyhow::Result<()> {
         test.rows()
     );
 
-    let mut engine = InMemoryPass::new(train);
-    let model = RandomizedCca::new(RccaConfig {
-        k: 48,
-        p: 120,
-        q: 2,
-        lambda_a: 1e-3,
-        lambda_b: 1e-3,
-        seed: 7,
-    })
-    .fit(&mut engine)?;
+    let mut engine = Engine::in_memory(train);
+    let model = Cca::builder()
+        .k(48)
+        .oversample(120)
+        .power_iters(2)
+        .lambda(1e-3, 1e-3)
+        .seed(7)
+        .fit(&mut engine)?;
     println!(
         "fitted CCA: {} passes, top correlation {:.3}",
-        model.passes, model.sigma[0]
+        model.passes(),
+        model.correlations()[0]
     );
 
-    // Embed the held-out sentences: Ea = A_test · Xa, Eb = B_test · Xb.
-    let ea = test.a.times_mat(&model.xa);
-    let eb = test.b.times_mat(&model.xb);
+    // Embed the held-out sentences into the shared canonical space.
+    let ea = model.transform_a(&test.a)?;
+    let eb = model.transform_b(&test.b)?;
 
     let (p1, p5) = retrieval_precision(&ea, &eb);
     let chance = 1.0 / test.rows() as f64;
@@ -74,7 +73,7 @@ fn main() -> anyhow::Result<()> {
         let rows: Vec<usize> = (0..test.rows()).rev().collect();
         gather_rows(&test.b, &rows)
     };
-    let eb_shuf = shuffled_b.times_mat(&model.xb);
+    let eb_shuf = model.transform_b(&shuffled_b)?;
     let (p1_shuf, _) = retrieval_precision(&ea, &eb_shuf);
     println!("  control (misaligned pool): P@1 = {:.4}", p1_shuf);
     anyhow::ensure!(p1 > 20.0 * chance, "retrieval failed to beat chance decisively");

@@ -2,6 +2,10 @@
 //! Horst iteration from a cheap RandomizedCCA solution reduces total data
 //! passes to a given accuracy (paper: 120 → 34 on Europarl).
 //!
+//! Both runs go through the api session layer: the warm-started fit is one
+//! builder call with `Solver::Horst { warm_start: true }` — the initializer
+//! chaining lives inside the API, not here.
+//!
 //! Prints both convergence traces (objective vs cumulative passes) so the
 //! crossover is visible in the terminal.
 //!
@@ -9,8 +13,7 @@
 //! cargo run --release --example horst_init
 //! ```
 
-use rcca::cca::horst::{Horst, HorstConfig};
-use rcca::cca::rcca::{RandomizedCca, RccaConfig};
+use rcca::api::{Cca, Solver};
 use rcca::experiments::{Scale, Workload};
 
 fn main() -> anyhow::Result<()> {
@@ -29,33 +32,30 @@ fn main() -> anyhow::Result<()> {
 
     // Cold start.
     let mut eng = w.train_engine();
-    let horst = |seed| {
-        Horst::new(HorstConfig {
-            k: w.scale.k,
-            lambda_a: la,
-            lambda_b: lb,
-            pass_budget: budget,
-            augment: true,
-            seed,
-            tol: 0.0,
-        })
-    };
-    let (cold_model, cold_trace) = horst(0x4057).fit(&mut eng)?;
-    let target = cold_model.sum_correlations() * 0.999;
+    let cold = Cca::builder()
+        .k(w.scale.k)
+        .lambda(la, lb)
+        .solver(Solver::Horst { warm_start: false })
+        .pass_budget(budget)
+        .horst_seed(0x4057)
+        .fit(&mut eng)?;
+    let cold_trace = cold.trace.clone().unwrap_or_default();
+    let target = cold.sum_correlations() * 0.999;
 
-    // Warm start: rcca(p = p_large, q = 1) initializer.
+    // Warm start: rcca(p = p_large, q = 1) initializer, chained by the API.
     let mut eng2 = w.train_engine();
-    let init = RandomizedCca::new(RccaConfig {
-        k: w.scale.k,
-        p: w.scale.p_large,
-        q: 1,
-        lambda_a: la,
-        lambda_b: lb,
-        seed: 0x1217,
-    })
-    .fit(&mut eng2)?;
-    let init_passes = init.passes;
-    let (_, warm_trace) = horst(0x3a3a).fit_from(&mut eng2, init.xa.clone(), init.xb.clone())?;
+    let warm = Cca::builder()
+        .k(w.scale.k)
+        .oversample(w.scale.p_large)
+        .power_iters(1)
+        .lambda(la, lb)
+        .solver(Solver::Horst { warm_start: true })
+        .pass_budget(budget)
+        .seed(0x1217)
+        .horst_seed(0x3a3a)
+        .fit(&mut eng2)?;
+    let warm_trace = warm.trace.clone().unwrap_or_default();
+    let init_passes = warm.init_passes;
 
     println!("target objective (cold Horst final ·0.999): {target:.4}\n");
     println!("{:>6} {:>12} {:>12}", "passes", "cold", "warm(+init)");

@@ -1,64 +1,31 @@
-//! Quickstart: fit RandomizedCCA on a small synthetic parallel corpus.
+//! Quickstart — the "Using the API" example from README.md, verbatim:
+//! builder → fit → FittedModel → transform → save/load in ten lines.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use rcca::cca::objective::{evaluate, feasibility};
-use rcca::cca::pass::InMemoryPass;
-use rcca::cca::rcca::{RandomizedCca, RccaConfig};
+use rcca::api::{Cca, Engine, FittedModel};
 use rcca::data::synthparl::{SynthParl, SynthParlConfig};
 use rcca::data::TwoViewChunk;
+use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Two-view data: a synthetic aligned bilingual corpus, hashed to
-    //    1024-dim bag-of-words views (see DESIGN.md §3 for why this stands
-    //    in for Europarl).
-    let corpus = SynthParl::generate(SynthParlConfig {
-        n: 5_000,
-        dims: 1024,
-        topics: 32,
-        ..Default::default()
-    });
-    let chunk = TwoViewChunk {
-        a: corpus.a,
-        b: corpus.b,
-    };
-    println!(
-        "corpus: n={} d={} nnz/row ≈ {:.1}",
-        chunk.rows(),
-        chunk.a.cols,
-        chunk.a.nnz() as f64 / chunk.rows() as f64
-    );
+    // The 10-line quickstart (kept in sync with README.md §Using the API):
+    let cfg = SynthParlConfig { n: 5_000, dims: 1024, topics: 32, ..Default::default() };
+    let corpus = SynthParl::generate(cfg);
+    let new_sentences = corpus.a.slice_rows(0, 100); // rows we'll embed after fitting
+    let mut engine = Engine::in_memory(TwoViewChunk { a: corpus.a, b: corpus.b });
+    let model = Cca::builder().k(16).oversample(64).nu(0.01).seed(42).fit(&mut engine)?;
+    println!("{} data passes; rho_0 = {:.4}", model.passes(), model.correlations()[0]);
+    let embeddings = model.transform_a(&new_sentences)?; // 100 x 16, shared canonical space
+    model.save(Path::new("work/quickstart_model.json"))?;
+    let restored = FittedModel::load(Path::new("work/quickstart_model.json"))?;
+    assert_eq!(restored.transform_a(&new_sentences)?, embeddings); // bitwise round-trip
+    println!("embedded {} sentences into R^{}", embeddings.rows, embeddings.cols);
 
-    // 2. Fit Algorithm 1: k=16 canonical directions, oversampling p=64,
-    //    one power iteration → two data passes total.
-    let mut engine = InMemoryPass::new(chunk);
-    let lambda = 1e-3;
-    let model = RandomizedCca::new(RccaConfig {
-        k: 16,
-        p: 64,
-        q: 1,
-        lambda_a: lambda,
-        lambda_b: lambda,
-        seed: 42,
-    })
-    .fit(&mut engine)?;
-
-    // 3. Inspect the result.
-    println!("\ndata passes used: {}", model.passes);
-    println!("top canonical correlations:");
-    for (i, s) in model.sigma.iter().take(8).enumerate() {
-        println!("  ρ_{i} = {s:.4}");
-    }
-    let obj = evaluate(&model, &mut engine);
+    // Beyond the quickstart: evaluate the paper's objective on the data.
+    let obj = model.objective(&mut engine);
     println!("sum of correlations (objective): {:.4}", obj.sum_corr);
-
-    let feas = feasibility(&model, &mut engine, lambda, lambda);
-    println!(
-        "feasibility: cov err {:.2e}, cross off-diag {:.2e} (≈ machine precision, paper §4)",
-        feas.cov_a_err.max(feas.cov_b_err),
-        feas.cross_offdiag
-    );
     Ok(())
 }

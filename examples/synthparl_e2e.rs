@@ -6,17 +6,15 @@
 //!   `make artifacts` has run, else the native engine) → RandomizedCCA →
 //!   train/test objective + feasibility + Horst comparison,
 //! and prints the paper's headline metric (sum of the first k canonical
-//! correlations) plus the pass ledger. The run is recorded in
-//! EXPERIMENTS.md §E2E.
+//! correlations) plus the pass ledger. All engine/solver wiring goes
+//! through `rcca::api`. The run is recorded in EXPERIMENTS.md §E2E.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example synthparl_e2e
 //! ```
 
-use rcca::cca::horst::{Horst, HorstConfig};
-use rcca::cca::objective::{evaluate, feasibility};
-use rcca::cca::rcca::{RandomizedCca, RccaConfig};
-use rcca::experiments::{build_engine, EngineKind, Scale, Workload};
+use rcca::api::{Backend, Cca, Engine, Solver};
+use rcca::experiments::{Scale, Workload};
 use rcca::util::timer::Timer;
 use std::path::Path;
 
@@ -44,15 +42,15 @@ fn main() -> anyhow::Result<()> {
 
     // Prefer the AOT/XLA path when artifacts exist; fall back to native.
     let have_artifacts = Path::new("artifacts/manifest.json").exists();
-    let kind = if have_artifacts {
-        EngineKind::ShardedPjrt
+    let backend = if have_artifacts {
+        Backend::Pjrt
     } else {
         eprintln!("note: artifacts/ missing — run `make artifacts` for the XLA path; using native engine");
-        EngineKind::ShardedNative
+        Backend::Native
     };
     let workdir = Path::new("work");
     std::fs::create_dir_all(workdir)?;
-    let mut engine = build_engine(&workload, kind, workdir, 2, 256)?;
+    let mut engine = Engine::for_workload(&workload, backend, workdir, 2, 256)?;
     println!(
         "engine: {} (coordinator: 2 workers, 256-row chunks, shards on disk)",
         if have_artifacts { "pjrt (AOT XLA)" } else { "native" }
@@ -61,24 +59,22 @@ fn main() -> anyhow::Result<()> {
     // RandomizedCCA at the paper's headline setting: q=1 → 2 data passes.
     let (la, lb) = workload.lambdas(nu);
     let t_fit = Timer::start();
-    let model = RandomizedCca::new(RccaConfig {
-        k: workload.scale.k,
-        p: 100, // k+p = 160 = the compiled artifact width
-        q: 1,
-        lambda_a: la,
-        lambda_b: lb,
-        seed: 0xe2e,
-    })
-    .fit(engine.as_mut())?;
+    let model = Cca::builder()
+        .k(workload.scale.k)
+        .oversample(100) // k+p = 160 = the compiled artifact width
+        .power_iters(1)
+        .lambda(la, lb)
+        .seed(0xe2e)
+        .fit(&mut engine)?;
     let fit_secs = t_fit.secs();
 
-    let train = evaluate(&model, engine.as_mut());
-    let test = evaluate(&model, &mut workload.test_engine());
-    let feas = feasibility(&model, engine.as_mut(), la, lb);
+    let train = model.objective(&mut engine);
+    let test = model.objective(&mut workload.test_engine());
+    let feas = model.feasibility(&mut engine);
 
     println!("\n-- RandomizedCCA (k=60, p=100, q=1) --");
     println!("fit wall time:        {fit_secs:.1}s");
-    println!("data passes (fit):    {}", model.passes);
+    println!("data passes (fit):    {}", model.passes());
     println!("train objective:      {:.3}  (sum of first 60 canonical correlations)", train.sum_corr);
     println!("test objective:       {:.3}", test.sum_corr);
     println!(
@@ -91,23 +87,20 @@ fn main() -> anyhow::Result<()> {
     // (same math, same coordinator; 30 interpret-mode XLA passes would take
     // ~15 min on one core — `repro table2b` runs the full comparison).
     let t_h = Timer::start();
-    let mut h_engine = build_engine(&workload, EngineKind::ShardedNative, workdir, 2, 256)?;
-    let (hm, _) = Horst::new(HorstConfig {
-        k: workload.scale.k,
-        lambda_a: la,
-        lambda_b: lb,
-        pass_budget: 30,
-        augment: true,
-        seed: 0x4057,
-        tol: 0.0,
-    })
-    .fit(h_engine.as_mut())?;
+    let mut h_engine = Engine::for_workload(&workload, Backend::Native, workdir, 2, 256)?;
+    let hm = Cca::builder()
+        .k(workload.scale.k)
+        .lambda(la, lb)
+        .solver(Solver::Horst { warm_start: false })
+        .pass_budget(30)
+        .horst_seed(0x4057)
+        .fit(&mut h_engine)?;
     let h_secs = t_h.secs();
-    let h_train = evaluate(&hm, h_engine.as_mut());
-    let h_test = evaluate(&hm, &mut workload.test_engine());
+    let h_train = hm.objective(&mut h_engine);
+    let h_test = hm.objective(&mut workload.test_engine());
     println!("\n-- Horst baseline (30-pass budget, native engine) --");
     println!("wall time:            {h_secs:.1}s");
-    println!("data passes:          {}", hm.passes);
+    println!("data passes:          {}", hm.passes());
     println!("train objective:      {:.3}", h_train.sum_corr);
     println!("test objective:       {:.3}", h_test.sum_corr);
 
@@ -115,7 +108,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "RandomizedCCA reached {:.1}% of the Horst-30 train objective in {} passes vs {}.",
         100.0 * train.sum_corr / h_train.sum_corr,
-        model.passes,
+        model.passes(),
         30
     );
     println!("record this block in EXPERIMENTS.md §E2E");

@@ -169,9 +169,11 @@ fn p4_coordinator() {
         stats.p50 / 64.0 * 1e6
     );
 
-    // Full pass cost vs sum of raw engine chunk costs.
-    use rcca::coordinator::{ShardedPass, ShardedPassConfig};
-    use rcca::data::shards::{ShardStore, ShardWriter};
+    // Full pass cost vs sum of raw engine chunk costs, through the api
+    // engine (same coordinator underneath, metrics exposed via
+    // `Engine::metrics`).
+    use rcca::api::{Engine, ShardedOpts};
+    use rcca::data::shards::ShardWriter;
     let d = SynthParl::generate(SynthParlConfig {
         n: 4096,
         dims: 1024,
@@ -186,16 +188,15 @@ fn p4_coordinator() {
     let _ = std::fs::remove_dir_all(&dir);
     let mut w = ShardWriter::create(&dir, 512).unwrap();
     w.write_dataset(&d.a, &d.b).unwrap();
-    let store = ShardStore::open(&dir).unwrap();
-    let mut sharded = ShardedPass::new(
-        store,
-        std::sync::Arc::new(NativeEngine::new()),
-        ShardedPassConfig {
+    let mut sharded = Engine::sharded(
+        &dir,
+        ShardedOpts {
             workers: 2,
             chunk_rows: 256,
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     let mut rng = Rng::new(13);
     let qa = Mat::randn(1024, 64, &mut rng);
     let qb = Mat::randn(1024, 64, &mut rng);
@@ -203,7 +204,7 @@ fn p4_coordinator() {
     let stats = bench_fn("coordinator power_pass n=4096 d=1024 r=64", || {
         let _ = sharded.power_pass(&qa, &qb);
     });
-    let m = sharded.metrics.snapshot();
+    let m = sharded.metrics().expect("sharded engine has metrics").snapshot();
     println!(
         "    -> pass p50 {:.1}ms; engine share {:.0}%; metrics {m}",
         stats.p50 * 1e3,

@@ -1,0 +1,439 @@
+//! Fluent, validated CCA configuration: `Cca::builder() … .fit(&mut engine)`.
+
+use super::model::FittedModel;
+use super::{ApiError, Lambda};
+use crate::cca::horst::{Horst, HorstConfig};
+use crate::cca::pass::PassEngine;
+use crate::cca::rcca::{RandomizedCca, RccaConfig};
+
+/// Solver selection. `Horst { warm_start: true }` chains the randomized
+/// solver into the iterative baseline (the paper's "Horst+rcca"): the
+/// builder's `oversample`/`power_iters`/`seed` configure the initializer,
+/// and its solution warm-starts `Horst::fit_from` on the same engine so the
+/// pass ledger stays honest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Solver {
+    /// The paper's Algorithm 1 (two-pass randomized solver).
+    Randomized,
+    /// Horst iteration, optionally warm-started from a RandomizedCCA fit.
+    Horst { warm_start: bool },
+}
+
+/// Builder for [`Cca`]. Every setter is chainable; [`CcaBuilder::build`]
+/// (or [`CcaBuilder::fit`], which builds first) reports configuration
+/// errors eagerly as [`ApiError`] before any data is touched.
+#[derive(Debug, Clone)]
+pub struct CcaBuilder {
+    k: usize,
+    p: usize,
+    q: usize,
+    nu: Option<f64>,
+    explicit: Option<(f64, f64)>,
+    seed: u64,
+    solver: Solver,
+    pass_budget: usize,
+    horst_seed: Option<u64>,
+    augment: bool,
+    tol: f64,
+}
+
+impl Default for CcaBuilder {
+    fn default() -> Self {
+        CcaBuilder {
+            k: 60,
+            p: 100,
+            q: 1,
+            nu: None,
+            explicit: None,
+            seed: 0xcca,
+            solver: Solver::Randomized,
+            pass_budget: 120,
+            horst_seed: None,
+            augment: true,
+            tol: 0.0,
+        }
+    }
+}
+
+impl CcaBuilder {
+    /// Target embedding dimension `k` (paper uses k = 60).
+    pub fn k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    /// Oversampling `p` — the paper's central knob (effective rank k+p).
+    pub fn oversample(mut self, p: usize) -> Self {
+        self.p = p;
+        self
+    }
+
+    /// Power-iteration passes `q` (0 = pure sketch; 1–3 in the paper).
+    pub fn power_iters(mut self, q: usize) -> Self {
+        self.q = q;
+        self
+    }
+
+    /// Scale-free regularization ν (paper §4): λ = ν·tr(AᵀA)/d per view,
+    /// resolved against the engine at fit time. Conflicts with
+    /// [`CcaBuilder::lambda`].
+    pub fn nu(mut self, nu: f64) -> Self {
+        self.nu = Some(nu);
+        self
+    }
+
+    /// Explicit ridge values (λa, λb). Conflicts with [`CcaBuilder::nu`].
+    pub fn lambda(mut self, lambda_a: f64, lambda_b: f64) -> Self {
+        self.explicit = Some((lambda_a, lambda_b));
+        self
+    }
+
+    /// Seed for the randomized solver (and the warm-start initializer).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn solver(mut self, solver: Solver) -> Self {
+        self.solver = solver;
+        self
+    }
+
+    /// Horst data-pass budget (the paper reports 120).
+    pub fn pass_budget(mut self, passes: usize) -> Self {
+        self.pass_budget = passes;
+        self
+    }
+
+    /// Seed for Horst's random cold-start initializer. Defaults to
+    /// `seed ^ 0x4057` so randomized and iterative draws are decorrelated.
+    pub fn horst_seed(mut self, seed: u64) -> Self {
+        self.horst_seed = Some(seed);
+        self
+    }
+
+    /// Append the previous Horst iterate to the basis (LOBPCG-style
+    /// acceleration; on by default).
+    pub fn augment(mut self, augment: bool) -> Self {
+        self.augment = augment;
+        self
+    }
+
+    /// Horst early-stopping tolerance (0.0 = fixed budget, the paper's
+    /// setting).
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Validate and freeze the configuration.
+    pub fn build(self) -> Result<Cca, ApiError> {
+        if self.k == 0 {
+            return Err(ApiError::InvalidConfig("k must be positive".into()));
+        }
+        let lambda = match (self.nu, self.explicit) {
+            (Some(_), Some(_)) => return Err(ApiError::LambdaConflict),
+            (Some(nu), None) => {
+                if !(nu > 0.0 && nu.is_finite()) {
+                    return Err(ApiError::InvalidConfig(format!(
+                        "nu must be positive and finite, got {nu}"
+                    )));
+                }
+                Lambda::Nu(nu)
+            }
+            (None, Some((la, lb))) => {
+                if !(la > 0.0 && lb > 0.0 && la.is_finite() && lb.is_finite()) {
+                    return Err(ApiError::InvalidConfig(format!(
+                        "regularizers must be positive and finite, got ({la}, {lb})"
+                    )));
+                }
+                Lambda::explicit(la, lb)
+            }
+            // Paper §4 default.
+            (None, None) => Lambda::Nu(0.01),
+        };
+        if self.tol < 0.0 {
+            return Err(ApiError::InvalidConfig("tol must be non-negative".into()));
+        }
+        if matches!(self.solver, Solver::Horst { .. }) && self.pass_budget < 2 {
+            return Err(ApiError::InvalidConfig(
+                "Horst needs a pass budget of at least 2 (one iteration = 2 data passes)".into(),
+            ));
+        }
+        Ok(Cca {
+            k: self.k,
+            p: self.p,
+            q: self.q,
+            lambda,
+            seed: self.seed,
+            solver: self.solver,
+            pass_budget: self.pass_budget,
+            horst_seed: self.horst_seed.unwrap_or(self.seed ^ 0x4057),
+            augment: self.augment,
+            tol: self.tol,
+        })
+    }
+
+    /// Build, then fit — the common one-liner.
+    pub fn fit<E: PassEngine + ?Sized>(self, engine: &mut E) -> Result<FittedModel, ApiError> {
+        self.build()?.fit(engine)
+    }
+}
+
+/// A validated CCA session configuration. Construct with [`Cca::builder`].
+#[derive(Debug, Clone)]
+pub struct Cca {
+    k: usize,
+    p: usize,
+    q: usize,
+    lambda: Lambda,
+    seed: u64,
+    solver: Solver,
+    pass_budget: usize,
+    horst_seed: u64,
+    augment: bool,
+    tol: f64,
+}
+
+impl Cca {
+    pub fn builder() -> CcaBuilder {
+        CcaBuilder::default()
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn solver(&self) -> Solver {
+        self.solver
+    }
+
+    pub fn lambda(&self) -> Lambda {
+        self.lambda
+    }
+
+    /// Fit on a pass engine. Data-dependent validation (k + p vs the view
+    /// dimensions) happens here, before any solver work, so misconfiguration
+    /// surfaces as a typed [`ApiError`] instead of a panic deep in the dense
+    /// kernels.
+    pub fn fit<E: PassEngine + ?Sized>(&self, engine: &mut E) -> Result<FittedModel, ApiError> {
+        let (_, da, db) = engine.dims();
+        let min_dim = da.min(db);
+        let needs_sketch = match self.solver {
+            Solver::Randomized | Solver::Horst { warm_start: true } => true,
+            Solver::Horst { warm_start: false } => false,
+        };
+        if needs_sketch && self.k + self.p > min_dim {
+            return Err(ApiError::RankTooLarge {
+                k: self.k,
+                p: self.p,
+                min_dim,
+            });
+        }
+        if self.k > min_dim {
+            return Err(ApiError::RankTooLarge {
+                k: self.k,
+                p: 0,
+                min_dim,
+            });
+        }
+
+        let start_passes = engine.passes();
+        let (lambda_a, lambda_b) = self.lambda.resolve(&mut *engine);
+        if !(lambda_a > 0.0 && lambda_b > 0.0 && lambda_a.is_finite() && lambda_b.is_finite()) {
+            return Err(ApiError::InvalidConfig(format!(
+                "resolved regularizers must be positive and finite, got ({lambda_a}, {lambda_b})"
+            )));
+        }
+        let solver_err = |e: anyhow::Error| ApiError::Solver(format!("{e:#}"));
+
+        let rcca = RandomizedCca::new(RccaConfig {
+            k: self.k,
+            p: self.p,
+            q: self.q,
+            lambda_a,
+            lambda_b,
+            seed: self.seed,
+        });
+        let fitted = match self.solver {
+            Solver::Randomized => {
+                let model = rcca.fit(&mut *engine).map_err(solver_err)?;
+                FittedModel::new(model, lambda_a, lambda_b, "randomized")
+            }
+            Solver::Horst { warm_start } => {
+                let horst = Horst::new(HorstConfig {
+                    k: self.k,
+                    lambda_a,
+                    lambda_b,
+                    pass_budget: self.pass_budget,
+                    augment: self.augment,
+                    seed: self.horst_seed,
+                    tol: self.tol,
+                });
+                if warm_start {
+                    // The paper's Horst+rcca: one randomized fit, then the
+                    // iterates continue from its projections on the same
+                    // engine (shared pass ledger).
+                    let (init, _qa, _qb) =
+                        rcca.fit_with_bases(&mut *engine).map_err(solver_err)?;
+                    let init_passes = engine.passes() - start_passes;
+                    let (model, trace) = horst
+                        .fit_from(&mut *engine, init.xa, init.xb)
+                        .map_err(solver_err)?;
+                    FittedModel::new(model, lambda_a, lambda_b, "horst+rcca")
+                        .with_trace(trace)
+                        .with_init_passes(init_passes)
+                } else {
+                    let (model, trace) = horst.fit(&mut *engine).map_err(solver_err)?;
+                    FittedModel::new(model, lambda_a, lambda_b, "horst").with_trace(trace)
+                }
+            }
+        };
+        Ok(fitted.with_fit_passes(engine.passes() - start_passes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Engine;
+    use crate::cca::pass::InMemoryPass;
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::data::TwoViewChunk;
+
+    fn dataset(n: usize, dims: usize, seed: u64) -> TwoViewChunk {
+        let d = SynthParl::generate(SynthParlConfig {
+            n,
+            dims,
+            topics: 6,
+            words_per_topic: 10,
+            background_words: 24,
+            mean_len: 8.0,
+            seed,
+            ..Default::default()
+        });
+        TwoViewChunk { a: d.a, b: d.b }
+    }
+
+    #[test]
+    fn builder_validates_eagerly() {
+        assert!(matches!(
+            Cca::builder().k(0).build(),
+            Err(ApiError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Cca::builder().nu(0.01).lambda(0.1, 0.1).build(),
+            Err(ApiError::LambdaConflict)
+        ));
+        assert!(matches!(
+            Cca::builder().nu(-1.0).build(),
+            Err(ApiError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Cca::builder().lambda(0.0, 0.1).build(),
+            Err(ApiError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Cca::builder()
+                .solver(Solver::Horst { warm_start: false })
+                .pass_budget(1)
+                .build(),
+            Err(ApiError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Cca::builder().tol(-0.5).build(),
+            Err(ApiError::InvalidConfig(_))
+        ));
+        // Defaults are valid and use the paper's ν.
+        let cca = Cca::builder().build().unwrap();
+        assert_eq!(cca.lambda(), Lambda::Nu(0.01));
+    }
+
+    #[test]
+    fn oversized_sketch_is_a_typed_entry_error() {
+        let mut eng = Engine::in_memory(dataset(100, 32, 1));
+        let err = Cca::builder()
+            .k(8)
+            .oversample(32)
+            .lambda(0.05, 0.05)
+            .fit(&mut eng)
+            .unwrap_err();
+        assert!(
+            matches!(err, ApiError::RankTooLarge { k: 8, p: 32, min_dim: 32 }),
+            "{err}"
+        );
+        // Horst with k alone too large is caught too.
+        let err = Cca::builder()
+            .k(40)
+            .solver(Solver::Horst { warm_start: false })
+            .lambda(0.05, 0.05)
+            .fit(&mut eng)
+            .unwrap_err();
+        assert!(matches!(err, ApiError::RankTooLarge { .. }), "{err}");
+        // Nothing above touched the data.
+        assert_eq!(eng.passes(), 0);
+    }
+
+    #[test]
+    fn randomized_fit_matches_core_solver_exactly() {
+        let chunk = dataset(300, 64, 2);
+        let mut core_eng = InMemoryPass::new(chunk.clone());
+        let core = RandomizedCca::new(RccaConfig {
+            k: 5,
+            p: 10,
+            q: 1,
+            lambda_a: 0.05,
+            lambda_b: 0.05,
+            seed: 77,
+        })
+        .fit(&mut core_eng)
+        .unwrap();
+
+        let mut api_eng = Engine::in_memory(chunk);
+        let fitted = Cca::builder()
+            .k(5)
+            .oversample(10)
+            .power_iters(1)
+            .lambda(0.05, 0.05)
+            .seed(77)
+            .fit(&mut api_eng)
+            .unwrap();
+        assert_eq!(fitted.correlations(), &core.sigma[..]);
+        assert_eq!(fitted.xa(), &core.xa);
+        assert_eq!(fitted.passes(), core.passes);
+        assert_eq!(fitted.solver(), "randomized");
+    }
+
+    #[test]
+    fn nu_resolution_consumes_one_cached_pass() {
+        let mut eng = Engine::in_memory(dataset(200, 48, 3));
+        let fitted = Cca::builder()
+            .k(4)
+            .oversample(8)
+            .power_iters(1)
+            .nu(0.01)
+            .fit(&mut eng)
+            .unwrap();
+        // 1 gram-trace pass + q + 1 solver passes, all on one ledger.
+        assert_eq!(fitted.passes(), 3);
+        assert!(fitted.lambda_a > 0.0 && fitted.lambda_b > 0.0);
+    }
+
+    #[test]
+    fn horst_via_builder_produces_trace() {
+        let mut eng = Engine::in_memory(dataset(300, 48, 4));
+        let fitted = Cca::builder()
+            .k(3)
+            .lambda(0.05, 0.05)
+            .solver(Solver::Horst { warm_start: false })
+            .pass_budget(10)
+            .horst_seed(11)
+            .fit(&mut eng)
+            .unwrap();
+        let trace = fitted.trace.as_ref().expect("horst trace");
+        assert_eq!(trace.len(), 5);
+        assert_eq!(fitted.init_passes, 0);
+        assert_eq!(fitted.solver(), "horst");
+        assert!(fitted.passes() <= 10);
+    }
+}

@@ -1,0 +1,378 @@
+//! Unified engine construction: one constructor family over every compute
+//! path (in-memory, sharded native, sharded PJRT), replacing the scattered
+//! `InMemoryPass`/`ShardedPass` wiring that the CLI, experiments, examples,
+//! and benches each used to hand-roll.
+
+use super::ApiError;
+use crate::cca::pass::{InMemoryPass, PassEngine};
+use crate::coordinator::{Metrics, ShardedPass, ShardedPassConfig};
+use crate::data::shards::{ShardStore, ShardWriter};
+use crate::data::TwoViewChunk;
+use crate::experiments::Workload;
+use crate::linalg::Mat;
+use crate::runtime::{ChunkEngine, NativeEngine, PjrtEngine};
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+use std::sync::Arc;
+
+/// Which compute path an engine uses. Parses from the CLI's `--engine`
+/// flag values (`inmemory`, `native`, `pjrt`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Single-node in-core sparse products (fastest for sweeps).
+    InMemory,
+    /// Leader/worker coordinator over on-disk shards, native Rust chunks.
+    Native,
+    /// Coordinator with AOT-compiled XLA chunks (requires `make artifacts`
+    /// and the `pjrt` cargo feature).
+    Pjrt,
+}
+
+impl FromStr for Backend {
+    type Err = ApiError;
+
+    fn from_str(s: &str) -> Result<Backend, ApiError> {
+        match s {
+            "inmemory" => Ok(Backend::InMemory),
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => Err(ApiError::EngineSpec(format!(
+                "unknown engine '{other}' (expected inmemory|native|pjrt)"
+            ))),
+        }
+    }
+}
+
+/// Chunk-compute selection for sharded engines.
+#[derive(Debug, Clone)]
+pub enum Compute {
+    Native,
+    /// AOT-compiled XLA; `artifacts` is the manifest directory.
+    Pjrt { artifacts: PathBuf },
+}
+
+/// Options for [`Engine::sharded`].
+#[derive(Debug, Clone)]
+pub struct ShardedOpts {
+    /// Worker threads (the "cluster size" of this testbed).
+    pub workers: usize,
+    /// Rows per engine chunk.
+    pub chunk_rows: usize,
+    /// Keep decoded shards in memory after first load.
+    pub cache_shards: bool,
+    pub compute: Compute,
+}
+
+impl Default for ShardedOpts {
+    fn default() -> Self {
+        ShardedOpts {
+            workers: 2,
+            chunk_rows: 256,
+            cache_shards: true,
+            compute: Compute::Native,
+        }
+    }
+}
+
+/// A ready-to-fit pass engine. Implements [`PassEngine`], so every solver
+/// and evaluator in the crate runs on it unchanged; constructors cover all
+/// compute paths so call sites never name `InMemoryPass`/`ShardedPass`.
+pub struct Engine {
+    inner: Box<dyn PassEngine>,
+    backend: Backend,
+    metrics: Option<Arc<Metrics>>,
+}
+
+impl Engine {
+    /// In-core engine over a row-aligned two-view chunk.
+    pub fn in_memory(chunk: TwoViewChunk) -> Engine {
+        Engine {
+            inner: Box::new(InMemoryPass::new(chunk)),
+            backend: Backend::InMemory,
+            metrics: None,
+        }
+    }
+
+    /// Coordinator engine over an existing shard directory (one produced by
+    /// `repro gen` or [`Engine::for_workload`]).
+    pub fn sharded(shard_dir: &Path, opts: ShardedOpts) -> Result<Engine, ApiError> {
+        let store = ShardStore::open(shard_dir).map_err(ApiError::Engine)?;
+        let (chunk_engine, backend): (Arc<dyn ChunkEngine>, Backend) = match &opts.compute {
+            Compute::Native => (Arc::new(NativeEngine::new()), Backend::Native),
+            Compute::Pjrt { artifacts } => (
+                Arc::new(
+                    PjrtEngine::open(artifacts).map_err(|e| ApiError::Engine(format!("{e:#}")))?,
+                ),
+                Backend::Pjrt,
+            ),
+        };
+        let pass = ShardedPass::new(
+            store,
+            chunk_engine,
+            ShardedPassConfig {
+                workers: opts.workers,
+                chunk_rows: opts.chunk_rows,
+                cache_shards: opts.cache_shards,
+                ..Default::default()
+            },
+        );
+        let metrics = Arc::clone(&pass.metrics);
+        Ok(Engine {
+            inner: Box::new(pass),
+            backend,
+            metrics: Some(metrics),
+        })
+    }
+
+    /// Parse a one-line engine spec. Grammar:
+    ///
+    /// ```text
+    /// inmemory:<shard_dir>                 load all shards into core
+    /// native:<shard_dir>[?opts]            coordinator + native chunks
+    /// pjrt:<shard_dir>@<artifacts>[?opts]  coordinator + AOT XLA chunks
+    /// opts: workers=N & chunk=N & cache=true|false
+    /// ```
+    ///
+    /// Example: `native:work/shards?workers=4&chunk=256`.
+    pub fn from_spec(spec: &str) -> Result<Engine, ApiError> {
+        let (kind, rest) = spec
+            .split_once(':')
+            .ok_or_else(|| ApiError::EngineSpec(format!("'{spec}' has no '<backend>:' prefix")))?;
+        let (target, query) = match rest.split_once('?') {
+            Some((t, q)) => (t, Some(q)),
+            None => (rest, None),
+        };
+        let mut opts = ShardedOpts::default();
+        if let Some(q) = query {
+            for pair in q.split('&').filter(|p| !p.is_empty()) {
+                let (key, val) = pair.split_once('=').ok_or_else(|| {
+                    ApiError::EngineSpec(format!("option '{pair}' is not key=value"))
+                })?;
+                let bad =
+                    |k: &str| ApiError::EngineSpec(format!("option '{k}' has a bad value '{val}'"));
+                match key {
+                    "workers" => opts.workers = val.parse().map_err(|_| bad(key))?,
+                    "chunk" => opts.chunk_rows = val.parse().map_err(|_| bad(key))?,
+                    "cache" => opts.cache_shards = val.parse().map_err(|_| bad(key))?,
+                    other => {
+                        return Err(ApiError::EngineSpec(format!(
+                            "unknown option '{other}' (expected workers|chunk|cache)"
+                        )))
+                    }
+                }
+            }
+        }
+        match kind {
+            "inmemory" => {
+                if query.is_some() {
+                    return Err(ApiError::EngineSpec(
+                        "inmemory specs take no ?options (workers/chunk/cache are \
+                         coordinator settings)"
+                            .to_string(),
+                    ));
+                }
+                let store = ShardStore::open(Path::new(target)).map_err(ApiError::Engine)?;
+                let chunk = store.load_all().map_err(ApiError::Engine)?;
+                Ok(Engine::in_memory(chunk))
+            }
+            "native" => Engine::sharded(Path::new(target), opts),
+            "pjrt" => {
+                let (shards, artifacts) = target.split_once('@').ok_or_else(|| {
+                    ApiError::EngineSpec(
+                        "pjrt spec needs '<shard_dir>@<artifacts_dir>'".to_string(),
+                    )
+                })?;
+                opts.compute = Compute::Pjrt {
+                    artifacts: PathBuf::from(artifacts),
+                };
+                Engine::sharded(Path::new(shards), opts)
+            }
+            other => Err(ApiError::EngineSpec(format!(
+                "unknown backend '{other}' (expected inmemory|native|pjrt)"
+            ))),
+        }
+    }
+
+    /// Engine for a generated experiment workload's training split. Sharded
+    /// backends write the shards under `workdir` first (reused if already
+    /// present); the PJRT backend loads artifacts from `./artifacts`.
+    pub fn for_workload(
+        workload: &Workload,
+        backend: Backend,
+        workdir: &Path,
+        workers: usize,
+        chunk_rows: usize,
+    ) -> Result<Engine, ApiError> {
+        match backend {
+            Backend::InMemory => Ok(Engine::in_memory(workload.train.clone())),
+            Backend::Native | Backend::Pjrt => {
+                let dir = workdir.join(format!(
+                    "shards_n{}_d{}_s{}",
+                    workload.train.rows(),
+                    workload.scale.dims,
+                    workload.scale.seed
+                ));
+                if ShardStore::open(&dir).is_err() {
+                    let mut writer = ShardWriter::create(&dir, 4 * chunk_rows)?;
+                    writer.write_dataset(&workload.train.a, &workload.train.b)?;
+                }
+                let compute = match backend {
+                    Backend::Pjrt => Compute::Pjrt {
+                        artifacts: PathBuf::from("artifacts"),
+                    },
+                    _ => Compute::Native,
+                };
+                Engine::sharded(
+                    &dir,
+                    ShardedOpts {
+                        workers,
+                        chunk_rows,
+                        compute,
+                        ..Default::default()
+                    },
+                )
+            }
+        }
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Coordinator metrics, when this engine is sharded.
+    pub fn metrics(&self) -> Option<&Arc<Metrics>> {
+        self.metrics.as_ref()
+    }
+
+    /// (n, da, db) of the underlying dataset.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        self.inner.dims()
+    }
+}
+
+impl PassEngine for Engine {
+    fn dims(&self) -> (usize, usize, usize) {
+        self.inner.dims()
+    }
+
+    fn power_pass(&mut self, qa: &Mat, qb: &Mat) -> (Mat, Mat) {
+        self.inner.power_pass(qa, qb)
+    }
+
+    fn final_pass(&mut self, qa: &Mat, qb: &Mat) -> (Mat, Mat, Mat) {
+        self.inner.final_pass(qa, qb)
+    }
+
+    fn gram_traces(&mut self) -> (f64, f64) {
+        self.inner.gram_traces()
+    }
+
+    fn passes(&self) -> usize {
+        self.inner.passes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::util::rng::Rng;
+
+    fn dataset(n: usize, dims: usize) -> TwoViewChunk {
+        let d = SynthParl::generate(SynthParlConfig {
+            n,
+            dims,
+            topics: 4,
+            words_per_topic: 8,
+            background_words: 16,
+            mean_len: 6.0,
+            seed: 31,
+            ..Default::default()
+        });
+        TwoViewChunk { a: d.a, b: d.b }
+    }
+
+    #[test]
+    fn backend_parses_and_rejects() {
+        assert_eq!("inmemory".parse::<Backend>().unwrap(), Backend::InMemory);
+        assert_eq!("native".parse::<Backend>().unwrap(), Backend::Native);
+        assert_eq!("pjrt".parse::<Backend>().unwrap(), Backend::Pjrt);
+        assert!(matches!(
+            "hadoop".parse::<Backend>(),
+            Err(ApiError::EngineSpec(_))
+        ));
+    }
+
+    #[test]
+    fn in_memory_engine_implements_pass_contract() {
+        let chunk = dataset(120, 32);
+        let mut eng = Engine::in_memory(chunk.clone());
+        assert_eq!(eng.dims(), (120, 32, 32));
+        assert_eq!(eng.backend(), Backend::InMemory);
+        assert!(eng.metrics().is_none());
+        let mut rng = Rng::new(1);
+        let q = Mat::randn(32, 3, &mut rng);
+        let mut reference = InMemoryPass::new(chunk);
+        let (ya, _) = eng.power_pass(&q, &q);
+        let (ry, _) = reference.power_pass(&q, &q);
+        assert!(ya.rel_diff(&ry) < 1e-14);
+        assert_eq!(eng.passes(), 1);
+    }
+
+    #[test]
+    fn sharded_and_spec_construction_agree_with_in_memory() {
+        let chunk = dataset(300, 48);
+        let dir = std::env::temp_dir().join("rcca_api_engine_sharded");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = ShardWriter::create(&dir, 64).unwrap();
+        w.write_dataset(&chunk.a, &chunk.b).unwrap();
+
+        let mut via_ctor = Engine::sharded(
+            &dir,
+            ShardedOpts {
+                workers: 2,
+                chunk_rows: 40,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(via_ctor.backend(), Backend::Native);
+        assert!(via_ctor.metrics().is_some());
+
+        let spec = format!("native:{}?workers=2&chunk=40", dir.display());
+        let mut via_spec = Engine::from_spec(&spec).unwrap();
+        let spec_mem = format!("inmemory:{}", dir.display());
+        let mut via_mem = Engine::from_spec(&spec_mem).unwrap();
+        assert_eq!(via_mem.backend(), Backend::InMemory);
+
+        let mut rng = Rng::new(2);
+        let q = Mat::randn(48, 4, &mut rng);
+        let mut inmem = Engine::in_memory(chunk);
+        let (want, _) = inmem.power_pass(&q, &q);
+        for eng in [&mut via_ctor, &mut via_spec, &mut via_mem] {
+            let (got, _) = eng.power_pass(&q, &q);
+            assert!(got.rel_diff(&want) < 1e-5, "{}", got.rel_diff(&want));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_specs_are_typed_errors() {
+        for bad in [
+            "nocolon",
+            "hadoop:/tmp/x",
+            "native:/nonexistent/rcca_dir",
+            "pjrt:/tmp/missing-at-separator",
+            "native:/tmp?workers",
+            "native:/tmp?workers=abc",
+            "native:/tmp?bogus=1",
+            "inmemory:/tmp?workers=2",
+        ] {
+            let err = Engine::from_spec(bad).unwrap_err();
+            assert!(
+                matches!(err, ApiError::EngineSpec(_) | ApiError::Engine(_)),
+                "{bad} -> {err}"
+            );
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! # `rcca::api` — the session layer: builder → fit → [`FittedModel`].
+//!
+//! The paper pitches RandomizedCCA as a *system*: a two-pass fitter over
+//! out-of-core or distributed data that doubles as "an excellent
+//! initializer for standard iterative solutions". This module is the single
+//! entry point to that system, so the CLI, the experiment harnesses, the
+//! examples, and the benches all consume the same three pieces instead of
+//! hand-wiring configs, engines, and warm-start plumbing:
+//!
+//! 1. [`Cca::builder`] — fluent, eagerly-validated configuration
+//!    (`Cca::builder().k(60).oversample(100).power_iters(1).nu(1e-2)`),
+//!    with solver selection ([`Solver::Randomized`] or
+//!    [`Solver::Horst`], whose `warm_start` internally chains
+//!    `RandomizedCca::fit_with_bases` into `Horst::fit_from`);
+//! 2. [`Engine`] — one constructor family over every compute path:
+//!    [`Engine::in_memory`], [`Engine::sharded`], [`Engine::from_spec`],
+//!    and [`Engine::for_workload`] for generated experiment workloads;
+//! 3. [`FittedModel`] — the inference surface a fitted model was missing:
+//!    `transform_a`/`transform_b` for projecting new CSR data into the
+//!    canonical space, `correlations()`, `objective()`, and a JSON
+//!    `save`/`load` round-trip so a model is usable outside the process
+//!    that trained it.
+//!
+//! ```no_run
+//! use rcca::api::{Cca, Engine};
+//! use rcca::data::synthparl::{SynthParl, SynthParlConfig};
+//! use rcca::data::TwoViewChunk;
+//!
+//! let corpus = SynthParl::generate(SynthParlConfig { n: 5_000, dims: 1024, ..Default::default() });
+//! let mut engine = Engine::in_memory(TwoViewChunk { a: corpus.a, b: corpus.b });
+//! let model = Cca::builder().k(16).oversample(64).power_iters(1).nu(1e-2).fit(&mut engine)?;
+//! model.save(std::path::Path::new("model.json"))?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod builder;
+pub mod engine;
+pub mod model;
+
+pub use builder::{Cca, CcaBuilder, Solver};
+pub use engine::{Backend, Compute, Engine, ShardedOpts};
+pub use model::FittedModel;
+
+use crate::cca::pass::PassEngine;
+use crate::cca::scale_free_lambda;
+use crate::sparse::Csr;
+use std::fmt;
+
+/// Typed error surface of the API layer. Converts into `anyhow::Error` at
+/// the CLI boundary; library callers can match on the variants.
+#[derive(Debug)]
+pub enum ApiError {
+    /// A configuration value is invalid on its own (k = 0, λ ≤ 0, …).
+    InvalidConfig(String),
+    /// Both ν and an explicit (λa, λb) were supplied to the builder.
+    LambdaConflict,
+    /// The requested sketch width does not fit the data:
+    /// k + p > min(da, db). Surfaced at entry instead of a panic deep in
+    /// the dense SVD/QR kernels.
+    RankTooLarge { k: usize, p: usize, min_dim: usize },
+    /// A dimension disagreement between a model and supplied data.
+    DimensionMismatch { expected: usize, got: usize },
+    /// An engine spec string could not be parsed.
+    EngineSpec(String),
+    /// Engine construction failed (missing shards, bad manifest, …).
+    Engine(String),
+    /// The underlying solver reported an error.
+    Solver(String),
+    /// Model (de)serialization found a malformed document.
+    Model(String),
+    /// Filesystem failure while saving/loading.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::InvalidConfig(m) => write!(f, "invalid configuration: {m}"),
+            ApiError::LambdaConflict => write!(
+                f,
+                "conflicting regularization: both nu() and lambda() were set — pick one"
+            ),
+            ApiError::RankTooLarge { k, p, min_dim } => write!(
+                f,
+                "k + p = {} exceeds min(da, db) = {min_dim}: the sketch cannot be wider \
+                 than the views (reduce k or oversampling)",
+                k + p
+            ),
+            ApiError::DimensionMismatch { expected, got } => {
+                write!(f, "dimension mismatch: expected {expected} columns, got {got}")
+            }
+            ApiError::EngineSpec(m) => write!(f, "bad engine spec: {m}"),
+            ApiError::Engine(m) => write!(f, "engine: {m}"),
+            ApiError::Solver(m) => write!(f, "solver: {m}"),
+            ApiError::Model(m) => write!(f, "model: {m}"),
+            ApiError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ApiError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ApiError {
+    fn from(e: std::io::Error) -> ApiError {
+        ApiError::Io(e)
+    }
+}
+
+/// Ridge regularization, resolved in exactly one place.
+///
+/// The paper's §4 parameterizes regularization scale-free as
+/// `λ = ν·tr(AᵀA)/d` (and analogously for B); some call sites historically
+/// passed ν, others a precomputed λ. Every λ in the system now flows
+/// through this type: [`Lambda::Nu`] resolves against the data (via the
+/// engine's cached gram traces, or directly from CSR views), while
+/// [`Lambda::Explicit`] passes through unchanged.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Lambda {
+    /// Scale-free ν (paper §4): λ = ν·tr(AᵀA)/d per view.
+    Nu(f64),
+    /// Explicit per-view ridge values.
+    Explicit { lambda_a: f64, lambda_b: f64 },
+}
+
+impl Lambda {
+    pub fn explicit(lambda_a: f64, lambda_b: f64) -> Lambda {
+        Lambda::Explicit { lambda_a, lambda_b }
+    }
+
+    /// Resolve against a pass engine. `Nu` reads the engine's gram traces —
+    /// one data pass the first time, cached afterwards (both engine
+    /// implementations cache).
+    pub fn resolve<E: PassEngine + ?Sized>(&self, engine: &mut E) -> (f64, f64) {
+        match *self {
+            Lambda::Explicit { lambda_a, lambda_b } => (lambda_a, lambda_b),
+            Lambda::Nu(nu) => {
+                let (_, da, db) = engine.dims();
+                let (ta, tb) = engine.gram_traces();
+                (scale_free_lambda(nu, ta, da), scale_free_lambda(nu, tb, db))
+            }
+        }
+    }
+
+    /// Resolve directly from in-memory CSR views, without touching a pass
+    /// ledger (used by workload setup so λ resolution never perturbs the
+    /// pass counts the experiments report).
+    pub fn resolve_views(&self, a: &Csr, b: &Csr) -> (f64, f64) {
+        match *self {
+            Lambda::Explicit { lambda_a, lambda_b } => (lambda_a, lambda_b),
+            Lambda::Nu(nu) => (
+                scale_free_lambda(nu, a.gram_trace(), a.cols),
+                scale_free_lambda(nu, b.gram_trace(), b.cols),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cca::pass::InMemoryPass;
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::data::TwoViewChunk;
+
+    fn chunk() -> TwoViewChunk {
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 200,
+            dims: 48,
+            topics: 4,
+            words_per_topic: 8,
+            background_words: 16,
+            mean_len: 6.0,
+            seed: 9,
+            ..Default::default()
+        });
+        TwoViewChunk { a: d.a, b: d.b }
+    }
+
+    #[test]
+    fn explicit_lambda_passes_through_without_a_pass() {
+        let mut eng = InMemoryPass::new(chunk());
+        let (la, lb) = Lambda::explicit(0.25, 0.5).resolve(&mut eng);
+        assert_eq!((la, lb), (0.25, 0.5));
+        assert_eq!(eng.passes(), 0, "explicit λ must not touch the data");
+    }
+
+    #[test]
+    fn nu_resolution_matches_scale_free_formula() {
+        let ch = chunk();
+        let want_a = scale_free_lambda(0.02, ch.a.gram_trace(), ch.a.cols);
+        let want_b = scale_free_lambda(0.02, ch.b.gram_trace(), ch.b.cols);
+        let (va, vb) = Lambda::Nu(0.02).resolve_views(&ch.a, &ch.b);
+        assert_eq!((va, vb), (want_a, want_b));
+        let mut eng = InMemoryPass::new(ch);
+        let (ea, eb) = Lambda::Nu(0.02).resolve(&mut eng);
+        assert!((ea - want_a).abs() < 1e-12 && (eb - want_b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn errors_display_actionably() {
+        let e = ApiError::RankTooLarge { k: 60, p: 100, min_dim: 64 };
+        let s = format!("{e}");
+        assert!(s.contains("160") && s.contains("64"), "{s}");
+        assert!(format!("{}", ApiError::LambdaConflict).contains("nu()"));
+    }
+}

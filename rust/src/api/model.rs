@@ -1,0 +1,393 @@
+//! [`FittedModel`]: the inference surface of a fitted CCA model —
+//! projection of new data into the canonical space, evaluation, and a JSON
+//! save/load round-trip so a model is usable outside the process that
+//! trained it (the serializer emits shortest-round-trip decimals, so
+//! load(save(m)) reproduces every coefficient bitwise).
+
+use super::ApiError;
+use crate::cca::horst::HorstTrace;
+use crate::cca::objective::{evaluate, feasibility, Feasibility, Objective};
+use crate::cca::pass::PassEngine;
+use crate::cca::CcaModel;
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+use crate::util::json::{jarr, jnum, jstr, Json};
+use std::path::Path;
+
+const FORMAT: &str = "rcca-model-v1";
+
+/// A fitted CCA model plus everything needed to use it later: the per-view
+/// projections, the regularizers it was fitted with, and (for iterative
+/// solvers) the convergence trace.
+#[derive(Debug, Clone)]
+pub struct FittedModel {
+    model: CcaModel,
+    /// Ridge values the model was fitted with (feasibility needs them).
+    pub lambda_a: f64,
+    pub lambda_b: f64,
+    /// Which solver produced it: "randomized", "horst", or "horst+rcca".
+    pub solver: String,
+    /// Data passes consumed before Horst iteration began — the warm-start
+    /// initializer plus any ν resolution (0 for other solvers).
+    pub init_passes: usize,
+    /// Per-iteration (passes, objective) trace for Horst solvers.
+    pub trace: Option<Vec<HorstTrace>>,
+    /// Data passes this fit consumed (λ resolution + initializer + solver),
+    /// measured as the engine-ledger delta across `Cca::fit`.
+    fit_passes: usize,
+}
+
+impl FittedModel {
+    pub(crate) fn new(model: CcaModel, lambda_a: f64, lambda_b: f64, solver: &str) -> FittedModel {
+        FittedModel {
+            model,
+            lambda_a,
+            lambda_b,
+            solver: solver.to_string(),
+            init_passes: 0,
+            trace: None,
+            fit_passes: 0,
+        }
+    }
+
+    pub(crate) fn with_trace(mut self, trace: Vec<HorstTrace>) -> FittedModel {
+        self.trace = Some(trace);
+        self
+    }
+
+    pub(crate) fn with_init_passes(mut self, passes: usize) -> FittedModel {
+        self.init_passes = passes;
+        self
+    }
+
+    pub(crate) fn with_fit_passes(mut self, passes: usize) -> FittedModel {
+        self.fit_passes = passes;
+        self
+    }
+
+    pub fn k(&self) -> usize {
+        self.model.k()
+    }
+
+    /// Estimated canonical correlations (length k, descending).
+    pub fn correlations(&self) -> &[f64] {
+        &self.model.sigma
+    }
+
+    pub fn sum_correlations(&self) -> f64 {
+        self.model.sum_correlations()
+    }
+
+    /// Data passes this fit consumed — λ resolution, any warm-start
+    /// initializer, and the solver itself. Measured as the engine-ledger
+    /// delta across `Cca::fit`, so it stays correct when an engine is
+    /// reused for several fits or evaluations.
+    pub fn passes(&self) -> usize {
+        self.fit_passes
+    }
+
+    pub fn solver(&self) -> &str {
+        &self.solver
+    }
+
+    /// da × k projection for view A.
+    pub fn xa(&self) -> &Mat {
+        &self.model.xa
+    }
+
+    /// db × k projection for view B.
+    pub fn xb(&self) -> &Mat {
+        &self.model.xb
+    }
+
+    pub fn model(&self) -> &CcaModel {
+        &self.model
+    }
+
+    pub fn into_model(self) -> CcaModel {
+        self.model
+    }
+
+    /// Project view-A rows (n × da CSR) into the canonical space → n × k.
+    pub fn transform_a(&self, a: &Csr) -> Result<Mat, ApiError> {
+        if a.cols != self.model.xa.rows {
+            return Err(ApiError::DimensionMismatch {
+                expected: self.model.xa.rows,
+                got: a.cols,
+            });
+        }
+        Ok(a.times_mat(&self.model.xa))
+    }
+
+    /// Project view-B rows (n × db CSR) into the canonical space → n × k.
+    pub fn transform_b(&self, b: &Csr) -> Result<Mat, ApiError> {
+        if b.cols != self.model.xb.rows {
+            return Err(ApiError::DimensionMismatch {
+                expected: self.model.xb.rows,
+                got: b.cols,
+            });
+        }
+        Ok(b.times_mat(&self.model.xb))
+    }
+
+    /// Objective `(1/n)·Tr(XaᵀAᵀBXb)` on the engine's dataset (one data
+    /// pass). Works for held-out data by constructing an engine over the
+    /// test split.
+    pub fn objective<E: PassEngine + ?Sized>(&self, engine: &mut E) -> Objective {
+        evaluate(&self.model, engine)
+    }
+
+    /// KKT feasibility diagnostics under the λ this model was fitted with.
+    pub fn feasibility<E: PassEngine + ?Sized>(&self, engine: &mut E) -> Feasibility {
+        feasibility(&self.model, engine, self.lambda_a, self.lambda_b)
+    }
+
+    /// Serialize to the JSON model document (`rcca-model-v1`).
+    pub fn to_json(&self) -> Json {
+        let flat = |m: &Mat| jarr(m.data.iter().map(|&v| jnum(v)).collect());
+        let mut o = Json::obj();
+        o.set("format", jstr(FORMAT))
+            .set("solver", jstr(&self.solver))
+            .set("k", jnum(self.model.k() as f64))
+            .set("da", jnum(self.model.xa.rows as f64))
+            .set("db", jnum(self.model.xb.rows as f64))
+            .set("lambda_a", jnum(self.lambda_a))
+            .set("lambda_b", jnum(self.lambda_b))
+            .set("passes", jnum(self.fit_passes as f64))
+            .set("init_passes", jnum(self.init_passes as f64))
+            .set(
+                "sigma",
+                jarr(self.model.sigma.iter().map(|&s| jnum(s)).collect()),
+            )
+            .set("xa", flat(&self.model.xa))
+            .set("xb", flat(&self.model.xb));
+        o
+    }
+
+    /// Deserialize a `rcca-model-v1` document.
+    pub fn from_json(doc: &Json) -> Result<FittedModel, ApiError> {
+        let bad = |m: &str| ApiError::Model(m.to_string());
+        let format = doc
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing 'format'"))?;
+        if format != FORMAT {
+            return Err(ApiError::Model(format!(
+                "unsupported model format '{format}' (expected '{FORMAT}')"
+            )));
+        }
+        let get_usize = |k: &str| {
+            doc.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| ApiError::Model(format!("missing or non-integer '{k}'")))
+        };
+        let get_f64 = |k: &str| {
+            doc.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| ApiError::Model(format!("missing or non-numeric '{k}'")))
+        };
+        let get_vec = |k: &str, want_len: usize| -> Result<Vec<f64>, ApiError> {
+            let arr = doc
+                .get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| ApiError::Model(format!("missing array '{k}'")))?;
+            if arr.len() != want_len {
+                return Err(ApiError::Model(format!(
+                    "'{k}' has {} entries, expected {want_len}",
+                    arr.len()
+                )));
+            }
+            arr.iter()
+                .map(|v| {
+                    v.as_f64().filter(|x| x.is_finite()).ok_or_else(|| {
+                        ApiError::Model(format!("'{k}' contains a non-finite entry"))
+                    })
+                })
+                .collect()
+        };
+
+        let k = get_usize("k")?;
+        let da = get_usize("da")?;
+        let db = get_usize("db")?;
+        if k == 0 || da == 0 || db == 0 {
+            return Err(bad("k/da/db must be positive"));
+        }
+        let sigma = get_vec("sigma", k)?;
+        let xa = Mat::from_vec(da, k, get_vec("xa", da * k)?);
+        let xb = Mat::from_vec(db, k, get_vec("xb", db * k)?);
+        let solver = doc
+            .get("solver")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing 'solver'"))?
+            .to_string();
+        let fit_passes = get_usize("passes")?;
+        Ok(FittedModel {
+            model: CcaModel {
+                xa,
+                xb,
+                sigma,
+                passes: fit_passes,
+            },
+            lambda_a: get_f64("lambda_a")?,
+            lambda_b: get_f64("lambda_b")?,
+            solver,
+            init_passes: get_usize("init_passes")?,
+            trace: None,
+            fit_passes,
+        })
+    }
+
+    /// Write the model document (pretty JSON) to `path`, creating parent
+    /// directories as needed. Refuses non-finite coefficients up front: the
+    /// JSON encoder would emit them as `null`, producing a document that
+    /// [`FittedModel::load`] rejects long after the fitting process is gone.
+    pub fn save(&self, path: &Path) -> Result<(), ApiError> {
+        let finite = self
+            .model
+            .sigma
+            .iter()
+            .chain(self.model.xa.data.iter())
+            .chain(self.model.xb.data.iter())
+            .all(|v| v.is_finite())
+            && self.lambda_a.is_finite()
+            && self.lambda_b.is_finite();
+        if !finite {
+            return Err(ApiError::Model(
+                "refusing to save: model contains non-finite coefficients".to_string(),
+            ));
+        }
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Load a model document written by [`FittedModel::save`].
+    pub fn load(path: &Path) -> Result<FittedModel, ApiError> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = crate::util::json::parse(&text)
+            .map_err(|e| ApiError::Model(format!("{}: {e}", path.display())))?;
+        FittedModel::from_json(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Cca, Engine};
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::data::TwoViewChunk;
+
+    fn fitted() -> (FittedModel, TwoViewChunk) {
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 300,
+            dims: 64,
+            topics: 6,
+            words_per_topic: 10,
+            background_words: 24,
+            mean_len: 8.0,
+            seed: 55,
+            ..Default::default()
+        });
+        let chunk = TwoViewChunk { a: d.a, b: d.b };
+        let mut eng = Engine::in_memory(chunk.clone());
+        let model = Cca::builder()
+            .k(4)
+            .oversample(12)
+            .power_iters(1)
+            .lambda(0.05, 0.05)
+            .seed(5)
+            .fit(&mut eng)
+            .unwrap();
+        (model, chunk)
+    }
+
+    #[test]
+    fn json_roundtrip_is_bitwise_exact() {
+        let (m, _) = fitted();
+        let doc = m.to_json().to_string_pretty();
+        let back = FittedModel::from_json(&crate::util::json::parse(&doc).unwrap()).unwrap();
+        assert_eq!(back.xa(), m.xa());
+        assert_eq!(back.xb(), m.xb());
+        assert_eq!(back.correlations(), m.correlations());
+        assert_eq!(back.lambda_a, m.lambda_a);
+        assert_eq!(back.passes(), m.passes());
+        assert_eq!(back.solver(), m.solver());
+    }
+
+    #[test]
+    fn transform_shapes_and_dim_checks() {
+        let (m, chunk) = fitted();
+        let ea = m.transform_a(&chunk.a).unwrap();
+        assert_eq!((ea.rows, ea.cols), (chunk.rows(), m.k()));
+        let eb = m.transform_b(&chunk.b).unwrap();
+        assert_eq!((eb.rows, eb.cols), (chunk.rows(), m.k()));
+        // Wrong width is a typed error, not a panic.
+        let narrow = crate::sparse::Csr {
+            rows: 10,
+            cols: 32,
+            indptr: vec![0; 11],
+            indices: vec![],
+            values: vec![],
+        };
+        assert!(matches!(
+            m.transform_a(&narrow),
+            Err(ApiError::DimensionMismatch { expected: 64, got: 32 })
+        ));
+    }
+
+    #[test]
+    fn malformed_documents_are_rejected() {
+        let (m, _) = fitted();
+        let mut doc = m.to_json();
+        doc.set("format", jstr("rcca-model-v999"));
+        assert!(matches!(
+            FittedModel::from_json(&doc),
+            Err(ApiError::Model(_))
+        ));
+        let mut doc = m.to_json();
+        doc.set("sigma", jarr(vec![jnum(0.5)])); // wrong length
+        assert!(FittedModel::from_json(&doc).is_err());
+        let mut doc = m.to_json();
+        doc.set("xa", jarr(vec![jnum(f64::NAN); 64 * 4])); // NaN → null → rejected
+        assert!(FittedModel::from_json(&doc).is_err());
+        let mut doc = m.to_json();
+        if let Json::Obj(map) = &mut doc {
+            map.remove("solver"); // loader is fail-closed on every field
+        }
+        assert!(FittedModel::from_json(&doc).is_err());
+        assert!(matches!(
+            FittedModel::from_json(&Json::obj()),
+            Err(ApiError::Model(_))
+        ));
+    }
+
+    #[test]
+    fn save_refuses_non_finite_models() {
+        let (mut m, _) = fitted();
+        m.model.xa.data[0] = f64::NAN;
+        let path = std::env::temp_dir().join("rcca_api_model_nan.json");
+        let _ = std::fs::remove_file(&path);
+        let err = m.save(&path).unwrap_err();
+        assert!(matches!(err, ApiError::Model(_)), "{err}");
+        assert!(!path.exists(), "nothing must be written for a bad model");
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let (m, chunk) = fitted();
+        let dir = std::env::temp_dir().join("rcca_api_model");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested").join("model.json");
+        m.save(&path).unwrap();
+        let back = FittedModel::load(&path).unwrap();
+        let want = m.transform_a(&chunk.a).unwrap();
+        let got = back.transform_a(&chunk.a).unwrap();
+        assert_eq!(got, want, "projections must round-trip bitwise");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(FittedModel::load(&path).is_err(), "missing file is Io error");
+    }
+}

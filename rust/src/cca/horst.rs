@@ -76,7 +76,10 @@ impl Horst {
     }
 
     /// Fit with a Gaussian random initializer (the paper's default).
-    pub fn fit<E: PassEngine + ?Sized>(&self, engine: &mut E) -> Result<(CcaModel, Vec<HorstTrace>)> {
+    pub fn fit<E: PassEngine + ?Sized>(
+        &self,
+        engine: &mut E,
+    ) -> Result<(CcaModel, Vec<HorstTrace>)> {
         let (_, da, db) = engine.dims();
         let mut rng = Rng::new(self.config.seed);
         let xa0 = Mat::randn(da, self.config.k, &mut rng);
@@ -137,6 +140,10 @@ impl Horst {
             // Rayleigh–Ritz over this subspace makes the objective monotone
             // (with `augment`) and the preconditioned direction restores the
             // inverse-covariance geometry of the exact Horst update.
+            // The augmented block can reach 3k columns; when that exceeds
+            // the view dimension the span is the whole space anyway, so cap
+            // at d columns (Y first — it carries the new directions) instead
+            // of letting the thin-QR kernel panic on a wide input.
             let build_basis = |y: &Mat, x: &Mat, dir: Option<Mat>| -> Mat {
                 let mut m = y.clone();
                 if cfg.augment {
@@ -144,6 +151,9 @@ impl Horst {
                 }
                 if let Some(d) = dir {
                     m = m.hcat(&d);
+                }
+                if m.cols > m.rows {
+                    m = m.cols_range(0, m.rows);
                 }
                 orth(&m)
             };
@@ -394,6 +404,24 @@ mod tests {
             "should stop early, used {}",
             trace.last().unwrap().passes
         );
+    }
+
+    #[test]
+    fn wide_augmented_basis_is_capped_not_a_panic() {
+        // k = 12 on d = 24: the augmented basis (Y | X | precond·Y) reaches
+        // 36 columns — wider than the view dimension. Must fit cleanly.
+        let mut eng = InMemoryPass::new(dataset(300, 24, 13));
+        let (model, trace) = Horst::new(HorstConfig {
+            k: 12,
+            lambda_a: 0.1,
+            lambda_b: 0.1,
+            pass_budget: 12,
+            ..Default::default()
+        })
+        .fit(&mut eng)
+        .unwrap();
+        assert_eq!(model.k(), 12);
+        assert!(trace.len() >= 3, "capping must not stop iteration");
     }
 
     #[test]

@@ -2,10 +2,8 @@
 //! with the Horst-120-pass result as the dashed reference line.
 
 use super::Workload;
+use crate::api::{Cca, Solver};
 use crate::bench::Report;
-use crate::cca::horst::{Horst, HorstConfig};
-use crate::cca::objective::evaluate;
-use crate::cca::rcca::{RandomizedCca, RccaConfig};
 
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
@@ -35,17 +33,15 @@ pub fn run(
     for &q in qs {
         for &p in ps {
             let mut eng = workload.train_engine();
-            let model = RandomizedCca::new(RccaConfig {
-                k,
-                p,
-                q,
-                lambda_a: la,
-                lambda_b: lb,
-                seed: workload.scale.seed ^ ((q as u64) << 32 | p as u64),
-            })
-            .fit(&mut eng)?;
-            let passes = model.passes;
-            let obj = evaluate(&model, &mut eng).sum_corr;
+            let model = Cca::builder()
+                .k(k)
+                .oversample(p)
+                .power_iters(q)
+                .lambda(la, lb)
+                .seed(workload.scale.seed ^ ((q as u64) << 32 | p as u64))
+                .fit(&mut eng)?;
+            let passes = model.passes();
+            let obj = model.objective(&mut eng).sum_corr;
             points.push(SweepPoint {
                 q,
                 p,
@@ -55,19 +51,16 @@ pub fn run(
         }
     }
     let mut eng = workload.train_engine();
-    let (hm, _) = Horst::new(HorstConfig {
-        k,
-        lambda_a: la,
-        lambda_b: lb,
-        pass_budget: horst_pass_budget,
-        augment: true,
-        seed: workload.scale.seed ^ 0x4057,
-        tol: 0.0,
-    })
-    .fit(&mut eng)?;
+    let horst = Cca::builder()
+        .k(k)
+        .lambda(la, lb)
+        .solver(Solver::Horst { warm_start: false })
+        .pass_budget(horst_pass_budget)
+        .horst_seed(workload.scale.seed ^ 0x4057)
+        .fit(&mut eng)?;
     Ok(SweepResult {
         points,
-        horst_objective: hm.sum_correlations(),
+        horst_objective: horst.sum_correlations(),
         horst_passes: horst_pass_budget,
     })
 }

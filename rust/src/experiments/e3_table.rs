@@ -5,10 +5,8 @@
 //! (paper: 120 → 34).
 
 use super::Workload;
+use crate::api::{Cca, Solver};
 use crate::bench::Report;
-use crate::cca::horst::{Horst, HorstConfig};
-use crate::cca::objective::evaluate;
-use crate::cca::rcca::{RandomizedCca, RccaConfig};
 use crate::util::timer::Timer;
 
 #[derive(Debug, Clone)]
@@ -65,19 +63,17 @@ pub fn run(workload: &Workload, cfg: &TableConfig) -> anyhow::Result<TableResult
         for &p in &cfg.ps {
             let mut eng = workload.train_engine();
             let t = Timer::start();
-            let model = RandomizedCca::new(RccaConfig {
-                k,
-                p,
-                q,
-                lambda_a: la,
-                lambda_b: lb,
-                seed: workload.scale.seed ^ ((q as u64) << 40 | p as u64),
-            })
-            .fit(&mut eng)?;
+            let model = Cca::builder()
+                .k(k)
+                .oversample(p)
+                .power_iters(q)
+                .lambda(la, lb)
+                .seed(workload.scale.seed ^ ((q as u64) << 40 | p as u64))
+                .fit(&mut eng)?;
             let secs = t.secs();
-            let passes = model.passes;
-            let train = evaluate(&model, &mut eng).sum_corr;
-            let test = evaluate(&model, &mut workload.test_engine()).sum_corr;
+            let passes = model.passes();
+            let train = model.objective(&mut eng).sum_corr;
+            let test = model.objective(&mut workload.test_engine()).sum_corr;
             rows.push(TableRow {
                 label: "rcca".into(),
                 q: Some(q),
@@ -91,23 +87,22 @@ pub fn run(workload: &Workload, cfg: &TableConfig) -> anyhow::Result<TableResult
     }
 
     // Horst (same ν).
-    let run_horst = |nu: f64, seed: u64| -> anyhow::Result<(TableRow, Vec<crate::cca::horst::HorstTrace>)> {
+    type HorstRun = anyhow::Result<(TableRow, Vec<crate::cca::horst::HorstTrace>)>;
+    let run_horst = |nu: f64, seed: u64| -> HorstRun {
         let (ha, hb) = workload.lambdas(nu);
         let mut eng = workload.train_engine();
         let t = Timer::start();
-        let (model, trace) = Horst::new(HorstConfig {
-            k,
-            lambda_a: ha,
-            lambda_b: hb,
-            pass_budget: cfg.horst_budget,
-            augment: true,
-            seed,
-            tol: 0.0,
-        })
-        .fit(&mut eng)?;
+        let model = Cca::builder()
+            .k(k)
+            .lambda(ha, hb)
+            .solver(Solver::Horst { warm_start: false })
+            .pass_budget(cfg.horst_budget)
+            .horst_seed(seed)
+            .fit(&mut eng)?;
         let secs = t.secs();
-        let train = evaluate(&model, &mut eng).sum_corr;
-        let test = evaluate(&model, &mut workload.test_engine()).sum_corr;
+        let train = model.objective(&mut eng).sum_corr;
+        let test = model.objective(&mut workload.test_engine()).sum_corr;
+        let trace = model.trace.clone().unwrap_or_default();
         Ok((
             TableRow {
                 label: format!("Horst (nu={nu})"),
@@ -116,7 +111,7 @@ pub fn run(workload: &Workload, cfg: &TableConfig) -> anyhow::Result<TableResult
                 train,
                 test,
                 secs,
-                passes: model.passes,
+                passes: model.passes(),
             },
             trace,
         ))
@@ -139,32 +134,25 @@ pub fn run(workload: &Workload, cfg: &TableConfig) -> anyhow::Result<TableResult
     best_row.label = "Horst (best nu)".into();
     rows.push(best_row);
 
-    // Horst+rcca: warm start from RandomizedCCA(p=init_p, q=init_q).
+    // Horst+rcca: warm start from RandomizedCCA(p=init_p, q=init_q). The
+    // builder owns the initializer chaining (fit_with_bases → fit_from).
     let mut eng = workload.train_engine();
     let t = Timer::start();
-    let init = RandomizedCca::new(RccaConfig {
-        k,
-        p: cfg.init_p,
-        q: cfg.init_q,
-        lambda_a: la,
-        lambda_b: lb,
-        seed: workload.scale.seed ^ 0x1217,
-    })
-    .fit(&mut eng)?;
-    let init_passes = init.passes;
-    let (wmodel, warm_trace) = Horst::new(HorstConfig {
-        k,
-        lambda_a: la,
-        lambda_b: lb,
-        pass_budget: cfg.horst_budget,
-        augment: true,
-        seed: 0x3a3a,
-        tol: 0.0,
-    })
-    .fit_from(&mut eng, init.xa.clone(), init.xb.clone())?;
+    let wmodel = Cca::builder()
+        .k(k)
+        .oversample(cfg.init_p)
+        .power_iters(cfg.init_q)
+        .lambda(la, lb)
+        .solver(Solver::Horst { warm_start: true })
+        .pass_budget(cfg.horst_budget)
+        .seed(workload.scale.seed ^ 0x1217)
+        .horst_seed(0x3a3a)
+        .fit(&mut eng)?;
     let secs = t.secs();
-    let train = evaluate(&wmodel, &mut eng).sum_corr;
-    let test = evaluate(&wmodel, &mut workload.test_engine()).sum_corr;
+    let init_passes = wmodel.init_passes;
+    let warm_trace = wmodel.trace.clone().unwrap_or_default();
+    let train = wmodel.objective(&mut eng).sum_corr;
+    let test = wmodel.objective(&mut workload.test_engine()).sum_corr;
 
     // Pass counts to reach the cold run's final objective (99.9% of it, the
     // same-accuracy criterion the paper uses).

@@ -5,10 +5,8 @@
 //! small ν (train high, test collapsing) and is generally more ν-sensitive.
 
 use super::Workload;
+use crate::api::{Cca, Solver};
 use crate::bench::Report;
-use crate::cca::horst::{Horst, HorstConfig};
-use crate::cca::objective::evaluate;
-use crate::cca::rcca::{RandomizedCca, RccaConfig};
 
 #[derive(Debug, Clone)]
 pub struct NuPoint {
@@ -32,31 +30,26 @@ pub fn run(
         let (la, lb) = workload.lambdas(nu);
 
         let mut eng = workload.train_engine();
-        let model = RandomizedCca::new(RccaConfig {
-            k,
-            p: rcca_p,
-            q: rcca_q,
-            lambda_a: la,
-            lambda_b: lb,
-            seed: workload.scale.seed ^ nu.to_bits(),
-        })
-        .fit(&mut eng)?;
-        let rcca_train = evaluate(&model, &mut eng).sum_corr;
-        let rcca_test = evaluate(&model, &mut workload.test_engine()).sum_corr;
+        let model = Cca::builder()
+            .k(k)
+            .oversample(rcca_p)
+            .power_iters(rcca_q)
+            .lambda(la, lb)
+            .seed(workload.scale.seed ^ nu.to_bits())
+            .fit(&mut eng)?;
+        let rcca_train = model.objective(&mut eng).sum_corr;
+        let rcca_test = model.objective(&mut workload.test_engine()).sum_corr;
 
         let mut eng = workload.train_engine();
-        let (hm, _) = Horst::new(HorstConfig {
-            k,
-            lambda_a: la,
-            lambda_b: lb,
-            pass_budget: horst_budget,
-            augment: true,
-            seed: 0x4057 ^ nu.to_bits(),
-            tol: 0.0,
-        })
-        .fit(&mut eng)?;
-        let horst_train = evaluate(&hm, &mut eng).sum_corr;
-        let horst_test = evaluate(&hm, &mut workload.test_engine()).sum_corr;
+        let hm = Cca::builder()
+            .k(k)
+            .lambda(la, lb)
+            .solver(Solver::Horst { warm_start: false })
+            .pass_budget(horst_budget)
+            .horst_seed(0x4057 ^ nu.to_bits())
+            .fit(&mut eng)?;
+        let horst_train = hm.objective(&mut eng).sum_corr;
+        let horst_test = hm.objective(&mut workload.test_engine()).sum_corr;
 
         out.push(NuPoint {
             nu,

@@ -17,15 +17,12 @@ pub mod e2_sweep;
 pub mod e3_table;
 pub mod e4_nu;
 
-use crate::cca::pass::{InMemoryPass, PassEngine};
-use crate::coordinator::{ShardedPass, ShardedPassConfig};
-use crate::data::shards::{ShardStore, ShardWriter};
+use crate::api::{Backend, Engine, Lambda};
+use crate::cca::pass::PassEngine;
 use crate::data::split::{gather_rows, split_indices};
 use crate::data::synthparl::{SynthParl, SynthParlConfig};
 use crate::data::TwoViewChunk;
-use crate::runtime::{ChunkEngine, NativeEngine, PjrtEngine};
-use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::path::Path;
 
 /// Experiment scale knobs (see module docs for the paper mapping).
 #[derive(Debug, Clone)]
@@ -160,24 +157,26 @@ impl Workload {
         }
     }
 
-    /// Scale-free λ from ν (paper §4): λ = ν·tr(AᵀA)/d.
+    /// Scale-free λ from ν (paper §4): λ = ν·tr(AᵀA)/d, routed through the
+    /// single [`Lambda`] resolution path. Resolves off the training views
+    /// directly so it never perturbs an engine's pass ledger.
     pub fn lambdas(&self, nu: f64) -> (f64, f64) {
-        (
-            crate::cca::scale_free_lambda(nu, self.train.a.gram_trace(), self.train.a.cols),
-            crate::cca::scale_free_lambda(nu, self.train.b.gram_trace(), self.train.b.cols),
-        )
+        Lambda::Nu(nu).resolve_views(&self.train.a, &self.train.b)
     }
 
-    pub fn train_engine(&self) -> InMemoryPass {
-        InMemoryPass::new(self.train.clone())
+    /// In-memory API engine over the training split.
+    pub fn train_engine(&self) -> Engine {
+        Engine::in_memory(self.train.clone())
     }
 
-    pub fn test_engine(&self) -> InMemoryPass {
-        InMemoryPass::new(self.test.clone())
+    /// In-memory API engine over the held-out split.
+    pub fn test_engine(&self) -> Engine {
+        Engine::in_memory(self.test.clone())
     }
 }
 
-/// Which compute path a run uses.
+/// Which compute path a run uses. Legacy alias of [`crate::api::Backend`];
+/// kept so the paper-reproduction mapping in older scripts stays valid.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
     /// In-memory single-node (fastest; used for the hyperparameter sweeps).
@@ -188,8 +187,20 @@ pub enum EngineKind {
     ShardedPjrt,
 }
 
-/// Build a boxed pass engine for the training split. Sharded engines write
-/// the shards under `workdir` first (reused if present).
+impl From<EngineKind> for Backend {
+    fn from(kind: EngineKind) -> Backend {
+        match kind {
+            EngineKind::InMemory => Backend::InMemory,
+            EngineKind::ShardedNative => Backend::Native,
+            EngineKind::ShardedPjrt => Backend::Pjrt,
+        }
+    }
+}
+
+/// Legacy shim over [`Engine::for_workload`]: build a boxed pass engine for
+/// the training split. Sharded engines write the shards under `workdir`
+/// first (reused if present). New code should construct an
+/// [`crate::api::Engine`] directly.
 pub fn build_engine(
     workload: &Workload,
     kind: EngineKind,
@@ -197,39 +208,8 @@ pub fn build_engine(
     workers: usize,
     chunk_rows: usize,
 ) -> anyhow::Result<Box<dyn PassEngine>> {
-    match kind {
-        EngineKind::InMemory => Ok(Box::new(workload.train_engine())),
-        EngineKind::ShardedNative | EngineKind::ShardedPjrt => {
-            let dir = shard_dir(workload, workdir);
-            let store = ShardStore::open(&dir).or_else(|_| -> anyhow::Result<ShardStore> {
-                let mut w = ShardWriter::create(&dir, 4 * chunk_rows)?;
-                w.write_dataset(&workload.train.a, &workload.train.b)?;
-                Ok(ShardStore::open(&dir).map_err(|e| anyhow::anyhow!(e))?)
-            })?;
-            let engine: Arc<dyn ChunkEngine> = match kind {
-                EngineKind::ShardedPjrt => Arc::new(PjrtEngine::open(Path::new("artifacts"))?),
-                _ => Arc::new(NativeEngine::new()),
-            };
-            Ok(Box::new(ShardedPass::new(
-                store,
-                engine,
-                ShardedPassConfig {
-                    workers,
-                    chunk_rows,
-                    ..Default::default()
-                },
-            )))
-        }
-    }
-}
-
-fn shard_dir(workload: &Workload, workdir: &Path) -> PathBuf {
-    workdir.join(format!(
-        "shards_n{}_d{}_s{}",
-        workload.train.rows(),
-        workload.scale.dims,
-        workload.scale.seed
-    ))
+    let engine = Engine::for_workload(workload, kind.into(), workdir, workers, chunk_rows)?;
+    Ok(Box::new(engine))
 }
 
 #[cfg(test)]

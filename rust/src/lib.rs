@@ -13,11 +13,17 @@
 //!   (`power_chunk`, `final_chunk`, …) lowered once to `artifacts/*.hlo.txt`.
 //! * **L1** (`python/compile/kernels/`) — Pallas matmul/gram kernels called
 //!   by L2, verified against pure-jnp oracles.
-//! * `runtime` — loads the artifacts via the PJRT C API (`xla` crate) or
-//!   falls back to the native Rust engine (`linalg` + `sparse`).
+//! * `runtime` — loads the artifacts via the PJRT C API (`xla` crate,
+//!   behind the `pjrt` cargo feature) or falls back to the native Rust
+//!   engine (`linalg` + `sparse`).
+//! * [`api`] — the session layer every consumer goes through:
+//!   `Cca::builder() → fit → FittedModel` with transform, persistence, and
+//!   warm-start; `Engine::{in_memory, sharded, from_spec}` unifies engine
+//!   construction.
 //!
 //! See DESIGN.md for the full system inventory and the per-experiment index.
 
+pub mod api;
 pub mod bench;
 pub mod cca;
 pub mod coordinator;

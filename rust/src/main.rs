@@ -9,13 +9,14 @@
 //!   table2b    E3 / Table 2b — times + train/test + Horst rows
 //!   nu-sweep   E4 / Figure 3 — ν sensitivity, rcca vs Horst
 //!
-//! Every experiment writes its JSON twin under --report-dir.
+//! Every experiment writes its JSON twin under --report-dir. All fitting
+//! goes through the `rcca::api` session layer (builder → fit →
+//! FittedModel); `rcca --save` persists the fitted model as JSON for reuse
+//! in another process (`rcca::api::FittedModel::load`).
 
+use rcca::api::{Backend, Cca, Engine, Solver};
 use rcca::bench::Report;
-use rcca::cca::horst::{Horst, HorstConfig};
-use rcca::cca::objective::{evaluate, feasibility};
-use rcca::cca::rcca::{RandomizedCca, RccaConfig};
-use rcca::experiments::{self, EngineKind, Scale, Workload};
+use rcca::experiments::{self, Scale, Workload};
 use rcca::util::cli::{Args, Spec};
 use rcca::util::timer::Timer;
 use std::path::Path;
@@ -74,15 +75,6 @@ fn scale_from(args: &Args) -> anyhow::Result<Scale> {
         seed: args.u64("seed")?,
         ..Default::default()
     })
-}
-
-fn engine_kind(args: &Args) -> anyhow::Result<EngineKind> {
-    match args.str("engine") {
-        "inmemory" => Ok(EngineKind::InMemory),
-        "native" => Ok(EngineKind::ShardedNative),
-        "pjrt" => Ok(EngineKind::ShardedPjrt),
-        other => anyhow::bail!("unknown engine '{other}' (inmemory|native|pjrt)"),
-    }
 }
 
 fn emit(report: &Report, dir: &str) -> anyhow::Result<()> {
@@ -147,7 +139,13 @@ fn cmd_gen(argv: Vec<String>) -> anyhow::Result<()> {
 
 fn common_run_flags(spec: Spec) -> Spec {
     scale_flags(spec)
-        .opt("engine", "inmemory", "compute path: inmemory|native|pjrt")
+        .opt(
+            "engine",
+            "inmemory",
+            "compute path: inmemory|native|pjrt, or a full spec like \
+             'native:work/shards?workers=2&chunk=256' (a spec is authoritative \
+             over pre-sharded data: --workers/--chunk-rows/--workdir are ignored)",
+        )
         .opt("workers", "2", "coordinator worker threads")
         .opt("chunk-rows", "256", "rows per engine chunk")
         .opt("workdir", "work", "scratch dir for shards")
@@ -155,46 +153,77 @@ fn common_run_flags(spec: Spec) -> Spec {
         .opt("nu", "0.01", "scale-free regularization nu")
 }
 
+/// Engine selection through the api layer: a bare backend name builds (and
+/// shards, if needed) the generated workload using the --workers/--chunk-rows
+/// flags; a spec with ':' points at pre-sharded data on disk and carries its
+/// own ?options, so those flags are ignored.
+fn engine_from_args(args: &Args, w: &Workload) -> anyhow::Result<Engine> {
+    let spec = args.str("engine");
+    if spec.contains(':') {
+        let engine = Engine::from_spec(spec)?;
+        // λ resolution and the train/test metrics still come from the
+        // generated workload, so the on-disk data must be the same shape;
+        // anything else would score the fit against an unrelated dataset.
+        let (n, da, db) = engine.shape();
+        anyhow::ensure!(
+            (n, da, db) == (w.train.rows(), w.scale.dims, w.scale.dims),
+            "engine spec '{spec}' points at data shaped (n={n}, da={da}, db={db}), but the \
+             workload generated from the scale flags is (n={}, d={}). Regularization and \
+             train/test objectives are computed from the generated workload, so the shards \
+             must come from the same gen flags (n/dims/seed).",
+            w.train.rows(),
+            w.scale.dims
+        );
+        return Ok(engine);
+    }
+    let backend: Backend = spec.parse()?;
+    Ok(Engine::for_workload(
+        w,
+        backend,
+        Path::new(args.str("workdir")),
+        args.usize("workers")?,
+        args.usize("chunk-rows")?,
+    )?)
+}
+
 fn cmd_rcca(argv: Vec<String>) -> anyhow::Result<()> {
     let spec = common_run_flags(Spec::new("rcca", "run RandomizedCCA (Algorithm 1)"))
         .opt("p", "240", "oversampling")
-        .opt("q", "1", "power iterations");
+        .opt("q", "1", "power iterations")
+        .opt("save", "", "write the fitted model JSON to this path");
     let args = parse(spec, &argv)?;
     let scale = scale_from(&args)?;
     let k = scale.k;
     let w = Workload::generate(scale);
     let (la, lb) = w.lambdas(args.f64("nu")?);
-    let mut engine = experiments::build_engine(
-        &w,
-        engine_kind(&args)?,
-        Path::new(args.str("workdir")),
-        args.usize("workers")?,
-        args.usize("chunk-rows")?,
-    )?;
+    let mut engine = engine_from_args(&args, &w)?;
     let t = Timer::start();
-    let model = RandomizedCca::new(RccaConfig {
-        k,
-        p: args.usize("p")?,
-        q: args.usize("q")?,
-        lambda_a: la,
-        lambda_b: lb,
-        seed: w.scale.seed ^ 0xacca,
-    })
-    .fit(engine.as_mut())?;
+    let model = Cca::builder()
+        .k(k)
+        .oversample(args.usize("p")?)
+        .power_iters(args.usize("q")?)
+        .lambda(la, lb)
+        .seed(w.scale.seed ^ 0xacca)
+        .fit(&mut engine)?;
     let fit_secs = t.secs();
-    let train = evaluate(&model, engine.as_mut());
-    let test = evaluate(&model, &mut w.test_engine());
-    let feas = feasibility(&model, engine.as_mut(), la, lb);
+    let train = model.objective(&mut engine);
+    let test = model.objective(&mut w.test_engine());
+    let feas = model.feasibility(&mut engine);
 
     let mut r = Report::new("RandomizedCCA run", &["metric", "value"]);
     r.row(&["engine".into(), args.str("engine").into()]);
     r.row(&["k / p / q".into(), format!("{k} / {} / {}", args.str("p"), args.str("q"))]);
     r.row(&["fit time (s)".into(), format!("{fit_secs:.2}")]);
-    r.row(&["data passes (fit)".into(), model.passes.to_string()]);
+    r.row(&["data passes (fit)".into(), model.passes().to_string()]);
     r.row(&["train objective".into(), format!("{:.4}", train.sum_corr)]);
     r.row(&["test objective".into(), format!("{:.4}", test.sum_corr)]);
     r.row(&["feasibility cov err".into(), format!("{:.2e}", feas.cov_a_err.max(feas.cov_b_err))]);
     r.row(&["feasibility offdiag".into(), format!("{:.2e}", feas.cross_offdiag)]);
+    let save = args.str("save");
+    if !save.is_empty() {
+        model.save(Path::new(save))?;
+        r.row(&["model saved to".into(), save.into()]);
+    }
     emit(&r, args.str("report-dir"))
 }
 
@@ -209,47 +238,32 @@ fn cmd_horst(argv: Vec<String>) -> anyhow::Result<()> {
     let k = scale.k;
     let w = Workload::generate(scale);
     let (la, lb) = w.lambdas(args.f64("nu")?);
-    let mut engine = experiments::build_engine(
-        &w,
-        engine_kind(&args)?,
-        Path::new(args.str("workdir")),
-        args.usize("workers")?,
-        args.usize("chunk-rows")?,
-    )?;
-    let t = Timer::start();
-    let horst = Horst::new(HorstConfig {
-        k,
-        lambda_a: la,
-        lambda_b: lb,
-        pass_budget: args.usize("passes")?,
-        augment: true,
-        seed: 0x4057,
-        tol: 0.0,
-    });
-    let (model, trace) = match args.str("init") {
-        "rcca" => {
-            let init = RandomizedCca::new(RccaConfig {
-                k,
-                p: args.usize("init-p")?,
-                q: args.usize("init-q")?,
-                lambda_a: la,
-                lambda_b: lb,
-                seed: 0x1217,
-            })
-            .fit(engine.as_mut())?;
-            horst.fit_from(engine.as_mut(), init.xa.clone(), init.xb.clone())?
-        }
-        "none" => horst.fit(engine.as_mut())?,
+    let mut engine = engine_from_args(&args, &w)?;
+    let warm_start = match args.str("init") {
+        "rcca" => true,
+        "none" => false,
         other => anyhow::bail!("unknown --init '{other}'"),
     };
+    let t = Timer::start();
+    let model = Cca::builder()
+        .k(k)
+        .oversample(args.usize("init-p")?)
+        .power_iters(args.usize("init-q")?)
+        .lambda(la, lb)
+        .solver(Solver::Horst { warm_start })
+        .pass_budget(args.usize("passes")?)
+        .seed(0x1217)
+        .horst_seed(0x4057)
+        .fit(&mut engine)?;
     let secs = t.secs();
-    let train = evaluate(&model, engine.as_mut());
-    let test = evaluate(&model, &mut w.test_engine());
+    let train = model.objective(&mut engine);
+    let test = model.objective(&mut w.test_engine());
+    let iterations = model.trace.as_ref().map(|t| t.len()).unwrap_or(0);
     let mut r = Report::new("Horst run", &["metric", "value"]);
     r.row(&["init".into(), args.str("init").into()]);
     r.row(&["time (s)".into(), format!("{secs:.2}")]);
-    r.row(&["passes".into(), model.passes.to_string()]);
-    r.row(&["iterations".into(), trace.len().to_string()]);
+    r.row(&["passes".into(), model.passes().to_string()]);
+    r.row(&["iterations".into(), iterations.to_string()]);
     r.row(&["train objective".into(), format!("{:.4}", train.sum_corr)]);
     r.row(&["test objective".into(), format!("{:.4}", test.sum_corr)]);
     emit(&r, args.str("report-dir"))
@@ -262,15 +276,9 @@ fn cmd_spectrum(argv: Vec<String>) -> anyhow::Result<()> {
     let args = parse(spec, &argv)?;
     let scale = scale_from(&args)?;
     let w = Workload::generate(scale);
-    let mut engine = experiments::build_engine(
-        &w,
-        engine_kind(&args)?,
-        Path::new(args.str("workdir")),
-        args.usize("workers")?,
-        args.usize("chunk-rows")?,
-    )?;
+    let mut engine = engine_from_args(&args, &w)?;
     let res = experiments::e1_spectrum::run(
-        engine.as_mut(),
+        &mut engine,
         &w,
         args.usize("top")?,
         args.usize("oversample")?,

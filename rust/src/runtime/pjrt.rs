@@ -3,222 +3,293 @@
 //! the CPU PJRT client. This is the production compute path — Python never
 //! runs here; the artifacts were lowered once by `make artifacts`.
 //!
-//! Shape policy: each artifact is specialized to `(m, d, r)`. The engine
-//! pads a smaller chunk with zero rows and a narrower Q with zero columns
-//! up to the best-fitting artifact — zero padding is exact for every
-//! product computed (`AᵀBQ`, Grams), so results are sliced back without
-//! error.
+//! The real implementation needs the `xla` crate (PJRT C API bindings),
+//! which the offline build image does not ship. It is therefore gated
+//! behind the `pjrt` cargo feature; without it, [`PjrtEngine`] is a stub
+//! with the same API whose `open()` explains how to enable the real path,
+//! so every caller (CLI `--engine pjrt`, benches, integration tests)
+//! degrades to a clean error instead of a link failure.
+//!
+//! Shape policy (real engine): each artifact is specialized to `(m, d, r)`.
+//! The engine pads a smaller chunk with zero rows and a narrower Q with
+//! zero columns up to the best-fitting artifact — zero padding is exact for
+//! every product computed (`AᵀBQ`, Grams), so results are sliced back
+//! without error.
 
-use super::manifest::{Manifest, ManifestEntry};
-use super::ChunkEngine;
-use crate::data::TwoViewChunk;
-use crate::linalg::Mat;
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod real {
+    use crate::data::TwoViewChunk;
+    use crate::linalg::Mat;
+    use crate::runtime::manifest::{Manifest, ManifestEntry};
+    use crate::runtime::ChunkEngine;
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::Mutex;
 
-struct Inner {
-    client: xla::PjRtClient,
-    /// Compiled executables keyed by artifact path string.
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Reusable densification buffers (avoid per-chunk allocation).
-    buf_a: Vec<f32>,
-    buf_b: Vec<f32>,
-    qa_pad: Vec<f32>,
-    qb_pad: Vec<f32>,
-}
-
-/// The PJRT-backed engine. All PJRT state lives behind one mutex: the CPU
-/// client is effectively single-streamed on this 1-core testbed anyway, and
-/// serializing access sidesteps the xla crate's unstated thread-safety.
-pub struct PjrtEngine {
-    manifest: Manifest,
-    inner: Mutex<Inner>,
-    /// Execution counter (metrics/tests).
-    pub executions: std::sync::atomic::AtomicU64,
-}
-
-// SAFETY: every use of the non-Send PJRT handles is serialized through
-// `inner: Mutex<Inner>`; the raw pointers are never aliased across threads
-// concurrently. The CPU PJRT client itself is internally synchronized for
-// compile/execute (single TfrtCpuClient).
-unsafe impl Send for PjrtEngine {}
-unsafe impl Sync for PjrtEngine {}
-
-impl PjrtEngine {
-    /// Open the artifact directory (must contain `manifest.json`).
-    pub fn open(artifacts_dir: &Path) -> anyhow::Result<PjrtEngine> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        anyhow::ensure!(
-            !manifest.entries.is_empty(),
-            "artifact manifest is empty — run `make artifacts`"
-        );
-        let client = xla::PjRtClient::cpu()?;
-        Ok(PjrtEngine {
-            manifest,
-            inner: Mutex::new(Inner {
-                client,
-                cache: HashMap::new(),
-                buf_a: Vec::new(),
-                buf_b: Vec::new(),
-                qa_pad: Vec::new(),
-                qb_pad: Vec::new(),
-            }),
-            executions: std::sync::atomic::AtomicU64::new(0),
-        })
+    struct Inner {
+        client: xla::PjRtClient,
+        /// Compiled executables keyed by artifact path string.
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
+        /// Reusable densification buffers (avoid per-chunk allocation).
+        buf_a: Vec<f32>,
+        buf_b: Vec<f32>,
+        qa_pad: Vec<f32>,
+        qb_pad: Vec<f32>,
     }
 
-    /// Shapes available for a given entry kind and d (diagnostics).
-    pub fn available(&self, entry: &str, d: usize) -> Vec<(usize, usize)> {
-        self.manifest
-            .entries
-            .iter()
-            .filter(|e| e.entry == entry && e.d == d)
-            .map(|e| (e.m, e.r))
-            .collect()
+    /// The PJRT-backed engine. All PJRT state lives behind one mutex: the
+    /// CPU client is effectively single-streamed on this 1-core testbed
+    /// anyway, and serializing access sidesteps the xla crate's unstated
+    /// thread-safety.
+    pub struct PjrtEngine {
+        manifest: Manifest,
+        inner: Mutex<Inner>,
+        /// Execution counter (metrics/tests).
+        pub executions: std::sync::atomic::AtomicU64,
     }
 
-    fn run(
-        &self,
-        kind: &str,
-        chunk: &TwoViewChunk,
-        qa32: &[f32],
-        qb32: &[f32],
-        r: usize,
-        outputs: usize,
-    ) -> anyhow::Result<Vec<Mat>> {
-        let m = chunk.rows();
-        let d = chunk.a.cols;
-        anyhow::ensure!(
-            chunk.b.cols == d,
-            "pjrt engine requires da == db (artifact grid); got {} vs {}",
-            d,
-            chunk.b.cols
-        );
-        anyhow::ensure!(qa32.len() == d * r && qb32.len() == d * r, "Q shape mismatch");
-        let entry: &ManifestEntry = self.manifest.best_fit(kind, d, m, r).ok_or_else(|| {
-            anyhow::anyhow!(
-                "no artifact covers {kind} d={d} m={m} r={r}; available: {:?} — rebuild with `make artifacts`",
-                self.available(kind, d)
-            )
-        })?;
-        let (pm, pr) = (entry.m, entry.r);
+    // SAFETY: every use of the non-Send PJRT handles is serialized through
+    // `inner: Mutex<Inner>`; the raw pointers are never aliased across
+    // threads concurrently. The CPU PJRT client itself is internally
+    // synchronized for compile/execute (single TfrtCpuClient).
+    unsafe impl Send for PjrtEngine {}
+    unsafe impl Sync for PjrtEngine {}
 
-        let mut inner = self.inner.lock().unwrap();
-        // Compile-on-first-use, then cached for the process lifetime.
-        let key = entry.path.to_string_lossy().to_string();
-        if !inner.cache.contains_key(&key) {
-            let path = self.manifest.hlo_path(entry);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = inner.client.compile(&comp)?;
-            inner.cache.insert(key.clone(), exe);
-        }
-
-        // Densify + pad chunk rows to pm.
-        inner.buf_a.resize(pm * d, 0.0);
-        inner.buf_b.resize(pm * d, 0.0);
-        inner.buf_a.fill(0.0);
-        inner.buf_b.fill(0.0);
-        chunk.a.densify_rows(0, m, &mut inner.buf_a[..m * d]);
-        chunk.b.densify_rows(0, m, &mut inner.buf_b[..m * d]);
-
-        // Pad Q columns to pr (row-major d×r → d×pr).
-        let pad_q = |src: &[f32], dst: &mut Vec<f32>| {
-            dst.resize(d * pr, 0.0);
-            dst.fill(0.0);
-            for i in 0..d {
-                dst[i * pr..i * pr + r].copy_from_slice(&src[i * r..(i + 1) * r]);
-            }
-        };
-        // Split borrows: temporarily move buffers out to appease borrowck.
-        let mut qa_pad = std::mem::take(&mut inner.qa_pad);
-        let mut qb_pad = std::mem::take(&mut inner.qb_pad);
-        pad_q(qa32, &mut qa_pad);
-        pad_q(qb32, &mut qb_pad);
-
-        let lit_a = xla::Literal::vec1(&inner.buf_a).reshape(&[pm as i64, d as i64])?;
-        let lit_b = xla::Literal::vec1(&inner.buf_b).reshape(&[pm as i64, d as i64])?;
-        let lit_qa = xla::Literal::vec1(&qa_pad).reshape(&[d as i64, pr as i64])?;
-        let lit_qb = xla::Literal::vec1(&qb_pad).reshape(&[d as i64, pr as i64])?;
-        inner.qa_pad = qa_pad;
-        inner.qb_pad = qb_pad;
-
-        let exe = inner.cache.get(&key).unwrap();
-        let result = exe.execute::<xla::Literal>(&[lit_a, lit_b, lit_qa, lit_qb])?[0][0]
-            .to_literal_sync()?;
-        self.executions
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-
-        // Artifacts are lowered with return_tuple=True.
-        let parts = result.to_tuple()?;
-        anyhow::ensure!(
-            parts.len() == outputs,
-            "artifact returned {} outputs, expected {outputs}",
-            parts.len()
-        );
-        let mut out = Vec::with_capacity(outputs);
-        for (idx, lit) in parts.into_iter().enumerate() {
-            let vals: Vec<f32> = lit.to_vec()?;
-            // Output shapes: power → (d×pr, d×pr); final → (pr×pr …).
-            let (rows, cols) = if kind == "power" {
-                (d, pr)
-            } else {
-                (pr, pr)
-            };
+    impl PjrtEngine {
+        /// Open the artifact directory (must contain `manifest.json`).
+        pub fn open(artifacts_dir: &Path) -> anyhow::Result<PjrtEngine> {
+            let manifest = Manifest::load(artifacts_dir)?;
             anyhow::ensure!(
-                vals.len() == rows * cols,
-                "output {idx}: got {} values, want {rows}x{cols}",
-                vals.len()
+                !manifest.entries.is_empty(),
+                "artifact manifest is empty — run `make artifacts`"
             );
-            // Slice off the r.. padding columns (and rows for the Grams).
-            let (keep_rows, keep_cols) = if kind == "power" { (d, r) } else { (r, r) };
-            let mut mat = Mat::zeros(keep_rows, keep_cols);
-            for i in 0..keep_rows {
-                for j in 0..keep_cols {
-                    mat[(i, j)] = vals[i * cols + j] as f64;
-                }
-            }
-            out.push(mat);
+            let client = xla::PjRtClient::cpu()?;
+            Ok(PjrtEngine {
+                manifest,
+                inner: Mutex::new(Inner {
+                    client,
+                    cache: HashMap::new(),
+                    buf_a: Vec::new(),
+                    buf_b: Vec::new(),
+                    qa_pad: Vec::new(),
+                    qb_pad: Vec::new(),
+                }),
+                executions: std::sync::atomic::AtomicU64::new(0),
+            })
         }
-        Ok(out)
+
+        /// Shapes available for a given entry kind and d (diagnostics).
+        pub fn available(&self, entry: &str, d: usize) -> Vec<(usize, usize)> {
+            self.manifest
+                .entries
+                .iter()
+                .filter(|e| e.entry == entry && e.d == d)
+                .map(|e| (e.m, e.r))
+                .collect()
+        }
+
+        fn run(
+            &self,
+            kind: &str,
+            chunk: &TwoViewChunk,
+            qa32: &[f32],
+            qb32: &[f32],
+            r: usize,
+            outputs: usize,
+        ) -> anyhow::Result<Vec<Mat>> {
+            let m = chunk.rows();
+            let d = chunk.a.cols;
+            anyhow::ensure!(
+                chunk.b.cols == d,
+                "pjrt engine requires da == db (artifact grid); got {} vs {}",
+                d,
+                chunk.b.cols
+            );
+            anyhow::ensure!(
+                qa32.len() == d * r && qb32.len() == d * r,
+                "Q shape mismatch"
+            );
+            let entry: &ManifestEntry =
+                self.manifest.best_fit(kind, d, m, r).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no artifact covers {kind} d={d} m={m} r={r}; available: {:?} — rebuild with `make artifacts`",
+                        self.available(kind, d)
+                    )
+                })?;
+            let (pm, pr) = (entry.m, entry.r);
+
+            let mut inner = self.inner.lock().unwrap();
+            // Compile-on-first-use, then cached for the process lifetime.
+            let key = entry.path.to_string_lossy().to_string();
+            if !inner.cache.contains_key(&key) {
+                let path = self.manifest.hlo_path(entry);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = inner.client.compile(&comp)?;
+                inner.cache.insert(key.clone(), exe);
+            }
+
+            // Densify + pad chunk rows to pm.
+            inner.buf_a.resize(pm * d, 0.0);
+            inner.buf_b.resize(pm * d, 0.0);
+            inner.buf_a.fill(0.0);
+            inner.buf_b.fill(0.0);
+            chunk.a.densify_rows(0, m, &mut inner.buf_a[..m * d]);
+            chunk.b.densify_rows(0, m, &mut inner.buf_b[..m * d]);
+
+            // Pad Q columns to pr (row-major d×r → d×pr).
+            let pad_q = |src: &[f32], dst: &mut Vec<f32>| {
+                dst.resize(d * pr, 0.0);
+                dst.fill(0.0);
+                for i in 0..d {
+                    dst[i * pr..i * pr + r].copy_from_slice(&src[i * r..(i + 1) * r]);
+                }
+            };
+            // Split borrows: temporarily move buffers out to appease borrowck.
+            let mut qa_pad = std::mem::take(&mut inner.qa_pad);
+            let mut qb_pad = std::mem::take(&mut inner.qb_pad);
+            pad_q(qa32, &mut qa_pad);
+            pad_q(qb32, &mut qb_pad);
+
+            let lit_a = xla::Literal::vec1(&inner.buf_a).reshape(&[pm as i64, d as i64])?;
+            let lit_b = xla::Literal::vec1(&inner.buf_b).reshape(&[pm as i64, d as i64])?;
+            let lit_qa = xla::Literal::vec1(&qa_pad).reshape(&[d as i64, pr as i64])?;
+            let lit_qb = xla::Literal::vec1(&qb_pad).reshape(&[d as i64, pr as i64])?;
+            inner.qa_pad = qa_pad;
+            inner.qb_pad = qb_pad;
+
+            let exe = inner.cache.get(&key).unwrap();
+            let result = exe.execute::<xla::Literal>(&[lit_a, lit_b, lit_qa, lit_qb])?[0][0]
+                .to_literal_sync()?;
+            self.executions
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+
+            // Artifacts are lowered with return_tuple=True.
+            let parts = result.to_tuple()?;
+            anyhow::ensure!(
+                parts.len() == outputs,
+                "artifact returned {} outputs, expected {outputs}",
+                parts.len()
+            );
+            let mut out = Vec::with_capacity(outputs);
+            for (idx, lit) in parts.into_iter().enumerate() {
+                let vals: Vec<f32> = lit.to_vec()?;
+                // Output shapes: power → (d×pr, d×pr); final → (pr×pr …).
+                let (rows, cols) = if kind == "power" { (d, pr) } else { (pr, pr) };
+                anyhow::ensure!(
+                    vals.len() == rows * cols,
+                    "output {idx}: got {} values, want {rows}x{cols}",
+                    vals.len()
+                );
+                // Slice off the r.. padding columns (and rows for the Grams).
+                let (keep_rows, keep_cols) = if kind == "power" { (d, r) } else { (r, r) };
+                let mut mat = Mat::zeros(keep_rows, keep_cols);
+                for i in 0..keep_rows {
+                    for j in 0..keep_cols {
+                        mat[(i, j)] = vals[i * cols + j] as f64;
+                    }
+                }
+                out.push(mat);
+            }
+            Ok(out)
+        }
+    }
+
+    impl ChunkEngine for PjrtEngine {
+        fn name(&self) -> &str {
+            "pjrt"
+        }
+
+        fn power_chunk(
+            &self,
+            chunk: &TwoViewChunk,
+            qa32: &[f32],
+            qb32: &[f32],
+            r: usize,
+        ) -> anyhow::Result<(Mat, Mat)> {
+            let mut v = self.run("power", chunk, qa32, qb32, r, 2)?;
+            let yb = v.pop().unwrap();
+            let ya = v.pop().unwrap();
+            Ok((ya, yb))
+        }
+
+        fn final_chunk(
+            &self,
+            chunk: &TwoViewChunk,
+            qa32: &[f32],
+            qb32: &[f32],
+            r: usize,
+        ) -> anyhow::Result<(Mat, Mat, Mat)> {
+            let mut v = self.run("final", chunk, qa32, qb32, r, 3)?;
+            let f = v.pop().unwrap();
+            let cb = v.pop().unwrap();
+            let ca = v.pop().unwrap();
+            Ok((ca, cb, f))
+        }
     }
 }
 
-impl ChunkEngine for PjrtEngine {
-    fn name(&self) -> &str {
-        "pjrt"
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use crate::data::TwoViewChunk;
+    use crate::linalg::Mat;
+    use crate::runtime::ChunkEngine;
+    use std::path::Path;
+
+    const UNAVAILABLE: &str = "PJRT engine unavailable: this build has no `pjrt` feature \
+         (the offline image ships without the `xla` crate). Use the native engine, or — in \
+         an environment with crates access — add the `xla` dependency to Cargo.toml and \
+         rebuild with `--features pjrt` (the feature alone does not pull the crate)";
+
+    /// API-compatible stand-in for the XLA-backed engine.
+    pub struct PjrtEngine {
+        /// Execution counter (metrics/tests) — always zero in the stub.
+        pub executions: std::sync::atomic::AtomicU64,
     }
 
-    fn power_chunk(
-        &self,
-        chunk: &TwoViewChunk,
-        qa32: &[f32],
-        qb32: &[f32],
-        r: usize,
-    ) -> anyhow::Result<(Mat, Mat)> {
-        let mut v = self.run("power", chunk, qa32, qb32, r, 2)?;
-        let yb = v.pop().unwrap();
-        let ya = v.pop().unwrap();
-        Ok((ya, yb))
+    impl PjrtEngine {
+        pub fn open(_artifacts_dir: &Path) -> anyhow::Result<PjrtEngine> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+
+        pub fn available(&self, _entry: &str, _d: usize) -> Vec<(usize, usize)> {
+            Vec::new()
+        }
     }
 
-    fn final_chunk(
-        &self,
-        chunk: &TwoViewChunk,
-        qa32: &[f32],
-        qb32: &[f32],
-        r: usize,
-    ) -> anyhow::Result<(Mat, Mat, Mat)> {
-        let mut v = self.run("final", chunk, qa32, qb32, r, 3)?;
-        let f = v.pop().unwrap();
-        let cb = v.pop().unwrap();
-        let ca = v.pop().unwrap();
-        Ok((ca, cb, f))
+    impl ChunkEngine for PjrtEngine {
+        fn name(&self) -> &str {
+            "pjrt-stub"
+        }
+
+        fn power_chunk(
+            &self,
+            _chunk: &TwoViewChunk,
+            _qa32: &[f32],
+            _qb32: &[f32],
+            _r: usize,
+        ) -> anyhow::Result<(Mat, Mat)> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+
+        fn final_chunk(
+            &self,
+            _chunk: &TwoViewChunk,
+            _qa32: &[f32],
+            _qb32: &[f32],
+            _r: usize,
+        ) -> anyhow::Result<(Mat, Mat, Mat)> {
+            anyhow::bail!(UNAVAILABLE)
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use real::PjrtEngine;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtEngine;
 
 // PJRT engine tests live in rust/tests/pjrt_roundtrip.rs (integration):
 // they require `make artifacts` to have produced the HLO files first.

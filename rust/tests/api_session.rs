@@ -1,0 +1,243 @@
+//! Session-layer integration: builder validation, warm-start parity with
+//! the hand-wired solver path, persistence round-trips, and engine
+//! construction through specs — the contracts `rcca::api` guarantees to
+//! every consumer (CLI, experiments, examples, benches).
+
+use rcca::api::{ApiError, Backend, Cca, Engine, FittedModel, Lambda, Solver};
+use rcca::cca::horst::{Horst, HorstConfig};
+use rcca::cca::pass::{InMemoryPass, PassEngine};
+use rcca::cca::rcca::{RandomizedCca, RccaConfig};
+use rcca::data::synthparl::{SynthParl, SynthParlConfig};
+use rcca::data::TwoViewChunk;
+use rcca::experiments::{Scale, Workload};
+use std::path::PathBuf;
+
+fn dataset(n: usize, dims: usize, seed: u64) -> TwoViewChunk {
+    let d = SynthParl::generate(SynthParlConfig {
+        n,
+        dims,
+        topics: 8,
+        words_per_topic: 10,
+        background_words: 30,
+        mean_len: 8.0,
+        seed,
+        ..Default::default()
+    });
+    TwoViewChunk { a: d.a, b: d.b }
+}
+
+fn workdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("rcca_api_session_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn builder_surfaces_every_misconfiguration_as_typed_error() {
+    assert!(matches!(
+        Cca::builder().k(0).build(),
+        Err(ApiError::InvalidConfig(_))
+    ));
+    assert!(matches!(
+        Cca::builder().nu(0.02).lambda(0.1, 0.1).build(),
+        Err(ApiError::LambdaConflict)
+    ));
+    assert!(matches!(
+        Cca::builder().lambda(-0.1, 0.1).build(),
+        Err(ApiError::InvalidConfig(_))
+    ));
+    assert!(matches!(
+        Cca::builder().nu(f64::NAN).build(),
+        Err(ApiError::InvalidConfig(_))
+    ));
+    // The seed-era panic path: k + p wider than the views is now a typed
+    // entry error, raised before any data pass.
+    let mut eng = Engine::in_memory(dataset(100, 32, 7));
+    let err = Cca::builder()
+        .k(30)
+        .oversample(10)
+        .lambda(0.05, 0.05)
+        .fit(&mut eng)
+        .unwrap_err();
+    assert!(
+        matches!(err, ApiError::RankTooLarge { k: 30, p: 10, min_dim: 32 }),
+        "{err}"
+    );
+    assert_eq!(eng.passes(), 0);
+    // ...including for the warm-started Horst (its initializer sketches).
+    let err = Cca::builder()
+        .k(30)
+        .oversample(10)
+        .lambda(0.05, 0.05)
+        .solver(Solver::Horst { warm_start: true })
+        .fit(&mut eng)
+        .unwrap_err();
+    assert!(matches!(err, ApiError::RankTooLarge { .. }), "{err}");
+}
+
+#[test]
+fn warm_started_horst_via_builder_matches_hand_wired_path() {
+    let chunk = dataset(800, 96, 6);
+    let lambda = 0.05;
+    let (k, p, q, budget) = (5usize, 40usize, 1usize, 60usize);
+
+    // Hand-wired path, exactly as main.rs/e3 did before the api layer.
+    let mut eng_ref = InMemoryPass::new(chunk.clone());
+    let init = RandomizedCca::new(RccaConfig {
+        k,
+        p,
+        q,
+        lambda_a: lambda,
+        lambda_b: lambda,
+        seed: 8,
+    })
+    .fit(&mut eng_ref)
+    .unwrap();
+    let init_passes = init.passes;
+    let (ref_model, ref_trace) = Horst::new(HorstConfig {
+        k,
+        lambda_a: lambda,
+        lambda_b: lambda,
+        pass_budget: budget,
+        augment: true,
+        seed: 9,
+        tol: 0.0,
+    })
+    .fit_from(&mut eng_ref, init.xa.clone(), init.xb.clone())
+    .unwrap();
+
+    // Builder path: one call.
+    let mut eng_api = Engine::in_memory(chunk);
+    let fitted = Cca::builder()
+        .k(k)
+        .oversample(p)
+        .power_iters(q)
+        .lambda(lambda, lambda)
+        .solver(Solver::Horst { warm_start: true })
+        .pass_budget(budget)
+        .seed(8)
+        .horst_seed(9)
+        .fit(&mut eng_api)
+        .unwrap();
+
+    assert_eq!(fitted.correlations(), &ref_model.sigma[..]);
+    assert!(fitted.xa().rel_diff(&ref_model.xa) < 1e-14);
+    assert!(fitted.xb().rel_diff(&ref_model.xb) < 1e-14);
+    assert_eq!(fitted.init_passes, init_passes);
+    assert_eq!(fitted.passes(), init_passes + ref_model.passes);
+    assert_eq!(fitted.solver(), "horst+rcca");
+    let trace = fitted.trace.as_ref().expect("warm horst trace");
+    assert_eq!(trace.len(), ref_trace.len());
+    for (a, b) in trace.iter().zip(&ref_trace) {
+        assert_eq!(a.passes, b.passes);
+        assert!((a.objective - b.objective).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn save_load_transform_round_trip_is_bitwise_equal() {
+    let w = Workload::generate(Scale::tiny());
+    let (la, lb) = w.lambdas(0.01);
+    let mut eng = w.train_engine();
+    let fitted = Cca::builder()
+        .k(6)
+        .oversample(24)
+        .power_iters(1)
+        .lambda(la, lb)
+        .seed(99)
+        .fit(&mut eng)
+        .unwrap();
+
+    let dir = workdir("roundtrip");
+    let path = dir.join("model.json");
+    fitted.save(&path).unwrap();
+    let loaded = FittedModel::load(&path).unwrap();
+
+    // Bitwise-equal projections of held-out data.
+    let want_a = fitted.transform_a(&w.test.a).unwrap();
+    let got_a = loaded.transform_a(&w.test.a).unwrap();
+    assert_eq!(got_a, want_a, "view-A projections must round-trip bitwise");
+    let want_b = fitted.transform_b(&w.test.b).unwrap();
+    let got_b = loaded.transform_b(&w.test.b).unwrap();
+    assert_eq!(got_b, want_b, "view-B projections must round-trip bitwise");
+    assert_eq!(loaded.correlations(), fitted.correlations());
+    assert_eq!(loaded.lambda_a, fitted.lambda_a);
+    assert_eq!(loaded.lambda_b, fitted.lambda_b);
+    assert_eq!(loaded.passes(), fitted.passes());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn engines_from_every_constructor_agree_on_the_fit() {
+    let w = Workload::generate(Scale::tiny());
+    let (la, lb) = w.lambdas(0.01);
+    let dir = workdir("engines");
+    let fit = |eng: &mut Engine| {
+        Cca::builder()
+            .k(6)
+            .oversample(24)
+            .power_iters(1)
+            .lambda(la, lb)
+            .seed(99)
+            .fit(eng)
+            .unwrap()
+    };
+    let mut inmem = w.train_engine();
+    let m1 = fit(&mut inmem);
+    let mut sharded = Engine::for_workload(&w, Backend::Native, &dir, 3, 100).unwrap();
+    assert_eq!(sharded.backend(), Backend::Native);
+    let m2 = fit(&mut sharded);
+    for i in 0..6 {
+        assert!(
+            (m1.correlations()[i] - m2.correlations()[i]).abs() < 1e-4,
+            "sigma_{i}: {} vs {}",
+            m1.correlations()[i],
+            m2.correlations()[i]
+        );
+    }
+    // The shard dir written by for_workload is addressable via from_spec.
+    let shards = dir.join(format!(
+        "shards_n{}_d{}_s{}",
+        w.train.rows(),
+        w.scale.dims,
+        w.scale.seed
+    ));
+    let spec = format!("inmemory:{}", shards.display());
+    let mut respec = Engine::from_spec(&spec).unwrap();
+    let m3 = fit(&mut respec);
+    assert_eq!(m3.correlations(), m1.correlations());
+    // Coordinator metrics are reachable through the api engine.
+    assert!(sharded.metrics().is_some());
+    assert!(inmem.metrics().is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn nu_and_explicit_lambda_agree_through_the_lambda_type() {
+    let w = Workload::generate(Scale::tiny());
+    let nu = 0.02;
+    let (la, lb) = Lambda::Nu(nu).resolve_views(&w.train.a, &w.train.b);
+    assert_eq!((la, lb), w.lambdas(nu), "Workload::lambdas routes through Lambda");
+
+    let mut e1 = w.train_engine();
+    let via_nu = Cca::builder()
+        .k(4)
+        .oversample(8)
+        .nu(nu)
+        .seed(3)
+        .fit(&mut e1)
+        .unwrap();
+    let mut e2 = w.train_engine();
+    let via_explicit = Cca::builder()
+        .k(4)
+        .oversample(8)
+        .lambda(la, lb)
+        .seed(3)
+        .fit(&mut e2)
+        .unwrap();
+    assert_eq!(via_nu.correlations(), via_explicit.correlations());
+    assert_eq!(via_nu.lambda_a, via_explicit.lambda_a);
+    // ν resolution cost exactly one extra (cached) gram-trace pass.
+    assert_eq!(via_nu.passes(), via_explicit.passes() + 1);
+}

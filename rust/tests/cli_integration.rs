@@ -120,6 +120,53 @@ fn tiny_gen_writes_shards() {
 }
 
 #[test]
+fn model_saved_by_repro_rcca_transforms_held_out_data() {
+    use rcca::api::{Cca, FittedModel};
+    use rcca::experiments::{Scale, Workload};
+
+    let dir = std::env::temp_dir().join("rcca_cli_save");
+    let _ = std::fs::remove_dir_all(&dir);
+    let model_path = dir.join("model.json");
+    let text = run_ok(&[
+        "rcca",
+        "--tiny",
+        "--p",
+        "16",
+        "--save",
+        model_path.to_str().unwrap(),
+        "--report-dir",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(text.contains("model saved to"));
+
+    // Load in this process and project the held-out split.
+    let loaded = FittedModel::load(&model_path).expect("load model saved by the CLI");
+    let w = Workload::generate(Scale::tiny());
+    let embedded = loaded.transform_a(&w.test.a).expect("transform held-out rows");
+    assert_eq!((embedded.rows, embedded.cols), (w.test.rows(), w.scale.k));
+    assert!(embedded.data.iter().all(|v| v.is_finite()));
+
+    // The CLI fit is deterministic; refitting with the same session config
+    // must agree with the reloaded model on held-out projections.
+    let (la, lb) = w.lambdas(0.01);
+    let refit = Cca::builder()
+        .k(w.scale.k)
+        .oversample(16)
+        .power_iters(1)
+        .lambda(la, lb)
+        .seed(w.scale.seed ^ 0xacca)
+        .fit(&mut w.train_engine())
+        .unwrap();
+    let want = refit.transform_a(&w.test.a).unwrap();
+    assert!(
+        embedded.rel_diff(&want) < 1e-12,
+        "loaded model drifted from the deterministic fit: {}",
+        embedded.rel_diff(&want)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn tiny_horst_with_rcca_init_runs() {
     let dir = std::env::temp_dir().join("rcca_cli_horst");
     let _ = std::fs::remove_dir_all(&dir);

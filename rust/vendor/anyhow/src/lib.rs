@@ -1,0 +1,239 @@
+//! Minimal offline workalike of the `anyhow` error facade.
+//!
+//! The build image has no crates.io access (see `rcca::util` module docs:
+//! every ecosystem dependency is reimplemented in-tree), so this vendored
+//! crate supplies the subset of anyhow's API that the system uses:
+//!
+//! * [`Error`] — an opaque, context-chained error value (`Send + Sync`);
+//! * [`Result`] — `Result<T, Error>` alias with a defaultable error type;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — message/format constructors;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Semantics match anyhow where it matters to callers: `{e}` displays the
+//! outermost message, `{e:#}` displays the whole cause chain separated by
+//! `": "`, and `?` converts any `std::error::Error + Send + Sync + 'static`
+//! into [`Error`]. Unsupported: downcasting, backtraces.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An opaque error with an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap `self` as the cause of a new, higher-level message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// Iterate the message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut items = vec![self.msg.as_str()];
+        let mut cur = &self.source;
+        while let Some(e) = cur {
+            items.push(e.msg.as_str());
+            cur = &e.source;
+        }
+        items.into_iter()
+    }
+
+    /// The innermost message in the chain.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(src) = &cur.source {
+            cur = src;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — full chain, anyhow-style.
+            let mut first = true;
+            for m in self.chain() {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                f.write_str(m)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug shows the whole chain so `unwrap()` failures are diagnosable.
+        write!(f, "{self:#}")
+    }
+}
+
+/// Any standard error converts into [`Error`], which is what makes `?` work
+/// in functions returning [`Result`]. `Error` itself deliberately does not
+/// implement `std::error::Error` (mirroring anyhow) so this blanket impl
+/// does not overlap with the reflexive `From<Error> for Error`.
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // Preserve the source chain as context layers.
+        let mut msgs = Vec::new();
+        msgs.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(match err {
+                None => Error::msg(m),
+                Some(inner) => inner.context(m),
+            });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with a defaultable error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and to `None`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(,)?) => {
+        $crate::Error::msg(format!($fmt))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($tok:tt)*) => {
+        return Err($crate::anyhow!($($tok)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($tok:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($tok)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(e.root_cause(), "inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e}").contains("gone"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("while loading").unwrap_err();
+        assert_eq!(format!("{e}"), "while loading");
+        assert!(format!("{e:#}").contains("gone"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x > 1, "too small: {x}");
+            if x > 10 {
+                bail!("too big: {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(0).unwrap_err()), "too small: 0");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "too big: 11");
+        let from_string = anyhow!(String::from("owned message"));
+        assert_eq!(format!("{from_string}"), "owned message");
+    }
+}
