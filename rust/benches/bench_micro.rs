@@ -5,29 +5,53 @@
 //!   P3  hashing + generator throughput (data-plane cost)
 //!   P4  coordinator overhead — pass cost vs raw engine cost, pool latency
 //!
-//! These feed EXPERIMENTS.md §Perf (before/after iteration log).
+//! These feed EXPERIMENTS.md §Perf (before/after iteration log). Every
+//! measured section also lands in `BENCH_micro.json` at the repo root so
+//! perf is tracked machine-readably across PRs.
 
 mod common;
 
-use rcca::bench::bench_fn;
+use rcca::bench::{bench_fn, write_bench_json, Stats};
 use rcca::data::synthparl::{SynthParl, SynthParlConfig};
 use rcca::data::TwoViewChunk;
 use rcca::linalg::gemm::{sgemm_nn, sgemm_tn};
 use rcca::linalg::Mat;
 use rcca::runtime::{mat_to_f32, ChunkEngine, NativeEngine};
+use rcca::util::json::Json;
 use rcca::util::pool::Pool;
 use rcca::util::rng::Rng;
 use std::path::Path;
 
-fn main() {
-    println!("# micro benches (P1–P4)\n");
-    p1_gemm();
-    p2_engines();
-    p3_dataplane();
-    p4_coordinator();
+/// Accumulates `name -> Stats` entries for the BENCH_micro.json trajectory.
+struct Trajectory(Json);
+
+impl Trajectory {
+    fn new() -> Trajectory {
+        Trajectory(Json::obj())
+    }
+
+    fn record(&mut self, name: &str, stats: &Stats) {
+        self.0.set(name, stats.to_json());
+    }
 }
 
-fn p1_gemm() {
+fn main() {
+    println!("# micro benches (P1–P4)\n");
+    let mut traj = Trajectory::new();
+    p1_gemm(&mut traj);
+    p2_engines(&mut traj);
+    p3_dataplane(&mut traj);
+    p4_coordinator(&mut traj);
+    let mut doc = Json::obj();
+    doc.set("bench", rcca::util::json::jstr("micro"));
+    doc.set("sections", traj.0);
+    match write_bench_json("micro", &doc) {
+        Ok(path) => println!("trajectory: {path}"),
+        Err(e) => eprintln!("warning: could not write BENCH_micro.json: {e}"),
+    }
+}
+
+fn p1_gemm(traj: &mut Trajectory) {
     println!("## P1: f32 GEMM");
     let mut rng = Rng::new(1);
     for &(m, k, n) in &[(256usize, 1024usize, 160usize), (256, 4096, 160), (512, 512, 512)] {
@@ -40,6 +64,7 @@ fn p1_gemm() {
             sgemm_nn(m, k, n, &a, &b, &mut c);
         });
         println!("    -> {:.2} GFLOP/s", flops / stats.p50 / 1e9);
+        traj.record(&format!("sgemm_nn_{m}x{k}x{n}"), &stats);
         let mut ct = vec![0f32; k.min(1024) * n];
         let kt = k.min(1024);
         let at: Vec<f32> = (0..m * kt).map(|_| rng.normal() as f32).collect();
@@ -50,6 +75,9 @@ fn p1_gemm() {
             sgemm_tn(m, kt, n, &at, &bt, &mut ct);
         });
         println!("    -> {:.2} GFLOP/s", flops_t / stats.p50 / 1e9);
+        // Keyed on the original k too: kt clamps to 1024, so two sweep
+        // cases share the same (m, kt, n) shape and would collide.
+        traj.record(&format!("sgemm_tn_{m}x{kt}x{n}_k{k}"), &stats);
     }
     println!();
 }
@@ -68,7 +96,7 @@ fn bench_chunk(dims: usize, mean_len: f64) -> TwoViewChunk {
     TwoViewChunk { a: d.a, b: d.b }
 }
 
-fn p2_engines() {
+fn p2_engines(traj: &mut Trajectory) {
     println!("## P2: chunk engines — sparse-native vs dense-XLA (PJRT)");
     let have_artifacts = Path::new("artifacts/manifest.json").exists();
     let native = NativeEngine::new();
@@ -109,6 +137,7 @@ fn p2_engines() {
         let sn = bench_fn(&format!("native power_chunk d=256 r=32 density={density:.3}"), || {
             native.power_chunk(&chunk, &qa, &qb, 32).unwrap();
         });
+        traj.record(&format!("native_power_chunk_mean_len_{mean_len}"), &sn);
         if let Some(p) = &pjrt {
             let sp = bench_fn(&format!("pjrt   power_chunk d=256 r=32 density={density:.3}"), || {
                 p.power_chunk(&chunk, &qa, &qb, 32).unwrap();
@@ -123,13 +152,13 @@ fn p2_engines() {
     println!();
 }
 
-fn p3_dataplane() {
+fn p3_dataplane(traj: &mut Trajectory) {
     println!("## P3: data plane");
     let stats = bench_fn("synthparl generate+hash n=2000 d=2048", || {
         let _ = bench_chunk(2048, 16.0);
         // bench_chunk generates 256 rows; generate a bigger one inline:
     });
-    let _ = stats;
+    traj.record("synthparl_generate_hash", &stats);
     let mut chunk = bench_chunk(2048, 16.0);
     let rows = chunk.rows();
     let nnz = chunk.a.nnz();
@@ -141,6 +170,7 @@ fn p3_dataplane() {
         "    -> {:.1} MB/s densified ({nnz} nnz)",
         (rows * 2048 * 4) as f64 / stats.p50 / 1e6
     );
+    traj.record("csr_densify_256x2048", &stats);
     let enc = rcca::data::shards::encode_shard(&chunk);
     println!("  shard encode: {} bytes for {} rows", enc.len(), rows);
     let stats = bench_fn("shard decode+validate", || {
@@ -150,11 +180,12 @@ fn p3_dataplane() {
         "    -> {:.1} MB/s decode",
         enc.len() as f64 / stats.p50 / 1e6
     );
+    traj.record("shard_decode_validate", &stats);
     chunk.a.values[0] += 0.0; // keep mutable binding honest
     println!();
 }
 
-fn p4_coordinator() {
+fn p4_coordinator(traj: &mut Trajectory) {
     println!("## P4: coordinator overhead");
     // Pool task round-trip latency.
     let pool = Pool::new(2, 64);
@@ -165,9 +196,11 @@ fn p4_coordinator() {
         pool.wait_idle();
     });
     println!(
-        "    -> {:.2} µs/task scheduling overhead",
-        stats.p50 / 64.0 * 1e6
+        "    -> {:.2} µs/task scheduling overhead ({} still active)",
+        stats.p50 / 64.0 * 1e6,
+        pool.active()
     );
+    traj.record("pool_submit_wait_idle_x64", &stats);
 
     // Full pass cost vs sum of raw engine chunk costs, through the api
     // engine (same coordinator underneath, metrics exposed via
@@ -204,6 +237,7 @@ fn p4_coordinator() {
     let stats = bench_fn("coordinator power_pass n=4096 d=1024 r=64", || {
         let _ = sharded.power_pass(&qa, &qb);
     });
+    traj.record("coordinator_power_pass_n4096_d1024_r64", &stats);
     let m = sharded.metrics().expect("sharded engine has metrics").snapshot();
     println!(
         "    -> pass p50 {:.1}ms; engine share {:.0}%; metrics {m}",

@@ -1,0 +1,168 @@
+//! Serve load benchmark: an in-process load generator driving `rcca::serve`
+//! over real localhost sockets.
+//!
+//! Fits a small model, starts the server on an ephemeral port, then hammers
+//! `POST /v1/transform` from several keep-alive client threads — ≥ 10k
+//! requests total, zero tolerated failures. Reports throughput and p50/p99
+//! latency (plus the batcher's fusion stats) both to stdout and to
+//! `BENCH_serve.json` at the repo root for the cross-PR perf trajectory.
+
+use rcca::api::{Cca, Engine};
+use rcca::bench::write_bench_json;
+use rcca::data::synthparl::{SynthParl, SynthParlConfig};
+use rcca::data::TwoViewChunk;
+use rcca::serve::{proto, HttpClient, Server, ServerConfig, View};
+use rcca::util::json::{jnum, jstr, Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const CLIENT_THREADS: usize = 4;
+const REQUESTS_PER_CLIENT: usize = 3000; // 12k total, ≥ 10k floor
+const DISTINCT_BODIES: usize = 64;
+
+fn main() {
+    // A serving-shaped corpus: small enough to fit in seconds, wide enough
+    // that a transform does real sparse work.
+    let d = SynthParl::generate(SynthParlConfig {
+        n: 400,
+        dims: 64,
+        topics: 6,
+        words_per_topic: 10,
+        background_words: 24,
+        mean_len: 8.0,
+        seed: 2026,
+        ..Default::default()
+    });
+    let chunk = TwoViewChunk { a: d.a, b: d.b };
+    let mut eng = Engine::in_memory(chunk.clone());
+    let model = Cca::builder()
+        .k(4)
+        .oversample(12)
+        .power_iters(1)
+        .lambda(0.05, 0.05)
+        .seed(9)
+        .fit(&mut eng)
+        .expect("fit bench model");
+
+    let dir = std::env::temp_dir().join("rcca_bench_serve");
+    let _ = std::fs::remove_dir_all(&dir);
+    let model_path = dir.join("model.json");
+    model.save(&model_path).expect("save bench model");
+
+    let cfg = ServerConfig {
+        threads: 4,
+        queue_capacity: 256,
+        max_batch_rows: 128,
+        read_timeout: Duration::from_secs(10),
+        ..Default::default()
+    };
+    let server = Server::bind(&model_path, "127.0.0.1:0", cfg).expect("bind server");
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let metrics = server.metrics();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    // Pre-render request bodies (single rows, both views) so the measured
+    // loop is the server round-trip, not client-side JSON assembly.
+    let bodies: Arc<Vec<String>> = Arc::new(
+        (0..DISTINCT_BODIES)
+            .map(|i| {
+                let view = if i % 3 == 0 { View::B } else { View::A };
+                let src = match view {
+                    View::A => &chunk.a,
+                    View::B => &chunk.b,
+                };
+                proto::transform_request(view, &src.slice_rows(i, i + 1)).to_string_compact()
+            })
+            .collect(),
+    );
+
+    println!(
+        "# serve load: {CLIENT_THREADS} clients x {REQUESTS_PER_CLIENT} requests against {addr}"
+    );
+    let failed = Arc::new(AtomicU64::new(0));
+    let wall = Instant::now();
+    let mut workers = Vec::new();
+    for t in 0..CLIENT_THREADS {
+        let bodies = Arc::clone(&bodies);
+        let failed = Arc::clone(&failed);
+        workers.push(std::thread::spawn(move || {
+            let mut latencies = Vec::with_capacity(REQUESTS_PER_CLIENT);
+            let mut client = HttpClient::connect(addr).expect("connect load client");
+            for i in 0..REQUESTS_PER_CLIENT {
+                let body = &bodies[(t + i * CLIENT_THREADS) % bodies.len()];
+                let started = Instant::now();
+                match client.post("/v1/transform", body) {
+                    Ok((200, resp)) if resp.contains("projections") => {
+                        latencies.push(started.elapsed().as_secs_f64());
+                    }
+                    Ok((status, resp)) => {
+                        failed.fetch_add(1, Ordering::SeqCst);
+                        eprintln!("request failed: status {status}: {resp}");
+                    }
+                    Err(e) => {
+                        failed.fetch_add(1, Ordering::SeqCst);
+                        eprintln!("request errored: {e}");
+                        // Transport is gone; reconnect so one hiccup does
+                        // not cascade into thousands of failures.
+                        client = HttpClient::connect(addr).expect("reconnect load client");
+                    }
+                }
+            }
+            latencies
+        }));
+    }
+    let mut latencies: Vec<f64> = Vec::with_capacity(CLIENT_THREADS * REQUESTS_PER_CLIENT);
+    for w in workers {
+        latencies.extend(w.join().expect("join load client"));
+    }
+    let secs = wall.elapsed().as_secs_f64();
+    handle.shutdown();
+    server_thread.join().expect("join server");
+
+    let failed = failed.load(Ordering::SeqCst);
+    let total = (CLIENT_THREADS * REQUESTS_PER_CLIENT) as u64;
+    assert_eq!(failed, 0, "{failed} of {total} requests failed");
+    assert_eq!(latencies.len() as u64, total);
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| latencies[((q * (latencies.len() - 1) as f64).round() as usize)
+        .min(latencies.len() - 1)];
+    let (p50, p99) = (pct(0.50), pct(0.99));
+    let rps = total as f64 / secs;
+    let batches = metrics.batches.load(Ordering::Relaxed);
+    let rows = metrics.rows_transformed.load(Ordering::Relaxed);
+    let rejected = metrics.rejected_overload.load(Ordering::Relaxed);
+
+    println!("requests:    {total} ({failed} failed, {rejected} shed)");
+    println!("wall:        {secs:.2}s  ->  {rps:.0} req/s");
+    println!("latency:     p50 {:.3}ms  p99 {:.3}ms", p50 * 1e3, p99 * 1e3);
+    println!(
+        "batching:    {rows} rows in {batches} fused batches ({:.2} rows/batch)",
+        rows as f64 / batches.max(1) as f64
+    );
+
+    let mut doc = Json::obj();
+    doc.set("bench", jstr("serve"))
+        .set("requests", jnum(total as f64))
+        .set("failed", jnum(failed as f64))
+        .set("client_threads", jnum(CLIENT_THREADS as f64))
+        .set("server_threads", jnum(4.0))
+        .set("wall_secs", jnum(secs))
+        .set("requests_per_sec", jnum(rps))
+        .set("latency_p50_ms", jnum(p50 * 1e3))
+        .set("latency_p99_ms", jnum(p99 * 1e3))
+        .set("batches", jnum(batches as f64))
+        .set("rows_transformed", jnum(rows as f64))
+        .set(
+            "rows_per_batch",
+            jnum(rows as f64 / batches.max(1) as f64),
+        )
+        .set("rejected_overload", jnum(rejected as f64));
+    match write_bench_json("serve", &doc) {
+        Ok(path) => println!("trajectory: {path}"),
+        Err(e) => eprintln!("warning: could not write BENCH_serve.json: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

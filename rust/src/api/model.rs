@@ -69,6 +69,16 @@ impl FittedModel {
         self.model.k()
     }
 
+    /// View-A input dimension (rows of the A projection).
+    pub fn da(&self) -> usize {
+        self.model.xa.rows
+    }
+
+    /// View-B input dimension (rows of the B projection).
+    pub fn db(&self) -> usize {
+        self.model.xb.rows
+    }
+
     /// Estimated canonical correlations (length k, descending).
     pub fn correlations(&self) -> &[f64] {
         &self.model.sigma

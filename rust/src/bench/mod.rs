@@ -11,6 +11,7 @@ pub mod report;
 
 pub use report::Report;
 
+use crate::util::json::{jnum, Json};
 use crate::util::timer::{fmt_secs, Timer};
 
 /// Summary statistics over per-iteration wall times (seconds).
@@ -54,6 +55,29 @@ impl Stats {
             self.iters
         )
     }
+
+    /// JSON twin of [`Stats::line`] — one entry in a `BENCH_*.json`
+    /// trajectory document (times in seconds).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("iters", jnum(self.iters as f64))
+            .set("mean", jnum(self.mean))
+            .set("p50", jnum(self.p50))
+            .set("p95", jnum(self.p95))
+            .set("min", jnum(self.min))
+            .set("max", jnum(self.max))
+            .set("stddev", jnum(self.stddev));
+        o
+    }
+}
+
+/// Write a `BENCH_<name>.json` trajectory document into the current
+/// directory — under `cargo bench` that is the repo root, which is where
+/// the perf-over-PRs tooling looks for them. Returns the path written.
+pub fn write_bench_json(name: &str, doc: &Json) -> std::io::Result<String> {
+    let path = format!("BENCH_{name}.json");
+    std::fs::write(&path, doc.to_string_pretty())?;
+    Ok(path)
 }
 
 /// Benchmark a closure: `warmup` untimed runs, then timed runs until both
@@ -131,5 +155,14 @@ mod tests {
         let l = s.line("gemm");
         assert!(l.contains("gemm"));
         assert!(l.contains("iters"));
+    }
+
+    #[test]
+    fn stats_json_twin() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0]);
+        let j = s.to_json();
+        assert_eq!(j.get("iters").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("p50").unwrap().as_f64(), Some(2.0));
+        assert!(crate::util::json::parse(&j.to_string_pretty()).is_ok());
     }
 }

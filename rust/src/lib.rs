@@ -20,6 +20,10 @@
 //!   `Cca::builder() → fit → FittedModel` with transform, persistence, and
 //!   warm-start; `Engine::{in_memory, sharded, from_spec}` unifies engine
 //!   construction.
+//! * [`serve`] — the fit→serve half of the lifecycle: a std-only HTTP/1.1
+//!   model server (`repro serve`) with request batching, atomic model
+//!   hot-swap, and a metrics surface; `repro transform` is its offline
+//!   twin over the same wire schema.
 //!
 //! See DESIGN.md for the full system inventory and the per-experiment index.
 
@@ -31,5 +35,6 @@ pub mod data;
 pub mod experiments;
 pub mod runtime;
 pub mod linalg;
+pub mod serve;
 pub mod sparse;
 pub mod util;

@@ -8,18 +8,23 @@
 //!   fig2a      E2 / Figure 2a — (q, p) sweep vs Horst reference
 //!   table2b    E3 / Table 2b — times + train/test + Horst rows
 //!   nu-sweep   E4 / Figure 3 — ν sensitivity, rcca vs Horst
+//!   serve      HTTP model server over a saved model (rcca::serve)
+//!   transform  offline projection of a dataset through a saved model
 //!
 //! Every experiment writes its JSON twin under --report-dir. All fitting
 //! goes through the `rcca::api` session layer (builder → fit →
 //! FittedModel); `rcca --save` persists the fitted model as JSON for reuse
-//! in another process (`rcca::api::FittedModel::load`).
+//! by `serve`/`transform` or any other process
+//! (`rcca::api::FittedModel::load`).
 
-use rcca::api::{Backend, Cca, Engine, Solver};
+use rcca::api::{Backend, Cca, Engine, FittedModel, Solver};
 use rcca::bench::Report;
 use rcca::experiments::{self, Scale, Workload};
+use rcca::serve::{proto, Server, ServerConfig, View};
 use rcca::util::cli::{Args, Spec};
 use rcca::util::timer::Timer;
 use std::path::Path;
+use std::time::Duration;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -46,6 +51,8 @@ fn usage() -> String {
        fig2a      Figure 2a — objective vs (q, p) with Horst reference\n\
        table2b    Table 2b — times, train/test, Horst rows\n\
        nu-sweep   Figure 3 — nu sensitivity\n\
+       serve      HTTP model server over a saved model\n\
+       transform  offline projection through a saved model\n\
      \n\
      Run `repro <subcommand> --help` for flags.\n"
         .to_string()
@@ -98,6 +105,8 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "fig2a" => cmd_fig2a(rest),
         "table2b" => cmd_table2b(rest),
         "nu-sweep" => cmd_nu(rest),
+        "serve" => cmd_serve(rest),
+        "transform" => cmd_transform(rest),
         "--help" | "-h" | "help" => {
             print!("{}", usage());
             Ok(())
@@ -321,6 +330,106 @@ fn cmd_table2b(argv: Vec<String>) -> anyhow::Result<()> {
     cfg.horst_budget = args.usize("horst-passes")?;
     let res = experiments::e3_table::run(&w, &cfg)?;
     emit(&experiments::e3_table::report(&res), args.str("report-dir"))
+}
+
+fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
+    let spec = Spec::new("serve", "serve a saved model over HTTP (rcca::serve)")
+        .req("model", "path to a saved rcca-model-v1 document")
+        .opt("addr", "127.0.0.1:8077", "listen address (port 0 = ephemeral)")
+        .opt(
+            "threads",
+            "8",
+            "connection-handler threads (each open keep-alive connection pins one)",
+        )
+        .opt("queue", "128", "pending-connection bound; 503 beyond it")
+        .opt("max-batch-rows", "256", "row budget per fused transform batch")
+        .opt("read-timeout-secs", "30", "idle keep-alive read timeout (s)");
+    let args = parse(spec, &argv)?;
+    let threads = args.usize("threads")?;
+    let queue = args.usize("queue")?;
+    let max_batch_rows = args.usize("max-batch-rows")?;
+    anyhow::ensure!(
+        threads > 0 && queue > 0 && max_batch_rows > 0,
+        "--threads/--queue/--max-batch-rows must be positive"
+    );
+    let cfg = ServerConfig {
+        threads,
+        queue_capacity: queue,
+        max_batch_rows,
+        read_timeout: Duration::from_secs(args.u64("read-timeout-secs")?.max(1)),
+        ..Default::default()
+    };
+    let server = Server::bind(Path::new(args.str("model")), args.str("addr"), cfg)?;
+    // Stdout is line-buffered, so the smoke tooling can read the bound
+    // address even when output is redirected.
+    println!(
+        "serving {} at http://{}",
+        args.str("model"),
+        server.local_addr()
+    );
+    println!(
+        "endpoints: GET /healthz | GET /v1/model | GET /metrics | \
+         POST /v1/transform | POST /admin/reload"
+    );
+    server.run();
+    Ok(())
+}
+
+fn cmd_transform(argv: Vec<String>) -> anyhow::Result<()> {
+    let spec = scale_flags(Spec::new(
+        "transform",
+        "project a dataset through a saved model (offline twin of serve)",
+    ))
+    .req("model", "path to a saved rcca-model-v1 document")
+    .opt("view", "a", "which view to project: a|b")
+    .opt(
+        "shards",
+        "",
+        "shard directory to project; empty = the generated test split from the scale flags",
+    )
+    .opt("out", "projections.json", "output JSON path");
+    let args = parse(spec, &argv)?;
+    let model = FittedModel::load(Path::new(args.str("model")))?;
+    let view = View::parse(args.str("view"))?;
+    let shards = args.str("shards");
+    let (csr, source) = if shards.is_empty() {
+        let w = Workload::generate(scale_from(&args)?);
+        let csr = match view {
+            View::A => w.test.a,
+            View::B => w.test.b,
+        };
+        (csr, "generated test split".to_string())
+    } else {
+        let chunk = rcca::data::shards::ShardStore::open(Path::new(shards))
+            .map_err(|e| anyhow::anyhow!("open shards: {e}"))?
+            .load_all()
+            .map_err(|e| anyhow::anyhow!("load shards: {e}"))?;
+        let csr = match view {
+            View::A => chunk.a,
+            View::B => chunk.b,
+        };
+        (csr, shards.to_string())
+    };
+    let t = Timer::start();
+    let proj = view.transform(&model, &csr)?;
+    let doc = proto::projection_document(view, &proj, None);
+    let out = Path::new(args.str("out"));
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(out, doc.to_string_pretty())?;
+    println!(
+        "projected {} rows (view {}) from {} through {} in {:.2}s -> {}",
+        proj.rows,
+        view.as_str(),
+        source,
+        args.str("model"),
+        t.secs(),
+        out.display()
+    );
+    Ok(())
 }
 
 fn cmd_nu(argv: Vec<String>) -> anyhow::Result<()> {

@@ -1,0 +1,330 @@
+//! Request batcher: coalesces concurrent transform requests into one fused
+//! `Csr::times_mat` per view.
+//!
+//! The projection hot path is a sparse×dense product whose cost is
+//! per-nonzero plus a per-call fixed overhead (allocation, cache warmup of
+//! the k-wide projection panel). Under concurrency, many single-row
+//! requests arrive while one product is in flight; the batcher drains them
+//! all, stacks their rows with [`Csr::vcat`], projects once, and scatters
+//! the result rows back to the waiting connection handlers. Natural
+//! batching emerges from load — an idle server still answers a lone request
+//! immediately (the worker wakes on submit and finds a batch of one).
+//!
+//! The batch worker is a dedicated thread, NOT a task on the connection
+//! pool: connection handlers block on their response slot, so running the
+//! batch on the same pool could deadlock with every worker waiting and
+//! nobody left to compute.
+
+use super::metrics::ServeMetrics;
+use super::proto::View;
+use super::registry::ModelRegistry;
+use super::ServeError;
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A batched transform answer: the projected rows plus the registry
+/// generation of the model that produced them.
+pub type BatchResult = Result<(Mat, u64), ServeError>;
+
+struct Pending {
+    view: View,
+    rows: Csr,
+    tx: mpsc::Sender<BatchResult>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Pending>>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+    /// Row budget per fused batch; a drain stops adding requests once
+    /// exceeded (the batch that crosses the line still runs whole).
+    max_batch_rows: usize,
+}
+
+pub struct Batcher {
+    shared: Arc<Shared>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn start(
+        registry: Arc<ModelRegistry>,
+        metrics: Arc<ServeMetrics>,
+        max_batch_rows: usize,
+    ) -> Batcher {
+        assert!(max_batch_rows > 0);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            max_batch_rows,
+        });
+        let worker_shared = Arc::clone(&shared);
+        let worker = std::thread::Builder::new()
+            .name("rcca-batcher".to_string())
+            .spawn(move || batch_loop(&worker_shared, &registry, &metrics))
+            .expect("spawn batcher");
+        Batcher {
+            shared,
+            worker: Some(worker),
+        }
+    }
+
+    /// Enqueue a request's rows; the returned receiver yields the projected
+    /// rows once the batch containing them runs.
+    pub fn submit(&self, view: View, rows: Csr) -> mpsc::Receiver<BatchResult> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Pending { view, rows, tx });
+        }
+        self.shared.wake.notify_one();
+        rx
+    }
+
+    /// Pending requests not yet drained into a batch (observability).
+    pub fn queued(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.wake.notify_all();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn batch_loop(shared: &Shared, registry: &ModelRegistry, metrics: &ServeMetrics) {
+    loop {
+        let batch: Vec<Pending> = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return; // queue drained — shutdown completes
+                }
+                q = shared.wake.wait(q).unwrap();
+            }
+            let mut batch = Vec::new();
+            let mut rows = 0usize;
+            while let Some(p) = q.front() {
+                if !batch.is_empty() && rows + p.rows.rows > shared.max_batch_rows {
+                    break;
+                }
+                rows += p.rows.rows;
+                batch.push(q.pop_front().unwrap());
+            }
+            batch
+        };
+        run_batch(batch, registry, metrics);
+    }
+}
+
+/// Project one drained batch. The model snapshot is taken once per batch:
+/// requests drained before a hot-swap completes are answered by the model
+/// that was current when their batch started (and report its generation).
+fn run_batch(batch: Vec<Pending>, registry: &ModelRegistry, metrics: &ServeMetrics) {
+    let snap = registry.snapshot();
+    for view in [View::A, View::B] {
+        let group: Vec<&Pending> = batch.iter().filter(|p| p.view == view).collect();
+        if group.is_empty() {
+            continue;
+        }
+        let dim = view.dim(&snap.model);
+        // A hot swap can change dimensions between parse-time validation and
+        // batch time; affected requests get a typed error, not a panic.
+        let (fit, misfit): (Vec<&Pending>, Vec<&Pending>) =
+            group.into_iter().partition(|p| p.rows.cols == dim);
+        for p in misfit {
+            let _ = p.tx.send(Err(ServeError::Dimension {
+                expected: dim,
+                got: p.rows.cols,
+            }));
+        }
+        if fit.is_empty() {
+            continue;
+        }
+        let parts: Vec<&Csr> = fit.iter().map(|p| &p.rows).collect();
+        let stacked = Csr::vcat(&parts);
+        let total_rows = stacked.rows;
+        match view.transform(&snap.model, &stacked) {
+            Err(e) => {
+                for p in fit {
+                    let _ = p.tx.send(Err(ServeError::Internal(format!(
+                        "batched transform failed: {e}"
+                    ))));
+                }
+            }
+            Ok(proj) => {
+                metrics.add(&metrics.batches, 1);
+                metrics.add(&metrics.rows_transformed, total_rows as u64);
+                metrics.batch_rows.observe(total_rows as u64);
+                let k = proj.cols;
+                let mut offset = 0usize;
+                for p in fit {
+                    let n = p.rows.rows;
+                    let slice = proj.data[offset * k..(offset + n) * k].to_vec();
+                    offset += n;
+                    let _ = p.tx.send(Ok((Mat::from_vec(n, k, slice), snap.generation)));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Cca, Engine};
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::data::TwoViewChunk;
+    use std::path::Path;
+
+    fn corpus() -> TwoViewChunk {
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 260,
+            dims: 48,
+            topics: 4,
+            words_per_topic: 8,
+            background_words: 16,
+            mean_len: 6.0,
+            seed: 77,
+            ..Default::default()
+        });
+        TwoViewChunk { a: d.a, b: d.b }
+    }
+
+    fn registry_for(chunk: &TwoViewChunk, path: &Path) -> Arc<ModelRegistry> {
+        let mut eng = Engine::in_memory(chunk.clone());
+        let model = Cca::builder()
+            .k(3)
+            .oversample(8)
+            .power_iters(1)
+            .lambda(0.05, 0.05)
+            .seed(7)
+            .fit(&mut eng)
+            .unwrap();
+        model.save(path).unwrap();
+        Arc::new(ModelRegistry::open(path).unwrap())
+    }
+
+    #[test]
+    fn batched_results_match_direct_transform() {
+        let dir = std::env::temp_dir().join("rcca_batcher_direct");
+        let _ = std::fs::remove_dir_all(&dir);
+        let chunk = corpus();
+        let reg = registry_for(&chunk, &dir.join("m.json"));
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::start(Arc::clone(&reg), Arc::clone(&metrics), 128);
+
+        let model = reg.snapshot().model;
+        let want = model.transform_a(&chunk.a).unwrap();
+        // Submit rows one by one from this thread; each reply must equal the
+        // corresponding row of the full-dataset transform (bitwise: same
+        // f64 dot products in the same order).
+        for i in 0..20 {
+            let row = chunk.a.slice_rows(i, i + 1);
+            let rx = batcher.submit(View::A, row);
+            let (got, generation) = rx.recv().unwrap().unwrap();
+            assert_eq!(generation, 1);
+            assert_eq!((got.rows, got.cols), (1, 3));
+            assert_eq!(got.row(0), want.row(i), "row {i}");
+        }
+        // View B goes through xb.
+        let want_b = model.transform_b(&chunk.b).unwrap();
+        let rx = batcher.submit(View::B, chunk.b.slice_rows(0, 5));
+        let (got, _) = rx.recv().unwrap().unwrap();
+        assert_eq!(got.data, want_b.data[..5 * 3].to_vec());
+        assert!(metrics.batches.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        drop(batcher);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_submissions_coalesce_and_all_answer() {
+        let dir = std::env::temp_dir().join("rcca_batcher_conc");
+        let _ = std::fs::remove_dir_all(&dir);
+        let chunk = corpus();
+        let reg = registry_for(&chunk, &dir.join("m.json"));
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Arc::new(Batcher::start(Arc::clone(&reg), Arc::clone(&metrics), 256));
+
+        let model = reg.snapshot().model;
+        let want = model.transform_a(&chunk.a).unwrap();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let batcher = Arc::clone(&batcher);
+            let chunk = chunk.clone();
+            let want = want.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in (t * 30)..(t * 30 + 30) {
+                    let rx = batcher.submit(View::A, chunk.a.slice_rows(i, i + 1));
+                    let (got, _) = rx.recv().unwrap().unwrap();
+                    assert_eq!(got.row(0), want.row(i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = metrics
+            .rows_transformed
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(total, 120);
+        drop(batcher);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn width_mismatch_after_swap_is_typed_error() {
+        let dir = std::env::temp_dir().join("rcca_batcher_dim");
+        let _ = std::fs::remove_dir_all(&dir);
+        let chunk = corpus();
+        let reg = registry_for(&chunk, &dir.join("m.json"));
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::start(Arc::clone(&reg), metrics, 64);
+        // Rows wider than the model (96 vs 48) — as if validated against a
+        // model that was then swapped out.
+        let wide = Csr {
+            rows: 1,
+            cols: 96,
+            indptr: vec![0, 1],
+            indices: vec![90],
+            values: vec![1.0],
+        };
+        let rx = batcher.submit(View::A, wide);
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(
+            matches!(err, ServeError::Dimension { expected: 48, got: 96 }),
+            "{err:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drop_drains_pending_queue() {
+        let dir = std::env::temp_dir().join("rcca_batcher_drop");
+        let _ = std::fs::remove_dir_all(&dir);
+        let chunk = corpus();
+        let reg = registry_for(&chunk, &dir.join("m.json"));
+        let batcher = Batcher::start(Arc::clone(&reg), Arc::new(ServeMetrics::new()), 64);
+        let rxs: Vec<_> = (0..10)
+            .map(|i| batcher.submit(View::A, chunk.a.slice_rows(i, i + 1)))
+            .collect();
+        drop(batcher); // shutdown must answer everything already queued
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

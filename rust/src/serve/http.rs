@@ -1,0 +1,373 @@
+//! Hand-rolled HTTP/1.1 codec — the minimal subset the model server needs:
+//! request line + headers + `Content-Length` bodies on the read side,
+//! JSON responses with keep-alive on the write side. No chunked encoding,
+//! no TLS, no multipart; anything outside the subset is a typed
+//! [`HttpError`] so the connection handler can answer 400 instead of
+//! panicking or hanging.
+
+use std::io::{BufRead, Read, Write};
+
+/// Hard cap on one header line (request line included) — a malformed or
+/// hostile peer cannot make `read_line` buffer without bound.
+const MAX_LINE_BYTES: usize = 16 * 1024;
+/// Hard cap on the number of headers per request.
+const MAX_HEADERS: usize = 100;
+
+/// One parsed request. Header names are lowercased at parse time.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Request target as sent (path only; no query parsing — the API
+    /// surface is path-routed).
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the connection should stay open after the response.
+    pub keep_alive: bool,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> Result<&str, HttpError> {
+        std::str::from_utf8(&self.body)
+            .map_err(|_| HttpError::Malformed("body is not valid UTF-8".to_string()))
+    }
+}
+
+/// Read-side outcome: a request, or a cleanly closed connection (EOF
+/// between requests, which is how keep-alive ends).
+#[derive(Debug)]
+pub enum ReadOutcome {
+    Request(Request),
+    Closed,
+}
+
+#[derive(Debug)]
+pub enum HttpError {
+    /// Syntax violation — answer 400 and close.
+    Malformed(String),
+    /// Declared body exceeds the configured cap — answer 413 and close.
+    BodyTooLarge { declared: usize, limit: usize },
+    /// Transport failure (including read timeout on an idle keep-alive).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Malformed(m) => write!(f, "malformed request: {m}"),
+            HttpError::BodyTooLarge { declared, limit } => {
+                write!(f, "body of {declared} bytes exceeds limit {limit}")
+            }
+            HttpError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+impl From<std::io::Error> for HttpError {
+    fn from(e: std::io::Error) -> HttpError {
+        HttpError::Io(e)
+    }
+}
+
+fn read_line(reader: &mut dyn BufRead) -> Result<Option<String>, HttpError> {
+    let mut line = String::new();
+    let mut chunk = [0u8; 1];
+    // Byte-at-a-time via BufRead is fine: the underlying BufReader amortizes
+    // syscalls, and it lets us enforce MAX_LINE_BYTES without over-reading
+    // past the request.
+    loop {
+        match reader.read(&mut chunk)? {
+            0 => {
+                if line.is_empty() {
+                    return Ok(None); // clean EOF
+                }
+                return Err(HttpError::Malformed("unexpected EOF mid-line".to_string()));
+            }
+            _ => {
+                let b = chunk[0];
+                if b == b'\n' {
+                    if line.ends_with('\r') {
+                        line.pop();
+                    }
+                    return Ok(Some(line));
+                }
+                if line.len() >= MAX_LINE_BYTES {
+                    return Err(HttpError::Malformed("header line too long".to_string()));
+                }
+                if !b.is_ascii() {
+                    return Err(HttpError::Malformed("non-ascii header byte".to_string()));
+                }
+                line.push(b as char);
+            }
+        }
+    }
+}
+
+/// Read one request off the wire. `max_body` bounds the accepted
+/// `Content-Length`.
+pub fn read_request(reader: &mut dyn BufRead, max_body: usize) -> Result<ReadOutcome, HttpError> {
+    let request_line = match read_line(reader)? {
+        None => return Ok(ReadOutcome::Closed),
+        Some(l) => l,
+    };
+    let mut parts = request_line.split(' ');
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| HttpError::Malformed("empty request line".to_string()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| HttpError::Malformed("missing request target".to_string()))?
+        .to_string();
+    let version = parts
+        .next()
+        .ok_or_else(|| HttpError::Malformed("missing HTTP version".to_string()))?;
+    if parts.next().is_some() {
+        return Err(HttpError::Malformed("extra tokens in request line".to_string()));
+    }
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        other => {
+            return Err(HttpError::Malformed(format!(
+                "unsupported version '{other}'"
+            )))
+        }
+    };
+
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(reader)?
+            .ok_or_else(|| HttpError::Malformed("EOF inside headers".to_string()))?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::Malformed("too many headers".to_string()));
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::Malformed(format!("header without ':': '{line}'")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let content_length = match headers.iter().find(|(n, _)| n == "content-length") {
+        None => 0usize,
+        Some((_, v)) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::Malformed(format!("bad content-length '{v}'")))?,
+    };
+    if content_length > max_body {
+        return Err(HttpError::BodyTooLarge {
+            declared: content_length,
+            limit: max_body,
+        });
+    }
+    if headers
+        .iter()
+        .any(|(n, v)| n == "transfer-encoding" && !v.eq_ignore_ascii_case("identity"))
+    {
+        return Err(HttpError::Malformed(
+            "transfer-encoding is not supported (use content-length)".to_string(),
+        ));
+    }
+
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+
+    let connection = headers
+        .iter()
+        .find(|(n, _)| n == "connection")
+        .map(|(_, v)| v.to_ascii_lowercase());
+    let keep_alive = match connection.as_deref() {
+        Some("close") => false,
+        Some("keep-alive") => true,
+        _ => http11, // 1.1 defaults to keep-alive, 1.0 to close
+    };
+
+    Ok(ReadOutcome::Request(Request {
+        method,
+        path,
+        headers,
+        body,
+        keep_alive,
+    }))
+}
+
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a JSON response. `keep_alive: false` advertises `Connection:
+/// close` so well-behaved clients stop reusing the socket.
+pub fn write_json_response(
+    w: &mut dyn Write,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        status,
+        status_reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &str) -> Result<ReadOutcome, HttpError> {
+        let mut r = BufReader::new(raw.as_bytes());
+        read_request(&mut r, 1024)
+    }
+
+    fn req(raw: &str) -> Request {
+        match parse(raw).unwrap() {
+            ReadOutcome::Request(r) => r,
+            ReadOutcome::Closed => panic!("expected a request"),
+        }
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let r = req("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert!(r.keep_alive);
+        assert!(r.body.is_empty());
+        assert_eq!(r.header("host"), Some("x"));
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let r = req("POST /v1/transform HTTP/1.1\r\ncontent-length: 4\r\n\r\nabcd");
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.body, b"abcd");
+        assert_eq!(r.body_str().unwrap(), "abcd");
+    }
+
+    #[test]
+    fn bare_lf_lines_accepted() {
+        let r = req("GET /m HTTP/1.1\nhost: y\n\n");
+        assert_eq!(r.path, "/m");
+        assert_eq!(r.header("host"), Some("y"));
+    }
+
+    #[test]
+    fn connection_close_and_http10() {
+        let r = req("GET / HTTP/1.1\r\nconnection: close\r\n\r\n");
+        assert!(!r.keep_alive);
+        let r = req("GET / HTTP/1.0\r\n\r\n");
+        assert!(!r.keep_alive);
+        let r = req("GET / HTTP/1.0\r\nconnection: keep-alive\r\n\r\n");
+        assert!(r.keep_alive);
+    }
+
+    #[test]
+    fn clean_eof_is_closed() {
+        assert!(matches!(parse("").unwrap(), ReadOutcome::Closed));
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(matches!(
+            parse("GARBAGE\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse("GET / HTTP/2.0\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse("GET / HTTP/1.1\r\nbadheader\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse("GET / HTTP/1.1\r\ncontent-length: nope\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn oversized_body_rejected_up_front() {
+        let e = parse("POST / HTTP/1.1\r\ncontent-length: 999999\r\n\r\n").unwrap_err();
+        assert!(matches!(e, HttpError::BodyTooLarge { declared: 999999, .. }));
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc"),
+            Err(HttpError::Io(_))
+        ));
+    }
+
+    #[test]
+    fn response_writer_emits_parseable_head() {
+        let mut out = Vec::new();
+        write_json_response(&mut out, 200, "{\"ok\":true}", true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("content-length: 11\r\n"));
+        assert!(text.contains("connection: keep-alive"));
+        assert!(text.ends_with("{\"ok\":true}"));
+        let mut out = Vec::new();
+        write_json_response(&mut out, 503, "{}", false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("503 Service Unavailable"));
+        assert!(text.contains("connection: close"));
+    }
+
+    #[test]
+    fn request_smuggling_guards() {
+        // Two requests on one reader parse sequentially, not merged.
+        let raw = "GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let mut r = BufReader::new(raw.as_bytes());
+        let first = match read_request(&mut r, 64).unwrap() {
+            ReadOutcome::Request(x) => x,
+            _ => panic!(),
+        };
+        assert_eq!(first.path, "/a");
+        let second = match read_request(&mut r, 64).unwrap() {
+            ReadOutcome::Request(x) => x,
+            _ => panic!(),
+        };
+        assert_eq!(second.path, "/b");
+        assert!(matches!(
+            read_request(&mut r, 64).unwrap(),
+            ReadOutcome::Closed
+        ));
+    }
+}

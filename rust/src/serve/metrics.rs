@@ -1,0 +1,261 @@
+//! Serving metrics: wait-free counters plus log-bucketed histograms,
+//! snapshotted as JSON for `GET /metrics` (same style as
+//! `coordinator::metrics`, extended with the latency/batch distributions a
+//! request path needs).
+
+use crate::util::json::{jarr, jnum, Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Power-of-two-bucketed histogram over `u64` observations. Bucket `i`
+/// counts observations `v` with `v <= 2^i` (the last bucket is unbounded).
+/// Quantiles are reported as the upper bound of the containing bucket, so
+/// they overestimate by at most 2× — plenty for latency triage, and the
+/// whole structure stays wait-free.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    /// `pow2_buckets` bounded buckets (1, 2, 4, … 2^(pow2_buckets-1)) plus
+    /// one overflow bucket.
+    pub fn new(pow2_buckets: usize) -> Histogram {
+        assert!(pow2_buckets > 0);
+        Histogram {
+            buckets: (0..=pow2_buckets).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(&self, v: u64) -> usize {
+        // Smallest i with v <= 2^i; 64 - leading_zeros(v-1) for v >= 2.
+        let i = if v <= 1 {
+            0
+        } else {
+            64 - (v - 1).leading_zeros() as usize
+        };
+        i.min(self.buckets.len() - 1)
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.buckets[self.bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Upper bound of the bucket containing the q-th observation (0 if
+    /// empty). The overflow bucket reports its lower bound.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << i.min(63);
+            }
+        }
+        1u64 << (counts.len() - 1).min(63)
+    }
+
+    /// JSON snapshot: count/sum/mean/p50/p95/p99 plus non-empty buckets as
+    /// `[le, n]` pairs.
+    pub fn snapshot(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("count", jnum(self.count() as f64))
+            .set("sum", jnum(self.sum() as f64))
+            .set("mean", jnum(self.mean()))
+            .set("p50", jnum(self.quantile(0.50) as f64))
+            .set("p95", jnum(self.quantile(0.95) as f64))
+            .set("p99", jnum(self.quantile(0.99) as f64));
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                if n == 0 {
+                    None
+                } else {
+                    Some(jarr(vec![jnum((1u64 << i.min(63)) as f64), jnum(n as f64)]))
+                }
+            })
+            .collect();
+        o.set("buckets", jarr(buckets));
+        o
+    }
+}
+
+/// Counters for one server instance. Workers bump them from connection
+/// handlers and the batcher; `GET /metrics` serializes a snapshot.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    /// HTTP requests fully parsed and dispatched.
+    pub requests_total: AtomicU64,
+    /// Requests answered with a non-2xx status.
+    pub requests_failed: AtomicU64,
+    /// Connections accepted over the server's lifetime.
+    pub connections: AtomicU64,
+    /// Connections currently open (gauge).
+    pub connections_active: AtomicU64,
+    /// Connections turned away with 503 because the worker queue was full.
+    pub rejected_overload: AtomicU64,
+    /// Rows projected through the model (across all batches).
+    pub rows_transformed: AtomicU64,
+    /// Fused `times_mat` calls issued by the batcher.
+    pub batches: AtomicU64,
+    /// Successful `/admin/reload` swaps.
+    pub reloads: AtomicU64,
+    /// End-to-end request latency in microseconds (parse → response write).
+    pub latency_us: Histogram,
+    /// Rows per fused batch.
+    pub batch_rows: Histogram,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            requests_total: AtomicU64::new(0),
+            requests_failed: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+            connections_active: AtomicU64::new(0),
+            rejected_overload: AtomicU64::new(0),
+            rows_transformed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            // 2^24 µs ≈ 16.8 s covers any sane request; 2^16 rows per batch.
+            latency_us: Histogram::new(24),
+            batch_rows: Histogram::new(16),
+        }
+    }
+
+    pub fn add(&self, counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let g = |c: &AtomicU64| jnum(c.load(Ordering::Relaxed) as f64);
+        let mut o = Json::obj();
+        o.set("requests_total", g(&self.requests_total))
+            .set("requests_failed", g(&self.requests_failed))
+            .set("connections", g(&self.connections))
+            .set("connections_active", g(&self.connections_active))
+            .set("rejected_overload", g(&self.rejected_overload))
+            .set("rows_transformed", g(&self.rows_transformed))
+            .set("batches", g(&self.batches))
+            .set("reloads", g(&self.reloads))
+            .set("latency_us", self.latency_us.snapshot())
+            .set("batch_rows", self.batch_rows.snapshot());
+        o
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        let h = Histogram::new(8);
+        assert_eq!(h.bucket_index(0), 0);
+        assert_eq!(h.bucket_index(1), 0);
+        assert_eq!(h.bucket_index(2), 1);
+        assert_eq!(h.bucket_index(3), 2);
+        assert_eq!(h.bucket_index(4), 2);
+        assert_eq!(h.bucket_index(5), 3);
+        assert_eq!(h.bucket_index(256), 8);
+        // Overflow clamps to the last bucket.
+        assert_eq!(h.bucket_index(1 << 20), 8);
+    }
+
+    #[test]
+    fn quantiles_track_distribution() {
+        let h = Histogram::new(16);
+        for _ in 0..90 {
+            h.observe(10); // bucket le=16
+        }
+        for _ in 0..10 {
+            h.observe(1000); // bucket le=1024
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile(0.50), 16);
+        assert_eq!(h.quantile(0.90), 16);
+        assert_eq!(h.quantile(0.99), 1024);
+        assert!((h.mean() - (90.0 * 10.0 + 10.0 * 1000.0) / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_is_quiet() {
+        let h = Histogram::new(4);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        let s = h.snapshot();
+        assert_eq!(s.get("count").unwrap().as_usize(), Some(0));
+        assert_eq!(s.get("buckets").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn serve_metrics_snapshot_roundtrips() {
+        let m = ServeMetrics::new();
+        m.add(&m.requests_total, 5);
+        m.add(&m.rows_transformed, 12);
+        m.latency_us.observe(100);
+        let s = m.snapshot();
+        assert_eq!(s.get("requests_total").unwrap().as_usize(), Some(5));
+        assert_eq!(s.get("rows_transformed").unwrap().as_usize(), Some(12));
+        let text = s.to_string_pretty();
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn concurrent_observations() {
+        let h = std::sync::Arc::new(Histogram::new(10));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    h.observe(i % 100);
+                }
+            }));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 2000);
+    }
+}

@@ -1,0 +1,445 @@
+//! # `rcca::serve` — the model-serving subsystem.
+//!
+//! The fit→serve half of the lifecycle: a dependency-free HTTP/1.1 server
+//! that answers transform requests against a [`FittedModel`] loaded from
+//! the `rcca-model-v1` document that `repro rcca --save` (or any
+//! [`crate::api`] caller) wrote. Endpoints:
+//!
+//! | route                 | method | what                                        |
+//! |-----------------------|--------|---------------------------------------------|
+//! | `/v1/transform`       | POST   | sparse rows in → canonical projections out  |
+//! | `/v1/model`           | GET    | solver, k, correlations, passes, generation |
+//! | `/healthz`            | GET    | liveness + current model generation         |
+//! | `/metrics`            | GET    | counters + latency/batch histograms         |
+//! | `/admin/reload`       | POST   | atomic hot-swap from the model path         |
+//!
+//! Architecture: the accept loop hands each connection to the existing
+//! [`Pool`] (bounded queue → natural backpressure; a full queue turns
+//! connections away with 503 instead of stalling accepts). Handlers parse
+//! with the hand-rolled [`http`] codec, validate with [`proto`], and push
+//! transform rows into the [`batcher::Batcher`], which fuses concurrent
+//! requests into one `Csr::times_mat` per view against an atomic
+//! [`registry::ModelRegistry`] snapshot — a `POST /admin/reload` swaps the
+//! `Arc<FittedModel>` without stalling in-flight work.
+//!
+//! Everything is `std`-only, in keeping with the offline build (see
+//! `Cargo.toml`): no tokio, no hyper, no serde.
+
+pub mod batcher;
+pub mod client;
+pub mod http;
+pub mod metrics;
+pub mod proto;
+pub mod registry;
+
+pub use batcher::Batcher;
+pub use client::HttpClient;
+pub use metrics::ServeMetrics;
+pub use proto::View;
+pub use registry::ModelRegistry;
+
+use crate::api::ApiError;
+use crate::util::json::{jnum, jstr, Json};
+use crate::util::pool::Pool;
+use std::fmt;
+use std::io::{BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Typed serving error; every variant maps to an HTTP status so handlers
+/// answer with a structured JSON error instead of panicking or hanging up.
+#[derive(Debug)]
+pub enum ServeError {
+    /// Malformed JSON or schema violation → 400.
+    BadRequest(String),
+    /// Unknown route → 404.
+    NotFound(String),
+    /// Known route, wrong verb → 405.
+    MethodNotAllowed { path: String, method: String },
+    /// Body over the configured cap → 413.
+    PayloadTooLarge { declared: usize, limit: usize },
+    /// Structurally valid request that does not fit the model → 422.
+    Dimension { expected: usize, got: usize },
+    /// Reload failed; the old model keeps serving → 409.
+    Reload(String),
+    /// Worker queue full → 503.
+    Overloaded,
+    /// Startup / model-layer failure → 500.
+    Model(String),
+    /// Anything else on the server side → 500.
+    Internal(String),
+}
+
+impl ServeError {
+    pub fn status(&self) -> u16 {
+        match self {
+            ServeError::BadRequest(_) => 400,
+            ServeError::NotFound(_) => 404,
+            ServeError::MethodNotAllowed { .. } => 405,
+            ServeError::PayloadTooLarge { .. } => 413,
+            ServeError::Dimension { .. } => 422,
+            ServeError::Reload(_) => 409,
+            ServeError::Overloaded => 503,
+            ServeError::Model(_) | ServeError::Internal(_) => 500,
+        }
+    }
+
+    /// JSON error body: `{"error": {"status": 422, "message": "..."}}`.
+    pub fn to_body(&self) -> String {
+        let mut inner = Json::obj();
+        inner
+            .set("status", jnum(self.status() as f64))
+            .set("message", jstr(&self.to_string()));
+        let mut o = Json::obj();
+        o.set("error", inner);
+        o.to_string_compact()
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::BadRequest(m) => write!(f, "bad request: {m}"),
+            ServeError::NotFound(p) => write!(f, "no route for '{p}'"),
+            ServeError::MethodNotAllowed { path, method } => {
+                write!(f, "method {method} not allowed on '{path}'")
+            }
+            ServeError::PayloadTooLarge { declared, limit } => {
+                write!(f, "body of {declared} bytes exceeds limit {limit}")
+            }
+            ServeError::Dimension { expected, got } => write!(
+                f,
+                "dimension mismatch: model expects width {expected}, request has {got}"
+            ),
+            ServeError::Reload(m) => write!(f, "reload rejected: {m}"),
+            ServeError::Overloaded => write!(f, "server overloaded, try again"),
+            ServeError::Model(m) => write!(f, "model: {m}"),
+            ServeError::Internal(m) => write!(f, "internal: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<ApiError> for ServeError {
+    fn from(e: ApiError) -> ServeError {
+        ServeError::Model(e.to_string())
+    }
+}
+
+/// Server tunables; `Default` suits tests and small deployments.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Connection-handler threads (the `Pool` size). The model is
+    /// thread-per-connection: a keep-alive connection pins its worker
+    /// while open, so size this at least as large as the number of
+    /// steady keep-alive clients, with headroom for health probes and
+    /// `/admin/reload` — excess connections wait in the bounded queue.
+    pub threads: usize,
+    /// Bounded pending-connection queue; beyond it, accepts answer 503.
+    pub queue_capacity: usize,
+    /// Row budget per fused transform batch.
+    pub max_batch_rows: usize,
+    /// Request body cap in bytes.
+    pub max_body_bytes: usize,
+    /// Socket read timeout — bounds how long an idle keep-alive connection
+    /// can pin a worker.
+    pub read_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            threads: 8,
+            queue_capacity: 128,
+            max_batch_rows: 256,
+            max_body_bytes: 8 * 1024 * 1024,
+            read_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Shared state every connection handler needs.
+struct Ctx {
+    registry: Arc<ModelRegistry>,
+    batcher: Batcher,
+    metrics: Arc<ServeMetrics>,
+    shutdown: Arc<AtomicBool>,
+    max_body_bytes: usize,
+}
+
+/// The model server. `bind` loads the model and claims the socket; `run`
+/// blocks serving until a [`ServerHandle::shutdown`].
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    pool: Pool,
+    ctx: Arc<Ctx>,
+    cfg: ServerConfig,
+}
+
+/// Cheap clonable handle for stopping a running server from another thread.
+#[derive(Clone)]
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request shutdown: flips the flag, then pokes the listener so the
+    /// accept loop observes it. Idempotent.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Server {
+    /// Load the model at `model_path` and bind `addr` (use port 0 for an
+    /// ephemeral port; the bound address is `local_addr`).
+    pub fn bind(model_path: &Path, addr: &str, cfg: ServerConfig) -> Result<Server, ServeError> {
+        let registry = Arc::new(ModelRegistry::open(model_path)?);
+        let metrics = Arc::new(ServeMetrics::new());
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| ServeError::Internal(format!("bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| ServeError::Internal(format!("local_addr: {e}")))?;
+        let batcher = Batcher::start(
+            Arc::clone(&registry),
+            Arc::clone(&metrics),
+            cfg.max_batch_rows,
+        );
+        let pool = Pool::new(cfg.threads, cfg.queue_capacity);
+        Ok(Server {
+            listener,
+            addr: local,
+            pool,
+            ctx: Arc::new(Ctx {
+                registry,
+                batcher,
+                metrics,
+                shutdown: Arc::new(AtomicBool::new(false)),
+                max_body_bytes: cfg.max_body_bytes,
+            }),
+            cfg,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        Arc::clone(&self.ctx.metrics)
+    }
+
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        Arc::clone(&self.ctx.registry)
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle {
+            addr: self.addr,
+            shutdown: Arc::clone(&self.ctx.shutdown),
+        }
+    }
+
+    /// Serve until shutdown. Consumes the server; returns once the accept
+    /// loop has stopped and all in-flight connections have drained.
+    pub fn run(self) {
+        let Server {
+            listener,
+            pool,
+            ctx,
+            cfg,
+            ..
+        } = self;
+        loop {
+            let (stream, _) = match listener.accept() {
+                Ok(pair) => pair,
+                Err(_) => {
+                    if ctx.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // Transient accept failures (EMFILE under fd pressure,
+                    // ECONNABORTED) — back off briefly instead of spinning
+                    // a core while the condition persists.
+                    std::thread::sleep(Duration::from_millis(10));
+                    continue;
+                }
+            };
+            if ctx.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            ctx.metrics.add(&ctx.metrics.connections, 1);
+            let _ = stream.set_nodelay(true);
+            let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+            // Shed load before queueing: a full pending queue means every
+            // worker is busy AND the backlog is at capacity — turn the
+            // connection away with 503 rather than stall the accept loop.
+            // (Racy against workers draining the queue, but the race only
+            // ever errs toward accepting, and `submit` stays bounded.)
+            if pool.queued() >= pool.capacity() {
+                ctx.metrics.add(&ctx.metrics.rejected_overload, 1);
+                let mut s = stream;
+                let err = ServeError::Overloaded;
+                let _ = http::write_json_response(&mut s, err.status(), &err.to_body(), false);
+                continue;
+            }
+            let conn_ctx = Arc::clone(&ctx);
+            pool.submit(move || handle_connection(stream, &conn_ctx));
+        }
+        // Joining the pool drains in-flight connection handlers; dropping
+        // ctx afterwards stops the batcher (which first drains its queue).
+        drop(pool);
+    }
+}
+
+/// One connection: serve keep-alive requests until the peer closes, an
+/// error forces a close, or shutdown is requested.
+fn handle_connection(stream: TcpStream, ctx: &Arc<Ctx>) {
+    ctx.metrics.add(&ctx.metrics.connections_active, 1);
+    serve_connection(stream, ctx);
+    // Gauge decrement (no fetch_sub wrapper on ServeMetrics::add).
+    ctx.metrics
+        .connections_active
+        .fetch_sub(1, Ordering::Relaxed);
+}
+
+fn serve_connection(stream: TcpStream, ctx: &Arc<Ctx>) {
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        let request = match http::read_request(&mut reader, ctx.max_body_bytes) {
+            Ok(http::ReadOutcome::Closed) => return,
+            Ok(http::ReadOutcome::Request(r)) => r,
+            Err(http::HttpError::Io(_)) => {
+                // Timeouts and resets on idle keep-alive connections are the
+                // normal end of a connection's life, not a server fault.
+                return;
+            }
+            Err(http::HttpError::BodyTooLarge { declared, limit }) => {
+                // Drain a bounded amount of the oversized body before
+                // responding: closing with unread data in the receive
+                // buffer risks an RST that races the 413 to the client.
+                let mut left = declared.min(1 << 20);
+                let mut sink = [0u8; 8192];
+                while left > 0 {
+                    match reader.read(&mut sink[..sink.len().min(left)]) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => left -= n,
+                    }
+                }
+                let err = ServeError::PayloadTooLarge { declared, limit };
+                respond_error(&mut writer, ctx, &err, false);
+                return;
+            }
+            Err(http::HttpError::Malformed(m)) => {
+                let err = ServeError::BadRequest(m);
+                respond_error(&mut writer, ctx, &err, false);
+                return;
+            }
+        };
+        let started = Instant::now();
+        let keep_alive = request.keep_alive && !ctx.shutdown.load(Ordering::SeqCst);
+        ctx.metrics.add(&ctx.metrics.requests_total, 1);
+        let write_ok = match dispatch(&request, ctx) {
+            Ok(body) => {
+                http::write_json_response(&mut writer, 200, &body, keep_alive).is_ok()
+            }
+            Err(err) => {
+                ctx.metrics.add(&ctx.metrics.requests_failed, 1);
+                http::write_json_response(&mut writer, err.status(), &err.to_body(), keep_alive)
+                    .is_ok()
+            }
+        };
+        ctx.metrics
+            .latency_us
+            .observe(started.elapsed().as_micros() as u64);
+        if !write_ok || !keep_alive {
+            return;
+        }
+    }
+}
+
+fn respond_error(writer: &mut TcpStream, ctx: &Arc<Ctx>, err: &ServeError, keep_alive: bool) {
+    ctx.metrics.add(&ctx.metrics.requests_total, 1);
+    ctx.metrics.add(&ctx.metrics.requests_failed, 1);
+    let _ = http::write_json_response(writer, err.status(), &err.to_body(), keep_alive);
+    let _ = writer.flush();
+}
+
+/// Route a parsed request to its endpoint; `Ok` is a 200 JSON body.
+fn dispatch(req: &http::Request, ctx: &Arc<Ctx>) -> Result<String, ServeError> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let mut o = Json::obj();
+            o.set("status", jstr("ok"))
+                .set("generation", jnum(ctx.registry.generation() as f64));
+            Ok(o.to_string_compact())
+        }
+        ("GET", "/v1/model") => Ok(ctx.registry.metadata().to_string_compact()),
+        ("GET", "/metrics") => {
+            let mut o = ctx.metrics.snapshot();
+            o.set("generation", jnum(ctx.registry.generation() as f64))
+                .set("batcher_queued", jnum(ctx.batcher.queued() as f64));
+            Ok(o.to_string_compact())
+        }
+        ("POST", "/v1/transform") => transform(req, ctx),
+        ("POST", "/admin/reload") => {
+            let snap = ctx
+                .registry
+                .reload()
+                .map_err(|e| ServeError::Reload(e.to_string()))?;
+            ctx.metrics.add(&ctx.metrics.reloads, 1);
+            let mut o = Json::obj();
+            o.set("status", jstr("reloaded"))
+                .set("generation", jnum(snap.generation as f64))
+                .set("k", jnum(snap.model.k() as f64))
+                .set("da", jnum(snap.model.da() as f64))
+                .set("db", jnum(snap.model.db() as f64));
+            Ok(o.to_string_compact())
+        }
+        (_, path @ ("/healthz" | "/v1/model" | "/metrics" | "/v1/transform" | "/admin/reload")) => {
+            Err(ServeError::MethodNotAllowed {
+                path: path.to_string(),
+                method: req.method.clone(),
+            })
+        }
+        (_, path) => Err(ServeError::NotFound(path.to_string())),
+    }
+}
+
+fn transform(req: &http::Request, ctx: &Arc<Ctx>) -> Result<String, ServeError> {
+    let text = req.body_str().map_err(|e| ServeError::BadRequest(e.to_string()))?;
+    let doc = crate::util::json::parse(text)
+        .map_err(|e| ServeError::BadRequest(format!("body is not JSON: {e}")))?;
+    // Validate against the current model's dimensions; if a hot swap lands
+    // between here and the batch, the batcher re-checks and answers 422.
+    let snap = ctx.registry.snapshot();
+    let parsed = proto::parse_transform(&doc, snap.model.da(), snap.model.db())?;
+    let rx = ctx.batcher.submit(parsed.view, parsed.rows);
+    let (proj, generation) = match rx.recv_timeout(Duration::from_secs(60)) {
+        Ok(result) => result?,
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            return Err(ServeError::Internal("batcher timed out".to_string()))
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            return Err(ServeError::Internal(
+                "batcher dropped the request".to_string(),
+            ))
+        }
+    };
+    Ok(proto::projection_document(parsed.view, &proj, Some(generation)).to_string_compact())
+}

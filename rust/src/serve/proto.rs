@@ -1,0 +1,272 @@
+//! Request/response schema for the transform surface — shared by the HTTP
+//! server (`POST /v1/transform`) and the offline `repro transform`
+//! subcommand, so on-line and batch projections speak the same documents.
+//!
+//! Transform request:
+//! ```json
+//! {"view": "a", "rows": [{"indices": [0, 5], "values": [1.0, 2.0]}]}
+//! ```
+//! Transform response / offline projection document:
+//! ```json
+//! {"view": "a", "n": 1, "k": 4, "generation": 3, "projections": [[0.1, ...]]}
+//! ```
+
+use super::ServeError;
+use crate::api::FittedModel;
+use crate::linalg::Mat;
+use crate::sparse::{Csr, CsrBuilder};
+use crate::util::json::{jarr, jnum, jstr, Json};
+
+/// Which view's projection a request targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum View {
+    A,
+    B,
+}
+
+impl View {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            View::A => "a",
+            View::B => "b",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<View, ServeError> {
+        match s {
+            "a" | "A" => Ok(View::A),
+            "b" | "B" => Ok(View::B),
+            other => Err(ServeError::BadRequest(format!(
+                "unknown view '{other}' (expected 'a' or 'b')"
+            ))),
+        }
+    }
+
+    /// Input dimension of this view under `model`.
+    pub fn dim(self, model: &FittedModel) -> usize {
+        match self {
+            View::A => model.da(),
+            View::B => model.db(),
+        }
+    }
+
+    /// Project `rows` (n × dim CSR) with the matching projection.
+    pub fn transform(self, model: &FittedModel, rows: &Csr) -> Result<Mat, crate::api::ApiError> {
+        match self {
+            View::A => model.transform_a(rows),
+            View::B => model.transform_b(rows),
+        }
+    }
+}
+
+/// Upper bound on rows in one request — a single request cannot occupy the
+/// batcher indefinitely; callers with more rows split client-side (or use
+/// `repro transform` offline).
+pub const MAX_REQUEST_ROWS: usize = 4096;
+
+/// A parsed, validated transform request: sparse rows already assembled
+/// into a CSR of the view's width.
+#[derive(Debug)]
+pub struct TransformRequest {
+    pub view: View,
+    pub rows: Csr,
+}
+
+/// Parse and validate a transform request body against the serving model's
+/// dimensions. All schema violations are typed `BadRequest`s; a plausible
+/// document whose indices do not fit the model is a `Dimension` error.
+pub fn parse_transform(doc: &Json, da: usize, db: usize) -> Result<TransformRequest, ServeError> {
+    let bad = |m: String| ServeError::BadRequest(m);
+    let view = View::parse(
+        doc.get("view")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing 'view'".to_string()))?,
+    )?;
+    let dim = match view {
+        View::A => da,
+        View::B => db,
+    };
+    let rows = doc
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing 'rows' array".to_string()))?;
+    if rows.is_empty() {
+        return Err(bad("'rows' is empty".to_string()));
+    }
+    if rows.len() > MAX_REQUEST_ROWS {
+        return Err(bad(format!(
+            "{} rows exceeds the per-request limit of {MAX_REQUEST_ROWS}",
+            rows.len()
+        )));
+    }
+
+    let mut builder = CsrBuilder::new(dim);
+    let mut pairs: Vec<(u32, f32)> = Vec::new();
+    for (r, row) in rows.iter().enumerate() {
+        let indices = row
+            .get("indices")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad(format!("row {r}: missing 'indices'")))?;
+        let values = row
+            .get("values")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad(format!("row {r}: missing 'values'")))?;
+        if indices.len() != values.len() {
+            return Err(bad(format!(
+                "row {r}: {} indices vs {} values",
+                indices.len(),
+                values.len()
+            )));
+        }
+        for (idx, val) in indices.iter().zip(values) {
+            let j = idx
+                .as_usize()
+                .ok_or_else(|| bad(format!("row {r}: non-integer index")))?;
+            if j >= dim {
+                return Err(ServeError::Dimension {
+                    expected: dim,
+                    got: j + 1,
+                });
+            }
+            let v = val
+                .as_f64()
+                .filter(|x| x.is_finite())
+                .ok_or_else(|| bad(format!("row {r}: non-finite value")))?;
+            let v32 = v as f32;
+            if !v32.is_finite() {
+                return Err(bad(format!("row {r}: value overflows f32")));
+            }
+            pairs.push((j as u32, v32));
+        }
+        builder.push_row(&mut pairs);
+    }
+    Ok(TransformRequest {
+        view,
+        rows: builder.finish(),
+    })
+}
+
+/// Encode a projection matrix (n × k) as the response/offline document.
+/// `generation` is the model-registry generation that produced it (absent
+/// for offline transforms, which have no registry).
+pub fn projection_document(view: View, proj: &Mat, generation: Option<u64>) -> Json {
+    let mut o = Json::obj();
+    o.set("view", jstr(view.as_str()))
+        .set("n", jnum(proj.rows as f64))
+        .set("k", jnum(proj.cols as f64))
+        .set(
+            "projections",
+            jarr((0..proj.rows)
+                .map(|i| jarr(proj.row(i).iter().map(|&v| jnum(v)).collect()))
+                .collect()),
+        );
+    if let Some(g) = generation {
+        o.set("generation", jnum(g as f64));
+    }
+    o
+}
+
+/// Build a transform request document from CSR rows (client side: the load
+/// generator, tests, and docs all construct requests through this so the
+/// schema lives in one place).
+pub fn transform_request(view: View, rows: &Csr) -> Json {
+    let mut arr = Vec::with_capacity(rows.rows);
+    for i in 0..rows.rows {
+        let (idx, vals) = rows.row(i);
+        let mut o = Json::obj();
+        o.set(
+            "indices",
+            jarr(idx.iter().map(|&j| jnum(j as f64)).collect()),
+        )
+        .set(
+            "values",
+            jarr(vals.iter().map(|&v| jnum(v as f64)).collect()),
+        );
+        arr.push(o);
+    }
+    let mut doc = Json::obj();
+    doc.set("view", jstr(view.as_str())).set("rows", jarr(arr));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn roundtrip_request_through_parse() {
+        let mut b = CsrBuilder::new(8);
+        let mut pairs = vec![(1u32, 0.5f32), (6, -2.0)];
+        b.push_row(&mut pairs);
+        let mut pairs = vec![(0u32, 1.0f32)];
+        b.push_row(&mut pairs);
+        let csr = b.finish();
+        let doc = transform_request(View::A, &csr);
+        let parsed = parse_transform(&doc, 8, 16).unwrap();
+        assert_eq!(parsed.view, View::A);
+        assert_eq!(parsed.rows, csr);
+    }
+
+    #[test]
+    fn view_b_uses_db() {
+        let doc = parse(r#"{"view":"b","rows":[{"indices":[9],"values":[1.0]}]}"#).unwrap();
+        // db = 10 admits index 9; da = 4 would not, but view b ignores da.
+        let parsed = parse_transform(&doc, 4, 10).unwrap();
+        assert_eq!(parsed.view, View::B);
+        assert_eq!(parsed.rows.cols, 10);
+    }
+
+    #[test]
+    fn schema_violations_are_bad_requests() {
+        let cases = [
+            r#"{}"#,
+            r#"{"view":"c","rows":[]}"#,
+            r#"{"view":"a"}"#,
+            r#"{"view":"a","rows":[]}"#,
+            r#"{"view":"a","rows":[{"values":[1.0]}]}"#,
+            r#"{"view":"a","rows":[{"indices":[0],"values":[1.0,2.0]}]}"#,
+            r#"{"view":"a","rows":[{"indices":[0.5],"values":[1.0]}]}"#,
+            r#"{"view":"a","rows":[{"indices":[0],"values":[null]}]}"#,
+        ];
+        for c in cases {
+            let doc = parse(c).unwrap();
+            let err = parse_transform(&doc, 8, 8).unwrap_err();
+            assert!(
+                matches!(err, ServeError::BadRequest(_)),
+                "case {c}: got {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn out_of_range_index_is_dimension_error() {
+        let doc = parse(r#"{"view":"a","rows":[{"indices":[8],"values":[1.0]}]}"#).unwrap();
+        let err = parse_transform(&doc, 8, 8).unwrap_err();
+        assert!(matches!(err, ServeError::Dimension { expected: 8, got: 9 }));
+    }
+
+    #[test]
+    fn projection_document_shape() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let doc = projection_document(View::B, &m, Some(7));
+        assert_eq!(doc.get("view").unwrap().as_str(), Some("b"));
+        assert_eq!(doc.get("n").unwrap().as_usize(), Some(2));
+        assert_eq!(doc.get("k").unwrap().as_usize(), Some(3));
+        assert_eq!(doc.get("generation").unwrap().as_usize(), Some(7));
+        let rows = doc.get("projections").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].as_arr().unwrap()[2].as_f64(), Some(6.0));
+        // Offline documents omit the generation.
+        assert!(projection_document(View::A, &m, None).get("generation").is_none());
+    }
+
+    #[test]
+    fn duplicate_and_unsorted_indices_are_merged() {
+        let doc =
+            parse(r#"{"view":"a","rows":[{"indices":[5,2,5],"values":[1.0,1.0,2.0]}]}"#).unwrap();
+        let parsed = parse_transform(&doc, 8, 8).unwrap();
+        assert_eq!(parsed.rows.row(0).0, &[2, 5]);
+        assert_eq!(parsed.rows.row(0).1, &[1.0, 3.0]);
+    }
+}

@@ -1,0 +1,188 @@
+//! [`ModelRegistry`]: the serving process's handle on the fitted model —
+//! an `Arc<FittedModel>` swapped atomically on `POST /admin/reload`.
+//!
+//! Swap semantics: readers take a cheap snapshot (`Arc` clone under a read
+//! lock) and keep using it for as long as they need — a reload never stalls
+//! or invalidates in-flight work; requests already batched against the old
+//! model finish on the old `Arc`, and the old model is freed when the last
+//! snapshot drops. The registry always reloads from the path it was opened
+//! with, so an operator updates the model by overwriting the document (the
+//! same write-then-rename discipline as `ShardWriter`) and poking the
+//! reload endpoint.
+
+use crate::api::{ApiError, FittedModel};
+use crate::util::json::{jarr, jnum, jstr, Json};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
+
+/// The model currently being served plus its swap generation (1-based,
+/// bumped on every successful reload).
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub model: Arc<FittedModel>,
+    pub generation: u64,
+}
+
+#[derive(Debug)]
+pub struct ModelRegistry {
+    path: PathBuf,
+    current: RwLock<Snapshot>,
+}
+
+impl ModelRegistry {
+    /// Load the initial model from `path` (generation 1).
+    pub fn open(path: &Path) -> Result<ModelRegistry, ApiError> {
+        let model = FittedModel::load(path)?;
+        Ok(ModelRegistry {
+            path: path.to_path_buf(),
+            current: RwLock::new(Snapshot {
+                model: Arc::new(model),
+                generation: 1,
+            }),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The model to use for new work. In-flight holders of older snapshots
+    /// are unaffected by subsequent reloads.
+    pub fn snapshot(&self) -> Snapshot {
+        self.current.read().unwrap().clone()
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.current.read().unwrap().generation
+    }
+
+    /// Re-read the model document and swap it in. The parse/validate work
+    /// happens outside the write lock, so readers only block for the
+    /// pointer swap itself; on any error the registry keeps serving the old
+    /// model.
+    pub fn reload(&self) -> Result<Snapshot, ApiError> {
+        let fresh = Arc::new(FittedModel::load(&self.path)?);
+        let mut cur = self.current.write().unwrap();
+        cur.model = fresh;
+        cur.generation += 1;
+        Ok(cur.clone())
+    }
+
+    /// Metadata document for `GET /v1/model`.
+    pub fn metadata(&self) -> Json {
+        let snap = self.snapshot();
+        let m = &snap.model;
+        let mut o = Json::obj();
+        o.set("solver", jstr(m.solver()))
+            .set("k", jnum(m.k() as f64))
+            .set("da", jnum(m.da() as f64))
+            .set("db", jnum(m.db() as f64))
+            .set("lambda_a", jnum(m.lambda_a))
+            .set("lambda_b", jnum(m.lambda_b))
+            .set("passes", jnum(m.passes() as f64))
+            .set("sum_correlations", jnum(m.sum_correlations()))
+            .set(
+                "correlations",
+                jarr(m.correlations().iter().map(|&s| jnum(s)).collect()),
+            )
+            .set("generation", jnum(snap.generation as f64))
+            .set("path", jstr(&self.path.display().to_string()));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Cca, Engine};
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::data::TwoViewChunk;
+
+    fn fit_and_save(seed: u64, path: &Path) -> FittedModel {
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 250,
+            dims: 48,
+            topics: 4,
+            words_per_topic: 8,
+            background_words: 16,
+            mean_len: 6.0,
+            seed,
+            ..Default::default()
+        });
+        let mut eng = Engine::in_memory(TwoViewChunk { a: d.a, b: d.b });
+        let model = Cca::builder()
+            .k(3)
+            .oversample(8)
+            .power_iters(1)
+            .lambda(0.05, 0.05)
+            .seed(seed)
+            .fit(&mut eng)
+            .unwrap();
+        model.save(path).unwrap();
+        model
+    }
+
+    #[test]
+    fn open_snapshot_reload_generations() {
+        let dir = std::env::temp_dir().join("rcca_registry_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("model.json");
+        let m1 = fit_and_save(11, &path);
+
+        let reg = ModelRegistry::open(&path).unwrap();
+        let s1 = reg.snapshot();
+        assert_eq!(s1.generation, 1);
+        assert_eq!(s1.model.correlations(), m1.correlations());
+
+        // Overwrite the document with a different model; old snapshot must
+        // keep the old coefficients, new snapshots see the new ones.
+        let m2 = fit_and_save(22, &path);
+        assert_ne!(m1.correlations(), m2.correlations());
+        let swapped = reg.reload().unwrap();
+        assert_eq!(swapped.generation, 2);
+        assert_eq!(reg.generation(), 2);
+        assert_eq!(s1.model.correlations(), m1.correlations());
+        assert_eq!(reg.snapshot().model.correlations(), m2.correlations());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_reload_keeps_serving() {
+        let dir = std::env::temp_dir().join("rcca_registry_fail");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("model.json");
+        fit_and_save(33, &path);
+        let reg = ModelRegistry::open(&path).unwrap();
+
+        std::fs::write(&path, "{ not json").unwrap();
+        let err = reg.reload().unwrap_err();
+        assert!(matches!(err, ApiError::Model(_)), "{err}");
+        // Still generation 1, still serving the original model.
+        assert_eq!(reg.generation(), 1);
+        assert_eq!(reg.snapshot().model.k(), 3);
+
+        std::fs::remove_file(&path).unwrap();
+        assert!(matches!(reg.reload().unwrap_err(), ApiError::Io(_)));
+        assert_eq!(reg.generation(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn metadata_document() {
+        let dir = std::env::temp_dir().join("rcca_registry_meta");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("model.json");
+        fit_and_save(44, &path);
+        let reg = ModelRegistry::open(&path).unwrap();
+        let meta = reg.metadata();
+        assert_eq!(meta.get("k").unwrap().as_usize(), Some(3));
+        assert_eq!(meta.get("da").unwrap().as_usize(), Some(48));
+        assert_eq!(meta.get("generation").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            meta.get("correlations").unwrap().as_arr().unwrap().len(),
+            3
+        );
+        assert!(meta.get("solver").unwrap().as_str().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -185,6 +185,34 @@ impl Csr {
     pub fn gram_trace(&self) -> f64 {
         self.values.iter().map(|&v| (v as f64) * (v as f64)).sum()
     }
+
+    /// Stack row blocks vertically (all parts must share `cols`). The serve
+    /// batcher uses this to fuse many small requests into one projection
+    /// product; it is the inverse of repeated [`Csr::slice_rows`].
+    pub fn vcat(parts: &[&Csr]) -> Csr {
+        assert!(!parts.is_empty(), "vcat of zero parts");
+        let cols = parts[0].cols;
+        let total_rows: usize = parts.iter().map(|p| p.rows).sum();
+        let total_nnz: usize = parts.iter().map(|p| p.nnz()).sum();
+        let mut indptr = Vec::with_capacity(total_rows + 1);
+        let mut indices = Vec::with_capacity(total_nnz);
+        let mut values = Vec::with_capacity(total_nnz);
+        indptr.push(0usize);
+        for p in parts {
+            assert_eq!(p.cols, cols, "vcat width mismatch");
+            let base = *indptr.last().unwrap();
+            indptr.extend(p.indptr[1..].iter().map(|x| x + base));
+            indices.extend_from_slice(&p.indices);
+            values.extend_from_slice(&p.values);
+        }
+        Csr {
+            rows: total_rows,
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
 }
 
 /// Incremental row-by-row CSR builder (used by the hashing vectorizer).
@@ -390,6 +418,20 @@ mod tests {
                 assert_eq!(d_slice[(i, j)], d_full[(i + 5, j)]);
             }
         }
+    }
+
+    #[test]
+    fn vcat_inverts_slice_rows() {
+        let mut rng = Rng::new(21);
+        let a = random_csr(25, 12, 3, &mut rng);
+        let top = a.slice_rows(0, 9);
+        let mid = a.slice_rows(9, 10);
+        let bot = a.slice_rows(10, 25);
+        let back = Csr::vcat(&[&top, &mid, &bot]);
+        assert_eq!(back, a);
+        back.validate().unwrap();
+        // Single-part vcat is identity.
+        assert_eq!(Csr::vcat(&[&a]), a);
     }
 
     #[test]

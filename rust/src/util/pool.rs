@@ -105,6 +105,17 @@ impl Pool {
     pub fn queued(&self) -> usize {
         self.queue.deque.lock().unwrap().len()
     }
+
+    /// Number of tasks currently executing on workers (a point-in-time
+    /// gauge; the serve layer and benches report it alongside queue depth).
+    pub fn active(&self) -> usize {
+        self.queue.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// The bound on the pending-task queue this pool was built with.
+    pub fn capacity(&self) -> usize {
+        self.queue.capacity
+    }
 }
 
 fn worker_loop(q: &Queue) {
@@ -246,6 +257,8 @@ mod tests {
     fn wait_idle_on_fresh_pool_returns() {
         let pool = Pool::new(2, 2);
         pool.wait_idle(); // must not hang
+        assert_eq!(pool.active(), 0);
+        assert_eq!(pool.capacity(), 2);
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! Rejection paths: corrupted persisted artifacts must surface as typed
+//! errors — never panics — at every layer that reads them: the model
+//! loader (`rcca-model-v1` documents), the shard store (CRC-protected
+//! binaries), and the `repro` CLI subcommands built on both.
+
+use rcca::api::{ApiError, FittedModel};
+use rcca::data::shards::{decode_shard, encode_shard, ShardStore, ShardWriter, TwoViewChunk};
+use rcca::data::synthparl::{SynthParl, SynthParlConfig};
+use std::path::Path;
+use std::process::Command;
+
+/// A handcrafted minimal model document (k=1, da=2, db=2) whose pieces the
+/// tests corrupt one at a time.
+fn model_doc(format: &str, xa: &str) -> String {
+    format!(
+        r#"{{"format":"{format}","solver":"randomized","k":1,"da":2,"db":2,"lambda_a":0.1,"lambda_b":0.1,"passes":2,"init_passes":0,"sigma":[0.5],"xa":{xa},"xb":[0.1,0.2]}}"#
+    )
+}
+
+fn load_text(text: &str, name: &str) -> Result<FittedModel, ApiError> {
+    let dir = std::env::temp_dir().join("rcca_rejection_models");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    std::fs::write(&path, text).unwrap();
+    FittedModel::load(&path)
+}
+
+#[test]
+fn pristine_document_loads() {
+    let m = load_text(&model_doc("rcca-model-v1", "[0.3,0.4]"), "ok.json").unwrap();
+    assert_eq!((m.k(), m.da(), m.db()), (1, 2, 2));
+}
+
+#[test]
+fn wrong_format_tag_is_typed_error() {
+    let err = load_text(&model_doc("rcca-model-v999", "[0.3,0.4]"), "tag.json").unwrap_err();
+    match err {
+        ApiError::Model(m) => assert!(m.contains("rcca-model-v999"), "{m}"),
+        other => panic!("expected Model error, got {other:?}"),
+    }
+}
+
+#[test]
+fn truncated_coefficient_array_is_typed_error() {
+    // xa should be da*k = 2 entries; one is a truncation.
+    let err = load_text(&model_doc("rcca-model-v1", "[0.3]"), "trunc.json").unwrap_err();
+    match err {
+        ApiError::Model(m) => assert!(m.contains("xa") && m.contains("2"), "{m}"),
+        other => panic!("expected Model error, got {other:?}"),
+    }
+}
+
+#[test]
+fn non_finite_values_are_typed_errors() {
+    // 1e999 overflows f64 to +inf at parse time; null is what a lenient
+    // encoder writes for NaN. Both must be rejected, not propagated into
+    // projections.
+    for (xa, name) in [("[1e999,0.4]", "inf.json"), ("[null,0.4]", "null.json")] {
+        let err = load_text(&model_doc("rcca-model-v1", xa), name).unwrap_err();
+        assert!(
+            matches!(err, ApiError::Model(_)),
+            "{xa}: expected Model error, got {err:?}"
+        );
+    }
+}
+
+#[test]
+fn garbage_and_missing_files_are_typed_errors() {
+    assert!(matches!(
+        load_text("{ not json at all", "garbage.json").unwrap_err(),
+        ApiError::Model(_)
+    ));
+    assert!(matches!(
+        FittedModel::load(Path::new("/nonexistent/rcca/model.json")).unwrap_err(),
+        ApiError::Io(_)
+    ));
+}
+
+fn tiny_chunk() -> TwoViewChunk {
+    let d = SynthParl::generate(SynthParlConfig {
+        n: 200,
+        dims: 32,
+        topics: 4,
+        words_per_topic: 8,
+        background_words: 12,
+        mean_len: 6.0,
+        seed: 99,
+        ..Default::default()
+    });
+    TwoViewChunk { a: d.a, b: d.b }
+}
+
+#[test]
+fn shard_crc_corruption_on_disk_is_typed_error() {
+    let dir = std::env::temp_dir().join("rcca_rejection_shards");
+    let _ = std::fs::remove_dir_all(&dir);
+    let chunk = tiny_chunk();
+    let mut w = ShardWriter::create(&dir, 128).unwrap();
+    w.write_dataset(&chunk.a, &chunk.b).unwrap();
+    let store = ShardStore::open(&dir).unwrap();
+    assert!(store.load(0).is_ok(), "pristine shard must load");
+
+    // Flip one byte inside the stored CRC footer of shard 0.
+    let path = store.shard_path(0);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let n = bytes.len();
+    bytes[n - 2] ^= 0xff;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = store.load(0).unwrap_err();
+    assert!(err.contains("crc mismatch"), "{err}");
+
+    // Flip payload bytes instead: caught by CRC (or structural validation).
+    let mut bytes = std::fs::read(store.shard_path(1)).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x55;
+    std::fs::write(store.shard_path(1), &bytes).unwrap();
+    let err = store.load(1).unwrap_err();
+    assert!(
+        err.contains("crc") || err.contains("indptr") || err.contains("indices"),
+        "{err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_shard_is_typed_error() {
+    let chunk = tiny_chunk();
+    let bytes = encode_shard(&chunk);
+    for cut in [3usize, 8, bytes.len() / 2, bytes.len() - 1] {
+        assert!(
+            decode_shard(&bytes[..cut]).is_err(),
+            "cut at {cut} must not decode"
+        );
+    }
+}
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+#[test]
+fn cli_transform_rejects_corrupt_model() {
+    let dir = std::env::temp_dir().join("rcca_rejection_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad_model.json");
+    std::fs::write(&bad, model_doc("rcca-model-v7", "[0.3,0.4]")).unwrap();
+    let out = repro()
+        .args(["transform", "--model", bad.to_str().unwrap(), "--tiny"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("rcca-model-v7"), "{err}");
+}
+
+#[test]
+fn cli_serve_rejects_missing_model() {
+    let out = repro()
+        .args(["serve", "--model", "/nonexistent/rcca/model.json"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("model") || err.contains("io"), "{err}");
+}

@@ -1,0 +1,353 @@
+//! Integration tests for `rcca::serve`: drive a real server over
+//! `TcpStream` — endpoint correctness, typed rejections, and atomic model
+//! hot-swap under concurrent transform load.
+
+use rcca::api::{Cca, Engine, FittedModel};
+use rcca::data::synthparl::{SynthParl, SynthParlConfig};
+use rcca::data::TwoViewChunk;
+use rcca::linalg::Mat;
+use rcca::serve::{proto, HttpClient, Server, ServerConfig, View};
+use rcca::util::json::parse;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn corpus(seed: u64) -> TwoViewChunk {
+    let d = SynthParl::generate(SynthParlConfig {
+        n: 260,
+        dims: 48,
+        topics: 4,
+        words_per_topic: 8,
+        background_words: 16,
+        mean_len: 6.0,
+        seed,
+        ..Default::default()
+    });
+    TwoViewChunk { a: d.a, b: d.b }
+}
+
+fn fit(chunk: &TwoViewChunk, seed: u64) -> FittedModel {
+    let mut eng = Engine::in_memory(chunk.clone());
+    Cca::builder()
+        .k(3)
+        .oversample(8)
+        .power_iters(1)
+        .lambda(0.05, 0.05)
+        .seed(seed)
+        .fit(&mut eng)
+        .unwrap()
+}
+
+struct Harness {
+    dir: PathBuf,
+    model_path: PathBuf,
+    handle: rcca::serve::ServerHandle,
+    server_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Harness {
+    fn start(name: &str, chunk: &TwoViewChunk, cfg: ServerConfig) -> (Harness, FittedModel) {
+        let dir = std::env::temp_dir().join(format!("rcca_serve_it_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let model = fit(chunk, 7);
+        let model_path = dir.join("model.json");
+        model.save(&model_path).unwrap();
+        let server = Server::bind(&model_path, "127.0.0.1:0", cfg).unwrap();
+        let handle = server.handle();
+        let server_thread = Some(std::thread::spawn(move || server.run()));
+        (
+            Harness {
+                dir,
+                model_path,
+                handle,
+                server_thread,
+            },
+            model,
+        )
+    }
+
+    fn client(&self) -> HttpClient {
+        HttpClient::connect(self.handle.addr()).unwrap()
+    }
+}
+
+impl Drop for Harness {
+    fn drop(&mut self) {
+        self.handle.shutdown();
+        if let Some(t) = self.server_thread.take() {
+            let _ = t.join();
+        }
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+fn projections_of(body: &str) -> Mat {
+    let doc = parse(body).unwrap();
+    let rows = doc.get("projections").unwrap().as_arr().unwrap();
+    let k = doc.get("k").unwrap().as_usize().unwrap();
+    let mut data = Vec::new();
+    for r in rows {
+        let r = r.as_arr().unwrap();
+        assert_eq!(r.len(), k);
+        data.extend(r.iter().map(|v| v.as_f64().unwrap()));
+    }
+    Mat::from_vec(rows.len(), k, data)
+}
+
+#[test]
+fn read_endpoints_and_transform_correctness() {
+    let chunk = corpus(31);
+    let (h, model) = Harness::start("read", &chunk, ServerConfig::default());
+    let mut c = h.client();
+
+    let (status, body) = c.get("/healthz").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let health = parse(&body).unwrap();
+    assert_eq!(health.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(health.get("generation").unwrap().as_usize(), Some(1));
+
+    let (status, body) = c.get("/v1/model").unwrap();
+    assert_eq!(status, 200);
+    let meta = parse(&body).unwrap();
+    assert_eq!(meta.get("k").unwrap().as_usize(), Some(3));
+    assert_eq!(meta.get("da").unwrap().as_usize(), Some(48));
+    assert_eq!(
+        meta.get("correlations").unwrap().as_arr().unwrap().len(),
+        3
+    );
+
+    // Single-row and multi-row transforms, both views, must reproduce the
+    // in-process projections bitwise (shortest-roundtrip JSON decimals).
+    let want_a = model.transform_a(&chunk.a).unwrap();
+    let req = proto::transform_request(View::A, &chunk.a.slice_rows(5, 6)).to_string_compact();
+    let (status, body) = c.post("/v1/transform", &req).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let got = projections_of(&body);
+    assert_eq!(got.row(0), want_a.row(5));
+
+    let req = proto::transform_request(View::A, &chunk.a.slice_rows(10, 20)).to_string_compact();
+    let (status, body) = c.post("/v1/transform", &req).unwrap();
+    assert_eq!(status, 200);
+    let got = projections_of(&body);
+    assert_eq!((got.rows, got.cols), (10, 3));
+    assert_eq!(got.data, want_a.data[10 * 3..20 * 3].to_vec());
+
+    let want_b = model.transform_b(&chunk.b).unwrap();
+    let req = proto::transform_request(View::B, &chunk.b.slice_rows(0, 4)).to_string_compact();
+    let (status, body) = c.post("/v1/transform", &req).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(projections_of(&body).data, want_b.data[..4 * 3].to_vec());
+
+    // Metrics reflect the traffic and parse as JSON.
+    let (status, body) = c.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    let m = parse(&body).unwrap();
+    assert!(m.get("requests_total").unwrap().as_usize().unwrap() >= 5);
+    assert!(m.get("rows_transformed").unwrap().as_usize().unwrap() >= 15);
+    assert!(m.get("batches").unwrap().as_usize().unwrap() >= 3);
+    assert!(m.get("latency_us").unwrap().get("count").is_some());
+}
+
+#[test]
+fn rejection_paths_are_typed_statuses() {
+    let chunk = corpus(32);
+    let cfg = ServerConfig {
+        max_body_bytes: 4096,
+        ..Default::default()
+    };
+    let (h, _model) = Harness::start("reject", &chunk, cfg);
+
+    // Unknown route / wrong verb.
+    let mut c = h.client();
+    let (status, body) = c.get("/nope").unwrap();
+    assert_eq!(status, 404, "{body}");
+    assert!(parse(&body).unwrap().get("error").is_some());
+    let (status, _) = c.get("/v1/transform").unwrap();
+    assert_eq!(status, 405);
+    let (status, _) = c.request("DELETE", "/healthz", None).unwrap();
+    assert_eq!(status, 405);
+
+    // Malformed JSON and schema violations → 400 (connection stays up:
+    // these are dispatch-level errors on a fully read request).
+    let (status, body) = c.post("/v1/transform", "{ not json").unwrap();
+    assert_eq!(status, 400, "{body}");
+    let (status, _) = c.post("/v1/transform", r#"{"view":"a","rows":[]}"#).unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = c
+        .post("/v1/transform", r#"{"view":"q","rows":[{"indices":[0],"values":[1.0]}]}"#)
+        .unwrap();
+    assert_eq!(status, 400);
+
+    // Structurally fine but does not fit the model → 422.
+    let (status, body) = c
+        .post(
+            "/v1/transform",
+            r#"{"view":"a","rows":[{"indices":[100],"values":[1.0]}]}"#,
+        )
+        .unwrap();
+    assert_eq!(status, 422, "{body}");
+    assert!(body.contains("48"), "{body}");
+
+    // Reload with a corrupted document on disk → 409, old model keeps
+    // serving afterwards.
+    std::fs::write(&h.model_path, "{\"format\": \"rcca-model-v999\"}").unwrap();
+    let (status, body) = c.post("/admin/reload", "").unwrap();
+    assert_eq!(status, 409, "{body}");
+    let (status, body) = c.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(
+        parse(&body).unwrap().get("generation").unwrap().as_usize(),
+        Some(1)
+    );
+    let req = proto::transform_request(View::A, &chunk.a.slice_rows(0, 1)).to_string_compact();
+    let (status, _) = c.post("/v1/transform", &req).unwrap();
+    assert_eq!(status, 200);
+
+    // Oversized body → 413 and the server closes that connection.
+    let huge = format!(
+        r#"{{"view":"a","rows":[{{"indices":[0],"values":[1.0]}}],"pad":"{}"}}"#,
+        "x".repeat(8192)
+    );
+    let mut fresh = h.client();
+    let (status, _) = fresh.post("/v1/transform", &huge).unwrap();
+    assert_eq!(status, 413);
+}
+
+#[test]
+fn hot_swap_under_concurrent_load_has_zero_errors() {
+    let chunk = corpus(33);
+    // A worker per load client plus headroom for the admin/metrics
+    // connections (keep-alive connections each pin a worker while open).
+    let cfg = ServerConfig {
+        threads: 6,
+        ..Default::default()
+    };
+    let (h, model1) = Harness::start("swap", &chunk, cfg);
+    let model2 = fit(&chunk, 4242);
+    assert_ne!(
+        model1.xa().data, model2.xa().data,
+        "the two models must differ for the swap to be observable"
+    );
+    let want1 = model1.transform_a(&chunk.a).unwrap();
+    let want2 = model2.transform_a(&chunk.a).unwrap();
+
+    let addr = h.handle.addr();
+    let chunk = Arc::new(chunk);
+    let want1 = Arc::new(want1);
+    let want2 = Arc::new(want2);
+    let mut clients = Vec::new();
+    for t in 0..4 {
+        let chunk = Arc::clone(&chunk);
+        let (want1, want2) = (Arc::clone(&want1), Arc::clone(&want2));
+        clients.push(std::thread::spawn(move || {
+            let mut c = HttpClient::connect(addr).unwrap();
+            for i in 0..150 {
+                let row = (t * 150 + i) % 260;
+                let req = proto::transform_request(View::A, &chunk.a.slice_rows(row, row + 1))
+                    .to_string_compact();
+                let (status, body) = c.post("/v1/transform", &req).unwrap();
+                assert_eq!(status, 200, "row {row}: {body}");
+                let got = projections_of(&body);
+                let g = parse(&body)
+                    .unwrap()
+                    .get("generation")
+                    .unwrap()
+                    .as_usize()
+                    .unwrap();
+                // Every answer must be internally consistent: the reported
+                // generation's model produced exactly these numbers.
+                let want = if g % 2 == 1 { &want1 } else { &want2 };
+                assert_eq!(
+                    got.row(0),
+                    want.row(row),
+                    "row {row} answered by generation {g} does not match that model"
+                );
+            }
+        }));
+    }
+
+    // Meanwhile: swap the model back and forth. Odd generations serve
+    // model1, even generations model2 (generation starts at 1 = model1).
+    for swap in 0..4 {
+        std::thread::sleep(Duration::from_millis(40));
+        let next = if swap % 2 == 0 { &model2 } else { &model1 };
+        save_atomic(next, &h.model_path);
+        let mut admin = h.client();
+        let (status, body) = admin.post("/admin/reload", "").unwrap();
+        assert_eq!(status, 200, "swap {swap}: {body}");
+        let g = parse(&body)
+            .unwrap()
+            .get("generation")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert_eq!(g, swap + 2);
+    }
+
+    for c in clients {
+        c.join().unwrap();
+    }
+    // After the dust settles: 4 reloads happened, none failed.
+    let mut c = h.client();
+    let (_, body) = c.get("/metrics").unwrap();
+    let m = parse(&body).unwrap();
+    assert_eq!(m.get("reloads").unwrap().as_usize(), Some(4));
+    assert_eq!(m.get("generation").unwrap().as_usize(), Some(5));
+}
+
+/// Write-then-rename so the registry never reads a torn document (same
+/// discipline as ShardWriter).
+fn save_atomic(model: &FittedModel, path: &Path) {
+    let tmp = path.with_extension("tmp");
+    model.save(&tmp).unwrap();
+    std::fs::rename(&tmp, path).unwrap();
+}
+
+#[test]
+fn shutdown_drains_and_joins() {
+    let chunk = corpus(34);
+    let (h, _model) = Harness::start("shutdown", &chunk, ServerConfig::default());
+    let mut c = h.client();
+    let (status, _) = c.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    drop(c);
+    // Harness::drop shuts down and joins the server thread; reaching the
+    // end of this test without hanging is the assertion.
+}
+
+#[test]
+fn keep_alive_and_connection_close_semantics() {
+    let chunk = corpus(35);
+    let (h, model) = Harness::start("keepalive", &chunk, ServerConfig::default());
+    let want = model.transform_a(&chunk.a).unwrap();
+    // 50 sequential requests on ONE connection.
+    let mut c = h.client();
+    for i in 0..50 {
+        let req = proto::transform_request(View::A, &chunk.a.slice_rows(i, i + 1))
+            .to_string_compact();
+        let (status, body) = c.post("/v1/transform", &req).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(projections_of(&body).row(0), want.row(i));
+    }
+    // Metrics report one connection carrying those 50 requests (plus this
+    // metrics request's own connection bookkeeping).
+    let (_, body) = c.get("/metrics").unwrap();
+    let m = parse(&body).unwrap();
+    assert_eq!(m.get("connections").unwrap().as_usize(), Some(1));
+    assert!(m.get("requests_total").unwrap().as_usize().unwrap() >= 51);
+}
+
+#[test]
+fn served_model_document_matches_api_load() {
+    // The server and a plain FittedModel::load agree on the same document —
+    // the serve layer adds no numeric drift anywhere in the path.
+    let chunk = corpus(36);
+    let (h, model) = Harness::start("agree", &chunk, ServerConfig::default());
+    let reloaded = FittedModel::load(&h.model_path).unwrap();
+    assert_eq!(reloaded.xa(), model.xa());
+    let mut c = h.client();
+    let (_, body) = c.get("/v1/model").unwrap();
+    let meta = parse(&body).unwrap();
+    let sum = meta.get("sum_correlations").unwrap().as_f64().unwrap();
+    assert_eq!(sum, reloaded.sum_correlations());
+}
