@@ -1,13 +1,18 @@
-//! Micro-benches (P1–P4 in DESIGN.md §6): engine and substrate hot paths.
+//! Micro-benches (P1–P5): engine and substrate hot paths.
 //!
 //!   P1  GEMM roofline — f32 dense matmul GFLOP/s (the native final-pass core)
 //!   P2  sparse-native vs dense-PJRT chunk crossover (the engine choice)
 //!   P3  hashing + generator throughput (data-plane cost)
 //!   P4  coordinator overhead — pass cost vs raw engine cost, pool latency
+//!   P5  sparse kernels — scalar baselines vs the panel-blocked/fused
+//!       `sparse::kernels` twins, incl. the power-chunk path and the serve
+//!       transform (GFLOP/s per kernel)
 //!
 //! These feed EXPERIMENTS.md §Perf (before/after iteration log). Every
 //! measured section also lands in `BENCH_micro.json` at the repo root so
-//! perf is tracked machine-readably across PRs.
+//! perf is tracked machine-readably across PRs; CI compares it against
+//! `BENCH_micro.baseline.json` with `repro bench-check`. Set
+//! `RCCA_BENCH_SHORT=1` for the fast smoke configuration.
 
 mod common;
 
@@ -16,7 +21,8 @@ use rcca::data::synthparl::{SynthParl, SynthParlConfig};
 use rcca::data::TwoViewChunk;
 use rcca::linalg::gemm::{sgemm_nn, sgemm_tn};
 use rcca::linalg::Mat;
-use rcca::runtime::{mat_to_f32, ChunkEngine, NativeEngine};
+use rcca::runtime::{mat_to_f32, ChunkEngine, ChunkMirror, NativeEngine, Workspace};
+use rcca::sparse::kernels;
 use rcca::util::json::Json;
 use rcca::util::pool::Pool;
 use rcca::util::rng::Rng;
@@ -36,12 +42,13 @@ impl Trajectory {
 }
 
 fn main() {
-    println!("# micro benches (P1–P4)\n");
+    println!("# micro benches (P1–P5)\n");
     let mut traj = Trajectory::new();
     p1_gemm(&mut traj);
     p2_engines(&mut traj);
     p3_dataplane(&mut traj);
     p4_coordinator(&mut traj);
+    p5_sparse_kernels(&mut traj);
     let mut doc = Json::obj();
     doc.set("bench", rcca::util::json::jstr("micro"));
     doc.set("sections", traj.0);
@@ -182,6 +189,119 @@ fn p3_dataplane(traj: &mut Trajectory) {
     );
     traj.record("shard_decode_validate", &stats);
     chunk.a.values[0] += 0.0; // keep mutable binding honest
+    println!();
+}
+
+/// Pre-change scalar power chunk: the exact shape of the old
+/// `NativeEngine::power_chunk` — four CSR walks through the scalar `Csr`
+/// kernels plus four fresh buffers per call. Kept here as the measured
+/// baseline the panel/fused path is gated against (≥1.5× target, see
+/// EXPERIMENTS.md §Perf).
+fn scalar_power_chunk(chunk: &TwoViewChunk, qa32: &[f32], qb32: &[f32], r: usize) -> (Mat, Mat) {
+    let m = chunk.rows();
+    let (da, db) = (chunk.a.cols, chunk.b.cols);
+    let mut bq = vec![0f32; m * r];
+    chunk.b.times_dense(qb32, r, &mut bq);
+    let mut ya = vec![0f64; da * r];
+    chunk.a.add_t_times_dense(&bq, r, &mut ya);
+    let mut aq = vec![0f32; m * r];
+    chunk.a.times_dense(qa32, r, &mut aq);
+    let mut yb = vec![0f64; db * r];
+    chunk.b.add_t_times_dense(&aq, r, &mut yb);
+    (Mat::from_vec(da, r, ya), Mat::from_vec(db, r, yb))
+}
+
+fn p5_sparse_kernels(traj: &mut Trajectory) {
+    println!("## P5: panel-blocked sparse kernels vs scalar baselines");
+    let d = 4096usize;
+    let r = 64usize;
+    let chunk = bench_chunk(d, 16.0);
+    let m = chunk.rows();
+    let nnz = chunk.a.nnz();
+    let mut rng = Rng::new(17);
+    let qa = mat_to_f32(&Mat::randn(d, r, &mut rng));
+    let qb = mat_to_f32(&Mat::randn(d, r, &mut rng));
+    let gflops = |flops: f64, s: &Stats| flops / s.p50 / 1e9;
+
+    // Gather: P = A·Q.
+    let flops_gather = 2.0 * nnz as f64 * r as f64;
+    let mut p = vec![0f32; m * r];
+    let s = bench_fn(&format!("times_dense scalar {m}x{d} r={r}"), || {
+        chunk.a.times_dense(&qa, r, &mut p);
+    });
+    println!("    -> {:.2} GFLOP/s", gflops(flops_gather, &s));
+    traj.record("sparse_times_dense_scalar", &s);
+    let s = bench_fn(&format!("times_dense panel  {m}x{d} r={r}"), || {
+        kernels::times_dense(&chunk.a, &qa, r, &mut p);
+    });
+    println!("    -> {:.2} GFLOP/s", gflops(flops_gather, &s));
+    traj.record("sparse_times_dense_panel", &s);
+
+    // Scatter: Y += AᵀM (f64 accumulators).
+    let mbuf = mat_to_f32(&Mat::randn(m, r, &mut rng));
+    let mut y = vec![0f64; d * r];
+    let s = bench_fn(&format!("scatter scalar     {m}x{d} r={r}"), || {
+        chunk.a.add_t_times_dense(&mbuf, r, &mut y);
+    });
+    println!("    -> {:.2} GFLOP/s", gflops(flops_gather, &s));
+    traj.record("sparse_scatter_scalar", &s);
+    let s = bench_fn(&format!("scatter panel      {m}x{d} r={r}"), || {
+        kernels::add_t_times_dense(&chunk.a, &mbuf, r, &mut y);
+    });
+    println!("    -> {:.2} GFLOP/s", gflops(flops_gather, &s));
+    traj.record("sparse_scatter_panel", &s);
+
+    // The power-chunk path: pre-change scalar baseline vs fused+workspace
+    // vs mirrored scatter. The ≥1.5× acceptance gate compares the first
+    // two entries of this block.
+    let flops_power = 2.0 * (chunk.a.nnz() + chunk.b.nnz()) as f64 * r as f64 * 2.0;
+    let eng = NativeEngine::new();
+    let s_scalar = bench_fn(&format!("power_chunk scalar (pre-change) r={r}"), || {
+        let _ = scalar_power_chunk(&chunk, &qa, &qb, r);
+    });
+    println!("    -> {:.2} GFLOP/s", gflops(flops_power, &s_scalar));
+    traj.record("power_chunk_scalar", &s_scalar);
+    let mut ws = Workspace::new();
+    let s_fused = bench_fn(&format!("power_chunk fused+workspace     r={r}"), || {
+        ws.begin_power(d, d, r);
+        eng.power_chunk_ws(&chunk, None, &qa, &qb, r, &mut ws).unwrap();
+    });
+    println!(
+        "    -> {:.2} GFLOP/s ({:.2}x vs scalar)",
+        gflops(flops_power, &s_fused),
+        s_scalar.p50 / s_fused.p50
+    );
+    traj.record("power_chunk_fused", &s_fused);
+    let mir = ChunkMirror::build(&chunk);
+    let s_mir = bench_fn(&format!("power_chunk mirrored scatter    r={r}"), || {
+        ws.begin_power(d, d, r);
+        eng.power_chunk_ws(&chunk, Some(&mir), &qa, &qb, r, &mut ws)
+            .unwrap();
+    });
+    println!(
+        "    -> {:.2} GFLOP/s ({:.2}x vs scalar)",
+        gflops(flops_power, &s_mir),
+        s_scalar.p50 / s_mir.p50
+    );
+    traj.record("power_chunk_mirrored", &s_mir);
+
+    // Serve transform: k-narrow projection, f64 `times_mat` (pre-change
+    // serving path) vs the blocked f32 kernel with f64 output accumulation.
+    let k = 8usize;
+    let proj = Mat::randn(d, k, &mut rng);
+    let proj32 = mat_to_f32(&proj);
+    let flops_serve = 2.0 * nnz as f64 * k as f64;
+    let s = bench_fn(&format!("serve transform f64 times_mat  k={k}"), || {
+        let _ = chunk.a.times_mat(&proj);
+    });
+    println!("    -> {:.2} GFLOP/s", gflops(flops_serve, &s));
+    traj.record("serve_transform_f64", &s);
+    let mut out = vec![0f64; m * k];
+    let s = bench_fn(&format!("serve transform f32 panel      k={k}"), || {
+        kernels::times_dense_acc64(&chunk.a, &proj32, k, &mut out);
+    });
+    println!("    -> {:.2} GFLOP/s", gflops(flops_serve, &s));
+    traj.record("serve_transform_f32", &s);
     println!();
 }
 

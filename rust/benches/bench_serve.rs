@@ -3,12 +3,13 @@
 //!
 //! Fits a small model, starts the server on an ephemeral port, then hammers
 //! `POST /v1/transform` from several keep-alive client threads — ≥ 10k
-//! requests total, zero tolerated failures. Reports throughput and p50/p99
-//! latency (plus the batcher's fusion stats) both to stdout and to
-//! `BENCH_serve.json` at the repo root for the cross-PR perf trajectory.
+//! requests total (1k in `RCCA_BENCH_SHORT` smoke mode), zero tolerated
+//! failures. Reports throughput and p50/p99 latency (plus the batcher's
+//! fusion stats) both to stdout and to `BENCH_serve.json` at the repo root
+//! for the cross-PR perf trajectory.
 
 use rcca::api::{Cca, Engine};
-use rcca::bench::write_bench_json;
+use rcca::bench::{short_mode, write_bench_json};
 use rcca::data::synthparl::{SynthParl, SynthParlConfig};
 use rcca::data::TwoViewChunk;
 use rcca::serve::{proto, HttpClient, Server, ServerConfig, View};
@@ -18,8 +19,16 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 const CLIENT_THREADS: usize = 4;
-const REQUESTS_PER_CLIENT: usize = 3000; // 12k total, ≥ 10k floor
 const DISTINCT_BODIES: usize = 64;
+
+/// 12k total (≥ 10k floor) in full mode; 1k in CI smoke mode.
+fn requests_per_client() -> usize {
+    if short_mode() {
+        250
+    } else {
+        3000
+    }
+}
 
 fn main() {
     // A serving-shaped corpus: small enough to fit in seconds, wide enough
@@ -78,9 +87,8 @@ fn main() {
             .collect(),
     );
 
-    println!(
-        "# serve load: {CLIENT_THREADS} clients x {REQUESTS_PER_CLIENT} requests against {addr}"
-    );
+    let per_client = requests_per_client();
+    println!("# serve load: {CLIENT_THREADS} clients x {per_client} requests against {addr}");
     let failed = Arc::new(AtomicU64::new(0));
     let wall = Instant::now();
     let mut workers = Vec::new();
@@ -88,9 +96,9 @@ fn main() {
         let bodies = Arc::clone(&bodies);
         let failed = Arc::clone(&failed);
         workers.push(std::thread::spawn(move || {
-            let mut latencies = Vec::with_capacity(REQUESTS_PER_CLIENT);
+            let mut latencies = Vec::with_capacity(per_client);
             let mut client = HttpClient::connect(addr).expect("connect load client");
-            for i in 0..REQUESTS_PER_CLIENT {
+            for i in 0..per_client {
                 let body = &bodies[(t + i * CLIENT_THREADS) % bodies.len()];
                 let started = Instant::now();
                 match client.post("/v1/transform", body) {
@@ -113,7 +121,7 @@ fn main() {
             latencies
         }));
     }
-    let mut latencies: Vec<f64> = Vec::with_capacity(CLIENT_THREADS * REQUESTS_PER_CLIENT);
+    let mut latencies: Vec<f64> = Vec::with_capacity(CLIENT_THREADS * per_client);
     for w in workers {
         latencies.extend(w.join().expect("join load client"));
     }
@@ -122,7 +130,7 @@ fn main() {
     server_thread.join().expect("join server");
 
     let failed = failed.load(Ordering::SeqCst);
-    let total = (CLIENT_THREADS * REQUESTS_PER_CLIENT) as u64;
+    let total = (CLIENT_THREADS * per_client) as u64;
     assert_eq!(failed, 0, "{failed} of {total} requests failed");
     assert_eq!(latencies.len() as u64, total);
 

@@ -10,9 +10,10 @@ use crate::cca::objective::{evaluate, feasibility, Feasibility, Objective};
 use crate::cca::pass::PassEngine;
 use crate::cca::CcaModel;
 use crate::linalg::Mat;
-use crate::sparse::Csr;
+use crate::sparse::{kernels, Csr};
 use crate::util::json::{jarr, jnum, jstr, Json};
 use std::path::Path;
+use std::sync::OnceLock;
 
 const FORMAT: &str = "rcca-model-v1";
 
@@ -35,6 +36,11 @@ pub struct FittedModel {
     /// Data passes this fit consumed (λ resolution + initializer + solver),
     /// measured as the engine-ledger delta across `Cca::fit`.
     fit_passes: usize,
+    /// f32 copies of the projections, built once on first transform — the
+    /// serving hot path runs the panel-blocked f32 kernel with f64
+    /// accumulation only at the output.
+    xa32: OnceLock<Vec<f32>>,
+    xb32: OnceLock<Vec<f32>>,
 }
 
 impl FittedModel {
@@ -47,6 +53,8 @@ impl FittedModel {
             init_passes: 0,
             trace: None,
             fit_passes: 0,
+            xa32: OnceLock::new(),
+            xb32: OnceLock::new(),
         }
     }
 
@@ -118,26 +126,62 @@ impl FittedModel {
         self.model
     }
 
+    fn xa32(&self) -> &[f32] {
+        self.xa32.get_or_init(|| self.model.xa.to_f32())
+    }
+
+    fn xb32(&self) -> &[f32] {
+        self.xb32.get_or_init(|| self.model.xb.to_f32())
+    }
+
     /// Project view-A rows (n × da CSR) into the canonical space → n × k.
     pub fn transform_a(&self, a: &Csr) -> Result<Mat, ApiError> {
+        let mut out = Vec::new();
+        self.transform_a_into(a, &mut out)?;
+        Ok(Mat::from_vec(a.rows, self.k(), out))
+    }
+
+    /// Project view-B rows (n × db CSR) into the canonical space → n × k.
+    pub fn transform_b(&self, b: &Csr) -> Result<Mat, ApiError> {
+        let mut out = Vec::new();
+        self.transform_b_into(b, &mut out)?;
+        Ok(Mat::from_vec(b.rows, self.k(), out))
+    }
+
+    /// Allocation-free twin of [`FittedModel::transform_a`]: `out` is
+    /// cleared and re-lengthed to n × k (capacity retained), so a
+    /// steady-state caller — the serve batcher — projects without heap
+    /// allocation. The product runs on the panel-blocked f32 kernel with
+    /// f64 accumulation only at the output; each output row is the same
+    /// dot-product sequence regardless of batching, so batched and
+    /// row-at-a-time projections agree bitwise.
+    pub fn transform_a_into(&self, a: &Csr, out: &mut Vec<f64>) -> Result<(), ApiError> {
         if a.cols != self.model.xa.rows {
             return Err(ApiError::DimensionMismatch {
                 expected: self.model.xa.rows,
                 got: a.cols,
             });
         }
-        Ok(a.times_mat(&self.model.xa))
+        let k = self.model.k();
+        out.clear();
+        out.resize(a.rows * k, 0.0);
+        kernels::add_times_dense_acc64(a, self.xa32(), k, out);
+        Ok(())
     }
 
-    /// Project view-B rows (n × db CSR) into the canonical space → n × k.
-    pub fn transform_b(&self, b: &Csr) -> Result<Mat, ApiError> {
+    /// Allocation-free twin of [`FittedModel::transform_b`].
+    pub fn transform_b_into(&self, b: &Csr, out: &mut Vec<f64>) -> Result<(), ApiError> {
         if b.cols != self.model.xb.rows {
             return Err(ApiError::DimensionMismatch {
                 expected: self.model.xb.rows,
                 got: b.cols,
             });
         }
-        Ok(b.times_mat(&self.model.xb))
+        let k = self.model.k();
+        out.clear();
+        out.resize(b.rows * k, 0.0);
+        kernels::add_times_dense_acc64(b, self.xb32(), k, out);
+        Ok(())
     }
 
     /// Objective `(1/n)·Tr(XaᵀAᵀBXb)` on the engine's dataset (one data
@@ -244,6 +288,8 @@ impl FittedModel {
             init_passes: get_usize("init_passes")?,
             trace: None,
             fit_passes,
+            xa32: OnceLock::new(),
+            xb32: OnceLock::new(),
         })
     }
 
@@ -347,6 +393,28 @@ mod tests {
             m.transform_a(&narrow),
             Err(ApiError::DimensionMismatch { expected: 64, got: 32 })
         ));
+    }
+
+    #[test]
+    fn kernel_transform_matches_f64_reference() {
+        // The serving path runs the blocked f32 kernel with f64 output
+        // accumulation; it must track the all-f64 `times_mat` reference to
+        // f32 precision, and the *_into twin must be reusable.
+        let (m, chunk) = fitted();
+        let want = chunk.a.times_mat(m.xa());
+        let got = m.transform_a(&chunk.a).unwrap();
+        assert!(got.rel_diff(&want) < 1e-5, "{}", got.rel_diff(&want));
+        let mut buf = Vec::new();
+        m.transform_a_into(&chunk.a, &mut buf).unwrap();
+        assert_eq!(buf, got.data);
+        // Reuse with a different row count re-lengths cleanly.
+        let head = chunk.a.slice_rows(0, 3);
+        m.transform_a_into(&head, &mut buf).unwrap();
+        assert_eq!(buf.len(), 3 * m.k());
+        assert_eq!(buf, got.data[..3 * m.k()].to_vec());
+        let want_b = chunk.b.times_mat(m.xb());
+        let got_b = m.transform_b(&chunk.b).unwrap();
+        assert!(got_b.rel_diff(&want_b) < 1e-5);
     }
 
     #[test]

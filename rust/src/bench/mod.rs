@@ -80,11 +80,23 @@ pub fn write_bench_json(name: &str, doc: &Json) -> std::io::Result<String> {
     Ok(path)
 }
 
+/// True when `RCCA_BENCH_SHORT` is set in the environment: CI smoke mode.
+/// [`bench_fn`] then runs far fewer iterations — enough for the >25%
+/// regression gate (`repro bench-check`), not for publication-grade
+/// numbers — so the whole bench suite finishes in seconds.
+pub fn short_mode() -> bool {
+    std::env::var_os("RCCA_BENCH_SHORT").is_some()
+}
+
 /// Benchmark a closure: `warmup` untimed runs, then timed runs until both
 /// `min_iters` iterations and `min_secs` seconds of measurement accumulate
-/// (capped at `max_iters`).
+/// (capped at `max_iters`). Honors [`short_mode`].
 pub fn bench_fn<F: FnMut()>(name: &str, mut f: F) -> Stats {
-    bench_fn_cfg(name, 2, 5, 200, 0.5, &mut f)
+    if short_mode() {
+        bench_fn_cfg(name, 1, 3, 25, 0.05, &mut f)
+    } else {
+        bench_fn_cfg(name, 2, 5, 200, 0.5, &mut f)
+    }
 }
 
 pub fn bench_fn_cfg<F: FnMut()>(

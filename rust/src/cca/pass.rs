@@ -2,6 +2,8 @@
 
 use crate::data::TwoViewChunk;
 use crate::linalg::{matmul_tn, Mat};
+use crate::runtime::{ChunkEngine, ChunkMirror, NativeEngine, Workspace};
+use std::sync::OnceLock;
 
 /// One logical sweep over the two-view dataset, producing batched matrix
 /// products. Every method that touches the data increments the pass ledger
@@ -29,8 +31,19 @@ pub trait PassEngine {
 }
 
 /// Single-node in-core implementation over CSR views.
+///
+/// The power pass runs on the same panel-blocked [`NativeEngine`] path the
+/// coordinator uses, with a persistent [`Workspace`] (zero steady-state
+/// allocations beyond the returned matrices) and a transposed mirror built
+/// lazily on the first power pass — in-memory data is cached by
+/// definition, so the transpose always amortizes.
 pub struct InMemoryPass {
-    pub chunk: TwoViewChunk,
+    /// Private: the lazily built mirror is the transpose of THIS data, so
+    /// the dataset must not be swapped out from under it.
+    chunk: TwoViewChunk,
+    engine: NativeEngine,
+    ws: Workspace,
+    mirror: OnceLock<Option<ChunkMirror>>,
     passes: usize,
     traces: Option<(f64, f64)>,
 }
@@ -39,9 +52,17 @@ impl InMemoryPass {
     pub fn new(chunk: TwoViewChunk) -> InMemoryPass {
         InMemoryPass {
             chunk,
+            engine: NativeEngine::new(),
+            ws: Workspace::new(),
+            mirror: OnceLock::new(),
             passes: 0,
             traces: None,
         }
+    }
+
+    /// The dataset this engine sweeps (read-only — see the field docs).
+    pub fn chunk(&self) -> &TwoViewChunk {
+        &self.chunk
     }
 }
 
@@ -52,17 +73,30 @@ impl PassEngine for InMemoryPass {
 
     fn power_pass(&mut self, qa: &Mat, qb: &Mat) -> (Mat, Mat) {
         self.passes += 1;
-        let (a, b) = (&self.chunk.a, &self.chunk.b);
-        // Ya = Aᵀ(B Qb): gather then scatter, O(nnz·r).
-        let bq = b.times_mat(qb);
-        let ya = a.t_times_mat(&bq);
-        let aq = a.times_mat(qa);
-        let yb = b.t_times_mat(&aq);
+        let r = qa.cols;
+        assert_eq!(qb.cols, r, "Qa/Qb column mismatch");
+        let qa32 = qa.to_f32();
+        let qb32 = qb.to_f32();
+        self.ws.begin_power(self.chunk.a.cols, self.chunk.b.cols, r);
+        let mirror = self
+            .mirror
+            .get_or_init(|| ChunkMirror::maybe_build(&self.chunk))
+            .as_ref();
+        self.engine
+            .power_chunk_ws(&self.chunk, mirror, &qa32, &qb32, r, &mut self.ws)
+            .expect("in-memory power pass");
+        let mut out = self.ws.take();
+        let yb = out.pop().unwrap();
+        let ya = out.pop().unwrap();
         (ya, yb)
     }
 
     fn final_pass(&mut self, qa: &Mat, qb: &Mat) -> (Mat, Mat, Mat) {
         self.passes += 1;
+        // Deliberately NOT the f32 chunk-engine path: the final pass runs
+        // once per fit, and computing whole-dataset Grams in f32 would
+        // accumulate O(n) rounding that the sharded engine bounds per
+        // chunk. Leader-side f64 keeps the exact-solver comparisons tight.
         let (a, b) = (&self.chunk.a, &self.chunk.b);
         let pa = a.times_mat(qa); // n × r
         let pb = b.times_mat(qb);

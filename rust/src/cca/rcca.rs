@@ -156,7 +156,7 @@ mod tests {
     fn pass_count_is_q_plus_one() {
         let mut eng = InMemoryPass::new(dataset(300, 64, 1));
         for q in 0..4 {
-            let mut eng2 = InMemoryPass::new(eng.chunk.clone());
+            let mut eng2 = InMemoryPass::new(eng.chunk().clone());
             let model = RandomizedCca::new(RccaConfig {
                 k: 4,
                 p: 8,

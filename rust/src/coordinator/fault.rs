@@ -2,8 +2,7 @@
 //! used to test the coordinator's retry path (and in chaos examples).
 
 use crate::data::TwoViewChunk;
-use crate::linalg::Mat;
-use crate::runtime::ChunkEngine;
+use crate::runtime::{ChunkEngine, ChunkMirror, Workspace};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Wraps an engine and makes each chunk call fail with probability
@@ -55,26 +54,33 @@ impl<E: ChunkEngine> ChunkEngine for FaultyEngine<E> {
         "faulty"
     }
 
-    fn power_chunk(
-        &self,
-        chunk: &TwoViewChunk,
-        qa32: &[f32],
-        qb32: &[f32],
-        r: usize,
-    ) -> anyhow::Result<(Mat, Mat)> {
-        self.maybe_fail()?;
-        self.inner.power_chunk(chunk, qa32, qb32, r)
+    fn wants_mirror(&self) -> bool {
+        self.inner.wants_mirror()
     }
 
-    fn final_chunk(
+    fn power_chunk_ws(
+        &self,
+        chunk: &TwoViewChunk,
+        mirror: Option<&ChunkMirror>,
+        qa32: &[f32],
+        qb32: &[f32],
+        r: usize,
+        ws: &mut Workspace,
+    ) -> anyhow::Result<()> {
+        self.maybe_fail()?;
+        self.inner.power_chunk_ws(chunk, mirror, qa32, qb32, r, ws)
+    }
+
+    fn final_chunk_ws(
         &self,
         chunk: &TwoViewChunk,
         qa32: &[f32],
         qb32: &[f32],
         r: usize,
-    ) -> anyhow::Result<(Mat, Mat, Mat)> {
+        ws: &mut Workspace,
+    ) -> anyhow::Result<()> {
         self.maybe_fail()?;
-        self.inner.final_chunk(chunk, qa32, qb32, r)
+        self.inner.final_chunk_ws(chunk, qa32, qb32, r, ws)
     }
 }
 
@@ -82,6 +88,7 @@ impl<E: ChunkEngine> ChunkEngine for FaultyEngine<E> {
 mod tests {
     use super::*;
     use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::linalg::Mat;
     use crate::runtime::{mat_to_f32, NativeEngine};
     use crate::util::rng::Rng;
 

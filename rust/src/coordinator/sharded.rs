@@ -5,7 +5,7 @@ use super::reduce::Accumulator;
 use crate::cca::pass::PassEngine;
 use crate::data::shards::{ShardStore, TwoViewChunk};
 use crate::linalg::Mat;
-use crate::runtime::{mat_to_f32, ChunkEngine};
+use crate::runtime::{mat_to_f32, ChunkEngine, ChunkMirror, Workspace};
 use crate::util::pool::Pool;
 use crate::util::timer::Timer;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -25,6 +25,11 @@ pub struct ShardedPassConfig {
     /// setting "all data fits in core"); false re-reads from disk per pass
     /// (the out-of-core / Hadoop-like regime).
     pub cache_shards: bool,
+    /// Build transposed chunk mirrors on the first power pass so repeat
+    /// passes scatter with sequential writes. Only takes effect together
+    /// with `cache_shards` (an uncached shard cannot amortize the
+    /// transpose) and only for chunks [`ChunkMirror::worthwhile`] accepts.
+    pub mirror_scatter: bool,
 }
 
 impl Default for ShardedPassConfig {
@@ -35,8 +40,98 @@ impl Default for ShardedPassConfig {
             chunk_rows: 256,
             max_retries: 2,
             cache_shards: true,
+            mirror_scatter: true,
         }
     }
+}
+
+/// A shard pre-sliced into engine chunks at load time, so repeat passes
+/// over a cached shard pay zero slicing cost, plus each chunk's lazily
+/// built transposed mirror.
+struct PreparedShard {
+    chunks: Vec<PreparedChunk>,
+}
+
+struct PreparedChunk {
+    data: TwoViewChunk,
+    mirror_cell: OnceLock<Option<ChunkMirror>>,
+}
+
+impl PreparedChunk {
+    /// Transposed mirror, built on first request (`None` when the density
+    /// heuristic rejects mirroring this chunk).
+    fn mirror(&self) -> Option<&ChunkMirror> {
+        self.mirror_cell
+            .get_or_init(|| ChunkMirror::maybe_build(&self.data))
+            .as_ref()
+    }
+}
+
+impl PreparedShard {
+    fn build(data: &TwoViewChunk, chunk_rows: usize) -> PreparedShard {
+        // chunk_rows == 0 would otherwise never advance the slice cursor.
+        let chunk_rows = chunk_rows.max(1);
+        let rows = data.rows();
+        let mut chunks = Vec::with_capacity(rows.div_ceil(chunk_rows));
+        let mut lo = 0;
+        while lo < rows {
+            let hi = (lo + chunk_rows).min(rows);
+            chunks.push(PreparedChunk {
+                data: TwoViewChunk {
+                    a: data.a.slice_rows(lo, hi),
+                    b: data.b.slice_rows(lo, hi),
+                },
+                mirror_cell: OnceLock::new(),
+            });
+            lo = hi;
+        }
+        PreparedShard { chunks }
+    }
+
+    fn nnz_bytes(&self) -> u64 {
+        self.chunks
+            .iter()
+            .map(|c| (c.data.a.nnz() + c.data.b.nnz()) as u64 * 8)
+            .sum()
+    }
+}
+
+/// Size a workspace for one pass kind.
+fn begin_pass(ws: &mut Workspace, kind: &str, da: usize, db: usize, r: usize) {
+    match kind {
+        "power" => ws.begin_power(da, db, r),
+        "final" => ws.begin_final(r),
+        _ => unreachable!("unknown pass kind"),
+    }
+}
+
+/// Run one chunk through the engine, accumulating into `ws` and charging
+/// the engine-time metrics.
+#[allow(clippy::too_many_arguments)]
+fn process_chunk(
+    engine: &dyn ChunkEngine,
+    kind: &str,
+    chunk: &TwoViewChunk,
+    mirror: Option<&ChunkMirror>,
+    qa32: &[f32],
+    qb32: &[f32],
+    r: usize,
+    ws: &mut Workspace,
+    metrics: &Metrics,
+) -> Result<(), String> {
+    let eng_t = Timer::start();
+    match kind {
+        "power" => engine
+            .power_chunk_ws(chunk, mirror, qa32, qb32, r, ws)
+            .map_err(|e| e.to_string())?,
+        "final" => engine
+            .final_chunk_ws(chunk, qa32, qb32, r, ws)
+            .map_err(|e| e.to_string())?,
+        _ => unreachable!("unknown pass kind"),
+    }
+    metrics.add(&metrics.engine_nanos, eng_t.elapsed().as_nanos() as u64);
+    metrics.add(&metrics.chunks_processed, 1);
+    Ok(())
 }
 
 /// Leader-side pass engine over an on-disk shard store. Implements
@@ -49,7 +144,7 @@ pub struct ShardedPass {
     pub metrics: Arc<Metrics>,
     passes: usize,
     traces: Option<(f64, f64)>,
-    cache: Arc<Vec<OnceLock<Arc<TwoViewChunk>>>>,
+    cache: Arc<Vec<OnceLock<Arc<PreparedShard>>>>,
 }
 
 type TaskResult = (usize, Result<Vec<Mat>, String>);
@@ -74,9 +169,10 @@ impl ShardedPass {
         }
     }
 
-    /// Submit one shard task. The task loads (or re-uses) the shard, maps
-    /// the engine over its chunks, reduces locally, and reports exactly one
-    /// `TaskResult` — success or contained failure.
+    /// Submit one shard task. The task loads (or re-uses) the pre-chunked
+    /// shard, accumulates the engine over its chunks into one reused
+    /// [`Workspace`] (zero heap allocations per chunk in steady state),
+    /// and reports exactly one `TaskResult` — success or contained failure.
     #[allow(clippy::too_many_arguments)]
     fn submit_shard(
         &self,
@@ -90,7 +186,9 @@ impl ShardedPass {
         let store = self.store.clone();
         let engine = Arc::clone(&self.engine);
         let metrics = Arc::clone(&self.metrics);
-        let chunk_rows = self.config.chunk_rows;
+        let chunk_rows = self.config.chunk_rows.max(1);
+        let mirror_scatter =
+            self.config.mirror_scatter && self.config.cache_shards && self.engine.wants_mirror();
         let cache = if self.config.cache_shards {
             Some(Arc::clone(&self.cache))
         } else {
@@ -98,70 +196,70 @@ impl ShardedPass {
         };
         self.pool.submit(move || {
             let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<Vec<Mat>, String> {
-                // Load (or fetch cached) shard.
                 let load_t = Timer::start();
-                let data: Arc<TwoViewChunk> = match &cache {
+                match &cache {
+                    // Cached regime: the shard is pre-sliced (and lazily
+                    // mirrored) once; repeat passes pay zero slicing cost.
                     Some(c) => {
-                        let slot = &c[shard];
-                        if let Some(hit) = slot.get() {
-                            Arc::clone(hit)
-                        } else {
-                            let loaded = Arc::new(store.load(shard).map_err(|e| e.to_string())?);
-                            let _ = slot.set(Arc::clone(&loaded));
-                            loaded
+                        let prepared: Arc<PreparedShard> = {
+                            let slot = &c[shard];
+                            if let Some(hit) = slot.get() {
+                                Arc::clone(hit)
+                            } else {
+                                let data = store.load(shard).map_err(|e| e.to_string())?;
+                                let built = Arc::new(PreparedShard::build(&data, chunk_rows));
+                                let _ = slot.set(Arc::clone(&built));
+                                built
+                            }
+                        };
+                        metrics.add(&metrics.load_nanos, load_t.elapsed().as_nanos() as u64);
+                        metrics.add(&metrics.shard_bytes_read, prepared.nnz_bytes());
+                        let Some(first) = prepared.chunks.first() else {
+                            return Ok(Vec::new());
+                        };
+                        let (da, db) = (first.data.a.cols, first.data.b.cols);
+                        let mut ws = Workspace::new();
+                        begin_pass(&mut ws, kind, da, db, r);
+                        for pc in &prepared.chunks {
+                            let mirror = if mirror_scatter { pc.mirror() } else { None };
+                            process_chunk(
+                                &*engine, kind, &pc.data, mirror, &qa32, &qb32, r, &mut ws,
+                                &metrics,
+                            )?;
                         }
+                        Ok(ws.take())
                     }
-                    None => Arc::new(store.load(shard).map_err(|e| e.to_string())?),
-                };
-                metrics.add(&metrics.load_nanos, load_t.elapsed().as_nanos() as u64);
-                metrics.add(
-                    &metrics.shard_bytes_read,
-                    (data.a.nnz() + data.b.nnz()) as u64 * 8,
-                );
-
-                // Map the engine over fixed-size chunks, reduce locally.
-                let rows = data.rows();
-                let mut acc: Option<Accumulator> = None;
-                let mut lo = 0;
-                while lo < rows {
-                    let hi = (lo + chunk_rows).min(rows);
-                    let chunk = TwoViewChunk {
-                        a: data.a.slice_rows(lo, hi),
-                        b: data.b.slice_rows(lo, hi),
-                    };
-                    let eng_t = Timer::start();
-                    let partials: Vec<Mat> = match kind {
-                        "power" => {
-                            let (ya, yb) = engine
-                                .power_chunk(&chunk, &qa32, &qb32, r)
-                                .map_err(|e| e.to_string())?;
-                            vec![ya, yb]
+                    // Out-of-core regime: stream transient slices — the
+                    // shard is dropped after this pass, so pre-slicing
+                    // (and mirroring) would only double peak memory.
+                    None => {
+                        let data = store.load(shard).map_err(|e| e.to_string())?;
+                        metrics.add(&metrics.load_nanos, load_t.elapsed().as_nanos() as u64);
+                        metrics.add(
+                            &metrics.shard_bytes_read,
+                            (data.a.nnz() + data.b.nnz()) as u64 * 8,
+                        );
+                        let rows = data.rows();
+                        if rows == 0 {
+                            return Ok(Vec::new());
                         }
-                        "final" => {
-                            let (ca, cb, f) = engine
-                                .final_chunk(&chunk, &qa32, &qb32, r)
-                                .map_err(|e| e.to_string())?;
-                            vec![ca, cb, f]
+                        let mut ws = Workspace::new();
+                        begin_pass(&mut ws, kind, data.a.cols, data.b.cols, r);
+                        let mut lo = 0;
+                        while lo < rows {
+                            let hi = (lo + chunk_rows).min(rows);
+                            let chunk = TwoViewChunk {
+                                a: data.a.slice_rows(lo, hi),
+                                b: data.b.slice_rows(lo, hi),
+                            };
+                            process_chunk(
+                                &*engine, kind, &chunk, None, &qa32, &qb32, r, &mut ws, &metrics,
+                            )?;
+                            lo = hi;
                         }
-                        _ => unreachable!("unknown pass kind"),
-                    };
-                    metrics.add(&metrics.engine_nanos, eng_t.elapsed().as_nanos() as u64);
-                    metrics.add(&metrics.chunks_processed, 1);
-                    match acc.as_mut() {
-                        Some(a) => a.add(&partials),
-                        None => {
-                            let shapes: Vec<(usize, usize)> =
-                                partials.iter().map(|m| (m.rows, m.cols)).collect();
-                            let mut a = Accumulator::new(&shapes);
-                            a.add(&partials);
-                            acc = Some(a);
-                        }
+                        Ok(ws.take())
                     }
-                    lo = hi;
                 }
-                Ok(acc
-                    .map(|a| a.finish())
-                    .unwrap_or_default())
             }));
             let result = match outcome {
                 Ok(r) => r,

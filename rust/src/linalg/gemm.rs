@@ -35,18 +35,64 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
     let mut c = Mat::zeros(a.rows, b.rows);
-    for i in 0..a.rows {
-        let arow = a.row(i);
-        for j in 0..b.rows {
-            let brow = b.row(j);
-            let mut s = 0.0;
-            for k in 0..a.cols {
-                s += arow[k] * brow[k];
+    dgemm_nt(a.rows, a.cols, b.rows, &a.data, &b.data, &mut c.data);
+    c
+}
+
+/// f64 row-major C += A·Bᵀ. A: m×k, B: n×k, C: m×n.
+///
+/// 4×4 register-tiled micro-kernel with a k-major inner loop, matching its
+/// siblings' blocked formulation (EXPERIMENTS.md §Perf): sixteen
+/// accumulators stay in registers across the shared-k walk, so each loaded
+/// A/B element feeds four FMAs instead of one — the naive dot-product
+/// triple loop this replaces reloaded both operand rows per output cell.
+fn dgemm_nt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    const T: usize = 4;
+    let mut i = 0;
+    while i + T <= m {
+        let mut j = 0;
+        while j + T <= n {
+            let mut acc = [[0f64; T]; T];
+            for p in 0..k {
+                let av: [f64; T] = std::array::from_fn(|ii| a[(i + ii) * k + p]);
+                let bv: [f64; T] = std::array::from_fn(|jj| b[(j + jj) * k + p]);
+                for ii in 0..T {
+                    for jj in 0..T {
+                        acc[ii][jj] += av[ii] * bv[jj];
+                    }
+                }
             }
-            c[(i, j)] = s;
+            for ii in 0..T {
+                for jj in 0..T {
+                    c[(i + ii) * n + j + jj] += acc[ii][jj];
+                }
+            }
+            j += T;
+        }
+        for j in j..n {
+            let brow = &b[j * k..(j + 1) * k];
+            for ii in 0..T {
+                let arow = &a[(i + ii) * k..(i + ii + 1) * k];
+                let mut s = 0.0;
+                for (av, bv) in arow.iter().zip(brow) {
+                    s += av * bv;
+                }
+                c[(i + ii) * n + j] += s;
+            }
+        }
+        i += T;
+    }
+    for i in i..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = 0.0;
+            for (av, bv) in arow.iter().zip(brow) {
+                s += av * bv;
+            }
+            c[i * n + j] += s;
         }
     }
-    c
 }
 
 /// f64 row-major C += A·B with k-major inner loop (auto-vectorizes).

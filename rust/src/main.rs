@@ -53,6 +53,7 @@ fn usage() -> String {
        nu-sweep   Figure 3 — nu sensitivity\n\
        serve      HTTP model server over a saved model\n\
        transform  offline projection through a saved model\n\
+       bench-check  gate a BENCH_*.json trajectory against its baseline\n\
      \n\
      Run `repro <subcommand> --help` for flags.\n"
         .to_string()
@@ -107,6 +108,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "nu-sweep" => cmd_nu(rest),
         "serve" => cmd_serve(rest),
         "transform" => cmd_transform(rest),
+        "bench-check" => cmd_bench_check(rest),
         "--help" | "-h" | "help" => {
             print!("{}", usage());
             Ok(())
@@ -429,6 +431,140 @@ fn cmd_transform(argv: Vec<String>) -> anyhow::Result<()> {
         t.secs(),
         out.display()
     );
+    Ok(())
+}
+
+/// Gate a freshly measured `BENCH_*.json` trajectory against the
+/// checked-in baseline snapshot: any section whose p50 regressed by more
+/// than `--max-regress` fails the command (CI's bench smoke step). A
+/// baseline marked `"provisional": true` — or sections present on only one
+/// side — records without failing, so the gate engages as soon as a real
+/// snapshot is committed (produce one with `--update` on the target
+/// machine).
+fn cmd_bench_check(argv: Vec<String>) -> anyhow::Result<()> {
+    use rcca::util::json::Json;
+    use std::collections::BTreeMap;
+    let spec = Spec::new(
+        "bench-check",
+        "compare a bench trajectory against the checked-in baseline",
+    )
+    .opt("current", "BENCH_micro.json", "freshly measured trajectory")
+    .opt("baseline", "BENCH_micro.baseline.json", "checked-in baseline snapshot")
+    .opt("max-regress", "0.25", "maximum tolerated p50 regression (fraction, 0.25 = +25%)")
+    .opt(
+        "gates",
+        "",
+        "within-run ratio gates 'fast/base>=ratio', comma-separated — compares two sections \
+         of the SAME run, so the check is machine-independent (the baseline comparison is not)",
+    )
+    .switch("update", "rewrite the baseline from the current trajectory");
+    let args = parse(spec, &argv)?;
+    let read = |path: &str| -> anyhow::Result<Json> {
+        let text = std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        rcca::util::json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+    };
+    let cur_path = args.str("current");
+    let base_path = args.str("baseline");
+    let cur = read(cur_path)?;
+    let sections = |doc: &Json, path: &str| -> anyhow::Result<BTreeMap<String, f64>> {
+        let Some(Json::Obj(map)) = doc.get("sections") else {
+            anyhow::bail!("{path}: missing 'sections' object");
+        };
+        Ok(map
+            .iter()
+            .filter_map(|(name, entry)| {
+                entry
+                    .get("p50")
+                    .and_then(Json::as_f64)
+                    .map(|p50| (name.clone(), p50))
+            })
+            .collect())
+    };
+    let cur_s = sections(&cur, cur_path)?;
+
+    if args.bool("update")? {
+        std::fs::write(base_path, cur.to_string_pretty())?;
+        println!(
+            "baseline updated: {base_path} <- {cur_path} ({} sections)",
+            cur_s.len()
+        );
+        return Ok(());
+    }
+
+    // Within-run ratio gates: p50(base)/p50(fast) from one trajectory.
+    let mut gate_failures = Vec::new();
+    for g in args.str("gates").split(',').filter(|s| !s.is_empty()) {
+        let bad = || anyhow::anyhow!("bad gate '{g}' (want fast/base>=ratio)");
+        let (pair, ratio) = g.split_once(">=").ok_or_else(bad)?;
+        let (fast, base) = pair.split_once('/').ok_or_else(bad)?;
+        let min: f64 = ratio.trim().parse().map_err(|_| bad())?;
+        let (fast, base) = (fast.trim(), base.trim());
+        let (Some(f), Some(b)) = (cur_s.get(fast), cur_s.get(base)) else {
+            anyhow::bail!("gate '{g}': section missing from {cur_path}");
+        };
+        let speedup = b / f;
+        let ok = speedup >= min;
+        println!(
+            "  gate {fast} vs {base}: {speedup:.2}x (need >= {min}) {}",
+            if ok { "ok" } else { "FAIL" }
+        );
+        if !ok {
+            gate_failures.push(format!("{g} (got {speedup:.2}x)"));
+        }
+    }
+    anyhow::ensure!(
+        gate_failures.is_empty(),
+        "within-run gates failed: {}",
+        gate_failures.join(", ")
+    );
+
+    let base = read(base_path)?;
+    let max_regress = args.f64("max-regress")?;
+    if base.get("provisional").and_then(Json::as_bool).unwrap_or(false) {
+        println!(
+            "baseline {base_path} is provisional (no measured snapshot yet) — \
+             recording only. Refresh it with `repro bench-check --update` on \
+             the machine class that runs this check and commit the result to \
+             arm the absolute gate (the --gates ratios are always armed)."
+        );
+        return Ok(());
+    }
+    let base_s = sections(&base, base_path)?;
+    let mut regressions = Vec::new();
+    let mut compared = 0usize;
+    for (name, base_p50) in &base_s {
+        let Some(cur_p50) = cur_s.get(name) else {
+            println!("  (skip: '{name}' only in baseline)");
+            continue;
+        };
+        compared += 1;
+        let delta = cur_p50 / base_p50 - 1.0;
+        let flag = if delta > max_regress { " <-- REGRESSION" } else { "" };
+        println!(
+            "  {name:<40} base p50 {base_p50:.3e}s  cur {cur_p50:.3e}s  {:+.1}%{flag}",
+            delta * 100.0
+        );
+        if delta > max_regress {
+            regressions.push((name.clone(), delta));
+        }
+    }
+    for name in cur_s.keys() {
+        if !base_s.contains_key(name) {
+            println!("  (new: '{name}' not in baseline yet)");
+        }
+    }
+    anyhow::ensure!(
+        regressions.is_empty(),
+        "{} of {compared} sections regressed past {:.0}%: {}",
+        regressions.len(),
+        max_regress * 100.0,
+        regressions
+            .iter()
+            .map(|(n, d)| format!("{n} (+{:.0}%)", d * 100.0))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    println!("bench-check: {compared} sections within {:.0}%", max_regress * 100.0);
     Ok(())
 }
 

@@ -3,14 +3,21 @@
 //! The coordinator slices each shard into fixed-size row chunks and hands
 //! them to a [`ChunkEngine`]. Two engines implement the same contract:
 //!
-//! * [`NativeEngine`] — pure-Rust sparse products (O(nnz·r)); the fast path
-//!   for the extremely sparse hashed BoW views, and the fallback when no
-//!   artifacts are built.
+//! * [`NativeEngine`] — pure-Rust panel-blocked sparse kernels
+//!   (O(nnz·r)); the fast path for the extremely sparse hashed BoW views,
+//!   and the fallback when no artifacts are built.
 //! * [`PjrtEngine`] — executes the AOT-compiled JAX/Pallas chunk programs
 //!   (`artifacts/*.hlo.txt`, built once by `make artifacts`) through the
 //!   PJRT C API. Chunks are densified at the boundary; shapes are padded up
 //!   to the compiled artifact grid (zero rows/columns are exact no-ops for
 //!   every product we compute).
+//!
+//! Engines accumulate into a caller-owned [`Workspace`] (`*_ws` methods):
+//! the shard task sizes the f64 accumulators once per pass, each chunk call
+//! reuses the same scratch, and the task converts to matrices once at the
+//! end — zero heap allocations per chunk in steady state. The one-shot
+//! [`ChunkEngine::power_chunk`]/[`ChunkEngine::final_chunk`] wrappers keep
+//! the benches, tests and examples on the old call shape.
 //!
 //! The integration tests assert both engines agree to f32 precision on
 //! identical chunks, which is the rust-side half of the correctness chain
@@ -19,13 +26,56 @@
 pub mod manifest;
 pub mod native;
 pub mod pjrt;
+pub mod workspace;
 
 pub use manifest::{Manifest, ManifestEntry};
 pub use native::NativeEngine;
 pub use pjrt::PjrtEngine;
+pub use workspace::Workspace;
 
 use crate::data::TwoViewChunk;
 use crate::linalg::Mat;
+use crate::sparse::Csr;
+
+/// Transposed mirrors of a chunk's two views — the CSC-equivalent form.
+/// With a mirror in hand, the power-pass scatter `Aᵀ·M` becomes a gather
+/// over `at` with sequential output writes. Building one costs a full
+/// O(nnz + d) counting sort, so the coordinator only mirrors chunks it has
+/// cached (the cost amortizes over repeat passes) and only when
+/// [`ChunkMirror::worthwhile`] says the density supports it.
+#[derive(Debug, Clone)]
+pub struct ChunkMirror {
+    /// `chunk.a.transpose()` — shape (da × m).
+    pub at: Csr,
+    /// `chunk.b.transpose()` — shape (db × m).
+    pub bt: Csr,
+}
+
+impl ChunkMirror {
+    pub fn build(chunk: &TwoViewChunk) -> ChunkMirror {
+        ChunkMirror {
+            at: chunk.a.transpose(),
+            bt: chunk.b.transpose(),
+        }
+    }
+
+    /// The single home of the "mirror only when worthwhile" policy —
+    /// `Some` iff [`ChunkMirror::worthwhile`] accepts the chunk. Both the
+    /// coordinator's per-chunk cache and `InMemoryPass` go through this.
+    pub fn maybe_build(chunk: &TwoViewChunk) -> Option<ChunkMirror> {
+        ChunkMirror::worthwhile(chunk).then(|| ChunkMirror::build(chunk))
+    }
+
+    /// A mirror traversal touches every one of the d transpose rows per
+    /// pass (row-pointer reads even where empty). For chunks far sparser
+    /// than one nonzero per 4 columns that overhead outweighs the
+    /// sequential-write win, so the coordinator skips mirroring them.
+    pub fn worthwhile(chunk: &TwoViewChunk) -> bool {
+        let d = chunk.a.cols + chunk.b.cols;
+        let nnz = chunk.a.nnz() + chunk.b.nnz();
+        nnz * 4 >= d
+    }
+}
 
 /// Chunk-level compute contract. `r` is the number of projection columns
 /// (k+p in Algorithm 1). Implementations must be thread-safe — the
@@ -33,26 +83,77 @@ use crate::linalg::Mat;
 pub trait ChunkEngine: Send + Sync {
     fn name(&self) -> &str;
 
-    /// Power-pass products for one chunk:
-    /// `(Aᵀcₕᵤₙₖ·(Bchunk·Qb), Bᵀchunk·(Achunk·Qa))` — shapes (da×r, db×r).
-    /// `qa32`/`qb32` are row-major (da×r)/(db×r) f32 broadcasts.
+    /// Whether this engine can exploit transposed chunk mirrors. The
+    /// coordinator skips the O(nnz + d) transpose (and its cached memory)
+    /// for engines that would ignore the mirror — PJRT scatters inside
+    /// XLA, so only the native kernels opt in.
+    fn wants_mirror(&self) -> bool {
+        false
+    }
+
+    /// Accumulate one chunk's power-pass products into `ws`:
+    /// `ws.acc[0] += Aᵀchunk·(Bchunk·Qb)`, `ws.acc[1] += Bᵀchunk·(Achunk·Qa)`.
+    /// The caller must have sized `ws` with [`Workspace::begin_power`].
+    /// `qa32`/`qb32` are row-major (da×r)/(db×r) f32 broadcasts; `mirror`,
+    /// when present, holds the transposed views of this same chunk.
+    fn power_chunk_ws(
+        &self,
+        chunk: &TwoViewChunk,
+        mirror: Option<&ChunkMirror>,
+        qa32: &[f32],
+        qb32: &[f32],
+        r: usize,
+        ws: &mut Workspace,
+    ) -> anyhow::Result<()>;
+
+    /// Accumulate one chunk's final-pass products into `ws`:
+    /// `ws.acc[0..3] += (PaᵀPa, PbᵀPb, PaᵀPb)` with `Pa = Achunk·Qa`.
+    /// The caller must have sized `ws` with [`Workspace::begin_final`].
+    fn final_chunk_ws(
+        &self,
+        chunk: &TwoViewChunk,
+        qa32: &[f32],
+        qb32: &[f32],
+        r: usize,
+        ws: &mut Workspace,
+    ) -> anyhow::Result<()>;
+
+    /// One-shot power-pass products for a single chunk — allocates a fresh
+    /// workspace per call; use `power_chunk_ws` on hot paths.
     fn power_chunk(
         &self,
         chunk: &TwoViewChunk,
         qa32: &[f32],
         qb32: &[f32],
         r: usize,
-    ) -> anyhow::Result<(Mat, Mat)>;
+    ) -> anyhow::Result<(Mat, Mat)> {
+        let mut ws = Workspace::new();
+        ws.begin_power(chunk.a.cols, chunk.b.cols, r);
+        self.power_chunk_ws(chunk, None, qa32, qb32, r, &mut ws)?;
+        let mut out = ws.take();
+        let yb = out.pop().unwrap();
+        let ya = out.pop().unwrap();
+        Ok((ya, yb))
+    }
 
-    /// Final-pass products for one chunk:
-    /// `(PaᵀPa, PbᵀPb, PaᵀPb)` with `Pa = Achunk·Qa` — shapes (r×r each).
+    /// One-shot final-pass products for a single chunk — allocates a fresh
+    /// workspace per call; use `final_chunk_ws` on hot paths.
     fn final_chunk(
         &self,
         chunk: &TwoViewChunk,
         qa32: &[f32],
         qb32: &[f32],
         r: usize,
-    ) -> anyhow::Result<(Mat, Mat, Mat)>;
+    ) -> anyhow::Result<(Mat, Mat, Mat)> {
+        let mut ws = Workspace::new();
+        ws.begin_final(r);
+        self.final_chunk_ws(chunk, qa32, qb32, r, &mut ws)?;
+        let mut out = ws.take();
+        let f = out.pop().unwrap();
+        let cb = out.pop().unwrap();
+        let ca = out.pop().unwrap();
+        Ok((ca, cb, f))
+    }
 }
 
 /// Row-major f32 copy of a leader-side matrix (engine boundary helper).
@@ -63,10 +164,59 @@ pub fn mat_to_f32(m: &Mat) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
 
     #[test]
     fn mat_to_f32_layout() {
         let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
         assert_eq!(mat_to_f32(&m), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn mirror_is_the_transpose() {
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 60,
+            dims: 32,
+            topics: 2,
+            words_per_topic: 6,
+            background_words: 10,
+            mean_len: 5.0,
+            seed: 3,
+            ..Default::default()
+        });
+        let chunk = TwoViewChunk { a: d.a, b: d.b };
+        let mir = ChunkMirror::build(&chunk);
+        assert_eq!(mir.at.to_dense(), chunk.a.to_dense().transpose());
+        assert_eq!(mir.bt.to_dense(), chunk.b.to_dense().transpose());
+        mir.at.validate().unwrap();
+        mir.bt.validate().unwrap();
+    }
+
+    #[test]
+    fn worthwhile_heuristic_scales_with_density() {
+        let dense = Csr {
+            rows: 2,
+            cols: 4,
+            indptr: vec![0, 4, 8],
+            indices: vec![0, 1, 2, 3, 0, 1, 2, 3],
+            values: vec![1.0; 8],
+        };
+        let sparse = Csr {
+            rows: 2,
+            cols: 4096,
+            indptr: vec![0, 1, 2],
+            indices: vec![0, 1],
+            values: vec![1.0; 2],
+        };
+        let dense_chunk = TwoViewChunk {
+            a: dense.clone(),
+            b: dense,
+        };
+        let sparse_chunk = TwoViewChunk {
+            a: sparse.clone(),
+            b: sparse,
+        };
+        assert!(ChunkMirror::worthwhile(&dense_chunk));
+        assert!(!ChunkMirror::worthwhile(&sparse_chunk));
     }
 }

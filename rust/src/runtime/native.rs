@@ -1,11 +1,19 @@
-//! Native (pure Rust) chunk engine: sparse products straight off the CSR.
+//! Native (pure Rust) chunk engine: panel-blocked sparse products straight
+//! off the CSR.
 
-use super::ChunkEngine;
+use super::{ChunkEngine, ChunkMirror, Workspace};
 use crate::data::TwoViewChunk;
 use crate::linalg::gemm::sgemm_tn;
-use crate::linalg::Mat;
+use crate::sparse::kernels;
 
 /// Direct sparse-dense products, O(nnz·r) per chunk. No densification.
+///
+/// The power pass is a fused traversal: `B·Qb` is gathered first, then a
+/// single walk over `A` computes both `A·Qa` and the scatter `Aᵀ·(B·Qb)`
+/// (three CSR walks per chunk instead of four — the fourth, `Bᵀ·(A·Qa)`,
+/// can never fuse because it needs `A·Qa` complete). With a
+/// [`ChunkMirror`] the two scatters instead run as gathers over the cached
+/// transposes, turning the random `d×r` writes into sequential ones.
 #[derive(Debug, Default)]
 pub struct NativeEngine;
 
@@ -15,60 +23,94 @@ impl NativeEngine {
     }
 }
 
+/// `acc += XᵀY` (f32 Gram via `sgemm_tn` into reused scratch, f64
+/// accumulation across chunks — the same precision contract the per-chunk
+/// matrix reduction used to provide).
+fn gram_acc(m: usize, r: usize, x: &[f32], y: &[f32], scratch: &mut Vec<f32>, acc: &mut [f64]) {
+    scratch.clear();
+    scratch.resize(r * r, 0.0);
+    sgemm_tn(m, r, r, x, y, scratch);
+    for (a, &g) in acc.iter_mut().zip(scratch.iter()) {
+        *a += g as f64;
+    }
+}
+
 impl ChunkEngine for NativeEngine {
     fn name(&self) -> &str {
         "native"
     }
 
-    fn power_chunk(
-        &self,
-        chunk: &TwoViewChunk,
-        qa32: &[f32],
-        qb32: &[f32],
-        r: usize,
-    ) -> anyhow::Result<(Mat, Mat)> {
-        let m = chunk.rows();
-        let (da, db) = (chunk.a.cols, chunk.b.cols);
-        anyhow::ensure!(qa32.len() == da * r && qb32.len() == db * r, "Q shape mismatch");
-        // BQb (m×r) then scatter Aᵀ·(BQb).
-        let mut bq = vec![0f32; m * r];
-        chunk.b.times_dense(qb32, r, &mut bq);
-        let mut ya = vec![0f64; da * r];
-        chunk.a.add_t_times_dense(&bq, r, &mut ya);
-        // AQa then Bᵀ·(AQa).
-        let mut aq = vec![0f32; m * r];
-        chunk.a.times_dense(qa32, r, &mut aq);
-        let mut yb = vec![0f64; db * r];
-        chunk.b.add_t_times_dense(&aq, r, &mut yb);
-        Ok((Mat::from_vec(da, r, ya), Mat::from_vec(db, r, yb)))
+    fn wants_mirror(&self) -> bool {
+        true
     }
 
-    fn final_chunk(
+    fn power_chunk_ws(
+        &self,
+        chunk: &TwoViewChunk,
+        mirror: Option<&ChunkMirror>,
+        qa32: &[f32],
+        qb32: &[f32],
+        r: usize,
+        ws: &mut Workspace,
+    ) -> anyhow::Result<()> {
+        let m = chunk.rows();
+        let (da, db) = (chunk.a.cols, chunk.b.cols);
+        anyhow::ensure!(qa32.len() == da * r && qb32.len() == db * r, "Q shape mismatch");
+        anyhow::ensure!(
+            ws.shapes() == [(da, r), (db, r)].as_slice(),
+            "workspace not sized for this power pass (begin_power missing?)"
+        );
+        // BQb (m×r) into reused scratch.
+        Workspace::size_f32(&mut ws.bq, m * r);
+        kernels::times_dense(&chunk.b, qb32, r, &mut ws.bq);
+        Workspace::size_f32(&mut ws.aq, m * r);
+        let (ya_slot, yb_slot) = ws.acc.split_at_mut(1);
+        let ya = ya_slot[0].as_mut_slice();
+        let yb = yb_slot[0].as_mut_slice();
+        match mirror {
+            Some(mir) => {
+                debug_assert_eq!((mir.at.rows, mir.at.cols), (da, m));
+                debug_assert_eq!((mir.bt.rows, mir.bt.cols), (db, m));
+                kernels::times_dense(&chunk.a, qa32, r, &mut ws.aq);
+                kernels::add_times_dense_acc64(&mir.at, &ws.bq, r, ya);
+                kernels::add_times_dense_acc64(&mir.bt, &ws.aq, r, yb);
+            }
+            None => {
+                // Fused walk over A: gather AQa + scatter Aᵀ(BQb).
+                kernels::fused_gather_scatter(&chunk.a, qa32, &ws.bq, r, &mut ws.aq, ya);
+                kernels::add_t_times_dense(&chunk.b, &ws.aq, r, yb);
+            }
+        }
+        ws.chunks += 1;
+        Ok(())
+    }
+
+    fn final_chunk_ws(
         &self,
         chunk: &TwoViewChunk,
         qa32: &[f32],
         qb32: &[f32],
         r: usize,
-    ) -> anyhow::Result<(Mat, Mat, Mat)> {
+        ws: &mut Workspace,
+    ) -> anyhow::Result<()> {
         let m = chunk.rows();
         let (da, db) = (chunk.a.cols, chunk.b.cols);
         anyhow::ensure!(qa32.len() == da * r && qb32.len() == db * r, "Q shape mismatch");
-        let mut pa = vec![0f32; m * r];
-        chunk.a.times_dense(qa32, r, &mut pa);
-        let mut pb = vec![0f32; m * r];
-        chunk.b.times_dense(qb32, r, &mut pb);
-        // Small dense Grams in f32 with f64 result conversion.
-        let mut ca = vec![0f32; r * r];
-        sgemm_tn(m, r, r, &pa, &pa, &mut ca);
-        let mut cb = vec![0f32; r * r];
-        sgemm_tn(m, r, r, &pb, &pb, &mut cb);
-        let mut f = vec![0f32; r * r];
-        sgemm_tn(m, r, r, &pa, &pb, &mut f);
-        Ok((
-            Mat::from_f32(r, r, &ca),
-            Mat::from_f32(r, r, &cb),
-            Mat::from_f32(r, r, &f),
-        ))
+        anyhow::ensure!(
+            ws.shapes() == [(r, r); 3].as_slice(),
+            "workspace not sized for this final pass (begin_final missing?)"
+        );
+        Workspace::size_f32(&mut ws.aq, m * r);
+        kernels::times_dense(&chunk.a, qa32, r, &mut ws.aq);
+        Workspace::size_f32(&mut ws.bq, m * r);
+        kernels::times_dense(&chunk.b, qb32, r, &mut ws.bq);
+        let (ca_slot, rest) = ws.acc.split_at_mut(1);
+        let (cb_slot, f_slot) = rest.split_at_mut(1);
+        gram_acc(m, r, &ws.aq, &ws.aq, &mut ws.gram, &mut ca_slot[0]);
+        gram_acc(m, r, &ws.bq, &ws.bq, &mut ws.gram, &mut cb_slot[0]);
+        gram_acc(m, r, &ws.aq, &ws.bq, &mut ws.gram, &mut f_slot[0]);
+        ws.chunks += 1;
+        Ok(())
     }
 }
 
@@ -77,6 +119,7 @@ mod tests {
     use super::*;
     use crate::cca::pass::{InMemoryPass, PassEngine};
     use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::linalg::Mat;
     use crate::runtime::mat_to_f32;
     use crate::util::rng::Rng;
 
@@ -128,9 +171,67 @@ mod tests {
     }
 
     #[test]
+    fn mirrored_power_matches_fused() {
+        let ch = chunk();
+        let mir = ChunkMirror::build(&ch);
+        let mut rng = Rng::new(7);
+        let qa = mat_to_f32(&Mat::randn(64, 6, &mut rng));
+        let qb = mat_to_f32(&Mat::randn(64, 6, &mut rng));
+        let eng = NativeEngine::new();
+        let mut ws = Workspace::new();
+        ws.begin_power(64, 64, 6);
+        eng.power_chunk_ws(&ch, None, &qa, &qb, 6, &mut ws).unwrap();
+        let fused = ws.take();
+        ws.begin_power(64, 64, 6);
+        eng.power_chunk_ws(&ch, Some(&mir), &qa, &qb, 6, &mut ws).unwrap();
+        let mirrored = ws.take();
+        // Same f32 products, different f64 summation order.
+        assert!(mirrored[0].rel_diff(&fused[0]) < 1e-10);
+        assert!(mirrored[1].rel_diff(&fused[1]) < 1e-10);
+    }
+
+    #[test]
+    fn workspace_accumulates_across_chunks() {
+        // Engine accumulation over row-slices into one workspace must equal
+        // the whole-chunk result: the shard task's reduction invariant.
+        let ch = chunk();
+        let c1 = TwoViewChunk {
+            a: ch.a.slice_rows(0, 70),
+            b: ch.b.slice_rows(0, 70),
+        };
+        let c2 = TwoViewChunk {
+            a: ch.a.slice_rows(70, 150),
+            b: ch.b.slice_rows(70, 150),
+        };
+        let mut rng = Rng::new(5);
+        let qa = mat_to_f32(&Mat::randn(64, 4, &mut rng));
+        let qb = mat_to_f32(&Mat::randn(64, 4, &mut rng));
+        let eng = NativeEngine::new();
+        let mut ws = Workspace::new();
+        ws.begin_power(64, 64, 4);
+        eng.power_chunk_ws(&c1, None, &qa, &qb, 4, &mut ws).unwrap();
+        eng.power_chunk_ws(&c2, None, &qa, &qb, 4, &mut ws).unwrap();
+        assert_eq!(ws.chunks, 2);
+        let parts = ws.take();
+        let (wa, wb) = eng.power_chunk(&ch, &qa, &qb, 4).unwrap();
+        assert!(parts[0].rel_diff(&wa) < 1e-6);
+        assert!(parts[1].rel_diff(&wb) < 1e-6);
+
+        // Same invariant for the final pass.
+        ws.begin_final(4);
+        eng.final_chunk_ws(&c1, &qa, &qb, 4, &mut ws).unwrap();
+        eng.final_chunk_ws(&c2, &qa, &qb, 4, &mut ws).unwrap();
+        let parts = ws.take();
+        let (ca, cb, f) = eng.final_chunk(&ch, &qa, &qb, 4).unwrap();
+        assert!(parts[0].rel_diff(&ca) < 1e-5);
+        assert!(parts[1].rel_diff(&cb) < 1e-5);
+        assert!(parts[2].rel_diff(&f) < 1e-5);
+    }
+
+    #[test]
     fn chunk_additivity() {
         // Engine results over row-slices must sum to the whole: the
-        // coordinator's reduction invariant.
+        // coordinator's reduction invariant (one-shot wrapper form).
         let ch = chunk();
         let c1 = TwoViewChunk {
             a: ch.a.slice_rows(0, 70),
@@ -160,5 +261,17 @@ mod tests {
         let ch = chunk();
         let eng = NativeEngine::new();
         assert!(eng.power_chunk(&ch, &[0.0; 10], &[0.0; 10], 4).is_err());
+    }
+
+    #[test]
+    fn rejects_unsized_workspace() {
+        let ch = chunk();
+        let eng = NativeEngine::new();
+        let mut rng = Rng::new(9);
+        let q = mat_to_f32(&Mat::randn(64, 3, &mut rng));
+        let mut ws = Workspace::new(); // no begin_power
+        assert!(eng.power_chunk_ws(&ch, None, &q, &q, 3, &mut ws).is_err());
+        ws.begin_final(3); // wrong kind
+        assert!(eng.power_chunk_ws(&ch, None, &q, &q, 3, &mut ws).is_err());
     }
 }

@@ -21,7 +21,7 @@ mod real {
     use crate::data::TwoViewChunk;
     use crate::linalg::Mat;
     use crate::runtime::manifest::{Manifest, ManifestEntry};
-    use crate::runtime::ChunkEngine;
+    use crate::runtime::{ChunkEngine, ChunkMirror, Workspace};
     use std::collections::HashMap;
     use std::path::Path;
     use std::sync::Mutex;
@@ -202,31 +202,49 @@ mod real {
             "pjrt"
         }
 
-        fn power_chunk(
+        // The PJRT programs produce whole per-chunk matrices at the device
+        // boundary; the workspace adapter accumulates them leader-side so
+        // the coordinator sees the same zero-copy contract as the native
+        // engine. The mirror is ignored: scatters happen inside XLA.
+        fn power_chunk_ws(
             &self,
             chunk: &TwoViewChunk,
+            _mirror: Option<&ChunkMirror>,
             qa32: &[f32],
             qb32: &[f32],
             r: usize,
-        ) -> anyhow::Result<(Mat, Mat)> {
-            let mut v = self.run("power", chunk, qa32, qb32, r, 2)?;
-            let yb = v.pop().unwrap();
-            let ya = v.pop().unwrap();
-            Ok((ya, yb))
+            ws: &mut Workspace,
+        ) -> anyhow::Result<()> {
+            anyhow::ensure!(
+                ws.shapes() == [(chunk.a.cols, r), (chunk.b.cols, r)].as_slice(),
+                "workspace not sized for this power pass (begin_power missing?)"
+            );
+            let v = self.run("power", chunk, qa32, qb32, r, 2)?;
+            for (slot, m) in v.iter().enumerate() {
+                ws.add_mat(slot, m);
+            }
+            ws.chunks += 1;
+            Ok(())
         }
 
-        fn final_chunk(
+        fn final_chunk_ws(
             &self,
             chunk: &TwoViewChunk,
             qa32: &[f32],
             qb32: &[f32],
             r: usize,
-        ) -> anyhow::Result<(Mat, Mat, Mat)> {
-            let mut v = self.run("final", chunk, qa32, qb32, r, 3)?;
-            let f = v.pop().unwrap();
-            let cb = v.pop().unwrap();
-            let ca = v.pop().unwrap();
-            Ok((ca, cb, f))
+            ws: &mut Workspace,
+        ) -> anyhow::Result<()> {
+            anyhow::ensure!(
+                ws.shapes() == [(r, r); 3].as_slice(),
+                "workspace not sized for this final pass (begin_final missing?)"
+            );
+            let v = self.run("final", chunk, qa32, qb32, r, 3)?;
+            for (slot, m) in v.iter().enumerate() {
+                ws.add_mat(slot, m);
+            }
+            ws.chunks += 1;
+            Ok(())
         }
     }
 }
@@ -234,8 +252,7 @@ mod real {
 #[cfg(not(feature = "pjrt"))]
 mod stub {
     use crate::data::TwoViewChunk;
-    use crate::linalg::Mat;
-    use crate::runtime::ChunkEngine;
+    use crate::runtime::{ChunkEngine, ChunkMirror, Workspace};
     use std::path::Path;
 
     const UNAVAILABLE: &str = "PJRT engine unavailable: this build has no `pjrt` feature \
@@ -264,23 +281,26 @@ mod stub {
             "pjrt-stub"
         }
 
-        fn power_chunk(
+        fn power_chunk_ws(
             &self,
             _chunk: &TwoViewChunk,
+            _mirror: Option<&ChunkMirror>,
             _qa32: &[f32],
             _qb32: &[f32],
             _r: usize,
-        ) -> anyhow::Result<(Mat, Mat)> {
+            _ws: &mut Workspace,
+        ) -> anyhow::Result<()> {
             anyhow::bail!(UNAVAILABLE)
         }
 
-        fn final_chunk(
+        fn final_chunk_ws(
             &self,
             _chunk: &TwoViewChunk,
             _qa32: &[f32],
             _qb32: &[f32],
             _r: usize,
-        ) -> anyhow::Result<(Mat, Mat, Mat)> {
+            _ws: &mut Workspace,
+        ) -> anyhow::Result<()> {
             anyhow::bail!(UNAVAILABLE)
         }
     }

@@ -1,0 +1,148 @@
+//! Per-worker reusable buffers for the chunk engines.
+//!
+//! The pre-workspace engines allocated four fresh `m×r`/`d×r` buffers per
+//! chunk and returned freshly boxed matrices that the shard task then
+//! re-summed — O(d·r) allocation and reduction work per chunk. A
+//! [`Workspace`] inverts that: the shard task sizes the f64 pass
+//! accumulators once (`begin_power`/`begin_final`), every chunk call
+//! gathers into reused f32 scratch and accumulates in place, and the task
+//! converts to matrices exactly once at the end ([`Workspace::take`]).
+//! In steady state the per-chunk path performs zero heap allocations: the
+//! scratch buffers grow to the largest chunk on first use and are only
+//! re-lengthed (capacity retained) afterwards.
+
+use crate::linalg::Mat;
+
+/// Reusable engine buffers. Fields are public so an engine can borrow the
+/// f32 scratch and the f64 accumulators simultaneously (disjoint field
+/// borrows); the layout contract is documented per field.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// f32 gather scratch, chunk-sized (m × r): `A·Qa`.
+    pub aq: Vec<f32>,
+    /// f32 gather scratch, chunk-sized (m × r): `B·Qb`.
+    pub bq: Vec<f32>,
+    /// f32 Gram scratch (r × r), final pass only.
+    pub gram: Vec<f32>,
+    /// f64 pass accumulators; shapes fixed by the last `begin_*` call
+    /// (power → `[da×r, db×r]`, final → `[r×r; 3]`).
+    pub acc: Vec<Vec<f64>>,
+    shapes: Vec<(usize, usize)>,
+    /// Chunks accumulated since the last `begin_*` (diagnostics).
+    pub chunks: u64,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Start a power-pass accumulation: `ya` (da×r) and `yb` (db×r), zeroed.
+    pub fn begin_power(&mut self, da: usize, db: usize, r: usize) {
+        self.begin(&[(da, r), (db, r)]);
+    }
+
+    /// Start a final-pass accumulation: `Ca`, `Cb`, `F` (r×r each), zeroed.
+    pub fn begin_final(&mut self, r: usize) {
+        self.begin(&[(r, r), (r, r), (r, r)]);
+    }
+
+    fn begin(&mut self, shapes: &[(usize, usize)]) {
+        self.acc.truncate(shapes.len());
+        while self.acc.len() < shapes.len() {
+            self.acc.push(Vec::new());
+        }
+        for (buf, &(rows, cols)) in self.acc.iter_mut().zip(shapes) {
+            buf.clear();
+            buf.resize(rows * cols, 0.0);
+        }
+        self.shapes = shapes.to_vec();
+        self.chunks = 0;
+    }
+
+    /// Accumulator shapes registered by the last `begin_*` call.
+    pub fn shapes(&self) -> &[(usize, usize)] {
+        &self.shapes
+    }
+
+    /// Add a dense matrix into accumulator `slot` — the adapter path for
+    /// engines that produce whole per-chunk matrices (PJRT).
+    pub fn add_mat(&mut self, slot: usize, m: &Mat) {
+        assert_eq!((m.rows, m.cols), self.shapes[slot], "workspace slot shape mismatch");
+        for (a, &v) in self.acc[slot].iter_mut().zip(m.data.iter()) {
+            *a += v;
+        }
+    }
+
+    /// Finish a pass: hand the accumulators off as matrices. The buffers
+    /// are stolen (one Vec allocation per slot on the next `begin_*`),
+    /// which keeps the per-chunk path allocation-free — the pass result
+    /// itself is never copied.
+    pub fn take(&mut self) -> Vec<Mat> {
+        let shapes = std::mem::take(&mut self.shapes);
+        shapes
+            .iter()
+            .zip(self.acc.iter_mut())
+            .map(|(&(rows, cols), buf)| Mat::from_vec(rows, cols, std::mem::take(buf)))
+            .collect()
+    }
+
+    /// Re-length a scratch buffer to exactly `n` zeroed elements without
+    /// giving up its capacity.
+    pub fn size_f32(buf: &mut Vec<f32>, n: usize) {
+        buf.clear();
+        buf.resize(n, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn begin_take_roundtrip() {
+        let mut ws = Workspace::new();
+        ws.begin_power(3, 2, 4);
+        assert_eq!(ws.shapes(), [(3, 4), (2, 4)].as_slice());
+        ws.acc[0][0] = 1.5;
+        ws.acc[1][7] = -2.0;
+        let mats = ws.take();
+        assert_eq!(mats.len(), 2);
+        assert_eq!(mats[0][(0, 0)], 1.5);
+        assert_eq!(mats[1][(1, 3)], -2.0);
+        // Reusable: a fresh begin re-zeroes.
+        ws.begin_final(2);
+        assert_eq!(ws.shapes().len(), 3);
+        assert!(ws.acc.iter().all(|b| b.iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn add_mat_accumulates() {
+        let mut ws = Workspace::new();
+        ws.begin_final(2);
+        let m = Mat::eye_scaled(2, 3.0);
+        ws.add_mat(1, &m);
+        ws.add_mat(1, &m);
+        let mats = ws.take();
+        assert_eq!(mats[1], Mat::eye_scaled(2, 6.0));
+        assert_eq!(mats[0], Mat::zeros(2, 2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn add_mat_checks_shape() {
+        let mut ws = Workspace::new();
+        ws.begin_power(3, 2, 4);
+        ws.add_mat(0, &Mat::zeros(2, 4));
+    }
+
+    #[test]
+    fn size_f32_relengths() {
+        let mut buf = vec![1.0f32; 8];
+        Workspace::size_f32(&mut buf, 4);
+        assert_eq!(buf, vec![0.0; 4]);
+        Workspace::size_f32(&mut buf, 6);
+        assert_eq!(buf.len(), 6);
+        assert!(buf.iter().all(|&v| v == 0.0));
+    }
+}

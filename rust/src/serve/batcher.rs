@@ -1,14 +1,19 @@
 //! Request batcher: coalesces concurrent transform requests into one fused
-//! `Csr::times_mat` per view.
+//! panel-kernel projection per view.
 //!
 //! The projection hot path is a sparse×dense product whose cost is
 //! per-nonzero plus a per-call fixed overhead (allocation, cache warmup of
 //! the k-wide projection panel). Under concurrency, many single-row
 //! requests arrive while one product is in flight; the batcher drains them
-//! all, stacks their rows with [`Csr::vcat`], projects once, and scatters
-//! the result rows back to the waiting connection handlers. Natural
-//! batching emerges from load — an idle server still answers a lone request
-//! immediately (the worker wakes on submit and finds a batch of one).
+//! all, stacks their rows with [`Csr::vcat_into`] into a reused buffer,
+//! projects once through the blocked f32 kernel (f64 accumulation only at
+//! the output, via `FittedModel::transform_*_into`), and scatters the
+//! result rows back to the waiting connection handlers. The stacked CSR
+//! and the projection output live in a per-worker [`BatchWorkspace`], so a
+//! steady-state batch allocates nothing beyond the per-request reply
+//! matrices it hands to the connection handlers. Natural batching emerges
+//! from load — an idle server still answers a lone request immediately
+//! (the worker wakes on submit and finds a batch of one).
 //!
 //! The batch worker is a dedicated thread, NOT a task on the connection
 //! pool: connection handlers block on their response slot, so running the
@@ -102,7 +107,19 @@ impl Drop for Batcher {
     }
 }
 
+/// The batch worker's reusable buffers: the vcat-fused request rows and
+/// the f64 projection output. Both grow to the working set once and are
+/// only re-lengthed afterwards.
+struct BatchWorkspace {
+    stacked: Csr,
+    proj: Vec<f64>,
+}
+
 fn batch_loop(shared: &Shared, registry: &ModelRegistry, metrics: &ServeMetrics) {
+    let mut ws = BatchWorkspace {
+        stacked: Csr::empty(),
+        proj: Vec::new(),
+    };
     loop {
         let batch: Vec<Pending> = {
             let mut q = shared.queue.lock().unwrap();
@@ -126,14 +143,19 @@ fn batch_loop(shared: &Shared, registry: &ModelRegistry, metrics: &ServeMetrics)
             }
             batch
         };
-        run_batch(batch, registry, metrics);
+        run_batch(batch, registry, metrics, &mut ws);
     }
 }
 
 /// Project one drained batch. The model snapshot is taken once per batch:
 /// requests drained before a hot-swap completes are answered by the model
 /// that was current when their batch started (and report its generation).
-fn run_batch(batch: Vec<Pending>, registry: &ModelRegistry, metrics: &ServeMetrics) {
+fn run_batch(
+    batch: Vec<Pending>,
+    registry: &ModelRegistry,
+    metrics: &ServeMetrics,
+    ws: &mut BatchWorkspace,
+) {
     let snap = registry.snapshot();
     for view in [View::A, View::B] {
         let group: Vec<&Pending> = batch.iter().filter(|p| p.view == view).collect();
@@ -155,9 +177,9 @@ fn run_batch(batch: Vec<Pending>, registry: &ModelRegistry, metrics: &ServeMetri
             continue;
         }
         let parts: Vec<&Csr> = fit.iter().map(|p| &p.rows).collect();
-        let stacked = Csr::vcat(&parts);
-        let total_rows = stacked.rows;
-        match view.transform(&snap.model, &stacked) {
+        Csr::vcat_into(&parts, &mut ws.stacked);
+        let total_rows = ws.stacked.rows;
+        match view.transform_into(&snap.model, &ws.stacked, &mut ws.proj) {
             Err(e) => {
                 for p in fit {
                     let _ = p.tx.send(Err(ServeError::Internal(format!(
@@ -165,15 +187,15 @@ fn run_batch(batch: Vec<Pending>, registry: &ModelRegistry, metrics: &ServeMetri
                     ))));
                 }
             }
-            Ok(proj) => {
+            Ok(()) => {
                 metrics.add(&metrics.batches, 1);
                 metrics.add(&metrics.rows_transformed, total_rows as u64);
                 metrics.batch_rows.observe(total_rows as u64);
-                let k = proj.cols;
+                let k = snap.model.k();
                 let mut offset = 0usize;
                 for p in fit {
                     let n = p.rows.rows;
-                    let slice = proj.data[offset * k..(offset + n) * k].to_vec();
+                    let slice = ws.proj[offset * k..(offset + n) * k].to_vec();
                     offset += n;
                     let _ = p.tx.send(Ok((Mat::from_vec(n, k, slice), snap.generation)));
                 }

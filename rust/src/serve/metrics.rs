@@ -130,7 +130,7 @@ pub struct ServeMetrics {
     pub rejected_overload: AtomicU64,
     /// Rows projected through the model (across all batches).
     pub rows_transformed: AtomicU64,
-    /// Fused `times_mat` calls issued by the batcher.
+    /// Fused batch projections issued by the batcher.
     pub batches: AtomicU64,
     /// Successful `/admin/reload` swaps.
     pub reloads: AtomicU64,

@@ -18,7 +18,7 @@
 //! connections away with 503 instead of stalling accepts). Handlers parse
 //! with the hand-rolled [`http`] codec, validate with [`proto`], and push
 //! transform rows into the [`batcher::Batcher`], which fuses concurrent
-//! requests into one `Csr::times_mat` per view against an atomic
+//! requests into one panel-kernel projection per view against an atomic
 //! [`registry::ModelRegistry`] snapshot — a `POST /admin/reload` swaps the
 //! `Arc<FittedModel>` without stalling in-flight work.
 //!

@@ -57,6 +57,20 @@ impl View {
             View::B => model.transform_b(rows),
         }
     }
+
+    /// Allocation-free twin of [`View::transform`] — projects into the
+    /// caller's reusable buffer (the batcher's steady state).
+    pub fn transform_into(
+        self,
+        model: &FittedModel,
+        rows: &Csr,
+        out: &mut Vec<f64>,
+    ) -> Result<(), crate::api::ApiError> {
+        match self {
+            View::A => model.transform_a_into(rows, out),
+            View::B => model.transform_b_into(rows, out),
+        }
+    }
 }
 
 /// Upper bound on rows in one request — a single request cannot occupy the

@@ -15,6 +15,18 @@ pub struct Csr {
 }
 
 impl Csr {
+    /// 0×0 matrix with valid structure — a reusable [`Csr::vcat_into`]
+    /// target and the `Default`-like starting point for builders.
+    pub fn empty() -> Csr {
+        Csr {
+            rows: 0,
+            cols: 0,
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
     pub fn nnz(&self) -> usize {
         self.values.len()
     }
@@ -69,6 +81,10 @@ impl Csr {
 
     /// Y += Aᵀ·M where M is dense row-major (rows × r), Y is dense (cols × r).
     /// This is the range-finder product `Aᵀ(BQ)` with M = B·Q precomputed.
+    ///
+    /// Scalar reference implementation — the hot paths use the
+    /// panel-blocked [`crate::sparse::kernels`] twins, which are tested to
+    /// match this one bitwise.
     pub fn add_t_times_dense(&self, m: &[f32], r: usize, y: &mut [f64]) {
         debug_assert_eq!(m.len(), self.rows * r);
         debug_assert_eq!(y.len(), self.cols * r);
@@ -86,6 +102,9 @@ impl Csr {
     }
 
     /// P = A·Q where Q is dense row-major (cols × r); returns dense (rows × r).
+    ///
+    /// Scalar reference implementation — see [`crate::sparse::kernels`]
+    /// for the panel-blocked hot-path twin.
     pub fn times_dense(&self, q: &[f32], r: usize, out: &mut [f32]) {
         debug_assert_eq!(q.len(), self.cols * r);
         debug_assert_eq!(out.len(), self.rows * r);
@@ -186,32 +205,77 @@ impl Csr {
         self.values.iter().map(|&v| (v as f64) * (v as f64)).sum()
     }
 
-    /// Stack row blocks vertically (all parts must share `cols`). The serve
-    /// batcher uses this to fuse many small requests into one projection
-    /// product; it is the inverse of repeated [`Csr::slice_rows`].
-    pub fn vcat(parts: &[&Csr]) -> Csr {
-        assert!(!parts.is_empty(), "vcat of zero parts");
-        let cols = parts[0].cols;
-        let total_rows: usize = parts.iter().map(|p| p.rows).sum();
-        let total_nnz: usize = parts.iter().map(|p| p.nnz()).sum();
-        let mut indptr = Vec::with_capacity(total_rows + 1);
-        let mut indices = Vec::with_capacity(total_nnz);
-        let mut values = Vec::with_capacity(total_nnz);
-        indptr.push(0usize);
-        for p in parts {
-            assert_eq!(p.cols, cols, "vcat width mismatch");
-            let base = *indptr.last().unwrap();
-            indptr.extend(p.indptr[1..].iter().map(|x| x + base));
-            indices.extend_from_slice(&p.indices);
-            values.extend_from_slice(&p.values);
+    /// Transpose via counting sort, O(nnz + cols). The result is the CSC
+    /// mirror of `self` in CSR clothing: row `j` of the transpose lists the
+    /// rows of `self` whose row contains column `j`, in increasing order.
+    /// The coordinator builds these once per cached chunk so the power-pass
+    /// scatter `Aᵀ·M` becomes a gather with sequential output writes.
+    pub fn transpose(&self) -> Csr {
+        debug_assert!(self.rows <= u32::MAX as usize);
+        let nnz = self.nnz();
+        let mut counts = vec![0usize; self.cols + 1];
+        for &j in &self.indices {
+            counts[j as usize + 1] += 1;
+        }
+        for j in 0..self.cols {
+            counts[j + 1] += counts[j];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0u32; nnz];
+        let mut values = vec![0f32; nnz];
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            for (&j, &v) in idx.iter().zip(vals) {
+                let p = cursor[j as usize];
+                indices[p] = i as u32;
+                values[p] = v;
+                cursor[j as usize] = p + 1;
+            }
         }
         Csr {
-            rows: total_rows,
-            cols,
+            rows: self.cols,
+            cols: self.rows,
             indptr,
             indices,
             values,
         }
+    }
+
+    /// Stack row blocks vertically (all parts must share `cols`). The serve
+    /// batcher uses this to fuse many small requests into one projection
+    /// product; it is the inverse of repeated [`Csr::slice_rows`].
+    pub fn vcat(parts: &[&Csr]) -> Csr {
+        let mut out = Csr::empty();
+        Csr::vcat_into(parts, &mut out);
+        out
+    }
+
+    /// [`Csr::vcat`] into a reused target: `into`'s buffers are cleared and
+    /// refilled, so a steady-state caller (the serve batcher) performs no
+    /// heap allocation once the buffers have grown to the working set.
+    pub fn vcat_into(parts: &[&Csr], into: &mut Csr) {
+        assert!(!parts.is_empty(), "vcat of zero parts");
+        let cols = parts[0].cols;
+        let total_rows: usize = parts.iter().map(|p| p.rows).sum();
+        let total_nnz: usize = parts.iter().map(|p| p.nnz()).sum();
+        into.indptr.clear();
+        into.indices.clear();
+        into.values.clear();
+        // No-ops once the reused buffers have grown to the working set.
+        into.indptr.reserve(total_rows + 1);
+        into.indices.reserve(total_nnz);
+        into.values.reserve(total_nnz);
+        into.indptr.push(0usize);
+        for p in parts {
+            assert_eq!(p.cols, cols, "vcat width mismatch");
+            let base = *into.indptr.last().unwrap();
+            into.indptr.extend(p.indptr[1..].iter().map(|x| x + base));
+            into.indices.extend_from_slice(&p.indices);
+            into.values.extend_from_slice(&p.values);
+        }
+        into.rows = into.indptr.len() - 1;
+        into.cols = cols;
     }
 }
 
@@ -432,6 +496,53 @@ mod tests {
         back.validate().unwrap();
         // Single-part vcat is identity.
         assert_eq!(Csr::vcat(&[&a]), a);
+    }
+
+    #[test]
+    fn transpose_matches_dense_transpose() {
+        prop::check("csr-transpose", 20, |g| {
+            let rows = g.size(1, 20);
+            let cols = g.size(1, 15);
+            let mut rng = Rng::new(g.seed ^ 9);
+            let a = random_csr(rows, cols, 3.min(cols), &mut rng);
+            let at = a.transpose();
+            at.validate().unwrap();
+            assert_eq!((at.rows, at.cols), (cols, rows));
+            assert_eq!(at.to_dense(), a.to_dense().transpose());
+            // Involution, bitwise.
+            assert_eq!(at.transpose(), a);
+        });
+    }
+
+    #[test]
+    fn transpose_handles_empty_rows_and_cols() {
+        let mut b = CsrBuilder::new(5);
+        let mut empty = Vec::new();
+        b.push_row(&mut empty);
+        let mut p = vec![(3u32, 2.0f32)];
+        b.push_row(&mut p);
+        b.push_row(&mut empty);
+        let a = b.finish(); // 3×5, single nnz at (1,3); columns 0,1,2,4 empty
+        let at = a.transpose();
+        at.validate().unwrap();
+        assert_eq!(at.rows, 5);
+        assert_eq!(at.nnz(), 1);
+        assert_eq!(at.row(3).0, &[1]);
+        assert_eq!(at.row(3).1, &[2.0]);
+    }
+
+    #[test]
+    fn vcat_into_reuses_buffers() {
+        let mut rng = Rng::new(23);
+        let a = random_csr(10, 6, 3, &mut rng);
+        let b = random_csr(4, 6, 2, &mut rng);
+        let mut target = Csr::empty();
+        Csr::vcat_into(&[&a, &b], &mut target);
+        assert_eq!(target, Csr::vcat(&[&a, &b]));
+        // Second fill with different parts overwrites cleanly.
+        Csr::vcat_into(&[&b], &mut target);
+        assert_eq!(target, b);
+        target.validate().unwrap();
     }
 
     #[test]

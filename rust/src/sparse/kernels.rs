@@ -1,0 +1,405 @@
+//! Panel-blocked sparse kernels: the per-pass hot path.
+//!
+//! Every data-pass product is "tall sparse CSR times skinny dense panel"
+//! (gather) or its transpose (scatter). The scalar kernels in
+//! [`crate::sparse::Csr`] walk one output lane at a time with a
+//! runtime-length inner loop; the kernels here process the `r` dimension in
+//! fixed-width unrolled panels of [`PANEL`] lanes so the accumulators live
+//! in registers across a row's nonzero walk and the compiler vectorizes the
+//! inner loops the way `sgemm_nn`'s 8-row blocking already does (iteration
+//! log in EXPERIMENTS.md §Perf). Lane counts that are not a multiple of
+//! [`PANEL`] fall through to a scalarized remainder pass over the same
+//! traversal order, so panel and scalar kernels produce bitwise-identical
+//! results (the property tests pin this).
+//!
+//! [`fused_gather_scatter`] additionally fuses a view's gather (`A·Qa`) and
+//! scatter (`Aᵀ·M`) into a single CSR traversal — the power pass drops from
+//! four row walks per chunk to three (the first view's scatter needs the
+//! second view's gather, so one product is always computed unfused).
+
+use super::Csr;
+
+/// Panel width (lanes of the dense operand processed per traversal).
+/// Eight f32 lanes = one AVX2 register; the unrolled inner loops below
+/// compile to packed FMAs without length checks.
+pub const PANEL: usize = 8;
+
+/// P = A·Q (overwrite). `q` is row-major (cols × r), `out` (rows × r).
+///
+/// Panel-outer formulation: for each 8-lane panel of the output, walk each
+/// row's nonzeros with the 8 accumulators in registers and store once per
+/// row — the scalar kernel instead load/stores the full `r`-wide output row
+/// per nonzero.
+pub fn times_dense(a: &Csr, q: &[f32], r: usize, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), a.cols * r);
+    debug_assert_eq!(out.len(), a.rows * r);
+    let mut c0 = 0;
+    while c0 + PANEL <= r {
+        for i in 0..a.rows {
+            let (idx, vals) = a.row(i);
+            let mut acc = [0f32; PANEL];
+            for (&j, &v) in idx.iter().zip(vals) {
+                let q0 = j as usize * r + c0;
+                let qp: &[f32; PANEL] = q[q0..q0 + PANEL].try_into().unwrap();
+                for (a_l, &q_l) in acc.iter_mut().zip(qp) {
+                    *a_l += v * q_l;
+                }
+            }
+            out[i * r + c0..i * r + c0 + PANEL].copy_from_slice(&acc);
+        }
+        c0 += PANEL;
+    }
+    let rem = r - c0;
+    if rem > 0 {
+        for i in 0..a.rows {
+            let (idx, vals) = a.row(i);
+            let mut acc = [0f32; PANEL];
+            for (&j, &v) in idx.iter().zip(vals) {
+                let q0 = j as usize * r + c0;
+                for l in 0..rem {
+                    acc[l] += v * q[q0 + l];
+                }
+            }
+            for l in 0..rem {
+                out[i * r + c0 + l] = acc[l];
+            }
+        }
+    }
+}
+
+/// Y += Aᵀ·M with f64 accumulation. `m` is row-major (rows × r), `y`
+/// (cols × r). The scatter side of the power pass: per panel, the 8 lanes
+/// of a row of `M` are hoisted once and scattered to each nonzero's output
+/// row with unrolled 8-wide updates.
+pub fn add_t_times_dense(a: &Csr, m: &[f32], r: usize, y: &mut [f64]) {
+    debug_assert_eq!(m.len(), a.rows * r);
+    debug_assert_eq!(y.len(), a.cols * r);
+    let mut c0 = 0;
+    while c0 + PANEL <= r {
+        for i in 0..a.rows {
+            let (idx, vals) = a.row(i);
+            let m0 = i * r + c0;
+            let mp: &[f32; PANEL] = m[m0..m0 + PANEL].try_into().unwrap();
+            for (&j, &v) in idx.iter().zip(vals) {
+                let v = v as f64;
+                let y0 = j as usize * r + c0;
+                let yp = &mut y[y0..y0 + PANEL];
+                for (y_l, &m_l) in yp.iter_mut().zip(mp) {
+                    *y_l += v * m_l as f64;
+                }
+            }
+        }
+        c0 += PANEL;
+    }
+    let rem = r - c0;
+    if rem > 0 {
+        for i in 0..a.rows {
+            let (idx, vals) = a.row(i);
+            let m0 = i * r + c0;
+            for (&j, &v) in idx.iter().zip(vals) {
+                let v = v as f64;
+                let y0 = j as usize * r + c0;
+                for l in 0..rem {
+                    y[y0 + l] += v * m[m0 + l] as f64;
+                }
+            }
+        }
+    }
+}
+
+/// Fused power-pass traversal for one view: in a single walk over `a`,
+/// compute the gather `aq = A·Qa` (overwrite) AND the scatter
+/// `ya += Aᵀ·M` (accumulate, f64). Both touch exactly the same nonzeros,
+/// and both index the `d × r` operands at the same `j·r + c0` offset, so
+/// fusing halves the CSR index/value traffic for this view.
+pub fn fused_gather_scatter(
+    a: &Csr,
+    qa: &[f32],
+    m: &[f32],
+    r: usize,
+    aq: &mut [f32],
+    ya: &mut [f64],
+) {
+    debug_assert_eq!(qa.len(), a.cols * r);
+    debug_assert_eq!(m.len(), a.rows * r);
+    debug_assert_eq!(aq.len(), a.rows * r);
+    debug_assert_eq!(ya.len(), a.cols * r);
+    let mut c0 = 0;
+    while c0 + PANEL <= r {
+        for i in 0..a.rows {
+            let (idx, vals) = a.row(i);
+            let m0 = i * r + c0;
+            let mp: &[f32; PANEL] = m[m0..m0 + PANEL].try_into().unwrap();
+            let mut acc = [0f32; PANEL];
+            for (&j, &v) in idx.iter().zip(vals) {
+                let o0 = j as usize * r + c0;
+                let qp: &[f32; PANEL] = qa[o0..o0 + PANEL].try_into().unwrap();
+                for (a_l, &q_l) in acc.iter_mut().zip(qp) {
+                    *a_l += v * q_l;
+                }
+                let vf = v as f64;
+                let yp = &mut ya[o0..o0 + PANEL];
+                for (y_l, &m_l) in yp.iter_mut().zip(mp) {
+                    *y_l += vf * m_l as f64;
+                }
+            }
+            aq[m0..m0 + PANEL].copy_from_slice(&acc);
+        }
+        c0 += PANEL;
+    }
+    let rem = r - c0;
+    if rem > 0 {
+        for i in 0..a.rows {
+            let (idx, vals) = a.row(i);
+            let m0 = i * r + c0;
+            let mut acc = [0f32; PANEL];
+            for (&j, &v) in idx.iter().zip(vals) {
+                let o0 = j as usize * r + c0;
+                for l in 0..rem {
+                    acc[l] += v * qa[o0 + l];
+                }
+                let vf = v as f64;
+                for l in 0..rem {
+                    ya[o0 + l] += vf * m[m0 + l] as f64;
+                }
+            }
+            for l in 0..rem {
+                aq[m0 + l] = acc[l];
+            }
+        }
+    }
+}
+
+/// Y += A·M with f64 accumulators and f32 inputs. `m` is row-major
+/// (cols × r), `y` (rows × r).
+///
+/// Two hot paths share this gather: the serve transform (`A` = request
+/// rows, `M` = the model's f32 projection, f64 only at the output), and the
+/// mirrored power-pass scatter (`A` = a cached transposed chunk, turning
+/// the scatter into sequential output writes). Rows without nonzeros are
+/// skipped without touching `y`, so a very sparse transposed mirror costs
+/// O(rows) pointer reads, not O(rows × r) writes.
+pub fn add_times_dense_acc64(a: &Csr, m: &[f32], r: usize, y: &mut [f64]) {
+    debug_assert_eq!(m.len(), a.cols * r);
+    debug_assert_eq!(y.len(), a.rows * r);
+    let mut c0 = 0;
+    while c0 + PANEL <= r {
+        for i in 0..a.rows {
+            let (idx, vals) = a.row(i);
+            if idx.is_empty() {
+                continue;
+            }
+            let mut acc = [0f64; PANEL];
+            for (&j, &v) in idx.iter().zip(vals) {
+                let v = v as f64;
+                let m0 = j as usize * r + c0;
+                let mp: &[f32; PANEL] = m[m0..m0 + PANEL].try_into().unwrap();
+                for (a_l, &m_l) in acc.iter_mut().zip(mp) {
+                    *a_l += v * m_l as f64;
+                }
+            }
+            let y0 = i * r + c0;
+            for (y_l, a_l) in y[y0..y0 + PANEL].iter_mut().zip(acc) {
+                *y_l += a_l;
+            }
+        }
+        c0 += PANEL;
+    }
+    let rem = r - c0;
+    if rem > 0 {
+        for i in 0..a.rows {
+            let (idx, vals) = a.row(i);
+            if idx.is_empty() {
+                continue;
+            }
+            let mut acc = [0f64; PANEL];
+            for (&j, &v) in idx.iter().zip(vals) {
+                let v = v as f64;
+                let m0 = j as usize * r + c0;
+                for l in 0..rem {
+                    acc[l] += v * m[m0 + l] as f64;
+                }
+            }
+            let y0 = i * r + c0;
+            for l in 0..rem {
+                y[y0 + l] += acc[l];
+            }
+        }
+    }
+}
+
+/// Y = A·M (overwrite twin of [`add_times_dense_acc64`]).
+pub fn times_dense_acc64(a: &Csr, m: &[f32], r: usize, y: &mut [f64]) {
+    y.fill(0.0);
+    add_times_dense_acc64(a, m, r, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::linalg::Mat;
+    use crate::sparse::CsrBuilder;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rows: usize, cols: usize, nnz_per_row: usize, rng: &mut Rng) -> Csr {
+        let mut b = CsrBuilder::new(cols);
+        let mut pairs = Vec::new();
+        for _ in 0..rows {
+            for _ in 0..nnz_per_row {
+                pairs.push((rng.below(cols as u64) as u32, rng.normal() as f32));
+            }
+            b.push_row(&mut pairs);
+        }
+        b.finish()
+    }
+
+    /// Rows 0 and 2 empty, row 1 fully dense — the structural edge cases.
+    fn edge_csr(cols: usize, rng: &mut Rng) -> Csr {
+        let mut b = CsrBuilder::new(cols);
+        let mut pairs = Vec::new();
+        b.push_row(&mut pairs);
+        for j in 0..cols {
+            pairs.push((j as u32, rng.normal() as f32));
+        }
+        b.push_row(&mut pairs);
+        b.push_row(&mut pairs);
+        b.finish()
+    }
+
+    #[test]
+    fn panel_times_dense_is_bitwise_scalar() {
+        // Panel and scalar kernels sum each output lane in the same nonzero
+        // order, so the results must match bitwise — including r not a
+        // multiple of the panel width, r < PANEL, empty and dense rows.
+        prop::check("kernel-gather-bitwise", 30, |g| {
+            let rows = g.size(1, 30);
+            let cols = g.size(1, 25);
+            let r = g.size(1, 21);
+            let mut rng = Rng::new(g.seed);
+            let a = if g.size(0, 4) == 0 {
+                edge_csr(cols, &mut rng)
+            } else {
+                random_csr(rows, cols, 4.min(cols), &mut rng)
+            };
+            let q = g.normal_vec_f32(cols * r, 1.0);
+            let mut want = vec![0f32; a.rows * r];
+            a.times_dense(&q, r, &mut want);
+            let mut got = vec![7f32; a.rows * r]; // stale garbage: overwrite must cover
+            times_dense(&a, &q, r, &mut got);
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn panel_scatter_is_bitwise_scalar() {
+        prop::check("kernel-scatter-bitwise", 30, |g| {
+            let rows = g.size(1, 30);
+            let cols = g.size(1, 25);
+            let r = g.size(1, 21);
+            let mut rng = Rng::new(g.seed ^ 1);
+            let a = if g.size(0, 4) == 0 {
+                edge_csr(cols, &mut rng)
+            } else {
+                random_csr(rows, cols, 4.min(cols), &mut rng)
+            };
+            let m = g.normal_vec_f32(a.rows * r, 1.0);
+            let mut want = vec![0.5f64; cols * r]; // nonzero start: += must preserve
+            let mut got = want.clone();
+            a.add_t_times_dense(&m, r, &mut want);
+            add_t_times_dense(&a, &m, r, &mut got);
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn fused_traversal_matches_two_traversals() {
+        prop::check("kernel-fused", 30, |g| {
+            let rows = g.size(1, 30);
+            let cols = g.size(2, 25);
+            let r = g.size(1, 21);
+            let mut rng = Rng::new(g.seed ^ 2);
+            let a = random_csr(rows, cols, 4.min(cols), &mut rng);
+            let qa = g.normal_vec_f32(cols * r, 1.0);
+            let m = g.normal_vec_f32(rows * r, 1.0);
+            let mut aq_want = vec![0f32; rows * r];
+            a.times_dense(&qa, r, &mut aq_want);
+            let mut ya_want = vec![0f64; cols * r];
+            a.add_t_times_dense(&m, r, &mut ya_want);
+            let mut aq = vec![0f32; rows * r];
+            let mut ya = vec![0f64; cols * r];
+            fused_gather_scatter(&a, &qa, &m, r, &mut aq, &mut ya);
+            // Same per-lane summation order → bitwise equal (a fortiori the
+            // 1e-5 rel_diff bound the acceptance criteria ask for).
+            assert_eq!(aq, aq_want);
+            assert_eq!(ya, ya_want);
+            let got = Mat::from_vec(cols, r, ya);
+            let want = Mat::from_vec(cols, r, ya_want);
+            assert!(got.rel_diff(&want) <= 1e-5);
+        });
+    }
+
+    #[test]
+    fn acc64_gather_matches_dense_math() {
+        prop::check("kernel-acc64", 25, |g| {
+            let rows = g.size(1, 25);
+            let cols = g.size(1, 20);
+            let r = g.size(1, 19);
+            let mut rng = Rng::new(g.seed ^ 3);
+            let a = random_csr(rows, cols, 3.min(cols), &mut rng);
+            let m32 = g.normal_vec_f32(cols * r, 1.0);
+            let mut y = vec![0f64; rows * r];
+            times_dense_acc64(&a, &m32, r, &mut y);
+            let want = matmul(&a.to_dense(), &Mat::from_f32(cols, r, &m32));
+            let got = Mat::from_vec(rows, r, y.clone());
+            assert!(got.rel_diff(&want) < 1e-5, "{}", got.rel_diff(&want));
+            // Accumulate twin: running it again doubles the result.
+            add_times_dense_acc64(&a, &m32, r, &mut y);
+            let twice = Mat::from_vec(rows, r, y);
+            assert!(twice.rel_diff(&want.scaled(2.0)) < 1e-5);
+        });
+    }
+
+    #[test]
+    fn acc64_on_transpose_equals_scatter() {
+        // The mirrored power-pass path: Aᵀ·M via a gather over transpose(A)
+        // must equal the scatter over A (different summation order → small
+        // f64 rounding differences only).
+        prop::check("kernel-mirror", 25, |g| {
+            let rows = g.size(1, 25);
+            let cols = g.size(2, 20);
+            let r = g.size(1, 19);
+            let mut rng = Rng::new(g.seed ^ 4);
+            let a = random_csr(rows, cols, 4.min(cols), &mut rng);
+            let at = a.transpose();
+            let m = g.normal_vec_f32(rows * r, 1.0);
+            let mut scatter = vec![0f64; cols * r];
+            add_t_times_dense(&a, &m, r, &mut scatter);
+            let mut gathered = vec![0f64; cols * r];
+            add_times_dense_acc64(&at, &m, r, &mut gathered);
+            let s = Mat::from_vec(cols, r, scatter);
+            let gm = Mat::from_vec(cols, r, gathered);
+            assert!(gm.rel_diff(&s) < 1e-10, "{}", gm.rel_diff(&s));
+        });
+    }
+
+    #[test]
+    fn gather_matches_f64_reference() {
+        // End-to-end numeric anchor against leader-side f64 GEMM.
+        let mut rng = Rng::new(9);
+        let a = random_csr(40, 30, 5, &mut rng);
+        let r = 13;
+        let q = Mat::randn(30, r, &mut rng);
+        let q32 = q.to_f32();
+        let mut p = vec![0f32; 40 * r];
+        times_dense(&a, &q32, r, &mut p);
+        let want = matmul(&a.to_dense(), &Mat::from_f32(30, r, &q32));
+        assert!(Mat::from_f32(40, r, &p).rel_diff(&want) < 1e-4);
+        let m = Mat::randn(40, r, &mut rng).to_f32();
+        let mut y = vec![0f64; 30 * r];
+        add_t_times_dense(&a, &m, r, &mut y);
+        let want_t = matmul_tn(&a.to_dense(), &Mat::from_f32(40, r, &m));
+        assert!(Mat::from_vec(30, r, y).rel_diff(&want_t) < 1e-5);
+    }
+}

@@ -8,9 +8,12 @@
 //!   * `Y += Aᵀ·M`  (scatter rows of M into Y at A's column indices),
 //!   * `P  = A·Q`   (gather rows of Q at A's column indices),
 //!
-//! both O(nnz·r). The native engine uses these directly; the PJRT engine
-//! densifies chunks first (see `runtime::buffers`).
+//! both O(nnz·r). The native engine runs the panel-blocked twins in
+//! [`kernels`]; the scalar implementations on [`Csr`] are the tested
+//! reference. The PJRT engine densifies chunks first (see
+//! `runtime::buffers`).
 
 pub mod csr;
+pub mod kernels;
 
 pub use csr::{Csr, CsrBuilder};
