@@ -5,18 +5,21 @@
 
 use super::ApiError;
 use crate::cca::pass::{InMemoryPass, PassEngine};
+use crate::cluster::{ClusterConfig, ClusterLedger, ClusterPass};
 use crate::coordinator::{Metrics, ShardedPass, ShardedPassConfig};
 use crate::data::shards::{ShardStore, ShardWriter};
 use crate::data::TwoViewChunk;
 use crate::experiments::Workload;
 use crate::linalg::Mat;
 use crate::runtime::{ChunkEngine, NativeEngine, PjrtEngine};
+use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 use std::str::FromStr;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Which compute path an engine uses. Parses from the CLI's `--engine`
-/// flag values (`inmemory`, `native`, `pjrt`).
+/// flag values (`inmemory`, `native`, `pjrt`, `cluster`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
     /// Single-node in-core sparse products (fastest for sweeps).
@@ -26,6 +29,8 @@ pub enum Backend {
     /// Coordinator with AOT-compiled XLA chunks (requires `make artifacts`
     /// and the `pjrt` cargo feature).
     Pjrt,
+    /// Driver over worker processes connected via TCP (`rcca::cluster`).
+    Cluster,
 }
 
 impl FromStr for Backend {
@@ -36,8 +41,9 @@ impl FromStr for Backend {
             "inmemory" => Ok(Backend::InMemory),
             "native" => Ok(Backend::Native),
             "pjrt" => Ok(Backend::Pjrt),
+            "cluster" => Ok(Backend::Cluster),
             other => Err(ApiError::EngineSpec(format!(
-                "unknown engine '{other}' (expected inmemory|native|pjrt)"
+                "unknown engine '{other}' (expected inmemory|native|pjrt|cluster)"
             ))),
         }
     }
@@ -81,6 +87,7 @@ pub struct Engine {
     inner: Box<dyn PassEngine>,
     backend: Backend,
     metrics: Option<Arc<Metrics>>,
+    ledger: Option<Arc<ClusterLedger>>,
 }
 
 impl Engine {
@@ -90,7 +97,29 @@ impl Engine {
             inner: Box::new(InMemoryPass::new(chunk)),
             backend: Backend::InMemory,
             metrics: None,
+            ledger: None,
         }
+    }
+
+    /// Driver engine over already-running worker processes
+    /// (`repro worker`). The workers report the dataset they serve, so no
+    /// local shard access is needed on the driver.
+    pub fn cluster(addrs: &[String], config: ClusterConfig) -> Result<Engine, ApiError> {
+        let pass = ClusterPass::connect(addrs, config).map_err(ApiError::Engine)?;
+        let metrics = Arc::clone(&pass.metrics);
+        let ledger = pass.ledger();
+        Ok(Engine {
+            inner: Box::new(pass),
+            backend: Backend::Cluster,
+            metrics: Some(metrics),
+            ledger: Some(ledger),
+        })
+    }
+
+    /// Per-worker cluster ledger snapshot (rounds, shards, bytes, deaths)
+    /// when this engine is a cluster driver.
+    pub fn cluster_ledger(&self) -> Option<Json> {
+        self.ledger.as_ref().map(|l| l.to_json())
     }
 
     /// Coordinator engine over an existing shard directory (one produced by
@@ -121,6 +150,7 @@ impl Engine {
             inner: Box::new(pass),
             backend,
             metrics: Some(metrics),
+            ledger: None,
         })
     }
 
@@ -131,9 +161,12 @@ impl Engine {
     /// native:<shard_dir>[?opts]            coordinator + native chunks
     /// pjrt:<shard_dir>@<artifacts>[?opts]  coordinator + AOT XLA chunks
     /// opts: workers=N & chunk=N & cache=true|false
+    /// cluster:<addr>,<addr>,...[?copts]    driver over running workers
+    /// copts: chunk=N & retries=N & hb-timeout-ms=N & connect-timeout-ms=N
     /// ```
     ///
-    /// Example: `native:work/shards?workers=4&chunk=256`.
+    /// Examples: `native:work/shards?workers=4&chunk=256`,
+    /// `cluster:127.0.0.1:9301,127.0.0.1:9302?chunk=256`.
     pub fn from_spec(spec: &str) -> Result<Engine, ApiError> {
         let (kind, rest) = spec
             .split_once(':')
@@ -142,6 +175,9 @@ impl Engine {
             Some((t, q)) => (t, Some(q)),
             None => (rest, None),
         };
+        if kind == "cluster" {
+            return Engine::cluster_from_spec(target, query);
+        }
         let mut opts = ShardedOpts::default();
         if let Some(q) = query {
             for pair in q.split('&').filter(|p| !p.is_empty()) {
@@ -188,9 +224,51 @@ impl Engine {
                 Engine::sharded(Path::new(shards), opts)
             }
             other => Err(ApiError::EngineSpec(format!(
-                "unknown backend '{other}' (expected inmemory|native|pjrt)"
+                "unknown backend '{other}' (expected inmemory|native|pjrt|cluster)"
             ))),
         }
+    }
+
+    /// The `cluster:` arm of [`Engine::from_spec`]: comma-separated worker
+    /// addresses plus driver options.
+    fn cluster_from_spec(target: &str, query: Option<&str>) -> Result<Engine, ApiError> {
+        let addrs = crate::cluster::parse_addrs(target);
+        if addrs.is_empty() {
+            return Err(ApiError::EngineSpec(
+                "cluster spec needs at least one worker address \
+                 ('cluster:host:port,host:port')"
+                    .to_string(),
+            ));
+        }
+        let mut config = ClusterConfig::default();
+        if let Some(q) = query {
+            for pair in q.split('&').filter(|p| !p.is_empty()) {
+                let (key, val) = pair.split_once('=').ok_or_else(|| {
+                    ApiError::EngineSpec(format!("option '{pair}' is not key=value"))
+                })?;
+                let bad =
+                    |k: &str| ApiError::EngineSpec(format!("option '{k}' has a bad value '{val}'"));
+                match key {
+                    "chunk" => config.chunk_rows = val.parse().map_err(|_| bad(key))?,
+                    "retries" => config.max_retries = val.parse().map_err(|_| bad(key))?,
+                    "hb-timeout-ms" => {
+                        config.heartbeat_timeout =
+                            Duration::from_millis(val.parse().map_err(|_| bad(key))?)
+                    }
+                    "connect-timeout-ms" => {
+                        config.connect_timeout =
+                            Duration::from_millis(val.parse().map_err(|_| bad(key))?)
+                    }
+                    other => {
+                        return Err(ApiError::EngineSpec(format!(
+                            "unknown cluster option '{other}' (expected \
+                             chunk|retries|hb-timeout-ms|connect-timeout-ms)"
+                        )))
+                    }
+                }
+            }
+        }
+        Engine::cluster(&addrs, config)
     }
 
     /// Engine for a generated experiment workload's training split. Sharded
@@ -205,6 +283,12 @@ impl Engine {
     ) -> Result<Engine, ApiError> {
         match backend {
             Backend::InMemory => Ok(Engine::in_memory(workload.train.clone())),
+            Backend::Cluster => Err(ApiError::EngineSpec(
+                "the cluster backend needs running workers: start them with \
+                 `repro worker --listen <addr> --shards <dir>` and pass \
+                 `--engine 'cluster:<addr>,<addr>'` (or use `repro fit --cluster ...`)"
+                    .to_string(),
+            )),
             Backend::Native | Backend::Pjrt => {
                 let dir = workdir.join(format!(
                     "shards_n{}_d{}_s{}",
@@ -297,10 +381,46 @@ mod tests {
         assert_eq!("inmemory".parse::<Backend>().unwrap(), Backend::InMemory);
         assert_eq!("native".parse::<Backend>().unwrap(), Backend::Native);
         assert_eq!("pjrt".parse::<Backend>().unwrap(), Backend::Pjrt);
+        assert_eq!("cluster".parse::<Backend>().unwrap(), Backend::Cluster);
         assert!(matches!(
             "hadoop".parse::<Backend>(),
             Err(ApiError::EngineSpec(_))
         ));
+    }
+
+    #[test]
+    fn cluster_spec_drives_running_workers() {
+        use crate::cluster::{Worker, WorkerConfig};
+        let chunk = dataset(260, 40);
+        let dir = std::env::temp_dir().join("rcca_api_engine_cluster");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = ShardWriter::create(&dir, 60).unwrap();
+        w.write_dataset(&chunk.a, &chunk.b).unwrap();
+        let mut worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let addr = worker.local_addr();
+        std::thread::spawn(move || {
+            let _ = worker.serve_one();
+        });
+        let mut eng = Engine::from_spec(&format!("cluster:{addr}?chunk=60&retries=1")).unwrap();
+        assert_eq!(eng.backend(), Backend::Cluster);
+        assert!(eng.metrics().is_some());
+        assert_eq!(eng.shape(), (260, 40, 40));
+        let mut rng = Rng::new(9);
+        let q = Mat::randn(40, 3, &mut rng);
+        let mut inmem = Engine::in_memory(chunk);
+        let (want, _) = inmem.power_pass(&q, &q);
+        let (got, _) = eng.power_pass(&q, &q);
+        assert!(got.rel_diff(&want) < 1e-5, "{}", got.rel_diff(&want));
+        let ledger = eng.cluster_ledger().expect("cluster engines have a ledger");
+        assert_eq!(ledger.get("rounds").unwrap().as_usize(), Some(1));
+        assert!(inmem.cluster_ledger().is_none());
+    }
+
+    #[test]
+    fn cluster_backend_has_no_workload_auto_setup() {
+        let w = crate::experiments::Workload::generate(crate::experiments::Scale::tiny());
+        let err = Engine::for_workload(&w, Backend::Cluster, Path::new("/tmp"), 2, 64).unwrap_err();
+        assert!(matches!(err, ApiError::EngineSpec(_)), "{err}");
     }
 
     #[test]
@@ -367,6 +487,10 @@ mod tests {
             "native:/tmp?workers=abc",
             "native:/tmp?bogus=1",
             "inmemory:/tmp?workers=2",
+            "cluster:",
+            "cluster:127.0.0.1:1?bogus=1",
+            "cluster:127.0.0.1:1?chunk=abc",
+            "cluster:127.0.0.1:1?connect-timeout-ms=200",
         ] {
             let err = Engine::from_spec(bad).unwrap_err();
             assert!(

@@ -13,8 +13,9 @@
 //!    [`Solver::Horst`], whose `warm_start` internally chains
 //!    `RandomizedCca::fit_with_bases` into `Horst::fit_from`);
 //! 2. [`Engine`] — one constructor family over every compute path:
-//!    [`Engine::in_memory`], [`Engine::sharded`], [`Engine::from_spec`],
-//!    and [`Engine::for_workload`] for generated experiment workloads;
+//!    [`Engine::in_memory`], [`Engine::sharded`], [`Engine::cluster`]
+//!    (driver over `repro worker` processes), [`Engine::from_spec`], and
+//!    [`Engine::for_workload`] for generated experiment workloads;
 //! 3. [`FittedModel`] — the inference surface a fitted model was missing:
 //!    `transform_a`/`transform_b` for projecting new CSR data into the
 //!    canonical space, `correlations()`, `objective()`, and a JSON

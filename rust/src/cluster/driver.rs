@@ -1,0 +1,842 @@
+//! The cluster driver: a [`PassEngine`] whose map side runs in worker
+//! *processes* connected over TCP.
+//!
+//! One pass = one network round: the driver broadcasts a single
+//! [`Msg::RunPass`] to every live worker and reduces the streamed
+//! [`Msg::Partial`]s — exactly the dataflow the paper assumes when it
+//! counts data passes over a Hadoop-like substrate. Fault handling mirrors
+//! the in-process coordinator: a worker that reports a shard failure burns
+//! that shard's retry budget and the shard is re-dispatched with the
+//! failing worker excluded; a worker that dies (connection drop or
+//! heartbeat timeout) has its whole partition redistributed over the
+//! survivors mid-pass.
+//!
+//! Determinism: partials are buffered and reduced in shard-index order, so
+//! a cluster fit is bit-for-bit reproducible regardless of worker count,
+//! scheduling, or crash/recovery history — and bit-identical to the
+//! in-process [`crate::coordinator::ShardedPass`] with one pool worker
+//! (whose FIFO pool reduces in the same shard order).
+
+use super::membership::{ClusterLedger, Membership};
+use super::proto::{Msg, SHARD_NONE};
+use super::transport::{self, Conn};
+use crate::cca::pass::PassEngine;
+use crate::coordinator::{Accumulator, Metrics, PassKind, PassProgress};
+use crate::linalg::Mat;
+use crate::runtime::mat_to_f32;
+use crate::util::json::Json;
+use crate::util::timer::Timer;
+use std::collections::BTreeMap;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Driver tunables; `Default` suits local clusters and tests.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Rows per engine chunk on every worker (broadcast in
+    /// [`Msg::AssignShards`]; chunking fixes the f32 accumulation
+    /// grouping, so it is a cluster-wide setting, not per worker).
+    pub chunk_rows: usize,
+    /// Per-shard retry budget before a pass aborts (counts worker deaths
+    /// and shard failures alike).
+    pub max_retries: usize,
+    /// Ping a worker after this much silence during a pass.
+    pub heartbeat_interval: Duration,
+    /// Declare a worker dead after this much silence during a pass. Must
+    /// exceed the worst-case single-shard compute time — workers answer
+    /// control traffic between shard tasks, not between chunks.
+    pub heartbeat_timeout: Duration,
+    /// Bound on connect + handshake per worker.
+    pub connect_timeout: Duration,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> ClusterConfig {
+        ClusterConfig {
+            chunk_rows: 256,
+            max_retries: 2,
+            heartbeat_interval: Duration::from_secs(1),
+            heartbeat_timeout: Duration::from_secs(10),
+            connect_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// What a reader thread forwards: messages from, or the death of, worker i.
+type Inbound = (usize, Result<Msg, String>);
+
+/// Immutable context of the pass currently executing.
+struct PassCtx<'a> {
+    pass_id: u64,
+    kind: PassKind,
+    r: usize,
+    qa32: &'a [f32],
+    qb32: &'a [f32],
+}
+
+/// Driver-side pass engine over registered worker processes. Implements
+/// [`PassEngine`], so RandomizedCCA and Horst run unchanged on a cluster.
+pub struct ClusterPass {
+    writers: Vec<TcpStream>,
+    rx: mpsc::Receiver<Inbound>,
+    members: Membership,
+    ledger: Arc<ClusterLedger>,
+    /// Last pass_id each worker's round counter has charged.
+    rounds_counted: Vec<u64>,
+    last_seen: Vec<Instant>,
+    pinged: Vec<bool>,
+    shards: usize,
+    rows: usize,
+    dims_a: usize,
+    dims_b: usize,
+    pub config: ClusterConfig,
+    pub metrics: Arc<Metrics>,
+    pass_id: u64,
+    passes: usize,
+    traces: Option<(f64, f64)>,
+}
+
+impl ClusterPass {
+    /// Connect to every worker, handshake, validate that they all serve
+    /// the same dataset, and broadcast the initial shard partition.
+    pub fn connect(addrs: &[String], config: ClusterConfig) -> Result<ClusterPass, String> {
+        if addrs.is_empty() {
+            return Err("a cluster needs at least one worker address".to_string());
+        }
+        let (tx, rx) = mpsc::channel::<Inbound>();
+        let mut writers = Vec::with_capacity(addrs.len());
+        let info = match ClusterPass::connect_all(addrs, &config, &tx, &mut writers) {
+            Ok(info) => info,
+            Err(e) => {
+                // Workers are single-connection: every stream already
+                // established must be shut down (which also unblocks its
+                // reader thread) or those workers stay wedged on a zombie
+                // connection that no ClusterPass Drop will ever close.
+                for w in &writers {
+                    let _ = w.shutdown(std::net::Shutdown::Both);
+                }
+                return Err(e);
+            }
+        };
+        let (shards, rows, dims_a, dims_b) = info;
+        let mut members = Membership::new(addrs.len());
+        members.assign_round_robin(shards as usize);
+        let mut pass = ClusterPass {
+            writers,
+            rx,
+            members,
+            ledger: Arc::new(ClusterLedger::new(addrs)),
+            rounds_counted: vec![0; addrs.len()],
+            last_seen: vec![Instant::now(); addrs.len()],
+            pinged: vec![false; addrs.len()],
+            shards: shards as usize,
+            rows: rows as usize,
+            dims_a: dims_a as usize,
+            dims_b: dims_b as usize,
+            config,
+            metrics: Arc::new(Metrics::new()),
+            pass_id: 0,
+            passes: 0,
+            traces: None,
+        };
+        for w in 0..pass.writers.len() {
+            let assigned: Vec<u32> = pass.members.assigned(w).iter().map(|&s| s as u32).collect();
+            let msg = Msg::AssignShards {
+                chunk_rows: pass.config.chunk_rows as u32,
+                shards: assigned,
+            };
+            // On failure `pass` drops here, shutting every connection down.
+            transport::send(&mut pass.writers[w], &msg)
+                .map_err(|e| format!("assign shards to worker {w}: {e}"))?;
+        }
+        Ok(pass)
+    }
+
+    /// Dial, handshake, and spawn a reader thread for every worker,
+    /// appending each established write half to `writers` as it goes (so
+    /// a mid-list failure leaves the caller holding every stream that
+    /// needs closing). Returns the validated common store shape.
+    fn connect_all(
+        addrs: &[String],
+        config: &ClusterConfig,
+        tx: &mpsc::Sender<Inbound>,
+        writers: &mut Vec<TcpStream>,
+    ) -> Result<(u64, u64, u64, u64), String> {
+        let mut info: Option<(u64, u64, u64, u64)> = None;
+        for (i, addr) in addrs.iter().enumerate() {
+            let sock = addr
+                .to_socket_addrs()
+                .map_err(|e| format!("worker address '{addr}': {e}"))?
+                .next()
+                .ok_or_else(|| format!("worker address '{addr}' resolves to nothing"))?;
+            let stream = TcpStream::connect_timeout(&sock, config.connect_timeout)
+                .map_err(|e| format!("connect {addr}: {e}"))?;
+            let _ = stream.set_nodelay(true);
+            let read_half = stream
+                .try_clone()
+                .map_err(|e| format!("clone stream for {addr}: {e}"))?;
+            let mut writer = stream;
+            transport::send(&mut writer, &Msg::HelloDriver)
+                .map_err(|e| format!("hello to {addr}: {e}"))?;
+            let mut conn = Conn::new(read_half);
+            let hello = conn
+                .recv(Some(config.connect_timeout))
+                .map_err(|e| format!("handshake with {addr}: {e}"))?;
+            let this = match hello {
+                Msg::HelloWorker {
+                    shards,
+                    rows,
+                    dims_a,
+                    dims_b,
+                } => (shards, rows, dims_a, dims_b),
+                other => {
+                    return Err(format!("worker {addr} answered the handshake with {other:?}"))
+                }
+            };
+            match info {
+                None => info = Some(this),
+                Some(have) if have == this => {}
+                Some(have) => {
+                    return Err(format!(
+                        "worker {addr} serves a different dataset: {this:?} vs {have:?} — every \
+                         worker must point at the same shard directory (or a replica of it)"
+                    ));
+                }
+            }
+            let thread_tx = tx.clone();
+            std::thread::Builder::new()
+                .name(format!("cluster-rx-{i}"))
+                .spawn(move || {
+                    loop {
+                        match conn.recv(None) {
+                            Ok(msg) => {
+                                if thread_tx.send((i, Ok(msg))).is_err() {
+                                    return; // driver gone
+                                }
+                            }
+                            Err(e) => {
+                                let _ = thread_tx.send((i, Err(e)));
+                                return;
+                            }
+                        }
+                    }
+                })
+                .map_err(|e| format!("spawn reader thread: {e}"))?;
+            writers.push(writer);
+        }
+        Ok(info.expect("at least one worker"))
+    }
+
+    /// The shared per-worker ledger (rounds, shards, bytes, deaths).
+    pub fn ledger(&self) -> Arc<ClusterLedger> {
+        Arc::clone(&self.ledger)
+    }
+
+    /// Ledger snapshot as JSON (what `repro fit` renders).
+    pub fn ledger_json(&self) -> Json {
+        self.ledger.to_json()
+    }
+
+    /// Total pass rounds executed so far (== the pass ledger: one pass is
+    /// one network round).
+    pub fn rounds(&self) -> u64 {
+        self.pass_id
+    }
+
+    fn addr(&self, w: usize) -> &str {
+        &self.ledger.workers[w].addr
+    }
+
+    /// Send one RunPass to worker `w` for `shard_list`. A send failure is
+    /// a worker death and triggers redistribution.
+    fn dispatch(
+        &mut self,
+        ctx: &PassCtx<'_>,
+        w: usize,
+        shard_list: Vec<u32>,
+        progress: &mut PassProgress,
+    ) -> anyhow::Result<()> {
+        if shard_list.is_empty() {
+            return Ok(());
+        }
+        // Encoded straight from the borrowed broadcast — no owned Msg
+        // copy of the (da+db)×r panels on the per-worker dispatch path.
+        let frame = super::proto::encode_run_pass(
+            ctx.pass_id,
+            ctx.kind,
+            ctx.r as u32,
+            ctx.qa32,
+            ctx.qb32,
+            &shard_list,
+        );
+        match transport::send_frame(&mut self.writers[w], &frame) {
+            Ok(()) => {
+                if self.rounds_counted[w] != ctx.pass_id {
+                    self.rounds_counted[w] = ctx.pass_id;
+                    self.ledger.workers[w].rounds.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(())
+            }
+            Err(e) => self.on_worker_down(ctx, w, &e, progress),
+        }
+    }
+
+    /// A worker died (connection drop, send failure, or heartbeat
+    /// timeout): redistribute its partition over the survivors and
+    /// re-dispatch whatever it still owed this pass.
+    fn on_worker_down(
+        &mut self,
+        ctx: &PassCtx<'_>,
+        w: usize,
+        reason: &str,
+        progress: &mut PassProgress,
+    ) -> anyhow::Result<()> {
+        if !self.members.is_alive(w) {
+            return Ok(()); // already buried
+        }
+        eprintln!("driver: worker {} is down ({reason}); redistributing", self.addr(w));
+        let orphans = self.members.mark_dead(w);
+        self.ledger.workers[w].dead.store(true, Ordering::Relaxed);
+        self.ledger.workers[w].failures.fetch_add(1, Ordering::Relaxed);
+        self.metrics.add(&self.metrics.tasks_failed, 1);
+        let mut batches: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+        for shard in orphans {
+            let target = self
+                .members
+                .reassign(shard)
+                .ok_or_else(|| anyhow::anyhow!("no live workers remain (last death: {reason})"))?;
+            if !progress.is_done(shard) {
+                anyhow::ensure!(
+                    progress.record_failure(shard).is_some(),
+                    "shard {shard} failed {} times (last: worker {} died: {reason})",
+                    progress.attempts(shard),
+                    self.addr(w)
+                );
+                self.metrics.add(&self.metrics.retries, 1);
+                batches.entry(target).or_default().push(shard as u32);
+            }
+        }
+        for (target, list) in batches {
+            self.dispatch(ctx, target, list, progress)?;
+        }
+        Ok(())
+    }
+
+    /// Ping silent workers; declare the long-silent dead.
+    fn check_liveness(
+        &mut self,
+        ctx: &PassCtx<'_>,
+        progress: &mut PassProgress,
+    ) -> anyhow::Result<()> {
+        let now = Instant::now();
+        for w in self.members.live() {
+            let silent = now.duration_since(self.last_seen[w]);
+            if silent >= self.config.heartbeat_timeout {
+                self.on_worker_down(
+                    ctx,
+                    w,
+                    &format!("heartbeat timeout after {silent:.1?}"),
+                    progress,
+                )?;
+            } else if silent >= self.config.heartbeat_interval && !self.pinged[w] {
+                self.pinged[w] = true;
+                let ping = Msg::Heartbeat { nonce: ctx.pass_id };
+                if let Err(e) = transport::send(&mut self.writers[w], &ping) {
+                    self.on_worker_down(ctx, w, &e, progress)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one full pass: broadcast, collect with liveness tracking and
+    /// retries, reduce deterministically in shard order.
+    fn run_pass(&mut self, kind: PassKind, qa: &Mat, qb: &Mat) -> anyhow::Result<Vec<Mat>> {
+        self.passes += 1;
+        self.pass_id += 1;
+        self.metrics.add(&self.metrics.passes, 1);
+        self.ledger.rounds.fetch_add(1, Ordering::Relaxed);
+        let r = qa.cols;
+        anyhow::ensure!(qb.cols == r, "Qa/Qb column mismatch");
+        let shapes = kind.shapes(self.dims_a, self.dims_b, r);
+        let (qa32, qb32) = match kind {
+            PassKind::Trace => (Vec::new(), Vec::new()),
+            _ => (mat_to_f32(qa), mat_to_f32(qb)),
+        };
+        let ctx = PassCtx {
+            pass_id: self.pass_id,
+            kind,
+            r,
+            qa32: &qa32,
+            qb32: &qb32,
+        };
+        let mut progress = PassProgress::new(self.shards, self.config.max_retries);
+        // Deterministic reduce without full buffering: partials park here
+        // only until the contiguous shard-index prefix reaches them, then
+        // fold into `acc` and free. Peak memory is bounded by the
+        // out-of-order window, not by the shard count, while the reduction
+        // order (and hence the bit pattern) stays exactly shard order.
+        let mut partials: Vec<Option<Vec<Mat>>> = (0..self.shards).map(|_| None).collect();
+        let mut acc = Accumulator::new(&shapes);
+        let mut next_to_reduce = 0usize;
+        anyhow::ensure!(self.members.live_count() > 0, "no live workers");
+        // A pass starts fresh on the liveness clock: staleness from idle
+        // time between passes is not evidence of death.
+        let now = Instant::now();
+        for t in &mut self.last_seen {
+            *t = now;
+        }
+        for p in &mut self.pinged {
+            *p = false;
+        }
+        for w in self.members.live() {
+            if !self.members.is_alive(w) {
+                continue; // died while dispatching an earlier worker
+            }
+            // Fresh read: redistribution during this loop may have grown
+            // this worker's partition (duplicate dispatches are dropped at
+            // the partial stage).
+            let mine: Vec<u32> = self.members.assigned(w).iter().map(|&s| s as u32).collect();
+            self.dispatch(&ctx, w, mine, &mut progress)?;
+        }
+        let poll_tick = self
+            .config
+            .heartbeat_interval
+            .min(Duration::from_millis(100))
+            .max(Duration::from_millis(1));
+        let mut last_liveness = Instant::now();
+        while !progress.all_done() {
+            match self.rx.recv_timeout(poll_tick) {
+                Ok((w, Ok(msg))) => {
+                    self.last_seen[w] = Instant::now();
+                    self.pinged[w] = false;
+                    if !self.members.is_alive(w) {
+                        continue; // zombie: already replaced, drop its traffic
+                    }
+                    match msg {
+                        Msg::Partial {
+                            pass_id,
+                            shard,
+                            mats,
+                        } if pass_id == ctx.pass_id => {
+                            let shard = shard as usize;
+                            anyhow::ensure!(
+                                shard < self.shards,
+                                "worker {} sent a partial for unknown shard {shard}",
+                                self.addr(w)
+                            );
+                            if !progress.complete(shard) {
+                                continue; // duplicate after redistribution
+                            }
+                            anyhow::ensure!(
+                                mats.is_empty() || mats.len() == shapes.len(),
+                                "worker {} sent {} partial matrices, pass wants {}",
+                                self.addr(w),
+                                mats.len(),
+                                shapes.len()
+                            );
+                            for (m, &(rows, cols)) in mats.iter().zip(&shapes) {
+                                anyhow::ensure!(
+                                    (m.rows, m.cols) == (rows, cols),
+                                    "worker {} sent a {}x{} partial, pass wants {rows}x{cols}",
+                                    self.addr(w),
+                                    m.rows,
+                                    m.cols
+                                );
+                            }
+                            let bytes: u64 =
+                                mats.iter().map(|m| (m.data.len() * 8) as u64).sum();
+                            let wl = &self.ledger.workers[w];
+                            wl.shards_completed.fetch_add(1, Ordering::Relaxed);
+                            wl.partial_bytes.fetch_add(bytes, Ordering::Relaxed);
+                            self.metrics.add(&self.metrics.tasks_completed, 1);
+                            partials[shard] = Some(mats);
+                            let t = Timer::start();
+                            while next_to_reduce < self.shards {
+                                match partials[next_to_reduce].take() {
+                                    Some(ready) => {
+                                        if !ready.is_empty() {
+                                            acc.add(&ready);
+                                        }
+                                        next_to_reduce += 1;
+                                    }
+                                    None => break,
+                                }
+                            }
+                            self.metrics.add(
+                                &self.metrics.reduce_nanos,
+                                t.elapsed().as_nanos() as u64,
+                            );
+                        }
+                        Msg::Abort {
+                            pass_id,
+                            shard,
+                            reason,
+                        } if pass_id == ctx.pass_id => {
+                            self.ledger.workers[w].failures.fetch_add(1, Ordering::Relaxed);
+                            self.metrics.add(&self.metrics.tasks_failed, 1);
+                            anyhow::ensure!(
+                                shard != SHARD_NONE,
+                                "worker {} aborted the pass: {reason}",
+                                self.addr(w)
+                            );
+                            let shard = shard as usize;
+                            anyhow::ensure!(
+                                shard < self.shards,
+                                "worker {} aborted unknown shard {shard}",
+                                self.addr(w)
+                            );
+                            if progress.is_done(shard) {
+                                continue; // raced a successful duplicate
+                            }
+                            anyhow::ensure!(
+                                progress.record_failure(shard).is_some(),
+                                "shard {shard} failed {} times (last: {reason})",
+                                progress.attempts(shard)
+                            );
+                            self.metrics.add(&self.metrics.retries, 1);
+                            let target = self
+                                .members
+                                .reassign_excluding(shard, Some(w))
+                                .ok_or_else(|| anyhow::anyhow!("no live workers remain"))?;
+                            self.dispatch(&ctx, target, vec![shard as u32], &mut progress)?;
+                        }
+                        Msg::Heartbeat { .. } => {
+                            self.ledger.workers[w].heartbeats.fetch_add(1, Ordering::Relaxed);
+                        }
+                        // Stale pass traffic (a presumed-slow worker
+                        // catching up) and anything unexpected: drop.
+                        _ => {}
+                    }
+                }
+                Ok((w, Err(e))) => self.on_worker_down(&ctx, w, &e, &mut progress)?,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    self.check_liveness(&ctx, &mut progress)?;
+                    last_liveness = Instant::now();
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("every worker connection is gone")
+                }
+            }
+            // A busy channel must not starve death detection.
+            if last_liveness.elapsed() >= self.config.heartbeat_interval {
+                self.check_liveness(&ctx, &mut progress)?;
+                last_liveness = Instant::now();
+            }
+        }
+        anyhow::ensure!(
+            next_to_reduce == self.shards,
+            "pass completed with {next_to_reduce}/{} shards reduced",
+            self.shards
+        );
+        Ok(acc.finish())
+    }
+}
+
+impl Drop for ClusterPass {
+    fn drop(&mut self) {
+        // Closing both halves returns workers to accept and unblocks the
+        // reader threads (they observe EOF and exit).
+        for w in &self.writers {
+            let _ = w.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+impl PassEngine for ClusterPass {
+    fn dims(&self) -> (usize, usize, usize) {
+        (self.rows, self.dims_a, self.dims_b)
+    }
+
+    fn power_pass(&mut self, qa: &Mat, qb: &Mat) -> (Mat, Mat) {
+        let mut out = self
+            .run_pass(PassKind::Power, qa, qb)
+            .expect("power pass failed");
+        let yb = out.pop().unwrap();
+        let ya = out.pop().unwrap();
+        (ya, yb)
+    }
+
+    fn final_pass(&mut self, qa: &Mat, qb: &Mat) -> (Mat, Mat, Mat) {
+        let mut out = self
+            .run_pass(PassKind::Final, qa, qb)
+            .expect("final pass failed");
+        let f = out.pop().unwrap();
+        let cb = out.pop().unwrap();
+        let ca = out.pop().unwrap();
+        (ca, cb, f)
+    }
+
+    fn gram_traces(&mut self) -> (f64, f64) {
+        if let Some(t) = self.traces {
+            return t;
+        }
+        let q = Mat::zeros(0, 0);
+        let out = self
+            .run_pass(PassKind::Trace, &q, &q)
+            .expect("trace pass failed");
+        let t = (out[0][(0, 0)], out[0][(0, 1)]);
+        self.traces = Some(t);
+        t
+    }
+
+    fn passes(&self) -> usize {
+        self.passes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cca::pass::InMemoryPass;
+    use crate::cluster::worker::{Worker, WorkerConfig};
+    use crate::coordinator::{ShardedPass, ShardedPassConfig};
+    use crate::data::shards::{ShardStore, ShardWriter, TwoViewChunk};
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::runtime::NativeEngine;
+    use crate::util::rng::Rng;
+    use std::net::{SocketAddr, TcpListener};
+    use std::panic::AssertUnwindSafe;
+    use std::path::{Path, PathBuf};
+
+    fn make_shards(tag: &str) -> (PathBuf, TwoViewChunk) {
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 420,
+            dims: 48,
+            topics: 4,
+            words_per_topic: 8,
+            background_words: 16,
+            mean_len: 6.0,
+            seed: 23,
+            ..Default::default()
+        });
+        let dir = PathBuf::from(std::env::temp_dir()).join(format!("rcca_driver_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = ShardWriter::create(&dir, 60).unwrap();
+        w.write_dataset(&d.a, &d.b).unwrap();
+        (dir, TwoViewChunk { a: d.a, b: d.b })
+    }
+
+    /// Spawn an in-thread worker serving `dir` forever; returns its addr.
+    fn spawn_worker(dir: &Path) -> SocketAddr {
+        let mut worker = Worker::bind(dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let addr = worker.local_addr();
+        std::thread::spawn(move || loop {
+            if worker.serve_one().is_err() {
+                return;
+            }
+        });
+        addr
+    }
+
+    /// A worker that completes the handshake, then never speaks again —
+    /// the hung-process case the heartbeat timeout exists for.
+    fn spawn_silent_worker(store: &ShardStore) -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hello = Msg::HelloWorker {
+            shards: store.shards as u64,
+            rows: store.rows as u64,
+            dims_a: store.dims_a as u64,
+            dims_b: store.dims_b as u64,
+        };
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut conn = Conn::new(stream);
+            let _ = conn.recv(Some(Duration::from_secs(30)));
+            let _ = conn.send(&hello);
+            // Swallow everything, answer nothing.
+            loop {
+                if conn.recv(None).is_err() {
+                    return;
+                }
+            }
+        });
+        addr
+    }
+
+    fn test_config() -> ClusterConfig {
+        ClusterConfig {
+            chunk_rows: 60,
+            heartbeat_interval: Duration::from_millis(100),
+            heartbeat_timeout: Duration::from_millis(600),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn matches_in_memory_engine() {
+        let (dir, whole) = make_shards("match");
+        let addrs = vec![
+            spawn_worker(&dir).to_string(),
+            spawn_worker(&dir).to_string(),
+        ];
+        let mut cluster = ClusterPass::connect(&addrs, test_config()).unwrap();
+        let mut inmem = InMemoryPass::new(whole);
+        assert_eq!(cluster.dims(), inmem.dims());
+        let mut rng = Rng::new(1);
+        let qa = Mat::randn(48, 5, &mut rng);
+        let qb = Mat::randn(48, 5, &mut rng);
+        let (ya_c, yb_c) = cluster.power_pass(&qa, &qb);
+        let (ya_m, yb_m) = inmem.power_pass(&qa, &qb);
+        assert!(ya_c.rel_diff(&ya_m) < 1e-5, "{}", ya_c.rel_diff(&ya_m));
+        assert!(yb_c.rel_diff(&yb_m) < 1e-5);
+        let (ca_c, cb_c, f_c) = cluster.final_pass(&qa, &qb);
+        let (ca_m, cb_m, f_m) = inmem.final_pass(&qa, &qb);
+        assert!(ca_c.rel_diff(&ca_m) < 1e-4);
+        assert!(cb_c.rel_diff(&cb_m) < 1e-4);
+        assert!(f_c.rel_diff(&f_m) < 1e-4);
+        assert_eq!(cluster.passes(), 2);
+        assert_eq!(cluster.rounds(), 2);
+        let (ta_c, tb_c) = cluster.gram_traces();
+        let (ta_m, tb_m) = inmem.gram_traces();
+        assert!((ta_c - ta_m).abs() / ta_m < 1e-10);
+        assert!((tb_c - tb_m).abs() / tb_m < 1e-10);
+        assert_eq!(cluster.passes(), 3);
+        // Every worker participated in every round.
+        let ledger = cluster.ledger_json();
+        assert_eq!(ledger.get("rounds").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn bitwise_equal_to_single_worker_sharded_pass() {
+        let (dir, _) = make_shards("bitwise");
+        let addrs = vec![
+            spawn_worker(&dir).to_string(),
+            spawn_worker(&dir).to_string(),
+        ];
+        let mut cluster = ClusterPass::connect(&addrs, test_config()).unwrap();
+        // One pool worker → FIFO completion → shard-order reduce, the same
+        // deterministic order the cluster driver uses.
+        let mut sharded = ShardedPass::new(
+            ShardStore::open(&dir).unwrap(),
+            std::sync::Arc::new(NativeEngine::new()),
+            ShardedPassConfig {
+                workers: 1,
+                chunk_rows: 60,
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::new(2);
+        let qa = Mat::randn(48, 4, &mut rng);
+        let qb = Mat::randn(48, 4, &mut rng);
+        let (ya_c, yb_c) = cluster.power_pass(&qa, &qb);
+        let (ya_s, yb_s) = sharded.power_pass(&qa, &qb);
+        assert_eq!(ya_c, ya_s, "cluster power partials must reduce bit-identically");
+        assert_eq!(yb_c, yb_s);
+        let (ca_c, cb_c, f_c) = cluster.final_pass(&qa, &qb);
+        let (ca_s, cb_s, f_s) = sharded.final_pass(&qa, &qb);
+        assert_eq!(ca_c, ca_s);
+        assert_eq!(cb_c, cb_s);
+        assert_eq!(f_c, f_s);
+        let (ta_c, tb_c) = cluster.gram_traces();
+        let (ta_s, tb_s) = sharded.gram_traces();
+        assert_eq!((ta_c, tb_c), (ta_s, tb_s));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let (dir, _) = make_shards("det");
+        let run = |addrs: &[String]| {
+            let mut cluster = ClusterPass::connect(addrs, test_config()).unwrap();
+            let mut rng = Rng::new(5);
+            let qa = Mat::randn(48, 4, &mut rng);
+            let qb = Mat::randn(48, 4, &mut rng);
+            cluster.power_pass(&qa, &qb).0
+        };
+        let two = vec![
+            spawn_worker(&dir).to_string(),
+            spawn_worker(&dir).to_string(),
+        ];
+        let three = vec![
+            spawn_worker(&dir).to_string(),
+            spawn_worker(&dir).to_string(),
+            spawn_worker(&dir).to_string(),
+        ];
+        // Bitwise identical across runs AND across cluster sizes: the
+        // partials are per-shard and the reduce is shard-ordered.
+        let a = run(&two);
+        let b = run(&two);
+        let c = run(&three);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn silent_worker_is_buried_and_its_shards_recovered() {
+        let (dir, whole) = make_shards("silent");
+        let store = ShardStore::open(&dir).unwrap();
+        let addrs = vec![
+            spawn_worker(&dir).to_string(),
+            spawn_silent_worker(&store).to_string(),
+        ];
+        let mut cluster = ClusterPass::connect(&addrs, test_config()).unwrap();
+        let mut inmem = InMemoryPass::new(whole);
+        let mut rng = Rng::new(7);
+        let qa = Mat::randn(48, 3, &mut rng);
+        let qb = Mat::randn(48, 3, &mut rng);
+        let (ya_c, _) = cluster.power_pass(&qa, &qb);
+        let (ya_m, _) = inmem.power_pass(&qa, &qb);
+        assert!(ya_c.rel_diff(&ya_m) < 1e-5);
+        let ledger = cluster.ledger_json();
+        let workers = ledger.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers[1].get("dead").unwrap().as_bool(), Some(true));
+        assert_eq!(workers[0].get("dead").unwrap().as_bool(), Some(false));
+        // The survivor absorbed the whole dataset; the next pass still works.
+        let (ya2, _) = cluster.power_pass(&qa, &qb);
+        assert_eq!(ya2, ya_c);
+    }
+
+    #[test]
+    fn aborts_when_no_workers_survive() {
+        let (dir, _) = make_shards("alldead");
+        let store = ShardStore::open(&dir).unwrap();
+        let addrs = vec![spawn_silent_worker(&store).to_string()];
+        let mut cfg = test_config();
+        cfg.heartbeat_timeout = Duration::from_millis(300);
+        let mut cluster = ClusterPass::connect(&addrs, cfg).unwrap();
+        let mut rng = Rng::new(8);
+        let qa = Mat::randn(48, 3, &mut rng);
+        let qb = Mat::randn(48, 3, &mut rng);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| cluster.power_pass(&qa, &qb)));
+        assert!(res.is_err(), "pass must abort with no live workers");
+    }
+
+    #[test]
+    fn connect_rejects_mismatched_stores() {
+        let (dir_a, _) = make_shards("mismatch_a");
+        // A different dataset shape.
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 200,
+            dims: 32,
+            topics: 4,
+            words_per_topic: 8,
+            background_words: 12,
+            mean_len: 6.0,
+            seed: 3,
+            ..Default::default()
+        });
+        let dir_b = PathBuf::from(std::env::temp_dir()).join("rcca_driver_mismatch_b");
+        let _ = std::fs::remove_dir_all(&dir_b);
+        let mut w = ShardWriter::create(&dir_b, 50).unwrap();
+        w.write_dataset(&d.a, &d.b).unwrap();
+        let addrs = vec![
+            spawn_worker(&dir_a).to_string(),
+            spawn_worker(&dir_b).to_string(),
+        ];
+        let err = ClusterPass::connect(&addrs, test_config()).unwrap_err();
+        assert!(err.contains("different dataset"), "{err}");
+    }
+
+    #[test]
+    fn connect_rejects_empty_and_unreachable() {
+        assert!(ClusterPass::connect(&[], test_config()).is_err());
+        let mut cfg = test_config();
+        cfg.connect_timeout = Duration::from_millis(300);
+        let err =
+            ClusterPass::connect(&["127.0.0.1:1".to_string()], cfg).unwrap_err();
+        assert!(err.contains("connect"), "{err}");
+    }
+}

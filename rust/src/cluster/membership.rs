@@ -1,0 +1,241 @@
+//! Driver-side cluster membership: which workers exist, which are alive,
+//! which shards each one owns, and the per-worker pass ledger.
+//!
+//! The ledger is the cluster's observability surface — the paper's claims
+//! are *round*-count claims, so the driver records, per worker, how many
+//! pass rounds it participated in, how many shard partials it produced,
+//! and whether it died. It is `Arc`-shared with [`crate::api::Engine`] so
+//! callers can render it after a fit without reaching into the driver.
+
+use crate::util::json::{jarr, jnum, jstr, Json};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Per-worker counters (atomics: the driver writes, any holder reads).
+#[derive(Debug, Default)]
+pub struct WorkerLedger {
+    pub addr: String,
+    /// Distinct pass rounds this worker received work for.
+    pub rounds: AtomicU64,
+    /// Shard partials accepted by the driver from this worker.
+    pub shards_completed: AtomicU64,
+    /// Bytes of partial payloads accepted from this worker.
+    pub partial_bytes: AtomicU64,
+    /// Heartbeat echoes observed.
+    pub heartbeats: AtomicU64,
+    /// Shard-task failures reported by (or charged to) this worker.
+    pub failures: AtomicU64,
+    pub dead: AtomicBool,
+}
+
+/// The cluster-wide ledger: one entry per registered worker.
+#[derive(Debug, Default)]
+pub struct ClusterLedger {
+    pub workers: Vec<WorkerLedger>,
+    /// Total pass rounds the driver has executed.
+    pub rounds: AtomicU64,
+}
+
+impl ClusterLedger {
+    pub fn new(addrs: &[String]) -> ClusterLedger {
+        ClusterLedger {
+            workers: addrs
+                .iter()
+                .map(|a| WorkerLedger {
+                    addr: a.clone(),
+                    ..Default::default()
+                })
+                .collect(),
+            rounds: AtomicU64::new(0),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let g = |c: &AtomicU64| jnum(c.load(Ordering::Relaxed) as f64);
+        let mut workers = Vec::new();
+        for w in &self.workers {
+            let mut o = Json::obj();
+            o.set("addr", jstr(&w.addr))
+                .set("rounds", g(&w.rounds))
+                .set("shards_completed", g(&w.shards_completed))
+                .set("partial_bytes", g(&w.partial_bytes))
+                .set("heartbeats", g(&w.heartbeats))
+                .set("failures", g(&w.failures))
+                .set("dead", Json::Bool(w.dead.load(Ordering::Relaxed)));
+            workers.push(o);
+        }
+        let mut o = Json::obj();
+        o.set("rounds", g(&self.rounds)).set("workers", jarr(workers));
+        o
+    }
+}
+
+/// Liveness + shard-partition state for the registered workers. One pass
+/// = one round against the *live* members; dead workers never come back
+/// (a restarted worker is a new registration in a new driver).
+pub struct Membership {
+    alive: Vec<bool>,
+    /// Current shard partition: `assigned[w]` are the shards worker `w`
+    /// is expected to compute each round.
+    assigned: Vec<Vec<usize>>,
+    /// Round-robin cursor for reassignment targets.
+    cursor: usize,
+}
+
+impl Membership {
+    pub fn new(workers: usize) -> Membership {
+        Membership {
+            alive: vec![true; workers],
+            assigned: vec![Vec::new(); workers],
+            cursor: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.alive.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.alive.is_empty()
+    }
+
+    pub fn is_alive(&self, w: usize) -> bool {
+        self.alive[w]
+    }
+
+    pub fn live(&self) -> Vec<usize> {
+        (0..self.alive.len()).filter(|&w| self.alive[w]).collect()
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    pub fn assigned(&self, w: usize) -> &[usize] {
+        &self.assigned[w]
+    }
+
+    /// Initial partition: shard `s` goes to worker `s % n` — interleaved,
+    /// so every worker touches the whole row range (good load balance for
+    /// row-correlated density).
+    pub fn assign_round_robin(&mut self, shards: usize) {
+        let n = self.alive.len().max(1);
+        for a in &mut self.assigned {
+            a.clear();
+        }
+        for s in 0..shards {
+            self.assigned[s % n].push(s);
+        }
+    }
+
+    /// Mark a worker dead and orphan its shards. Returns the shards that
+    /// now need a new home.
+    pub fn mark_dead(&mut self, w: usize) -> Vec<usize> {
+        self.alive[w] = false;
+        std::mem::take(&mut self.assigned[w])
+    }
+
+    /// Give `shard` to a live worker (round-robin over the survivors),
+    /// both for the current round and all subsequent ones. `None` when no
+    /// live workers remain.
+    pub fn reassign(&mut self, shard: usize) -> Option<usize> {
+        self.reassign_excluding(shard, None)
+    }
+
+    /// Like [`Membership::reassign`], but prefer a worker other than
+    /// `exclude` (the one just observed failing on this shard). Falls back
+    /// to `exclude` itself when it is the only survivor — a retry there
+    /// still burns budget, so a persistent failure cannot loop forever.
+    pub fn reassign_excluding(&mut self, shard: usize, exclude: Option<usize>) -> Option<usize> {
+        // The shard gets exactly one owner: drop any existing claim first.
+        for a in &mut self.assigned {
+            a.retain(|&s| s != shard);
+        }
+        let n = self.alive.len();
+        for step in 0..n {
+            let w = (self.cursor + step) % n;
+            if self.alive[w] && Some(w) != exclude {
+                self.cursor = (w + 1) % n;
+                self.assigned[w].push(shard);
+                return Some(w);
+            }
+        }
+        if let Some(e) = exclude {
+            if self.alive[e] {
+                self.assigned[e].push(shard);
+                return Some(e);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_partitions_all_shards() {
+        let mut m = Membership::new(3);
+        m.assign_round_robin(7);
+        assert_eq!(m.assigned(0), &[0, 3, 6]);
+        assert_eq!(m.assigned(1), &[1, 4]);
+        assert_eq!(m.assigned(2), &[2, 5]);
+        let total: usize = (0..3).map(|w| m.assigned(w).len()).sum();
+        assert_eq!(total, 7);
+    }
+
+    #[test]
+    fn death_orphans_and_reassigns() {
+        let mut m = Membership::new(2);
+        m.assign_round_robin(4);
+        let orphans = m.mark_dead(0);
+        assert_eq!(orphans, vec![0, 2]);
+        assert!(!m.is_alive(0));
+        assert_eq!(m.live(), vec![1]);
+        for s in orphans {
+            assert_eq!(m.reassign(s), Some(1));
+        }
+        assert_eq!(m.assigned(1), &[1, 3, 0, 2]);
+        // Everyone dead → no home.
+        m.mark_dead(1);
+        assert_eq!(m.reassign(0), None);
+        assert_eq!(m.live_count(), 0);
+    }
+
+    #[test]
+    fn reassign_keeps_single_ownership() {
+        let mut m = Membership::new(1);
+        m.assign_round_robin(2);
+        assert_eq!(m.reassign(1), Some(0));
+        assert_eq!(m.assigned(0), &[0, 1]);
+    }
+
+    #[test]
+    fn exclusion_prefers_other_workers_but_falls_back() {
+        let mut m = Membership::new(2);
+        m.assign_round_robin(2);
+        // Shard 0 failed on worker 0 → moves to worker 1.
+        assert_eq!(m.reassign_excluding(0, Some(0)), Some(1));
+        assert_eq!(m.assigned(0), &[] as &[usize]);
+        assert_eq!(m.assigned(1), &[1, 0]);
+        // Worker 1 dies; shard 1 failing on worker 0 has nowhere else.
+        m.mark_dead(1);
+        assert_eq!(m.reassign_excluding(1, Some(0)), Some(0));
+    }
+
+    #[test]
+    fn ledger_serializes() {
+        let ledger = ClusterLedger::new(&["a:1".to_string(), "b:2".to_string()]);
+        ledger.workers[0].rounds.fetch_add(2, Ordering::Relaxed);
+        ledger.workers[1].dead.store(true, Ordering::Relaxed);
+        ledger.rounds.fetch_add(2, Ordering::Relaxed);
+        let j = ledger.to_json();
+        assert_eq!(j.get("rounds").unwrap().as_usize(), Some(2));
+        let Some(Json::Arr(ws)) = j.get("workers") else {
+            panic!("workers array missing");
+        };
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].get("rounds").unwrap().as_usize(), Some(2));
+        assert_eq!(ws[1].get("dead").unwrap().as_bool(), Some(true));
+    }
+}

@@ -1,0 +1,58 @@
+//! # `rcca::cluster` — multi-process distributed fitting over TCP.
+//!
+//! The paper targets CCA over "large datasets stored either out of core or
+//! on a distributed file system", processed by frameworks "in which
+//! iteration is expensive (e.g., Hadoop)" — the whole point of the
+//! two-pass algorithm is to spend as few *network rounds* as possible. The
+//! in-process coordinator ([`crate::coordinator`]) only simulates that
+//! topology with a thread pool; this subsystem makes it real:
+//!
+//! * a **worker** process (`repro worker --listen <addr> --shards <dir>`)
+//!   serves pass tasks over its CRC-validated local [`crate::data::shards`]
+//!   store, computing per-shard partials with the *same*
+//!   [`crate::coordinator::ShardTaskRunner`] the thread-pool coordinator
+//!   uses (prepared-shard cache, chunk mirrors, reusable workspaces);
+//! * a **driver** ([`ClusterPass`], `repro fit --cluster a:p,b:p`)
+//!   registers workers, partitions shards, broadcasts one
+//!   [`proto::Msg::RunPass`] per pass, reduces streamed partials with the
+//!   commutative [`crate::coordinator::Accumulator`], and survives worker
+//!   death mid-pass by redistributing the dead worker's partition over the
+//!   survivors (heartbeat timeout → re-queue with exclusion, mirroring the
+//!   coordinator's retry semantics);
+//! * the **wire protocol** ([`proto`]) is a versioned, CRC-framed binary
+//!   format in the same defensive style as the shard files — corrupted or
+//!   truncated frames are typed errors, never panics.
+//!
+//! [`ClusterPass`] implements [`crate::cca::PassEngine`], so RandomizedCCA
+//! and Horst run on a cluster unchanged, and the pass ledger keeps its
+//! meaning: **one pass = one network round**, which is how the two-round
+//! fit claim is demonstrated end-to-end across processes (see the
+//! per-worker [`ClusterLedger`]). Reduction is ordered by shard index, so
+//! a cluster fit is bit-for-bit reproducible regardless of worker count,
+//! scheduling, or crash history.
+//!
+//! Everything is `std`-only, like [`crate::serve`]: no tokio, no serde.
+
+pub mod driver;
+pub mod membership;
+pub mod proto;
+pub mod transport;
+pub mod worker;
+
+pub use driver::{ClusterConfig, ClusterPass};
+pub use membership::{ClusterLedger, Membership, WorkerLedger};
+pub use proto::Msg;
+pub use transport::Conn;
+pub use worker::{Worker, WorkerConfig};
+
+/// Parse a comma-separated worker address list (`host:port,host:port`) —
+/// the one grammar shared by `repro fit --cluster` and the
+/// `cluster:` engine spec. Empty entries are dropped; emptiness overall
+/// is rejected by [`ClusterPass::connect`].
+pub fn parse_addrs(list: &str) -> Vec<String> {
+    list.split(',')
+        .map(str::trim)
+        .filter(|a| !a.is_empty())
+        .map(str::to_string)
+        .collect()
+}

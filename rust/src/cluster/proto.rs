@@ -1,0 +1,548 @@
+//! The cluster wire protocol: versioned, CRC-framed, length-prefixed
+//! binary messages (little-endian), in the same defensive style as the
+//! shard file format ([`crate::data::shards`]): a corrupted or truncated
+//! frame is a typed error, never a panic or a silent mis-parse.
+//!
+//! Frame layout:
+//!
+//! ```text
+//! magic   "RCLP"        4 bytes
+//! version u16           (currently 1)
+//! type    u8            message tag
+//! len     u32           body length in bytes
+//! body    len bytes     message-specific payload
+//! crc32   u32           over everything after the magic (version..body)
+//! ```
+//!
+//! Message flow: the driver opens with [`Msg::HelloDriver`]; the worker
+//! answers [`Msg::HelloWorker`] describing the shard store it serves. The
+//! driver partitions shards with [`Msg::AssignShards`], then each pass is
+//! exactly one round: a [`Msg::RunPass`] broadcast out, a stream of
+//! [`Msg::Partial`]s back (one per shard; a failed shard yields
+//! [`Msg::Abort`] instead). [`Msg::Heartbeat`] is echoed for liveness in
+//! both directions.
+
+use crate::coordinator::PassKind;
+use crate::data::shards::crc32;
+use crate::linalg::Mat;
+
+pub const MAGIC: &[u8; 4] = b"RCLP";
+pub const PROTO_VERSION: u16 = 1;
+/// magic + version + type + len.
+pub const HEADER_BYTES: usize = 4 + 2 + 1 + 4;
+/// Hard cap on one frame's body — a corrupted length prefix must not make
+/// a peer try to buffer gigabytes. Partials are d×r f64 matrices; 1 GiB
+/// bounds d·r at ~128M entries, far above any supported configuration.
+pub const MAX_BODY_BYTES: usize = 1 << 30;
+/// `shard` value in [`Msg::Abort`] meaning "the whole pass", not one shard.
+pub const SHARD_NONE: u32 = u32::MAX;
+
+const TAG_HELLO_DRIVER: u8 = 1;
+const TAG_HELLO_WORKER: u8 = 2;
+const TAG_ASSIGN: u8 = 3;
+const TAG_RUN_PASS: u8 = 4;
+const TAG_PARTIAL: u8 = 5;
+const TAG_HEARTBEAT: u8 = 6;
+const TAG_ABORT: u8 = 7;
+
+/// One protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Driver → worker greeting (the protocol version rides in the frame
+    /// header, so incompatible peers fail before any payload parsing).
+    HelloDriver,
+    /// Worker → driver reply: the shard store this worker serves. The
+    /// driver validates every worker reports the same dataset.
+    HelloWorker {
+        shards: u64,
+        rows: u64,
+        dims_a: u64,
+        dims_b: u64,
+    },
+    /// Driver → worker: the worker's shard partition for subsequent
+    /// passes, plus the chunking the engine must use (chunking changes the
+    /// f32 accumulation grouping, so it must match across the cluster for
+    /// reproducible partials).
+    AssignShards { chunk_rows: u32, shards: Vec<u32> },
+    /// Driver → worker: run one pass over `shards` (normally the standing
+    /// assignment; a recovery re-dispatch lists reassigned shards). `qa32`
+    /// / `qb32` are the row-major (da×r)/(db×r) f32 broadcasts; empty for
+    /// trace passes.
+    RunPass {
+        pass_id: u64,
+        kind: PassKind,
+        r: u32,
+        qa32: Vec<f32>,
+        qb32: Vec<f32>,
+        shards: Vec<u32>,
+    },
+    /// Worker → driver: one shard's partial results (f64, exactly what the
+    /// in-process shard task would have produced).
+    Partial {
+        pass_id: u64,
+        shard: u32,
+        mats: Vec<Mat>,
+    },
+    /// Liveness ping; the receiver echoes the nonce back.
+    Heartbeat { nonce: u64 },
+    /// A shard task (or, with [`SHARD_NONE`], a whole pass) failed.
+    Abort {
+        pass_id: u64,
+        shard: u32,
+        reason: String,
+    },
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::HelloDriver => TAG_HELLO_DRIVER,
+            Msg::HelloWorker { .. } => TAG_HELLO_WORKER,
+            Msg::AssignShards { .. } => TAG_ASSIGN,
+            Msg::RunPass { .. } => TAG_RUN_PASS,
+            Msg::Partial { .. } => TAG_PARTIAL,
+            Msg::Heartbeat { .. } => TAG_HEARTBEAT,
+            Msg::Abort { .. } => TAG_ABORT,
+        }
+    }
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32s(buf: &mut Vec<u8>, vals: &[f32]) {
+    push_u64(buf, vals.len() as u64);
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn push_u32s(buf: &mut Vec<u8>, vals: &[u32]) {
+    push_u32(buf, vals.len() as u32);
+    for &v in vals {
+        push_u32(buf, v);
+    }
+}
+
+fn push_mat(buf: &mut Vec<u8>, m: &Mat) {
+    push_u32(buf, m.rows as u32);
+    push_u32(buf, m.cols as u32);
+    for v in &m.data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.data.len() {
+            return Err(format!("frame body truncated at byte {}", self.pos));
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.u64()? as usize;
+        if n > MAX_BODY_BYTES / 4 {
+            return Err(format!("f32 array of {n} entries exceeds frame cap"));
+        }
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn u32s(&mut self) -> Result<Vec<u32>, String> {
+        let n = self.u32()? as usize;
+        if n > MAX_BODY_BYTES / 4 {
+            return Err(format!("u32 array of {n} entries exceeds frame cap"));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+    fn mat(&mut self) -> Result<Mat, String> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or_else(|| "matrix dims overflow".to_string())?;
+        if n > MAX_BODY_BYTES / 8 {
+            return Err(format!("{rows}x{cols} matrix exceeds frame cap"));
+        }
+        let bytes = self.take(n * 8)?;
+        let data: Vec<f64> = bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+    fn string(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "string is not valid UTF-8".to_string())
+    }
+    fn done(&self) -> Result<(), String> {
+        if self.pos != self.data.len() {
+            return Err(format!(
+                "trailing bytes in frame body ({} of {} consumed)",
+                self.pos,
+                self.data.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn encode_body(msg: &Msg) -> Vec<u8> {
+    let mut b = Vec::new();
+    match msg {
+        Msg::HelloDriver => {}
+        Msg::HelloWorker {
+            shards,
+            rows,
+            dims_a,
+            dims_b,
+        } => {
+            push_u64(&mut b, *shards);
+            push_u64(&mut b, *rows);
+            push_u64(&mut b, *dims_a);
+            push_u64(&mut b, *dims_b);
+        }
+        Msg::AssignShards { chunk_rows, shards } => {
+            push_u32(&mut b, *chunk_rows);
+            push_u32s(&mut b, shards);
+        }
+        Msg::RunPass {
+            pass_id,
+            kind,
+            r,
+            qa32,
+            qb32,
+            shards,
+        } => {
+            push_u64(&mut b, *pass_id);
+            b.push(kind.tag());
+            push_u32(&mut b, *r);
+            push_f32s(&mut b, qa32);
+            push_f32s(&mut b, qb32);
+            push_u32s(&mut b, shards);
+        }
+        Msg::Partial {
+            pass_id,
+            shard,
+            mats,
+        } => {
+            push_u64(&mut b, *pass_id);
+            push_u32(&mut b, *shard);
+            b.push(mats.len() as u8);
+            for m in mats {
+                push_mat(&mut b, m);
+            }
+        }
+        Msg::Heartbeat { nonce } => push_u64(&mut b, *nonce),
+        Msg::Abort {
+            pass_id,
+            shard,
+            reason,
+        } => {
+            push_u64(&mut b, *pass_id);
+            push_u32(&mut b, *shard);
+            let bytes = reason.as_bytes();
+            push_u32(&mut b, bytes.len() as u32);
+            b.extend_from_slice(bytes);
+        }
+    }
+    b
+}
+
+fn decode_body(tag: u8, body: &[u8]) -> Result<Msg, String> {
+    let mut cur = Cursor { data: body, pos: 0 };
+    let msg = match tag {
+        TAG_HELLO_DRIVER => Msg::HelloDriver,
+        TAG_HELLO_WORKER => Msg::HelloWorker {
+            shards: cur.u64()?,
+            rows: cur.u64()?,
+            dims_a: cur.u64()?,
+            dims_b: cur.u64()?,
+        },
+        TAG_ASSIGN => Msg::AssignShards {
+            chunk_rows: cur.u32()?,
+            shards: cur.u32s()?,
+        },
+        TAG_RUN_PASS => {
+            let pass_id = cur.u64()?;
+            let kind_tag = cur.u8()?;
+            let kind = PassKind::from_tag(kind_tag)
+                .ok_or_else(|| format!("unknown pass kind tag {kind_tag}"))?;
+            Msg::RunPass {
+                pass_id,
+                kind,
+                r: cur.u32()?,
+                qa32: cur.f32s()?,
+                qb32: cur.f32s()?,
+                shards: cur.u32s()?,
+            }
+        }
+        TAG_PARTIAL => {
+            let pass_id = cur.u64()?;
+            let shard = cur.u32()?;
+            let nmats = cur.u8()? as usize;
+            let mut mats = Vec::with_capacity(nmats);
+            for _ in 0..nmats {
+                mats.push(cur.mat()?);
+            }
+            Msg::Partial {
+                pass_id,
+                shard,
+                mats,
+            }
+        }
+        TAG_HEARTBEAT => Msg::Heartbeat { nonce: cur.u64()? },
+        TAG_ABORT => Msg::Abort {
+            pass_id: cur.u64()?,
+            shard: cur.u32()?,
+            reason: cur.string()?,
+        },
+        other => return Err(format!("unknown message tag {other}")),
+    };
+    cur.done()?;
+    Ok(msg)
+}
+
+/// Wrap an encoded body into a complete frame (magic + version + tag +
+/// length + body + crc).
+fn finish_frame(tag: u8, body: Vec<u8>) -> Vec<u8> {
+    assert!(body.len() <= MAX_BODY_BYTES, "frame body exceeds protocol cap");
+    let mut covered = Vec::with_capacity(7 + body.len());
+    covered.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+    covered.push(tag);
+    covered.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    covered.extend_from_slice(&body);
+    let crc = crc32(&covered);
+    let mut out = Vec::with_capacity(4 + covered.len() + 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&covered);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Serialize one message as a complete frame.
+pub fn encode_frame(msg: &Msg) -> Vec<u8> {
+    finish_frame(msg.tag(), encode_body(msg))
+}
+
+/// Encode a [`Msg::RunPass`] frame directly from borrowed parts — the
+/// driver's per-worker broadcast path, which would otherwise copy the
+/// (da+db)×r f32 panels into an owned `Msg` just to serialize them
+/// microseconds later.
+pub fn encode_run_pass(
+    pass_id: u64,
+    kind: PassKind,
+    r: u32,
+    qa32: &[f32],
+    qb32: &[f32],
+    shards: &[u32],
+) -> Vec<u8> {
+    let mut b = Vec::new();
+    push_u64(&mut b, pass_id);
+    b.push(kind.tag());
+    push_u32(&mut b, r);
+    push_f32s(&mut b, qa32);
+    push_f32s(&mut b, qb32);
+    push_u32s(&mut b, shards);
+    finish_frame(TAG_RUN_PASS, b)
+}
+
+/// Validate a frame header and return the frame's total length (header +
+/// body + crc). Rejects bad magic, version skew, and oversized bodies —
+/// the caller must treat any error as a fatal stream desync.
+pub fn frame_total_len(header: &[u8]) -> Result<usize, String> {
+    assert!(header.len() >= HEADER_BYTES);
+    if &header[..4] != MAGIC {
+        return Err("bad frame magic (peer is not speaking rcca-cluster)".to_string());
+    }
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    if version != PROTO_VERSION {
+        return Err(format!(
+            "protocol version mismatch: peer speaks v{version}, this build speaks v{PROTO_VERSION}"
+        ));
+    }
+    let len = u32::from_le_bytes(header[7..11].try_into().unwrap()) as usize;
+    if len > MAX_BODY_BYTES {
+        return Err(format!("frame body of {len} bytes exceeds cap {MAX_BODY_BYTES}"));
+    }
+    Ok(HEADER_BYTES + len + 4)
+}
+
+/// Deserialize and validate one complete frame (as sized by
+/// [`frame_total_len`]).
+pub fn decode_frame(frame: &[u8]) -> Result<Msg, String> {
+    if frame.len() < HEADER_BYTES + 4 {
+        return Err("frame shorter than header".to_string());
+    }
+    let total = frame_total_len(&frame[..HEADER_BYTES])?;
+    if frame.len() != total {
+        return Err(format!(
+            "frame length mismatch: have {} bytes, header says {total}",
+            frame.len()
+        ));
+    }
+    let covered = &frame[4..total - 4];
+    let stored_crc = u32::from_le_bytes(frame[total - 4..].try_into().unwrap());
+    let crc = crc32(covered);
+    if crc != stored_crc {
+        return Err(format!(
+            "frame crc mismatch: stored {stored_crc:08x} computed {crc:08x}"
+        ));
+    }
+    let tag = frame[6];
+    decode_body(tag, &frame[HEADER_BYTES..total - 4])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn samples() -> Vec<Msg> {
+        let mut rng = Rng::new(5);
+        vec![
+            Msg::HelloDriver,
+            Msg::HelloWorker {
+                shards: 7,
+                rows: 4096,
+                dims_a: 512,
+                dims_b: 256,
+            },
+            Msg::AssignShards {
+                chunk_rows: 256,
+                shards: vec![0, 2, 4],
+            },
+            Msg::RunPass {
+                pass_id: 3,
+                kind: PassKind::Power,
+                r: 2,
+                qa32: vec![1.5, -2.0, 0.25, 3.0],
+                qb32: vec![0.5; 6],
+                shards: vec![1, 3],
+            },
+            Msg::RunPass {
+                pass_id: 4,
+                kind: PassKind::Trace,
+                r: 0,
+                qa32: vec![],
+                qb32: vec![],
+                shards: vec![0],
+            },
+            Msg::Partial {
+                pass_id: 3,
+                shard: 1,
+                mats: vec![Mat::randn(3, 2, &mut rng), Mat::zeros(2, 2)],
+            },
+            Msg::Partial {
+                pass_id: 9,
+                shard: 0,
+                mats: vec![],
+            },
+            Msg::Heartbeat { nonce: 0xfeed },
+            Msg::Abort {
+                pass_id: 3,
+                shard: SHARD_NONE,
+                reason: "shard 3: crc mismatch".to_string(),
+            },
+        ]
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        for msg in samples() {
+            let frame = encode_frame(&msg);
+            assert_eq!(frame_total_len(&frame[..HEADER_BYTES]).unwrap(), frame.len());
+            let back = decode_frame(&frame).unwrap();
+            assert_eq!(msg, back);
+        }
+    }
+
+    #[test]
+    fn borrowed_run_pass_encode_matches_owned() {
+        let (qa, qb, shards) = (vec![1.0f32, -2.5], vec![0.5f32; 4], vec![3u32, 9]);
+        let owned = encode_frame(&Msg::RunPass {
+            pass_id: 12,
+            kind: PassKind::Final,
+            r: 2,
+            qa32: qa.clone(),
+            qb32: qb.clone(),
+            shards: shards.clone(),
+        });
+        let borrowed = encode_run_pass(12, PassKind::Final, 2, &qa, &qb, &shards);
+        assert_eq!(owned, borrowed);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        for msg in samples() {
+            let clean = encode_frame(&msg);
+            // Flip every byte position after the header in turn: the CRC
+            // (or a structural check) must catch each one.
+            for pos in [HEADER_BYTES, clean.len() / 2, clean.len() - 1] {
+                if pos >= clean.len() {
+                    continue;
+                }
+                let mut bytes = clean.clone();
+                bytes[pos] ^= 0x40;
+                assert!(decode_frame(&bytes).is_err(), "{msg:?} byte {pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let frame = encode_frame(&Msg::Heartbeat { nonce: 1 });
+        for cut in 0..frame.len() {
+            assert!(decode_frame(&frame[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn version_skew_is_rejected_at_the_header() {
+        let mut frame = encode_frame(&Msg::HelloDriver);
+        frame[4] = 0x63; // version 99
+        let err = frame_total_len(&frame[..HEADER_BYTES]).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut frame = encode_frame(&Msg::HelloDriver);
+        frame[0] = b'X';
+        assert!(frame_total_len(&frame[..HEADER_BYTES]).unwrap_err().contains("magic"));
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected() {
+        let mut frame = encode_frame(&Msg::HelloDriver);
+        frame[7..11].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(frame_total_len(&frame[..HEADER_BYTES]).unwrap_err().contains("cap"));
+    }
+}

@@ -1,0 +1,204 @@
+//! Framed TCP transport for the cluster protocol.
+//!
+//! [`Conn`] wraps a `TcpStream` with an internal receive buffer so that a
+//! read timeout mid-frame never desyncs the stream: partially received
+//! bytes are retained and the next poll resumes where the last one
+//! stopped. This is what lets the worker *poll* for control traffic
+//! (heartbeats, aborts) between shard computations, and the driver bound
+//! how long it blocks waiting for partials, over the same connection.
+
+use super::proto::{self, Msg};
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Write one message to a stream (blocking until fully written).
+pub fn send(stream: &mut TcpStream, msg: &Msg) -> Result<(), String> {
+    send_frame(stream, &proto::encode_frame(msg))
+}
+
+/// Write an already-encoded frame (e.g. from [`proto::encode_run_pass`],
+/// which avoids copying large broadcasts into an owned [`Msg`]).
+pub fn send_frame(stream: &mut TcpStream, frame: &[u8]) -> Result<(), String> {
+    stream
+        .write_all(frame)
+        .and_then(|()| stream.flush())
+        .map_err(|e| format!("send: {e}"))
+}
+
+/// One side of a cluster connection: a stream plus the partial-frame
+/// receive buffer. Sending and receiving may be split across threads by
+/// `try_clone`ing the stream and keeping the `Conn` (the buffered state)
+/// on the receiving side only.
+pub struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            buf: Vec::new(),
+        }
+    }
+
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    /// Send on this connection's stream.
+    pub fn send(&mut self, msg: &Msg) -> Result<(), String> {
+        send(&mut self.stream, msg)
+    }
+
+    /// If the buffer already holds a complete frame, decode and consume
+    /// it. `Err` on header corruption (fatal desync).
+    fn take_buffered(&mut self) -> Result<Option<Msg>, String> {
+        if self.buf.len() < proto::HEADER_BYTES {
+            return Ok(None);
+        }
+        let total = proto::frame_total_len(&self.buf[..proto::HEADER_BYTES])?;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        let msg = proto::decode_frame(&self.buf[..total])?;
+        self.buf.drain(..total);
+        Ok(Some(msg))
+    }
+
+    /// Wait up to `wait` for a complete frame. `Ok(None)` on timeout —
+    /// any partial bytes stay buffered for the next call. `Err` on peer
+    /// close, transport failure, or protocol corruption (all fatal for
+    /// the connection).
+    pub fn poll(&mut self, wait: Duration) -> Result<Option<Msg>, String> {
+        if let Some(msg) = self.take_buffered()? {
+            return Ok(Some(msg));
+        }
+        let deadline = Instant::now() + wait;
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Ok(None);
+            }
+            // set_read_timeout(0) is an invalid argument; clamp up.
+            self.stream
+                .set_read_timeout(Some(remaining.max(Duration::from_millis(1))))
+                .map_err(|e| format!("set_read_timeout: {e}"))?;
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err("peer closed the connection".to_string()),
+                Ok(n) => {
+                    self.buf.extend_from_slice(&chunk[..n]);
+                    if let Some(msg) = self.take_buffered()? {
+                        return Ok(Some(msg));
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    return Ok(None);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(format!("recv: {e}")),
+            }
+        }
+    }
+
+    /// Block until a frame arrives. `timeout` of `None` waits until the
+    /// peer sends or closes.
+    pub fn recv(&mut self, timeout: Option<Duration>) -> Result<Msg, String> {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        loop {
+            let wait = match deadline {
+                None => Duration::from_secs(3600),
+                Some(d) => {
+                    let left = d.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        return Err("timed out waiting for a message".to_string());
+                    }
+                    left
+                }
+            };
+            if let Some(msg) = self.poll(wait)? {
+                return Ok(msg);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let (mut tx, rx) = pair();
+        let mut conn = Conn::new(rx);
+        send(&mut tx, &Msg::Heartbeat { nonce: 42 }).unwrap();
+        send(&mut tx, &Msg::HelloDriver).unwrap();
+        assert_eq!(
+            conn.recv(Some(Duration::from_secs(5))).unwrap(),
+            Msg::Heartbeat { nonce: 42 }
+        );
+        assert_eq!(
+            conn.recv(Some(Duration::from_secs(5))).unwrap(),
+            Msg::HelloDriver
+        );
+    }
+
+    #[test]
+    fn poll_times_out_then_resumes_mid_frame() {
+        let (mut tx, rx) = pair();
+        let mut conn = Conn::new(rx);
+        let frame = proto::encode_frame(&Msg::Heartbeat { nonce: 7 });
+        // First half of the frame, then a poll that must time out without
+        // losing the buffered prefix.
+        let mid = frame.len() / 2;
+        tx.write_all(&frame[..mid]).unwrap();
+        tx.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(conn.poll(Duration::from_millis(30)).unwrap(), None);
+        // Second half completes the frame.
+        tx.write_all(&frame[mid..]).unwrap();
+        tx.flush().unwrap();
+        assert_eq!(
+            conn.recv(Some(Duration::from_secs(5))).unwrap(),
+            Msg::Heartbeat { nonce: 7 }
+        );
+    }
+
+    #[test]
+    fn peer_close_is_an_error() {
+        let (tx, rx) = pair();
+        let mut conn = Conn::new(rx);
+        drop(tx);
+        let err = conn.recv(Some(Duration::from_secs(5))).unwrap_err();
+        assert!(err.contains("closed"), "{err}");
+    }
+
+    #[test]
+    fn garbage_is_a_fatal_desync() {
+        let (mut tx, rx) = pair();
+        let mut conn = Conn::new(rx);
+        tx.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        tx.flush().unwrap();
+        let err = conn.recv(Some(Duration::from_secs(5))).unwrap_err();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn recv_timeout_reports() {
+        let (_tx, rx) = pair();
+        let mut conn = Conn::new(rx);
+        let err = conn.recv(Some(Duration::from_millis(40))).unwrap_err();
+        assert!(err.contains("timed out"), "{err}");
+    }
+}

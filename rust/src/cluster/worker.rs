@@ -1,0 +1,476 @@
+//! The cluster worker: a process that serves pass tasks over TCP.
+//!
+//! `repro worker --listen <addr> --shards <dir>` binds a [`Worker`] over a
+//! CRC-validated [`ShardStore`] and waits for a driver. All compute goes
+//! through the shared [`ShardTaskRunner`] — the exact code the in-process
+//! coordinator runs — so a cluster fit produces the same per-shard
+//! partials as a single-process one. The worker is deliberately
+//! single-connection: a driver owns its cluster for the duration of a fit
+//! (a second driver queues in the OS accept backlog until the first
+//! disconnects).
+//!
+//! Responsiveness: while executing a [`Msg::RunPass`], the worker polls
+//! its connection between shard tasks, echoing [`Msg::Heartbeat`]s and
+//! honoring [`Msg::Abort`]s. Liveness granularity is therefore one shard
+//! task — drivers must size their heartbeat timeout above the worst-case
+//! single-shard compute time.
+
+use super::proto::{Msg, SHARD_NONE};
+use super::transport::Conn;
+use crate::coordinator::{Metrics, PassKind, ShardTaskRunner};
+use crate::data::shards::ShardStore;
+use crate::runtime::{ChunkEngine, NativeEngine};
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Worker tunables; `Default` matches the in-process coordinator.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Keep decoded shards in memory after first load (see
+    /// [`crate::coordinator::ShardedPassConfig::cache_shards`]).
+    pub cache_shards: bool,
+    /// Build transposed chunk mirrors for cached shards.
+    pub mirror_scatter: bool,
+    /// Fault injection for tests and chaos drills: abruptly exit the
+    /// process (no goodbye, simulating a crash/OOM-kill) after sending
+    /// this many partials. 0 disables.
+    pub exit_after_partials: u64,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> WorkerConfig {
+        WorkerConfig {
+            cache_shards: true,
+            mirror_scatter: true,
+            exit_after_partials: 0,
+        }
+    }
+}
+
+/// A bound worker, ready to [`Worker::run`].
+pub struct Worker {
+    listener: TcpListener,
+    addr: SocketAddr,
+    store: ShardStore,
+    engine: Arc<dyn ChunkEngine>,
+    config: WorkerConfig,
+    pub metrics: Arc<Metrics>,
+    partials_sent: u64,
+}
+
+/// Per-connection pass-serving state.
+struct Session {
+    runner: Arc<ShardTaskRunner>,
+    chunk_rows: usize,
+}
+
+impl Worker {
+    /// Open the shard store and claim the socket (port 0 = ephemeral; the
+    /// bound address is [`Worker::local_addr`]).
+    pub fn bind(shard_dir: &Path, addr: &str, config: WorkerConfig) -> Result<Worker, String> {
+        let store = ShardStore::open(shard_dir)?;
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let local = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+        Ok(Worker {
+            listener,
+            addr: local,
+            store,
+            engine: Arc::new(NativeEngine::new()),
+            config,
+            metrics: Arc::new(Metrics::new()),
+            partials_sent: 0,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn store(&self) -> &ShardStore {
+        &self.store
+    }
+
+    /// Serve drivers until the process is killed (one connection at a
+    /// time; a driver disconnect returns the worker to accept).
+    pub fn run(mut self) -> ! {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    eprintln!("worker: driver connected from {peer}");
+                    if let Err(e) = self.serve(stream) {
+                        eprintln!("worker: connection ended: {e}");
+                    } else {
+                        eprintln!("worker: driver disconnected");
+                    }
+                }
+                Err(e) => {
+                    eprintln!("worker: accept failed: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    /// Serve exactly one driver connection (test hook; [`Worker::run`]
+    /// loops over this).
+    pub fn serve_one(&mut self) -> Result<(), String> {
+        let (stream, _) = self.listener.accept().map_err(|e| format!("accept: {e}"))?;
+        self.serve(stream)
+    }
+
+    fn build_session(&self, chunk_rows: usize) -> Session {
+        Session {
+            runner: Arc::new(ShardTaskRunner::new(
+                self.store.clone(),
+                Arc::clone(&self.engine),
+                Arc::clone(&self.metrics),
+                chunk_rows,
+                self.config.cache_shards,
+                self.config.mirror_scatter,
+            )),
+            chunk_rows,
+        }
+    }
+
+    fn serve(&mut self, stream: TcpStream) -> Result<(), String> {
+        let _ = stream.set_nodelay(true);
+        let mut conn = Conn::new(stream);
+        // Handshake: the driver speaks first; we answer with the store.
+        match conn.recv(Some(Duration::from_secs(30)))? {
+            Msg::HelloDriver => {}
+            other => return Err(format!("expected HelloDriver, got {other:?}")),
+        }
+        conn.send(&Msg::HelloWorker {
+            shards: self.store.shards as u64,
+            rows: self.store.rows as u64,
+            dims_a: self.store.dims_a as u64,
+            dims_b: self.store.dims_b as u64,
+        })?;
+        let mut session = self.build_session(256);
+        // Messages that arrived while a pass was executing (e.g. a
+        // recovery re-dispatch of a dead peer's shards) queue here and are
+        // served before blocking on the socket again.
+        let mut pending: VecDeque<Msg> = VecDeque::new();
+        loop {
+            // Idle: block until the driver speaks or hangs up. EOF here is
+            // the normal end of a driver's life, not a fault.
+            let msg = match pending.pop_front() {
+                Some(m) => m,
+                None => match conn.recv(None) {
+                    Ok(m) => m,
+                    Err(e) if e.contains("closed") => return Ok(()),
+                    Err(e) => return Err(e),
+                },
+            };
+            match msg {
+                Msg::Heartbeat { nonce } => conn.send(&Msg::Heartbeat { nonce })?,
+                Msg::AssignShards { chunk_rows, shards } => {
+                    let chunk_rows = (chunk_rows as usize).max(1);
+                    if chunk_rows != session.chunk_rows {
+                        // Chunking determines the f32 accumulation
+                        // grouping, so a chunk_rows change invalidates the
+                        // prepared cache wholesale.
+                        session = self.build_session(chunk_rows);
+                    }
+                    eprintln!(
+                        "worker: assigned {} shards (chunk_rows {chunk_rows})",
+                        shards.len()
+                    );
+                }
+                Msg::RunPass {
+                    pass_id,
+                    kind,
+                    r,
+                    qa32,
+                    qb32,
+                    shards,
+                } => {
+                    self.run_pass(
+                        &mut conn,
+                        &session,
+                        &mut pending,
+                        pass_id,
+                        kind,
+                        r as usize,
+                        &qa32,
+                        &qb32,
+                        &shards,
+                    )?;
+                }
+                // Abort outside a pass is stale driver state; ignore.
+                Msg::Abort { .. } => {}
+                other => return Err(format!("unexpected message from driver: {other:?}")),
+            }
+        }
+    }
+
+    /// Execute one RunPass: stream one Partial (or shard Abort) per
+    /// requested shard, polling for control traffic between shards.
+    /// Non-control messages that arrive mid-pass (a recovery re-dispatch)
+    /// are parked in `pending` for the serve loop, never dropped.
+    #[allow(clippy::too_many_arguments)]
+    fn run_pass(
+        &mut self,
+        conn: &mut Conn,
+        session: &Session,
+        pending: &mut VecDeque<Msg>,
+        pass_id: u64,
+        kind: PassKind,
+        r: usize,
+        qa32: &[f32],
+        qb32: &[f32],
+        shards: &[u32],
+    ) -> Result<(), String> {
+        self.metrics.add(&self.metrics.passes, 1);
+        // Validate the broadcast width once; a mismatch is a pass-level
+        // failure (every shard would fail identically).
+        let (want_a, want_b) = match kind {
+            PassKind::Trace => (0, 0),
+            _ => (self.store.dims_a * r, self.store.dims_b * r),
+        };
+        if qa32.len() != want_a || qb32.len() != want_b {
+            conn.send(&Msg::Abort {
+                pass_id,
+                shard: SHARD_NONE,
+                reason: format!(
+                    "broadcast shape mismatch: got qa {} / qb {} floats, \
+                     store wants {want_a} / {want_b}",
+                    qa32.len(),
+                    qb32.len()
+                ),
+            })?;
+            return Ok(());
+        }
+        for &shard in shards {
+            // Between shards: answer heartbeats, honor aborts, park the
+            // rest for the serve loop.
+            loop {
+                match conn.poll(Duration::from_millis(1))? {
+                    Some(Msg::Heartbeat { nonce }) => conn.send(&Msg::Heartbeat { nonce })?,
+                    Some(Msg::Abort { pass_id: p, .. }) if p == pass_id => {
+                        eprintln!("worker: pass {pass_id} aborted by driver");
+                        return Ok(());
+                    }
+                    Some(other) => pending.push_back(other),
+                    None => break,
+                }
+            }
+            match session.runner.run(shard as usize, kind, qa32, qb32, r) {
+                Ok(mats) => {
+                    self.metrics.add(&self.metrics.tasks_completed, 1);
+                    conn.send(&Msg::Partial {
+                        pass_id,
+                        shard,
+                        mats,
+                    })?;
+                    self.partials_sent += 1;
+                    if self.config.exit_after_partials > 0
+                        && self.partials_sent >= self.config.exit_after_partials
+                    {
+                        // Simulated crash: no goodbye, no flush beyond the
+                        // partial just sent — the driver sees a dead peer.
+                        eprintln!(
+                            "worker: fault injection — exiting after {} partials",
+                            self.partials_sent
+                        );
+                        std::process::exit(9);
+                    }
+                }
+                Err(reason) => {
+                    self.metrics.add(&self.metrics.tasks_failed, 1);
+                    conn.send(&Msg::Abort {
+                        pass_id,
+                        shard,
+                        reason,
+                    })?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Accumulator, PassKind};
+    use crate::data::shards::ShardWriter;
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::linalg::Mat;
+    use crate::runtime::mat_to_f32;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn shard_dir(tag: &str) -> PathBuf {
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 240,
+            dims: 32,
+            topics: 4,
+            words_per_topic: 8,
+            background_words: 12,
+            mean_len: 6.0,
+            seed: 17,
+            ..Default::default()
+        });
+        let dir = PathBuf::from(std::env::temp_dir()).join(format!("rcca_worker_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = ShardWriter::create(&dir, 50).unwrap();
+        w.write_dataset(&d.a, &d.b).unwrap();
+        dir
+    }
+
+    /// Drive a worker by hand over a real socket: handshake, assign, one
+    /// power pass, and verify the streamed partials reduce to what the
+    /// shared runner computes directly.
+    #[test]
+    fn serves_a_scripted_driver() {
+        let dir = shard_dir("scripted");
+        let mut worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let addr = worker.local_addr();
+        let store = worker.store().clone();
+        let shards = store.shards;
+        let handle = std::thread::spawn(move || worker.serve_one());
+
+        let mut conn = Conn::new(TcpStream::connect(addr).unwrap());
+        conn.send(&Msg::HelloDriver).unwrap();
+        let hello = conn.recv(Some(Duration::from_secs(10))).unwrap();
+        assert_eq!(
+            hello,
+            Msg::HelloWorker {
+                shards: shards as u64,
+                rows: store.rows as u64,
+                dims_a: 32,
+                dims_b: 32,
+            }
+        );
+        let all: Vec<u32> = (0..shards as u32).collect();
+        conn.send(&Msg::AssignShards {
+            chunk_rows: 40,
+            shards: all.clone(),
+        })
+        .unwrap();
+        // Heartbeat while idle echoes.
+        conn.send(&Msg::Heartbeat { nonce: 99 }).unwrap();
+        assert_eq!(
+            conn.recv(Some(Duration::from_secs(10))).unwrap(),
+            Msg::Heartbeat { nonce: 99 }
+        );
+
+        let mut rng = Rng::new(3);
+        let qa = Mat::randn(32, 4, &mut rng);
+        let qb = Mat::randn(32, 4, &mut rng);
+        let (qa32, qb32) = (mat_to_f32(&qa), mat_to_f32(&qb));
+        conn.send(&Msg::RunPass {
+            pass_id: 1,
+            kind: PassKind::Power,
+            r: 4,
+            qa32: qa32.clone(),
+            qb32: qb32.clone(),
+            shards: all,
+        })
+        .unwrap();
+        let mut got: Vec<Option<Vec<Mat>>> = vec![None; shards];
+        for _ in 0..shards {
+            match conn.recv(Some(Duration::from_secs(30))).unwrap() {
+                Msg::Partial {
+                    pass_id: 1,
+                    shard,
+                    mats,
+                } => got[shard as usize] = Some(mats),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Reference: the shared runner, locally.
+        let reference = ShardTaskRunner::new(
+            store,
+            Arc::new(NativeEngine::new()),
+            Arc::new(Metrics::new()),
+            40,
+            true,
+            true,
+        );
+        let mut acc = Accumulator::new(&PassKind::Power.shapes(32, 32, 4));
+        for (shard, mats) in got.iter().enumerate() {
+            let mats = mats.as_ref().expect("partial for every shard");
+            let want = reference.run(shard, PassKind::Power, &qa32, &qb32, 4).unwrap();
+            assert_eq!(*mats, want, "shard {shard} partial must be bit-identical");
+            acc.add(mats);
+        }
+        assert_eq!(acc.contributions(), shards);
+        drop(conn);
+        handle.join().unwrap().unwrap();
+    }
+
+    /// A bad broadcast width is a pass-level Abort, not a hang or panic.
+    #[test]
+    fn rejects_mismatched_broadcast() {
+        let dir = shard_dir("mismatch");
+        let mut worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let addr = worker.local_addr();
+        let handle = std::thread::spawn(move || worker.serve_one());
+        let mut conn = Conn::new(TcpStream::connect(addr).unwrap());
+        conn.send(&Msg::HelloDriver).unwrap();
+        let _ = conn.recv(Some(Duration::from_secs(10))).unwrap();
+        conn.send(&Msg::RunPass {
+            pass_id: 7,
+            kind: PassKind::Power,
+            r: 4,
+            qa32: vec![0.0; 3], // wrong: store wants 32*4
+            qb32: vec![0.0; 3],
+            shards: vec![0],
+        })
+        .unwrap();
+        match conn.recv(Some(Duration::from_secs(10))).unwrap() {
+            Msg::Abort {
+                pass_id: 7,
+                shard,
+                reason,
+            } => {
+                assert_eq!(shard, SHARD_NONE);
+                assert!(reason.contains("mismatch"), "{reason}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        drop(conn);
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Out-of-range shards fail shard-by-shard while valid ones complete.
+    #[test]
+    fn bad_shard_id_aborts_that_shard_only() {
+        let dir = shard_dir("badshard");
+        let mut worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let addr = worker.local_addr();
+        let handle = std::thread::spawn(move || worker.serve_one());
+        let mut conn = Conn::new(TcpStream::connect(addr).unwrap());
+        conn.send(&Msg::HelloDriver).unwrap();
+        let _ = conn.recv(Some(Duration::from_secs(10))).unwrap();
+        conn.send(&Msg::RunPass {
+            pass_id: 2,
+            kind: PassKind::Trace,
+            r: 0,
+            qa32: vec![],
+            qb32: vec![],
+            shards: vec![999, 0],
+        })
+        .unwrap();
+        match conn.recv(Some(Duration::from_secs(10))).unwrap() {
+            Msg::Abort { shard: 999, reason, .. } => {
+                assert!(reason.contains("out of range"), "{reason}")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match conn.recv(Some(Duration::from_secs(10))).unwrap() {
+            Msg::Partial { shard: 0, mats, .. } => {
+                assert_eq!((mats[0].rows, mats[0].cols), (1, 2));
+                assert!(mats[0][(0, 0)] > 0.0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        drop(conn);
+        handle.join().unwrap().unwrap();
+    }
+}

@@ -21,10 +21,14 @@
 
 pub mod fault;
 pub mod metrics;
+pub mod progress;
 pub mod reduce;
 pub mod sharded;
+pub mod task;
 
 pub use fault::FaultyEngine;
 pub use metrics::Metrics;
+pub use progress::PassProgress;
 pub use reduce::Accumulator;
 pub use sharded::{ShardedPass, ShardedPassConfig};
+pub use task::{PassKind, ShardTaskRunner};

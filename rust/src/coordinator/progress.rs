@@ -1,0 +1,128 @@
+//! Per-pass completion and retry bookkeeping, shared by the in-process
+//! coordinator ([`crate::coordinator::ShardedPass`]) and the cluster driver
+//! ([`crate::cluster::ClusterPass`]).
+//!
+//! Both leaders run the same map-with-retries loop: every shard must
+//! contribute exactly once, failures consume a bounded retry budget, and
+//! late duplicates (a presumed-dead worker's partial racing its
+//! replacement's) must be dropped rather than double-counted. This type is
+//! the single home of that state machine.
+
+/// Tracks which shards of a pass have contributed, and how many attempts
+/// each has consumed against a shared retry budget.
+#[derive(Debug, Clone)]
+pub struct PassProgress {
+    done: Vec<bool>,
+    attempts: Vec<usize>,
+    completed: usize,
+    max_retries: usize,
+}
+
+impl PassProgress {
+    /// A fresh pass over `shards` shards; each may fail `max_retries`
+    /// times beyond its first attempt before the pass must abort.
+    pub fn new(shards: usize, max_retries: usize) -> PassProgress {
+        PassProgress {
+            done: vec![false; shards],
+            attempts: vec![1; shards],
+            completed: 0,
+            max_retries,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.done.len()
+    }
+
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.completed == self.done.len()
+    }
+
+    pub fn is_done(&self, shard: usize) -> bool {
+        self.done[shard]
+    }
+
+    /// Attempts consumed by `shard` so far (starts at 1).
+    pub fn attempts(&self, shard: usize) -> usize {
+        self.attempts[shard]
+    }
+
+    /// Record a successful contribution. Returns `true` if this was the
+    /// first one; `false` for a duplicate (already-completed shard), which
+    /// the caller must drop without reducing.
+    pub fn complete(&mut self, shard: usize) -> bool {
+        if self.done[shard] {
+            return false;
+        }
+        self.done[shard] = true;
+        self.completed += 1;
+        true
+    }
+
+    /// Record a failed attempt. Returns the next attempt number when
+    /// retry budget remains, or `None` when the budget is exhausted and
+    /// the pass must abort.
+    pub fn record_failure(&mut self, shard: usize) -> Option<usize> {
+        if self.attempts[shard] > self.max_retries {
+            return None;
+        }
+        self.attempts[shard] += 1;
+        Some(self.attempts[shard])
+    }
+
+    /// Shards that have not yet contributed.
+    pub fn pending(&self) -> Vec<usize> {
+        self.done
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| !d)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn completes_each_shard_once() {
+        let mut p = PassProgress::new(3, 2);
+        assert!(!p.all_done());
+        assert!(p.complete(1));
+        assert!(!p.complete(1), "duplicate must be rejected");
+        assert_eq!(p.completed(), 1);
+        assert!(p.complete(0));
+        assert!(p.complete(2));
+        assert!(p.all_done());
+        assert_eq!(p.pending(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn retry_budget_exhausts() {
+        let mut p = PassProgress::new(1, 2);
+        assert_eq!(p.attempts(0), 1);
+        assert_eq!(p.record_failure(0), Some(2));
+        assert_eq!(p.record_failure(0), Some(3));
+        // attempts (3) now exceeds max_retries (2): no budget left.
+        assert_eq!(p.record_failure(0), None);
+        assert_eq!(p.attempts(0), 3);
+    }
+
+    #[test]
+    fn zero_retries_aborts_on_first_failure() {
+        let mut p = PassProgress::new(2, 0);
+        assert_eq!(p.record_failure(1), None);
+    }
+
+    #[test]
+    fn pending_lists_incomplete() {
+        let mut p = PassProgress::new(4, 1);
+        p.complete(2);
+        assert_eq!(p.pending(), vec![0, 1, 3]);
+    }
+}

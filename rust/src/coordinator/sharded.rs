@@ -1,15 +1,15 @@
 //! The sharded pass engine: leader/worker execution of data passes.
 
-use super::metrics::Metrics;
+use super::progress::PassProgress;
 use super::reduce::Accumulator;
+use super::task::{PassKind, ShardTaskRunner};
 use crate::cca::pass::PassEngine;
-use crate::data::shards::{ShardStore, TwoViewChunk};
+use crate::data::shards::ShardStore;
 use crate::linalg::Mat;
-use crate::runtime::{mat_to_f32, ChunkEngine, ChunkMirror, Workspace};
+use crate::runtime::{mat_to_f32, ChunkEngine};
 use crate::util::pool::Pool;
 use crate::util::timer::Timer;
-use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{mpsc, Arc, OnceLock};
+use std::sync::{mpsc, Arc};
 
 #[derive(Debug, Clone)]
 pub struct ShardedPassConfig {
@@ -28,7 +28,7 @@ pub struct ShardedPassConfig {
     /// Build transposed chunk mirrors on the first power pass so repeat
     /// passes scatter with sequential writes. Only takes effect together
     /// with `cache_shards` (an uncached shard cannot amortize the
-    /// transpose) and only for chunks [`ChunkMirror::worthwhile`] accepts.
+    /// transpose) and only for chunks the density heuristic accepts.
     pub mirror_scatter: bool,
 }
 
@@ -45,106 +45,22 @@ impl Default for ShardedPassConfig {
     }
 }
 
-/// A shard pre-sliced into engine chunks at load time, so repeat passes
-/// over a cached shard pay zero slicing cost, plus each chunk's lazily
-/// built transposed mirror.
-struct PreparedShard {
-    chunks: Vec<PreparedChunk>,
-}
-
-struct PreparedChunk {
-    data: TwoViewChunk,
-    mirror_cell: OnceLock<Option<ChunkMirror>>,
-}
-
-impl PreparedChunk {
-    /// Transposed mirror, built on first request (`None` when the density
-    /// heuristic rejects mirroring this chunk).
-    fn mirror(&self) -> Option<&ChunkMirror> {
-        self.mirror_cell
-            .get_or_init(|| ChunkMirror::maybe_build(&self.data))
-            .as_ref()
-    }
-}
-
-impl PreparedShard {
-    fn build(data: &TwoViewChunk, chunk_rows: usize) -> PreparedShard {
-        // chunk_rows == 0 would otherwise never advance the slice cursor.
-        let chunk_rows = chunk_rows.max(1);
-        let rows = data.rows();
-        let mut chunks = Vec::with_capacity(rows.div_ceil(chunk_rows));
-        let mut lo = 0;
-        while lo < rows {
-            let hi = (lo + chunk_rows).min(rows);
-            chunks.push(PreparedChunk {
-                data: TwoViewChunk {
-                    a: data.a.slice_rows(lo, hi),
-                    b: data.b.slice_rows(lo, hi),
-                },
-                mirror_cell: OnceLock::new(),
-            });
-            lo = hi;
-        }
-        PreparedShard { chunks }
-    }
-
-    fn nnz_bytes(&self) -> u64 {
-        self.chunks
-            .iter()
-            .map(|c| (c.data.a.nnz() + c.data.b.nnz()) as u64 * 8)
-            .sum()
-    }
-}
-
-/// Size a workspace for one pass kind.
-fn begin_pass(ws: &mut Workspace, kind: &str, da: usize, db: usize, r: usize) {
-    match kind {
-        "power" => ws.begin_power(da, db, r),
-        "final" => ws.begin_final(r),
-        _ => unreachable!("unknown pass kind"),
-    }
-}
-
-/// Run one chunk through the engine, accumulating into `ws` and charging
-/// the engine-time metrics.
-#[allow(clippy::too_many_arguments)]
-fn process_chunk(
-    engine: &dyn ChunkEngine,
-    kind: &str,
-    chunk: &TwoViewChunk,
-    mirror: Option<&ChunkMirror>,
-    qa32: &[f32],
-    qb32: &[f32],
-    r: usize,
-    ws: &mut Workspace,
-    metrics: &Metrics,
-) -> Result<(), String> {
-    let eng_t = Timer::start();
-    match kind {
-        "power" => engine
-            .power_chunk_ws(chunk, mirror, qa32, qb32, r, ws)
-            .map_err(|e| e.to_string())?,
-        "final" => engine
-            .final_chunk_ws(chunk, qa32, qb32, r, ws)
-            .map_err(|e| e.to_string())?,
-        _ => unreachable!("unknown pass kind"),
-    }
-    metrics.add(&metrics.engine_nanos, eng_t.elapsed().as_nanos() as u64);
-    metrics.add(&metrics.chunks_processed, 1);
-    Ok(())
-}
-
 /// Leader-side pass engine over an on-disk shard store. Implements
-/// [`PassEngine`], so every CCA algorithm runs on it unchanged.
+/// [`PassEngine`], so every CCA algorithm runs on it unchanged. The
+/// per-shard map work lives in the shared [`ShardTaskRunner`] — the same
+/// code the cluster worker process runs — so this engine is the
+/// single-process twin of [`crate::cluster::ClusterPass`].
 pub struct ShardedPass {
     store: ShardStore,
-    engine: Arc<dyn ChunkEngine>,
+    runner: Arc<ShardTaskRunner>,
     pool: Pool,
-    pub config: ShardedPassConfig,
-    pub metrics: Arc<Metrics>,
+    /// Private: chunk_rows/cache_shards/mirror_scatter are snapshotted
+    /// into the runner at construction, so post-hoc mutation would
+    /// silently not take effect — construct a new pass instead.
+    config: ShardedPassConfig,
+    pub metrics: Arc<super::Metrics>,
     passes: usize,
     traces: Option<(f64, f64)>,
-    cache: Arc<Vec<OnceLock<Arc<PreparedShard>>>>,
 }
 
 type TaskResult = (usize, Result<Vec<Mat>, String>);
@@ -156,119 +72,41 @@ impl ShardedPass {
         config: ShardedPassConfig,
     ) -> ShardedPass {
         let pool = Pool::new(config.workers, config.queue_capacity);
-        let cache = Arc::new((0..store.shards).map(|_| OnceLock::new()).collect::<Vec<_>>());
+        let metrics = Arc::new(super::Metrics::new());
+        let runner = Arc::new(ShardTaskRunner::new(
+            store.clone(),
+            engine,
+            Arc::clone(&metrics),
+            config.chunk_rows,
+            config.cache_shards,
+            config.mirror_scatter,
+        ));
         ShardedPass {
             store,
-            engine,
+            runner,
             pool,
             config,
-            metrics: Arc::new(Metrics::new()),
+            metrics,
             passes: 0,
             traces: None,
-            cache,
         }
     }
 
-    /// Submit one shard task. The task loads (or re-uses) the pre-chunked
-    /// shard, accumulates the engine over its chunks into one reused
-    /// [`Workspace`] (zero heap allocations per chunk in steady state),
-    /// and reports exactly one `TaskResult` — success or contained failure.
-    #[allow(clippy::too_many_arguments)]
+    /// Submit one shard task: the pool worker runs the shared
+    /// [`ShardTaskRunner`] (panics contained inside) and reports exactly
+    /// one `TaskResult`.
     fn submit_shard(
         &self,
         shard: usize,
-        kind: &'static str,
+        kind: PassKind,
         qa32: Arc<Vec<f32>>,
         qb32: Arc<Vec<f32>>,
         r: usize,
         tx: mpsc::Sender<TaskResult>,
     ) {
-        let store = self.store.clone();
-        let engine = Arc::clone(&self.engine);
-        let metrics = Arc::clone(&self.metrics);
-        let chunk_rows = self.config.chunk_rows.max(1);
-        let mirror_scatter =
-            self.config.mirror_scatter && self.config.cache_shards && self.engine.wants_mirror();
-        let cache = if self.config.cache_shards {
-            Some(Arc::clone(&self.cache))
-        } else {
-            None
-        };
+        let runner = Arc::clone(&self.runner);
         self.pool.submit(move || {
-            let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<Vec<Mat>, String> {
-                let load_t = Timer::start();
-                match &cache {
-                    // Cached regime: the shard is pre-sliced (and lazily
-                    // mirrored) once; repeat passes pay zero slicing cost.
-                    Some(c) => {
-                        let prepared: Arc<PreparedShard> = {
-                            let slot = &c[shard];
-                            if let Some(hit) = slot.get() {
-                                Arc::clone(hit)
-                            } else {
-                                let data = store.load(shard).map_err(|e| e.to_string())?;
-                                let built = Arc::new(PreparedShard::build(&data, chunk_rows));
-                                let _ = slot.set(Arc::clone(&built));
-                                built
-                            }
-                        };
-                        metrics.add(&metrics.load_nanos, load_t.elapsed().as_nanos() as u64);
-                        metrics.add(&metrics.shard_bytes_read, prepared.nnz_bytes());
-                        let Some(first) = prepared.chunks.first() else {
-                            return Ok(Vec::new());
-                        };
-                        let (da, db) = (first.data.a.cols, first.data.b.cols);
-                        let mut ws = Workspace::new();
-                        begin_pass(&mut ws, kind, da, db, r);
-                        for pc in &prepared.chunks {
-                            let mirror = if mirror_scatter { pc.mirror() } else { None };
-                            process_chunk(
-                                &*engine, kind, &pc.data, mirror, &qa32, &qb32, r, &mut ws,
-                                &metrics,
-                            )?;
-                        }
-                        Ok(ws.take())
-                    }
-                    // Out-of-core regime: stream transient slices — the
-                    // shard is dropped after this pass, so pre-slicing
-                    // (and mirroring) would only double peak memory.
-                    None => {
-                        let data = store.load(shard).map_err(|e| e.to_string())?;
-                        metrics.add(&metrics.load_nanos, load_t.elapsed().as_nanos() as u64);
-                        metrics.add(
-                            &metrics.shard_bytes_read,
-                            (data.a.nnz() + data.b.nnz()) as u64 * 8,
-                        );
-                        let rows = data.rows();
-                        if rows == 0 {
-                            return Ok(Vec::new());
-                        }
-                        let mut ws = Workspace::new();
-                        begin_pass(&mut ws, kind, data.a.cols, data.b.cols, r);
-                        let mut lo = 0;
-                        while lo < rows {
-                            let hi = (lo + chunk_rows).min(rows);
-                            let chunk = TwoViewChunk {
-                                a: data.a.slice_rows(lo, hi),
-                                b: data.b.slice_rows(lo, hi),
-                            };
-                            process_chunk(
-                                &*engine, kind, &chunk, None, &qa32, &qb32, r, &mut ws, &metrics,
-                            )?;
-                            lo = hi;
-                        }
-                        Ok(ws.take())
-                    }
-                }
-            }));
-            let result = match outcome {
-                Ok(r) => r,
-                Err(p) => Err(p
-                    .downcast_ref::<&str>()
-                    .map(|s| s.to_string())
-                    .or_else(|| p.downcast_ref::<String>().cloned())
-                    .unwrap_or_else(|| "worker panic".to_string())),
-            };
+            let result = runner.run(shard, kind, &qa32, &qb32, r);
             // The leader may have aborted and dropped the receiver; a send
             // failure is then expected and benign.
             let _ = tx.send((shard, result));
@@ -276,131 +114,54 @@ impl ShardedPass {
     }
 
     /// Run one full pass: map over all shards with retries, reduce.
-    fn run_pass(
-        &mut self,
-        kind: &'static str,
-        qa: &Mat,
-        qb: &Mat,
-        shapes: &[(usize, usize)],
-    ) -> anyhow::Result<Vec<Mat>> {
+    fn run_pass(&mut self, kind: PassKind, qa: &Mat, qb: &Mat) -> anyhow::Result<Vec<Mat>> {
         self.passes += 1;
         self.metrics.add(&self.metrics.passes, 1);
         let r = qa.cols;
         anyhow::ensure!(qb.cols == r, "Qa/Qb column mismatch");
+        let shapes = kind.shapes(self.store.dims_a, self.store.dims_b, r);
         let qa32 = Arc::new(mat_to_f32(qa));
         let qb32 = Arc::new(mat_to_f32(qb));
 
+        // One channel for first attempts and retries alike; the leader
+        // keeps its sender alive until the pass completes, and completion
+        // is tracked by `PassProgress` rather than channel disconnection.
         let (tx, rx) = mpsc::channel::<TaskResult>();
         for shard in 0..self.store.shards {
             self.submit_shard(shard, kind, Arc::clone(&qa32), Arc::clone(&qb32), r, tx.clone());
         }
-        drop(tx);
 
-        let mut acc = Accumulator::new(shapes);
-        let mut attempts = vec![1usize; self.store.shards];
-        let mut done = vec![false; self.store.shards];
-        let mut completed = 0usize;
-        // Keep one sender alive for retries.
-        let (retry_tx, retry_rx) = mpsc::channel::<TaskResult>();
-        let mut channels: Vec<mpsc::Receiver<TaskResult>> = vec![rx, retry_rx];
-
-        'outer: while completed < self.store.shards {
-            // Drain whichever channel has data (simple two-channel poll;
-            // the retry channel is rarely active).
-            let mut progressed = false;
-            for ch in &channels {
-                while let Ok((shard, result)) = ch.try_recv() {
-                    progressed = true;
-                    match result {
-                        Ok(partials) => {
-                            anyhow::ensure!(!done[shard], "duplicate result for shard {shard}");
-                            let t = Timer::start();
-                            if !partials.is_empty() {
-                                acc.add(&partials);
-                            }
-                            self.metrics
-                                .add(&self.metrics.reduce_nanos, t.elapsed().as_nanos() as u64);
-                            self.metrics.add(&self.metrics.tasks_completed, 1);
-                            done[shard] = true;
-                            completed += 1;
-                            if completed == self.store.shards {
-                                break 'outer;
-                            }
-                        }
-                        Err(msg) => {
-                            self.metrics.add(&self.metrics.tasks_failed, 1);
-                            if attempts[shard] > self.config.max_retries {
-                                anyhow::bail!(
-                                    "shard {shard} failed {} times (last: {msg})",
-                                    attempts[shard]
-                                );
-                            }
-                            attempts[shard] += 1;
-                            self.metrics.add(&self.metrics.retries, 1);
-                            self.submit_shard(
-                                shard,
-                                kind,
-                                Arc::clone(&qa32),
-                                Arc::clone(&qb32),
-                                r,
-                                retry_tx.clone(),
-                            );
-                        }
+        let mut acc = Accumulator::new(&shapes);
+        let mut progress = PassProgress::new(self.store.shards, self.config.max_retries);
+        while !progress.all_done() {
+            let (shard, result) = rx.recv().expect("leader sender alive");
+            match result {
+                Ok(partials) => {
+                    anyhow::ensure!(progress.complete(shard), "duplicate result for shard {shard}");
+                    let t = Timer::start();
+                    if !partials.is_empty() {
+                        acc.add(&partials);
                     }
+                    self.metrics
+                        .add(&self.metrics.reduce_nanos, t.elapsed().as_nanos() as u64);
+                    self.metrics.add(&self.metrics.tasks_completed, 1);
                 }
-            }
-            if !progressed {
-                // Block briefly on the primary channel to avoid spinning.
-                match channels[0].recv_timeout(std::time::Duration::from_millis(5)) {
-                    Ok(msg) => {
-                        // Re-inject via retry channel path by handling inline:
-                        // simplest is to push into a small local queue — reuse
-                        // the loop by handling here.
-                        let (shard, result) = msg;
-                        match result {
-                            Ok(partials) => {
-                                anyhow::ensure!(
-                                    !done[shard],
-                                    "duplicate result for shard {shard}"
-                                );
-                                if !partials.is_empty() {
-                                    acc.add(&partials);
-                                }
-                                self.metrics.add(&self.metrics.tasks_completed, 1);
-                                done[shard] = true;
-                                completed += 1;
-                            }
-                            Err(msg) => {
-                                self.metrics.add(&self.metrics.tasks_failed, 1);
-                                if attempts[shard] > self.config.max_retries {
-                                    anyhow::bail!(
-                                        "shard {shard} failed {} times (last: {msg})",
-                                        attempts[shard]
-                                    );
-                                }
-                                attempts[shard] += 1;
-                                self.metrics.add(&self.metrics.retries, 1);
-                                self.submit_shard(
-                                    shard,
-                                    kind,
-                                    Arc::clone(&qa32),
-                                    Arc::clone(&qb32),
-                                    r,
-                                    retry_tx.clone(),
-                                );
-                            }
-                        }
-                    }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {}
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        // Primary exhausted; rely on retry channel only.
-                        channels.remove(0);
-                        anyhow::ensure!(
-                            !channels.is_empty(),
-                            "all channels closed with {completed}/{} shards",
-                            self.store.shards
-                        );
-                    }
+                Err(msg) => {
+                    self.metrics.add(&self.metrics.tasks_failed, 1);
+                    anyhow::ensure!(
+                        progress.record_failure(shard).is_some(),
+                        "shard {shard} failed {} times (last: {msg})",
+                        progress.attempts(shard)
+                    );
+                    self.metrics.add(&self.metrics.retries, 1);
+                    self.submit_shard(
+                        shard,
+                        kind,
+                        Arc::clone(&qa32),
+                        Arc::clone(&qb32),
+                        r,
+                        tx.clone(),
+                    );
                 }
             }
         }
@@ -414,10 +175,8 @@ impl PassEngine for ShardedPass {
     }
 
     fn power_pass(&mut self, qa: &Mat, qb: &Mat) -> (Mat, Mat) {
-        let (_, da, db) = self.dims();
-        let r = qa.cols;
         let mut out = self
-            .run_pass("power", qa, qb, &[(da, r), (db, r)])
+            .run_pass(PassKind::Power, qa, qb)
             .expect("power pass failed");
         let yb = out.pop().unwrap();
         let ya = out.pop().unwrap();
@@ -425,9 +184,8 @@ impl PassEngine for ShardedPass {
     }
 
     fn final_pass(&mut self, qa: &Mat, qb: &Mat) -> (Mat, Mat, Mat) {
-        let r = qa.cols;
         let mut out = self
-            .run_pass("final", qa, qb, &[(r, r), (r, r), (r, r)])
+            .run_pass(PassKind::Final, qa, qb)
             .expect("final pass failed");
         let f = out.pop().unwrap();
         let cb = out.pop().unwrap();
@@ -462,10 +220,11 @@ mod tests {
     use super::*;
     use crate::cca::pass::InMemoryPass;
     use crate::coordinator::fault::FaultyEngine;
-    use crate::data::shards::ShardWriter;
+    use crate::data::shards::{ShardWriter, TwoViewChunk};
     use crate::data::synthparl::{SynthParl, SynthParlConfig};
     use crate::runtime::NativeEngine;
     use crate::util::rng::Rng;
+    use std::panic::AssertUnwindSafe;
     use std::path::PathBuf;
     use std::sync::atomic::Ordering;
 

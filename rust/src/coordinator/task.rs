@@ -1,0 +1,439 @@
+//! Shard-task execution, shared by the in-process coordinator and the
+//! cluster worker.
+//!
+//! A *shard task* is the map side of one pass: load (or reuse) a shard,
+//! slice it into engine chunks, run the [`ChunkEngine`] over every chunk
+//! into one reused [`Workspace`], and hand back the per-shard partials.
+//! [`ShardedPass`](super::ShardedPass) runs tasks on a thread pool in the
+//! leader process; [`crate::cluster::Worker`] runs the identical code in a
+//! worker process and streams the partials back over TCP — same caching,
+//! same mirrors, same f32/f64 boundaries, so the two topologies produce
+//! bit-identical partials for the same shard.
+
+use super::metrics::Metrics;
+use crate::data::shards::{ShardStore, TwoViewChunk};
+use crate::linalg::Mat;
+use crate::runtime::{ChunkEngine, ChunkMirror, Workspace};
+use crate::util::timer::Timer;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, OnceLock};
+
+/// The pass kinds a leader can schedule. `Trace` is the gram-trace sweep
+/// backing the scale-free λ resolution; it reads every value once, so it
+/// is ledgered as a pass like the other two.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PassKind {
+    /// Range-finder: `Ya += Aᵀ(B·Qb)`, `Yb += Bᵀ(A·Qa)`.
+    Power,
+    /// Final optimization: `Ca += (AQa)ᵀAQa`, `Cb`, `F`.
+    Final,
+    /// `[tr(AᵀA), tr(BᵀB)]` as a 1×2 partial.
+    Trace,
+}
+
+impl PassKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PassKind::Power => "power",
+            PassKind::Final => "final",
+            PassKind::Trace => "trace",
+        }
+    }
+
+    /// Wire tag for the cluster protocol.
+    pub fn tag(self) -> u8 {
+        match self {
+            PassKind::Power => 0,
+            PassKind::Final => 1,
+            PassKind::Trace => 2,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<PassKind> {
+        match tag {
+            0 => Some(PassKind::Power),
+            1 => Some(PassKind::Final),
+            2 => Some(PassKind::Trace),
+            _ => None,
+        }
+    }
+
+    /// Partial-result shapes for a pass over (da, db) views with sketch
+    /// width `r` — the [`super::Accumulator`] arity contract.
+    pub fn shapes(self, da: usize, db: usize, r: usize) -> Vec<(usize, usize)> {
+        match self {
+            PassKind::Power => vec![(da, r), (db, r)],
+            PassKind::Final => vec![(r, r); 3],
+            PassKind::Trace => vec![(1, 2)],
+        }
+    }
+}
+
+/// A shard pre-sliced into engine chunks at load time, so repeat passes
+/// over a cached shard pay zero slicing cost, plus each chunk's lazily
+/// built transposed mirror.
+struct PreparedShard {
+    chunks: Vec<PreparedChunk>,
+}
+
+struct PreparedChunk {
+    data: TwoViewChunk,
+    mirror_cell: OnceLock<Option<ChunkMirror>>,
+}
+
+impl PreparedChunk {
+    /// Transposed mirror, built on first request (`None` when the density
+    /// heuristic rejects mirroring this chunk).
+    fn mirror(&self) -> Option<&ChunkMirror> {
+        self.mirror_cell
+            .get_or_init(|| ChunkMirror::maybe_build(&self.data))
+            .as_ref()
+    }
+}
+
+impl PreparedShard {
+    fn build(data: &TwoViewChunk, chunk_rows: usize) -> PreparedShard {
+        // chunk_rows == 0 would otherwise never advance the slice cursor.
+        let chunk_rows = chunk_rows.max(1);
+        let rows = data.rows();
+        let mut chunks = Vec::with_capacity(rows.div_ceil(chunk_rows));
+        let mut lo = 0;
+        while lo < rows {
+            let hi = (lo + chunk_rows).min(rows);
+            chunks.push(PreparedChunk {
+                data: TwoViewChunk {
+                    a: data.a.slice_rows(lo, hi),
+                    b: data.b.slice_rows(lo, hi),
+                },
+                mirror_cell: OnceLock::new(),
+            });
+            lo = hi;
+        }
+        PreparedShard { chunks }
+    }
+
+    fn nnz_bytes(&self) -> u64 {
+        self.chunks
+            .iter()
+            .map(|c| (c.data.a.nnz() + c.data.b.nnz()) as u64 * 8)
+            .sum()
+    }
+}
+
+/// Size a workspace for one pass kind.
+fn begin_pass(ws: &mut Workspace, kind: PassKind, da: usize, db: usize, r: usize) {
+    match kind {
+        PassKind::Power => ws.begin_power(da, db, r),
+        PassKind::Final => ws.begin_final(r),
+        PassKind::Trace => unreachable!("trace passes do not use a workspace"),
+    }
+}
+
+/// Run one chunk through the engine, accumulating into `ws` and charging
+/// the engine-time metrics.
+#[allow(clippy::too_many_arguments)]
+fn process_chunk(
+    engine: &dyn ChunkEngine,
+    kind: PassKind,
+    chunk: &TwoViewChunk,
+    mirror: Option<&ChunkMirror>,
+    qa32: &[f32],
+    qb32: &[f32],
+    r: usize,
+    ws: &mut Workspace,
+    metrics: &Metrics,
+) -> Result<(), String> {
+    let eng_t = Timer::start();
+    match kind {
+        PassKind::Power => engine
+            .power_chunk_ws(chunk, mirror, qa32, qb32, r, ws)
+            .map_err(|e| e.to_string())?,
+        PassKind::Final => engine
+            .final_chunk_ws(chunk, qa32, qb32, r, ws)
+            .map_err(|e| e.to_string())?,
+        PassKind::Trace => unreachable!("trace passes do not run chunk engines"),
+    }
+    metrics.add(&metrics.engine_nanos, eng_t.elapsed().as_nanos() as u64);
+    metrics.add(&metrics.chunks_processed, 1);
+    Ok(())
+}
+
+/// Executes shard tasks against one shard store + chunk engine, with an
+/// optional cross-pass prepared-shard cache. Thread-safe: the coordinator
+/// shares one runner (in an `Arc`) across its pool workers.
+pub struct ShardTaskRunner {
+    store: ShardStore,
+    engine: Arc<dyn ChunkEngine>,
+    metrics: Arc<Metrics>,
+    chunk_rows: usize,
+    mirror_scatter: bool,
+    /// `Some` = cached regime (paper's "all data fits in core"); `None`
+    /// re-reads from disk each pass (the out-of-core / Hadoop-like regime).
+    cache: Option<Vec<OnceLock<Arc<PreparedShard>>>>,
+}
+
+impl ShardTaskRunner {
+    pub fn new(
+        store: ShardStore,
+        engine: Arc<dyn ChunkEngine>,
+        metrics: Arc<Metrics>,
+        chunk_rows: usize,
+        cache_shards: bool,
+        mirror_scatter: bool,
+    ) -> ShardTaskRunner {
+        let cache = cache_shards.then(|| (0..store.shards).map(|_| OnceLock::new()).collect());
+        // An uncached shard cannot amortize the transpose, and engines
+        // that ignore mirrors should not pay for building them.
+        let mirror_scatter = mirror_scatter && cache_shards && engine.wants_mirror();
+        ShardTaskRunner {
+            store,
+            engine,
+            metrics,
+            chunk_rows: chunk_rows.max(1),
+            mirror_scatter,
+            cache,
+        }
+    }
+
+    pub fn store(&self) -> &ShardStore {
+        &self.store
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Run one shard task to completion, containing both clean errors and
+    /// panics from the engine (fault injection exercises both). Exactly
+    /// one `Result` comes back — the contract both leaders' retry loops
+    /// rely on.
+    pub fn run(
+        &self,
+        shard: usize,
+        kind: PassKind,
+        qa32: &[f32],
+        qb32: &[f32],
+        r: usize,
+    ) -> Result<Vec<Mat>, String> {
+        let outcome = catch_unwind(AssertUnwindSafe(|| self.run_inner(shard, kind, qa32, qb32, r)));
+        match outcome {
+            Ok(res) => res,
+            Err(p) => Err(p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "worker panic".to_string())),
+        }
+    }
+
+    fn run_inner(
+        &self,
+        shard: usize,
+        kind: PassKind,
+        qa32: &[f32],
+        qb32: &[f32],
+        r: usize,
+    ) -> Result<Vec<Mat>, String> {
+        if shard >= self.store.shards {
+            return Err(format!(
+                "shard {shard} out of range (store has {})",
+                self.store.shards
+            ));
+        }
+        if kind == PassKind::Trace {
+            // Deliberately bypasses the prepared cache: the flat sweep over
+            // the whole shard matches the leader-side serial trace path
+            // bit-for-bit (chunked subtotals would regroup the f64 sums).
+            let load_t = Timer::start();
+            let data = self.store.load(shard)?;
+            self.metrics
+                .add(&self.metrics.load_nanos, load_t.elapsed().as_nanos() as u64);
+            self.metrics.add(
+                &self.metrics.shard_bytes_read,
+                (data.a.nnz() + data.b.nnz()) as u64 * 8,
+            );
+            return Ok(vec![Mat::from_vec(
+                1,
+                2,
+                vec![data.a.gram_trace(), data.b.gram_trace()],
+            )]);
+        }
+        let load_t = Timer::start();
+        match &self.cache {
+            // Cached regime: the shard is pre-sliced (and lazily mirrored)
+            // once; repeat passes pay zero slicing cost.
+            Some(cache) => {
+                let prepared: Arc<PreparedShard> = {
+                    let slot = &cache[shard];
+                    if let Some(hit) = slot.get() {
+                        Arc::clone(hit)
+                    } else {
+                        let data = self.store.load(shard)?;
+                        let built = Arc::new(PreparedShard::build(&data, self.chunk_rows));
+                        let _ = slot.set(Arc::clone(&built));
+                        built
+                    }
+                };
+                self.metrics
+                    .add(&self.metrics.load_nanos, load_t.elapsed().as_nanos() as u64);
+                self.metrics
+                    .add(&self.metrics.shard_bytes_read, prepared.nnz_bytes());
+                let Some(first) = prepared.chunks.first() else {
+                    return Ok(Vec::new());
+                };
+                let (da, db) = (first.data.a.cols, first.data.b.cols);
+                let mut ws = Workspace::new();
+                begin_pass(&mut ws, kind, da, db, r);
+                for pc in &prepared.chunks {
+                    let mirror = if self.mirror_scatter { pc.mirror() } else { None };
+                    process_chunk(
+                        &*self.engine,
+                        kind,
+                        &pc.data,
+                        mirror,
+                        qa32,
+                        qb32,
+                        r,
+                        &mut ws,
+                        &self.metrics,
+                    )?;
+                }
+                Ok(ws.take())
+            }
+            // Out-of-core regime: stream transient slices — the shard is
+            // dropped after this pass, so pre-slicing (and mirroring)
+            // would only double peak memory.
+            None => {
+                let data = self.store.load(shard)?;
+                self.metrics
+                    .add(&self.metrics.load_nanos, load_t.elapsed().as_nanos() as u64);
+                self.metrics.add(
+                    &self.metrics.shard_bytes_read,
+                    (data.a.nnz() + data.b.nnz()) as u64 * 8,
+                );
+                let rows = data.rows();
+                if rows == 0 {
+                    return Ok(Vec::new());
+                }
+                let mut ws = Workspace::new();
+                begin_pass(&mut ws, kind, data.a.cols, data.b.cols, r);
+                let mut lo = 0;
+                while lo < rows {
+                    let hi = (lo + self.chunk_rows).min(rows);
+                    let chunk = TwoViewChunk {
+                        a: data.a.slice_rows(lo, hi),
+                        b: data.b.slice_rows(lo, hi),
+                    };
+                    process_chunk(
+                        &*self.engine,
+                        kind,
+                        &chunk,
+                        None,
+                        qa32,
+                        qb32,
+                        r,
+                        &mut ws,
+                        &self.metrics,
+                    )?;
+                    lo = hi;
+                }
+                Ok(ws.take())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shards::ShardWriter;
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::runtime::{mat_to_f32, NativeEngine};
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn setup(tag: &str) -> (ShardStore, TwoViewChunk) {
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 300,
+            dims: 48,
+            topics: 4,
+            words_per_topic: 8,
+            background_words: 16,
+            mean_len: 6.0,
+            seed: 11,
+            ..Default::default()
+        });
+        let dir = PathBuf::from(std::env::temp_dir()).join(format!("rcca_task_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = ShardWriter::create(&dir, 60).unwrap();
+        w.write_dataset(&d.a, &d.b).unwrap();
+        (
+            ShardStore::open(&dir).unwrap(),
+            TwoViewChunk { a: d.a, b: d.b },
+        )
+    }
+
+    fn runner(store: ShardStore, cache: bool) -> ShardTaskRunner {
+        ShardTaskRunner::new(
+            store,
+            Arc::new(NativeEngine::new()),
+            Arc::new(Metrics::new()),
+            40,
+            cache,
+            true,
+        )
+    }
+
+    #[test]
+    fn cached_and_uncached_agree_bitwise() {
+        let (store, _) = setup("agree");
+        let cached = runner(store.clone(), true);
+        let uncached = runner(store, false);
+        let mut rng = Rng::new(1);
+        let qa32 = mat_to_f32(&Mat::randn(48, 4, &mut rng));
+        let qb32 = mat_to_f32(&Mat::randn(48, 4, &mut rng));
+        for shard in 0..cached.store().shards {
+            let a = cached.run(shard, PassKind::Power, &qa32, &qb32, 4).unwrap();
+            let b = uncached.run(shard, PassKind::Power, &qa32, &qb32, 4).unwrap();
+            assert_eq!(a, b, "shard {shard}");
+            let fa = cached.run(shard, PassKind::Final, &qa32, &qb32, 4).unwrap();
+            assert_eq!(fa.len(), 3);
+            let fb = uncached.run(shard, PassKind::Final, &qa32, &qb32, 4).unwrap();
+            assert_eq!(fa, fb);
+        }
+    }
+
+    #[test]
+    fn trace_partials_sum_to_whole_dataset_traces() {
+        let (store, whole) = setup("trace");
+        let r = runner(store, true);
+        let (mut ta, mut tb) = (0.0, 0.0);
+        for shard in 0..r.store().shards {
+            let mats = r.run(shard, PassKind::Trace, &[], &[], 0).unwrap();
+            assert_eq!((mats[0].rows, mats[0].cols), (1, 2));
+            ta += mats[0][(0, 0)];
+            tb += mats[0][(0, 1)];
+        }
+        assert!((ta - whole.a.gram_trace()).abs() / ta < 1e-10);
+        assert!((tb - whole.b.gram_trace()).abs() / tb < 1e-10);
+    }
+
+    #[test]
+    fn out_of_range_shard_is_contained_error() {
+        let (store, _) = setup("range");
+        let r = runner(store, true);
+        let err = r.run(999, PassKind::Power, &[], &[], 0).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn pass_kind_tags_roundtrip() {
+        for k in [PassKind::Power, PassKind::Final, PassKind::Trace] {
+            assert_eq!(PassKind::from_tag(k.tag()), Some(k));
+        }
+        assert_eq!(PassKind::from_tag(9), None);
+        assert_eq!(PassKind::Power.shapes(5, 3, 2), vec![(5, 2), (3, 2)]);
+        assert_eq!(PassKind::Final.shapes(5, 3, 2), vec![(2, 2); 3]);
+        assert_eq!(PassKind::Trace.shapes(5, 3, 2), vec![(1, 2)]);
+    }
+}

@@ -24,12 +24,18 @@
 //!   model server (`repro serve`) with request batching, atomic model
 //!   hot-swap, and a metrics surface; `repro transform` is its offline
 //!   twin over the same wire schema.
+//! * [`cluster`] — the distributed half of L3: driver/worker fitting over
+//!   TCP (`repro worker` + `repro fit --cluster`), one pass = one network
+//!   round, with heartbeat-based failure detection and mid-pass shard
+//!   redistribution; workers run the same shard-task code as the
+//!   in-process coordinator, so results are bit-reproducible.
 //!
 //! See DESIGN.md for the full system inventory and the per-experiment index.
 
 pub mod api;
 pub mod bench;
 pub mod cca;
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;

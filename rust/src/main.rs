@@ -19,6 +19,7 @@
 
 use rcca::api::{Backend, Cca, Engine, FittedModel, Solver};
 use rcca::bench::Report;
+use rcca::cluster::{ClusterConfig, Worker, WorkerConfig};
 use rcca::experiments::{self, Scale, Workload};
 use rcca::serve::{proto, Server, ServerConfig, View};
 use rcca::util::cli::{Args, Spec};
@@ -53,6 +54,9 @@ fn usage() -> String {
        nu-sweep   Figure 3 — nu sensitivity\n\
        serve      HTTP model server over a saved model\n\
        transform  offline projection through a saved model\n\
+       worker     cluster worker process serving a shard directory\n\
+       fit        RandomizedCCA on a worker cluster (rcca::cluster)\n\
+       shard-info   inspect a shard file: header, nnz, CRC status\n\
        bench-check  gate a BENCH_*.json trajectory against its baseline\n\
      \n\
      Run `repro <subcommand> --help` for flags.\n"
@@ -108,6 +112,9 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "nu-sweep" => cmd_nu(rest),
         "serve" => cmd_serve(rest),
         "transform" => cmd_transform(rest),
+        "worker" => cmd_worker(rest),
+        "fit" => cmd_fit(rest),
+        "shard-info" => cmd_shard_info(rest),
         "bench-check" => cmd_bench_check(rest),
         "--help" | "-h" | "help" => {
             print!("{}", usage());
@@ -154,7 +161,8 @@ fn common_run_flags(spec: Spec) -> Spec {
             "engine",
             "inmemory",
             "compute path: inmemory|native|pjrt, or a full spec like \
-             'native:work/shards?workers=2&chunk=256' (a spec is authoritative \
+             'native:work/shards?workers=2&chunk=256' or \
+             'cluster:127.0.0.1:9301,127.0.0.1:9302' (a spec is authoritative \
              over pre-sharded data: --workers/--chunk-rows/--workdir are ignored)",
         )
         .opt("workers", "2", "coordinator worker threads")
@@ -432,6 +440,184 @@ fn cmd_transform(argv: Vec<String>) -> anyhow::Result<()> {
         out.display()
     );
     Ok(())
+}
+
+/// `repro worker` — one cluster worker process (see `rcca::cluster`). It
+/// serves pass tasks over its local shard directory to a driver
+/// (`repro fit --cluster ...`) until killed.
+fn cmd_worker(argv: Vec<String>) -> anyhow::Result<()> {
+    let spec = Spec::new("worker", "cluster worker: serve shard passes to a driver")
+        .req("shards", "shard directory to serve (written by `repro gen`)")
+        .opt("listen", "127.0.0.1:0", "listen address (port 0 = ephemeral)")
+        .switch("no-cache", "re-read shards from disk on every pass (out-of-core regime)")
+        .opt(
+            "exit-after-partials",
+            "0",
+            "fault injection: crash the process after sending N partials (0 = off; \
+             used by the chaos tests and CI to exercise driver recovery)",
+        );
+    let args = parse(spec, &argv)?;
+    let config = WorkerConfig {
+        cache_shards: !args.bool("no-cache")?,
+        exit_after_partials: args.u64("exit-after-partials")?,
+        ..Default::default()
+    };
+    let worker = Worker::bind(Path::new(args.str("shards")), args.str("listen"), config)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let store = worker.store();
+    // Stdout is line-buffered: launchers (tests, CI, quickstart scripts)
+    // scrape the bound address from this line.
+    println!(
+        "worker listening at {} serving {} shards ({} rows, d={}x{})",
+        worker.local_addr(),
+        store.shards,
+        store.rows,
+        store.dims_a,
+        store.dims_b
+    );
+    worker.run()
+}
+
+/// `repro fit` — RandomizedCCA on a worker cluster: the distributed twin
+/// of `repro rcca`. The workers' dataset must match the scale flags (λ
+/// resolution and train/test objectives come from the generated workload).
+fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
+    let spec = scale_flags(Spec::new("fit", "run RandomizedCCA on a worker cluster"))
+        .req("cluster", "comma-separated worker addresses (host:port,host:port)")
+        .opt("p", "240", "oversampling")
+        .opt("q", "1", "power iterations")
+        .opt("nu", "0.01", "scale-free regularization nu")
+        .opt("chunk-rows", "256", "rows per engine chunk on every worker")
+        .opt("max-retries", "2", "per-shard retry budget")
+        .opt("heartbeat-timeout-secs", "10", "silence after which a worker is declared dead")
+        .opt("report-dir", "reports", "where JSON twins are written")
+        .opt("save", "", "write the fitted model JSON to this path");
+    let args = parse(spec, &argv)?;
+    let scale = scale_from(&args)?;
+    let k = scale.k;
+    let w = Workload::generate(scale);
+    let (la, lb) = w.lambdas(args.f64("nu")?);
+    let addrs = rcca::cluster::parse_addrs(args.str("cluster"));
+    let config = ClusterConfig {
+        chunk_rows: args.usize("chunk-rows")?,
+        max_retries: args.usize("max-retries")?,
+        heartbeat_timeout: Duration::from_secs(args.u64("heartbeat-timeout-secs")?.max(1)),
+        ..Default::default()
+    };
+    let mut engine = Engine::cluster(&addrs, config)?;
+    let (n, da, db) = engine.shape();
+    anyhow::ensure!(
+        (n, da, db) == (w.train.rows(), w.scale.dims, w.scale.dims),
+        "the cluster serves data shaped (n={n}, da={da}, db={db}), but the workload generated \
+         from the scale flags is (n={}, d={}). Point the workers at shards written by \
+         `repro gen` with the same n/dims/seed flags.",
+        w.train.rows(),
+        w.scale.dims
+    );
+    let t = Timer::start();
+    let model = Cca::builder()
+        .k(k)
+        .oversample(args.usize("p")?)
+        .power_iters(args.usize("q")?)
+        .lambda(la, lb)
+        .seed(w.scale.seed ^ 0xacca)
+        .fit(&mut engine)?;
+    let fit_secs = t.secs();
+    // The claim under test: every fit pass was exactly one network round.
+    // The rounds figure comes from the DRIVER's ledger (its RunPass round
+    // counter), not from the model's pass ledger, so the two rows below
+    // can disagree if a pass ever costs more than one round. Snapshot
+    // before the evaluation passes so the table reflects the fit alone.
+    let fit_ledger = engine.cluster_ledger();
+    let fit_rounds = fit_ledger
+        .as_ref()
+        .and_then(|l| l.get("rounds"))
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0);
+    let train = model.objective(&mut engine);
+    let test = model.objective(&mut w.test_engine());
+
+    let mut r = Report::new("RandomizedCCA cluster fit", &["metric", "value"]);
+    r.row(&["workers".into(), addrs.len().to_string()]);
+    r.row(&["k / p / q".into(), format!("{k} / {} / {}", args.str("p"), args.str("q"))]);
+    r.row(&["fit time (s)".into(), format!("{fit_secs:.2}")]);
+    r.row(&["cluster rounds (fit)".into(), fit_rounds.to_string()]);
+    r.row(&["data passes (fit)".into(), model.passes().to_string()]);
+    r.row(&["train objective".into(), format!("{:.4}", train.sum_corr)]);
+    r.row(&["test objective".into(), format!("{:.4}", test.sum_corr)]);
+    if let Some(ledger) = fit_ledger {
+        if let Some(workers) = ledger.get("workers").and_then(|w| w.as_arr()) {
+            for entry in workers {
+                let addr = entry.get("addr").and_then(|v| v.as_str()).unwrap_or("?");
+                let rounds = entry.get("rounds").and_then(|v| v.as_usize()).unwrap_or(0);
+                let shards = entry
+                    .get("shards_completed")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(0);
+                let dead = entry.get("dead").and_then(|v| v.as_bool()).unwrap_or(false);
+                r.row(&[
+                    format!("worker {addr}"),
+                    format!(
+                        "rounds={rounds} shards={shards}{}",
+                        if dead { " DEAD" } else { "" }
+                    ),
+                ]);
+            }
+        }
+    }
+    let save = args.str("save");
+    if !save.is_empty() {
+        model.save(Path::new(save))?;
+        r.row(&["model saved to".into(), save.into()]);
+    }
+    emit(&r, args.str("report-dir"))
+}
+
+/// `repro shard-info <file>` — print a shard file's header, nnz counts,
+/// and CRC status. The tool for debugging worker-side load failures: it
+/// keeps reporting even when the payload is corrupt, and exits nonzero so
+/// scripts can gate on integrity.
+fn cmd_shard_info(argv: Vec<String>) -> anyhow::Result<()> {
+    let mut argv = argv;
+    // Accept the file as a positional argument (`repro shard-info x.bin`)
+    // or as `--file x.bin`.
+    let positional = argv.first().map(|f| !f.starts_with("--")).unwrap_or(false);
+    if positional {
+        let file = argv.remove(0);
+        argv.insert(0, format!("--file={file}"));
+    }
+    let spec = Spec::new("shard-info", "inspect a shard file: header, nnz, CRC status")
+        .req("file", "path to a shard-NNNNN.bin file (positional also accepted)");
+    let args = parse(spec, &argv)?;
+    let path = Path::new(args.str("file"));
+    let bytes =
+        std::fs::read(path).map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    let info = rcca::data::shards::inspect_shard(&bytes)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    println!("shard      {}", path.display());
+    println!("bytes      {}", info.bytes);
+    println!("version    {}", info.version);
+    println!("rows       {}", info.rows);
+    println!("dims       {} x {}", info.dims_a, info.dims_b);
+    let nnz = |v: Option<u64>| v.map_or("unreadable".to_string(), |n| n.to_string());
+    println!("nnz a      {}", nnz(info.nnz_a));
+    println!("nnz b      {}", nnz(info.nnz_b));
+    println!(
+        "crc        stored {:08x} / computed {:08x} ({})",
+        info.crc_stored,
+        info.crc_computed,
+        if info.crc_ok() { "OK" } else { "MISMATCH" }
+    );
+    match &info.error {
+        None => {
+            println!("status     OK");
+            Ok(())
+        }
+        Some(e) => {
+            println!("status     CORRUPT: {e}");
+            anyhow::bail!("shard fails validation: {e}")
+        }
+    }
 }
 
 /// Gate a freshly measured `BENCH_*.json` trajectory against the

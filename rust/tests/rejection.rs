@@ -134,6 +134,73 @@ fn truncated_shard_is_typed_error() {
     }
 }
 
+#[test]
+fn truncation_inside_the_indices_array_is_typed_error() {
+    // Cut precisely inside view A's `indices` region (after the fixed
+    // header, the indptr block, and a few index entries) — the shape of a
+    // torn write that leaves a plausible-looking prefix.
+    let chunk = tiny_chunk();
+    let bytes = encode_shard(&chunk);
+    let header = 4 + 4 + 8 + 8 + 8;
+    let indices_start = header + 8 + (chunk.a.rows + 1) * 8;
+    let cut = indices_start + 4 * (chunk.a.nnz() / 2).max(1);
+    assert!(cut < bytes.len(), "test geometry: cut must be interior");
+    let err = decode_shard(&bytes[..cut]).unwrap_err();
+    // Either the CRC footer is gone (truncated) or the cursor runs out.
+    assert!(
+        err.contains("crc") || err.contains("truncated") || err.contains("magic"),
+        "{err}"
+    );
+}
+
+#[test]
+fn version_bump_with_valid_crc_is_typed_error() {
+    // A future-versioned shard whose CRC is *correct* must still be
+    // rejected for its version, not mis-parsed with today's layout: the
+    // CRC covers the version field, so re-sign the tampered body the way
+    // a future writer would.
+    let chunk = tiny_chunk();
+    let mut bytes = encode_shard(&chunk);
+    bytes[4..8].copy_from_slice(&2u32.to_le_bytes());
+    let body_end = bytes.len() - 4;
+    let crc = rcca::data::shards::crc32(&bytes[4..body_end]);
+    let crc_at = bytes.len() - 4;
+    bytes[crc_at..].copy_from_slice(&crc.to_le_bytes());
+    let err = decode_shard(&bytes).unwrap_err();
+    assert!(err.contains("version 2"), "{err}");
+    // And without the re-sign, the CRC catches the tamper first.
+    let mut unsigned = encode_shard(&chunk);
+    unsigned[4..8].copy_from_slice(&2u32.to_le_bytes());
+    assert!(decode_shard(&unsigned).unwrap_err().contains("crc"));
+}
+
+#[test]
+fn zero_row_shard_roundtrips_cleanly() {
+    // Degenerate but legal: a shard with zero rows (empty CSR views) must
+    // encode, CRC-validate, and decode — workers answer it with an empty
+    // partial rather than failing the pass.
+    let empty = |cols: usize| rcca::sparse::Csr {
+        rows: 0,
+        cols,
+        indptr: vec![0],
+        indices: vec![],
+        values: vec![],
+    };
+    let chunk = TwoViewChunk {
+        a: empty(32),
+        b: empty(16),
+    };
+    let bytes = encode_shard(&chunk);
+    let back = decode_shard(&bytes).unwrap();
+    assert_eq!(back, chunk);
+    assert_eq!(back.rows(), 0);
+    let info = rcca::data::shards::inspect_shard(&bytes).unwrap();
+    assert!(info.crc_ok());
+    assert_eq!(info.rows, 0);
+    assert_eq!((info.nnz_a, info.nnz_b), (Some(0), Some(0)));
+    assert_eq!(info.error, None);
+}
+
 fn repro() -> Command {
     Command::new(env!("CARGO_BIN_EXE_repro"))
 }
@@ -162,4 +229,40 @@ fn cli_serve_rejects_missing_model() {
     assert!(!out.status.success());
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("model") || err.contains("io"), "{err}");
+}
+
+#[test]
+fn cli_shard_info_reports_health_and_gates_on_corruption() {
+    let dir = std::env::temp_dir().join("rcca_rejection_shard_info");
+    let _ = std::fs::remove_dir_all(&dir);
+    let chunk = tiny_chunk();
+    let mut w = ShardWriter::create(&dir, 128).unwrap();
+    w.write_dataset(&chunk.a, &chunk.b).unwrap();
+    let store = ShardStore::open(&dir).unwrap();
+    let path = store.shard_path(0);
+
+    // Clean shard: positional file argument, exit 0, OK status.
+    let out = repro()
+        .args(["shard-info", path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("OK"), "{text}");
+    assert!(text.contains("crc"), "{text}");
+    assert!(text.lines().any(|l| l.starts_with("rows") && l.ends_with("128")), "{text}");
+
+    // Corrupted shard: still prints the report, but exits nonzero with
+    // the CRC verdict — the debugging loop for worker-side load failures.
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x5a;
+    std::fs::write(&path, &bytes).unwrap();
+    let out = repro()
+        .args(["shard-info", "--file", path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("CORRUPT") || text.contains("MISMATCH"), "{text}");
 }
