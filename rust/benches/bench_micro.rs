@@ -1,4 +1,4 @@
-//! Micro-benches (P1–P5): engine and substrate hot paths.
+//! Micro-benches (P1–P6): engine and substrate hot paths.
 //!
 //!   P1  GEMM roofline — f32 dense matmul GFLOP/s (the native final-pass core)
 //!   P2  sparse-native vs dense-PJRT chunk crossover (the engine choice)
@@ -7,6 +7,9 @@
 //!   P5  sparse kernels — scalar baselines vs the panel-blocked/fused
 //!       `sparse::kernels` twins, incl. the power-chunk path and the serve
 //!       transform (GFLOP/s per kernel)
+//!   P6  out-of-core streaming — uncached end-to-end pass wall-time:
+//!       legacy allocating loader vs pooled blocking loader vs the
+//!       prefetch pipeline (I/O-overlap ratio feeds a bench-check gate)
 //!
 //! These feed EXPERIMENTS.md §Perf (before/after iteration log). Every
 //! measured section also lands in `BENCH_micro.json` at the repo root so
@@ -49,6 +52,7 @@ fn main() {
     p3_dataplane(&mut traj);
     p4_coordinator(&mut traj);
     p5_sparse_kernels(&mut traj);
+    p6_streaming(&mut traj);
     let mut doc = Json::obj();
     doc.set("bench", rcca::util::json::jstr("micro"));
     doc.set("sections", traj.0);
@@ -264,7 +268,7 @@ fn p5_sparse_kernels(traj: &mut Trajectory) {
     let mut ws = Workspace::new();
     let s_fused = bench_fn(&format!("power_chunk fused+workspace     r={r}"), || {
         ws.begin_power(d, d, r);
-        eng.power_chunk_ws(&chunk, None, &qa, &qb, r, &mut ws).unwrap();
+        eng.power_chunk_ws(chunk.view(), None, &qa, &qb, r, &mut ws).unwrap();
     });
     println!(
         "    -> {:.2} GFLOP/s ({:.2}x vs scalar)",
@@ -275,7 +279,7 @@ fn p5_sparse_kernels(traj: &mut Trajectory) {
     let mir = ChunkMirror::build(&chunk);
     let s_mir = bench_fn(&format!("power_chunk mirrored scatter    r={r}"), || {
         ws.begin_power(d, d, r);
-        eng.power_chunk_ws(&chunk, Some(&mir), &qa, &qb, r, &mut ws)
+        eng.power_chunk_ws(chunk.view(), Some(&mir), &qa, &qb, r, &mut ws)
             .unwrap();
     });
     println!(
@@ -302,6 +306,109 @@ fn p5_sparse_kernels(traj: &mut Trajectory) {
     });
     println!("    -> {:.2} GFLOP/s", gflops(flops_serve, &s));
     traj.record("serve_transform_f32", &s);
+    println!();
+}
+
+/// P6: the paper's out-of-core scenario end to end — every pass re-reads
+/// the shard store from disk. Three loaders over the identical compute:
+///
+///   * `stream_pass_legacy`     — the pre-change path: blocking
+///     `ShardStore::load` (allocating decode) + owned `slice_rows` chunks;
+///   * `stream_pass_blocking`   — pooled buffers + in-place decode +
+///     borrowed chunk views, but reads on the compute thread (depth 0);
+///   * `stream_pass_prefetched` — same, with the I/O thread reading and
+///     CRC-verifying the next shards while kernels run.
+///
+/// All three produce bitwise-identical passes (coordinator tests pin it);
+/// only wall-time differs. `repro bench-check --gates` arms
+/// `stream_pass_prefetched/stream_pass_blocking` as a within-run ratio so
+/// CI catches the pipeline ever becoming a pessimization. `workers` is
+/// pinned to 1 so the measured overlap comes from the I/O thread alone.
+fn p6_streaming(traj: &mut Trajectory) {
+    println!("## P6: out-of-core streaming — uncached end-to-end pass wall-time");
+    use rcca::cca::pass::PassEngine;
+    use rcca::coordinator::{ShardedPass, ShardedPassConfig};
+    use rcca::data::shards::ShardStore;
+    use std::sync::Arc;
+    let short = rcca::bench::short_mode();
+    let (n, dims, r) = if short { (4096usize, 512usize, 32usize) } else { (16384, 2048, 64) };
+    let d = SynthParl::generate(SynthParlConfig {
+        n,
+        dims,
+        topics: 16,
+        words_per_topic: 20,
+        background_words: 64,
+        mean_len: 16.0,
+        seed: 19,
+        ..Default::default()
+    });
+    let dir = std::env::temp_dir().join("rcca_bench_micro_p6");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut w = rcca::data::shards::ShardWriter::create(&dir, 1024).unwrap();
+    w.write_dataset(&d.a, &d.b).unwrap();
+    let store = ShardStore::open(&dir).unwrap();
+    let mut rng = Rng::new(23);
+    let qa = Mat::randn(dims, r, &mut rng);
+    let qb = Mat::randn(dims, r, &mut rng);
+    let (qa32, qb32) = (mat_to_f32(&qa), mat_to_f32(&qb));
+    let chunk_rows = 256usize;
+
+    // Legacy loader: exactly the pre-change uncached shard task.
+    let eng = NativeEngine::new();
+    let s_legacy = bench_fn("stream pass: legacy allocating loader", || {
+        for i in 0..store.shards {
+            let data = store.load(i).unwrap();
+            let rows = data.rows();
+            let mut ws = Workspace::new();
+            ws.begin_power(dims, dims, r);
+            let mut lo = 0;
+            while lo < rows {
+                let hi = (lo + chunk_rows).min(rows);
+                let chunk = rcca::data::TwoViewChunk {
+                    a: data.a.slice_rows(lo, hi),
+                    b: data.b.slice_rows(lo, hi),
+                };
+                eng.power_chunk_ws(chunk.view(), None, &qa32, &qb32, r, &mut ws)
+                    .unwrap();
+                lo = hi;
+            }
+            let _ = ws.take();
+        }
+    });
+    traj.record("stream_pass_legacy", &s_legacy);
+
+    let mk = |depth: usize, io: usize| {
+        ShardedPass::new(
+            store.clone(),
+            Arc::new(NativeEngine::new()),
+            ShardedPassConfig {
+                workers: 1,
+                chunk_rows,
+                cache_shards: false,
+                prefetch_depth: depth,
+                io_threads: io,
+                ..Default::default()
+            },
+        )
+    };
+    let mut blocking = mk(0, 1);
+    let s_block = bench_fn("stream pass: pooled blocking loader  (depth 0)", || {
+        let _ = blocking.power_pass(&qa, &qb);
+    });
+    traj.record("stream_pass_blocking", &s_block);
+    let mut prefetched = mk(2, 1);
+    let s_pre = bench_fn("stream pass: prefetch pipeline (depth 2, io 1)", || {
+        let _ = prefetched.power_pass(&qa, &qb);
+    });
+    traj.record("stream_pass_prefetched", &s_pre);
+    println!(
+        "    -> I/O overlap: {:.2}x vs pooled blocking, {:.2}x vs legacy loader \
+         ({} shards, d={dims}, r={r})",
+        s_block.p50 / s_pre.p50,
+        s_legacy.p50 / s_pre.p50,
+        store.shards
+    );
+    let _ = std::fs::remove_dir_all(&dir);
     println!();
 }
 

@@ -66,15 +66,27 @@ pub struct ShardedOpts {
     pub chunk_rows: usize,
     /// Keep decoded shards in memory after first load.
     pub cache_shards: bool,
+    /// Out-of-core streaming (uncached regime only): shards read ahead of
+    /// compute per pass; 0 = blocking loads.
+    pub prefetch_depth: usize,
+    /// Out-of-core streaming: reader threads feeding the prefetch queue.
+    pub io_threads: usize,
+    /// Out-of-core streaming: MiB of parked prefetched shard bytes the
+    /// pipeline may hold (peak-memory budget); 0 = depth-bounded only.
+    pub prefetch_budget_mb: usize,
     pub compute: Compute,
 }
 
 impl Default for ShardedOpts {
     fn default() -> Self {
+        let defaults = crate::coordinator::ShardedPassConfig::default();
         ShardedOpts {
             workers: 2,
             chunk_rows: 256,
             cache_shards: true,
+            prefetch_depth: defaults.prefetch_depth,
+            io_threads: defaults.io_threads,
+            prefetch_budget_mb: defaults.prefetch_budget_mb,
             compute: Compute::Native,
         }
     }
@@ -142,6 +154,9 @@ impl Engine {
                 workers: opts.workers,
                 chunk_rows: opts.chunk_rows,
                 cache_shards: opts.cache_shards,
+                prefetch_depth: opts.prefetch_depth,
+                io_threads: opts.io_threads,
+                prefetch_budget_mb: opts.prefetch_budget_mb,
                 ..Default::default()
             },
         );
@@ -161,11 +176,14 @@ impl Engine {
     /// native:<shard_dir>[?opts]            coordinator + native chunks
     /// pjrt:<shard_dir>@<artifacts>[?opts]  coordinator + AOT XLA chunks
     /// opts: workers=N & chunk=N & cache=true|false
+    ///       & prefetch=N & io-threads=N & prefetch-mb=N   (out-of-core)
     /// cluster:<addr>,<addr>,...[?copts]    driver over running workers
     /// copts: chunk=N & retries=N & hb-timeout-ms=N & connect-timeout-ms=N
+    ///        & prefetch=N & io-threads=N
     /// ```
     ///
     /// Examples: `native:work/shards?workers=4&chunk=256`,
+    /// `native:work/shards?cache=false&prefetch=4&io-threads=2`,
     /// `cluster:127.0.0.1:9301,127.0.0.1:9302?chunk=256`.
     pub fn from_spec(spec: &str) -> Result<Engine, ApiError> {
         let (kind, rest) = spec
@@ -190,9 +208,15 @@ impl Engine {
                     "workers" => opts.workers = val.parse().map_err(|_| bad(key))?,
                     "chunk" => opts.chunk_rows = val.parse().map_err(|_| bad(key))?,
                     "cache" => opts.cache_shards = val.parse().map_err(|_| bad(key))?,
+                    "prefetch" => opts.prefetch_depth = val.parse().map_err(|_| bad(key))?,
+                    "io-threads" => opts.io_threads = val.parse().map_err(|_| bad(key))?,
+                    "prefetch-mb" => {
+                        opts.prefetch_budget_mb = val.parse().map_err(|_| bad(key))?
+                    }
                     other => {
                         return Err(ApiError::EngineSpec(format!(
-                            "unknown option '{other}' (expected workers|chunk|cache)"
+                            "unknown option '{other}' (expected \
+                             workers|chunk|cache|prefetch|io-threads|prefetch-mb)"
                         )))
                     }
                 }
@@ -251,6 +275,8 @@ impl Engine {
                 match key {
                     "chunk" => config.chunk_rows = val.parse().map_err(|_| bad(key))?,
                     "retries" => config.max_retries = val.parse().map_err(|_| bad(key))?,
+                    "prefetch" => config.prefetch_depth = val.parse().map_err(|_| bad(key))?,
+                    "io-threads" => config.io_threads = val.parse().map_err(|_| bad(key))?,
                     "hb-timeout-ms" => {
                         config.heartbeat_timeout =
                             Duration::from_millis(val.parse().map_err(|_| bad(key))?)
@@ -262,7 +288,8 @@ impl Engine {
                     other => {
                         return Err(ApiError::EngineSpec(format!(
                             "unknown cluster option '{other}' (expected \
-                             chunk|retries|hb-timeout-ms|connect-timeout-ms)"
+                             chunk|retries|prefetch|io-threads|hb-timeout-ms|\
+                             connect-timeout-ms)"
                         )))
                     }
                 }
@@ -401,7 +428,9 @@ mod tests {
         std::thread::spawn(move || {
             let _ = worker.serve_one();
         });
-        let mut eng = Engine::from_spec(&format!("cluster:{addr}?chunk=60&retries=1")).unwrap();
+        let mut eng =
+            Engine::from_spec(&format!("cluster:{addr}?chunk=60&retries=1&prefetch=3&io-threads=2"))
+                .unwrap();
         assert_eq!(eng.backend(), Backend::Cluster);
         assert!(eng.metrics().is_some());
         assert_eq!(eng.shape(), (260, 40, 40));
@@ -477,6 +506,30 @@ mod tests {
     }
 
     #[test]
+    fn streaming_spec_matches_cached_spec_bitwise() {
+        let chunk = dataset(320, 40);
+        let dir = std::env::temp_dir().join("rcca_api_engine_stream");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = ShardWriter::create(&dir, 64).unwrap();
+        w.write_dataset(&chunk.a, &chunk.b).unwrap();
+        let base = format!("native:{}?workers=2&chunk=40", dir.display());
+        let streaming = format!(
+            "native:{}?workers=2&chunk=40&cache=false&prefetch=3&io-threads=2&prefetch-mb=64",
+            dir.display()
+        );
+        let mut cached = Engine::from_spec(&base).unwrap();
+        let mut ooc = Engine::from_spec(&streaming).unwrap();
+        let mut rng = Rng::new(3);
+        let q = Mat::randn(40, 4, &mut rng);
+        let (want, want_b) = cached.power_pass(&q, &q);
+        let (got, got_b) = ooc.power_pass(&q, &q);
+        // Same chunking, same kernels, shard-order reduce: bit-identical.
+        assert_eq!(got, want);
+        assert_eq!(got_b, want_b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn bad_specs_are_typed_errors() {
         for bad in [
             "nocolon",
@@ -486,10 +539,13 @@ mod tests {
             "native:/tmp?workers",
             "native:/tmp?workers=abc",
             "native:/tmp?bogus=1",
+            "native:/tmp?prefetch=abc",
+            "native:/tmp?io-threads=",
             "inmemory:/tmp?workers=2",
             "cluster:",
             "cluster:127.0.0.1:1?bogus=1",
             "cluster:127.0.0.1:1?chunk=abc",
+            "cluster:127.0.0.1:1?prefetch=x",
             "cluster:127.0.0.1:1?connect-timeout-ms=200",
         ] {
             let err = Engine::from_spec(bad).unwrap_err();

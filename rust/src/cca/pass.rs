@@ -83,7 +83,7 @@ impl PassEngine for InMemoryPass {
             .get_or_init(|| ChunkMirror::maybe_build(&self.chunk))
             .as_ref();
         self.engine
-            .power_chunk_ws(&self.chunk, mirror, &qa32, &qb32, r, &mut self.ws)
+            .power_chunk_ws(self.chunk.view(), mirror, &qa32, &qb32, r, &mut self.ws)
             .expect("in-memory power pass");
         let mut out = self.ws.take();
         let yb = out.pop().unwrap();

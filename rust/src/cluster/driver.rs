@@ -50,16 +50,26 @@ pub struct ClusterConfig {
     pub heartbeat_timeout: Duration,
     /// Bound on connect + handshake per worker.
     pub connect_timeout: Duration,
+    /// Out-of-core streaming on the workers (broadcast in
+    /// [`Msg::AssignShards`]; perf-only — results are bitwise identical
+    /// for every setting, and workers that cache their shards ignore it):
+    /// shards each worker reads ahead of its compute loop (0 = blocking).
+    pub prefetch_depth: usize,
+    /// Reader threads each worker feeds its prefetch queue with.
+    pub io_threads: usize,
 }
 
 impl Default for ClusterConfig {
     fn default() -> ClusterConfig {
+        let stream = crate::data::stream::StreamConfig::default();
         ClusterConfig {
             chunk_rows: 256,
             max_retries: 2,
             heartbeat_interval: Duration::from_secs(1),
             heartbeat_timeout: Duration::from_secs(10),
             connect_timeout: Duration::from_secs(10),
+            prefetch_depth: stream.prefetch_depth,
+            io_threads: stream.io_threads,
         }
     }
 }
@@ -145,6 +155,8 @@ impl ClusterPass {
             let assigned: Vec<u32> = pass.members.assigned(w).iter().map(|&s| s as u32).collect();
             let msg = Msg::AssignShards {
                 chunk_rows: pass.config.chunk_rows as u32,
+                prefetch_depth: pass.config.prefetch_depth as u32,
+                io_threads: pass.config.io_threads as u32,
                 shards: assigned,
             };
             // On failure `pass` drops here, shutting every connection down.

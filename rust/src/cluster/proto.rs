@@ -62,8 +62,15 @@ pub enum Msg {
     /// Driver → worker: the worker's shard partition for subsequent
     /// passes, plus the chunking the engine must use (chunking changes the
     /// f32 accumulation grouping, so it must match across the cluster for
-    /// reproducible partials).
-    AssignShards { chunk_rows: u32, shards: Vec<u32> },
+    /// reproducible partials) and the out-of-core streaming knobs
+    /// (prefetch depth / I/O threads — perf-only: they never change
+    /// results, and are ignored by workers that cache their shards).
+    AssignShards {
+        chunk_rows: u32,
+        prefetch_depth: u32,
+        io_threads: u32,
+        shards: Vec<u32>,
+    },
     /// Driver → worker: run one pass over `shards` (normally the standing
     /// assignment; a recovery re-dispatch lists reassigned shards). `qa32`
     /// / `qb32` are the row-major (da×r)/(db×r) f32 broadcasts; empty for
@@ -229,8 +236,15 @@ fn encode_body(msg: &Msg) -> Vec<u8> {
             push_u64(&mut b, *dims_a);
             push_u64(&mut b, *dims_b);
         }
-        Msg::AssignShards { chunk_rows, shards } => {
+        Msg::AssignShards {
+            chunk_rows,
+            prefetch_depth,
+            io_threads,
+            shards,
+        } => {
             push_u32(&mut b, *chunk_rows);
+            push_u32(&mut b, *prefetch_depth);
+            push_u32(&mut b, *io_threads);
             push_u32s(&mut b, shards);
         }
         Msg::RunPass {
@@ -288,6 +302,8 @@ fn decode_body(tag: u8, body: &[u8]) -> Result<Msg, String> {
         },
         TAG_ASSIGN => Msg::AssignShards {
             chunk_rows: cur.u32()?,
+            prefetch_depth: cur.u32()?,
+            io_threads: cur.u32()?,
             shards: cur.u32s()?,
         },
         TAG_RUN_PASS => {
@@ -437,6 +453,8 @@ mod tests {
             },
             Msg::AssignShards {
                 chunk_rows: 256,
+                prefetch_depth: 2,
+                io_threads: 1,
                 shards: vec![0, 2, 4],
             },
             Msg::RunPass {

@@ -17,8 +17,9 @@
 
 use super::proto::{Msg, SHARD_NONE};
 use super::transport::Conn;
-use crate::coordinator::{Metrics, PassKind, ShardTaskRunner};
+use crate::coordinator::{Metrics, PassKind, RunnerConfig, ShardTaskRunner};
 use crate::data::shards::ShardStore;
+use crate::data::stream::StreamConfig;
 use crate::runtime::{ChunkEngine, NativeEngine};
 use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -34,6 +35,10 @@ pub struct WorkerConfig {
     pub cache_shards: bool,
     /// Build transposed chunk mirrors for cached shards.
     pub mirror_scatter: bool,
+    /// Out-of-core streaming defaults, used until (and unless) the driver
+    /// broadcasts its own in [`Msg::AssignShards`]. Perf-only knobs:
+    /// results are bitwise identical for every setting.
+    pub stream: StreamConfig,
     /// Fault injection for tests and chaos drills: abruptly exit the
     /// process (no goodbye, simulating a crash/OOM-kill) after sending
     /// this many partials. 0 disables.
@@ -45,6 +50,7 @@ impl Default for WorkerConfig {
         WorkerConfig {
             cache_shards: true,
             mirror_scatter: true,
+            stream: StreamConfig::default(),
             exit_after_partials: 0,
         }
     }
@@ -65,6 +71,7 @@ pub struct Worker {
 struct Session {
     runner: Arc<ShardTaskRunner>,
     chunk_rows: usize,
+    stream: StreamConfig,
 }
 
 impl Worker {
@@ -121,17 +128,21 @@ impl Worker {
         self.serve(stream)
     }
 
-    fn build_session(&self, chunk_rows: usize) -> Session {
+    fn build_session(&self, chunk_rows: usize, stream: StreamConfig) -> Session {
         Session {
             runner: Arc::new(ShardTaskRunner::new(
                 self.store.clone(),
                 Arc::clone(&self.engine),
                 Arc::clone(&self.metrics),
-                chunk_rows,
-                self.config.cache_shards,
-                self.config.mirror_scatter,
+                RunnerConfig {
+                    chunk_rows,
+                    cache_shards: self.config.cache_shards,
+                    mirror_scatter: self.config.mirror_scatter,
+                    stream: stream.clone(),
+                },
             )),
             chunk_rows,
+            stream,
         }
     }
 
@@ -149,7 +160,7 @@ impl Worker {
             dims_a: self.store.dims_a as u64,
             dims_b: self.store.dims_b as u64,
         })?;
-        let mut session = self.build_session(256);
+        let mut session = self.build_session(256, self.config.stream.clone());
         // Messages that arrived while a pass was executing (e.g. a
         // recovery re-dispatch of a dead peer's shards) queue here and are
         // served before blocking on the socket again.
@@ -167,13 +178,27 @@ impl Worker {
             };
             match msg {
                 Msg::Heartbeat { nonce } => conn.send(&Msg::Heartbeat { nonce })?,
-                Msg::AssignShards { chunk_rows, shards } => {
+                Msg::AssignShards {
+                    chunk_rows,
+                    prefetch_depth,
+                    io_threads,
+                    shards,
+                } => {
                     let chunk_rows = (chunk_rows as usize).max(1);
-                    if chunk_rows != session.chunk_rows {
+                    let stream = StreamConfig {
+                        prefetch_depth: prefetch_depth as usize,
+                        io_threads: (io_threads as usize).max(1),
+                        max_buffered_mb: self.config.stream.max_buffered_mb,
+                    };
+                    if chunk_rows != session.chunk_rows
+                        || stream.prefetch_depth != session.stream.prefetch_depth
+                        || stream.io_threads != session.stream.io_threads
+                    {
                         // Chunking determines the f32 accumulation
                         // grouping, so a chunk_rows change invalidates the
-                        // prepared cache wholesale.
-                        session = self.build_session(chunk_rows);
+                        // prepared cache wholesale; streaming knobs just
+                        // rebuild the (stateless across passes) pipeline.
+                        session = self.build_session(chunk_rows, stream);
                     }
                     eprintln!(
                         "worker: assigned {} shards (chunk_rows {chunk_rows})",
@@ -244,6 +269,11 @@ impl Worker {
             })?;
             return Ok(());
         }
+        // Arm the streaming pipeline with this pass's shard order (no-op
+        // for cached sessions): reads run ahead of the shard loop below.
+        session
+            .runner
+            .plan_pass(&shards.iter().map(|&s| s as usize).collect::<Vec<_>>());
         for &shard in shards {
             // Between shards: answer heartbeats, honor aborts, park the
             // rest for the serve loop.
@@ -349,6 +379,8 @@ mod tests {
         let all: Vec<u32> = (0..shards as u32).collect();
         conn.send(&Msg::AssignShards {
             chunk_rows: 40,
+            prefetch_depth: 2,
+            io_threads: 1,
             shards: all.clone(),
         })
         .unwrap();
@@ -388,9 +420,10 @@ mod tests {
             store,
             Arc::new(NativeEngine::new()),
             Arc::new(Metrics::new()),
-            40,
-            true,
-            true,
+            RunnerConfig {
+                chunk_rows: 40,
+                ..Default::default()
+            },
         );
         let mut acc = Accumulator::new(&PassKind::Power.shapes(32, 32, 4));
         for (shard, mats) in got.iter().enumerate() {
@@ -400,6 +433,84 @@ mod tests {
             acc.add(mats);
         }
         assert_eq!(acc.contributions(), shards);
+        drop(conn);
+        handle.join().unwrap().unwrap();
+    }
+
+    /// The out-of-core worker (no shard cache, prefetch pipeline armed)
+    /// must stream back partials bit-identical to a cached worker's.
+    #[test]
+    fn streaming_worker_partials_match_cached_bitwise() {
+        let dir = shard_dir("streaming");
+        let mut worker = Worker::bind(
+            &dir,
+            "127.0.0.1:0",
+            WorkerConfig {
+                cache_shards: false,
+                stream: StreamConfig {
+                    prefetch_depth: 3,
+                    io_threads: 2,
+                    max_buffered_mb: 0,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let addr = worker.local_addr();
+        let store = worker.store().clone();
+        let shards = store.shards;
+        let handle = std::thread::spawn(move || worker.serve_one());
+
+        let mut conn = Conn::new(TcpStream::connect(addr).unwrap());
+        conn.send(&Msg::HelloDriver).unwrap();
+        let _ = conn.recv(Some(Duration::from_secs(10))).unwrap();
+        let all: Vec<u32> = (0..shards as u32).collect();
+        conn.send(&Msg::AssignShards {
+            chunk_rows: 40,
+            prefetch_depth: 3,
+            io_threads: 2,
+            shards: all.clone(),
+        })
+        .unwrap();
+        let mut rng = Rng::new(7);
+        let qa = Mat::randn(32, 4, &mut rng);
+        let qb = Mat::randn(32, 4, &mut rng);
+        let (qa32, qb32) = (mat_to_f32(&qa), mat_to_f32(&qb));
+        conn.send(&Msg::RunPass {
+            pass_id: 1,
+            kind: PassKind::Power,
+            r: 4,
+            qa32: qa32.clone(),
+            qb32: qb32.clone(),
+            shards: all,
+        })
+        .unwrap();
+        let mut got: Vec<Option<Vec<Mat>>> = vec![None; shards];
+        for _ in 0..shards {
+            match conn.recv(Some(Duration::from_secs(30))).unwrap() {
+                Msg::Partial {
+                    pass_id: 1,
+                    shard,
+                    mats,
+                } => got[shard as usize] = Some(mats),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Reference: the shared runner in the cached regime, locally.
+        let reference = ShardTaskRunner::new(
+            store,
+            Arc::new(NativeEngine::new()),
+            Arc::new(Metrics::new()),
+            RunnerConfig {
+                chunk_rows: 40,
+                ..Default::default()
+            },
+        );
+        for (shard, mats) in got.iter().enumerate() {
+            let mats = mats.as_ref().expect("partial for every shard");
+            let want = reference.run(shard, PassKind::Power, &qa32, &qb32, 4).unwrap();
+            assert_eq!(*mats, want, "shard {shard}: streaming partial must be bit-identical");
+        }
         drop(conn);
         handle.join().unwrap().unwrap();
     }

@@ -1,7 +1,7 @@
 //! Fault injection: a wrapper engine that fails deterministically-randomly,
 //! used to test the coordinator's retry path (and in chaos examples).
 
-use crate::data::TwoViewChunk;
+use crate::data::TwoViewChunkRef;
 use crate::runtime::{ChunkEngine, ChunkMirror, Workspace};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -60,7 +60,7 @@ impl<E: ChunkEngine> ChunkEngine for FaultyEngine<E> {
 
     fn power_chunk_ws(
         &self,
-        chunk: &TwoViewChunk,
+        chunk: TwoViewChunkRef<'_>,
         mirror: Option<&ChunkMirror>,
         qa32: &[f32],
         qb32: &[f32],
@@ -73,7 +73,7 @@ impl<E: ChunkEngine> ChunkEngine for FaultyEngine<E> {
 
     fn final_chunk_ws(
         &self,
-        chunk: &TwoViewChunk,
+        chunk: TwoViewChunkRef<'_>,
         qa32: &[f32],
         qb32: &[f32],
         r: usize,
@@ -88,6 +88,7 @@ impl<E: ChunkEngine> ChunkEngine for FaultyEngine<E> {
 mod tests {
     use super::*;
     use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::data::TwoViewChunk;
     use crate::linalg::Mat;
     use crate::runtime::{mat_to_f32, NativeEngine};
     use crate::util::rng::Rng;

@@ -31,4 +31,4 @@ pub use metrics::Metrics;
 pub use progress::PassProgress;
 pub use reduce::Accumulator;
 pub use sharded::{ShardedPass, ShardedPassConfig};
-pub use task::{PassKind, ShardTaskRunner};
+pub use task::{PassKind, RunnerConfig, ShardTaskRunner};

@@ -2,9 +2,10 @@
 
 use super::progress::PassProgress;
 use super::reduce::Accumulator;
-use super::task::{PassKind, ShardTaskRunner};
+use super::task::{PassKind, RunnerConfig, ShardTaskRunner};
 use crate::cca::pass::PassEngine;
 use crate::data::shards::ShardStore;
+use crate::data::stream::StreamConfig;
 use crate::linalg::Mat;
 use crate::runtime::{mat_to_f32, ChunkEngine};
 use crate::util::pool::Pool;
@@ -30,10 +31,19 @@ pub struct ShardedPassConfig {
     /// with `cache_shards` (an uncached shard cannot amortize the
     /// transpose) and only for chunks the density heuristic accepts.
     pub mirror_scatter: bool,
+    /// Out-of-core streaming: shards read ahead of compute per pass
+    /// (0 = blocking loads). Only used when `cache_shards` is false.
+    pub prefetch_depth: usize,
+    /// Out-of-core streaming: reader threads feeding the prefetch queue.
+    pub io_threads: usize,
+    /// Out-of-core streaming: MiB of parked (read, unconsumed) shard
+    /// bytes the pipeline may hold; 0 = bounded by `prefetch_depth` alone.
+    pub prefetch_budget_mb: usize,
 }
 
 impl Default for ShardedPassConfig {
     fn default() -> Self {
+        let stream = StreamConfig::default();
         ShardedPassConfig {
             workers: 2,
             queue_capacity: 8,
@@ -41,6 +51,9 @@ impl Default for ShardedPassConfig {
             max_retries: 2,
             cache_shards: true,
             mirror_scatter: true,
+            prefetch_depth: stream.prefetch_depth,
+            io_threads: stream.io_threads,
+            prefetch_budget_mb: stream.max_buffered_mb,
         }
     }
 }
@@ -77,9 +90,16 @@ impl ShardedPass {
             store.clone(),
             engine,
             Arc::clone(&metrics),
-            config.chunk_rows,
-            config.cache_shards,
-            config.mirror_scatter,
+            RunnerConfig {
+                chunk_rows: config.chunk_rows,
+                cache_shards: config.cache_shards,
+                mirror_scatter: config.mirror_scatter,
+                stream: StreamConfig {
+                    prefetch_depth: config.prefetch_depth,
+                    io_threads: config.io_threads,
+                    max_buffered_mb: config.prefetch_budget_mb,
+                },
+            },
         ));
         ShardedPass {
             store,
@@ -113,7 +133,10 @@ impl ShardedPass {
         });
     }
 
-    /// Run one full pass: map over all shards with retries, reduce.
+    /// Run one full pass: map over all shards with retries, reduce
+    /// deterministically in shard order (same parked-prefix fold the
+    /// cluster driver uses, so in-process, streaming, and cluster fits
+    /// all reduce in the same order and stay bit-identical).
     fn run_pass(&mut self, kind: PassKind, qa: &Mat, qb: &Mat) -> anyhow::Result<Vec<Mat>> {
         self.passes += 1;
         self.metrics.add(&self.metrics.passes, 1);
@@ -123,24 +146,43 @@ impl ShardedPass {
         let qa32 = Arc::new(mat_to_f32(qa));
         let qb32 = Arc::new(mat_to_f32(qb));
 
+        // Arm the streaming pipeline (no-op for cached runners) with the
+        // exact submission order: reads run ahead of the pool workers.
+        let order: Vec<usize> = (0..self.store.shards).collect();
+        self.runner.plan_pass(&order);
+
         // One channel for first attempts and retries alike; the leader
         // keeps its sender alive until the pass completes, and completion
         // is tracked by `PassProgress` rather than channel disconnection.
         let (tx, rx) = mpsc::channel::<TaskResult>();
-        for shard in 0..self.store.shards {
+        for &shard in &order {
             self.submit_shard(shard, kind, Arc::clone(&qa32), Arc::clone(&qb32), r, tx.clone());
         }
 
         let mut acc = Accumulator::new(&shapes);
         let mut progress = PassProgress::new(self.store.shards, self.config.max_retries);
+        // Partials park here until the contiguous shard-index prefix
+        // reaches them, then fold into `acc` in shard order — the bit
+        // pattern no longer depends on worker scheduling.
+        let mut partials: Vec<Option<Vec<Mat>>> = (0..self.store.shards).map(|_| None).collect();
+        let mut next_to_reduce = 0usize;
         while !progress.all_done() {
             let (shard, result) = rx.recv().expect("leader sender alive");
             match result {
-                Ok(partials) => {
+                Ok(mats) => {
                     anyhow::ensure!(progress.complete(shard), "duplicate result for shard {shard}");
                     let t = Timer::start();
-                    if !partials.is_empty() {
-                        acc.add(&partials);
+                    partials[shard] = Some(mats);
+                    while next_to_reduce < self.store.shards {
+                        match partials[next_to_reduce].take() {
+                            Some(ready) => {
+                                if !ready.is_empty() {
+                                    acc.add(&ready);
+                                }
+                                next_to_reduce += 1;
+                            }
+                            None => break,
+                        }
                     }
                     self.metrics
                         .add(&self.metrics.reduce_nanos, t.elapsed().as_nanos() as u64);
@@ -165,6 +207,11 @@ impl ShardedPass {
                 }
             }
         }
+        anyhow::ensure!(
+            next_to_reduce == self.store.shards,
+            "pass completed with {next_to_reduce}/{} shards reduced",
+            self.store.shards
+        );
         Ok(acc.finish())
     }
 }
@@ -357,6 +404,41 @@ mod tests {
         let (ya_s, _) = sharded.power_pass(&qa, &qb);
         let (ya_m, _) = inmem.power_pass(&qa, &qb);
         assert!(ya_s.rel_diff(&ya_m) < 1e-5);
+    }
+
+    #[test]
+    fn streaming_fit_bitwise_equals_cached_fit() {
+        // The acceptance invariant of the out-of-core engine: caching,
+        // prefetch depth, I/O parallelism, and worker scheduling change
+        // wall-time only — the reduced pass results are bit-identical
+        // (per-shard partials are bitwise equal and the leader reduces in
+        // shard order).
+        let (store, _) = setup(400, 48, 60, "stream_bitwise");
+        let run = |cache: bool, depth: usize, io: usize, workers: usize| {
+            let mut sharded = ShardedPass::new(
+                store.clone(),
+                Arc::new(NativeEngine::new()),
+                ShardedPassConfig {
+                    workers,
+                    chunk_rows: 37,
+                    cache_shards: cache,
+                    prefetch_depth: depth,
+                    io_threads: io,
+                    ..Default::default()
+                },
+            );
+            let mut rng = Rng::new(6);
+            let qa = Mat::randn(48, 5, &mut rng);
+            let qb = Mat::randn(48, 5, &mut rng);
+            let power = sharded.power_pass(&qa, &qb);
+            let fin = sharded.final_pass(&qa, &qb);
+            (power, fin)
+        };
+        let cached = run(true, 2, 1, 3);
+        for (depth, io, workers) in [(0usize, 1usize, 1usize), (2, 1, 3), (4, 2, 2)] {
+            let got = run(false, depth, io, workers);
+            assert_eq!(got, cached, "depth {depth} io {io} workers {workers}");
+        }
     }
 
     #[test]

@@ -1,22 +1,40 @@
 //! Shard-task execution, shared by the in-process coordinator and the
 //! cluster worker.
 //!
-//! A *shard task* is the map side of one pass: load (or reuse) a shard,
-//! slice it into engine chunks, run the [`ChunkEngine`] over every chunk
-//! into one reused [`Workspace`], and hand back the per-shard partials.
+//! A *shard task* is the map side of one pass: obtain a shard (cached,
+//! or streamed through the prefetch pipeline), slice it into engine
+//! chunks, run the [`ChunkEngine`] over every chunk into one reused
+//! [`Workspace`], and hand back the per-shard partials.
 //! [`ShardedPass`](super::ShardedPass) runs tasks on a thread pool in the
 //! leader process; [`crate::cluster::Worker`] runs the identical code in a
 //! worker process and streams the partials back over TCP — same caching,
 //! same mirrors, same f32/f64 boundaries, so the two topologies produce
 //! bit-identical partials for the same shard.
+//!
+//! Two data regimes, one compute path:
+//!
+//! * **cached** (paper's "all data fits in core") — shards are decoded
+//!   once into owned, pre-sliced [`PreparedShard`]s and reused across
+//!   passes;
+//! * **streaming** (out-of-core) — every pass re-reads from disk through a
+//!   [`ShardStreamer`]: I/O threads read + CRC-verify ahead into pooled
+//!   byte buffers, the compute thread decodes into a pooled
+//!   [`ShardScratch`], and chunking yields borrowed
+//!   [`TwoViewChunkRef`]s — zero per-shard and per-chunk heap allocation
+//!   after warmup, with disk and kernels overlapped.
+//!
+//! Both regimes feed the engine row-identical chunk views, so a streaming
+//! fit is bitwise identical to a cached one (pinned by tests here and in
+//! `sharded.rs`).
 
 use super::metrics::Metrics;
-use crate::data::shards::{ShardStore, TwoViewChunk};
+use crate::data::shards::{ShardScratch, ShardStore, TwoViewChunk, TwoViewChunkRef};
+use crate::data::stream::{ShardStreamer, StreamConfig, StreamCounters};
 use crate::linalg::Mat;
 use crate::runtime::{ChunkEngine, ChunkMirror, Workspace};
 use crate::util::timer::Timer;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// The pass kinds a leader can schedule. `Trace` is the gram-trace sweep
 /// backing the scale-free λ resolution; it reads every value once, so it
@@ -65,6 +83,32 @@ impl PassKind {
             PassKind::Power => vec![(da, r), (db, r)],
             PassKind::Final => vec![(r, r); 3],
             PassKind::Trace => vec![(1, 2)],
+        }
+    }
+}
+
+/// Runner tunables (the snapshot [`super::ShardedPassConfig`] and
+/// [`crate::cluster::WorkerConfig`] hand to the shared runner).
+#[derive(Debug, Clone)]
+pub struct RunnerConfig {
+    /// Rows per engine chunk.
+    pub chunk_rows: usize,
+    /// Keep decoded shards in memory after first load; false streams from
+    /// disk every pass (the out-of-core regime).
+    pub cache_shards: bool,
+    /// Build transposed chunk mirrors for cached shards.
+    pub mirror_scatter: bool,
+    /// Streaming-pipeline knobs (uncached regime only).
+    pub stream: StreamConfig,
+}
+
+impl Default for RunnerConfig {
+    fn default() -> RunnerConfig {
+        RunnerConfig {
+            chunk_rows: 256,
+            cache_shards: true,
+            mirror_scatter: true,
+            stream: StreamConfig::default(),
         }
     }
 }
@@ -120,6 +164,16 @@ impl PreparedShard {
     }
 }
 
+/// Per-task reusable state for the streaming regime, pooled across tasks:
+/// a typed decode target and the engine workspace. After warmup every
+/// buffer has reached its high-water capacity and tasks run allocation-
+/// free (beyond the returned partial matrices, which are the pass output).
+#[derive(Default)]
+struct TaskSlot {
+    scratch: ShardScratch,
+    ws: Workspace,
+}
+
 /// Size a workspace for one pass kind.
 fn begin_pass(ws: &mut Workspace, kind: PassKind, da: usize, db: usize, r: usize) {
     match kind {
@@ -135,7 +189,7 @@ fn begin_pass(ws: &mut Workspace, kind: PassKind, da: usize, db: usize, r: usize
 fn process_chunk(
     engine: &dyn ChunkEngine,
     kind: PassKind,
-    chunk: &TwoViewChunk,
+    chunk: TwoViewChunkRef<'_>,
     mirror: Option<&ChunkMirror>,
     qa32: &[f32],
     qb32: &[f32],
@@ -168,8 +222,12 @@ pub struct ShardTaskRunner {
     chunk_rows: usize,
     mirror_scatter: bool,
     /// `Some` = cached regime (paper's "all data fits in core"); `None`
-    /// re-reads from disk each pass (the out-of-core / Hadoop-like regime).
+    /// streams from disk each pass (the out-of-core / Hadoop-like regime).
     cache: Option<Vec<OnceLock<Arc<PreparedShard>>>>,
+    /// Prefetching reader for the streaming regime (`None` when cached).
+    streamer: Option<ShardStreamer>,
+    /// Pooled per-task decode + workspace state (streaming regime).
+    slots: Mutex<Vec<Box<TaskSlot>>>,
 }
 
 impl ShardTaskRunner {
@@ -177,21 +235,26 @@ impl ShardTaskRunner {
         store: ShardStore,
         engine: Arc<dyn ChunkEngine>,
         metrics: Arc<Metrics>,
-        chunk_rows: usize,
-        cache_shards: bool,
-        mirror_scatter: bool,
+        config: RunnerConfig,
     ) -> ShardTaskRunner {
-        let cache = cache_shards.then(|| (0..store.shards).map(|_| OnceLock::new()).collect());
+        let cache = config
+            .cache_shards
+            .then(|| (0..store.shards).map(|_| OnceLock::new()).collect());
+        let streamer = (!config.cache_shards)
+            .then(|| ShardStreamer::new(store.clone(), config.stream.clone()));
         // An uncached shard cannot amortize the transpose, and engines
         // that ignore mirrors should not pay for building them.
-        let mirror_scatter = mirror_scatter && cache_shards && engine.wants_mirror();
+        let mirror_scatter =
+            config.mirror_scatter && config.cache_shards && engine.wants_mirror();
         ShardTaskRunner {
             store,
             engine,
             metrics,
-            chunk_rows: chunk_rows.max(1),
+            chunk_rows: config.chunk_rows.max(1),
             mirror_scatter,
             cache,
+            streamer,
+            slots: Mutex::new(Vec::new()),
         }
     }
 
@@ -201,6 +264,40 @@ impl ShardTaskRunner {
 
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
+    }
+
+    /// Install the shard order of the coming pass into the prefetch
+    /// pipeline (no-op for cached runners and in blocking mode). Both
+    /// leaders call this once per pass with the exact order they will
+    /// request shards in, so reads stay ahead of compute.
+    pub fn plan_pass(&self, shards: &[usize]) {
+        if let Some(streamer) = &self.streamer {
+            streamer.plan(shards);
+        }
+    }
+
+    /// Streaming-path allocation/hit counters (None for cached runners).
+    /// `buf_*` describe the byte-buffer pool; `scratch_grows` counts typed
+    /// decode-buffer growth; together they prove the zero-alloc-after-
+    /// warmup property the tests assert.
+    pub fn stream_counters(&self) -> Option<(StreamCounters, u64)> {
+        let streamer = self.streamer.as_ref()?;
+        let scratch_grows = self
+            .slots
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.scratch.grows)
+            .sum();
+        Some((streamer.counters(), scratch_grows))
+    }
+
+    fn take_slot(&self) -> Box<TaskSlot> {
+        self.slots.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put_slot(&self, slot: Box<TaskSlot>) {
+        self.slots.lock().unwrap().push(slot);
     }
 
     /// Run one shard task to completion, containing both clean errors and
@@ -240,29 +337,30 @@ impl ShardTaskRunner {
                 self.store.shards
             ));
         }
-        if kind == PassKind::Trace {
-            // Deliberately bypasses the prepared cache: the flat sweep over
-            // the whole shard matches the leader-side serial trace path
-            // bit-for-bit (chunked subtotals would regroup the f64 sums).
-            let load_t = Timer::start();
-            let data = self.store.load(shard)?;
-            self.metrics
-                .add(&self.metrics.load_nanos, load_t.elapsed().as_nanos() as u64);
-            self.metrics.add(
-                &self.metrics.shard_bytes_read,
-                (data.a.nnz() + data.b.nnz()) as u64 * 8,
-            );
-            return Ok(vec![Mat::from_vec(
-                1,
-                2,
-                vec![data.a.gram_trace(), data.b.gram_trace()],
-            )]);
-        }
-        let load_t = Timer::start();
         match &self.cache {
             // Cached regime: the shard is pre-sliced (and lazily mirrored)
             // once; repeat passes pay zero slicing cost.
             Some(cache) => {
+                if kind == PassKind::Trace {
+                    // Deliberately bypasses the prepared cache: the flat
+                    // sweep over the whole shard matches the leader-side
+                    // serial trace path bit-for-bit (chunked subtotals
+                    // would regroup the f64 sums).
+                    let load_t = Timer::start();
+                    let data = self.store.load(shard)?;
+                    self.metrics
+                        .add(&self.metrics.load_nanos, load_t.elapsed().as_nanos() as u64);
+                    self.metrics.add(
+                        &self.metrics.shard_bytes_read,
+                        (data.a.nnz() + data.b.nnz()) as u64 * 8,
+                    );
+                    return Ok(vec![Mat::from_vec(
+                        1,
+                        2,
+                        vec![data.a.gram_trace(), data.b.gram_trace()],
+                    )]);
+                }
+                let load_t = Timer::start();
                 let prepared: Arc<PreparedShard> = {
                     let slot = &cache[shard];
                     if let Some(hit) = slot.get() {
@@ -282,64 +380,105 @@ impl ShardTaskRunner {
                     return Ok(Vec::new());
                 };
                 let (da, db) = (first.data.a.cols, first.data.b.cols);
-                let mut ws = Workspace::new();
-                begin_pass(&mut ws, kind, da, db, r);
+                let mut slot = self.take_slot();
+                begin_pass(&mut slot.ws, kind, da, db, r);
+                let mut result = Ok(());
                 for pc in &prepared.chunks {
                     let mirror = if self.mirror_scatter { pc.mirror() } else { None };
-                    process_chunk(
+                    result = process_chunk(
                         &*self.engine,
                         kind,
-                        &pc.data,
+                        pc.data.view(),
                         mirror,
                         qa32,
                         qb32,
                         r,
-                        &mut ws,
+                        &mut slot.ws,
                         &self.metrics,
-                    )?;
+                    );
+                    if result.is_err() {
+                        break;
+                    }
                 }
-                Ok(ws.take())
+                let out = result.map(|()| slot.ws.take());
+                self.put_slot(slot);
+                out
             }
-            // Out-of-core regime: stream transient slices — the shard is
-            // dropped after this pass, so pre-slicing (and mirroring)
-            // would only double peak memory.
+            // Out-of-core regime: stream verified bytes through the
+            // prefetch pipeline and decode them in place — borrowed chunk
+            // views over pooled buffers, nothing cached, nothing copied.
             None => {
-                let data = self.store.load(shard)?;
+                let streamer = self.streamer.as_ref().expect("uncached runner streams");
+                let load_t = Timer::start();
+                let bytes = streamer.fetch(shard)?;
                 self.metrics
                     .add(&self.metrics.load_nanos, load_t.elapsed().as_nanos() as u64);
-                self.metrics.add(
-                    &self.metrics.shard_bytes_read,
-                    (data.a.nnz() + data.b.nnz()) as u64 * 8,
-                );
-                let rows = data.rows();
-                if rows == 0 {
-                    return Ok(Vec::new());
-                }
-                let mut ws = Workspace::new();
-                begin_pass(&mut ws, kind, data.a.cols, data.b.cols, r);
-                let mut lo = 0;
-                while lo < rows {
-                    let hi = (lo + self.chunk_rows).min(rows);
-                    let chunk = TwoViewChunk {
-                        a: data.a.slice_rows(lo, hi),
-                        b: data.b.slice_rows(lo, hi),
-                    };
-                    process_chunk(
-                        &*self.engine,
-                        kind,
-                        &chunk,
-                        None,
-                        qa32,
-                        qb32,
-                        r,
-                        &mut ws,
-                        &self.metrics,
-                    )?;
-                    lo = hi;
-                }
-                Ok(ws.take())
+                let mut slot = self.take_slot();
+                let out = self.run_streamed(shard, kind, &bytes, &mut slot, qa32, qb32, r);
+                drop(bytes); // byte buffer back to the pool
+                self.put_slot(slot);
+                out
             }
         }
+    }
+
+    /// The streaming map task over one shard's verified bytes: decode into
+    /// the slot's scratch (validation + offset computation, no copies of
+    /// indices/values beyond the typed buffers), then run borrowed chunk
+    /// windows through the engine.
+    #[allow(clippy::too_many_arguments)]
+    fn run_streamed(
+        &self,
+        shard: usize,
+        kind: PassKind,
+        bytes: &[u8],
+        slot: &mut TaskSlot,
+        qa32: &[f32],
+        qb32: &[f32],
+        r: usize,
+    ) -> Result<Vec<Mat>, String> {
+        // Integrity was verified where the bytes were read (the I/O thread
+        // for prefetched shards, the fetch call for direct reads), so this
+        // is the structural half only.
+        // Explicit field split: the chunk views borrow `scratch` while the
+        // engine accumulates into `ws`.
+        let TaskSlot { scratch, ws } = slot;
+        crate::data::shards::decode_shard_body_into(bytes, scratch)
+            .map_err(|e| format!("shard {shard}: {e}"))?;
+        self.metrics
+            .add(&self.metrics.shard_bytes_read, scratch.nnz_bytes());
+        let view = scratch.view();
+        if kind == PassKind::Trace {
+            // Same flat whole-shard sweep (and therefore bit pattern) as
+            // the cached trace path: the values stream in file order.
+            return Ok(vec![Mat::from_vec(
+                1,
+                2,
+                vec![view.a.gram_trace(), view.b.gram_trace()],
+            )]);
+        }
+        let rows = view.rows();
+        if rows == 0 {
+            return Ok(Vec::new());
+        }
+        begin_pass(ws, kind, view.a.cols, view.b.cols, r);
+        let mut lo = 0;
+        while lo < rows {
+            let hi = (lo + self.chunk_rows).min(rows);
+            process_chunk(
+                &*self.engine,
+                kind,
+                view.slice_rows(lo, hi),
+                None,
+                qa32,
+                qb32,
+                r,
+                ws,
+                &self.metrics,
+            )?;
+            lo = hi;
+        }
+        Ok(ws.take())
     }
 }
 
@@ -374,13 +513,20 @@ mod tests {
     }
 
     fn runner(store: ShardStore, cache: bool) -> ShardTaskRunner {
+        runner_with_stream(store, cache, StreamConfig::default())
+    }
+
+    fn runner_with_stream(store: ShardStore, cache: bool, stream: StreamConfig) -> ShardTaskRunner {
         ShardTaskRunner::new(
             store,
             Arc::new(NativeEngine::new()),
             Arc::new(Metrics::new()),
-            40,
-            cache,
-            true,
+            RunnerConfig {
+                chunk_rows: 40,
+                cache_shards: cache,
+                mirror_scatter: true,
+                stream,
+            },
         )
     }
 
@@ -401,6 +547,96 @@ mod tests {
             let fb = uncached.run(shard, PassKind::Final, &qa32, &qb32, 4).unwrap();
             assert_eq!(fa, fb);
         }
+    }
+
+    #[test]
+    fn streaming_partials_bitwise_stable_across_all_knobs() {
+        // The prefetch pipeline must change scheduling only, never results:
+        // every (prefetch_depth, io_threads) combination — including the
+        // fully blocking depth-0 loader — yields bit-identical partials.
+        let (store, _) = setup("knobs");
+        let cached = runner(store.clone(), true);
+        let mut rng = Rng::new(9);
+        let qa32 = mat_to_f32(&Mat::randn(48, 5, &mut rng));
+        let qb32 = mat_to_f32(&Mat::randn(48, 5, &mut rng));
+        let shards = store.shards;
+        let reference: Vec<_> = (0..shards)
+            .map(|s| cached.run(s, PassKind::Power, &qa32, &qb32, 5).unwrap())
+            .collect();
+        for (depth, io) in [(0usize, 1usize), (1, 1), (2, 2), (6, 3)] {
+            let uncached = runner_with_stream(
+                store.clone(),
+                false,
+                StreamConfig {
+                    prefetch_depth: depth,
+                    io_threads: io,
+                    max_buffered_mb: 0,
+                },
+            );
+            let order: Vec<usize> = (0..shards).collect();
+            uncached.plan_pass(&order);
+            for shard in 0..shards {
+                let got = uncached.run(shard, PassKind::Power, &qa32, &qb32, 5).unwrap();
+                assert_eq!(got, reference[shard], "depth {depth} io {io} shard {shard}");
+            }
+            // Trace through the stream matches the cached trace sweep
+            // bitwise too.
+            uncached.plan_pass(&order);
+            for shard in 0..shards {
+                let t_stream = uncached.run(shard, PassKind::Trace, &[], &[], 0).unwrap();
+                let t_cached = cached.run(shard, PassKind::Trace, &[], &[], 0).unwrap();
+                assert_eq!(t_stream, t_cached);
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_path_allocates_nothing_after_warmup() {
+        let (store, _) = setup("zeroalloc");
+        let r = runner_with_stream(
+            store.clone(),
+            false,
+            StreamConfig {
+                prefetch_depth: 2,
+                io_threads: 1,
+                max_buffered_mb: 0,
+            },
+        );
+        let mut rng = Rng::new(5);
+        let qa32 = mat_to_f32(&Mat::randn(48, 4, &mut rng));
+        let qb32 = mat_to_f32(&Mat::randn(48, 4, &mut rng));
+        let order: Vec<usize> = (0..store.shards).collect();
+        let pass = |kind: PassKind| {
+            r.plan_pass(&order);
+            for &shard in &order {
+                r.run(shard, kind, &qa32, &qb32, 4).unwrap();
+            }
+        };
+        // Warmup: one power + one final pass grow every pooled buffer to
+        // its high-water mark.
+        pass(PassKind::Power);
+        pass(PassKind::Final);
+        let (warm, warm_scratch) = r.stream_counters().unwrap();
+        // Steady state: more passes reuse buffers, allocate nothing new.
+        pass(PassKind::Power);
+        pass(PassKind::Final);
+        pass(PassKind::Power);
+        let (c, scratch_grows) = r.stream_counters().unwrap();
+        let fetches = (order.len() * 5) as u64;
+        // The decode scratch is exactly stable: pass one visited every
+        // shard, so the typed buffers hold the high-water capacity.
+        assert_eq!(scratch_grows, warm_scratch, "no decode-scratch growth after warmup");
+        // Byte buffers are bounded by the pipeline width (depth read-ahead
+        // slots + one in the consumer's hands), never by shards × passes:
+        // allocation is O(pipeline), the steady state runs on reuse.
+        assert!(
+            c.buf_allocs <= 2 + 1 + 1,
+            "pool allocated {} buffers for a depth-2 pipeline",
+            c.buf_allocs
+        );
+        assert!(c.buf_reuses > warm.buf_reuses, "steady state must reuse pooled buffers");
+        assert!(c.buf_reuses + c.buf_allocs >= fetches, "every fetch went through the pool");
+        assert_eq!(c.prefetch_misses, warm.prefetch_misses, "steady passes stay on the pipeline");
     }
 
     #[test]

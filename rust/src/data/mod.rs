@@ -11,8 +11,10 @@
 pub mod hashing;
 pub mod shards;
 pub mod split;
+pub mod stream;
 pub mod synthparl;
 
 pub use hashing::Hasher;
-pub use shards::{ShardStore, ShardWriter, TwoViewChunk};
+pub use shards::{ShardScratch, ShardStore, ShardWriter, TwoViewChunk, TwoViewChunkRef};
+pub use stream::{BufferPool, PooledBytes, ShardStreamer, StreamConfig, StreamCounters};
 pub use synthparl::{SynthParl, SynthParlConfig};

@@ -1,0 +1,566 @@
+//! Out-of-core shard streaming: pooled read buffers + a prefetch pipeline.
+//!
+//! The uncached (out-of-core) regime re-reads every shard from disk on
+//! every pass. Before this module, that path was fully serial per shard:
+//! blocking `read_to_end` → allocating decode → compute, with the disk
+//! idle while kernels ran and the CPU idle while the disk ran. The
+//! [`ShardStreamer`] overlaps the two: a small pool of I/O threads reads
+//! (and CRC-verifies — see [`crate::data::shards::verify_shard`]) shards
+//! ahead of the compute threads into pooled, reusable byte buffers, with a
+//! bounded number of buffers in flight so prefetching cannot blow the
+//! memory budget that made the data out-of-core in the first place.
+//!
+//! Correctness stance: prefetching changes *when* bytes are read, never
+//! *what* is computed — the consumer receives exactly the file's bytes and
+//! decodes them on its own thread, so fits are bitwise identical across
+//! every `prefetch_depth`/`io_threads` setting, including the fully
+//! blocking `prefetch_depth = 0` mode (pinned by coordinator tests). A
+//! fetch for a shard the pipeline does not have planned (a retry after a
+//! fault, or an unplanned probe) falls back to a direct synchronous read,
+//! so no caller can deadlock on the pipeline's bounded slots.
+
+use super::shards::{verify_shard, ShardStore};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Streaming knobs (the out-of-core pipeline's public surface; exposed via
+/// `ShardedPassConfig`, engine specs, and `repro fit`).
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Shards buffered or in flight ahead of the consumers. 0 disables the
+    /// pipeline entirely: every fetch is a blocking read on the calling
+    /// thread (still through the buffer pool).
+    pub prefetch_depth: usize,
+    /// Reader threads feeding the pipeline (only meaningful with
+    /// `prefetch_depth > 0`; more than `prefetch_depth` would idle).
+    pub io_threads: usize,
+    /// Peak-memory budget for *parked* (read but not yet consumed) shard
+    /// bytes, in MiB. 0 = bounded by `prefetch_depth` alone. The budget is
+    /// a soft high-water mark: a read already in flight when the mark is
+    /// crossed still parks.
+    pub max_buffered_mb: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> StreamConfig {
+        StreamConfig {
+            prefetch_depth: 2,
+            io_threads: 1,
+            max_buffered_mb: 0,
+        }
+    }
+}
+
+/// Reusable byte buffers with allocation accounting. `get` hands out a
+/// cleared buffer (capacity retained from earlier use); `put` returns it.
+/// After warmup — every buffer grown to the largest shard — the pool
+/// serves the steady state with zero heap traffic, and the counters prove
+/// it (the zero-alloc assertion in the coordinator tests).
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    free: Mutex<Vec<Vec<u8>>>,
+    /// Fresh buffers created (pool was empty at `get`).
+    pub allocs: AtomicU64,
+    /// Buffers served from the free list.
+    pub reuses: AtomicU64,
+    /// Times a served buffer's capacity grew while in use (reported back
+    /// by the streamer after each read).
+    pub grows: AtomicU64,
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    fn get(&self) -> Vec<u8> {
+        match self.free.lock().unwrap().pop() {
+            Some(b) => {
+                self.reuses.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.allocs.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    fn put(&self, mut b: Vec<u8>) {
+        b.clear();
+        self.free.lock().unwrap().push(b);
+    }
+}
+
+/// A shard's bytes on loan from the pool; returns to the pool on drop.
+pub struct PooledBytes {
+    buf: Option<Vec<u8>>,
+    pool: Arc<BufferPool>,
+}
+
+impl PooledBytes {
+    fn new(buf: Vec<u8>, pool: Arc<BufferPool>) -> PooledBytes {
+        PooledBytes {
+            buf: Some(buf),
+            pool,
+        }
+    }
+}
+
+impl Deref for PooledBytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.buf.as_deref().expect("buffer present until drop")
+    }
+}
+
+impl Drop for PooledBytes {
+    fn drop(&mut self) {
+        if let Some(b) = self.buf.take() {
+            self.pool.put(b);
+        }
+    }
+}
+
+/// Wait-free counters describing pipeline behavior (snapshot via
+/// [`ShardStreamer::counters`]).
+#[derive(Debug, Default)]
+pub struct StreamStats {
+    /// Fetches served from a parked prefetched buffer (possibly after a
+    /// wait for the in-flight read).
+    pub prefetch_hits: AtomicU64,
+    /// Fetches that fell back to a direct synchronous read (unplanned
+    /// shard: retries, probes, or `prefetch_depth = 0`).
+    pub prefetch_misses: AtomicU64,
+    /// Nanoseconds I/O threads spent reading + verifying.
+    pub io_read_nanos: AtomicU64,
+    /// Nanoseconds consumers spent blocked waiting on the pipeline.
+    pub wait_nanos: AtomicU64,
+}
+
+/// Point-in-time snapshot of the streaming path's allocation and hit-rate
+/// counters (the "workspace/pool counters" the zero-alloc assertion reads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamCounters {
+    pub buf_allocs: u64,
+    pub buf_reuses: u64,
+    pub buf_grows: u64,
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
+}
+
+/// One pass's read-ahead plan plus the parking lot for completed reads.
+#[derive(Default)]
+struct Plan {
+    /// Bumped by [`ShardStreamer::plan`]; a read completing under an older
+    /// epoch is discarded (its buffer returns to the pool).
+    epoch: u64,
+    /// Shards not yet picked up by an I/O thread, in consumption order.
+    queue: VecDeque<usize>,
+    /// Shards an I/O thread is currently reading.
+    in_flight: Vec<usize>,
+    /// Membership index over `queue` + `in_flight`: shards the pipeline
+    /// still owes a read for. Keeps the consumer's planned-check O(1)
+    /// instead of rescanning the queue under the mutex on every wakeup.
+    pending: HashSet<usize>,
+    /// Completed reads awaiting their consumer. An `Err` parks the typed
+    /// load error (open/read/CRC), which the consumer surfaces exactly as
+    /// the blocking path would.
+    parked: HashMap<usize, Result<Vec<u8>, String>>,
+    parked_bytes: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    plan: Mutex<Plan>,
+    /// Signalled when a read parks (consumers waiting in `fetch`).
+    ready: Condvar,
+    /// Signalled when work or slots appear (I/O threads waiting to read).
+    work: Condvar,
+}
+
+/// Prefetching shard reader. Construction spawns the I/O threads (none
+/// when `prefetch_depth` is 0); [`ShardStreamer::plan`] installs the pass
+/// order; [`ShardStreamer::fetch`] hands each consumer its shard's bytes.
+pub struct ShardStreamer {
+    store: ShardStore,
+    cfg: StreamConfig,
+    pool: Arc<BufferPool>,
+    stats: Arc<StreamStats>,
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+/// Read + integrity-verify one shard into `buf`, with the same error
+/// strings [`ShardStore::load`] produces for the same failures.
+fn read_and_verify(
+    store: &ShardStore,
+    shard: usize,
+    buf: &mut Vec<u8>,
+    pool: &BufferPool,
+) -> Result<(), String> {
+    let cap = buf.capacity();
+    store.read_bytes_into(shard, buf)?;
+    if buf.capacity() != cap {
+        pool.grows.fetch_add(1, Ordering::Relaxed);
+    }
+    verify_shard(buf).map_err(|e| format!("shard {shard}: {e}"))
+}
+
+impl ShardStreamer {
+    pub fn new(store: ShardStore, cfg: StreamConfig) -> ShardStreamer {
+        let pool = Arc::new(BufferPool::new());
+        let stats = Arc::new(StreamStats::default());
+        let shared = Arc::new(Shared {
+            plan: Mutex::new(Plan::default()),
+            ready: Condvar::new(),
+            work: Condvar::new(),
+        });
+        let mut threads = Vec::new();
+        if cfg.prefetch_depth > 0 {
+            // More readers than read-ahead slots would never all run.
+            let n = cfg.io_threads.clamp(1, cfg.prefetch_depth);
+            for i in 0..n {
+                let store = store.clone();
+                let pool = Arc::clone(&pool);
+                let stats = Arc::clone(&stats);
+                let shared = Arc::clone(&shared);
+                let depth = cfg.prefetch_depth;
+                let budget = cfg.max_buffered_mb.saturating_mul(1 << 20);
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("rcca-io-{i}"))
+                        .spawn(move || io_loop(&store, &pool, &stats, &shared, depth, budget))
+                        .expect("spawn io thread"),
+                );
+            }
+        }
+        ShardStreamer {
+            store,
+            cfg,
+            pool,
+            stats,
+            shared,
+            threads,
+        }
+    }
+
+    /// Install the read-ahead order for the coming pass, discarding any
+    /// leftovers from the previous one. No-op in blocking mode.
+    pub fn plan(&self, shards: &[usize]) {
+        if self.threads.is_empty() {
+            return;
+        }
+        let mut plan = self.shared.plan.lock().unwrap();
+        plan.epoch += 1;
+        plan.queue.clear();
+        plan.queue.extend(shards.iter().copied());
+        plan.in_flight.clear();
+        plan.pending.clear();
+        plan.pending.extend(shards.iter().copied());
+        for (_, res) in plan.parked.drain() {
+            if let Ok(buf) = res {
+                self.pool.put(buf);
+            }
+        }
+        plan.parked_bytes = 0;
+        drop(plan);
+        self.shared.work.notify_all();
+    }
+
+    /// Obtain one shard's verified bytes: from the pipeline when planned
+    /// (blocking until its read completes), otherwise via a direct
+    /// synchronous read. Never deadlocks: an unplanned shard cannot wait.
+    pub fn fetch(&self, shard: usize) -> Result<PooledBytes, String> {
+        if self.threads.is_empty() {
+            self.stats.prefetch_misses.fetch_add(1, Ordering::Relaxed);
+            return self.direct(shard);
+        }
+        let wait_t = Instant::now();
+        let mut plan = self.shared.plan.lock().unwrap();
+        loop {
+            if let Some(res) = plan.parked.remove(&shard) {
+                if let Ok(buf) = &res {
+                    plan.parked_bytes -= buf.len();
+                }
+                drop(plan);
+                self.shared.work.notify_all();
+                self.stats.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .wait_nanos
+                    .fetch_add(wait_t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                return res.map(|buf| PooledBytes::new(buf, Arc::clone(&self.pool)));
+            }
+            if !plan.pending.contains(&shard) {
+                drop(plan);
+                self.stats.prefetch_misses.fetch_add(1, Ordering::Relaxed);
+                return self.direct(shard);
+            }
+            plan = self.shared.ready.wait(plan).unwrap();
+        }
+    }
+
+    fn direct(&self, shard: usize) -> Result<PooledBytes, String> {
+        let mut buf = self.pool.get();
+        match read_and_verify(&self.store, shard, &mut buf, &self.pool) {
+            Ok(()) => Ok(PooledBytes::new(buf, Arc::clone(&self.pool))),
+            Err(e) => {
+                self.pool.put(buf);
+                Err(e)
+            }
+        }
+    }
+
+    pub fn counters(&self) -> StreamCounters {
+        StreamCounters {
+            buf_allocs: self.pool.allocs.load(Ordering::Relaxed),
+            buf_reuses: self.pool.reuses.load(Ordering::Relaxed),
+            buf_grows: self.pool.grows.load(Ordering::Relaxed),
+            prefetch_hits: self.stats.prefetch_hits.load(Ordering::Relaxed),
+            prefetch_misses: self.stats.prefetch_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn stats(&self) -> &StreamStats {
+        &self.stats
+    }
+
+    pub fn config(&self) -> &StreamConfig {
+        &self.cfg
+    }
+}
+
+impl Drop for ShardStreamer {
+    fn drop(&mut self) {
+        {
+            let mut plan = self.shared.plan.lock().unwrap();
+            plan.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn io_loop(
+    store: &ShardStore,
+    pool: &Arc<BufferPool>,
+    stats: &StreamStats,
+    shared: &Shared,
+    depth: usize,
+    budget_bytes: usize,
+) {
+    loop {
+        // Claim the next planned shard once a read-ahead slot is free.
+        let (shard, epoch) = {
+            let mut plan = shared.plan.lock().unwrap();
+            loop {
+                if plan.shutdown {
+                    return;
+                }
+                let outstanding = plan.parked.len() + plan.in_flight.len();
+                let budget_ok = budget_bytes == 0 || plan.parked_bytes < budget_bytes;
+                if outstanding < depth && budget_ok && !plan.queue.is_empty() {
+                    let s = plan.queue.pop_front().expect("checked non-empty");
+                    plan.in_flight.push(s);
+                    break (s, plan.epoch);
+                }
+                plan = shared.work.wait(plan).unwrap();
+            }
+        };
+        let mut buf = pool.get();
+        let t = Instant::now();
+        let res = read_and_verify(store, shard, &mut buf, pool);
+        stats
+            .io_read_nanos
+            .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let mut plan = shared.plan.lock().unwrap();
+        if plan.epoch != epoch {
+            // The plan moved on mid-read; nobody wants these bytes.
+            drop(plan);
+            pool.put(buf);
+            continue;
+        }
+        if let Some(pos) = plan.in_flight.iter().position(|&s| s == shard) {
+            plan.in_flight.swap_remove(pos);
+        }
+        plan.pending.remove(&shard);
+        match res {
+            Ok(()) => {
+                plan.parked_bytes += buf.len();
+                plan.parked.insert(shard, Ok(buf));
+            }
+            Err(e) => {
+                plan.parked.insert(shard, Err(e));
+                pool.put(buf);
+            }
+        }
+        drop(plan);
+        shared.ready.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shards::{decode_shard, ShardWriter, TwoViewChunk};
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use std::path::PathBuf;
+
+    fn store(tag: &str) -> ShardStore {
+        let d = SynthParl::generate(SynthParlConfig {
+            n: 260,
+            dims: 40,
+            topics: 4,
+            words_per_topic: 8,
+            background_words: 12,
+            mean_len: 6.0,
+            seed: 29,
+            ..Default::default()
+        });
+        let dir = PathBuf::from(std::env::temp_dir()).join(format!("rcca_stream_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = ShardWriter::create(&dir, 48).unwrap();
+        w.write_dataset(&d.a, &d.b).unwrap();
+        ShardStore::open(&dir).unwrap()
+    }
+
+    fn fetch_all(streamer: &ShardStreamer, store: &ShardStore) -> Vec<TwoViewChunk> {
+        let order: Vec<usize> = (0..store.shards).collect();
+        streamer.plan(&order);
+        order
+            .iter()
+            .map(|&i| {
+                let bytes = streamer.fetch(i).unwrap();
+                decode_shard(&bytes).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prefetched_bytes_equal_blocking_bytes() {
+        let st = store("equal");
+        for (depth, io) in [(0usize, 1usize), (1, 1), (3, 2), (8, 3)] {
+            let streamer = ShardStreamer::new(
+                st.clone(),
+                StreamConfig {
+                    prefetch_depth: depth,
+                    io_threads: io,
+                    max_buffered_mb: 0,
+                },
+            );
+            let got = fetch_all(&streamer, &st);
+            for (i, chunk) in got.iter().enumerate() {
+                assert_eq!(*chunk, st.load(i).unwrap(), "depth {depth} io {io} shard {i}");
+            }
+            let c = streamer.counters();
+            if depth == 0 {
+                assert_eq!(c.prefetch_hits, 0);
+                assert_eq!(c.prefetch_misses, st.shards as u64);
+            } else {
+                assert_eq!(c.prefetch_hits, st.shards as u64);
+                assert_eq!(c.prefetch_misses, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn buffers_are_pooled_across_passes() {
+        let st = store("pooled");
+        let streamer = ShardStreamer::new(
+            st.clone(),
+            StreamConfig {
+                prefetch_depth: 2,
+                io_threads: 1,
+                max_buffered_mb: 0,
+            },
+        );
+        fetch_all(&streamer, &st); // warmup
+        let warm = streamer.counters();
+        for _ in 0..3 {
+            fetch_all(&streamer, &st);
+        }
+        let c = streamer.counters();
+        assert_eq!(c.buf_allocs, warm.buf_allocs, "no new buffers after warmup");
+        assert_eq!(c.buf_grows, warm.buf_grows, "no buffer growth after warmup");
+        assert!(c.buf_reuses > warm.buf_reuses);
+    }
+
+    #[test]
+    fn unplanned_fetch_falls_back_to_direct_read() {
+        let st = store("fallback");
+        let streamer = ShardStreamer::new(st.clone(), StreamConfig::default());
+        // No plan installed at all: every fetch is a miss, still correct.
+        let chunk = decode_shard(&streamer.fetch(1).unwrap()).unwrap();
+        assert_eq!(chunk, st.load(1).unwrap());
+        // Plan a later window, then ask for something outside it (retry
+        // shape): direct read, no deadlock.
+        streamer.plan(&[2, 3]);
+        let again = decode_shard(&streamer.fetch(0).unwrap()).unwrap();
+        assert_eq!(again, st.load(0).unwrap());
+        assert!(streamer.counters().prefetch_misses >= 2);
+    }
+
+    #[test]
+    fn read_errors_surface_from_io_threads() {
+        let st = store("ioerr");
+        // Corrupt shard 1 on disk (flip a payload byte).
+        let path = st.shard_path(1);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let blocking = ShardStreamer::new(
+            st.clone(),
+            StreamConfig {
+                prefetch_depth: 0,
+                io_threads: 1,
+                max_buffered_mb: 0,
+            },
+        );
+        let prefetched = ShardStreamer::new(
+            st.clone(),
+            StreamConfig {
+                prefetch_depth: 2,
+                io_threads: 2,
+                max_buffered_mb: 0,
+            },
+        );
+        let order: Vec<usize> = (0..st.shards).collect();
+        blocking.plan(&order);
+        prefetched.plan(&order);
+        let want = blocking.fetch(1).map(|_| ()).unwrap_err();
+        let got = prefetched.fetch(1).map(|_| ()).unwrap_err();
+        // The prefetch thread's verify failure is the blocking error,
+        // verbatim.
+        assert_eq!(got, want);
+        assert!(got.contains("shard 1"), "{got}");
+        assert!(got.contains("crc mismatch"), "{got}");
+        // Healthy shards around it still stream.
+        assert!(prefetched.fetch(0).is_ok());
+        assert!(prefetched.fetch(2).is_ok());
+    }
+
+    #[test]
+    fn budget_bounds_parked_bytes() {
+        let st = store("budget");
+        // 1 MiB budget far exceeds these tiny shards — the pipeline must
+        // still complete; this exercises the budget arithmetic, the
+        // depth bound covers the tight case.
+        let streamer = ShardStreamer::new(
+            st.clone(),
+            StreamConfig {
+                prefetch_depth: 4,
+                io_threads: 2,
+                max_buffered_mb: 1,
+            },
+        );
+        let got = fetch_all(&streamer, &st);
+        assert_eq!(got.len(), st.shards);
+    }
+}

@@ -161,7 +161,9 @@ fn common_run_flags(spec: Spec) -> Spec {
             "engine",
             "inmemory",
             "compute path: inmemory|native|pjrt, or a full spec like \
-             'native:work/shards?workers=2&chunk=256' or \
+             'native:work/shards?workers=2&chunk=256', \
+             'native:work/shards?cache=false&prefetch=4&io-threads=2' \
+             (out-of-core streaming), or \
              'cluster:127.0.0.1:9301,127.0.0.1:9302' (a spec is authoritative \
              over pre-sharded data: --workers/--chunk-rows/--workdir are ignored)",
         )
@@ -489,6 +491,13 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("nu", "0.01", "scale-free regularization nu")
         .opt("chunk-rows", "256", "rows per engine chunk on every worker")
         .opt("max-retries", "2", "per-shard retry budget")
+        .opt(
+            "prefetch-depth",
+            "2",
+            "out-of-core workers (--no-cache): shards each worker reads ahead of compute \
+             (0 = blocking loads; perf-only, results are bitwise identical)",
+        )
+        .opt("io-threads", "1", "out-of-core workers: reader threads feeding the prefetch queue")
         .opt("heartbeat-timeout-secs", "10", "silence after which a worker is declared dead")
         .opt("report-dir", "reports", "where JSON twins are written")
         .opt("save", "", "write the fitted model JSON to this path");
@@ -501,6 +510,8 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
     let config = ClusterConfig {
         chunk_rows: args.usize("chunk-rows")?,
         max_retries: args.usize("max-retries")?,
+        prefetch_depth: args.usize("prefetch-depth")?,
+        io_threads: args.usize("io-threads")?,
         heartbeat_timeout: Duration::from_secs(args.u64("heartbeat-timeout-secs")?.max(1)),
         ..Default::default()
     };

@@ -33,7 +33,7 @@ pub use native::NativeEngine;
 pub use pjrt::PjrtEngine;
 pub use workspace::Workspace;
 
-use crate::data::TwoViewChunk;
+use crate::data::{TwoViewChunk, TwoViewChunkRef};
 use crate::linalg::Mat;
 use crate::sparse::Csr;
 
@@ -52,7 +52,8 @@ pub struct ChunkMirror {
 }
 
 impl ChunkMirror {
-    pub fn build(chunk: &TwoViewChunk) -> ChunkMirror {
+    pub fn build<'a>(chunk: impl Into<TwoViewChunkRef<'a>>) -> ChunkMirror {
+        let chunk = chunk.into();
         ChunkMirror {
             at: chunk.a.transpose(),
             bt: chunk.b.transpose(),
@@ -62,7 +63,8 @@ impl ChunkMirror {
     /// The single home of the "mirror only when worthwhile" policy —
     /// `Some` iff [`ChunkMirror::worthwhile`] accepts the chunk. Both the
     /// coordinator's per-chunk cache and `InMemoryPass` go through this.
-    pub fn maybe_build(chunk: &TwoViewChunk) -> Option<ChunkMirror> {
+    pub fn maybe_build<'a>(chunk: impl Into<TwoViewChunkRef<'a>>) -> Option<ChunkMirror> {
+        let chunk = chunk.into();
         ChunkMirror::worthwhile(chunk).then(|| ChunkMirror::build(chunk))
     }
 
@@ -70,7 +72,8 @@ impl ChunkMirror {
     /// pass (row-pointer reads even where empty). For chunks far sparser
     /// than one nonzero per 4 columns that overhead outweighs the
     /// sequential-write win, so the coordinator skips mirroring them.
-    pub fn worthwhile(chunk: &TwoViewChunk) -> bool {
+    pub fn worthwhile<'a>(chunk: impl Into<TwoViewChunkRef<'a>>) -> bool {
+        let chunk = chunk.into();
         let d = chunk.a.cols + chunk.b.cols;
         let nnz = chunk.a.nnz() + chunk.b.nnz();
         nnz * 4 >= d
@@ -94,11 +97,13 @@ pub trait ChunkEngine: Send + Sync {
     /// Accumulate one chunk's power-pass products into `ws`:
     /// `ws.acc[0] += Aᵀchunk·(Bchunk·Qb)`, `ws.acc[1] += Bᵀchunk·(Achunk·Qa)`.
     /// The caller must have sized `ws` with [`Workspace::begin_power`].
+    /// `chunk` is a borrowed view ([`TwoViewChunk::view`] for owned data;
+    /// the streaming path passes windows over a pooled decode buffer).
     /// `qa32`/`qb32` are row-major (da×r)/(db×r) f32 broadcasts; `mirror`,
     /// when present, holds the transposed views of this same chunk.
     fn power_chunk_ws(
         &self,
-        chunk: &TwoViewChunk,
+        chunk: TwoViewChunkRef<'_>,
         mirror: Option<&ChunkMirror>,
         qa32: &[f32],
         qb32: &[f32],
@@ -111,7 +116,7 @@ pub trait ChunkEngine: Send + Sync {
     /// The caller must have sized `ws` with [`Workspace::begin_final`].
     fn final_chunk_ws(
         &self,
-        chunk: &TwoViewChunk,
+        chunk: TwoViewChunkRef<'_>,
         qa32: &[f32],
         qb32: &[f32],
         r: usize,
@@ -129,7 +134,7 @@ pub trait ChunkEngine: Send + Sync {
     ) -> anyhow::Result<(Mat, Mat)> {
         let mut ws = Workspace::new();
         ws.begin_power(chunk.a.cols, chunk.b.cols, r);
-        self.power_chunk_ws(chunk, None, qa32, qb32, r, &mut ws)?;
+        self.power_chunk_ws(chunk.view(), None, qa32, qb32, r, &mut ws)?;
         let mut out = ws.take();
         let yb = out.pop().unwrap();
         let ya = out.pop().unwrap();
@@ -147,7 +152,7 @@ pub trait ChunkEngine: Send + Sync {
     ) -> anyhow::Result<(Mat, Mat, Mat)> {
         let mut ws = Workspace::new();
         ws.begin_final(r);
-        self.final_chunk_ws(chunk, qa32, qb32, r, &mut ws)?;
+        self.final_chunk_ws(chunk.view(), qa32, qb32, r, &mut ws)?;
         let mut out = ws.take();
         let f = out.pop().unwrap();
         let cb = out.pop().unwrap();

@@ -2,7 +2,7 @@
 //! off the CSR.
 
 use super::{ChunkEngine, ChunkMirror, Workspace};
-use crate::data::TwoViewChunk;
+use crate::data::TwoViewChunkRef;
 use crate::linalg::gemm::sgemm_tn;
 use crate::sparse::kernels;
 
@@ -46,7 +46,7 @@ impl ChunkEngine for NativeEngine {
 
     fn power_chunk_ws(
         &self,
-        chunk: &TwoViewChunk,
+        chunk: TwoViewChunkRef<'_>,
         mirror: Option<&ChunkMirror>,
         qa32: &[f32],
         qb32: &[f32],
@@ -62,7 +62,7 @@ impl ChunkEngine for NativeEngine {
         );
         // BQb (m×r) into reused scratch.
         Workspace::size_f32(&mut ws.bq, m * r);
-        kernels::times_dense(&chunk.b, qb32, r, &mut ws.bq);
+        kernels::times_dense(chunk.b, qb32, r, &mut ws.bq);
         Workspace::size_f32(&mut ws.aq, m * r);
         let (ya_slot, yb_slot) = ws.acc.split_at_mut(1);
         let ya = ya_slot[0].as_mut_slice();
@@ -71,14 +71,14 @@ impl ChunkEngine for NativeEngine {
             Some(mir) => {
                 debug_assert_eq!((mir.at.rows, mir.at.cols), (da, m));
                 debug_assert_eq!((mir.bt.rows, mir.bt.cols), (db, m));
-                kernels::times_dense(&chunk.a, qa32, r, &mut ws.aq);
+                kernels::times_dense(chunk.a, qa32, r, &mut ws.aq);
                 kernels::add_times_dense_acc64(&mir.at, &ws.bq, r, ya);
                 kernels::add_times_dense_acc64(&mir.bt, &ws.aq, r, yb);
             }
             None => {
                 // Fused walk over A: gather AQa + scatter Aᵀ(BQb).
-                kernels::fused_gather_scatter(&chunk.a, qa32, &ws.bq, r, &mut ws.aq, ya);
-                kernels::add_t_times_dense(&chunk.b, &ws.aq, r, yb);
+                kernels::fused_gather_scatter(chunk.a, qa32, &ws.bq, r, &mut ws.aq, ya);
+                kernels::add_t_times_dense(chunk.b, &ws.aq, r, yb);
             }
         }
         ws.chunks += 1;
@@ -87,7 +87,7 @@ impl ChunkEngine for NativeEngine {
 
     fn final_chunk_ws(
         &self,
-        chunk: &TwoViewChunk,
+        chunk: TwoViewChunkRef<'_>,
         qa32: &[f32],
         qb32: &[f32],
         r: usize,
@@ -101,9 +101,9 @@ impl ChunkEngine for NativeEngine {
             "workspace not sized for this final pass (begin_final missing?)"
         );
         Workspace::size_f32(&mut ws.aq, m * r);
-        kernels::times_dense(&chunk.a, qa32, r, &mut ws.aq);
+        kernels::times_dense(chunk.a, qa32, r, &mut ws.aq);
         Workspace::size_f32(&mut ws.bq, m * r);
-        kernels::times_dense(&chunk.b, qb32, r, &mut ws.bq);
+        kernels::times_dense(chunk.b, qb32, r, &mut ws.bq);
         let (ca_slot, rest) = ws.acc.split_at_mut(1);
         let (cb_slot, f_slot) = rest.split_at_mut(1);
         gram_acc(m, r, &ws.aq, &ws.aq, &mut ws.gram, &mut ca_slot[0]);
@@ -119,6 +119,7 @@ mod tests {
     use super::*;
     use crate::cca::pass::{InMemoryPass, PassEngine};
     use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::data::TwoViewChunk;
     use crate::linalg::Mat;
     use crate::runtime::mat_to_f32;
     use crate::util::rng::Rng;
@@ -180,10 +181,10 @@ mod tests {
         let eng = NativeEngine::new();
         let mut ws = Workspace::new();
         ws.begin_power(64, 64, 6);
-        eng.power_chunk_ws(&ch, None, &qa, &qb, 6, &mut ws).unwrap();
+        eng.power_chunk_ws(ch.view(), None, &qa, &qb, 6, &mut ws).unwrap();
         let fused = ws.take();
         ws.begin_power(64, 64, 6);
-        eng.power_chunk_ws(&ch, Some(&mir), &qa, &qb, 6, &mut ws).unwrap();
+        eng.power_chunk_ws(ch.view(), Some(&mir), &qa, &qb, 6, &mut ws).unwrap();
         let mirrored = ws.take();
         // Same f32 products, different f64 summation order.
         assert!(mirrored[0].rel_diff(&fused[0]) < 1e-10);
@@ -209,8 +210,8 @@ mod tests {
         let eng = NativeEngine::new();
         let mut ws = Workspace::new();
         ws.begin_power(64, 64, 4);
-        eng.power_chunk_ws(&c1, None, &qa, &qb, 4, &mut ws).unwrap();
-        eng.power_chunk_ws(&c2, None, &qa, &qb, 4, &mut ws).unwrap();
+        eng.power_chunk_ws(c1.view(), None, &qa, &qb, 4, &mut ws).unwrap();
+        eng.power_chunk_ws(c2.view(), None, &qa, &qb, 4, &mut ws).unwrap();
         assert_eq!(ws.chunks, 2);
         let parts = ws.take();
         let (wa, wb) = eng.power_chunk(&ch, &qa, &qb, 4).unwrap();
@@ -219,8 +220,8 @@ mod tests {
 
         // Same invariant for the final pass.
         ws.begin_final(4);
-        eng.final_chunk_ws(&c1, &qa, &qb, 4, &mut ws).unwrap();
-        eng.final_chunk_ws(&c2, &qa, &qb, 4, &mut ws).unwrap();
+        eng.final_chunk_ws(c1.view(), &qa, &qb, 4, &mut ws).unwrap();
+        eng.final_chunk_ws(c2.view(), &qa, &qb, 4, &mut ws).unwrap();
         let parts = ws.take();
         let (ca, cb, f) = eng.final_chunk(&ch, &qa, &qb, 4).unwrap();
         assert!(parts[0].rel_diff(&ca) < 1e-5);
@@ -270,8 +271,8 @@ mod tests {
         let mut rng = Rng::new(9);
         let q = mat_to_f32(&Mat::randn(64, 3, &mut rng));
         let mut ws = Workspace::new(); // no begin_power
-        assert!(eng.power_chunk_ws(&ch, None, &q, &q, 3, &mut ws).is_err());
+        assert!(eng.power_chunk_ws(ch.view(), None, &q, &q, 3, &mut ws).is_err());
         ws.begin_final(3); // wrong kind
-        assert!(eng.power_chunk_ws(&ch, None, &q, &q, 3, &mut ws).is_err());
+        assert!(eng.power_chunk_ws(ch.view(), None, &q, &q, 3, &mut ws).is_err());
     }
 }

@@ -18,7 +18,7 @@
 
 #[cfg(feature = "pjrt")]
 mod real {
-    use crate::data::TwoViewChunk;
+    use crate::data::TwoViewChunkRef;
     use crate::linalg::Mat;
     use crate::runtime::manifest::{Manifest, ManifestEntry};
     use crate::runtime::{ChunkEngine, ChunkMirror, Workspace};
@@ -91,7 +91,7 @@ mod real {
         fn run(
             &self,
             kind: &str,
-            chunk: &TwoViewChunk,
+            chunk: TwoViewChunkRef<'_>,
             qa32: &[f32],
             qb32: &[f32],
             r: usize,
@@ -208,7 +208,7 @@ mod real {
         // engine. The mirror is ignored: scatters happen inside XLA.
         fn power_chunk_ws(
             &self,
-            chunk: &TwoViewChunk,
+            chunk: TwoViewChunkRef<'_>,
             _mirror: Option<&ChunkMirror>,
             qa32: &[f32],
             qb32: &[f32],
@@ -229,7 +229,7 @@ mod real {
 
         fn final_chunk_ws(
             &self,
-            chunk: &TwoViewChunk,
+            chunk: TwoViewChunkRef<'_>,
             qa32: &[f32],
             qb32: &[f32],
             r: usize,
@@ -251,7 +251,7 @@ mod real {
 
 #[cfg(not(feature = "pjrt"))]
 mod stub {
-    use crate::data::TwoViewChunk;
+    use crate::data::TwoViewChunkRef;
     use crate::runtime::{ChunkEngine, ChunkMirror, Workspace};
     use std::path::Path;
 
@@ -283,7 +283,7 @@ mod stub {
 
         fn power_chunk_ws(
             &self,
-            _chunk: &TwoViewChunk,
+            _chunk: TwoViewChunkRef<'_>,
             _mirror: Option<&ChunkMirror>,
             _qa32: &[f32],
             _qb32: &[f32],
@@ -295,7 +295,7 @@ mod stub {
 
         fn final_chunk_ws(
             &self,
-            _chunk: &TwoViewChunk,
+            _chunk: TwoViewChunkRef<'_>,
             _qa32: &[f32],
             _qb32: &[f32],
             _r: usize,

@@ -14,6 +14,191 @@ pub struct Csr {
     pub values: Vec<f32>,
 }
 
+/// Borrowed CSR view — the zero-copy currency of the streaming data path.
+///
+/// Unlike [`Csr`], the offsets in `indptr` are *absolute* positions into
+/// `indices`/`values`, which may be larger backing buffers (a decoded
+/// shard, or a whole owned matrix): `indptr[0]` need not be 0. That one
+/// convention makes [`CsrRef::slice_rows`] free — a row slice is just a
+/// narrower `indptr` window over the same backing storage — so the shard
+/// task can carve engine chunks out of a pooled decode buffer without any
+/// per-chunk allocation or copying. Row iteration visits exactly the same
+/// index/value pairs in exactly the same order as the owned equivalent, so
+/// every kernel result is bitwise identical between the two forms (pinned
+/// by property tests in [`super::kernels`]).
+#[derive(Debug, Clone, Copy)]
+pub struct CsrRef<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    /// `rows + 1` absolute offsets into `indices`/`values`.
+    pub indptr: &'a [usize],
+    pub indices: &'a [u32],
+    pub values: &'a [f32],
+}
+
+impl<'a> From<&'a Csr> for CsrRef<'a> {
+    fn from(c: &'a Csr) -> CsrRef<'a> {
+        c.view()
+    }
+}
+
+impl<'a> CsrRef<'a> {
+    pub fn nnz(&self) -> usize {
+        self.indptr[self.rows] - self.indptr[0]
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    pub fn row(&self, i: usize) -> (&'a [u32], &'a [f32]) {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Rows [lo, hi) over the same backing storage — no copying, just a
+    /// narrower `indptr` window (the whole point of absolute offsets).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> CsrRef<'a> {
+        assert!(lo <= hi && hi <= self.rows);
+        CsrRef {
+            rows: hi - lo,
+            cols: self.cols,
+            indptr: &self.indptr[lo..=hi],
+            indices: self.indices,
+            values: self.values,
+        }
+    }
+
+    /// Structural + numeric validation — the view twin of
+    /// [`Csr::validate`], with identical error messages (deserialization
+    /// error paths must not depend on which form decoded the data).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.rows + 1 {
+            return Err("indptr length mismatch".into());
+        }
+        if self.indices.len() != self.values.len() {
+            return Err("indices/values length mismatch".into());
+        }
+        if self.indptr[self.rows] > self.values.len() {
+            return Err("indptr endpoints invalid".into());
+        }
+        for w in self.indptr.windows(2) {
+            if w[0] > w[1] {
+                return Err("indptr not monotone".into());
+            }
+        }
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            for w in idx.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {i}: indices not strictly increasing"));
+                }
+            }
+            if let Some(&last) = idx.last() {
+                if last as usize >= self.cols {
+                    return Err(format!("row {i}: column index out of range"));
+                }
+            }
+            if vals.iter().any(|v| !v.is_finite()) {
+                return Err("non-finite value".into());
+            }
+        }
+        Ok(())
+    }
+
+    /// tr(AᵀA) over this view's rows only — bitwise identical to
+    /// [`Csr::gram_trace`] on the owned equivalent (same values, same
+    /// summation order).
+    pub fn gram_trace(&self) -> f64 {
+        let (lo, hi) = (self.indptr[0], self.indptr[self.rows]);
+        self.values[lo..hi]
+            .iter()
+            .map(|&v| (v as f64) * (v as f64))
+            .sum()
+    }
+
+    /// Materialize an owned [`Csr`] (rebases `indptr` to start at 0).
+    pub fn to_csr(&self) -> Csr {
+        let start = self.indptr[0];
+        let end = self.indptr[self.rows];
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            indptr: self.indptr.iter().map(|p| p - start).collect(),
+            indices: self.indices[start..end].to_vec(),
+            values: self.values[start..end].to_vec(),
+        }
+    }
+
+    /// Densify rows [lo, hi) into a row-major f32 buffer (see
+    /// [`Csr::densify_rows`]).
+    pub fn densify_rows(&self, lo: usize, hi: usize, out: &mut [f32]) {
+        let width = self.cols;
+        debug_assert_eq!(out.len(), (hi - lo) * width);
+        out.fill(0.0);
+        for (local, i) in (lo..hi).enumerate() {
+            let (idx, vals) = self.row(i);
+            let orow = &mut out[local * width..(local + 1) * width];
+            for (&j, &v) in idx.iter().zip(vals) {
+                orow[j as usize] = v;
+            }
+        }
+    }
+
+    /// Transpose via counting sort — the view twin of [`Csr::transpose`]
+    /// (output rows index this view's rows locally, so transposing a view
+    /// equals transposing the owned slice it mirrors).
+    pub fn transpose(&self) -> Csr {
+        debug_assert!(self.rows <= u32::MAX as usize);
+        let nnz = self.nnz();
+        let mut counts = vec![0usize; self.cols + 1];
+        for i in 0..self.rows {
+            for &j in self.row(i).0 {
+                counts[j as usize + 1] += 1;
+            }
+        }
+        for j in 0..self.cols {
+            counts[j + 1] += counts[j];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0u32; nnz];
+        let mut values = vec![0f32; nnz];
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            for (&j, &v) in idx.iter().zip(vals) {
+                let p = cursor[j as usize];
+                indices[p] = i as u32;
+                values[p] = v;
+                cursor[j as usize] = p + 1;
+            }
+        }
+        Csr {
+            rows: self.cols,
+            cols: self.rows,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Full densification (test-sized matrices only).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            for (&j, &v) in idx.iter().zip(vals) {
+                m[(i, j as usize)] = v as f64;
+            }
+        }
+        m
+    }
+}
+
 impl Csr {
     /// 0×0 matrix with valid structure — a reusable [`Csr::vcat_into`]
     /// target and the `Default`-like starting point for builders.
@@ -31,6 +216,19 @@ impl Csr {
         self.values.len()
     }
 
+    /// Borrowed view of this matrix (the hot-path kernel currency; see
+    /// [`CsrRef`]). `kernels::*` accept `&Csr` directly through
+    /// `impl Into<CsrRef>`, so most call sites never name this.
+    pub fn view(&self) -> CsrRef<'_> {
+        CsrRef {
+            rows: self.rows,
+            cols: self.cols,
+            indptr: &self.indptr,
+            indices: &self.indices,
+            values: &self.values,
+        }
+    }
+
     pub fn density(&self) -> f64 {
         if self.rows == 0 || self.cols == 0 {
             return 0.0;
@@ -45,6 +243,11 @@ impl Csr {
     }
 
     /// Structural + numeric validation (used after deserialization).
+    /// Owned-form extras (indptr starts at 0 and ends at nnz), then the
+    /// shared per-row checks on [`CsrRef::validate`] — one implementation,
+    /// identical error messages in both forms. The endpoint check also
+    /// guarantees every value is reachable through some row, so the view's
+    /// row-scoped finiteness scan covers the whole buffer here.
     pub fn validate(&self) -> Result<(), String> {
         if self.indptr.len() != self.rows + 1 {
             return Err("indptr length mismatch".into());
@@ -52,31 +255,7 @@ impl Csr {
         if self.indptr[0] != 0 || *self.indptr.last().unwrap() != self.nnz() {
             return Err("indptr endpoints invalid".into());
         }
-        if self.indices.len() != self.values.len() {
-            return Err("indices/values length mismatch".into());
-        }
-        for w in self.indptr.windows(2) {
-            if w[0] > w[1] {
-                return Err("indptr not monotone".into());
-            }
-        }
-        for i in 0..self.rows {
-            let (idx, _) = self.row(i);
-            for w in idx.windows(2) {
-                if w[0] >= w[1] {
-                    return Err(format!("row {i}: indices not strictly increasing"));
-                }
-            }
-            if let Some(&last) = idx.last() {
-                if last as usize >= self.cols {
-                    return Err(format!("row {i}: column index out of range"));
-                }
-            }
-        }
-        if self.values.iter().any(|v| !v.is_finite()) {
-            return Err("non-finite value".into());
-        }
-        Ok(())
+        self.view().validate()
     }
 
     /// Y += Aᵀ·M where M is dense row-major (rows × r), Y is dense (cols × r).
@@ -211,35 +390,7 @@ impl Csr {
     /// The coordinator builds these once per cached chunk so the power-pass
     /// scatter `Aᵀ·M` becomes a gather with sequential output writes.
     pub fn transpose(&self) -> Csr {
-        debug_assert!(self.rows <= u32::MAX as usize);
-        let nnz = self.nnz();
-        let mut counts = vec![0usize; self.cols + 1];
-        for &j in &self.indices {
-            counts[j as usize + 1] += 1;
-        }
-        for j in 0..self.cols {
-            counts[j + 1] += counts[j];
-        }
-        let indptr = counts.clone();
-        let mut cursor = counts;
-        let mut indices = vec![0u32; nnz];
-        let mut values = vec![0f32; nnz];
-        for i in 0..self.rows {
-            let (idx, vals) = self.row(i);
-            for (&j, &v) in idx.iter().zip(vals) {
-                let p = cursor[j as usize];
-                indices[p] = i as u32;
-                values[p] = v;
-                cursor[j as usize] = p + 1;
-            }
-        }
-        Csr {
-            rows: self.cols,
-            cols: self.rows,
-            indptr,
-            indices,
-            values,
-        }
+        self.view().transpose()
     }
 
     /// Stack row blocks vertically (all parts must share `cols`). The serve
@@ -563,6 +714,67 @@ mod tests {
         let d = a.to_dense();
         let want = matmul_tn(&d, &d).trace();
         assert!((a.gram_trace() - want).abs() / want.abs().max(1.0) < 1e-6);
+    }
+
+    #[test]
+    fn view_slice_is_zero_copy_and_bitwise_equal() {
+        prop::check("csrref-slice", 20, |g| {
+            let rows = g.size(2, 25);
+            let cols = g.size(1, 15);
+            let mut rng = Rng::new(g.seed ^ 31);
+            let a = random_csr(rows, cols, 3.min(cols), &mut rng);
+            let lo = g.size(0, rows - 1);
+            let hi = lo + g.size(0, rows - lo);
+            let owned = a.slice_rows(lo, hi);
+            let view = a.view().slice_rows(lo, hi);
+            // Same backing storage: the view's indices/values are the whole
+            // matrix's buffers, its indptr window absolute.
+            assert_eq!(view.rows, owned.rows);
+            assert_eq!(view.nnz(), owned.nnz());
+            assert_eq!(view.to_csr(), owned);
+            view.validate().unwrap();
+            for i in 0..owned.rows {
+                assert_eq!(view.row(i), owned.row(i));
+            }
+            // Derived quantities are bitwise equal.
+            assert_eq!(view.gram_trace().to_bits(), owned.gram_trace().to_bits());
+            assert_eq!(view.transpose(), owned.transpose());
+            assert_eq!(view.to_dense(), owned.to_dense());
+            // Slicing a view composes like slicing the owned matrix.
+            if hi - lo >= 2 {
+                let inner = view.slice_rows(1, hi - lo);
+                assert_eq!(inner.to_csr(), owned.slice_rows(1, hi - lo));
+            }
+        });
+    }
+
+    #[test]
+    fn view_densify_matches_owned() {
+        let mut rng = Rng::new(44);
+        let a = random_csr(12, 9, 3, &mut rng);
+        let mut owned = vec![0f32; 5 * 9];
+        let mut viewed = vec![7f32; 5 * 9];
+        a.densify_rows(4, 9, &mut owned);
+        a.view().densify_rows(4, 9, &mut viewed);
+        assert_eq!(owned, viewed);
+        // Densifying through a sliced view re-bases the row window.
+        let mut sliced = vec![1f32; 5 * 9];
+        a.view().slice_rows(4, 9).densify_rows(0, 5, &mut sliced);
+        assert_eq!(owned, sliced);
+    }
+
+    #[test]
+    fn view_validate_catches_corruption() {
+        let mut b = CsrBuilder::new(8);
+        let mut pairs = vec![(1u32, 1.0f32), (5, 2.0)];
+        b.push_row(&mut pairs);
+        let mut a = b.finish();
+        a.view().validate().unwrap();
+        a.indices[0] = 99; // out of range
+        assert!(a.view().validate().is_err());
+        a.indices[0] = 1;
+        a.values[0] = f32::NAN;
+        assert!(a.view().validate().is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //! four row walks per chunk to three (the first view's scatter needs the
 //! second view's gather, so one product is always computed unfused).
 
-use super::Csr;
+use super::CsrRef;
 
 /// Panel width (lanes of the dense operand processed per traversal).
 /// Eight f32 lanes = one AVX2 register; the unrolled inner loops below
@@ -30,7 +30,8 @@ pub const PANEL: usize = 8;
 /// row's nonzeros with the 8 accumulators in registers and store once per
 /// row — the scalar kernel instead load/stores the full `r`-wide output row
 /// per nonzero.
-pub fn times_dense(a: &Csr, q: &[f32], r: usize, out: &mut [f32]) {
+pub fn times_dense<'a>(a: impl Into<CsrRef<'a>>, q: &[f32], r: usize, out: &mut [f32]) {
+    let a: CsrRef<'a> = a.into();
     debug_assert_eq!(q.len(), a.cols * r);
     debug_assert_eq!(out.len(), a.rows * r);
     let mut c0 = 0;
@@ -71,7 +72,8 @@ pub fn times_dense(a: &Csr, q: &[f32], r: usize, out: &mut [f32]) {
 /// (cols × r). The scatter side of the power pass: per panel, the 8 lanes
 /// of a row of `M` are hoisted once and scattered to each nonzero's output
 /// row with unrolled 8-wide updates.
-pub fn add_t_times_dense(a: &Csr, m: &[f32], r: usize, y: &mut [f64]) {
+pub fn add_t_times_dense<'a>(a: impl Into<CsrRef<'a>>, m: &[f32], r: usize, y: &mut [f64]) {
+    let a: CsrRef<'a> = a.into();
     debug_assert_eq!(m.len(), a.rows * r);
     debug_assert_eq!(y.len(), a.cols * r);
     let mut c0 = 0;
@@ -112,14 +114,15 @@ pub fn add_t_times_dense(a: &Csr, m: &[f32], r: usize, y: &mut [f64]) {
 /// `ya += Aᵀ·M` (accumulate, f64). Both touch exactly the same nonzeros,
 /// and both index the `d × r` operands at the same `j·r + c0` offset, so
 /// fusing halves the CSR index/value traffic for this view.
-pub fn fused_gather_scatter(
-    a: &Csr,
+pub fn fused_gather_scatter<'a>(
+    a: impl Into<CsrRef<'a>>,
     qa: &[f32],
     m: &[f32],
     r: usize,
     aq: &mut [f32],
     ya: &mut [f64],
 ) {
+    let a: CsrRef<'a> = a.into();
     debug_assert_eq!(qa.len(), a.cols * r);
     debug_assert_eq!(m.len(), a.rows * r);
     debug_assert_eq!(aq.len(), a.rows * r);
@@ -179,7 +182,8 @@ pub fn fused_gather_scatter(
 /// the scatter into sequential output writes). Rows without nonzeros are
 /// skipped without touching `y`, so a very sparse transposed mirror costs
 /// O(rows) pointer reads, not O(rows × r) writes.
-pub fn add_times_dense_acc64(a: &Csr, m: &[f32], r: usize, y: &mut [f64]) {
+pub fn add_times_dense_acc64<'a>(a: impl Into<CsrRef<'a>>, m: &[f32], r: usize, y: &mut [f64]) {
+    let a: CsrRef<'a> = a.into();
     debug_assert_eq!(m.len(), a.cols * r);
     debug_assert_eq!(y.len(), a.rows * r);
     let mut c0 = 0;
@@ -229,7 +233,7 @@ pub fn add_times_dense_acc64(a: &Csr, m: &[f32], r: usize, y: &mut [f64]) {
 }
 
 /// Y = A·M (overwrite twin of [`add_times_dense_acc64`]).
-pub fn times_dense_acc64(a: &Csr, m: &[f32], r: usize, y: &mut [f64]) {
+pub fn times_dense_acc64<'a>(a: impl Into<CsrRef<'a>>, m: &[f32], r: usize, y: &mut [f64]) {
     y.fill(0.0);
     add_times_dense_acc64(a, m, r, y);
 }
@@ -239,7 +243,7 @@ mod tests {
     use super::*;
     use crate::linalg::gemm::{matmul, matmul_tn};
     use crate::linalg::Mat;
-    use crate::sparse::CsrBuilder;
+    use crate::sparse::{Csr, CsrBuilder};
     use crate::util::prop;
     use crate::util::rng::Rng;
 
@@ -337,6 +341,65 @@ mod tests {
             let got = Mat::from_vec(cols, r, ya);
             let want = Mat::from_vec(cols, r, ya_want);
             assert!(got.rel_diff(&want) <= 1e-5);
+        });
+    }
+
+    #[test]
+    fn view_kernels_bitwise_match_owned() {
+        // The streaming path hands kernels CsrRef windows carved out of a
+        // shared backing buffer (absolute indptr, indptr[0] > 0 for any
+        // chunk after the first). Every kernel must produce bitwise the
+        // same result as the owned slice: same nonzeros walked in the same
+        // order, so the f32/f64 summations are identical. Covers r off the
+        // panel width, r < PANEL, empty and dense rows.
+        prop::check("kernel-view-bitwise", 30, |g| {
+            let rows = g.size(2, 30);
+            let cols = g.size(2, 25);
+            let r = g.size(1, 21);
+            let mut rng = Rng::new(g.seed ^ 7);
+            let a = if g.size(0, 4) == 0 {
+                edge_csr(cols, &mut rng)
+            } else {
+                random_csr(rows, cols, 4.min(cols), &mut rng)
+            };
+            let lo = g.size(0, a.rows - 1);
+            let hi = lo + g.size(1, a.rows - lo);
+            let owned = a.slice_rows(lo, hi);
+            let view = a.view().slice_rows(lo, hi);
+            let m = hi - lo;
+            let q = g.normal_vec_f32(cols * r, 1.0);
+            let mbuf = g.normal_vec_f32(m * r, 1.0);
+
+            // Gather.
+            let mut want = vec![0f32; m * r];
+            times_dense(&owned, &q, r, &mut want);
+            let mut got = vec![3f32; m * r];
+            times_dense(view, &q, r, &mut got);
+            assert_eq!(got, want);
+
+            // Scatter (f64 accumulate from a nonzero start).
+            let mut want_y = vec![0.25f64; cols * r];
+            let mut got_y = want_y.clone();
+            add_t_times_dense(&owned, &mbuf, r, &mut want_y);
+            add_t_times_dense(view, &mbuf, r, &mut got_y);
+            assert_eq!(got_y, want_y);
+
+            // Fused power traversal.
+            let mut aq_w = vec![0f32; m * r];
+            let mut ya_w = vec![0f64; cols * r];
+            fused_gather_scatter(&owned, &q, &mbuf, r, &mut aq_w, &mut ya_w);
+            let mut aq_v = vec![1f32; m * r];
+            let mut ya_v = vec![0f64; cols * r];
+            fused_gather_scatter(view, &q, &mbuf, r, &mut aq_v, &mut ya_v);
+            assert_eq!(aq_v, aq_w);
+            assert_eq!(ya_v, ya_w);
+
+            // f64-accumulating gather (serve transform / mirror path).
+            let mut yw = vec![0f64; m * r];
+            let mut yv = vec![0f64; m * r];
+            times_dense_acc64(&owned, &q, r, &mut yw);
+            times_dense_acc64(view, &q, r, &mut yv);
+            assert_eq!(yv, yw);
         });
     }
 

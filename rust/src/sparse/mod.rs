@@ -16,4 +16,4 @@
 pub mod csr;
 pub mod kernels;
 
-pub use csr::{Csr, CsrBuilder};
+pub use csr::{Csr, CsrBuilder, CsrRef};

@@ -123,6 +123,102 @@ fn shard_crc_corruption_on_disk_is_typed_error() {
 }
 
 #[test]
+fn prefetch_thread_crc_failure_matches_blocking_error_and_aborts_pass() {
+    use rcca::coordinator::{Metrics, PassKind, RunnerConfig, ShardTaskRunner};
+    use rcca::coordinator::{ShardedPass, ShardedPassConfig};
+    use rcca::data::stream::StreamConfig;
+    use rcca::linalg::Mat;
+    use rcca::runtime::{mat_to_f32, NativeEngine};
+    use rcca::util::rng::Rng;
+    use std::sync::Arc;
+
+    let dir = std::env::temp_dir().join("rcca_rejection_prefetch");
+    let _ = std::fs::remove_dir_all(&dir);
+    let chunk = tiny_chunk();
+    let mut w = ShardWriter::create(&dir, 50).unwrap();
+    w.write_dataset(&chunk.a, &chunk.b).unwrap();
+    let store = ShardStore::open(&dir).unwrap();
+    assert!(store.shards >= 3, "test geometry: want several shards");
+
+    // Corrupt shard 1's payload on disk (CRC-detectable).
+    let path = store.shard_path(1);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let runner = |depth: usize, io: usize| {
+        ShardTaskRunner::new(
+            store.clone(),
+            Arc::new(NativeEngine::new()),
+            Arc::new(Metrics::new()),
+            RunnerConfig {
+                chunk_rows: 40,
+                cache_shards: false,
+                mirror_scatter: true,
+                stream: StreamConfig {
+                    prefetch_depth: depth,
+                    io_threads: io,
+                    max_buffered_mb: 0,
+                },
+            },
+        )
+    };
+    let mut rng = Rng::new(4);
+    let qa32 = mat_to_f32(&Mat::randn(32, 3, &mut rng));
+    let qb32 = mat_to_f32(&Mat::randn(32, 3, &mut rng));
+    let order: Vec<usize> = (0..store.shards).collect();
+
+    // Blocking loader: the reference typed error.
+    let blocking = runner(0, 1);
+    blocking.plan_pass(&order);
+    let want = blocking
+        .run(1, PassKind::Power, &qa32, &qb32, 3)
+        .unwrap_err();
+    assert!(want.contains("shard 1") && want.contains("crc mismatch"), "{want}");
+
+    // Prefetch pipeline: the CRC sweep runs on the I/O thread, and its
+    // failure surfaces through the same fetch with the identical error.
+    let prefetched = runner(2, 2);
+    prefetched.plan_pass(&order);
+    for shard in 0..store.shards {
+        let res = prefetched.run(shard, PassKind::Power, &qa32, &qb32, 3);
+        if shard == 1 {
+            assert_eq!(res.unwrap_err(), want, "prefetch error must match blocking error");
+        } else {
+            assert!(res.is_ok(), "healthy shard {shard} must still stream");
+        }
+    }
+
+    // And at the pass level: a streaming ShardedPass burns the retry
+    // budget on the corrupt shard and aborts, exactly like the blocking
+    // configuration does.
+    for depth in [0usize, 2] {
+        let mut pass = ShardedPass::new(
+            store.clone(),
+            Arc::new(NativeEngine::new()),
+            ShardedPassConfig {
+                workers: 2,
+                chunk_rows: 40,
+                cache_shards: false,
+                prefetch_depth: depth,
+                io_threads: 1,
+                max_retries: 1,
+                ..Default::default()
+            },
+        );
+        let qa = Mat::randn(32, 3, &mut Rng::new(4));
+        let qb = Mat::randn(32, 3, &mut Rng::new(5));
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            use rcca::cca::pass::PassEngine;
+            pass.power_pass(&qa, &qb)
+        }));
+        assert!(res.is_err(), "depth {depth}: corrupt shard must abort the pass");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn truncated_shard_is_typed_error() {
     let chunk = tiny_chunk();
     let bytes = encode_shard(&chunk);
