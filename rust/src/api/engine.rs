@@ -92,6 +92,38 @@ impl Default for ShardedOpts {
     }
 }
 
+impl ShardedOpts {
+    /// Parse a `key=value&...` engine-spec option string onto the defaults
+    /// (the `?opts` grammar of [`Engine::from_spec`]). Shared with the
+    /// lifecycle daemon, which applies the same options to a
+    /// manifest-pinned store via [`Engine::sharded_store`].
+    pub fn parse_query(query: &str) -> Result<ShardedOpts, ApiError> {
+        let mut opts = ShardedOpts::default();
+        for pair in query.split('&').filter(|p| !p.is_empty()) {
+            let (key, val) = pair
+                .split_once('=')
+                .ok_or_else(|| ApiError::EngineSpec(format!("option '{pair}' is not key=value")))?;
+            let bad =
+                |k: &str| ApiError::EngineSpec(format!("option '{k}' has a bad value '{val}'"));
+            match key {
+                "workers" => opts.workers = val.parse().map_err(|_| bad(key))?,
+                "chunk" => opts.chunk_rows = val.parse().map_err(|_| bad(key))?,
+                "cache" => opts.cache_shards = val.parse().map_err(|_| bad(key))?,
+                "prefetch" => opts.prefetch_depth = val.parse().map_err(|_| bad(key))?,
+                "io-threads" => opts.io_threads = val.parse().map_err(|_| bad(key))?,
+                "prefetch-mb" => opts.prefetch_budget_mb = val.parse().map_err(|_| bad(key))?,
+                other => {
+                    return Err(ApiError::EngineSpec(format!(
+                        "unknown option '{other}' (expected \
+                         workers|chunk|cache|prefetch|io-threads|prefetch-mb)"
+                    )))
+                }
+            }
+        }
+        Ok(opts)
+    }
+}
+
 /// A ready-to-fit pass engine. Implements [`PassEngine`], so every solver
 /// and evaluator in the crate runs on it unchanged; constructors cover all
 /// compute paths so call sites never name `InMemoryPass`/`ShardedPass`.
@@ -138,6 +170,15 @@ impl Engine {
     /// `repro gen` or [`Engine::for_workload`]).
     pub fn sharded(shard_dir: &Path, opts: ShardedOpts) -> Result<Engine, ApiError> {
         let store = ShardStore::open(shard_dir).map_err(ApiError::Engine)?;
+        Engine::sharded_store(store, opts)
+    }
+
+    /// Coordinator engine over an already-opened [`ShardStore`]. This is
+    /// the snapshot-pinning entry point: `meta.json` in a live-ingest store
+    /// can run ahead of the snapshot a fit was scheduled against, so the
+    /// lifecycle daemon constructs the store from its manifest (a fixed
+    /// shard prefix) and hands it here instead of re-opening the directory.
+    pub fn sharded_store(store: ShardStore, opts: ShardedOpts) -> Result<Engine, ApiError> {
         let (chunk_engine, backend): (Arc<dyn ChunkEngine>, Backend) = match &opts.compute {
             Compute::Native => (Arc::new(NativeEngine::new()), Backend::Native),
             Compute::Pjrt { artifacts } => (
@@ -196,32 +237,10 @@ impl Engine {
         if kind == "cluster" {
             return Engine::cluster_from_spec(target, query);
         }
-        let mut opts = ShardedOpts::default();
-        if let Some(q) = query {
-            for pair in q.split('&').filter(|p| !p.is_empty()) {
-                let (key, val) = pair.split_once('=').ok_or_else(|| {
-                    ApiError::EngineSpec(format!("option '{pair}' is not key=value"))
-                })?;
-                let bad =
-                    |k: &str| ApiError::EngineSpec(format!("option '{k}' has a bad value '{val}'"));
-                match key {
-                    "workers" => opts.workers = val.parse().map_err(|_| bad(key))?,
-                    "chunk" => opts.chunk_rows = val.parse().map_err(|_| bad(key))?,
-                    "cache" => opts.cache_shards = val.parse().map_err(|_| bad(key))?,
-                    "prefetch" => opts.prefetch_depth = val.parse().map_err(|_| bad(key))?,
-                    "io-threads" => opts.io_threads = val.parse().map_err(|_| bad(key))?,
-                    "prefetch-mb" => {
-                        opts.prefetch_budget_mb = val.parse().map_err(|_| bad(key))?
-                    }
-                    other => {
-                        return Err(ApiError::EngineSpec(format!(
-                            "unknown option '{other}' (expected \
-                             workers|chunk|cache|prefetch|io-threads|prefetch-mb)"
-                        )))
-                    }
-                }
-            }
-        }
+        let mut opts = match query {
+            Some(q) => ShardedOpts::parse_query(q)?,
+            None => ShardedOpts::default(),
+        };
         match kind {
             "inmemory" => {
                 if query.is_some() {

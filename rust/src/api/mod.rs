@@ -40,7 +40,7 @@ pub mod model;
 
 pub use builder::{Cca, CcaBuilder, Solver};
 pub use engine::{Backend, Compute, Engine, ShardedOpts};
-pub use model::FittedModel;
+pub use model::{FittedModel, Provenance};
 
 use crate::cca::pass::PassEngine;
 use crate::cca::scale_free_lambda;

@@ -17,6 +17,59 @@ use std::sync::OnceLock;
 
 const FORMAT: &str = "rcca-model-v1";
 
+/// Fit provenance: which data a model was fitted on and why the fit ran.
+/// Written by `repro rcca --save` (when the engine spec targets a
+/// manifest-managed store) and by the lifecycle daemon on every warm
+/// refit; served back through `GET /v1/model` so an operator can tell
+/// which snapshot the live model reflects. Absent on models fitted before
+/// the lifecycle subsystem existed — the loader treats it as optional.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// Snapshot manifest version the fit ran against.
+    pub snapshot_version: u64,
+    /// Shard count of that snapshot.
+    pub shards: usize,
+    /// Row count of that snapshot.
+    pub rows: usize,
+    /// Content hash of the snapshot (the manifest's shard-CRC digest).
+    pub data_hash: String,
+    /// What started the fit: "cold", "drift", or "periodic".
+    pub trigger: String,
+}
+
+impl Provenance {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("snapshot_version", jnum(self.snapshot_version as f64))
+            .set("shards", jnum(self.shards as f64))
+            .set("rows", jnum(self.rows as f64))
+            .set("data_hash", jstr(&self.data_hash))
+            .set("trigger", jstr(&self.trigger));
+        o
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Provenance, ApiError> {
+        let num = |k: &str| {
+            doc.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| ApiError::Model(format!("provenance: missing or bad '{k}'")))
+        };
+        let text = |k: &str| {
+            doc.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| ApiError::Model(format!("provenance: missing or bad '{k}'")))
+        };
+        Ok(Provenance {
+            snapshot_version: num("snapshot_version")? as u64,
+            shards: num("shards")?,
+            rows: num("rows")?,
+            data_hash: text("data_hash")?,
+            trigger: text("trigger")?,
+        })
+    }
+}
+
 /// A fitted CCA model plus everything needed to use it later: the per-view
 /// projections, the regularizers it was fitted with, and (for iterative
 /// solvers) the convergence trace.
@@ -36,6 +89,8 @@ pub struct FittedModel {
     /// Data passes this fit consumed (λ resolution + initializer + solver),
     /// measured as the engine-ledger delta across `Cca::fit`.
     fit_passes: usize,
+    /// Which snapshot the model was fitted on (lifecycle-managed fits).
+    provenance: Option<Provenance>,
     /// f32 copies of the projections, built once on first transform — the
     /// serving hot path runs the panel-blocked f32 kernel with f64
     /// accumulation only at the output.
@@ -53,6 +108,7 @@ impl FittedModel {
             init_passes: 0,
             trace: None,
             fit_passes: 0,
+            provenance: None,
             xa32: OnceLock::new(),
             xb32: OnceLock::new(),
         }
@@ -71,6 +127,16 @@ impl FittedModel {
     pub(crate) fn with_fit_passes(mut self, passes: usize) -> FittedModel {
         self.fit_passes = passes;
         self
+    }
+
+    /// Attach fit provenance (`pub` so the CLI binary can stamp cold fits).
+    pub fn with_provenance(mut self, provenance: Provenance) -> FittedModel {
+        self.provenance = Some(provenance);
+        self
+    }
+
+    pub fn provenance(&self) -> Option<&Provenance> {
+        self.provenance.as_ref()
     }
 
     pub fn k(&self) -> usize {
@@ -215,6 +281,9 @@ impl FittedModel {
             )
             .set("xa", flat(&self.model.xa))
             .set("xb", flat(&self.model.xb));
+        if let Some(p) = &self.provenance {
+            o.set("provenance", p.to_json());
+        }
         o
     }
 
@@ -275,6 +344,10 @@ impl FittedModel {
             .ok_or_else(|| bad("missing 'solver'"))?
             .to_string();
         let fit_passes = get_usize("passes")?;
+        let provenance = match doc.get("provenance") {
+            Some(p) => Some(Provenance::from_json(p)?),
+            None => None,
+        };
         Ok(FittedModel {
             model: CcaModel {
                 xa,
@@ -288,6 +361,7 @@ impl FittedModel {
             init_passes: get_usize("init_passes")?,
             trace: None,
             fit_passes,
+            provenance,
             xa32: OnceLock::new(),
             xb32: OnceLock::new(),
         })
@@ -372,6 +446,33 @@ mod tests {
         assert_eq!(back.lambda_a, m.lambda_a);
         assert_eq!(back.passes(), m.passes());
         assert_eq!(back.solver(), m.solver());
+    }
+
+    #[test]
+    fn provenance_roundtrips_and_stays_optional() {
+        let (m, _) = fitted();
+        // Models without provenance load as before (older documents).
+        let plain = FittedModel::from_json(&m.to_json()).unwrap();
+        assert!(plain.provenance().is_none());
+
+        let p = Provenance {
+            snapshot_version: 7,
+            shards: 3,
+            rows: 1200,
+            data_hash: "deadbeef".to_string(),
+            trigger: "drift".to_string(),
+        };
+        let stamped = m.with_provenance(p.clone());
+        let back = FittedModel::from_json(&stamped.to_json()).unwrap();
+        assert_eq!(back.provenance(), Some(&p));
+
+        // A present-but-malformed provenance block is rejected, not dropped.
+        let mut doc = stamped.to_json();
+        doc.set("provenance", jstr("not an object"));
+        assert!(matches!(
+            FittedModel::from_json(&doc),
+            Err(ApiError::Model(_))
+        ));
     }
 
     #[test]

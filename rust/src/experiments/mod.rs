@@ -129,6 +129,8 @@ impl Scale {
             mean_len: self.mean_len,
             normalize: self.normalize,
             seed: self.seed,
+            batch: 0,
+            drift: 0.0,
         }
     }
 }

@@ -29,6 +29,11 @@
 //!   round, with heartbeat-based failure detection and mid-pass shard
 //!   redistribution; workers run the same shard-task code as the
 //!   in-process coordinator, so results are bit-reproducible.
+//! * [`lifecycle`] — the closed loop over all of the above: versioned
+//!   snapshot manifests over shard stores, validate-then-append ingest
+//!   (`repro ingest`), drift monitoring against the live model, and a
+//!   warm-refit daemon (`repro daemon`) that hot-swaps refits into the
+//!   serve registry and records every episode in an audit ledger.
 //!
 //! See DESIGN.md for the full system inventory and the per-experiment index.
 
@@ -39,6 +44,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod lifecycle;
 pub mod runtime;
 pub mod linalg;
 pub mod serve;

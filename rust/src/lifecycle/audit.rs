@@ -1,0 +1,295 @@
+//! Append-only refit episode ledger (JSONL) with explicit retention.
+//!
+//! Every daemon refit — drift-triggered or periodic — appends exactly one
+//! compact-JSON line. The file is the system of record for "what happened
+//! to the served model and why": snapshot version, drift score, passes
+//! spent, correlation before/after, and the registry generation swapped in.
+//!
+//! Retention is explicit and never silent: when the episode count exceeds
+//! [`Retention::max_records`], the ledger is compacted (write-then-rename)
+//! down to the newest `max_records` episodes plus a single
+//! `{"kind":"retention","dropped":N}` marker carrying the cumulative count
+//! of episodes ever dropped — so episode numbering stays monotone across
+//! compactions and an auditor can see that (and how much) history is gone.
+
+use super::LifecycleError;
+use crate::util::json::{jnum, jstr, parse, Json};
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// How much episode history the ledger keeps on disk.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Retention {
+    /// Newest episodes kept after compaction; `0` means keep everything.
+    pub max_records: usize,
+}
+
+/// One recorded refit episode.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Episode {
+    /// Monotone ledger-wide id (survives retention compaction).
+    pub episode: u64,
+    /// `"drift"` or `"periodic"`.
+    pub trigger: String,
+    /// Manifest version the refit ran against.
+    pub snapshot_version: u64,
+    /// Drift score that (if trigger is `"drift"`) fired the refit.
+    pub drift_score: f64,
+    /// Engine passes the warm refit consumed.
+    pub passes: usize,
+    /// Old model's correlation sum evaluated on the new snapshot.
+    pub sum_corr_before: f64,
+    /// Refit model's correlation sum on the same snapshot.
+    pub sum_corr_after: f64,
+    /// Whether a serve hot-swap was performed (false for `--reload` none).
+    pub swapped: bool,
+    /// Registry generation after the swap (0 when `swapped` is false).
+    pub generation: u64,
+    /// Swap timestamp, milliseconds since the Unix epoch.
+    pub unix_ms: u64,
+}
+
+impl Episode {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("kind", jstr("episode"))
+            .set("episode", jnum(self.episode as f64))
+            .set("trigger", jstr(&self.trigger))
+            .set("snapshot_version", jnum(self.snapshot_version as f64))
+            .set("drift_score", jnum(self.drift_score))
+            .set("passes", jnum(self.passes as f64))
+            .set("sum_corr_before", jnum(self.sum_corr_before))
+            .set("sum_corr_after", jnum(self.sum_corr_after))
+            .set("swapped", Json::Bool(self.swapped))
+            .set("generation", jnum(self.generation as f64))
+            .set("unix_ms", jnum(self.unix_ms as f64));
+        o
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Episode, LifecycleError> {
+        let bad = LifecycleError::Audit;
+        let field = |k: &str| {
+            doc.get(k)
+                .ok_or_else(|| LifecycleError::Audit(format!("episode missing `{k}`")))
+        };
+        let num = |k: &str| {
+            field(k)?
+                .as_usize()
+                .ok_or_else(|| LifecycleError::Audit(format!("episode `{k}` not a count")))
+        };
+        let float = |k: &str| {
+            field(k)?
+                .as_f64()
+                .ok_or_else(|| LifecycleError::Audit(format!("episode `{k}` not a number")))
+        };
+        let trigger = field("trigger")?
+            .as_str()
+            .ok_or_else(|| bad("episode `trigger` not a string".to_string()))?
+            .to_string();
+        let swapped = field("swapped")?
+            .as_bool()
+            .ok_or_else(|| bad("episode `swapped` not a bool".to_string()))?;
+        Ok(Episode {
+            episode: num("episode")? as u64,
+            trigger,
+            snapshot_version: num("snapshot_version")? as u64,
+            drift_score: float("drift_score")?,
+            passes: num("passes")?,
+            sum_corr_before: float("sum_corr_before")?,
+            sum_corr_after: float("sum_corr_after")?,
+            swapped,
+            generation: num("generation")? as u64,
+            unix_ms: num("unix_ms")? as u64,
+        })
+    }
+}
+
+/// Append-only JSONL ledger of refit episodes.
+#[derive(Debug)]
+pub struct AuditLedger {
+    path: PathBuf,
+    retention: Retention,
+}
+
+impl AuditLedger {
+    pub fn open(path: &Path, retention: Retention) -> AuditLedger {
+        AuditLedger {
+            path: path.to_path_buf(),
+            retention,
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Parse the ledger: retained episodes plus the cumulative count of
+    /// episodes dropped by earlier retention compactions. Fail-closed: a
+    /// line that is neither a valid episode nor a retention marker is an
+    /// error, not a skip — a half-written ledger should be noticed.
+    fn read_lines(&self) -> Result<(Vec<Episode>, u64), LifecycleError> {
+        if !self.path.exists() {
+            return Ok((Vec::new(), 0));
+        }
+        let text = fs::read_to_string(&self.path)
+            .map_err(|e| LifecycleError::Audit(format!("read {}: {e}", self.path.display())))?;
+        let mut episodes = Vec::new();
+        let mut dropped: u64 = 0;
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let doc = parse(line)
+                .map_err(|e| LifecycleError::Audit(format!("ledger line {}: {e}", i + 1)))?;
+            match doc.get("kind").and_then(|k| k.as_str()) {
+                Some("episode") => episodes.push(Episode::from_json(&doc)?),
+                Some("retention") => {
+                    let d = doc.get("dropped").and_then(|d| d.as_usize()).ok_or_else(|| {
+                        LifecycleError::Audit(format!("ledger line {}: bad retention", i + 1))
+                    })?;
+                    dropped += d as u64;
+                }
+                _ => {
+                    return Err(LifecycleError::Audit(format!(
+                        "ledger line {}: unknown kind",
+                        i + 1
+                    )))
+                }
+            }
+        }
+        Ok((episodes, dropped))
+    }
+
+    /// All retained episodes, oldest first.
+    pub fn read(&self) -> Result<Vec<Episode>, LifecycleError> {
+        Ok(self.read_lines()?.0)
+    }
+
+    /// The id the next appended episode should carry: one past the newest
+    /// retained episode, accounting for compacted-away history.
+    pub fn next_episode(&self) -> Result<u64, LifecycleError> {
+        let (episodes, dropped) = self.read_lines()?;
+        Ok(episodes.last().map(|e| e.episode).unwrap_or(dropped) + 1)
+    }
+
+    /// Append one episode, then enforce retention if the file now holds
+    /// more than `max_records` episodes.
+    pub fn append(&self, episode: &Episode) -> Result<(), LifecycleError> {
+        if let Some(parent) = self.path.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent)?;
+            }
+        }
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .map_err(|e| LifecycleError::Audit(format!("open {}: {e}", self.path.display())))?;
+        writeln!(f, "{}", episode.to_json().to_string_compact())
+            .and_then(|()| f.flush())
+            .map_err(|e| LifecycleError::Audit(format!("append: {e}")))?;
+        drop(f);
+
+        let max = self.retention.max_records;
+        if max == 0 {
+            return Ok(());
+        }
+        let (episodes, dropped) = self.read_lines()?;
+        if episodes.len() <= max {
+            return Ok(());
+        }
+        let cut = episodes.len() - max;
+        let total_dropped = dropped + cut as u64;
+        let mut out = String::new();
+        let mut marker = Json::obj();
+        marker
+            .set("kind", jstr("retention"))
+            .set("dropped", jnum(total_dropped as f64));
+        out.push_str(&marker.to_string_compact());
+        out.push('\n');
+        for e in &episodes[cut..] {
+            out.push_str(&e.to_json().to_string_compact());
+            out.push('\n');
+        }
+        let tmp = self.path.with_extension("jsonl.tmp");
+        fs::write(&tmp, out)
+            .and_then(|()| fs::rename(&tmp, &self.path))
+            .map_err(|e| LifecycleError::Audit(format!("compact: {e}")))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn episode(id: u64) -> Episode {
+        Episode {
+            episode: id,
+            trigger: "drift".to_string(),
+            snapshot_version: id + 1,
+            drift_score: 0.3,
+            passes: 8,
+            sum_corr_before: 1.2,
+            sum_corr_after: 2.4,
+            swapped: true,
+            generation: id,
+            unix_ms: 1_700_000_000_000 + id,
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_monotone_ids() {
+        let dir = std::env::temp_dir().join("rcca_audit_roundtrip");
+        let _ = fs::remove_dir_all(&dir);
+        let ledger = AuditLedger::open(&dir.join("audit.jsonl"), Retention::default());
+        assert_eq!(ledger.next_episode().unwrap(), 1);
+        for id in 1..=3 {
+            let mut e = episode(id);
+            e.episode = ledger.next_episode().unwrap();
+            ledger.append(&e).unwrap();
+        }
+        let got = ledger.read().unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[2].episode, 3);
+        assert_eq!(got[0], episode(1));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retention_compacts_but_keeps_the_count_and_numbering() {
+        let dir = std::env::temp_dir().join("rcca_audit_retention");
+        let _ = fs::remove_dir_all(&dir);
+        let path = dir.join("audit.jsonl");
+        let ledger = AuditLedger::open(&path, Retention { max_records: 2 });
+        for _ in 0..5 {
+            let mut e = episode(0);
+            e.episode = ledger.next_episode().unwrap();
+            ledger.append(&e).unwrap();
+        }
+        let got = ledger.read().unwrap();
+        assert_eq!(
+            got.iter().map(|e| e.episode).collect::<Vec<_>>(),
+            vec![4, 5]
+        );
+        // Numbering continues past the compacted history.
+        assert_eq!(ledger.next_episode().unwrap(), 6);
+        let text = fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"kind\":\"retention\""), "{text}");
+        assert!(text.contains("\"dropped\":3"), "{text}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn garbage_line_is_an_error() {
+        let dir = std::env::temp_dir().join("rcca_audit_garbage");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("audit.jsonl");
+        fs::write(&path, "{\"kind\":\"mystery\"}\n").unwrap();
+        let ledger = AuditLedger::open(&path, Retention::default());
+        assert!(ledger.read().is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

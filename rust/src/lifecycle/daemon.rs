@@ -1,0 +1,564 @@
+//! The lifecycle daemon: watch the manifest, score fresh shards for drift,
+//! warm-refit when drift (or a schedule) says so, hot-swap the result into
+//! serving, and record the episode.
+//!
+//! The daemon is deliberately a *pull* loop around one synchronous,
+//! fully-testable step: [`Daemon::tick`]. Each tick
+//!
+//! 1. loads the current [`Manifest`] (fail-closed: a torn manifest leaves
+//!    the previous snapshot — and the served model — untouched);
+//! 2. loads the served model document and derives the *baseline*: which
+//!    snapshot version / shard prefix the model already reflects (from its
+//!    embedded [`Provenance`] when present);
+//! 3. drift-scores the shards appended since the baseline against the
+//!    model's canonical correlations, publishing the score through
+//!    [`ServeMetrics`];
+//! 4. on drift ≥ threshold or a periodic schedule, warm-refits via
+//!    [`Horst::fit_from`] from the served bases over the *pinned* snapshot
+//!    (any engine spec: in-memory, sharded/streaming, cluster), overwrites
+//!    the model document atomically (write-then-rename), pokes the reload
+//!    hook, and appends an [`Episode`] to the audit ledger.
+//!
+//! Warm refits use no RNG ([`Horst::fit_from`] is deterministic), so a
+//! refit over a fixed snapshot from a fixed model is bitwise-reproducible.
+
+use super::audit::{AuditLedger, Episode, Retention};
+use super::drift::{DriftConfig, DriftMonitor};
+use super::manifest::Manifest;
+use super::LifecycleError;
+use crate::api::{Engine, FittedModel, Provenance, ShardedOpts};
+use crate::cca::horst::{Horst, HorstConfig};
+use crate::cca::pass::PassEngine;
+use crate::data::shards::concat_chunks;
+use crate::serve::{client, ModelRegistry, ServeMetrics};
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How a finished refit is swapped into serving.
+pub enum ReloadHook {
+    /// No serving process: the daemon only rewrites the model document.
+    None,
+    /// In-process registry (tests, embedded deployments): swap directly.
+    Registry(Arc<ModelRegistry>),
+    /// Remote serve process: `POST /admin/reload` against its admin port.
+    Http(SocketAddr),
+}
+
+/// Daemon tunables. Defaults suit the synthparl-scale CI smoke; real
+/// deployments mostly tune `drift_threshold`, `pass_budget`, and `engine`.
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// Relative correlation drop that triggers a refit.
+    pub drift_threshold: f64,
+    /// Fresh rows required before a drift score is trusted.
+    pub min_new_rows: usize,
+    /// Engine-pass budget per warm refit (`Horst` needs ≥ 2).
+    pub pass_budget: usize,
+    /// Relative objective tolerance for early refit convergence.
+    pub tol: f64,
+    /// Also refit on this wall-clock schedule, drift or not. The first
+    /// tick after startup counts as due (a daemon restart re-baselines).
+    pub refit_every: Option<Duration>,
+    /// Engine spec for refits: `inmemory`, `native[?opts]` (both run over
+    /// the manifest-pinned snapshot), or a full `cluster:<addrs>[?copts]`.
+    pub engine: String,
+    /// Audit-ledger retention.
+    pub retention: Retention,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> DaemonConfig {
+        DaemonConfig {
+            drift_threshold: 0.25,
+            min_new_rows: 1,
+            pass_budget: 24,
+            tol: 1e-3,
+            refit_every: None,
+            engine: "inmemory".to_string(),
+            retention: Retention::default(),
+        }
+    }
+}
+
+/// What one [`Daemon::tick`] did.
+#[derive(Debug)]
+pub enum Tick {
+    /// Nothing new under the manifest and no schedule due.
+    Idle { version: u64 },
+    /// Fresh shards were scored but did not trigger a refit.
+    Observed { version: u64, score: f64 },
+    /// A refit was due but the snapshot is unchanged — no-op, no swap.
+    NoOp { version: u64 },
+    /// A warm refit ran; the episode is what the ledger recorded.
+    Refit(Episode),
+}
+
+/// The warm-refit daemon. Owns the drift monitor and the refit baseline;
+/// the CLI (`repro daemon`) drives it in a poll loop, tests drive single
+/// ticks.
+pub struct Daemon {
+    store_dir: PathBuf,
+    model_path: PathBuf,
+    config: DaemonConfig,
+    ledger: AuditLedger,
+    hook: ReloadHook,
+    metrics: Option<Arc<ServeMetrics>>,
+    monitor: DriftMonitor,
+    /// (snapshot version, shard count) the served model reflects.
+    baseline: Option<(u64, usize)>,
+    last_refit_ms: Option<u64>,
+}
+
+impl Daemon {
+    pub fn new(
+        store_dir: &Path,
+        model_path: &Path,
+        audit_path: &Path,
+        config: DaemonConfig,
+    ) -> Daemon {
+        let monitor = DriftMonitor::new(DriftConfig {
+            threshold: config.drift_threshold,
+            min_rows: config.min_new_rows,
+        });
+        let ledger = AuditLedger::open(audit_path, config.retention);
+        Daemon {
+            store_dir: store_dir.to_path_buf(),
+            model_path: model_path.to_path_buf(),
+            config,
+            ledger,
+            hook: ReloadHook::None,
+            metrics: None,
+            monitor,
+            baseline: None,
+            last_refit_ms: None,
+        }
+    }
+
+    /// Swap refits into an in-process registry.
+    pub fn with_registry(mut self, registry: Arc<ModelRegistry>) -> Daemon {
+        self.hook = ReloadHook::Registry(registry);
+        self
+    }
+
+    /// Swap refits into a remote serve process via `POST /admin/reload`.
+    pub fn with_http_reload(mut self, addr: SocketAddr) -> Daemon {
+        self.hook = ReloadHook::Http(addr);
+        self
+    }
+
+    /// Publish drift scores and refit counts through serve metrics.
+    pub fn with_metrics(mut self, metrics: Arc<ServeMetrics>) -> Daemon {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    pub fn ledger(&self) -> &AuditLedger {
+        &self.ledger
+    }
+
+    /// Latest drift evaluation, if any batch has been scored.
+    pub fn last_drift(&self) -> Option<&super::drift::DriftScore> {
+        self.monitor.last()
+    }
+
+    /// One synchronous lifecycle step; see the module docs for the phases.
+    /// `now_unix_ms` is injected so tests and the CLI own the clock.
+    pub fn tick(&mut self, now_unix_ms: u64) -> Result<Tick, LifecycleError> {
+        let manifest = Manifest::load(&self.store_dir)?;
+        if let Some((base_version, _)) = self.baseline {
+            if manifest.version < base_version {
+                return Err(LifecycleError::Manifest(format!(
+                    "stale manifest: version {} regressed below the served baseline {}",
+                    manifest.version, base_version
+                )));
+            }
+        }
+        let model = FittedModel::load(&self.model_path)
+            .map_err(|e| LifecycleError::Refit(format!("load model: {e}")))?;
+
+        let (base_version, base_shards) = match self.baseline {
+            Some(b) => b,
+            None => {
+                let b = match model.provenance() {
+                    Some(p) if p.snapshot_version <= manifest.version => {
+                        (p.snapshot_version, p.shards.min(manifest.shards.len()))
+                    }
+                    // No provenance: assume the model reflects everything
+                    // currently on disk and only react to future appends.
+                    _ => (manifest.version, manifest.shards.len()),
+                };
+                self.baseline = Some(b);
+                b
+            }
+        };
+
+        // Score the shards appended since the baseline.
+        let fresh_entries = &manifest.shards[base_shards.min(manifest.shards.len())..];
+        let mut drift_score = 0.0;
+        if !fresh_entries.is_empty() {
+            let store = manifest.store(&self.store_dir);
+            let mut chunks = Vec::with_capacity(fresh_entries.len());
+            for i in base_shards..manifest.shards.len() {
+                chunks.push(store.load(i).map_err(LifecycleError::Manifest)?);
+            }
+            let batch = concat_chunks(&chunks);
+            let score = self.monitor.observe(&model, &batch)?;
+            drift_score = score.score;
+            if let Some(m) = &self.metrics {
+                m.add(&m.drift_batches, 1);
+                m.drift_score_milli
+                    .store((drift_score * 1000.0).round() as u64, Ordering::Relaxed);
+                if drift_score >= self.config.drift_threshold {
+                    m.add(&m.drift_alerts, 1);
+                }
+            }
+        }
+
+        // Only this tick's evaluation can trigger: with nothing fresh the
+        // monitor still remembers the score that caused the last refit.
+        let drift_due = !fresh_entries.is_empty() && self.monitor.drifted();
+        let periodic_due = match self.config.refit_every {
+            Some(every) => {
+                now_unix_ms >= self.last_refit_ms.unwrap_or(0) + every.as_millis() as u64
+            }
+            None => false,
+        };
+        if !drift_due && !periodic_due {
+            return Ok(if fresh_entries.is_empty() {
+                Tick::Idle { version: manifest.version }
+            } else {
+                Tick::Observed { version: manifest.version, score: drift_score }
+            });
+        }
+        if manifest.version == base_version {
+            // Refit due but the snapshot is unchanged: fit_from over the
+            // same data from the same bases reproduces the same model, so
+            // skip the fit and the swap entirely (no ledger entry either —
+            // nothing about the served model changed).
+            self.last_refit_ms = Some(now_unix_ms);
+            return Ok(Tick::NoOp { version: manifest.version });
+        }
+
+        // Warm refit over the pinned snapshot.
+        let mut engine = self.build_engine(&manifest)?;
+        let before = model.objective(&mut engine).sum_corr;
+        let start_passes = engine.passes();
+        let horst = Horst::new(HorstConfig {
+            k: model.k(),
+            lambda_a: model.lambda_a,
+            lambda_b: model.lambda_b,
+            pass_budget: self.config.pass_budget,
+            augment: true,
+            seed: 0, // unused: fit_from never draws randomness
+            tol: self.config.tol,
+        });
+        let (cca_model, trace) = horst
+            .fit_from(&mut engine, model.xa().clone(), model.xb().clone())
+            .map_err(|e| LifecycleError::Refit(format!("{e:#}")))?;
+        let fit_passes = engine.passes() - start_passes;
+        let trigger = if drift_due { "drift" } else { "periodic" };
+        let sum_corr_after = cca_model.sum_correlations();
+        let refit = FittedModel::new(cca_model, model.lambda_a, model.lambda_b, "horst+warm")
+            .with_trace(trace)
+            .with_fit_passes(fit_passes)
+            .with_provenance(Provenance {
+                snapshot_version: manifest.version,
+                shards: manifest.shards.len(),
+                rows: manifest.rows(),
+                data_hash: manifest.data_hash(),
+                trigger: trigger.to_string(),
+            });
+
+        // Atomic swap of the model document: the registry (or a remote
+        // serve) only ever re-reads a fully-written file.
+        let tmp = self.model_path.with_extension("json.refit-tmp");
+        refit.save(&tmp).map_err(|e| LifecycleError::Refit(format!("save refit: {e}")))?;
+        std::fs::rename(&tmp, &self.model_path)?;
+
+        let (swapped, generation) = match &self.hook {
+            ReloadHook::None => (false, 0),
+            ReloadHook::Registry(reg) => {
+                let snap = reg
+                    .reload()
+                    .map_err(|e| LifecycleError::Refit(format!("registry reload: {e}")))?;
+                (true, snap.generation)
+            }
+            ReloadHook::Http(addr) => {
+                let (status, body) = client::one_shot(*addr, "POST", "/admin/reload", None)
+                    .map_err(|e| LifecycleError::Refit(format!("reload {addr}: {e}")))?;
+                if status != 200 {
+                    return Err(LifecycleError::Refit(format!(
+                        "reload {addr}: status {status}: {body}"
+                    )));
+                }
+                let generation = crate::util::json::parse(&body)
+                    .ok()
+                    .and_then(|doc| doc.get("generation").and_then(|g| g.as_usize()))
+                    .ok_or_else(|| {
+                        LifecycleError::Refit(format!("reload {addr}: no generation in {body}"))
+                    })? as u64;
+                (true, generation)
+            }
+        };
+
+        let episode = Episode {
+            episode: self.ledger.next_episode()?,
+            trigger: trigger.to_string(),
+            snapshot_version: manifest.version,
+            drift_score,
+            passes: fit_passes,
+            sum_corr_before: before,
+            sum_corr_after,
+            swapped,
+            generation,
+            unix_ms: now_unix_ms,
+        };
+        self.ledger.append(&episode)?;
+        if let Some(m) = &self.metrics {
+            m.add(&m.refits, 1);
+        }
+        self.baseline = Some((manifest.version, manifest.shards.len()));
+        self.last_refit_ms = Some(now_unix_ms);
+        Ok(Tick::Refit(episode))
+    }
+
+    /// Build the refit engine over the manifest-pinned snapshot.
+    fn build_engine(&self, manifest: &Manifest) -> Result<Engine, LifecycleError> {
+        let spec = self.config.engine.as_str();
+        let bad = LifecycleError::Refit;
+        if spec == "inmemory" {
+            let chunk = manifest.store(&self.store_dir).load_all().map_err(bad)?;
+            return Ok(Engine::in_memory(chunk));
+        }
+        if let Some(rest) = spec.strip_prefix("native") {
+            let opts = match rest.strip_prefix('?') {
+                Some(q) => ShardedOpts::parse_query(q).map_err(|e| bad(e.to_string()))?,
+                None if rest.is_empty() => ShardedOpts::default(),
+                None => return Err(bad(format!("bad engine spec '{spec}'"))),
+            };
+            let store = manifest.store(&self.store_dir);
+            return Engine::sharded_store(store, opts).map_err(|e| bad(e.to_string()));
+        }
+        if spec.starts_with("cluster:") {
+            // Workers serve whatever shard set they were started on; insist
+            // it matches the snapshot so a refit never mixes versions.
+            let engine = Engine::from_spec(spec).map_err(|e| bad(e.to_string()))?;
+            let (n, da, db) = engine.shape();
+            if (n, da, db) != (manifest.rows(), manifest.dims_a, manifest.dims_b) {
+                return Err(bad(format!(
+                    "cluster workers serve {n} rows ({da}x{db}) but snapshot v{} has {} rows \
+                     ({}x{}) — restart workers on the new snapshot",
+                    manifest.version,
+                    manifest.rows(),
+                    manifest.dims_a,
+                    manifest.dims_b
+                )));
+            }
+            return Ok(engine);
+        }
+        Err(bad(format!(
+            "unknown daemon engine '{spec}' (expected inmemory | native[?opts] | cluster:<addrs>)"
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shards::TwoViewChunk;
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+    use crate::lifecycle::Ingestor;
+    use std::fs;
+
+    fn corpus(n: usize, batch: u64, drift: f64) -> TwoViewChunk {
+        let d = SynthParl::generate(SynthParlConfig {
+            n,
+            dims: 64,
+            topics: 6,
+            words_per_topic: 8,
+            background_words: 16,
+            mean_len: 8.0,
+            seed: 23,
+            batch,
+            drift,
+            ..Default::default()
+        });
+        TwoViewChunk { a: d.a, b: d.b }
+    }
+
+    fn fit_and_save(ing: &Ingestor, dir: &Path, path: &Path) -> FittedModel {
+        let chunk = ing.manifest().store(dir).load_all().unwrap();
+        let mut engine = Engine::in_memory(chunk);
+        let horst = Horst::new(HorstConfig {
+            k: 4,
+            lambda_a: 0.05,
+            lambda_b: 0.05,
+            pass_budget: 40,
+            seed: 3,
+            ..Default::default()
+        });
+        let (m, trace) = horst.fit(&mut engine).unwrap();
+        let fitted = FittedModel::new(m, 0.05, 0.05, "horst")
+            .with_trace(trace)
+            .with_fit_passes(engine.passes())
+            .with_provenance(Provenance {
+                snapshot_version: ing.manifest().version,
+                shards: ing.manifest().shards.len(),
+                rows: ing.manifest().rows(),
+                data_hash: ing.manifest().data_hash(),
+                trigger: "cold".to_string(),
+            });
+        fitted.save(path).unwrap();
+        fitted
+    }
+
+    fn setup(name: &str) -> (PathBuf, PathBuf, PathBuf, Ingestor) {
+        let dir = std::env::temp_dir().join(name);
+        let _ = fs::remove_dir_all(&dir);
+        let store = dir.join("store");
+        let mut ing = Ingestor::open(&store).unwrap();
+        ing.append_chunk(&corpus(600, 0, 0.0)).unwrap();
+        let model_path = dir.join("model.json");
+        fit_and_save(&ing, &store, &model_path);
+        (dir, store, model_path, ing)
+    }
+
+    #[test]
+    fn idle_then_drift_refit_records_episode() {
+        let (dir, store, model_path, mut ing) = setup("rcca_daemon_drift");
+        let mut daemon = Daemon::new(
+            &store,
+            &model_path,
+            &dir.join("audit.jsonl"),
+            DaemonConfig {
+                drift_threshold: 0.05,
+                pass_budget: 24,
+                ..Default::default()
+            },
+        );
+        // Nothing new: idle, no ledger entry.
+        assert!(matches!(daemon.tick(1000).unwrap(), Tick::Idle { version: 2 }));
+        assert!(daemon.ledger().read().unwrap().is_empty());
+
+        ing.append_chunk(&corpus(400, 1, 0.8)).unwrap();
+        let tick = daemon.tick(2000).unwrap();
+        let Tick::Refit(ep) = tick else {
+            panic!("expected a refit, got {tick:?}");
+        };
+        assert_eq!(ep.trigger, "drift");
+        assert_eq!(ep.snapshot_version, 3);
+        assert!(ep.drift_score >= 0.05, "{}", ep.drift_score);
+        assert!(ep.passes >= 2 && ep.passes <= 24, "{}", ep.passes);
+        assert!(ep.sum_corr_after >= ep.sum_corr_before - 1e-9);
+        assert!(!ep.swapped, "no hook configured");
+        assert_eq!(daemon.ledger().read().unwrap().len(), 1);
+
+        // The swapped-in document carries the new provenance.
+        let refit = FittedModel::load(&model_path).unwrap();
+        let p = refit.provenance().unwrap();
+        assert_eq!((p.snapshot_version, &*p.trigger), (3, "drift"));
+        assert_eq!(refit.solver(), "horst+warm");
+
+        // Next tick: baseline advanced, nothing fresh → idle.
+        assert!(matches!(daemon.tick(3000).unwrap(), Tick::Idle { version: 3 }));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unchanged_snapshot_periodic_refit_is_a_noop() {
+        let (dir, store, model_path, _ing) = setup("rcca_daemon_noop");
+        let mut daemon = Daemon::new(
+            &store,
+            &model_path,
+            &dir.join("audit.jsonl"),
+            DaemonConfig {
+                refit_every: Some(Duration::from_millis(0)),
+                ..Default::default()
+            },
+        );
+        let before = fs::read_to_string(&model_path).unwrap();
+        assert!(matches!(daemon.tick(1000).unwrap(), Tick::NoOp { version: 2 }));
+        // No swap, no episode, model document untouched.
+        assert_eq!(fs::read_to_string(&model_path).unwrap(), before);
+        assert!(daemon.ledger().read().unwrap().is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn small_batches_observe_without_refitting() {
+        let (dir, store, model_path, mut ing) = setup("rcca_daemon_minrows");
+        let mut daemon = Daemon::new(
+            &store,
+            &model_path,
+            &dir.join("audit.jsonl"),
+            DaemonConfig {
+                drift_threshold: 0.0,
+                min_new_rows: 10_000,
+                ..Default::default()
+            },
+        );
+        ing.append_chunk(&corpus(100, 1, 0.8)).unwrap();
+        let tick = daemon.tick(1000).unwrap();
+        assert!(matches!(tick, Tick::Observed { version: 3, .. }), "{tick:?}");
+        assert!(daemon.ledger().read().unwrap().is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_manifest_fails_closed_and_recovers() {
+        let (dir, store, model_path, _ing) = setup("rcca_daemon_torn");
+        let mut daemon = Daemon::new(
+            &store,
+            &model_path,
+            &dir.join("audit.jsonl"),
+            DaemonConfig::default(),
+        );
+        assert!(matches!(daemon.tick(1000).unwrap(), Tick::Idle { .. }));
+        let manifest_path = store.join(super::super::manifest::MANIFEST_FILE);
+        let good = fs::read_to_string(&manifest_path).unwrap();
+        fs::write(&manifest_path, &good[..good.len() / 2]).unwrap();
+        assert!(matches!(daemon.tick(2000).unwrap_err(), LifecycleError::Manifest(_)));
+        // The model document was never touched; restoring the manifest
+        // resumes the loop.
+        fs::write(&manifest_path, good).unwrap();
+        assert!(matches!(daemon.tick(3000).unwrap(), Tick::Idle { .. }));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn registry_hook_swaps_generation() {
+        let (dir, store, model_path, mut ing) = setup("rcca_daemon_registry");
+        let registry = Arc::new(ModelRegistry::open(&model_path).unwrap());
+        let metrics = Arc::new(ServeMetrics::new());
+        let mut daemon = Daemon::new(
+            &store,
+            &model_path,
+            &dir.join("audit.jsonl"),
+            DaemonConfig {
+                drift_threshold: 0.05,
+                ..Default::default()
+            },
+        )
+        .with_registry(Arc::clone(&registry))
+        .with_metrics(Arc::clone(&metrics));
+
+        ing.append_chunk(&corpus(400, 1, 0.8)).unwrap();
+        let Tick::Refit(ep) = daemon.tick(5000).unwrap() else {
+            panic!("expected refit");
+        };
+        assert!(ep.swapped);
+        assert_eq!(ep.generation, 2);
+        assert_eq!(registry.generation(), 2);
+        let meta = registry.metadata();
+        let prov = meta.get("provenance").expect("metadata has provenance");
+        assert_eq!(prov.get("snapshot_version").unwrap().as_usize(), Some(3));
+        assert_eq!(metrics.drift_batches.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.drift_alerts.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.refits.load(Ordering::Relaxed), 1);
+        assert!(metrics.drift_score_milli.load(Ordering::Relaxed) >= 50);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

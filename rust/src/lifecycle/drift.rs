@@ -1,0 +1,220 @@
+//! Drift scoring: how much worse does the live model explain a fresh batch
+//! than the data it was fitted on?
+//!
+//! The score is model-relative, not distribution-relative: we evaluate the
+//! fitted bases' canonical correlations **on the incoming batch** (one
+//! in-memory pass over it) and compare the correlation sum against the sum
+//! the model achieved at fit time. A batch drawn from the same joint
+//! distribution scores near zero (sampling noise only); a batch whose
+//! cross-view coupling has rotated away from the fitted subspace scores
+//! high, because the old directions no longer line up.
+//!
+//! `score = max(0, (expected − observed) / expected)` — a dimensionless
+//! relative drop in [0, 1]-ish territory, so one threshold works across
+//! `k`, λ, and corpus scale.
+
+use super::LifecycleError;
+use crate::api::model::FittedModel;
+use crate::cca::pass::InMemoryPass;
+use crate::data::shards::TwoViewChunk;
+
+/// One batch's drift evaluation against a fitted model.
+#[derive(Debug, Clone)]
+pub struct DriftScore {
+    /// Rows in the scored batch.
+    pub rows: usize,
+    /// Correlation sum the model achieved at fit time.
+    pub expected: f64,
+    /// Correlation sum the same bases achieve on the fresh batch.
+    pub observed: f64,
+    /// Per-direction correlation drop (fit-time minus on-batch), length `k`.
+    pub per_direction: Vec<f64>,
+    /// Relative drop of the correlation sum, clamped at zero.
+    pub score: f64,
+}
+
+/// Score one batch against the live model. Costs one in-memory pass over
+/// the batch (cheap relative to any refit it might trigger).
+///
+/// Errors if the batch's dimensions disagree with the model's — a drifted
+/// *vocabulary* is a schema change, not drift, and must not be folded into
+/// a correlation score.
+pub fn score_batch(
+    model: &FittedModel,
+    batch: &TwoViewChunk,
+) -> Result<DriftScore, LifecycleError> {
+    if batch.a.cols != model.da() || batch.b.cols != model.db() {
+        return Err(LifecycleError::Refit(format!(
+            "drift batch dims {}x{} disagree with model {}x{}",
+            batch.a.cols,
+            batch.b.cols,
+            model.da(),
+            model.db()
+        )));
+    }
+    let mut pass = InMemoryPass::new(batch.clone());
+    let obj = model.objective(&mut pass);
+    let expected = model.sum_correlations();
+    let observed = obj.sum_corr;
+    let per_direction: Vec<f64> = model
+        .correlations()
+        .iter()
+        .zip(obj.corrs.iter())
+        .map(|(fit, fresh)| fit - fresh)
+        .collect();
+    let score = ((expected - observed) / expected.max(1e-12)).max(0.0);
+    Ok(DriftScore {
+        rows: batch.rows(),
+        expected,
+        observed,
+        per_direction,
+        score,
+    })
+}
+
+/// Knobs for deciding when an observed score counts as drift.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// Relative correlation drop at which the daemon triggers a refit.
+    pub threshold: f64,
+    /// Minimum batch rows before a score is trusted (small batches are
+    /// noisy in exactly the direction that causes false alarms).
+    pub min_rows: usize,
+}
+
+impl Default for DriftConfig {
+    fn default() -> DriftConfig {
+        DriftConfig {
+            threshold: 0.25,
+            min_rows: 1,
+        }
+    }
+}
+
+/// Stateful wrapper the daemon holds: remembers the last score so the
+/// trigger decision and the metrics publication read the same evaluation.
+#[derive(Debug)]
+pub struct DriftMonitor {
+    config: DriftConfig,
+    last: Option<DriftScore>,
+}
+
+impl DriftMonitor {
+    pub fn new(config: DriftConfig) -> DriftMonitor {
+        DriftMonitor { config, last: None }
+    }
+
+    /// Score a batch and retain the result as the monitor's latest reading.
+    pub fn observe(
+        &mut self,
+        model: &FittedModel,
+        batch: &TwoViewChunk,
+    ) -> Result<&DriftScore, LifecycleError> {
+        let score = score_batch(model, batch)?;
+        self.last = Some(score);
+        Ok(self.last.as_ref().expect("just set"))
+    }
+
+    pub fn last(&self) -> Option<&DriftScore> {
+        self.last.as_ref()
+    }
+
+    /// Does the latest reading cross the configured threshold?
+    pub fn drifted(&self) -> bool {
+        match &self.last {
+            Some(s) => s.score >= self.config.threshold && s.rows >= self.config.min_rows,
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cca::horst::{Horst, HorstConfig};
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+
+    fn corpus(n: usize, batch: u64, drift: f64) -> TwoViewChunk {
+        let d = SynthParl::generate(SynthParlConfig {
+            n,
+            dims: 64,
+            topics: 6,
+            words_per_topic: 8,
+            background_words: 16,
+            mean_len: 8.0,
+            seed: 41,
+            batch,
+            drift,
+            ..Default::default()
+        });
+        TwoViewChunk { a: d.a, b: d.b }
+    }
+
+    fn fit(chunk: &TwoViewChunk) -> FittedModel {
+        let mut engine = InMemoryPass::new(chunk.clone());
+        let horst = Horst::new(HorstConfig {
+            k: 4,
+            lambda_a: 0.05,
+            lambda_b: 0.05,
+            pass_budget: 40,
+            seed: 11,
+            ..Default::default()
+        });
+        let (model, trace) = horst.fit(&mut engine).unwrap();
+        FittedModel::new(model, 0.05, 0.05, "horst").with_trace(trace)
+    }
+
+    #[test]
+    fn same_distribution_scores_low_drifted_scores_high() {
+        let base = corpus(700, 0, 0.0);
+        let model = fit(&base);
+        let same = score_batch(&model, &corpus(350, 1, 0.0)).unwrap();
+        let moved = score_batch(&model, &corpus(350, 1, 0.8)).unwrap();
+        assert!(
+            moved.score > same.score + 0.05,
+            "drifted {:.4} vs same-dist {:.4}",
+            moved.score,
+            same.score
+        );
+        assert_eq!(same.per_direction.len(), 4);
+        assert!(same.score >= 0.0 && moved.score.is_finite());
+    }
+
+    #[test]
+    fn monitor_applies_threshold_and_min_rows() {
+        let base = corpus(700, 0, 0.0);
+        let model = fit(&base);
+        let mut mon = DriftMonitor::new(DriftConfig {
+            threshold: 0.0,
+            min_rows: 1_000_000,
+        });
+        assert!(!mon.drifted());
+        mon.observe(&model, &corpus(200, 1, 0.8)).unwrap();
+        // Score clears the zero threshold but the batch is too small.
+        assert!(!mon.drifted());
+        mon = DriftMonitor::new(DriftConfig {
+            threshold: 0.0,
+            min_rows: 1,
+        });
+        mon.observe(&model, &corpus(200, 1, 0.8)).unwrap();
+        assert!(mon.drifted());
+        assert!(mon.last().unwrap().rows == 200);
+    }
+
+    #[test]
+    fn dimension_mismatch_is_an_error_not_a_score() {
+        let model = fit(&corpus(300, 0, 0.0));
+        let wide = SynthParl::generate(SynthParlConfig {
+            n: 100,
+            dims: 96,
+            topics: 6,
+            words_per_topic: 8,
+            background_words: 16,
+            mean_len: 8.0,
+            seed: 42,
+            ..Default::default()
+        });
+        let err = score_batch(&model, &TwoViewChunk { a: wide.a, b: wide.b }).unwrap_err();
+        assert!(format!("{err}").contains("dims"), "{err}");
+    }
+}

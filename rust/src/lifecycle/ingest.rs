@@ -1,0 +1,265 @@
+//! Validate-then-append shard ingest under the snapshot manifest.
+//!
+//! Ordering discipline (the whole point of this module):
+//!
+//! 1. the incoming shard is CRC-checked and **fully decoded** — and its
+//!    dimensions checked against the store — before anything touches disk;
+//! 2. the shard file is written under a temp name and renamed into place
+//!    (a crash never leaves a torn file under the final name);
+//! 3. `meta.json` is rewritten (same write-then-rename);
+//! 4. only then does the manifest advance to `version + 1`.
+//!
+//! A corrupt shard therefore fails at step 1 with the store byte-identical
+//! to before the call, and a reader holding the previous [`Manifest`]
+//! never observes any intermediate state: its pinned prefix is immutable.
+
+use super::manifest::{Manifest, ShardEntry, MANIFEST_FILE};
+use super::LifecycleError;
+use crate::data::shards::{crc32, decode_shard, encode_shard, TwoViewChunk};
+use crate::util::json::{jnum, jstr, Json};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Appends shards to a store, advancing the snapshot manifest atomically
+/// after each successful append.
+#[derive(Debug)]
+pub struct Ingestor {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl Ingestor {
+    /// Open a store for ingest. Three cases:
+    /// * a manifest exists — load it (fail-closed);
+    /// * shards exist but no manifest (`repro gen` output) — bootstrap a
+    ///   version-1 manifest from `meta.json` + full shard validation;
+    /// * the directory is empty or missing — create an empty version-1
+    ///   store whose dimensions are adopted from the first appended shard.
+    pub fn open(dir: &Path) -> Result<Ingestor, LifecycleError> {
+        let manifest = if dir.join(MANIFEST_FILE).exists() {
+            Manifest::load(dir)?
+        } else if dir.join("meta.json").exists() {
+            let m = Manifest::bootstrap(dir)?;
+            m.save(dir)?;
+            m
+        } else {
+            fs::create_dir_all(dir)?;
+            let m = Manifest {
+                version: 1,
+                dims_a: 0,
+                dims_b: 0,
+                shards: Vec::new(),
+            };
+            write_meta(dir, &m)?;
+            m.save(dir)?;
+            m
+        };
+        Ok(Ingestor {
+            dir: dir.to_path_buf(),
+            manifest,
+        })
+    }
+
+    /// The snapshot this ingestor last published.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Encode and append one row-aligned chunk as a new shard.
+    pub fn append_chunk(&mut self, chunk: &TwoViewChunk) -> Result<&Manifest, LifecycleError> {
+        let bytes = encode_shard(chunk);
+        self.append_shard_bytes(&bytes)
+    }
+
+    /// Append an already-encoded shard file from elsewhere on disk.
+    pub fn append_shard_file(&mut self, path: &Path) -> Result<&Manifest, LifecycleError> {
+        let bytes = fs::read(path)
+            .map_err(|e| LifecycleError::Ingest(format!("read {}: {e}", path.display())))?;
+        self.append_shard_bytes(&bytes)
+    }
+
+    /// Append one encoded shard. Validation (CRC + full structural decode
+    /// + dimension check) happens before any write; on error the store and
+    /// manifest are byte-identical to before the call.
+    pub fn append_shard_bytes(&mut self, bytes: &[u8]) -> Result<&Manifest, LifecycleError> {
+        let chunk = decode_shard(bytes)
+            .map_err(|e| LifecycleError::Ingest(format!("rejected shard: {e}")))?;
+        if chunk.rows() == 0 {
+            return Err(LifecycleError::Ingest("rejected shard: zero rows".to_string()));
+        }
+        let empty = self.manifest.shards.is_empty() && self.manifest.dims_a == 0;
+        if !empty && (chunk.a.cols != self.manifest.dims_a || chunk.b.cols != self.manifest.dims_b)
+        {
+            return Err(LifecycleError::Ingest(format!(
+                "rejected shard: dims {}x{} disagree with the store ({}x{})",
+                chunk.a.cols, chunk.b.cols, self.manifest.dims_a, self.manifest.dims_b
+            )));
+        }
+
+        let index = self.manifest.shards.len();
+        let file = format!("shard-{index:05}.bin");
+        let tmp = self.dir.join(format!(".shard-{index:05}.tmp"));
+        fs::File::create(&tmp).and_then(|mut f| {
+            use std::io::Write;
+            f.write_all(bytes)
+        })?;
+        fs::rename(&tmp, self.dir.join(&file))?;
+
+        if empty {
+            self.manifest.dims_a = chunk.a.cols;
+            self.manifest.dims_b = chunk.b.cols;
+        }
+        self.manifest.shards.push(ShardEntry {
+            file,
+            rows: chunk.rows(),
+            bytes: bytes.len(),
+            crc: crc32(bytes),
+        });
+        write_meta(&self.dir, &self.manifest)?;
+        self.manifest.version += 1;
+        self.manifest.save(&self.dir)?;
+        Ok(&self.manifest)
+    }
+}
+
+/// Rewrite `meta.json` (write-then-rename) so plain [`ShardStore::open`]
+/// consumers — workers, `repro transform --shards`, the engine specs —
+/// keep working on an ingest-managed store.
+///
+/// [`ShardStore::open`]: crate::data::shards::ShardStore::open
+fn write_meta(dir: &Path, manifest: &Manifest) -> Result<(), LifecycleError> {
+    let rows_per_shard = manifest.shards.iter().map(|s| s.rows).max().unwrap_or(0);
+    let mut meta = Json::obj();
+    meta.set("format", jstr("rcca-shards-v1"))
+        .set("shards", jnum(manifest.shards.len() as f64))
+        .set("rows", jnum(manifest.rows() as f64))
+        .set("dims_a", jnum(manifest.dims_a as f64))
+        .set("dims_b", jnum(manifest.dims_b as f64))
+        .set("rows_per_shard", jnum(rows_per_shard as f64));
+    let tmp = dir.join(".meta.json.tmp");
+    fs::write(&tmp, meta.to_string_pretty())?;
+    fs::rename(&tmp, dir.join("meta.json"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shards::ShardStore;
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+
+    fn chunk(n: usize, seed: u64) -> TwoViewChunk {
+        let d = SynthParl::generate(SynthParlConfig {
+            n,
+            dims: 32,
+            topics: 4,
+            words_per_topic: 8,
+            background_words: 12,
+            mean_len: 6.0,
+            seed,
+            ..Default::default()
+        });
+        TwoViewChunk { a: d.a, b: d.b }
+    }
+
+    #[test]
+    fn append_advances_version_and_pins_old_snapshots() {
+        let dir = std::env::temp_dir().join("rcca_ingest_append");
+        let _ = fs::remove_dir_all(&dir);
+        let mut ing = Ingestor::open(&dir).unwrap();
+        assert_eq!(ing.manifest().version, 1);
+        ing.append_chunk(&chunk(80, 1)).unwrap();
+        let v2 = ing.manifest().clone();
+        assert_eq!(v2.version, 2);
+        assert_eq!(v2.rows(), 80);
+
+        // A reader pinned to v2 sees 80 rows forever, even after appends.
+        ing.append_chunk(&chunk(50, 2)).unwrap();
+        assert_eq!(ing.manifest().version, 3);
+        assert_eq!(ing.manifest().rows(), 130);
+        let pinned = v2.store(&dir).load_all().unwrap();
+        assert_eq!(pinned.rows(), 80);
+        // meta.json tracks the full store for plain consumers.
+        let store = ShardStore::open(&dir).unwrap();
+        assert_eq!((store.shards, store.rows), (2, 130));
+        assert!(Manifest::load(&dir)
+            .unwrap()
+            .verify(&dir)
+            .iter()
+            .all(|c| c.error.is_none()));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_resumes_from_the_published_manifest() {
+        let dir = std::env::temp_dir().join("rcca_ingest_reopen");
+        let _ = fs::remove_dir_all(&dir);
+        let mut ing = Ingestor::open(&dir).unwrap();
+        ing.append_chunk(&chunk(60, 3)).unwrap();
+        drop(ing);
+        let mut again = Ingestor::open(&dir).unwrap();
+        assert_eq!(again.manifest().version, 2);
+        again.append_chunk(&chunk(60, 4)).unwrap();
+        assert_eq!(again.manifest().shards.len(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bootstrap_from_gen_output() {
+        let dir = std::env::temp_dir().join("rcca_ingest_bootstrap");
+        let _ = fs::remove_dir_all(&dir);
+        let c = chunk(120, 5);
+        let mut w = crate::data::shards::ShardWriter::create(&dir, 50).unwrap();
+        w.write_dataset(&c.a, &c.b).unwrap();
+        let ing = Ingestor::open(&dir).unwrap();
+        assert_eq!(ing.manifest().version, 1);
+        assert_eq!(ing.manifest().shards.len(), 3);
+        assert_eq!(ing.manifest().rows(), 120);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_shard_rejected_without_advancing() {
+        let dir = std::env::temp_dir().join("rcca_ingest_corrupt");
+        let _ = fs::remove_dir_all(&dir);
+        let mut ing = Ingestor::open(&dir).unwrap();
+        ing.append_chunk(&chunk(70, 6)).unwrap();
+        let before = fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap();
+
+        let mut bytes = encode_shard(&chunk(30, 7));
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        let err = ing.append_shard_bytes(&bytes).unwrap_err();
+        assert!(matches!(err, LifecycleError::Ingest(_)), "{err}");
+
+        // Nothing advanced, nothing written.
+        assert_eq!(ing.manifest().version, 2);
+        assert_eq!(fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap(), before);
+        assert!(!dir.join("shard-00001.bin").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("rcca_ingest_dims");
+        let _ = fs::remove_dir_all(&dir);
+        let mut ing = Ingestor::open(&dir).unwrap();
+        ing.append_chunk(&chunk(40, 8)).unwrap();
+        let wide = SynthParl::generate(SynthParlConfig {
+            n: 40,
+            dims: 64,
+            topics: 4,
+            words_per_topic: 8,
+            background_words: 12,
+            mean_len: 6.0,
+            seed: 9,
+            ..Default::default()
+        });
+        let err = ing
+            .append_chunk(&TwoViewChunk { a: wide.a, b: wide.b })
+            .unwrap_err();
+        assert!(format!("{err}").contains("dims"), "{err}");
+        assert_eq!(ing.manifest().version, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,401 @@
+//! Versioned snapshot manifest over a shard directory.
+//!
+//! `manifest.json` names the exact shard files (with size, row count, and
+//! whole-file CRC) that make up one immutable snapshot of the store.
+//! Because shard files are append-only — `shard-00000.bin`, `shard-00001.bin`,
+//! … are written once and never rewritten — a manifest pins a *prefix* of
+//! the directory, and a fit running against [`Manifest::store`] is
+//! untouched by concurrent appends. The manifest itself advances by
+//! write-then-rename, so readers observe either the old version or the new
+//! one, never a torn document.
+
+use super::LifecycleError;
+use crate::data::shards::{crc32, decode_shard, ShardStore};
+use crate::util::json::{jarr, jnum, jstr, Json};
+use std::fs;
+use std::path::Path;
+
+/// Manifest file name inside a shard store directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+const FORMAT: &str = "rcca-manifest-v1";
+
+/// One shard file as pinned by a manifest version.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// File name relative to the store directory (`shard-NNNNN.bin`).
+    pub file: String,
+    pub rows: usize,
+    /// Whole-file length in bytes.
+    pub bytes: usize,
+    /// CRC-32 over the whole file (magic included — any mutation of an
+    /// already-pinned shard is detected, not just payload damage).
+    pub crc: u32,
+}
+
+/// An immutable snapshot of a shard store: a version number plus the exact
+/// shard prefix it covers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// 1-based, bumped on every successful append.
+    pub version: u64,
+    pub dims_a: usize,
+    pub dims_b: usize,
+    pub shards: Vec<ShardEntry>,
+}
+
+/// Per-shard verification outcome from [`Manifest::verify`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardCheck {
+    pub file: String,
+    pub rows: usize,
+    /// `None` = the file matches its manifest entry and decodes cleanly.
+    pub error: Option<String>,
+}
+
+impl Manifest {
+    /// Total rows across the pinned shards.
+    pub fn rows(&self) -> usize {
+        self.shards.iter().map(|s| s.rows).sum()
+    }
+
+    /// Content fingerprint of this snapshot: CRC-32 over the concatenated
+    /// per-shard CRCs, in shard order. Two snapshots with the same hash
+    /// pin byte-identical data.
+    pub fn data_hash(&self) -> String {
+        let mut bytes = Vec::with_capacity(self.shards.len() * 4);
+        for s in &self.shards {
+            bytes.extend_from_slice(&s.crc.to_le_bytes());
+        }
+        format!("{:08x}", crc32(&bytes))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                let mut e = Json::obj();
+                e.set("file", jstr(&s.file))
+                    .set("rows", jnum(s.rows as f64))
+                    .set("bytes", jnum(s.bytes as f64))
+                    .set("crc", jnum(s.crc as f64));
+                e
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("format", jstr(FORMAT))
+            .set("version", jnum(self.version as f64))
+            .set("dims_a", jnum(self.dims_a as f64))
+            .set("dims_b", jnum(self.dims_b as f64))
+            .set("rows", jnum(self.rows() as f64))
+            .set("data_hash", jstr(&self.data_hash()))
+            .set("shards", jarr(entries));
+        o
+    }
+
+    /// Fail-closed deserialization: every field must be present and typed,
+    /// the derived `rows` total must match, and `data_hash` must match —
+    /// a truncated or hand-edited manifest is rejected whole.
+    pub fn from_json(doc: &Json) -> Result<Manifest, LifecycleError> {
+        let bad = LifecycleError::Manifest;
+        let format = doc
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing 'format'".to_string()))?;
+        if format != FORMAT {
+            return Err(bad(format!(
+                "unsupported manifest format '{format}' (expected '{FORMAT}')"
+            )));
+        }
+        let get_usize = |d: &Json, k: &str| {
+            d.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| bad(format!("missing or non-integer '{k}'")))
+        };
+        let version = get_usize(doc, "version")? as u64;
+        if version == 0 {
+            return Err(bad("version must be >= 1".to_string()));
+        }
+        let entries = doc
+            .get("shards")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("missing 'shards' array".to_string()))?;
+        let mut shards = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad(format!("shard {i}: missing 'file'")))?
+                .to_string();
+            let crc = get_usize(e, "crc")?;
+            if crc > u32::MAX as usize {
+                return Err(bad(format!("shard {i}: crc out of range")));
+            }
+            shards.push(ShardEntry {
+                file,
+                rows: get_usize(e, "rows")?,
+                bytes: get_usize(e, "bytes")?,
+                crc: crc as u32,
+            });
+        }
+        let manifest = Manifest {
+            version,
+            dims_a: get_usize(doc, "dims_a")?,
+            dims_b: get_usize(doc, "dims_b")?,
+            shards,
+        };
+        if get_usize(doc, "rows")? != manifest.rows() {
+            return Err(bad("'rows' disagrees with the shard entries".to_string()));
+        }
+        let hash = doc
+            .get("data_hash")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing 'data_hash'".to_string()))?;
+        if hash != manifest.data_hash() {
+            return Err(bad("'data_hash' disagrees with the shard entries".to_string()));
+        }
+        Ok(manifest)
+    }
+
+    /// Load the store's current manifest. Any read or parse failure is an
+    /// error and the on-disk file is left untouched — a fit holding an
+    /// older [`Manifest`] keeps running against its pinned snapshot.
+    pub fn load(dir: &Path) -> Result<Manifest, LifecycleError> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = fs::read_to_string(&path)
+            .map_err(|e| LifecycleError::Manifest(format!("read {}: {e}", path.display())))?;
+        let doc = crate::util::json::parse(&text)
+            .map_err(|e| LifecycleError::Manifest(format!("{}: {e}", path.display())))?;
+        Manifest::from_json(&doc)
+    }
+
+    /// Atomically publish this manifest (write-then-rename): a crash mid-
+    /// write leaves the previous version in place, never a torn document.
+    pub fn save(&self, dir: &Path) -> Result<(), LifecycleError> {
+        let tmp = dir.join(".manifest.json.tmp");
+        fs::write(&tmp, self.to_json().to_string_pretty())?;
+        fs::rename(&tmp, dir.join(MANIFEST_FILE))?;
+        Ok(())
+    }
+
+    /// Build a version-1 manifest from an existing store directory
+    /// (`meta.json` + shard files, as written by `repro gen`). Every shard
+    /// is fully decoded; any corruption aborts the bootstrap.
+    pub fn bootstrap(dir: &Path) -> Result<Manifest, LifecycleError> {
+        let store = ShardStore::open(dir).map_err(LifecycleError::Manifest)?;
+        let mut shards = Vec::with_capacity(store.shards);
+        for i in 0..store.shards {
+            let path = store.shard_path(i);
+            let bytes = fs::read(&path)
+                .map_err(|e| LifecycleError::Manifest(format!("read {}: {e}", path.display())))?;
+            let chunk = decode_shard(&bytes)
+                .map_err(|e| LifecycleError::Manifest(format!("{}: {e}", path.display())))?;
+            if chunk.a.cols != store.dims_a || chunk.b.cols != store.dims_b {
+                return Err(LifecycleError::Manifest(format!(
+                    "{}: dims {}x{} disagree with meta.json ({}x{})",
+                    path.display(),
+                    chunk.a.cols,
+                    chunk.b.cols,
+                    store.dims_a,
+                    store.dims_b
+                )));
+            }
+            shards.push(ShardEntry {
+                file: format!("shard-{i:05}.bin"),
+                rows: chunk.rows(),
+                bytes: bytes.len(),
+                crc: crc32(&bytes),
+            });
+        }
+        let manifest = Manifest {
+            version: 1,
+            dims_a: store.dims_a,
+            dims_b: store.dims_b,
+            shards,
+        };
+        if manifest.rows() != store.rows {
+            return Err(LifecycleError::Manifest(format!(
+                "shard rows sum to {}, meta.json says {}",
+                manifest.rows(),
+                store.rows
+            )));
+        }
+        Ok(manifest)
+    }
+
+    /// A [`ShardStore`] pinned to exactly this snapshot's shard prefix.
+    /// Built from the manifest's own counts — *not* from `meta.json`, which
+    /// a concurrent ingest may already have advanced — so every pass over
+    /// it reads the same immutable row set.
+    pub fn store(&self, dir: &Path) -> ShardStore {
+        ShardStore {
+            dir: dir.to_path_buf(),
+            shards: self.shards.len(),
+            rows: self.rows(),
+            dims_a: self.dims_a,
+            dims_b: self.dims_b,
+        }
+    }
+
+    /// Verify every pinned shard on disk against its entry: existence,
+    /// length, whole-file CRC, full decode, and row count. Corruption is
+    /// reported per shard rather than failing the sweep.
+    pub fn verify(&self, dir: &Path) -> Vec<ShardCheck> {
+        self.shards
+            .iter()
+            .map(|entry| {
+                let err = check_entry(dir, entry, self.dims_a, self.dims_b).err();
+                ShardCheck {
+                    file: entry.file.clone(),
+                    rows: entry.rows,
+                    error: err,
+                }
+            })
+            .collect()
+    }
+}
+
+fn check_entry(
+    dir: &Path,
+    entry: &ShardEntry,
+    dims_a: usize,
+    dims_b: usize,
+) -> Result<(), String> {
+    let bytes = fs::read(dir.join(&entry.file)).map_err(|e| format!("unreadable: {e}"))?;
+    if bytes.len() != entry.bytes {
+        return Err(format!(
+            "length changed: {} bytes on disk, manifest pinned {}",
+            bytes.len(),
+            entry.bytes
+        ));
+    }
+    let crc = crc32(&bytes);
+    if crc != entry.crc {
+        return Err(format!(
+            "crc mismatch: manifest {:08x}, on disk {crc:08x}",
+            entry.crc
+        ));
+    }
+    let chunk = decode_shard(&bytes)?;
+    if chunk.rows() != entry.rows {
+        return Err(format!(
+            "row count changed: {} on disk, manifest pinned {}",
+            chunk.rows(),
+            entry.rows
+        ));
+    }
+    if chunk.a.cols != dims_a || chunk.b.cols != dims_b {
+        return Err(format!(
+            "dims {}x{} disagree with manifest ({dims_a}x{dims_b})",
+            chunk.a.cols, chunk.b.cols
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shards::ShardWriter;
+    use crate::data::synthparl::{SynthParl, SynthParlConfig};
+
+    fn write_store(dir: &Path, n: usize, seed: u64) {
+        let d = SynthParl::generate(SynthParlConfig {
+            n,
+            dims: 32,
+            topics: 4,
+            words_per_topic: 8,
+            background_words: 12,
+            mean_len: 6.0,
+            seed,
+            ..Default::default()
+        });
+        let mut w = ShardWriter::create(dir, 64).unwrap();
+        w.write_dataset(&d.a, &d.b).unwrap();
+    }
+
+    #[test]
+    fn bootstrap_save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("rcca_manifest_roundtrip");
+        let _ = fs::remove_dir_all(&dir);
+        write_store(&dir, 200, 7);
+        let m = Manifest::bootstrap(&dir).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.rows(), 200);
+        assert_eq!(m.shards.len(), 4); // ceil(200/64)
+        m.save(&dir).unwrap();
+        let back = Manifest::load(&dir).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.data_hash(), m.data_hash());
+        // The pinned store loads the same rows as a meta.json open.
+        let pinned = m.store(&dir).load_all().unwrap();
+        let via_meta = ShardStore::open(&dir).unwrap().load_all().unwrap();
+        assert_eq!(pinned, via_meta);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_or_garbage_manifest_is_rejected() {
+        let dir = std::env::temp_dir().join("rcca_manifest_truncated");
+        let _ = fs::remove_dir_all(&dir);
+        write_store(&dir, 100, 8);
+        let m = Manifest::bootstrap(&dir).unwrap();
+        m.save(&dir).unwrap();
+        let full = fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap();
+        fs::write(dir.join(MANIFEST_FILE), &full[..full.len() / 2]).unwrap();
+        assert!(matches!(
+            Manifest::load(&dir),
+            Err(LifecycleError::Manifest(_))
+        ));
+        fs::write(dir.join(MANIFEST_FILE), "{ not json").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        // Internal inconsistencies are rejected too (fail-closed fields).
+        let mut doc = m.to_json();
+        doc.set("rows", crate::util::json::jnum(1.0));
+        assert!(Manifest::from_json(&doc).is_err());
+        let mut doc = m.to_json();
+        doc.set("data_hash", crate::util::json::jstr("00000000"));
+        assert!(Manifest::from_json(&doc).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verify_flags_corruption_and_mutation() {
+        let dir = std::env::temp_dir().join("rcca_manifest_verify");
+        let _ = fs::remove_dir_all(&dir);
+        write_store(&dir, 150, 9);
+        let m = Manifest::bootstrap(&dir).unwrap();
+        assert!(m.verify(&dir).iter().all(|c| c.error.is_none()));
+        // Flip a byte in the middle of shard 1.
+        let path = dir.join("shard-00001.bin");
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        fs::write(&path, &bytes).unwrap();
+        let checks = m.verify(&dir);
+        assert!(checks[0].error.is_none());
+        assert!(checks[1].error.as_deref().unwrap().contains("crc"));
+        // Delete shard 2: unreadable.
+        fs::remove_file(dir.join("shard-00002.bin")).unwrap();
+        let checks = m.verify(&dir);
+        assert!(checks[2].error.as_deref().unwrap().contains("unreadable"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn data_hash_tracks_content() {
+        let dir = std::env::temp_dir().join("rcca_manifest_hash");
+        let _ = fs::remove_dir_all(&dir);
+        write_store(&dir, 100, 10);
+        let mut m = Manifest::bootstrap(&dir).unwrap();
+        let h1 = m.data_hash();
+        m.shards.push(ShardEntry {
+            file: "shard-00009.bin".to_string(),
+            rows: 10,
+            bytes: 100,
+            crc: 0xdeadbeef,
+        });
+        assert_ne!(m.data_hash(), h1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

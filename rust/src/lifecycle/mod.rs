@@ -1,0 +1,74 @@
+//! `rcca::lifecycle` — continuous ingest, drift monitoring, and warm refit:
+//! the closed loop over everything the crate already does once.
+//!
+//! The paper's headline property — accurate CCA in as few as two data
+//! passes — makes *refitting* cheap enough to be the answer to streaming
+//! data. This module turns fit + serve + cluster into that loop:
+//!
+//! * [`manifest`] — a versioned, atomically-advanced snapshot manifest over
+//!   a shard directory. Fits run against a manifest-pinned [`ShardStore`]
+//!   prefix, so a running pass never sees a half-written shard set.
+//! * [`ingest`] — validate-then-append: a shard is CRC/structure-checked
+//!   *before* anything touches disk, written under a temp name, renamed,
+//!   and only then does the manifest version advance.
+//! * [`drift`] — scores an incoming batch against the live model's
+//!   canonical correlations (relative drop of the batch objective).
+//! * [`daemon`] — the loop: watch the manifest, score fresh shards, and on
+//!   drift ≥ threshold (or a periodic schedule) warm-refit via
+//!   `Horst::fit_from` from the served bases, atomically overwrite the
+//!   model document, and hot-swap it into the serve registry.
+//! * [`audit`] — append-only episode ledger with an explicit retention
+//!   policy; deletion is never silent (a retention marker keeps the count).
+//!
+//! [`ShardStore`]: crate::data::shards::ShardStore
+
+pub mod audit;
+pub mod daemon;
+pub mod drift;
+pub mod ingest;
+pub mod manifest;
+
+pub use audit::{AuditLedger, Episode, Retention};
+pub use daemon::{Daemon, DaemonConfig, ReloadHook, Tick};
+pub use drift::{score_batch, DriftConfig, DriftMonitor, DriftScore};
+pub use ingest::Ingestor;
+pub use manifest::{Manifest, ShardCheck, ShardEntry, MANIFEST_FILE};
+
+use std::fmt;
+
+/// Typed failures of the lifecycle loop. Every variant is fail-closed: a
+/// manifest that does not parse leaves the previous snapshot untouched, a
+/// shard that does not validate is never written, a refit that errors
+/// leaves the served model document as it was.
+#[derive(Debug)]
+pub enum LifecycleError {
+    /// Manifest missing, malformed, stale, or inconsistent with the store.
+    Manifest(String),
+    /// Shard rejected at ingest (validation happens before any write).
+    Ingest(String),
+    /// Audit ledger unreadable or unwritable.
+    Audit(String),
+    /// Warm refit, engine construction, or model swap failed.
+    Refit(String),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for LifecycleError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LifecycleError::Manifest(m) => write!(f, "manifest: {m}"),
+            LifecycleError::Ingest(m) => write!(f, "ingest: {m}"),
+            LifecycleError::Audit(m) => write!(f, "audit: {m}"),
+            LifecycleError::Refit(m) => write!(f, "refit: {m}"),
+            LifecycleError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for LifecycleError {}
+
+impl From<std::io::Error> for LifecycleError {
+    fn from(e: std::io::Error) -> LifecycleError {
+        LifecycleError::Io(e)
+    }
+}

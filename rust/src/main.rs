@@ -17,13 +17,17 @@
 //! by `serve`/`transform` or any other process
 //! (`rcca::api::FittedModel::load`).
 
-use rcca::api::{Backend, Cca, Engine, FittedModel, Solver};
+use rcca::api::{Backend, Cca, Engine, FittedModel, Provenance, Solver};
 use rcca::bench::Report;
 use rcca::cluster::{ClusterConfig, Worker, WorkerConfig};
+use rcca::data::shards::TwoViewChunk;
+use rcca::data::synthparl::SynthParl;
 use rcca::experiments::{self, Scale, Workload};
+use rcca::lifecycle::{Daemon, DaemonConfig, Ingestor, Manifest, Retention, Tick};
 use rcca::serve::{proto, Server, ServerConfig, View};
 use rcca::util::cli::{Args, Spec};
 use rcca::util::timer::Timer;
+use std::net::SocketAddr;
 use std::path::Path;
 use std::time::Duration;
 
@@ -56,6 +60,9 @@ fn usage() -> String {
        transform  offline projection through a saved model\n\
        worker     cluster worker process serving a shard directory\n\
        fit        RandomizedCCA on a worker cluster (rcca::cluster)\n\
+       ingest     append validated shards under a versioned snapshot manifest\n\
+       daemon     drift-monitoring warm-refit loop (rcca::lifecycle)\n\
+       manifest   print + validate a store's snapshot manifest\n\
        shard-info   inspect a shard file: header, nnz, CRC status\n\
        bench-check  gate a BENCH_*.json trajectory against its baseline\n\
      \n\
@@ -114,6 +121,9 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "transform" => cmd_transform(rest),
         "worker" => cmd_worker(rest),
         "fit" => cmd_fit(rest),
+        "ingest" => cmd_ingest(rest),
+        "daemon" => cmd_daemon(rest),
+        "manifest" => cmd_manifest(rest),
         "shard-info" => cmd_shard_info(rest),
         "bench-check" => cmd_bench_check(rest),
         "--help" | "-h" | "help" => {
@@ -242,10 +252,34 @@ fn cmd_rcca(argv: Vec<String>) -> anyhow::Result<()> {
     r.row(&["feasibility offdiag".into(), format!("{:.2e}", feas.cross_offdiag)]);
     let save = args.str("save");
     if !save.is_empty() {
+        // Cold fits record which manifest snapshot they saw so the refit
+        // daemon (and `/v1/model`) can tie the served model to its data.
+        let model = match spec_store_dir(args.str("engine"))
+            .and_then(|dir| Manifest::load(Path::new(dir)).ok())
+        {
+            Some(m) => model.with_provenance(Provenance {
+                snapshot_version: m.version,
+                shards: m.shards.len(),
+                rows: m.rows(),
+                data_hash: m.data_hash(),
+                trigger: "cold".to_string(),
+            }),
+            None => model,
+        };
         model.save(Path::new(save))?;
         r.row(&["model saved to".into(), save.into()]);
     }
     emit(&r, args.str("report-dir"))
+}
+
+/// Shard-store directory named by an engine spec, if any: the part of an
+/// `inmemory:DIR` / `native:DIR?opts` spec before the option query. Cluster
+/// specs name worker addresses, not a local store.
+fn spec_store_dir(spec: &str) -> Option<&str> {
+    let rest = spec
+        .strip_prefix("inmemory:")
+        .or_else(|| spec.strip_prefix("native:"))?;
+    rest.split('?').next()
 }
 
 fn cmd_horst(argv: Vec<String>) -> anyhow::Result<()> {
@@ -582,6 +616,202 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
         r.row(&["model saved to".into(), save.into()]);
     }
     emit(&r, args.str("report-dir"))
+}
+
+/// `repro ingest` — append validated shards to a store under its snapshot
+/// manifest. Opening the store bootstraps a manifest over any pre-existing
+/// `repro gen` output, so this is also the migration path for old stores.
+fn cmd_ingest(argv: Vec<String>) -> anyhow::Result<()> {
+    let spec = scale_flags(Spec::new(
+        "ingest",
+        "append validated shards under a versioned snapshot manifest",
+    ))
+    .req("store", "shard store directory (created or bootstrapped as needed)")
+    .opt("shards", "", "comma-separated shard files to append")
+    .opt("gen-rows", "0", "generate and append this many fresh SynthParl rows")
+    .opt("batch", "1", "generator batch index (fresh rows, same feature space)")
+    .opt("drift", "0.0", "generator topic-drift intensity in [0, 1]");
+    let args = parse(spec, &argv)?;
+    let store = Path::new(args.str("store"));
+    let mut ing = Ingestor::open(store)?;
+    for file in args.str("shards").split(',').filter(|s| !s.is_empty()) {
+        let m = ing.append_shard_file(Path::new(file))?;
+        println!("appended {file} -> version {}", m.version);
+    }
+    let gen_rows = args.usize("gen-rows")?;
+    if gen_rows > 0 {
+        let scale = scale_from(&args)?;
+        let mut cfg = scale.corpus_config();
+        cfg.n = gen_rows;
+        cfg.batch = args.u64("batch")?;
+        cfg.drift = args.f64("drift")?;
+        let d = SynthParl::generate(cfg);
+        let m = ing.append_chunk(&TwoViewChunk { a: d.a, b: d.b })?;
+        println!(
+            "appended {gen_rows} generated rows (batch {}, drift {}) -> version {}",
+            args.str("batch"),
+            args.str("drift"),
+            m.version
+        );
+    }
+    let m = ing.manifest();
+    println!(
+        "ingest: store {} now at version {} ({} shards, {} rows, hash {})",
+        store.display(),
+        m.version,
+        m.shards.len(),
+        m.rows(),
+        m.data_hash()
+    );
+    Ok(())
+}
+
+/// `repro daemon` — the lifecycle loop: poll the store manifest, score
+/// drift against the live model, warm-refit when triggered, hot-swap the
+/// serve registry, and record each episode in the audit ledger.
+fn cmd_daemon(argv: Vec<String>) -> anyhow::Result<()> {
+    let spec = Spec::new("daemon", "drift-monitoring warm-refit loop")
+        .req("store", "shard store directory (must carry a manifest)")
+        .req("model", "fitted model JSON path (refits rewrite it atomically)")
+        .opt("reload-addr", "", "serve instance to hot-swap via POST /admin/reload")
+        .opt(
+            "engine",
+            "inmemory",
+            "refit engine over the snapshot: inmemory, native[?opts], or \
+             cluster:addr,addr",
+        )
+        .opt("drift-threshold", "0.25", "relative correlation decay that triggers a refit")
+        .opt("min-new-rows", "1", "ignore drift until this many fresh rows arrive")
+        .opt("pass-budget", "24", "warm-refit data-pass budget")
+        .opt("tol", "0.001", "warm-refit convergence tolerance")
+        .opt("refit-every-secs", "0", "periodic refit interval (0 = drift-only)")
+        .opt("poll-ms", "500", "manifest poll interval")
+        .opt("audit", "", "audit ledger path (default <store>/audit.jsonl)")
+        .opt("retain", "512", "audit episodes kept before compaction (0 = unbounded)")
+        .opt("max-episodes", "0", "exit after this many refit episodes (0 = run forever)")
+        .switch("once", "run exactly one tick and exit (errors become the exit code)");
+    let args = parse(spec, &argv)?;
+    let store = Path::new(args.str("store")).to_path_buf();
+    let model_path = Path::new(args.str("model")).to_path_buf();
+    let audit = match args.str("audit") {
+        "" => store.join("audit.jsonl"),
+        p => Path::new(p).to_path_buf(),
+    };
+    let refit_every = match args.u64("refit-every-secs")? {
+        0 => None,
+        s => Some(Duration::from_secs(s)),
+    };
+    let config = DaemonConfig {
+        drift_threshold: args.f64("drift-threshold")?,
+        min_new_rows: args.usize("min-new-rows")?,
+        pass_budget: args.usize("pass-budget")?,
+        tol: args.f64("tol")?,
+        refit_every,
+        engine: args.str("engine").to_string(),
+        retention: Retention {
+            max_records: args.usize("retain")?,
+        },
+    };
+    let mut daemon = Daemon::new(&store, &model_path, &audit, config);
+    let reload = args.str("reload-addr");
+    if !reload.is_empty() {
+        let addr: SocketAddr = reload
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--reload-addr '{reload}': {e}"))?;
+        daemon = daemon.with_http_reload(addr);
+    }
+    let once = args.bool("once")?;
+    let max_episodes = args.u64("max-episodes")?;
+    let poll = Duration::from_millis(args.u64("poll-ms")?);
+    let mut refits = 0u64;
+    let mut was_idle = false;
+    loop {
+        let now = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        match daemon.tick(now) {
+            Ok(Tick::Idle { version }) => {
+                if !was_idle {
+                    println!("idle: snapshot v{version}, no fresh data");
+                }
+                was_idle = true;
+            }
+            Ok(Tick::Observed { version, score }) => {
+                was_idle = false;
+                println!("observed: snapshot v{version} drift={score:.4} (below trigger)");
+            }
+            Ok(Tick::NoOp { version }) => {
+                was_idle = false;
+                println!("noop: refit due but snapshot v{version} is unchanged, keeping model");
+            }
+            Ok(Tick::Refit(ep)) => {
+                was_idle = false;
+                refits += 1;
+                println!(
+                    "refit: trigger={} snapshot={} drift={:.4} passes={} corr {:.4} -> {:.4} \
+                     generation={}",
+                    ep.trigger,
+                    ep.snapshot_version,
+                    ep.drift_score,
+                    ep.passes,
+                    ep.sum_corr_before,
+                    ep.sum_corr_after,
+                    ep.generation
+                );
+            }
+            Err(e) if once => return Err(e.into()),
+            Err(e) => {
+                was_idle = false;
+                eprintln!("daemon: {e}");
+            }
+        }
+        if once || (max_episodes > 0 && refits >= max_episodes) {
+            return Ok(());
+        }
+        std::thread::sleep(poll);
+    }
+}
+
+/// `repro manifest <dir>` — print a store's snapshot manifest and verify
+/// every shard it pins (length, CRC, decode, shape). Exits nonzero if the
+/// manifest is unreadable or any shard fails validation, so scripts can
+/// gate on store integrity the way `shard-info` gates on one file.
+fn cmd_manifest(argv: Vec<String>) -> anyhow::Result<()> {
+    let mut argv = argv;
+    // Accept the directory positionally (`repro manifest work/shards`).
+    let positional = argv.first().map(|f| !f.starts_with("--")).unwrap_or(false);
+    if positional {
+        let dir = argv.remove(0);
+        argv.insert(0, format!("--dir={dir}"));
+    }
+    let spec = Spec::new("manifest", "print + validate a store's snapshot manifest")
+        .req("dir", "shard store directory (positional also accepted)");
+    let args = parse(spec, &argv)?;
+    let dir = Path::new(args.str("dir"));
+    let m = Manifest::load(dir)?;
+    println!("store      {}", dir.display());
+    println!("version    {}", m.version);
+    println!("shards     {}", m.shards.len());
+    println!("rows       {}", m.rows());
+    println!("dims       {} x {}", m.dims_a, m.dims_b);
+    println!("data hash  {}", m.data_hash());
+    let checks = m.verify(dir);
+    let mut corrupt = 0usize;
+    for c in &checks {
+        match &c.error {
+            None => println!("  {}  {} rows  OK", c.file, c.rows),
+            Some(e) => {
+                corrupt += 1;
+                println!("  {}  {} rows  CORRUPT: {e}", c.file, c.rows);
+            }
+        }
+    }
+    if corrupt > 0 {
+        anyhow::bail!("{corrupt} of {} shards fail validation", checks.len());
+    }
+    println!("status     OK");
+    Ok(())
 }
 
 /// `repro shard-info <file>` — print a shard file's header, nnz counts,

@@ -134,6 +134,14 @@ pub struct ServeMetrics {
     pub batches: AtomicU64,
     /// Successful `/admin/reload` swaps.
     pub reloads: AtomicU64,
+    /// Fresh-shard batches the lifecycle daemon has drift-scored.
+    pub drift_batches: AtomicU64,
+    /// Drift scores at or above the daemon's trigger threshold.
+    pub drift_alerts: AtomicU64,
+    /// Latest drift score ×1000 (gauge; stored, not accumulated).
+    pub drift_score_milli: AtomicU64,
+    /// Warm refits the lifecycle daemon has completed.
+    pub refits: AtomicU64,
     /// End-to-end request latency in microseconds (parse → response write).
     pub latency_us: Histogram,
     /// Rows per fused batch.
@@ -151,6 +159,10 @@ impl ServeMetrics {
             rows_transformed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             reloads: AtomicU64::new(0),
+            drift_batches: AtomicU64::new(0),
+            drift_alerts: AtomicU64::new(0),
+            drift_score_milli: AtomicU64::new(0),
+            refits: AtomicU64::new(0),
             // 2^24 µs ≈ 16.8 s covers any sane request; 2^16 rows per batch.
             latency_us: Histogram::new(24),
             batch_rows: Histogram::new(16),
@@ -172,6 +184,10 @@ impl ServeMetrics {
             .set("rows_transformed", g(&self.rows_transformed))
             .set("batches", g(&self.batches))
             .set("reloads", g(&self.reloads))
+            .set("drift_batches", g(&self.drift_batches))
+            .set("drift_alerts", g(&self.drift_alerts))
+            .set("drift_score_milli", g(&self.drift_score_milli))
+            .set("refits", g(&self.refits))
             .set("latency_us", self.latency_us.snapshot())
             .set("batch_rows", self.batch_rows.snapshot());
         o

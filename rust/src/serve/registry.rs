@@ -87,6 +87,9 @@ impl ModelRegistry {
             )
             .set("generation", jnum(snap.generation as f64))
             .set("path", jstr(&self.path.display().to_string()));
+        if let Some(p) = m.provenance() {
+            o.set("provenance", p.to_json());
+        }
         o
     }
 }

@@ -167,6 +167,47 @@ fn model_saved_by_repro_rcca_transforms_held_out_data() {
 }
 
 #[test]
+fn ingest_and_manifest_roundtrip_with_corruption_gate() {
+    let dir = std::env::temp_dir().join("rcca_cli_lifecycle");
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir_s = dir.to_str().unwrap();
+
+    // Ingest bootstraps an empty store and appends a generated batch
+    // under a new manifest version.
+    let text = run_ok(&["ingest", "--tiny", "--store", dir_s, "--gen-rows", "300"]);
+    assert!(text.contains("ingest: store"), "{text}");
+    assert!(text.contains("version 2"), "{text}");
+
+    // A second drifted batch advances the version again.
+    let text = run_ok(&[
+        "ingest", "--tiny", "--store", dir_s, "--gen-rows", "200", "--batch", "1", "--drift",
+        "0.5",
+    ]);
+    assert!(text.contains("version 3"), "{text}");
+
+    // `repro manifest <dir>` validates every pinned shard, positionally.
+    let text = run_ok(&["manifest", dir_s]);
+    assert!(text.contains("version    3"), "{text}");
+    assert!(text.contains("rows       500"), "{text}");
+    assert!(text.contains("status     OK"), "{text}");
+    assert!(!text.contains("CORRUPT"), "{text}");
+
+    // Corrupt one shard byte on disk: the same command exits nonzero and
+    // names the broken file, so scripts can gate on store integrity.
+    let store = rcca::data::shards::ShardStore::open(&dir).unwrap();
+    let shard = store.shard_path(0);
+    let mut bytes = std::fs::read(&shard).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x5a;
+    std::fs::write(&shard, &bytes).unwrap();
+    let out = repro().args(["manifest", dir_s]).output().unwrap();
+    assert!(!out.status.success(), "corrupt store must gate");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("CORRUPT"), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn tiny_horst_with_rcca_init_runs() {
     let dir = std::env::temp_dir().join("rcca_cli_horst");
     let _ = std::fs::remove_dir_all(&dir);

@@ -1,0 +1,196 @@
+//! Lifecycle integration: manifest-pinned snapshots under concurrent
+//! ingest, warm-refit quality versus a cold fit, and the daemon loop
+//! end-to-end — drift fires, the refit converges within budget, and the
+//! whole episode is bitwise-reproducible for a fixed snapshot + seed.
+
+use rcca::api::{Cca, Engine, FittedModel, Provenance};
+use rcca::cca::{Horst, HorstConfig, InMemoryPass};
+use rcca::data::shards::{concat_chunks, TwoViewChunk};
+use rcca::data::synthparl::{SynthParl, SynthParlConfig};
+use rcca::lifecycle::{Daemon, DaemonConfig, Ingestor, Manifest, Tick};
+use std::path::PathBuf;
+
+/// A batch of the planted-correlation corpus. `batch` draws fresh rows in
+/// the same feature space; `drift` decays view B's topic alignment.
+fn corpus(n: usize, batch: u64, drift: f64) -> TwoViewChunk {
+    let d = SynthParl::generate(SynthParlConfig {
+        n,
+        dims: 96,
+        topics: 8,
+        words_per_topic: 10,
+        background_words: 24,
+        mean_len: 8.0,
+        seed: 0x11fe,
+        batch,
+        drift,
+        ..Default::default()
+    });
+    TwoViewChunk { a: d.a, b: d.b }
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn manifest_append_is_atomic_and_pins_old_snapshots() {
+    let dir = fresh_dir("rcca_lc_pinning");
+    let mut ing = Ingestor::open(&dir).unwrap();
+    ing.append_chunk(&corpus(300, 0, 0.0)).unwrap();
+    let v2 = Manifest::load(&dir).unwrap();
+    assert_eq!(v2.version, 2);
+    let pinned = v2.store(&dir);
+    assert_eq!(pinned.rows, 300);
+
+    // Appending publishes a NEW manifest version; the v2 snapshot keeps
+    // resolving to exactly the shards it pinned.
+    ing.append_chunk(&corpus(200, 1, 0.5)).unwrap();
+    let v3 = Manifest::load(&dir).unwrap();
+    assert_eq!(v3.version, 3);
+    assert_eq!(v3.rows(), 500);
+    assert_ne!(v2.data_hash(), v3.data_hash());
+    assert_eq!(pinned.load_all().unwrap().rows(), 300);
+    assert_eq!(v3.store(&dir).load_all().unwrap().rows(), 500);
+
+    // Every shard either side pins verifies clean on disk.
+    assert!(v3.verify(&dir).iter().all(|c| c.error.is_none()));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_refit_reaches_cold_objective_in_strictly_fewer_passes() {
+    let base = corpus(600, 0, 0.0);
+    let fresh = corpus(300, 1, 0.3);
+    let combined = concat_chunks(&[base.clone(), fresh]);
+    let horst = Horst::new(HorstConfig {
+        k: 5,
+        lambda_a: 0.05,
+        lambda_b: 0.05,
+        pass_budget: 60,
+        augment: true,
+        seed: 7,
+        tol: 0.0,
+    });
+
+    // Cold fit on the drifted snapshot: the reference trajectory.
+    let (_, cold_trace) = horst.fit(&mut InMemoryPass::new(combined.clone())).unwrap();
+    let cold_final = cold_trace.last().unwrap().objective;
+    let target = cold_final * 0.99;
+    let cold_passes = cold_trace
+        .iter()
+        .find(|t| t.objective >= target)
+        .unwrap()
+        .passes;
+
+    // Warm fit: converge on the old snapshot, then `fit_from` the old
+    // bases on the new one — the daemon's refit path.
+    let (base_model, _) = horst.fit(&mut InMemoryPass::new(base)).unwrap();
+    let (_, warm_trace) = horst
+        .fit_from(
+            &mut InMemoryPass::new(combined),
+            base_model.xa.clone(),
+            base_model.xb.clone(),
+        )
+        .unwrap();
+    let warm_hit = warm_trace
+        .iter()
+        .find(|t| t.objective >= target)
+        .unwrap_or_else(|| panic!("warm refit never reached {target:.4}: {warm_trace:?}"));
+    assert!(
+        warm_hit.passes < cold_passes,
+        "warm start must save passes: warm {} vs cold {}",
+        warm_hit.passes,
+        cold_passes
+    );
+}
+
+/// Ingest a base snapshot, cold-fit + save a provenance-stamped model,
+/// then ingest a heavily drifted batch. Returns the store dir + model path
+/// the daemon should pick up.
+fn drifted_store(name: &str) -> (PathBuf, PathBuf) {
+    let dir = fresh_dir(name);
+    let mut ing = Ingestor::open(&dir).unwrap();
+    ing.append_chunk(&corpus(600, 0, 0.0)).unwrap();
+
+    let m = Manifest::load(&dir).unwrap();
+    let chunk = m.store(&dir).load_all().unwrap();
+    let mut engine = Engine::in_memory(chunk);
+    let model = Cca::builder()
+        .k(4)
+        .oversample(24)
+        .power_iters(1)
+        .lambda(0.05, 0.05)
+        .seed(5)
+        .fit(&mut engine)
+        .unwrap()
+        .with_provenance(Provenance {
+            snapshot_version: m.version,
+            shards: m.shards.len(),
+            rows: m.rows(),
+            data_hash: m.data_hash(),
+            trigger: "cold".to_string(),
+        });
+    let model_path = dir.join("model.json");
+    model.save(&model_path).unwrap();
+
+    ing.append_chunk(&corpus(400, 1, 0.8)).unwrap();
+    (dir, model_path)
+}
+
+#[test]
+fn daemon_refit_is_bitwise_reproducible_and_ledgered() {
+    let run = |name: &str| {
+        let (dir, model_path) = drifted_store(name);
+        let audit = dir.join("audit.jsonl");
+        let mut daemon = Daemon::new(
+            &dir,
+            &model_path,
+            &audit,
+            DaemonConfig {
+                drift_threshold: 0.05,
+                pass_budget: 24,
+                ..Default::default()
+            },
+        );
+        let ep = match daemon.tick(1_000).unwrap() {
+            Tick::Refit(ep) => ep,
+            other => panic!("expected a drift-triggered refit, got {other:?}"),
+        };
+        // The episode is in the ledger, and the model on disk is the refit.
+        let ledgered = daemon.ledger().read().unwrap();
+        assert_eq!(ledgered.len(), 1);
+        assert_eq!(ledgered[0], ep);
+        let reloaded = FittedModel::load(&model_path).unwrap();
+        let prov = reloaded.provenance().expect("refit must stamp provenance");
+        assert_eq!(prov.snapshot_version, 3);
+        assert_eq!(prov.trigger, "drift");
+        // A second tick with nothing new is idle — the baseline advanced.
+        assert!(matches!(daemon.tick(2_000).unwrap(), Tick::Idle { version: 3 }));
+        let bytes = std::fs::read(&model_path).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        (bytes, ep)
+    };
+
+    let (bytes_1, ep_1) = run("rcca_lc_daemon_a");
+    let (bytes_2, ep_2) = run("rcca_lc_daemon_b");
+
+    assert_eq!(ep_1.trigger, "drift");
+    assert_eq!(ep_1.snapshot_version, 3);
+    assert!(ep_1.drift_score >= 0.05, "drift {:.4}", ep_1.drift_score);
+    assert!(ep_1.passes >= 2 && ep_1.passes <= 24, "passes {}", ep_1.passes);
+    assert!(
+        ep_1.sum_corr_after >= ep_1.sum_corr_before - 1e-9,
+        "refit must not regress: {:.4} -> {:.4}",
+        ep_1.sum_corr_before,
+        ep_1.sum_corr_after
+    );
+    assert!(!ep_1.swapped, "no reload hook configured");
+
+    // Fixed snapshot + seed ⇒ the refit is bitwise identical across runs.
+    assert_eq!(bytes_1, bytes_2, "refit model files must match byte-for-byte");
+    assert_eq!(ep_1.drift_score.to_bits(), ep_2.drift_score.to_bits());
+    assert_eq!(ep_1.passes, ep_2.passes);
+    assert_eq!(ep_1.sum_corr_after.to_bits(), ep_2.sum_corr_after.to_bits());
+}

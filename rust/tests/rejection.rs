@@ -297,6 +297,100 @@ fn zero_row_shard_roundtrips_cleanly() {
     assert_eq!(info.error, None);
 }
 
+#[test]
+fn truncated_manifest_is_rejected_while_pinned_snapshots_keep_serving() {
+    use rcca::lifecycle::{Ingestor, LifecycleError, Manifest, MANIFEST_FILE};
+    let dir = std::env::temp_dir().join("rcca_rejection_manifest");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut ing = Ingestor::open(&dir).unwrap();
+    ing.append_chunk(&tiny_chunk()).unwrap();
+    let pinned = Manifest::load(&dir).unwrap();
+
+    // Tear the published manifest mid-document: loads fail closed with a
+    // typed error, but a fit already running against the pinned snapshot
+    // keeps reading its shards untouched.
+    let path = dir.join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    assert!(matches!(
+        Manifest::load(&dir).unwrap_err(),
+        LifecycleError::Manifest(_)
+    ));
+    assert_eq!(pinned.store(&dir).load_all().unwrap().rows(), 200);
+
+    // Restoring the document restores loads — nothing was mutated in place.
+    std::fs::write(&path, &text).unwrap();
+    assert_eq!(Manifest::load(&dir).unwrap(), pinned);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn daemon_rejects_a_manifest_that_regresses_below_its_baseline() {
+    use rcca::lifecycle::{Daemon, DaemonConfig, Ingestor, LifecycleError, Tick, MANIFEST_FILE};
+    let dir = std::env::temp_dir().join("rcca_rejection_stale");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut ing = Ingestor::open(&dir).unwrap();
+    ing.append_chunk(&tiny_chunk()).unwrap();
+    let old_manifest = std::fs::read(dir.join(MANIFEST_FILE)).unwrap();
+
+    // Fit + save a model against the current snapshot, then advance it.
+    let chunk = rcca::lifecycle::Manifest::load(&dir)
+        .unwrap()
+        .store(&dir)
+        .load_all()
+        .unwrap();
+    let model = rcca::api::Cca::builder()
+        .k(2)
+        .oversample(8)
+        .lambda(0.1, 0.1)
+        .fit(&mut rcca::api::Engine::in_memory(chunk))
+        .unwrap();
+    let model_path = dir.join("model.json");
+    model.save(&model_path).unwrap();
+    ing.append_chunk(&tiny_chunk()).unwrap();
+
+    let audit = dir.join("audit.jsonl");
+    let mut daemon = Daemon::new(&dir, &model_path, &audit, DaemonConfig::default());
+    // First tick baselines on the live manifest version.
+    assert!(!matches!(daemon.tick(1_000).unwrap(), Tick::Refit(_)));
+
+    // A rolled-back manifest (restored from the older version) must fail
+    // closed as stale — the daemon never refits against regressed data.
+    std::fs::write(dir.join(MANIFEST_FILE), &old_manifest).unwrap();
+    match daemon.tick(2_000).unwrap_err() {
+        LifecycleError::Manifest(m) => assert!(m.contains("stale"), "{m}"),
+        other => panic!("expected a stale-manifest error, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_shard_bytes_are_rejected_at_ingest_without_a_version_bump() {
+    use rcca::lifecycle::{Ingestor, LifecycleError, MANIFEST_FILE};
+    let dir = std::env::temp_dir().join("rcca_rejection_ingest");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut ing = Ingestor::open(&dir).unwrap();
+    ing.append_chunk(&tiny_chunk()).unwrap();
+    let manifest_before = std::fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap();
+    let files_before = std::fs::read_dir(&dir).unwrap().count();
+
+    let mut bytes = encode_shard(&tiny_chunk());
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x5a;
+    assert!(matches!(
+        ing.append_shard_bytes(&bytes).unwrap_err(),
+        LifecycleError::Ingest(_)
+    ));
+
+    // The store is exactly as it was: same manifest text, no new files.
+    assert_eq!(
+        std::fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap(),
+        manifest_before
+    );
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), files_before);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn repro() -> Command {
     Command::new(env!("CARGO_BIN_EXE_repro"))
 }
