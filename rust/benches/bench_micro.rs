@@ -317,13 +317,18 @@ fn p5_sparse_kernels(traj: &mut Trajectory) {
 ///   * `stream_pass_blocking`   — pooled buffers + in-place decode +
 ///     borrowed chunk views, but reads on the compute thread (depth 0);
 ///   * `stream_pass_prefetched` — same, with the I/O thread reading and
-///     CRC-verifying the next shards while kernels run.
+///     CRC-verifying the next shards while kernels run;
+///   * `stream_pass_prefetched_traced` — the prefetch pipeline again with
+///     the telemetry flight recorder installed, bounding per-span recorder
+///     overhead on the hottest path (<2% target, EXPERIMENTS.md §Telemetry).
 ///
-/// All three produce bitwise-identical passes (coordinator tests pin it);
+/// All loaders produce bitwise-identical passes (coordinator tests pin it);
 /// only wall-time differs. `repro bench-check --gates` arms
 /// `stream_pass_prefetched/stream_pass_blocking` as a within-run ratio so
-/// CI catches the pipeline ever becoming a pessimization. `workers` is
-/// pinned to 1 so the measured overlap comes from the I/O thread alone.
+/// CI catches the pipeline ever becoming a pessimization, and the traced
+/// section re-runs the same two gates so tracing can never silently eat the
+/// overlap win. `workers` is pinned to 1 so the measured overlap comes from
+/// the I/O thread alone.
 fn p6_streaming(traj: &mut Trajectory) {
     println!("## P6: out-of-core streaming — uncached end-to-end pass wall-time");
     use rcca::cca::pass::PassEngine;
@@ -407,6 +412,24 @@ fn p6_streaming(traj: &mut Trajectory) {
         s_block.p50 / s_pre.p50,
         s_legacy.p50 / s_pre.p50,
         store.shards
+    );
+
+    // The identical prefetched pass with the flight recorder live: every
+    // pass/shard_task/load/engine/reduce span is recorded for real. The
+    // bench-check gates hold this section to the same ratios as the
+    // untraced pipeline, so recorder overhead is capped by CI.
+    rcca::telemetry::install_default();
+    let s_traced = bench_fn("stream pass: prefetched + flight recorder on", || {
+        let _ = prefetched.power_pass(&qa, &qb);
+    });
+    rcca::telemetry::disable();
+    let trace = rcca::telemetry::drain();
+    traj.record("stream_pass_prefetched_traced", &s_traced);
+    println!(
+        "    -> recorder overhead: {:+.1}% vs untraced ({} spans buffered, {} dropped)",
+        (s_traced.p50 / s_pre.p50 - 1.0) * 100.0,
+        trace.spans.len(),
+        trace.dropped
     );
     let _ = std::fs::remove_dir_all(&dir);
     println!();

@@ -5,6 +5,7 @@ use super::{ApiError, Lambda};
 use crate::cca::horst::{Horst, HorstConfig};
 use crate::cca::pass::PassEngine;
 use crate::cca::rcca::{RandomizedCca, RccaConfig};
+use crate::telemetry;
 
 /// Solver selection. `Horst { warm_start: true }` chains the randomized
 /// solver into the iterative baseline (the paper's "Horst+rcca"): the
@@ -238,6 +239,19 @@ impl Cca {
             });
         }
 
+        let mut fit_span = telemetry::span("fit");
+        fit_span
+            .attr(
+                "solver",
+                match self.solver {
+                    Solver::Randomized => "randomized",
+                    Solver::Horst { warm_start: true } => "horst+rcca",
+                    Solver::Horst { warm_start: false } => "horst",
+                },
+            )
+            .attr("k", self.k)
+            .attr("p", self.p)
+            .attr("q", self.q);
         let start_passes = engine.passes();
         let (lambda_a, lambda_b) = self.lambda.resolve(&mut *engine);
         if !(lambda_a > 0.0 && lambda_b > 0.0 && lambda_a.is_finite() && lambda_b.is_finite()) {

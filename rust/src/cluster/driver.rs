@@ -24,6 +24,7 @@ use crate::cca::pass::PassEngine;
 use crate::coordinator::{Accumulator, Metrics, PassKind, PassProgress};
 use crate::linalg::Mat;
 use crate::runtime::mat_to_f32;
+use crate::telemetry;
 use crate::util::json::Json;
 use crate::util::timer::Timer;
 use std::collections::BTreeMap;
@@ -370,6 +371,13 @@ impl ClusterPass {
         self.pass_id += 1;
         self.metrics.add(&self.metrics.passes, 1);
         self.ledger.rounds.fetch_add(1, Ordering::Relaxed);
+        let mut round_span = telemetry::span("round");
+        round_span
+            .attr("pass_id", self.pass_id)
+            .attr("kind", kind.as_str())
+            .attr("shards", self.shards);
+        let round_span_id = round_span.id();
+        let mut reduce_ns = 0u64;
         let r = qa.cols;
         anyhow::ensure!(qb.cols == r, "Qa/Qb column mismatch");
         let shapes = kind.shapes(self.dims_a, self.dims_b, r);
@@ -477,10 +485,9 @@ impl ClusterPass {
                                     None => break,
                                 }
                             }
-                            self.metrics.add(
-                                &self.metrics.reduce_nanos,
-                                t.elapsed().as_nanos() as u64,
-                            );
+                            let spent = t.elapsed().as_nanos() as u64;
+                            reduce_ns += spent;
+                            self.metrics.add(&self.metrics.reduce_nanos, spent);
                         }
                         Msg::Abort {
                             pass_id,
@@ -543,6 +550,7 @@ impl ClusterPass {
             "pass completed with {next_to_reduce}/{} shards reduced",
             self.shards
         );
+        telemetry::record_manual("reduce", round_span_id, reduce_ns, vec![]);
         Ok(acc.finish())
     }
 }

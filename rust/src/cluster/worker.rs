@@ -21,6 +21,7 @@ use crate::coordinator::{Metrics, PassKind, RunnerConfig, ShardTaskRunner};
 use crate::data::shards::ShardStore;
 use crate::data::stream::StreamConfig;
 use crate::runtime::{ChunkEngine, NativeEngine};
+use crate::telemetry;
 use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
@@ -250,6 +251,14 @@ impl Worker {
         shards: &[u32],
     ) -> Result<(), String> {
         self.metrics.add(&self.metrics.passes, 1);
+        // The worker-side half of the round: same name and `pass_id` attr
+        // as the driver's span, so the two traces correlate offline.
+        let mut round_span = telemetry::span("round");
+        round_span
+            .attr("pass_id", pass_id)
+            .attr("kind", kind.as_str())
+            .attr("shards", shards.len());
+        let round_span_id = round_span.id();
         // Validate the broadcast width once; a mismatch is a pass-level
         // failure (every shard would fail identically).
         let (want_a, want_b) = match kind {
@@ -288,7 +297,10 @@ impl Worker {
                     None => break,
                 }
             }
-            match session.runner.run(shard as usize, kind, qa32, qb32, r) {
+            match session
+                .runner
+                .run_traced(shard as usize, kind, qa32, qb32, r, round_span_id)
+            {
                 Ok(mats) => {
                     self.metrics.add(&self.metrics.tasks_completed, 1);
                     conn.send(&Msg::Partial {

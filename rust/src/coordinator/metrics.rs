@@ -1,5 +1,8 @@
-//! Coordinator metrics: cheap atomic counters + a JSON snapshot.
+//! Coordinator metrics: cheap atomic counters + a JSON snapshot, plus a
+//! [`telemetry::MetricSource`] impl so the same counters flow through the
+//! unified registry's Prometheus export.
 
+use crate::telemetry::{self, Family, MetricSource};
 use crate::util::json::{jnum, Json};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -52,6 +55,64 @@ impl Metrics {
                 jnum(self.reduce_nanos.load(Ordering::Relaxed) as f64 / 1e9),
             );
         o
+    }
+}
+
+impl MetricSource for Metrics {
+    fn snapshot_json(&self) -> Json {
+        self.snapshot()
+    }
+
+    fn prom_families(&self) -> Vec<Family> {
+        let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let secs = |a: &AtomicU64| c(a) as f64 / 1e9;
+        vec![
+            telemetry::counter(
+                "rcca_coordinator_passes_total",
+                "Data passes completed by this coordinator",
+                c(&self.passes),
+            ),
+            telemetry::counter(
+                "rcca_coordinator_tasks_completed_total",
+                "Shard tasks completed",
+                c(&self.tasks_completed),
+            ),
+            telemetry::counter(
+                "rcca_coordinator_tasks_failed_total",
+                "Shard tasks failed (before retry)",
+                c(&self.tasks_failed),
+            ),
+            telemetry::counter(
+                "rcca_coordinator_retries_total",
+                "Shard task retries",
+                c(&self.retries),
+            ),
+            telemetry::counter(
+                "rcca_coordinator_shard_bytes_read_total",
+                "Bytes of shard data read",
+                c(&self.shard_bytes_read),
+            ),
+            telemetry::counter(
+                "rcca_coordinator_chunks_processed_total",
+                "Chunks run through an engine",
+                c(&self.chunks_processed),
+            ),
+            telemetry::gauge(
+                "rcca_coordinator_engine_seconds",
+                "Seconds spent inside chunk engines",
+                secs(&self.engine_nanos),
+            ),
+            telemetry::gauge(
+                "rcca_coordinator_load_seconds",
+                "Seconds spent loading shards",
+                secs(&self.load_nanos),
+            ),
+            telemetry::gauge(
+                "rcca_coordinator_reduce_seconds",
+                "Seconds spent reducing partials on the leader",
+                secs(&self.reduce_nanos),
+            ),
+        ]
     }
 }
 

@@ -8,6 +8,7 @@ use crate::data::shards::ShardStore;
 use crate::data::stream::StreamConfig;
 use crate::linalg::Mat;
 use crate::runtime::{mat_to_f32, ChunkEngine};
+use crate::telemetry;
 use crate::util::pool::Pool;
 use crate::util::timer::Timer;
 use std::sync::{mpsc, Arc};
@@ -122,11 +123,12 @@ impl ShardedPass {
         qa32: Arc<Vec<f32>>,
         qb32: Arc<Vec<f32>>,
         r: usize,
+        parent_span: u64,
         tx: mpsc::Sender<TaskResult>,
     ) {
         let runner = Arc::clone(&self.runner);
         self.pool.submit(move || {
-            let result = runner.run(shard, kind, &qa32, &qb32, r);
+            let result = runner.run_traced(shard, kind, &qa32, &qb32, r, parent_span);
             // The leader may have aborted and dropped the receiver; a send
             // failure is then expected and benign.
             let _ = tx.send((shard, result));
@@ -140,6 +142,12 @@ impl ShardedPass {
     fn run_pass(&mut self, kind: PassKind, qa: &Mat, qb: &Mat) -> anyhow::Result<Vec<Mat>> {
         self.passes += 1;
         self.metrics.add(&self.metrics.passes, 1);
+        let mut pass_span = telemetry::span("pass");
+        pass_span
+            .attr("pass", self.passes)
+            .attr("kind", kind.as_str())
+            .attr("shards", self.store.shards);
+        let pass_span_id = pass_span.id();
         let r = qa.cols;
         anyhow::ensure!(qb.cols == r, "Qa/Qb column mismatch");
         let shapes = kind.shapes(self.store.dims_a, self.store.dims_b, r);
@@ -156,7 +164,15 @@ impl ShardedPass {
         // is tracked by `PassProgress` rather than channel disconnection.
         let (tx, rx) = mpsc::channel::<TaskResult>();
         for &shard in &order {
-            self.submit_shard(shard, kind, Arc::clone(&qa32), Arc::clone(&qb32), r, tx.clone());
+            self.submit_shard(
+                shard,
+                kind,
+                Arc::clone(&qa32),
+                Arc::clone(&qb32),
+                r,
+                pass_span_id,
+                tx.clone(),
+            );
         }
 
         let mut acc = Accumulator::new(&shapes);
@@ -166,6 +182,7 @@ impl ShardedPass {
         // pattern no longer depends on worker scheduling.
         let mut partials: Vec<Option<Vec<Mat>>> = (0..self.store.shards).map(|_| None).collect();
         let mut next_to_reduce = 0usize;
+        let mut reduce_ns = 0u64;
         while !progress.all_done() {
             let (shard, result) = rx.recv().expect("leader sender alive");
             match result {
@@ -184,8 +201,9 @@ impl ShardedPass {
                             None => break,
                         }
                     }
-                    self.metrics
-                        .add(&self.metrics.reduce_nanos, t.elapsed().as_nanos() as u64);
+                    let spent = t.elapsed().as_nanos() as u64;
+                    reduce_ns += spent;
+                    self.metrics.add(&self.metrics.reduce_nanos, spent);
                     self.metrics.add(&self.metrics.tasks_completed, 1);
                 }
                 Err(msg) => {
@@ -202,6 +220,7 @@ impl ShardedPass {
                         Arc::clone(&qa32),
                         Arc::clone(&qb32),
                         r,
+                        pass_span_id,
                         tx.clone(),
                     );
                 }
@@ -212,6 +231,10 @@ impl ShardedPass {
             "pass completed with {next_to_reduce}/{} shards reduced",
             self.store.shards
         );
+        // The leader's fold interleaves with the receive loop, so the
+        // accumulated reduce time is recorded as one back-dated child span
+        // rather than a guard scope.
+        telemetry::record_manual("reduce", pass_span_id, reduce_ns, vec![]);
         Ok(acc.finish())
     }
 }

@@ -32,6 +32,7 @@ use crate::data::shards::{ShardScratch, ShardStore, TwoViewChunk, TwoViewChunkRe
 use crate::data::stream::{ShardStreamer, StreamConfig, StreamCounters};
 use crate::linalg::Mat;
 use crate::runtime::{ChunkEngine, ChunkMirror, Workspace};
+use crate::telemetry;
 use crate::util::timer::Timer;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -312,6 +313,23 @@ impl ShardTaskRunner {
         qb32: &[f32],
         r: usize,
     ) -> Result<Vec<Mat>, String> {
+        self.run_traced(shard, kind, qa32, qb32, r, 0)
+    }
+
+    /// [`ShardTaskRunner::run`] with the leader's pass/round span id, so
+    /// the task's span parents correctly across threads (and, on a cluster
+    /// worker, across the process boundary via the worker's round span).
+    pub fn run_traced(
+        &self,
+        shard: usize,
+        kind: PassKind,
+        qa32: &[f32],
+        qb32: &[f32],
+        r: usize,
+        parent_span: u64,
+    ) -> Result<Vec<Mat>, String> {
+        let mut task_span = telemetry::span_child_of("shard_task", parent_span);
+        task_span.attr("shard", shard).attr("kind", kind.as_str());
         let outcome = catch_unwind(AssertUnwindSafe(|| self.run_inner(shard, kind, qa32, qb32, r)));
         match outcome {
             Ok(res) => res,
@@ -347,7 +365,10 @@ impl ShardTaskRunner {
                     // serial trace path bit-for-bit (chunked subtotals
                     // would regroup the f64 sums).
                     let load_t = Timer::start();
-                    let data = self.store.load(shard)?;
+                    let data = {
+                        let _load_span = telemetry::span("load");
+                        self.store.load(shard)?
+                    };
                     self.metrics
                         .add(&self.metrics.load_nanos, load_t.elapsed().as_nanos() as u64);
                     self.metrics.add(
@@ -362,6 +383,7 @@ impl ShardTaskRunner {
                 }
                 let load_t = Timer::start();
                 let prepared: Arc<PreparedShard> = {
+                    let _load_span = telemetry::span("load");
                     let slot = &cache[shard];
                     if let Some(hit) = slot.get() {
                         Arc::clone(hit)
@@ -383,21 +405,25 @@ impl ShardTaskRunner {
                 let mut slot = self.take_slot();
                 begin_pass(&mut slot.ws, kind, da, db, r);
                 let mut result = Ok(());
-                for pc in &prepared.chunks {
-                    let mirror = if self.mirror_scatter { pc.mirror() } else { None };
-                    result = process_chunk(
-                        &*self.engine,
-                        kind,
-                        pc.data.view(),
-                        mirror,
-                        qa32,
-                        qb32,
-                        r,
-                        &mut slot.ws,
-                        &self.metrics,
-                    );
-                    if result.is_err() {
-                        break;
+                {
+                    let mut engine_span = telemetry::span("engine");
+                    engine_span.attr("chunks", prepared.chunks.len());
+                    for pc in &prepared.chunks {
+                        let mirror = if self.mirror_scatter { pc.mirror() } else { None };
+                        result = process_chunk(
+                            &*self.engine,
+                            kind,
+                            pc.data.view(),
+                            mirror,
+                            qa32,
+                            qb32,
+                            r,
+                            &mut slot.ws,
+                            &self.metrics,
+                        );
+                        if result.is_err() {
+                            break;
+                        }
                     }
                 }
                 let out = result.map(|()| slot.ws.take());
@@ -410,7 +436,10 @@ impl ShardTaskRunner {
             None => {
                 let streamer = self.streamer.as_ref().expect("uncached runner streams");
                 let load_t = Timer::start();
-                let bytes = streamer.fetch(shard)?;
+                let bytes = {
+                    let _load_span = telemetry::span("load");
+                    streamer.fetch(shard)?
+                };
                 self.metrics
                     .add(&self.metrics.load_nanos, load_t.elapsed().as_nanos() as u64);
                 let mut slot = self.take_slot();
@@ -443,8 +472,11 @@ impl ShardTaskRunner {
         // Explicit field split: the chunk views borrow `scratch` while the
         // engine accumulates into `ws`.
         let TaskSlot { scratch, ws } = slot;
-        crate::data::shards::decode_shard_body_into(bytes, scratch)
-            .map_err(|e| format!("shard {shard}: {e}"))?;
+        {
+            let _decode_span = telemetry::span("decode");
+            crate::data::shards::decode_shard_body_into(bytes, scratch)
+                .map_err(|e| format!("shard {shard}: {e}"))?;
+        }
         self.metrics
             .add(&self.metrics.shard_bytes_read, scratch.nnz_bytes());
         let view = scratch.view();
@@ -462,21 +494,25 @@ impl ShardTaskRunner {
             return Ok(Vec::new());
         }
         begin_pass(ws, kind, view.a.cols, view.b.cols, r);
-        let mut lo = 0;
-        while lo < rows {
-            let hi = (lo + self.chunk_rows).min(rows);
-            process_chunk(
-                &*self.engine,
-                kind,
-                view.slice_rows(lo, hi),
-                None,
-                qa32,
-                qb32,
-                r,
-                ws,
-                &self.metrics,
-            )?;
-            lo = hi;
+        {
+            let mut engine_span = telemetry::span("engine");
+            engine_span.attr("rows", rows);
+            let mut lo = 0;
+            while lo < rows {
+                let hi = (lo + self.chunk_rows).min(rows);
+                process_chunk(
+                    &*self.engine,
+                    kind,
+                    view.slice_rows(lo, hi),
+                    None,
+                    qa32,
+                    qb32,
+                    r,
+                    ws,
+                    &self.metrics,
+                )?;
+                lo = hi;
+            }
         }
         Ok(ws.take())
     }

@@ -29,6 +29,11 @@
 //!   round, with heartbeat-based failure detection and mid-pass shard
 //!   redistribution; workers run the same shard-task code as the
 //!   in-process coordinator, so results are bit-reproducible.
+//! * [`telemetry`] — the observability substrate under all of the above:
+//!   structured tracing spans recorded into a per-thread flight recorder
+//!   (JSONL export, `repro trace` viewer) and a unified `MetricsRegistry`
+//!   that renders every subsystem's counters as both the legacy JSON
+//!   shapes and Prometheus text format.
 //! * [`lifecycle`] — the closed loop over all of the above: versioned
 //!   snapshot manifests over shard stores, validate-then-append ingest
 //!   (`repro ingest`), drift monitoring against the live model, and a
@@ -49,4 +54,5 @@ pub mod runtime;
 pub mod linalg;
 pub mod serve;
 pub mod sparse;
+pub mod telemetry;
 pub mod util;

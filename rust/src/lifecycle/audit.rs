@@ -13,7 +13,7 @@
 //! compactions and an auditor can see that (and how much) history is gone.
 
 use super::LifecycleError;
-use crate::util::json::{jnum, jstr, parse, Json};
+use crate::util::json::{jarr, jnum, jstr, parse, Json};
 use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -36,6 +36,9 @@ pub struct Episode {
     pub snapshot_version: u64,
     /// Drift score that (if trigger is `"drift"`) fired the refit.
     pub drift_score: f64,
+    /// Per-direction drift deltas behind `drift_score` (empty for
+    /// periodic refits with nothing scored, and for pre-telemetry ledgers).
+    pub per_direction: Vec<f64>,
     /// Engine passes the warm refit consumed.
     pub passes: usize,
     /// Old model's correlation sum evaluated on the new snapshot.
@@ -58,6 +61,10 @@ impl Episode {
             .set("trigger", jstr(&self.trigger))
             .set("snapshot_version", jnum(self.snapshot_version as f64))
             .set("drift_score", jnum(self.drift_score))
+            .set(
+                "per_direction",
+                jarr(self.per_direction.iter().map(|&d| jnum(d)).collect()),
+            )
             .set("passes", jnum(self.passes as f64))
             .set("sum_corr_before", jnum(self.sum_corr_before))
             .set("sum_corr_after", jnum(self.sum_corr_after))
@@ -90,11 +97,26 @@ impl Episode {
         let swapped = field("swapped")?
             .as_bool()
             .ok_or_else(|| bad("episode `swapped` not a bool".to_string()))?;
+        // Absent in ledgers written before per-direction drift export.
+        let per_direction = match doc.get("per_direction") {
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| bad("episode `per_direction` not an array".to_string()))?
+                .iter()
+                .map(|d| {
+                    d.as_f64().ok_or_else(|| {
+                        bad("episode `per_direction` entry not a number".to_string())
+                    })
+                })
+                .collect::<Result<Vec<f64>, _>>()?,
+            None => Vec::new(),
+        };
         Ok(Episode {
             episode: num("episode")? as u64,
             trigger,
             snapshot_version: num("snapshot_version")? as u64,
             drift_score: float("drift_score")?,
+            per_direction,
             passes: num("passes")?,
             sum_corr_before: float("sum_corr_before")?,
             sum_corr_after: float("sum_corr_after")?,
@@ -230,6 +252,7 @@ mod tests {
             trigger: "drift".to_string(),
             snapshot_version: id + 1,
             drift_score: 0.3,
+            per_direction: vec![0.25, 0.05],
             passes: 8,
             sum_corr_before: 1.2,
             sum_corr_after: 2.4,

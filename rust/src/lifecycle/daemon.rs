@@ -31,6 +31,7 @@ use crate::cca::horst::{Horst, HorstConfig};
 use crate::cca::pass::PassEngine;
 use crate::data::shards::concat_chunks;
 use crate::serve::{client, ModelRegistry, ServeMetrics};
+use crate::telemetry;
 use std::net::SocketAddr;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::Ordering;
@@ -167,7 +168,9 @@ impl Daemon {
     /// One synchronous lifecycle step; see the module docs for the phases.
     /// `now_unix_ms` is injected so tests and the CLI own the clock.
     pub fn tick(&mut self, now_unix_ms: u64) -> Result<Tick, LifecycleError> {
+        let mut tick_span = telemetry::span("tick");
         let manifest = Manifest::load(&self.store_dir)?;
+        tick_span.attr("version", manifest.version);
         if let Some((base_version, _)) = self.baseline {
             if manifest.version < base_version {
                 return Err(LifecycleError::Manifest(format!(
@@ -198,6 +201,7 @@ impl Daemon {
         // Score the shards appended since the baseline.
         let fresh_entries = &manifest.shards[base_shards.min(manifest.shards.len())..];
         let mut drift_score = 0.0;
+        let mut drift_per_direction: Vec<f64> = Vec::new();
         if !fresh_entries.is_empty() {
             let store = manifest.store(&self.store_dir);
             let mut chunks = Vec::with_capacity(fresh_entries.len());
@@ -207,10 +211,12 @@ impl Daemon {
             let batch = concat_chunks(&chunks);
             let score = self.monitor.observe(&model, &batch)?;
             drift_score = score.score;
+            drift_per_direction = score.per_direction.clone();
             if let Some(m) = &self.metrics {
                 m.add(&m.drift_batches, 1);
                 m.drift_score_milli
                     .store((drift_score * 1000.0).round() as u64, Ordering::Relaxed);
+                m.set_drift_per_direction(&drift_per_direction);
                 if drift_score >= self.config.drift_threshold {
                     m.add(&m.drift_alerts, 1);
                 }
@@ -242,7 +248,17 @@ impl Daemon {
             return Ok(Tick::NoOp { version: manifest.version });
         }
 
-        // Warm refit over the pinned snapshot.
+        // Warm refit over the pinned snapshot. The episode id is claimed
+        // up front so the refit span links to the ledger entry it will
+        // produce (the id is re-derived from the file, so a failed refit
+        // leaves no gap).
+        let trigger = if drift_due { "drift" } else { "periodic" };
+        let episode_id = self.ledger.next_episode()?;
+        let mut refit_span = telemetry::span("refit");
+        refit_span
+            .attr("episode", episode_id)
+            .attr("trigger", trigger)
+            .attr("version", manifest.version);
         let mut engine = self.build_engine(&manifest)?;
         let before = model.objective(&mut engine).sum_corr;
         let start_passes = engine.passes();
@@ -259,7 +275,6 @@ impl Daemon {
             .fit_from(&mut engine, model.xa().clone(), model.xb().clone())
             .map_err(|e| LifecycleError::Refit(format!("{e:#}")))?;
         let fit_passes = engine.passes() - start_passes;
-        let trigger = if drift_due { "drift" } else { "periodic" };
         let sum_corr_after = cca_model.sum_correlations();
         let refit = FittedModel::new(cca_model, model.lambda_a, model.lambda_b, "horst+warm")
             .with_trace(trace)
@@ -305,10 +320,11 @@ impl Daemon {
         };
 
         let episode = Episode {
-            episode: self.ledger.next_episode()?,
+            episode: episode_id,
             trigger: trigger.to_string(),
             snapshot_version: manifest.version,
             drift_score,
+            per_direction: drift_per_direction,
             passes: fit_passes,
             sum_corr_before: before,
             sum_corr_after,

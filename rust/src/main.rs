@@ -25,6 +25,7 @@ use rcca::data::synthparl::SynthParl;
 use rcca::experiments::{self, Scale, Workload};
 use rcca::lifecycle::{Daemon, DaemonConfig, Ingestor, Manifest, Retention, Tick};
 use rcca::serve::{proto, Server, ServerConfig, View};
+use rcca::telemetry;
 use rcca::util::cli::{Args, Spec};
 use rcca::util::timer::Timer;
 use std::net::SocketAddr;
@@ -65,6 +66,7 @@ fn usage() -> String {
        manifest   print + validate a store's snapshot manifest\n\
        shard-info   inspect a shard file: header, nnz, CRC status\n\
        bench-check  gate a BENCH_*.json trajectory against its baseline\n\
+       trace      pretty-print a JSONL span trace written by --trace\n\
      \n\
      Run `repro <subcommand> --help` for flags.\n"
         .to_string()
@@ -126,6 +128,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "manifest" => cmd_manifest(rest),
         "shard-info" => cmd_shard_info(rest),
         "bench-check" => cmd_bench_check(rest),
+        "trace" => cmd_trace(rest),
         "--help" | "-h" | "help" => {
             print!("{}", usage());
             Ok(())
@@ -221,13 +224,18 @@ fn cmd_rcca(argv: Vec<String>) -> anyhow::Result<()> {
     let spec = common_run_flags(Spec::new("rcca", "run RandomizedCCA (Algorithm 1)"))
         .opt("p", "240", "oversampling")
         .opt("q", "1", "power iterations")
-        .opt("save", "", "write the fitted model JSON to this path");
+        .opt("save", "", "write the fitted model JSON to this path")
+        .opt("trace", "", "write a JSONL span trace of the fit to this path");
     let args = parse(spec, &argv)?;
     let scale = scale_from(&args)?;
     let k = scale.k;
     let w = Workload::generate(scale);
     let (la, lb) = w.lambdas(args.f64("nu")?);
     let mut engine = engine_from_args(&args, &w)?;
+    let trace_path = args.str("trace");
+    if !trace_path.is_empty() {
+        telemetry::install_default();
+    }
     let t = Timer::start();
     let model = Cca::builder()
         .k(k)
@@ -237,6 +245,10 @@ fn cmd_rcca(argv: Vec<String>) -> anyhow::Result<()> {
         .seed(w.scale.seed ^ 0xacca)
         .fit(&mut engine)?;
     let fit_secs = t.secs();
+    // Export before the evaluation passes below: objective() drives extra
+    // engine passes, and the trace contract is "the fit alone" — exactly
+    // q+1 `pass` spans for the randomized solver.
+    export_trace(trace_path)?;
     let train = model.objective(&mut engine);
     let test = model.objective(&mut w.test_engine());
     let feas = model.feasibility(&mut engine);
@@ -280,6 +292,19 @@ fn spec_store_dir(spec: &str) -> Option<&str> {
         .strip_prefix("inmemory:")
         .or_else(|| spec.strip_prefix("native:"))?;
     rest.split('?').next()
+}
+
+/// Drain the flight recorder to `path` and switch tracing back off. A
+/// no-op for the empty path, so callers can pass `--trace` through
+/// unconditionally.
+fn export_trace(path: &str) -> anyhow::Result<()> {
+    if path.is_empty() {
+        return Ok(());
+    }
+    let (spans, dropped) = telemetry::export_jsonl(Path::new(path))?;
+    telemetry::disable();
+    println!("trace: {spans} spans ({dropped} dropped) -> {path}");
+    Ok(())
 }
 
 fn cmd_horst(argv: Vec<String>) -> anyhow::Result<()> {
@@ -414,7 +439,7 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         server.local_addr()
     );
     println!(
-        "endpoints: GET /healthz | GET /v1/model | GET /metrics | \
+        "endpoints: GET /healthz | GET /v1/model | GET /metrics[?format=prom] | \
          POST /v1/transform | POST /admin/reload"
     );
     server.run();
@@ -534,7 +559,8 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("io-threads", "1", "out-of-core workers: reader threads feeding the prefetch queue")
         .opt("heartbeat-timeout-secs", "10", "silence after which a worker is declared dead")
         .opt("report-dir", "reports", "where JSON twins are written")
-        .opt("save", "", "write the fitted model JSON to this path");
+        .opt("save", "", "write the fitted model JSON to this path")
+        .opt("trace", "", "write a JSONL span trace of the driver's fit rounds to this path");
     let args = parse(spec, &argv)?;
     let scale = scale_from(&args)?;
     let k = scale.k;
@@ -559,6 +585,10 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
         w.train.rows(),
         w.scale.dims
     );
+    let trace_path = args.str("trace");
+    if !trace_path.is_empty() {
+        telemetry::install_default();
+    }
     let t = Timer::start();
     let model = Cca::builder()
         .k(k)
@@ -568,6 +598,9 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
         .seed(w.scale.seed ^ 0xacca)
         .fit(&mut engine)?;
     let fit_secs = t.secs();
+    // Evaluation drives more cluster rounds; keep the trace fit-only (one
+    // `round` span per fit pass), mirroring the ledger snapshot below.
+    export_trace(trace_path)?;
     // The claim under test: every fit pass was exactly one network round.
     // The rounds figure comes from the DRIVER's ledger (its RunPass round
     // counter), not from the model's pass ledger, so the two rows below
@@ -689,6 +722,7 @@ fn cmd_daemon(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("audit", "", "audit ledger path (default <store>/audit.jsonl)")
         .opt("retain", "512", "audit episodes kept before compaction (0 = unbounded)")
         .opt("max-episodes", "0", "exit after this many refit episodes (0 = run forever)")
+        .opt("trace", "", "write a JSONL span trace of ticks/refits on exit")
         .switch("once", "run exactly one tick and exit (errors become the exit code)");
     let args = parse(spec, &argv)?;
     let store = Path::new(args.str("store")).to_path_buf();
@@ -723,6 +757,10 @@ fn cmd_daemon(argv: Vec<String>) -> anyhow::Result<()> {
     let once = args.bool("once")?;
     let max_episodes = args.u64("max-episodes")?;
     let poll = Duration::from_millis(args.u64("poll-ms")?);
+    let trace_path = args.str("trace");
+    if !trace_path.is_empty() {
+        telemetry::install_default();
+    }
     let mut refits = 0u64;
     let mut was_idle = false;
     loop {
@@ -760,13 +798,19 @@ fn cmd_daemon(argv: Vec<String>) -> anyhow::Result<()> {
                     ep.generation
                 );
             }
-            Err(e) if once => return Err(e.into()),
+            Err(e) if once => {
+                // Best-effort: the failing tick's spans are exactly what a
+                // debugger wants, but the tick error stays the exit cause.
+                let _ = export_trace(trace_path);
+                return Err(e.into());
+            }
             Err(e) => {
                 was_idle = false;
                 eprintln!("daemon: {e}");
             }
         }
         if once || (max_episodes > 0 && refits >= max_episodes) {
+            export_trace(trace_path)?;
             return Ok(());
         }
         std::thread::sleep(poll);
@@ -992,6 +1036,32 @@ fn cmd_bench_check(argv: Vec<String>) -> anyhow::Result<()> {
             .join(", ")
     );
     println!("bench-check: {compared} sections within {:.0}%", max_regress * 100.0);
+    Ok(())
+}
+
+/// `repro trace <file>` — pretty-print a JSONL span trace written by the
+/// `--trace` flag on `rcca`/`fit`/`daemon`: an indented span tree with
+/// wall + thread-CPU timings, optionally filtered by span name and
+/// truncated to the newest N spans.
+fn cmd_trace(argv: Vec<String>) -> anyhow::Result<()> {
+    let mut argv = argv;
+    // Accept the file positionally (`repro trace trace.jsonl`).
+    let positional = argv.first().map(|f| !f.starts_with("--")).unwrap_or(false);
+    if positional {
+        let file = argv.remove(0);
+        argv.insert(0, format!("--file={file}"));
+    }
+    let spec = Spec::new("trace", "pretty-print a JSONL span trace")
+        .req("file", "trace file written by --trace (positional also accepted)")
+        .opt("last", "0", "show only the newest N spans (0 = all)")
+        .opt("name", "", "keep spans whose name contains this substring (plus ancestors)");
+    let args = parse(spec, &argv)?;
+    let path = Path::new(args.str("file"));
+    let trace = telemetry::trace::read_jsonl(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let name = args.str("name");
+    let filter = if name.is_empty() { None } else { Some(name) };
+    print!("{}", telemetry::trace::render_tree(&trace, args.usize("last")?, filter));
+    println!("({} spans, {} dropped)", trace.spans.len(), trace.dropped);
     Ok(())
 }
 

@@ -1,6 +1,6 @@
 //! Hand-rolled HTTP/1.1 codec — the minimal subset the model server needs:
 //! request line + headers + `Content-Length` bodies on the read side,
-//! JSON responses with keep-alive on the write side. No chunked encoding,
+//! JSON and plain-text responses with keep-alive on the write side. No chunked encoding,
 //! no TLS, no multipart; anything outside the subset is a typed
 //! [`HttpError`] so the connection handler can answer 400 instead of
 //! panicking or hanging.
@@ -219,6 +219,26 @@ pub fn status_reason(status: u16) -> &'static str {
     }
 }
 
+fn write_response(
+    w: &mut dyn Write,
+    status: u16,
+    content_type: &str,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        status,
+        status_reason(status),
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
 /// Write a JSON response. `keep_alive: false` advertises `Connection:
 /// close` so well-behaved clients stop reusing the socket.
 pub fn write_json_response(
@@ -227,16 +247,18 @@ pub fn write_json_response(
     body: &str,
     keep_alive: bool,
 ) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
-        status,
-        status_reason(status),
-        body.len(),
-        if keep_alive { "keep-alive" } else { "close" }
-    );
-    w.write_all(head.as_bytes())?;
-    w.write_all(body.as_bytes())?;
-    w.flush()
+    write_response(w, status, "application/json", body, keep_alive)
+}
+
+/// Write a plain-text response — the Prometheus exposition content type
+/// (`GET /metrics?format=prom`).
+pub fn write_text_response(
+    w: &mut dyn Write,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write_response(w, status, "text/plain; version=0.0.4", body, keep_alive)
 }
 
 #[cfg(test)]
@@ -348,6 +370,17 @@ mod tests {
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("503 Service Unavailable"));
         assert!(text.contains("connection: close"));
+    }
+
+    #[test]
+    fn text_response_writer_sets_plain_content_type() {
+        let mut out = Vec::new();
+        write_text_response(&mut out, 200, "rcca_up 1\n", false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("content-type: text/plain; version=0.0.4\r\n"));
+        assert!(text.contains("content-length: 10\r\n"));
+        assert!(text.ends_with("rcca_up 1\n"));
     }
 
     #[test]

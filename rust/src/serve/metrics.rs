@@ -2,9 +2,19 @@
 //! snapshotted as JSON for `GET /metrics` (same style as
 //! `coordinator::metrics`, extended with the latency/batch distributions a
 //! request path needs).
+//!
+//! Accuracy bound: quantiles derived from the power-of-two buckets report
+//! the containing bucket's upper edge, so they can overestimate the true
+//! quantile by up to 2×. To keep that bucketing error from silently
+//! swallowing real shifts, every histogram export also carries the exact
+//! `sum`/`count`-derived mean — `mean` in the JSON snapshot, and
+//! `_sum`/`_count` plus a `_mean` companion gauge in the Prometheus
+//! exposition (see [`crate::telemetry::registry`]).
 
+use crate::telemetry::{self, Family, FamilyKind, HistogramSnapshot, MetricSource, Sample};
 use crate::util::json::{jarr, jnum, Json};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Power-of-two-bucketed histogram over `u64` observations. Bucket `i`
 /// counts observations `v` with `v <= 2^i` (the last bucket is unbounded).
@@ -112,6 +122,59 @@ impl Histogram {
         o.set("buckets", jarr(buckets));
         o
     }
+
+    /// Flatten for Prometheus: cumulative `(le, count)` pairs ending with
+    /// the `+Inf` overflow bucket, plus the exact sum/count.
+    pub fn prom_snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = Vec::with_capacity(self.buckets.len());
+        let mut cumulative = 0u64;
+        let last = self.buckets.len() - 1;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cumulative += b.load(Ordering::Relaxed);
+            let le = if i == last {
+                f64::INFINITY
+            } else {
+                (1u64 << i.min(63)) as f64
+            };
+            buckets.push((le, cumulative));
+        }
+        HistogramSnapshot {
+            buckets,
+            sum: self.sum() as f64,
+            count: self.count(),
+        }
+    }
+}
+
+/// Per-endpoint latency table feeding the SLO gauges on the Prometheus
+/// export. Prom-only by design: the JSON `/metrics` snapshot predates it
+/// and must stay byte-compatible.
+#[derive(Debug)]
+pub struct EndpointLatency {
+    endpoints: Vec<(&'static str, Histogram)>,
+}
+
+impl EndpointLatency {
+    fn new() -> EndpointLatency {
+        // Fixed vocabulary so the label set is bounded no matter what
+        // clients request; unknown paths land in "other".
+        let names = ["healthz", "model", "metrics", "transform", "reload", "other"];
+        EndpointLatency {
+            endpoints: names.iter().map(|&n| (n, Histogram::new(24))).collect(),
+        }
+    }
+
+    /// Record one request's end-to-end latency against its endpoint
+    /// (unknown endpoint names fold into "other").
+    pub fn observe(&self, endpoint: &str, latency_us: u64) {
+        let slot = self
+            .endpoints
+            .iter()
+            .find(|(n, _)| *n == endpoint)
+            .or_else(|| self.endpoints.iter().find(|(n, _)| *n == "other"))
+            .expect("endpoint table always has an 'other' row");
+        slot.1.observe(latency_us);
+    }
 }
 
 /// Counters for one server instance. Workers bump them from connection
@@ -146,6 +209,11 @@ pub struct ServeMetrics {
     pub latency_us: Histogram,
     /// Rows per fused batch.
     pub batch_rows: Histogram,
+    /// Per-endpoint latency SLO table (Prometheus export only).
+    pub endpoints: EndpointLatency,
+    /// Latest per-direction drift deltas from the lifecycle monitor
+    /// (Prometheus export only; empty until the daemon scores a batch).
+    drift_per_direction: Mutex<Vec<f64>>,
 }
 
 impl ServeMetrics {
@@ -166,11 +234,23 @@ impl ServeMetrics {
             // 2^24 µs ≈ 16.8 s covers any sane request; 2^16 rows per batch.
             latency_us: Histogram::new(24),
             batch_rows: Histogram::new(16),
+            endpoints: EndpointLatency::new(),
+            drift_per_direction: Mutex::new(Vec::new()),
         }
     }
 
     pub fn add(&self, counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Publish the latest per-direction drift deltas (the lifecycle
+    /// daemon calls this each time a batch is scored).
+    pub fn set_drift_per_direction(&self, deltas: &[f64]) {
+        *self.drift_per_direction.lock().unwrap() = deltas.to_vec();
+    }
+
+    pub fn drift_per_direction(&self) -> Vec<f64> {
+        self.drift_per_direction.lock().unwrap().clone()
     }
 
     pub fn snapshot(&self) -> Json {
@@ -197,6 +277,158 @@ impl ServeMetrics {
 impl Default for ServeMetrics {
     fn default() -> Self {
         ServeMetrics::new()
+    }
+}
+
+impl MetricSource for ServeMetrics {
+    fn snapshot_json(&self) -> Json {
+        self.snapshot()
+    }
+
+    fn prom_families(&self) -> Vec<Family> {
+        let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let mut fams = vec![
+            telemetry::counter(
+                "rcca_serve_requests_total",
+                "HTTP requests fully parsed and dispatched",
+                c(&self.requests_total),
+            ),
+            telemetry::counter(
+                "rcca_serve_requests_failed_total",
+                "Requests answered with a non-2xx status",
+                c(&self.requests_failed),
+            ),
+            telemetry::counter(
+                "rcca_serve_connections_total",
+                "Connections accepted over the server's lifetime",
+                c(&self.connections),
+            ),
+            telemetry::gauge(
+                "rcca_serve_connections_active",
+                "Connections currently open",
+                c(&self.connections_active) as f64,
+            ),
+            telemetry::counter(
+                "rcca_serve_rejected_overload_total",
+                "Connections turned away with 503",
+                c(&self.rejected_overload),
+            ),
+            telemetry::counter(
+                "rcca_serve_rows_transformed_total",
+                "Rows projected through the model",
+                c(&self.rows_transformed),
+            ),
+            telemetry::counter(
+                "rcca_serve_batches_total",
+                "Fused batch projections issued by the batcher",
+                c(&self.batches),
+            ),
+            telemetry::counter(
+                "rcca_serve_reloads_total",
+                "Successful /admin/reload swaps",
+                c(&self.reloads),
+            ),
+            telemetry::counter(
+                "rcca_serve_drift_batches_total",
+                "Fresh-shard batches drift-scored by the lifecycle daemon",
+                c(&self.drift_batches),
+            ),
+            telemetry::counter(
+                "rcca_serve_drift_alerts_total",
+                "Drift scores at or above the refit threshold",
+                c(&self.drift_alerts),
+            ),
+            telemetry::gauge(
+                "rcca_serve_drift_score",
+                "Latest aggregate drift score",
+                c(&self.drift_score_milli) as f64 / 1000.0,
+            ),
+            telemetry::counter(
+                "rcca_serve_refits_total",
+                "Warm refits completed by the lifecycle daemon",
+                c(&self.refits),
+            ),
+        ];
+        let lat = self.latency_us.prom_snapshot();
+        let rows = self.batch_rows.prom_snapshot();
+        fams.push(telemetry::histogram(
+            "rcca_serve_latency_microseconds",
+            "End-to-end request latency (parse to response write)",
+            &lat,
+        ));
+        fams.push(telemetry::gauge(
+            "rcca_serve_latency_microseconds_mean",
+            "Exact mean request latency (sum/count; bucketed quantiles overestimate up to 2x)",
+            lat.mean(),
+        ));
+        fams.push(telemetry::histogram(
+            "rcca_serve_batch_rows",
+            "Rows per fused batch",
+            &rows,
+        ));
+        fams.push(telemetry::gauge(
+            "rcca_serve_batch_rows_mean",
+            "Exact mean rows per fused batch (sum/count)",
+            rows.mean(),
+        ));
+        // Per-endpoint SLO surface: request counts plus p50/p99/mean
+        // latency gauges, labeled by endpoint.
+        let table = &self.endpoints.endpoints;
+        fams.push(Family {
+            name: "rcca_serve_endpoint_requests_total".to_string(),
+            help: "Requests per endpoint".to_string(),
+            kind: FamilyKind::Counter,
+            samples: table
+                .iter()
+                .map(|(name, h)| Sample {
+                    suffix: "",
+                    labels: vec![("endpoint".to_string(), (*name).to_string())],
+                    value: h.count() as f64,
+                })
+                .collect(),
+        });
+        let lat_gauge = |suffix: &str, help: &str, f: &dyn Fn(&Histogram) -> f64| {
+            let values: Vec<(String, f64)> = table
+                .iter()
+                .map(|(name, h)| ((*name).to_string(), f(h)))
+                .collect();
+            telemetry::gauge_vec(
+                &format!("rcca_serve_endpoint_latency_{suffix}_microseconds"),
+                help,
+                "endpoint",
+                &values,
+            )
+        };
+        fams.push(lat_gauge(
+            "p50",
+            "Per-endpoint median latency (bucket upper bound, up to 2x high)",
+            &|h| h.quantile(0.50) as f64,
+        ));
+        fams.push(lat_gauge(
+            "p99",
+            "Per-endpoint p99 latency (bucket upper bound, up to 2x high)",
+            &|h| h.quantile(0.99) as f64,
+        ));
+        fams.push(lat_gauge(
+            "mean",
+            "Per-endpoint exact mean latency (sum/count)",
+            &|h| h.mean(),
+        ));
+        let drift = self.drift_per_direction();
+        if !drift.is_empty() {
+            let values: Vec<(String, f64)> = drift
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| (i.to_string(), d))
+                .collect();
+            fams.push(telemetry::gauge_vec(
+                "rcca_serve_drift_per_direction",
+                "Latest drift delta per canonical direction (fit-time minus observed correlation)",
+                "direction",
+                &values,
+            ));
+        }
+        fams
     }
 }
 
@@ -255,6 +487,99 @@ mod tests {
         assert_eq!(s.get("rows_transformed").unwrap().as_usize(), Some(12));
         let text = s.to_string_pretty();
         assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn prom_snapshot_is_cumulative_with_inf_overflow() {
+        let h = Histogram::new(4); // buckets le=1,2,4,8,+Inf
+        h.observe(1);
+        h.observe(2);
+        h.observe(2);
+        h.observe(1000); // overflow
+        let s = h.prom_snapshot();
+        assert_eq!(s.buckets.len(), 5);
+        assert_eq!(s.buckets[0], (1.0, 1));
+        assert_eq!(s.buckets[1], (2.0, 3));
+        assert_eq!(s.buckets[2], (4.0, 3));
+        assert_eq!(s.buckets[3], (8.0, 3));
+        assert!(s.buckets[4].0.is_infinite());
+        assert_eq!(s.buckets[4].1, 4);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.sum, 1005.0);
+        assert!((s.mean() - 1005.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn endpoint_table_folds_unknown_into_other() {
+        let m = ServeMetrics::new();
+        m.endpoints.observe("transform", 50);
+        m.endpoints.observe("no_such_endpoint", 70);
+        let prom = {
+            let mut s = String::new();
+            crate::telemetry::render_families(&m.prom_families(), &mut s);
+            s
+        };
+        assert!(
+            prom.contains("rcca_serve_endpoint_requests_total{endpoint=\"transform\"} 1"),
+            "{prom}"
+        );
+        assert!(
+            prom.contains("rcca_serve_endpoint_requests_total{endpoint=\"other\"} 1"),
+            "{prom}"
+        );
+        assert!(prom.contains("rcca_serve_endpoint_latency_p99_microseconds"), "{prom}");
+    }
+
+    #[test]
+    fn json_snapshot_shape_is_frozen() {
+        // The prom-only additions (endpoint SLOs, per-direction drift) must
+        // never leak into the legacy JSON snapshot: scrapers and the serve
+        // integration tests depend on this exact key set.
+        let m = ServeMetrics::new();
+        m.set_drift_per_direction(&[0.1, 0.2]);
+        let s = m.snapshot();
+        let keys: Vec<&str> = match &s {
+            Json::Obj(o) => o.keys().map(|k| k.as_str()).collect(),
+            _ => panic!("snapshot is an object"),
+        };
+        assert_eq!(
+            keys,
+            vec![
+                "batch_rows",
+                "batches",
+                "connections",
+                "connections_active",
+                "drift_alerts",
+                "drift_batches",
+                "drift_score_milli",
+                "latency_us",
+                "refits",
+                "rejected_overload",
+                "reloads",
+                "requests_failed",
+                "requests_total",
+                "rows_transformed",
+            ]
+        );
+    }
+
+    #[test]
+    fn drift_per_direction_exports_as_labeled_gauges() {
+        let m = ServeMetrics::new();
+        let mut prom = String::new();
+        crate::telemetry::render_families(&m.prom_families(), &mut prom);
+        assert!(!prom.contains("rcca_serve_drift_per_direction"), "{prom}");
+        m.set_drift_per_direction(&[0.5, -0.125]);
+        let mut prom = String::new();
+        crate::telemetry::render_families(&m.prom_families(), &mut prom);
+        assert!(
+            prom.contains("rcca_serve_drift_per_direction{direction=\"0\"} 0.5"),
+            "{prom}"
+        );
+        assert!(
+            prom.contains("rcca_serve_drift_per_direction{direction=\"1\"} -0.125"),
+            "{prom}"
+        );
     }
 
     #[test]

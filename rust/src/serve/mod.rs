@@ -10,7 +10,8 @@
 //! | `/v1/transform`       | POST   | sparse rows in → canonical projections out  |
 //! | `/v1/model`           | GET    | solver, k, correlations, passes, generation |
 //! | `/healthz`            | GET    | liveness + current model generation         |
-//! | `/metrics`            | GET    | counters + latency/batch histograms         |
+//! | `/metrics`            | GET    | counters + latency/batch histograms (JSON;  |
+//! |                       |        | `?format=prom` for Prometheus text)         |
 //! | `/admin/reload`       | POST   | atomic hot-swap from the model path         |
 //!
 //! Architecture: the accept loop hands each connection to the existing
@@ -39,6 +40,7 @@ pub use proto::View;
 pub use registry::ModelRegistry;
 
 use crate::api::ApiError;
+use crate::telemetry::{self, MetricsRegistry};
 use crate::util::json::{jnum, jstr, Json};
 use crate::util::pool::Pool;
 use std::fmt;
@@ -167,6 +169,9 @@ struct Ctx {
     registry: Arc<ModelRegistry>,
     batcher: Batcher,
     metrics: Arc<ServeMetrics>,
+    /// Unified telemetry registry backing `?format=prom` (this server's
+    /// own instance, so tests and co-located daemons stay independent).
+    telemetry: Arc<MetricsRegistry>,
     shutdown: Arc<AtomicBool>,
     max_body_bytes: usize,
 }
@@ -218,6 +223,8 @@ impl Server {
             cfg.max_batch_rows,
         );
         let pool = Pool::new(cfg.threads, cfg.queue_capacity);
+        let telemetry_registry = Arc::new(MetricsRegistry::new());
+        telemetry_registry.register("serve", Arc::clone(&metrics));
         Ok(Server {
             listener,
             addr: local,
@@ -226,6 +233,7 @@ impl Server {
                 registry,
                 batcher,
                 metrics,
+                telemetry: telemetry_registry,
                 shutdown: Arc::new(AtomicBool::new(false)),
                 max_body_bytes: cfg.max_body_bytes,
             }),
@@ -243,6 +251,13 @@ impl Server {
 
     pub fn registry(&self) -> Arc<ModelRegistry> {
         Arc::clone(&self.ctx.registry)
+    }
+
+    /// The unified telemetry registry behind `GET /metrics?format=prom`.
+    /// Callers embedding the server (the lifecycle daemon, tests) can
+    /// register additional [`telemetry::MetricSource`]s here.
+    pub fn telemetry(&self) -> Arc<MetricsRegistry> {
+        Arc::clone(&self.ctx.telemetry)
     }
 
     pub fn handle(&self) -> ServerHandle {
@@ -321,6 +336,7 @@ fn serve_connection(stream: TcpStream, ctx: &Arc<Ctx>) {
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
     loop {
+        let read_started = Instant::now();
         let request = match http::read_request(&mut reader, ctx.max_body_bytes) {
             Ok(http::ReadOutcome::Closed) => return,
             Ok(http::ReadOutcome::Request(r)) => r,
@@ -354,19 +370,52 @@ fn serve_connection(stream: TcpStream, ctx: &Arc<Ctx>) {
         let started = Instant::now();
         let keep_alive = request.keep_alive && !ctx.shutdown.load(Ordering::SeqCst);
         ctx.metrics.add(&ctx.metrics.requests_total, 1);
-        let write_ok = match dispatch(&request, ctx) {
-            Ok(body) => {
-                http::write_json_response(&mut writer, 200, &body, keep_alive).is_ok()
-            }
-            Err(err) => {
-                ctx.metrics.add(&ctx.metrics.requests_failed, 1);
-                http::write_json_response(&mut writer, err.status(), &err.to_body(), keep_alive)
+        let mut req_span = telemetry::span("request");
+        req_span
+            .attr("method", request.method.as_str())
+            .attr("path", request.path.as_str());
+        // Read + parse time, back-dated as a child span. On a keep-alive
+        // connection this includes the idle wait before the request line.
+        telemetry::record_manual(
+            "parse",
+            req_span.id(),
+            read_started.elapsed().as_nanos() as u64,
+            vec![],
+        );
+        let reply = {
+            let _handle_span = telemetry::span("handle");
+            dispatch(&request, ctx)
+        };
+        let write_ok = {
+            let _write_span = telemetry::span("write");
+            match reply {
+                Ok(Reply::Json(body)) => {
+                    req_span.attr("status", 200u64);
+                    http::write_json_response(&mut writer, 200, &body, keep_alive).is_ok()
+                }
+                Ok(Reply::Text(body)) => {
+                    req_span.attr("status", 200u64);
+                    http::write_text_response(&mut writer, 200, &body, keep_alive).is_ok()
+                }
+                Err(err) => {
+                    ctx.metrics.add(&ctx.metrics.requests_failed, 1);
+                    req_span.attr("status", err.status() as u64);
+                    http::write_json_response(
+                        &mut writer,
+                        err.status(),
+                        &err.to_body(),
+                        keep_alive,
+                    )
                     .is_ok()
+                }
             }
         };
+        drop(req_span);
+        let latency_us = started.elapsed().as_micros() as u64;
+        ctx.metrics.latency_us.observe(latency_us);
         ctx.metrics
-            .latency_us
-            .observe(started.elapsed().as_micros() as u64);
+            .endpoints
+            .observe(endpoint_name(&request.path), latency_us);
         if !write_ok || !keep_alive {
             return;
         }
@@ -380,23 +429,79 @@ fn respond_error(writer: &mut TcpStream, ctx: &Arc<Ctx>, err: &ServeError, keep_
     let _ = writer.flush();
 }
 
-/// Route a parsed request to its endpoint; `Ok` is a 200 JSON body.
-fn dispatch(req: &http::Request, ctx: &Arc<Ctx>) -> Result<String, ServeError> {
-    match (req.method.as_str(), req.path.as_str()) {
+/// A successful response body, typed by content type.
+enum Reply {
+    Json(String),
+    Text(String),
+}
+
+/// Extract the value of `key` from a raw query string, if present.
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}
+
+/// Bucket a request target into the bounded vocabulary of the
+/// per-endpoint SLO table.
+fn endpoint_name(target: &str) -> &'static str {
+    let path = target.split_once('?').map_or(target, |(p, _)| p);
+    match path {
+        "/healthz" => "healthz",
+        "/v1/model" => "model",
+        "/metrics" => "metrics",
+        "/v1/transform" => "transform",
+        "/admin/reload" => "reload",
+        _ => "other",
+    }
+}
+
+/// Route a parsed request to its endpoint; `Ok` is a 200 body.
+fn dispatch(req: &http::Request, ctx: &Arc<Ctx>) -> Result<Reply, ServeError> {
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
+    match (req.method.as_str(), path) {
         ("GET", "/healthz") => {
             let mut o = Json::obj();
             o.set("status", jstr("ok"))
                 .set("generation", jnum(ctx.registry.generation() as f64));
-            Ok(o.to_string_compact())
+            Ok(Reply::Json(o.to_string_compact()))
         }
-        ("GET", "/v1/model") => Ok(ctx.registry.metadata().to_string_compact()),
-        ("GET", "/metrics") => {
-            let mut o = ctx.metrics.snapshot();
-            o.set("generation", jnum(ctx.registry.generation() as f64))
-                .set("batcher_queued", jnum(ctx.batcher.queued() as f64));
-            Ok(o.to_string_compact())
-        }
-        ("POST", "/v1/transform") => transform(req, ctx),
+        ("GET", "/v1/model") => Ok(Reply::Json(ctx.registry.metadata().to_string_compact())),
+        ("GET", "/metrics") => match query_param(query, "format") {
+            None | Some("json") => {
+                let mut o = ctx.metrics.snapshot();
+                o.set("generation", jnum(ctx.registry.generation() as f64))
+                    .set("batcher_queued", jnum(ctx.batcher.queued() as f64));
+                Ok(Reply::Json(o.to_string_compact()))
+            }
+            Some("prom") => {
+                let mut text = ctx.telemetry.render_prom();
+                telemetry::render_families(
+                    &[
+                        telemetry::gauge(
+                            "rcca_serve_model_generation",
+                            "Current model generation",
+                            ctx.registry.generation() as f64,
+                        ),
+                        telemetry::gauge(
+                            "rcca_serve_batcher_queued",
+                            "Rows waiting in the transform batcher",
+                            ctx.batcher.queued() as f64,
+                        ),
+                    ],
+                    &mut text,
+                );
+                Ok(Reply::Text(text))
+            }
+            Some(other) => Err(ServeError::BadRequest(format!(
+                "unknown metrics format '{other}'"
+            ))),
+        },
+        ("POST", "/v1/transform") => transform(req, ctx).map(Reply::Json),
         ("POST", "/admin/reload") => {
             let snap = ctx
                 .registry
@@ -409,7 +514,7 @@ fn dispatch(req: &http::Request, ctx: &Arc<Ctx>) -> Result<String, ServeError> {
                 .set("k", jnum(snap.model.k() as f64))
                 .set("da", jnum(snap.model.da() as f64))
                 .set("db", jnum(snap.model.db() as f64));
-            Ok(o.to_string_compact())
+            Ok(Reply::Json(o.to_string_compact()))
         }
         (_, path @ ("/healthz" | "/v1/model" | "/metrics" | "/v1/transform" | "/admin/reload")) => {
             Err(ServeError::MethodNotAllowed {

@@ -1,0 +1,37 @@
+//! Unified telemetry: structured tracing spans, a per-thread flight
+//! recorder, and one metrics pipeline shared by fit, serve, cluster, and
+//! lifecycle.
+//!
+//! Two halves:
+//!
+//! * [`recorder`] — `Span`/`Event` records with ids, parent links, wall +
+//!   thread-CPU timing, and typed attributes, buffered in lock-light
+//!   per-thread rings and exported as JSONL (`repro trace` pretty-prints
+//!   them via [`trace`]). Instrumentation is always compiled in and costs
+//!   one atomic load when the recorder is off; `--trace <file>` on the
+//!   fit/daemon CLIs turns it on.
+//! * [`registry`] — [`MetricsRegistry`], which absorbs the pre-existing
+//!   counter silos (`coordinator::Metrics`, `serve::ServeMetrics`, the
+//!   lifecycle daemon's counters) behind one registration API and renders
+//!   both the legacy JSON shapes (byte-compatible) and Prometheus text
+//!   format (`GET /metrics?format=prom`).
+//!
+//! Span vocabulary used across the system (names are stable — CI greps
+//! them): `fit` (api), `pass`/`shard_task`/`load`/`decode`/`engine`/
+//! `reduce` (coordinator), `round` (cluster driver and worker, correlated
+//! by the `pass_id` attr carried in the wire protocol), `request`/`parse`/
+//! `handle`/`write` (serve), `tick`/`refit` (lifecycle daemon, linked to
+//! the audit ledger via the `episode` attr).
+
+pub mod recorder;
+pub mod registry;
+pub mod trace;
+
+pub use recorder::{
+    disable, drain, enabled, event, export_jsonl, install, install_default, record_manual, span,
+    span_child_of, AttrValue, RecordKind, Span, SpanRecord, Trace, DEFAULT_CAPACITY,
+};
+pub use registry::{
+    counter, gauge, gauge_vec, histogram, histogram_vec, parse_prom, render_families, Family,
+    FamilyKind, HistogramSnapshot, MetricSource, MetricsRegistry, Sample,
+};

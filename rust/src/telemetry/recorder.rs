@@ -1,0 +1,572 @@
+//! The flight recorder: a lock-light, per-thread ring buffer of structured
+//! spans and events.
+//!
+//! Design:
+//!
+//! * **Disabled is free-ish.** Every instrumentation site starts with one
+//!   relaxed atomic load; when the recorder is not installed, [`span`]
+//!   returns an inert guard and nothing else happens. Hot paths (chunk
+//!   loops, serve requests) stay instrumented unconditionally.
+//! * **Per-thread rings.** Each recording thread owns an `Arc<ThreadRing>`
+//!   holding its own mutex — uncontended in steady state, so recording is
+//!   "lock-light": one never-shared lock acquisition per finished span.
+//!   [`drain`] is the only cross-thread reader.
+//! * **Oldest-first drop, never silent.** A full ring pops the oldest
+//!   record and increments an explicit `dropped` counter that travels with
+//!   every export — truncation is always visible in the trace footer.
+//! * **Ids are global.** Span ids come from one process-wide counter
+//!   (starting at 1; parent 0 means "root"), so cross-thread parent links
+//!   (leader pass span → pool shard task) are just a `u64` handed into the
+//!   task closure via [`span_child_of`].
+//!
+//! Timing: wall time from a process-wide [`Instant`] epoch; CPU time from
+//! `CLOCK_THREAD_CPUTIME_ID` on Linux (0 elsewhere), so a span whose
+//! `cpu_ns` ≪ `wall_ns` was blocked on I/O or a queue, not computing.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default per-thread ring capacity (spans), used by `install_default`.
+pub const DEFAULT_CAPACITY: usize = 8192;
+
+/// A typed span/event attribute value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrValue {
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    Str(String),
+}
+
+impl AttrValue {
+    pub fn to_json(&self) -> Json {
+        match self {
+            AttrValue::U64(v) => Json::Num(*v as f64),
+            AttrValue::I64(v) => Json::Num(*v as f64),
+            AttrValue::F64(v) => Json::Num(*v),
+            AttrValue::Str(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+impl From<u64> for AttrValue {
+    fn from(v: u64) -> AttrValue {
+        AttrValue::U64(v)
+    }
+}
+impl From<usize> for AttrValue {
+    fn from(v: usize) -> AttrValue {
+        AttrValue::U64(v as u64)
+    }
+}
+impl From<u32> for AttrValue {
+    fn from(v: u32) -> AttrValue {
+        AttrValue::U64(v as u64)
+    }
+}
+impl From<i64> for AttrValue {
+    fn from(v: i64) -> AttrValue {
+        AttrValue::I64(v)
+    }
+}
+impl From<f64> for AttrValue {
+    fn from(v: f64) -> AttrValue {
+        AttrValue::F64(v)
+    }
+}
+impl From<&str> for AttrValue {
+    fn from(v: &str) -> AttrValue {
+        AttrValue::Str(v.to_string())
+    }
+}
+impl From<String> for AttrValue {
+    fn from(v: String) -> AttrValue {
+        AttrValue::Str(v)
+    }
+}
+
+/// Span vs instantaneous event (an event is a zero-duration record).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecordKind {
+    Span,
+    Event,
+}
+
+impl RecordKind {
+    fn as_str(self) -> &'static str {
+        match self {
+            RecordKind::Span => "span",
+            RecordKind::Event => "event",
+        }
+    }
+}
+
+/// One finished span (or event) as stored in the ring.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    pub kind: RecordKind,
+    pub id: u64,
+    /// Parent span id; 0 = root.
+    pub parent: u64,
+    pub name: &'static str,
+    /// Recorder-assigned id of the thread that recorded this span.
+    pub thread: u64,
+    /// Start offset from the recorder epoch, nanoseconds.
+    pub start_ns: u64,
+    pub wall_ns: u64,
+    /// Thread CPU time consumed inside the span (0 where unsupported).
+    pub cpu_ns: u64,
+    pub attrs: Vec<(&'static str, AttrValue)>,
+}
+
+impl SpanRecord {
+    /// One JSONL line, fields in fixed (non-alphabetical) order so traces
+    /// stay grep-friendly: `"name"` before `"attrs"`.
+    pub fn to_jsonl(&self) -> String {
+        let mut attrs = Json::obj();
+        for (k, v) in &self.attrs {
+            attrs.set(k, v.to_json());
+        }
+        format!(
+            "{{\"kind\":\"{}\",\"id\":{},\"parent\":{},\"name\":\"{}\",\"thread\":{},\
+             \"start_ns\":{},\"wall_ns\":{},\"cpu_ns\":{},\"attrs\":{}}}",
+            self.kind.as_str(),
+            self.id,
+            self.parent,
+            self.name,
+            self.thread,
+            self.start_ns,
+            self.wall_ns,
+            self.cpu_ns,
+            attrs.to_string_compact()
+        )
+    }
+}
+
+/// A thread's private ring. `push` is called only by the owning thread;
+/// `drain` only by the exporter — the mutex is effectively uncontended.
+#[derive(Debug)]
+pub(crate) struct ThreadRing {
+    thread: u64,
+    capacity: usize,
+    buf: Mutex<VecDeque<SpanRecord>>,
+    dropped: AtomicU64,
+}
+
+impl ThreadRing {
+    pub(crate) fn new(thread: u64, capacity: usize) -> ThreadRing {
+        ThreadRing {
+            thread,
+            capacity: capacity.max(1),
+            buf: Mutex::new(VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Append a record, evicting the oldest (and counting it as dropped)
+    /// when the ring is at capacity.
+    pub(crate) fn push(&self, rec: SpanRecord) {
+        let mut buf = self.buf.lock().unwrap();
+        if buf.len() >= self.capacity {
+            buf.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        buf.push_back(rec);
+    }
+
+    pub(crate) fn drain(&self) -> (Vec<SpanRecord>, u64) {
+        let mut buf = self.buf.lock().unwrap();
+        let records = buf.drain(..).collect();
+        (records, self.dropped.swap(0, Ordering::Relaxed))
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_THREAD_ID: AtomicU64 = AtomicU64::new(1);
+static CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_CAPACITY);
+/// Bumped by `install`; thread-locals holding a ring from an older
+/// generation re-register, so `install` fully isolates a fresh recording.
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn rings() -> &'static Mutex<Vec<Arc<ThreadRing>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<ThreadRing>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+struct Local {
+    generation: u64,
+    ring: Option<Arc<ThreadRing>>,
+    stack: Vec<u64>,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Local> = const {
+        RefCell::new(Local { generation: 0, ring: None, stack: Vec::new() })
+    };
+}
+
+fn with_ring<R>(f: impl FnOnce(&ThreadRing) -> R) -> R {
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        let generation = GENERATION.load(Ordering::Relaxed);
+        if l.ring.is_none() || l.generation != generation {
+            let ring = Arc::new(ThreadRing::new(
+                NEXT_THREAD_ID.fetch_add(1, Ordering::Relaxed),
+                CAPACITY.load(Ordering::Relaxed),
+            ));
+            rings().lock().unwrap().push(Arc::clone(&ring));
+            l.ring = Some(ring);
+            l.generation = generation;
+        }
+        f(l.ring.as_ref().expect("ring just installed"))
+    })
+}
+
+#[cfg(target_os = "linux")]
+fn thread_cpu_ns() -> u64 {
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+    extern "C" {
+        fn clock_gettime(clk_id: i32, tp: *mut Timespec) -> i32;
+    }
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: clock_gettime writes a Timespec through a valid pointer; std
+    // already links the C runtime that provides it.
+    let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    if rc == 0 {
+        (ts.tv_sec as u64).saturating_mul(1_000_000_000) + ts.tv_nsec as u64
+    } else {
+        0
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn thread_cpu_ns() -> u64 {
+    0
+}
+
+/// Enable the recorder with the given per-thread ring capacity, resetting
+/// any previously recorded (undrained) data.
+pub fn install(capacity: usize) {
+    let _ = epoch();
+    CAPACITY.store(capacity.max(1), Ordering::Relaxed);
+    rings().lock().unwrap().clear();
+    GENERATION.fetch_add(1, Ordering::Relaxed);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// `install(DEFAULT_CAPACITY)`.
+pub fn install_default() {
+    install(DEFAULT_CAPACITY);
+}
+
+/// Stop recording. Already-buffered spans stay drainable.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// A drained recording: every buffered span across all threads plus the
+/// total number of records the rings had to evict.
+#[derive(Debug)]
+pub struct Trace {
+    pub spans: Vec<SpanRecord>,
+    pub dropped: u64,
+}
+
+impl Trace {
+    /// Write JSONL: one span per line (start-time order) and a final
+    /// `{"kind":"trace",...}` footer carrying the drop counter, so
+    /// truncation is never silent.
+    pub fn write_jsonl(&self, path: &Path) -> std::io::Result<()> {
+        let mut out = String::new();
+        for s in &self.spans {
+            out.push_str(&s.to_jsonl());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "{{\"kind\":\"trace\",\"spans\":{},\"dropped\":{}}}\n",
+            self.spans.len(),
+            self.dropped
+        ));
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(out.as_bytes())
+    }
+}
+
+/// Collect and clear every thread's buffered spans (sorted by start time).
+pub fn drain() -> Trace {
+    let rings = rings().lock().unwrap();
+    let mut spans = Vec::new();
+    let mut dropped = 0u64;
+    for ring in rings.iter() {
+        let (mut records, d) = ring.drain();
+        spans.append(&mut records);
+        dropped += d;
+    }
+    spans.sort_by_key(|s| (s.start_ns, s.id));
+    Trace { spans, dropped }
+}
+
+/// Drain and write JSONL in one step; returns `(spans, dropped)`.
+pub fn export_jsonl(path: &Path) -> std::io::Result<(usize, u64)> {
+    let trace = drain();
+    trace.write_jsonl(path)?;
+    Ok((trace.spans.len(), trace.dropped))
+}
+
+/// An in-flight span. Records itself (wall + CPU + attrs) into the current
+/// thread's ring when dropped; inert (id 0) while the recorder is disabled.
+#[derive(Debug)]
+pub struct Span {
+    id: u64,
+    parent: u64,
+    name: &'static str,
+    start: Option<Instant>,
+    start_ns: u64,
+    cpu_start: u64,
+    attrs: Vec<(&'static str, AttrValue)>,
+}
+
+impl Span {
+    fn inert(name: &'static str) -> Span {
+        Span {
+            id: 0,
+            parent: 0,
+            name,
+            start: None,
+            start_ns: 0,
+            cpu_start: 0,
+            attrs: Vec::new(),
+        }
+    }
+
+    fn armed(name: &'static str, parent: u64) -> Span {
+        let now = Instant::now();
+        let span = Span {
+            id: NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed),
+            parent,
+            name,
+            start: Some(now),
+            start_ns: now.duration_since(epoch()).as_nanos() as u64,
+            cpu_start: thread_cpu_ns(),
+            attrs: Vec::new(),
+        };
+        LOCAL.with(|l| l.borrow_mut().stack.push(span.id));
+        span
+    }
+
+    /// This span's id, for parenting work handed to other threads.
+    /// 0 when the recorder is disabled.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Attach a typed attribute (no-op while disabled).
+    pub fn attr(&mut self, key: &'static str, value: impl Into<AttrValue>) -> &mut Self {
+        if self.start.is_some() {
+            self.attrs.push((key, value.into()));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let wall_ns = start.elapsed().as_nanos() as u64;
+        let cpu_ns = thread_cpu_ns().saturating_sub(self.cpu_start);
+        LOCAL.with(|l| {
+            let mut l = l.borrow_mut();
+            // Pop our own id (spans nest strictly on a thread, so it is the
+            // top unless an earlier generation reset raced us).
+            if l.stack.last() == Some(&self.id) {
+                l.stack.pop();
+            } else if let Some(pos) = l.stack.iter().rposition(|&id| id == self.id) {
+                l.stack.truncate(pos);
+            }
+        });
+        let mut rec = SpanRecord {
+            kind: RecordKind::Span,
+            id: self.id,
+            parent: self.parent,
+            name: self.name,
+            thread: 0, // assigned below from the ring
+            start_ns: self.start_ns,
+            wall_ns,
+            cpu_ns,
+            attrs: std::mem::take(&mut self.attrs),
+        };
+        with_ring(move |ring| {
+            rec.thread = ring.thread;
+            ring.push(rec);
+        });
+    }
+}
+
+/// Open a span whose parent is the innermost open span on this thread
+/// (root if none).
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return Span::inert(name);
+    }
+    let parent = LOCAL.with(|l| l.borrow().stack.last().copied().unwrap_or(0));
+    Span::armed(name, parent)
+}
+
+/// Open a span under an explicit parent id — the cross-thread variant
+/// (e.g. a pool shard task parented to the leader's pass span). Nested
+/// same-thread spans chain under it as usual.
+pub fn span_child_of(name: &'static str, parent: u64) -> Span {
+    if !enabled() {
+        return Span::inert(name);
+    }
+    Span::armed(name, parent)
+}
+
+/// Record an instantaneous event under the innermost open span.
+pub fn event(name: &'static str, attrs: Vec<(&'static str, AttrValue)>) {
+    if !enabled() {
+        return;
+    }
+    let parent = LOCAL.with(|l| l.borrow().stack.last().copied().unwrap_or(0));
+    let now = Instant::now();
+    with_ring(|ring| {
+        ring.push(SpanRecord {
+            kind: RecordKind::Event,
+            id: NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed),
+            parent,
+            name,
+            thread: ring.thread,
+            start_ns: now.duration_since(epoch()).as_nanos() as u64,
+            wall_ns: 0,
+            cpu_ns: 0,
+            attrs,
+        });
+    });
+}
+
+/// Record an already-measured span (e.g. the leader's accumulated reduce
+/// time, which interleaves with the receive loop and has no contiguous
+/// guard scope). `start_ns` is back-dated so the span sits inside its
+/// parent on the timeline.
+pub fn record_manual(
+    name: &'static str,
+    parent: u64,
+    wall_ns: u64,
+    attrs: Vec<(&'static str, AttrValue)>,
+) {
+    if !enabled() {
+        return;
+    }
+    let end_ns = Instant::now().duration_since(epoch()).as_nanos() as u64;
+    with_ring(|ring| {
+        ring.push(SpanRecord {
+            kind: RecordKind::Span,
+            id: NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed),
+            parent,
+            name,
+            thread: ring.thread,
+            start_ns: end_ns.saturating_sub(wall_ns),
+            wall_ns,
+            cpu_ns: 0,
+            attrs,
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_oldest_first_and_counts() {
+        let ring = ThreadRing::new(9, 4);
+        for i in 0..10u64 {
+            ring.push(SpanRecord {
+                kind: RecordKind::Span,
+                id: i + 1,
+                parent: 0,
+                name: "s",
+                thread: 9,
+                start_ns: i,
+                wall_ns: 1,
+                cpu_ns: 0,
+                attrs: vec![],
+            });
+        }
+        let (records, dropped) = ring.drain();
+        assert_eq!(dropped, 6, "10 pushed into capacity 4");
+        let ids: Vec<u64> = records.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![7, 8, 9, 10], "survivors are the newest, in order");
+        // Draining resets both the buffer and the counter.
+        let (records, dropped) = ring.drain();
+        assert!(records.is_empty());
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn jsonl_line_is_valid_json_with_ordered_fields() {
+        let rec = SpanRecord {
+            kind: RecordKind::Span,
+            id: 5,
+            parent: 2,
+            name: "pass",
+            thread: 1,
+            start_ns: 100,
+            wall_ns: 250,
+            cpu_ns: 240,
+            attrs: vec![("kind", AttrValue::from("power")), ("shards", 3usize.into())],
+        };
+        let line = rec.to_jsonl();
+        let name_at = line.find("\"name\":\"pass\"").unwrap();
+        let attrs_at = line.find("\"attrs\"").unwrap();
+        assert!(name_at < attrs_at, "name precedes attrs for greppability");
+        let doc = crate::util::json::parse(&line).unwrap();
+        assert_eq!(doc.get("id").unwrap().as_usize(), Some(5));
+        assert_eq!(doc.get("parent").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            doc.get("attrs").unwrap().get("kind").unwrap().as_str(),
+            Some("power")
+        );
+    }
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        // Do not install: whatever other tests do, an inert span must keep
+        // id 0 and record nothing through this guard.
+        let before = enabled();
+        if before {
+            // Another test currently owns the global recorder; skip.
+            return;
+        }
+        let mut s = span("never");
+        s.attr("k", 1u64);
+        assert_eq!(s.id(), 0);
+    }
+}

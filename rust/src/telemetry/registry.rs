@@ -1,0 +1,371 @@
+//! One metrics pipeline: a registry of named sources, each exporting its
+//! pre-existing JSON snapshot (bitwise-compatible with what the source
+//! served before unification) plus Prometheus text-format families.
+//!
+//! `coordinator::Metrics`, `serve::ServeMetrics`, and the serve per-endpoint
+//! SLO table all implement [`MetricSource`]; a server registers them once
+//! and `GET /metrics?format=prom` renders everything in registration order.
+//! The JSON shape is produced by each source's own `snapshot()` untouched,
+//! so existing scrapers and golden tests keep working byte for byte.
+//!
+//! Histogram exports carry the exact `sum`/`count` (and the derived mean as
+//! a companion `_mean` gauge) alongside the power-of-two buckets: bucketed
+//! quantiles overestimate by up to 2× (see `serve::metrics::Histogram`), so
+//! the mean is the only *exact* central tendency in the exposition and must
+//! never be dropped in favor of the quantiles.
+
+use crate::util::json::Json;
+use std::sync::{Arc, Mutex};
+
+/// A provider of metrics: its legacy JSON snapshot and its prom families.
+pub trait MetricSource: Send + Sync {
+    /// The source's pre-unification JSON shape, unchanged.
+    fn snapshot_json(&self) -> Json;
+    /// Prometheus families, fully named (e.g. `rcca_serve_requests_total`).
+    fn prom_families(&self) -> Vec<Family>;
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FamilyKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl FamilyKind {
+    fn as_str(self) -> &'static str {
+        match self {
+            FamilyKind::Counter => "counter",
+            FamilyKind::Gauge => "gauge",
+            FamilyKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One sample within a family: optional name suffix (`_bucket`, `_sum`,
+/// `_count` for histograms), label pairs, value.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub suffix: &'static str,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// One metric family: `# HELP` / `# TYPE` header plus its samples.
+#[derive(Debug, Clone)]
+pub struct Family {
+    pub name: String,
+    pub help: String,
+    pub kind: FamilyKind,
+    pub samples: Vec<Sample>,
+}
+
+/// Counter family with a single unlabeled sample.
+pub fn counter(name: &str, help: &str, value: u64) -> Family {
+    Family {
+        name: name.to_string(),
+        help: help.to_string(),
+        kind: FamilyKind::Counter,
+        samples: vec![Sample {
+            suffix: "",
+            labels: vec![],
+            value: value as f64,
+        }],
+    }
+}
+
+/// Gauge family with a single unlabeled sample.
+pub fn gauge(name: &str, help: &str, value: f64) -> Family {
+    Family {
+        name: name.to_string(),
+        help: help.to_string(),
+        kind: FamilyKind::Gauge,
+        samples: vec![Sample {
+            suffix: "",
+            labels: vec![],
+            value,
+        }],
+    }
+}
+
+/// Gauge family with one sample per `(label value, sample value)` pair.
+pub fn gauge_vec(name: &str, help: &str, label: &str, values: &[(String, f64)]) -> Family {
+    Family {
+        name: name.to_string(),
+        help: help.to_string(),
+        kind: FamilyKind::Gauge,
+        samples: values
+            .iter()
+            .map(|(lv, v)| Sample {
+                suffix: "",
+                labels: vec![(label.to_string(), lv.clone())],
+                value: *v,
+            })
+            .collect(),
+    }
+}
+
+/// A histogram flattened for export: cumulative `(le, count)` pairs ending
+/// with the `+Inf` bucket, plus exact sum/count and the derived mean.
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    /// Cumulative counts; `le = f64::INFINITY` for the overflow bucket.
+    pub buckets: Vec<(f64, u64)>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// Histogram family with per-sample base labels (one snapshot per label
+/// set — e.g. per-endpoint latency). Emits `_bucket`/`_sum`/`_count`.
+pub fn histogram_vec(
+    name: &str,
+    help: &str,
+    snaps: &[(Vec<(String, String)>, HistogramSnapshot)],
+) -> Family {
+    let mut samples = Vec::new();
+    for (labels, snap) in snaps {
+        for &(le, cumulative) in &snap.buckets {
+            let mut l = labels.clone();
+            l.push(("le".to_string(), fmt_le(le)));
+            samples.push(Sample {
+                suffix: "_bucket",
+                labels: l,
+                value: cumulative as f64,
+            });
+        }
+        samples.push(Sample {
+            suffix: "_sum",
+            labels: labels.clone(),
+            value: snap.sum,
+        });
+        samples.push(Sample {
+            suffix: "_count",
+            labels: labels.clone(),
+            value: snap.count as f64,
+        });
+    }
+    Family {
+        name: name.to_string(),
+        help: help.to_string(),
+        kind: FamilyKind::Histogram,
+        samples,
+    }
+}
+
+/// Unlabeled single-histogram convenience over [`histogram_vec`].
+pub fn histogram(name: &str, help: &str, snap: &HistogramSnapshot) -> Family {
+    histogram_vec(name, help, std::slice::from_ref(&(vec![], snap.clone())))
+}
+
+fn fmt_le(le: f64) -> String {
+    if le.is_infinite() {
+        "+Inf".to_string()
+    } else {
+        fmt_value(le)
+    }
+}
+
+/// Prometheus sample-value formatting: integral values without a fraction.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render families as Prometheus text exposition format (version 0.0.4).
+pub fn render_families(families: &[Family], out: &mut String) {
+    for f in families {
+        out.push_str(&format!("# HELP {} {}\n", f.name, f.help));
+        out.push_str(&format!("# TYPE {} {}\n", f.name, f.kind.as_str()));
+        for s in &f.samples {
+            out.push_str(&f.name);
+            out.push_str(s.suffix);
+            if !s.labels.is_empty() {
+                out.push('{');
+                for (i, (k, v)) in s.labels.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+                }
+                out.push('}');
+            }
+            out.push(' ');
+            out.push_str(&fmt_value(s.value));
+            out.push('\n');
+        }
+    }
+}
+
+/// The unified registry: named sources rendered together, in registration
+/// order. Registering a name twice replaces the earlier source (hot-swap).
+#[derive(Default)]
+pub struct MetricsRegistry {
+    sources: Mutex<Vec<(String, Arc<dyn MetricSource>)>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn register(&self, name: &str, source: Arc<dyn MetricSource>) {
+        let mut sources = self.sources.lock().unwrap();
+        if let Some(slot) = sources.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = source;
+        } else {
+            sources.push((name.to_string(), source));
+        }
+    }
+
+    /// `{source_name: legacy_snapshot, ...}` — each snapshot unchanged.
+    pub fn render_json(&self) -> Json {
+        let sources = self.sources.lock().unwrap();
+        let mut o = Json::obj();
+        for (name, src) in sources.iter() {
+            o.set(name, src.snapshot_json());
+        }
+        o
+    }
+
+    /// Full Prometheus text exposition across every registered source.
+    pub fn render_prom(&self) -> String {
+        let sources = self.sources.lock().unwrap();
+        let mut out = String::new();
+        for (_, src) in sources.iter() {
+            render_families(&src.prom_families(), &mut out);
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let names: Vec<String> = self
+            .sources
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, _)| n.clone())
+            .collect();
+        f.debug_struct("MetricsRegistry")
+            .field("sources", &names)
+            .finish()
+    }
+}
+
+/// Parse a prom text exposition back into `(name_with_labels, value)`
+/// pairs — a deliberately small reader used by round-trip tests and the
+/// trace CLI, not a full scraper.
+pub fn parse_prom(text: &str) -> Result<Vec<(String, f64)>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {}: no value separator: {line}", i + 1))?;
+        let v: f64 = value
+            .parse()
+            .map_err(|_| format!("line {}: bad value {value:?}", i + 1))?;
+        out.push((name.to_string(), v));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::jnum;
+
+    struct Fixed;
+    impl MetricSource for Fixed {
+        fn snapshot_json(&self) -> Json {
+            let mut o = Json::obj();
+            o.set("hits", jnum(7.0));
+            o
+        }
+        fn prom_families(&self) -> Vec<Family> {
+            vec![counter("rcca_test_hits", "hits", 7)]
+        }
+    }
+
+    #[test]
+    fn registry_renders_both_shapes_and_replaces_by_name() {
+        let reg = MetricsRegistry::new();
+        reg.register("test", Arc::new(Fixed));
+        reg.register("test", Arc::new(Fixed)); // replace, not duplicate
+        let json = reg.render_json();
+        assert_eq!(
+            json.get("test").unwrap().get("hits").unwrap().as_usize(),
+            Some(7)
+        );
+        let prom = reg.render_prom();
+        assert_eq!(prom.matches("rcca_test_hits 7").count(), 1, "{prom}");
+        assert!(prom.contains("# TYPE rcca_test_hits counter"));
+    }
+
+    #[test]
+    fn histogram_family_emits_cumulative_buckets_and_exact_sum() {
+        let snap = HistogramSnapshot {
+            buckets: vec![(1.0, 2), (4.0, 5), (f64::INFINITY, 6)],
+            sum: 23.0,
+            count: 6,
+        };
+        let fam = histogram("rcca_test_lat", "lat", &snap);
+        let mut text = String::new();
+        render_families(&[fam], &mut text);
+        assert!(text.contains("rcca_test_lat_bucket{le=\"1\"} 2"), "{text}");
+        assert!(text.contains("rcca_test_lat_bucket{le=\"4\"} 5"), "{text}");
+        assert!(text.contains("rcca_test_lat_bucket{le=\"+Inf\"} 6"), "{text}");
+        assert!(text.contains("rcca_test_lat_sum 23"), "{text}");
+        assert!(text.contains("rcca_test_lat_count 6"), "{text}");
+        assert!((snap.mean() - 23.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_prom_roundtrips_rendered_values() {
+        let fams = vec![
+            counter("rcca_a_total", "a", 41),
+            gauge_vec(
+                "rcca_dir",
+                "per direction",
+                "direction",
+                &[("0".to_string(), 0.5), ("1".to_string(), -0.25)],
+            ),
+        ];
+        let mut text = String::new();
+        render_families(&fams, &mut text);
+        let parsed = parse_prom(&text).unwrap();
+        assert!(parsed.contains(&("rcca_a_total".to_string(), 41.0)));
+        assert!(parsed.contains(&("rcca_dir{direction=\"0\"}".to_string(), 0.5)));
+        assert!(parsed.contains(&("rcca_dir{direction=\"1\"}".to_string(), -0.25)));
+    }
+}

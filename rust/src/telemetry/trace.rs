@@ -1,0 +1,230 @@
+//! Reading exported JSONL traces back: filter, and render a span tree with
+//! wall/CPU timings — the library half of the `repro trace` CLI.
+
+use crate::util::json::{parse, Json};
+use std::path::Path;
+
+/// One span/event parsed back from a JSONL trace line.
+#[derive(Debug, Clone)]
+pub struct TraceSpan {
+    pub kind: String,
+    pub id: u64,
+    pub parent: u64,
+    pub name: String,
+    pub thread: u64,
+    pub start_ns: u64,
+    pub wall_ns: u64,
+    pub cpu_ns: u64,
+    pub attrs: Json,
+}
+
+/// A parsed trace file: spans in file order plus the footer's drop count.
+#[derive(Debug)]
+pub struct TraceFile {
+    pub spans: Vec<TraceSpan>,
+    pub dropped: u64,
+}
+
+/// Read a JSONL trace written by `recorder::export_jsonl`. Unknown kinds
+/// are an error (fail closed, same policy as the audit ledger) so a
+/// corrupted or foreign file is reported instead of half-rendered.
+pub fn read_jsonl(path: &Path) -> Result<TraceFile, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read trace {}: {e}", path.display()))?;
+    let mut spans = Vec::new();
+    let mut dropped = 0u64;
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let doc = parse(line).map_err(|e| format!("trace line {}: {e}", i + 1))?;
+        let kind = doc
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| format!("trace line {}: missing kind", i + 1))?;
+        match kind {
+            "span" | "event" => {
+                let num = |key: &str| -> Result<u64, String> {
+                    doc.get(key)
+                        .and_then(|v| v.as_f64())
+                        .map(|v| v as u64)
+                        .ok_or_else(|| format!("trace line {}: missing {key}", i + 1))
+                };
+                spans.push(TraceSpan {
+                    kind: kind.to_string(),
+                    id: num("id")?,
+                    parent: num("parent")?,
+                    name: doc
+                        .get("name")
+                        .and_then(|n| n.as_str())
+                        .ok_or_else(|| format!("trace line {}: missing name", i + 1))?
+                        .to_string(),
+                    thread: num("thread")?,
+                    start_ns: num("start_ns")?,
+                    wall_ns: num("wall_ns")?,
+                    cpu_ns: num("cpu_ns")?,
+                    attrs: doc.get("attrs").cloned().unwrap_or_else(Json::obj),
+                });
+            }
+            "trace" => {
+                dropped = doc.get("dropped").and_then(|d| d.as_f64()).unwrap_or(0.0) as u64;
+            }
+            other => return Err(format!("trace line {}: unknown kind {other:?}", i + 1)),
+        }
+    }
+    Ok(TraceFile { spans, dropped })
+}
+
+fn fmt_ns(ns: u64) -> String {
+    let s = ns as f64 / 1e9;
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+fn render_line(s: &TraceSpan, depth: usize, out: &mut String) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+    if s.kind == "event" {
+        out.push_str(&format!("! {} [{}]", s.name, s.id));
+    } else {
+        out.push_str(&format!(
+            "{} [{}] wall={} cpu={}",
+            s.name,
+            s.id,
+            fmt_ns(s.wall_ns),
+            fmt_ns(s.cpu_ns)
+        ));
+    }
+    out.push_str(&format!(" t{}", s.thread));
+    if !matches!(&s.attrs, Json::Obj(m) if m.is_empty()) {
+        out.push(' ');
+        out.push_str(&s.attrs.to_string_compact());
+    }
+    out.push('\n');
+}
+
+/// Render the selected spans as an indented tree (start-time order within
+/// each level). `last` keeps only the N most recent spans (0 = all);
+/// `name_filter` keeps spans whose name contains the substring, plus all
+/// their ancestors so the tree stays connected.
+pub fn render_tree(trace: &TraceFile, last: usize, name_filter: Option<&str>) -> String {
+    let mut spans: Vec<&TraceSpan> = trace.spans.iter().collect();
+    spans.sort_by_key(|s| (s.start_ns, s.id));
+    if let Some(pat) = name_filter {
+        let by_id: std::collections::BTreeMap<u64, &TraceSpan> =
+            spans.iter().map(|s| (s.id, *s)).collect();
+        let mut keep = std::collections::BTreeSet::new();
+        for s in &spans {
+            if s.name.contains(pat) {
+                // Keep the match and walk its ancestry to the root.
+                let mut cur = Some(*s);
+                while let Some(c) = cur {
+                    if !keep.insert(c.id) {
+                        break;
+                    }
+                    cur = by_id.get(&c.parent).copied();
+                }
+            }
+        }
+        spans.retain(|s| keep.contains(&s.id));
+    }
+    if last > 0 && spans.len() > last {
+        let cut = spans.len() - last;
+        spans.drain(..cut);
+    }
+    let ids: std::collections::BTreeSet<u64> = spans.iter().map(|s| s.id).collect();
+    let mut children: std::collections::BTreeMap<u64, Vec<&TraceSpan>> =
+        std::collections::BTreeMap::new();
+    let mut roots: Vec<&TraceSpan> = Vec::new();
+    for s in &spans {
+        if s.parent != 0 && ids.contains(&s.parent) {
+            children.entry(s.parent).or_default().push(s);
+        } else {
+            roots.push(s);
+        }
+    }
+    let mut out = String::new();
+    // Iterative DFS to keep arbitrarily deep traces off the call stack.
+    let mut stack: Vec<(&TraceSpan, usize)> = roots.into_iter().rev().map(|s| (s, 0)).collect();
+    while let Some((s, depth)) = stack.pop() {
+        render_line(s, depth, &mut out);
+        if let Some(kids) = children.get(&s.id) {
+            for k in kids.iter().rev() {
+                stack.push((k, depth + 1));
+            }
+        }
+    }
+    if trace.dropped > 0 {
+        out.push_str(&format!(
+            "({} older spans dropped by the flight recorder ring)\n",
+            trace.dropped
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::recorder::{RecordKind, SpanRecord, Trace};
+
+    fn rec(id: u64, parent: u64, name: &'static str, start_ns: u64) -> SpanRecord {
+        SpanRecord {
+            kind: RecordKind::Span,
+            id,
+            parent,
+            name,
+            thread: 1,
+            start_ns,
+            wall_ns: 10,
+            cpu_ns: 8,
+            attrs: vec![("shard", 2usize.into())],
+        }
+    }
+
+    #[test]
+    fn written_trace_reads_back_and_renders() {
+        let dir = std::env::temp_dir().join("rcca_telemetry_trace_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("t.jsonl");
+        let trace = Trace {
+            spans: vec![rec(1, 0, "fit", 0), rec(2, 1, "pass", 1), rec(3, 2, "shard_task", 2)],
+            dropped: 4,
+        };
+        trace.write_jsonl(&path).unwrap();
+        let back = read_jsonl(&path).unwrap();
+        assert_eq!(back.spans.len(), 3);
+        assert_eq!(back.dropped, 4);
+        let tree = render_tree(&back, 0, None);
+        let fit_at = tree.find("fit [1]").unwrap();
+        let pass_at = tree.find("  pass [2]").unwrap();
+        let task_at = tree.find("    shard_task [3]").unwrap();
+        assert!(fit_at < pass_at && pass_at < task_at, "{tree}");
+        assert!(tree.contains("4 older spans dropped"), "{tree}");
+        // Name filtering keeps ancestors so the tree stays rooted.
+        let filtered = render_tree(&back, 0, Some("shard"));
+        assert!(filtered.contains("fit [1]"), "{filtered}");
+        assert!(filtered.contains("shard_task [3]"), "{filtered}");
+        assert!(!filtered.contains("\"pass\""), "{filtered}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_kind_fails_closed() {
+        let dir = std::env::temp_dir().join("rcca_telemetry_trace_bad");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"kind\":\"mystery\"}\n").unwrap();
+        let err = read_jsonl(&path).unwrap_err();
+        assert!(err.contains("unknown kind"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,260 @@
+//! Integration tests for `rcca::telemetry`: cross-thread span parenting
+//! under concurrent shard-style tasks, ring-buffer wraparound accounting,
+//! prom-text/JSON agreement, and the serve `GET /metrics?format=prom`
+//! endpoint.
+//!
+//! The flight recorder is process-global, so every test that installs it —
+//! or drives a server whose instrumentation would record into it — holds
+//! `recorder_lock()` to serialize against the others in this binary.
+
+use rcca::api::{Cca, Engine, FittedModel};
+use rcca::data::synthparl::{SynthParl, SynthParlConfig};
+use rcca::data::TwoViewChunk;
+use rcca::serve::{HttpClient, ServeMetrics, Server, ServerConfig};
+use rcca::telemetry::{self, AttrValue, MetricsRegistry, SpanRecord};
+use rcca::util::json::parse;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+fn recorder_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn attr_u64(rec: &SpanRecord, key: &str) -> Option<u64> {
+    rec.attrs.iter().find(|(k, _)| *k == key).and_then(|(_, v)| match v {
+        AttrValue::U64(v) => Some(*v),
+        _ => None,
+    })
+}
+
+#[test]
+fn concurrent_shard_tasks_keep_parent_links_intact() {
+    let _g = recorder_lock();
+    telemetry::install(1024);
+    let root_id;
+    {
+        let mut root = telemetry::span("tt_pass");
+        root.attr("shards", 4usize);
+        root_id = root.id();
+        assert_ne!(root_id, 0, "installed recorder must arm spans");
+        let mut handles = Vec::new();
+        for shard in 0..4usize {
+            handles.push(std::thread::spawn(move || {
+                let mut task = telemetry::span_child_of("tt_task", root_id);
+                task.attr("shard", shard);
+                // Same-thread children must nest under the task via the
+                // thread-local stack, not under the cross-thread parent.
+                {
+                    let _load = telemetry::span("tt_load");
+                }
+                {
+                    let _engine = telemetry::span("tt_engine");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+    telemetry::disable();
+    let trace = telemetry::drain();
+
+    let by_name = |name: &str| -> Vec<&SpanRecord> {
+        trace.spans.iter().filter(|s| s.name == name).collect()
+    };
+    let roots = by_name("tt_pass");
+    assert_eq!(roots.len(), 1);
+    assert_eq!(roots[0].id, root_id);
+    assert_eq!(roots[0].parent, 0, "top-level span is a root");
+
+    let tasks = by_name("tt_task");
+    assert_eq!(tasks.len(), 4);
+    let mut shards: Vec<u64> = tasks
+        .iter()
+        .map(|t| {
+            assert_eq!(t.parent, root_id, "task parented across threads");
+            attr_u64(t, "shard").expect("shard attr")
+        })
+        .collect();
+    shards.sort_unstable();
+    assert_eq!(shards, vec![0, 1, 2, 3]);
+
+    for phase in ["tt_load", "tt_engine"] {
+        let spans = by_name(phase);
+        assert_eq!(spans.len(), 4, "{phase}");
+        for s in spans {
+            let task = tasks
+                .iter()
+                .find(|t| t.id == s.parent)
+                .unwrap_or_else(|| panic!("{phase} [{}] parent {} is no task", s.id, s.parent));
+            assert_eq!(
+                s.thread, task.thread,
+                "{phase} nests on the thread that opened its task"
+            );
+            assert!(s.start_ns >= task.start_ns, "{phase} starts inside its task");
+        }
+    }
+}
+
+#[test]
+fn ring_wraparound_drops_oldest_first_with_explicit_counter() {
+    let _g = recorder_lock();
+    telemetry::install(4);
+    for i in 0..10u64 {
+        let mut s = telemetry::span("tt_wrap");
+        s.attr("i", i);
+    }
+    telemetry::disable();
+    let trace = telemetry::drain();
+    let wraps: Vec<u64> = trace
+        .spans
+        .iter()
+        .filter(|s| s.name == "tt_wrap")
+        .map(|s| attr_u64(s, "i").expect("i attr"))
+        .collect();
+    assert_eq!(wraps, vec![6, 7, 8, 9], "survivors are the newest, oldest dropped first");
+    assert_eq!(trace.dropped, 6, "every eviction is counted, never silent");
+    // A second drain is empty: export consumed both the spans and the count.
+    let again = telemetry::drain();
+    assert!(again.spans.iter().all(|s| s.name != "tt_wrap"));
+    assert_eq!(again.dropped, 0);
+}
+
+#[test]
+fn prom_text_round_trips_json_counter_values() {
+    // Local registry + local ServeMetrics: no global recorder involved.
+    let m = Arc::new(ServeMetrics::new());
+    m.add(&m.requests_total, 41);
+    m.add(&m.rows_transformed, 120);
+    m.add(&m.drift_alerts, 2);
+    m.latency_us.observe(5);
+    m.latency_us.observe(9);
+    m.set_drift_per_direction(&[0.5, -0.25]);
+    let reg = MetricsRegistry::new();
+    reg.register("serve", Arc::clone(&m));
+
+    let json = reg.render_json();
+    let serve = json.get("serve").unwrap();
+    let text = reg.render_prom();
+    let parsed = telemetry::parse_prom(&text).unwrap();
+    let value = |name: &str| -> f64 {
+        parsed
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("{name} missing from:\n{text}"))
+            .1
+    };
+
+    for (prom, key) in [
+        ("rcca_serve_requests_total", "requests_total"),
+        ("rcca_serve_rows_transformed_total", "rows_transformed"),
+        ("rcca_serve_drift_alerts_total", "drift_alerts"),
+    ] {
+        assert_eq!(value(prom), serve.get(key).unwrap().as_f64().unwrap(), "{prom}");
+    }
+    // Histogram: prom _count/_sum equal the JSON snapshot's exact values,
+    // and the _mean companion gauge is sum/count — not a bucket bound.
+    let lat = serve.get("latency_us").unwrap();
+    let lat_f = |key: &str| lat.get(key).unwrap().as_f64().unwrap();
+    assert_eq!(value("rcca_serve_latency_microseconds_count"), lat_f("count"));
+    assert_eq!(value("rcca_serve_latency_microseconds_sum"), lat_f("sum"));
+    assert_eq!(value("rcca_serve_latency_microseconds_mean"), 7.0);
+    // Per-direction drift is prom-only, labeled by direction index.
+    assert_eq!(value("rcca_serve_drift_per_direction{direction=\"0\"}"), 0.5);
+    assert_eq!(value("rcca_serve_drift_per_direction{direction=\"1\"}"), -0.25);
+    assert!(
+        serve.get("per_direction").is_none(),
+        "JSON snapshot shape stays frozen"
+    );
+}
+
+fn corpus(seed: u64) -> TwoViewChunk {
+    let d = SynthParl::generate(SynthParlConfig {
+        n: 200,
+        dims: 40,
+        topics: 4,
+        words_per_topic: 8,
+        background_words: 16,
+        mean_len: 6.0,
+        seed,
+        ..Default::default()
+    });
+    TwoViewChunk { a: d.a, b: d.b }
+}
+
+fn saved_model(dir: &PathBuf, chunk: &TwoViewChunk) -> PathBuf {
+    let mut eng = Engine::in_memory(chunk.clone());
+    let model: FittedModel = Cca::builder()
+        .k(3)
+        .oversample(8)
+        .power_iters(1)
+        .lambda(0.05, 0.05)
+        .seed(7)
+        .fit(&mut eng)
+        .unwrap();
+    let path = dir.join("model.json");
+    model.save(&path).unwrap();
+    path
+}
+
+#[test]
+fn metrics_endpoint_negotiates_json_and_prom() {
+    let _g = recorder_lock();
+    let dir = std::env::temp_dir().join("rcca_telemetry_prom_endpoint");
+    let _ = std::fs::remove_dir_all(&dir);
+    let model_path = saved_model(&dir, &corpus(91));
+    let server = Server::bind(&model_path, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let handle = server.handle();
+    let thread = std::thread::spawn(move || server.run());
+    let mut c = HttpClient::connect(handle.addr()).unwrap();
+
+    let (status, _) = c.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+
+    // Default and explicit JSON: the pre-telemetry shape, byte-compatible.
+    let (status, body) = c.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    let json = parse(&body).unwrap();
+    let json_requests = json.get("requests_total").unwrap().as_f64().unwrap();
+    assert!(json.get("generation").is_some());
+    assert!(json.get("batcher_queued").is_some());
+    let (status, body2) = c.get("/metrics?format=json").unwrap();
+    assert_eq!(status, 200);
+    let json2 = parse(&body2).unwrap();
+    assert!(json2.get("requests_total").unwrap().as_f64().unwrap() > json_requests);
+
+    // Prom exposition: valid text format that parses and carries the same
+    // counters, the per-endpoint SLO gauges, and the server-level gauges.
+    let (status, prom) = c.get("/metrics?format=prom").unwrap();
+    assert_eq!(status, 200);
+    assert!(!prom.is_empty());
+    assert!(prom.contains("# TYPE rcca_serve_requests_total counter"), "{prom}");
+    let parsed = telemetry::parse_prom(&prom).unwrap();
+    let value = |name: &str| -> f64 {
+        parsed
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("{name} missing from:\n{prom}"))
+            .1
+    };
+    assert!(value("rcca_serve_requests_total") >= json_requests);
+    assert!(value("rcca_serve_endpoint_requests_total{endpoint=\"metrics\"}") >= 2.0);
+    assert!(value("rcca_serve_endpoint_requests_total{endpoint=\"healthz\"}") >= 1.0);
+    let p99 = "rcca_serve_endpoint_latency_p99_microseconds{endpoint=\"metrics\"}";
+    assert!(parsed.iter().any(|(n, _)| n == p99));
+    assert_eq!(value("rcca_serve_model_generation"), 1.0);
+    assert!(value("rcca_serve_batcher_queued") >= 0.0);
+
+    // Unknown format is a typed 400, not a silent fallback.
+    let (status, body) = c.get("/metrics?format=xml").unwrap();
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("unknown metrics format"), "{body}");
+
+    drop(c);
+    handle.shutdown();
+    thread.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
