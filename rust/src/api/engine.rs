@@ -149,7 +149,8 @@ impl Engine {
     /// (`repro worker`). The workers report the dataset they serve, so no
     /// local shard access is needed on the driver.
     pub fn cluster(addrs: &[String], config: ClusterConfig) -> Result<Engine, ApiError> {
-        let pass = ClusterPass::connect(addrs, config).map_err(ApiError::Engine)?;
+        let pass =
+            ClusterPass::connect(addrs, config).map_err(|e| ApiError::Engine(e.to_string()))?;
         let metrics = Arc::clone(&pass.metrics);
         let ledger = pass.ledger();
         Ok(Engine {
@@ -220,7 +221,9 @@ impl Engine {
     ///       & prefetch=N & io-threads=N & prefetch-mb=N   (out-of-core)
     /// cluster:<addr>,<addr>,...[?copts]    driver over running workers
     /// copts: chunk=N & retries=N & hb-timeout-ms=N & connect-timeout-ms=N
-    ///        & prefetch=N & io-threads=N
+    ///        & connect-attempts=N & prefetch=N & io-threads=N
+    ///        & replication=N & ckpt=<path> & resume=<path>
+    ///        & listen=<host:port> & chaos=<plan>
     /// ```
     ///
     /// Examples: `native:work/shards?workers=4&chunk=256`,
@@ -304,11 +307,23 @@ impl Engine {
                         config.connect_timeout =
                             Duration::from_millis(val.parse().map_err(|_| bad(key))?)
                     }
+                    "connect-attempts" => {
+                        config.connect_attempts = val.parse().map_err(|_| bad(key))?
+                    }
+                    "replication" => config.replication = val.parse().map_err(|_| bad(key))?,
+                    "ckpt" => config.checkpoint = Some(PathBuf::from(val)),
+                    "resume" => config.resume = Some(PathBuf::from(val)),
+                    "listen" => config.listen = Some(val.to_string()),
+                    "chaos" => {
+                        config.chaos = crate::cluster::ChaosPlan::parse(val)
+                            .map_err(ApiError::EngineSpec)?
+                    }
                     other => {
                         return Err(ApiError::EngineSpec(format!(
                             "unknown cluster option '{other}' (expected \
                              chunk|retries|prefetch|io-threads|hb-timeout-ms|\
-                             connect-timeout-ms)"
+                             connect-timeout-ms|connect-attempts|replication|\
+                             ckpt|resume|listen|chaos)"
                         )))
                     }
                 }
@@ -442,7 +457,7 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let mut w = ShardWriter::create(&dir, 60).unwrap();
         w.write_dataset(&chunk.a, &chunk.b).unwrap();
-        let mut worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
         let addr = worker.local_addr();
         std::thread::spawn(move || {
             let _ = worker.serve_one();
@@ -565,7 +580,9 @@ mod tests {
             "cluster:127.0.0.1:1?bogus=1",
             "cluster:127.0.0.1:1?chunk=abc",
             "cluster:127.0.0.1:1?prefetch=x",
-            "cluster:127.0.0.1:1?connect-timeout-ms=200",
+            "cluster:127.0.0.1:1?replication=two",
+            "cluster:127.0.0.1:1?chaos=explode-now",
+            "cluster:127.0.0.1:1?connect-timeout-ms=200&connect-attempts=1",
         ] {
             let err = Engine::from_spec(bad).unwrap_err();
             assert!(

@@ -1,0 +1,149 @@
+//! Deterministic fault injection for the cluster: a seeded, declarative
+//! plan of *when* to misbehave, shared by tests, CI drills, and the
+//! `--chaos` flags on `repro worker` and `repro fit`.
+//!
+//! Chaos here is never random at run time: every fault fires at an exact,
+//! pre-declared point (a pass index, a fixed delay), so a chaos run is as
+//! reproducible as a clean one — which is what lets CI assert *bitwise*
+//! equality between a fit that survived injected failures and an
+//! uninterrupted reference fit. The `seed` key exists so future
+//! probabilistic extensions stay deterministic; today it only labels the
+//! plan.
+//!
+//! Spec grammar (comma-separated `key[=value]` pairs):
+//!
+//! ```text
+//! kill-at-pass=N      worker: exit(9) after sending its first partial of
+//!                     pass N (no goodbye — the driver sees a dead peer)
+//! drop-heartbeats=N   worker: stop echoing heartbeats from pass N onward
+//!                     (the hung-process failure mode, driving the
+//!                     driver's heartbeat-timeout burial)
+//! delay-partial=MS    worker: sleep MS milliseconds before each partial
+//!                     (a straggler; must never change results)
+//! die-after-pass=N    driver: halt with an error right after pass N is
+//!                     reduced (and checkpointed, when a checkpoint path
+//!                     is configured) — the crash `--resume` recovers from
+//! torn-checkpoint     driver: truncate the checkpoint file after every
+//!                     write, exercising the fail-closed torn-file path
+//! seed=N              label for the plan (reserved for future use)
+//! ```
+//!
+//! Unknown keys and malformed values are typed errors, not silent no-ops:
+//! a chaos drill that never fires is worse than one that fails loudly.
+
+/// A parsed, validated chaos plan. `Default` injects nothing.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChaosPlan {
+    /// Worker: crash (exit 9) after sending the first partial of this pass.
+    pub kill_at_pass: Option<u64>,
+    /// Worker: stop echoing heartbeats from this pass onward.
+    pub drop_heartbeats_from: Option<u64>,
+    /// Worker: sleep this long before sending each partial.
+    pub delay_partial_ms: u64,
+    /// Driver: halt with an error after reducing (and checkpointing) this
+    /// pass.
+    pub die_after_pass: Option<u64>,
+    /// Driver: truncate the checkpoint after each write (torn-file drill).
+    pub torn_checkpoint: bool,
+    /// Plan label; reserved so future probabilistic faults stay seeded.
+    pub seed: u64,
+}
+
+impl ChaosPlan {
+    /// No faults at all — the plan every config defaults to.
+    pub fn none() -> ChaosPlan {
+        ChaosPlan::default()
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        *self == ChaosPlan::default()
+    }
+
+    /// Parse a `key=value,key,...` spec. The empty string is the empty
+    /// plan, so CLI flags can default to `""`.
+    pub fn parse(spec: &str) -> Result<ChaosPlan, String> {
+        let mut plan = ChaosPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = match part.split_once('=') {
+                Some((k, v)) => (k, Some(v)),
+                None => (part, None),
+            };
+            let num = |field: &str| -> Result<u64, String> {
+                val.ok_or_else(|| format!("chaos key '{field}' needs =<number>"))?
+                    .parse::<u64>()
+                    .map_err(|_| {
+                        format!("chaos key '{field}' has a bad value '{}'", val.unwrap_or(""))
+                    })
+            };
+            match key {
+                "kill-at-pass" => plan.kill_at_pass = Some(num(key)?),
+                "drop-heartbeats" => plan.drop_heartbeats_from = Some(num(key)?),
+                "delay-partial" => plan.delay_partial_ms = num(key)?,
+                "die-after-pass" => plan.die_after_pass = Some(num(key)?),
+                "torn-checkpoint" => {
+                    if val.is_some() {
+                        return Err("chaos key 'torn-checkpoint' takes no value".to_string());
+                    }
+                    plan.torn_checkpoint = true;
+                }
+                "seed" => plan.seed = num(key)?,
+                other => {
+                    return Err(format!(
+                        "unknown chaos key '{other}' (expected kill-at-pass|drop-heartbeats|\
+                         delay-partial|die-after-pass|torn-checkpoint|seed)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_the_empty_plan() {
+        let plan = ChaosPlan::parse("").unwrap();
+        assert!(plan.is_empty());
+        assert_eq!(plan, ChaosPlan::none());
+    }
+
+    #[test]
+    fn full_spec_parses() {
+        let plan = ChaosPlan::parse(
+            "kill-at-pass=1,drop-heartbeats=2,delay-partial=15,die-after-pass=1,\
+             torn-checkpoint,seed=42",
+        )
+        .unwrap();
+        assert_eq!(plan.kill_at_pass, Some(1));
+        assert_eq!(plan.drop_heartbeats_from, Some(2));
+        assert_eq!(plan.delay_partial_ms, 15);
+        assert_eq!(plan.die_after_pass, Some(1));
+        assert!(plan.torn_checkpoint);
+        assert_eq!(plan.seed, 42);
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn whitespace_and_empty_parts_are_tolerated() {
+        let plan = ChaosPlan::parse(" kill-at-pass=3 , ,seed=7 ").unwrap();
+        assert_eq!(plan.kill_at_pass, Some(3));
+        assert_eq!(plan.seed, 7);
+    }
+
+    #[test]
+    fn unknown_key_is_a_typed_error() {
+        let err = ChaosPlan::parse("explode-now=1").unwrap_err();
+        assert!(err.contains("unknown chaos key 'explode-now'"), "{err}");
+    }
+
+    #[test]
+    fn bad_values_are_typed_errors() {
+        assert!(ChaosPlan::parse("kill-at-pass").unwrap_err().contains("needs"));
+        assert!(ChaosPlan::parse("kill-at-pass=x").unwrap_err().contains("bad value"));
+        assert!(ChaosPlan::parse("torn-checkpoint=1").unwrap_err().contains("no value"));
+    }
+}

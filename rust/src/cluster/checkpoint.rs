@@ -1,0 +1,433 @@
+//! Driver checkpoint/resume: the pass ledger plus each pass's committed
+//! reduction, persisted after every completed pass so a restarted driver
+//! continues a fit from pass *k* instead of pass 0.
+//!
+//! The fit loop is deterministic given its seed — the only inter-pass
+//! state is (pass index, broadcast Q panels), and the broadcast for pass
+//! k+1 is a pure function of pass k's reduced output. So a checkpoint
+//! only needs, per completed pass: the pass index, the pass kind, and the
+//! *reduced output matrices*. On resume the driver replays these records
+//! in order — validating that each replayed pass's inputs hash to what
+//! the original run saw — and the solver code runs completely unchanged.
+//!
+//! File format (`RCKP` v1, little-endian, same defensive style as the
+//! shard files and the wire protocol — a torn or corrupted file is a
+//! typed error that **fails closed**, never a silent partial resume):
+//!
+//! ```text
+//! magic    "RCKP"             4 bytes
+//! version  u16                (currently 1)
+//! shards   u64  ┐
+//! rows     u64  │ dataset + chunking fingerprint: resuming against a
+//! dims_a   u64  │ different store or chunk grouping would silently
+//! dims_b   u64  │ change the arithmetic, so it is rejected as stale
+//! chunk    u64  ┘
+//! records  u32
+//!   per record: pass_index u64, kind u8, r u32, input_crc u32,
+//!               nmats u8, per mat (rows u32, cols u32, f64 data)
+//! crc32    u32                over everything after the magic
+//! ```
+//!
+//! Writes are tmp+rename atomic (the same idiom as
+//! [`crate::lifecycle`]'s manifest): a crash mid-write leaves the
+//! previous checkpoint intact, and a torn rename target fails CRC on
+//! load.
+
+use crate::coordinator::PassKind;
+use crate::data::shards::crc32;
+use crate::linalg::Mat;
+use std::fmt;
+use std::path::Path;
+
+pub const CKPT_MAGIC: &[u8; 4] = b"RCKP";
+pub const CKPT_VERSION: u16 = 1;
+
+/// Why a checkpoint could not be used. Every variant fails closed: the
+/// driver refuses to resume rather than guess.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// The file is truncated, corrupted, or not a checkpoint at all.
+    Torn(String),
+    /// The file is intact but belongs to a different fit (dataset shape,
+    /// chunking, or replayed inputs disagree with the live run).
+    Stale(String),
+    /// The file could not be read or written.
+    Io(String),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Torn(d) => {
+                write!(f, "torn checkpoint (refusing to resume): {d}")
+            }
+            CheckpointError::Stale(d) => {
+                write!(f, "stale checkpoint (refusing to resume): {d}")
+            }
+            CheckpointError::Io(d) => write!(f, "checkpoint io: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+/// What the checkpoint was taken against. A resume against any other
+/// fingerprint is [`CheckpointError::Stale`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fingerprint {
+    pub shards: u64,
+    pub rows: u64,
+    pub dims_a: u64,
+    pub dims_b: u64,
+    /// Chunking fixes the f32 accumulation grouping, so it is part of the
+    /// arithmetic's identity, not a tunable.
+    pub chunk_rows: u64,
+}
+
+/// One completed pass: its index in the fit, what kind it was, and the
+/// reduced output the driver committed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PassRecord {
+    pub pass_index: u64,
+    pub kind: PassKind,
+    pub r: u32,
+    /// CRC over the broadcast (Qa, Qb) f64 panels this pass consumed; a
+    /// replay whose live inputs hash differently is stale (the resumed
+    /// fit is not the checkpointed fit).
+    pub input_crc: u32,
+    pub outputs: Vec<Mat>,
+}
+
+/// A checkpoint: fingerprint plus the records of every completed pass,
+/// in pass order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub fingerprint: Fingerprint,
+    pub records: Vec<PassRecord>,
+}
+
+/// Hash the broadcast panels a pass consumes (dims + f64 LE payload of
+/// both Q matrices). This is how a resume proves the replayed prefix
+/// belongs to the live fit: same seed + same data ⇒ same panel bytes.
+pub fn input_crc(qa: &Mat, qb: &Mat) -> u32 {
+    let mut buf = Vec::with_capacity(32 + (qa.data.len() + qb.data.len()) * 8);
+    for m in [qa, qb] {
+        buf.extend_from_slice(&(m.rows as u64).to_le_bytes());
+        buf.extend_from_slice(&(m.cols as u64).to_le_bytes());
+        for v in &m.data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    crc32(&buf)
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
+        if self.pos + n > self.data.len() {
+            return Err(CheckpointError::Torn(format!(
+                "truncated at byte {} (wanted {n} more)",
+                self.pos
+            )));
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, CheckpointError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, CheckpointError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, CheckpointError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, CheckpointError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn mat(&mut self) -> Result<Mat, CheckpointError> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or_else(|| CheckpointError::Torn("matrix dims overflow".to_string()))?;
+        // Checkpoint outputs are (d×r) / (r×r) panels; anything bigger
+        // than the wire protocol's frame cap is a corrupted length.
+        if n > (1usize << 30) / 8 {
+            return Err(CheckpointError::Torn(format!("{rows}x{cols} matrix exceeds cap")));
+        }
+        let bytes = self.take(n * 8)?;
+        let data = bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+}
+
+impl Checkpoint {
+    pub fn new(fingerprint: Fingerprint) -> Checkpoint {
+        Checkpoint {
+            fingerprint,
+            records: Vec::new(),
+        }
+    }
+
+    /// Serialize to the on-disk format (magic + covered body + crc).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut covered = Vec::new();
+        covered.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        let fp = &self.fingerprint;
+        for v in [fp.shards, fp.rows, fp.dims_a, fp.dims_b, fp.chunk_rows] {
+            covered.extend_from_slice(&v.to_le_bytes());
+        }
+        covered.extend_from_slice(&(self.records.len() as u32).to_le_bytes());
+        for rec in &self.records {
+            covered.extend_from_slice(&rec.pass_index.to_le_bytes());
+            covered.push(rec.kind.tag());
+            covered.extend_from_slice(&rec.r.to_le_bytes());
+            covered.extend_from_slice(&rec.input_crc.to_le_bytes());
+            covered.push(rec.outputs.len() as u8);
+            for m in &rec.outputs {
+                covered.extend_from_slice(&(m.rows as u32).to_le_bytes());
+                covered.extend_from_slice(&(m.cols as u32).to_le_bytes());
+                for v in &m.data {
+                    covered.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        let crc = crc32(&covered);
+        let mut out = Vec::with_capacity(4 + covered.len() + 4);
+        out.extend_from_slice(CKPT_MAGIC);
+        out.extend_from_slice(&covered);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Decode and fully validate a checkpoint image. Any structural or
+    /// CRC problem is [`CheckpointError::Torn`] — fail closed.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint, CheckpointError> {
+        if bytes.len() < 4 + 2 + 4 {
+            return Err(CheckpointError::Torn(format!(
+                "{} bytes is shorter than any checkpoint",
+                bytes.len()
+            )));
+        }
+        if &bytes[..4] != CKPT_MAGIC {
+            return Err(CheckpointError::Torn(
+                "bad magic (not a cluster checkpoint)".to_string(),
+            ));
+        }
+        let covered = &bytes[4..bytes.len() - 4];
+        let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        let crc = crc32(covered);
+        if crc != stored {
+            return Err(CheckpointError::Torn(format!(
+                "crc mismatch: stored {stored:08x} computed {crc:08x}"
+            )));
+        }
+        let mut cur = Cursor {
+            data: covered,
+            pos: 0,
+        };
+        let version = cur.u16()?;
+        if version != CKPT_VERSION {
+            return Err(CheckpointError::Stale(format!(
+                "checkpoint version v{version}, this build writes v{CKPT_VERSION}"
+            )));
+        }
+        let fingerprint = Fingerprint {
+            shards: cur.u64()?,
+            rows: cur.u64()?,
+            dims_a: cur.u64()?,
+            dims_b: cur.u64()?,
+            chunk_rows: cur.u64()?,
+        };
+        let nrecords = cur.u32()? as usize;
+        let mut records = Vec::with_capacity(nrecords.min(1024));
+        let mut last_index = 0u64;
+        for i in 0..nrecords {
+            let pass_index = cur.u64()?;
+            if pass_index <= last_index {
+                return Err(CheckpointError::Torn(format!(
+                    "record {i}: pass index {pass_index} is not increasing"
+                )));
+            }
+            last_index = pass_index;
+            let kind_tag = cur.u8()?;
+            let kind = PassKind::from_tag(kind_tag).ok_or_else(|| {
+                CheckpointError::Torn(format!("record {i}: unknown pass kind tag {kind_tag}"))
+            })?;
+            let r = cur.u32()?;
+            let input_crc = cur.u32()?;
+            let nmats = cur.u8()? as usize;
+            let mut outputs = Vec::with_capacity(nmats);
+            for _ in 0..nmats {
+                outputs.push(cur.mat()?);
+            }
+            records.push(PassRecord {
+                pass_index,
+                kind,
+                r,
+                input_crc,
+                outputs,
+            });
+        }
+        if cur.pos != covered.len() {
+            return Err(CheckpointError::Torn(format!(
+                "trailing bytes ({} of {} consumed)",
+                cur.pos,
+                covered.len()
+            )));
+        }
+        Ok(Checkpoint {
+            fingerprint,
+            records,
+        })
+    }
+
+    /// Load and validate a checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint, CheckpointError> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| CheckpointError::Io(format!("read {}: {e}", path.display())))?;
+        Checkpoint::decode(&bytes)
+    }
+
+    /// Persist atomically: write `<path>.tmp`, then rename over `path`.
+    /// A crash mid-write leaves the previous checkpoint untouched.
+    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| CheckpointError::Io(format!("mkdir {}: {e}", parent.display())))?;
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.encode())
+            .map_err(|e| CheckpointError::Io(format!("write {}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| CheckpointError::Io(format!("rename {} -> {}: {e}", tmp.display(), path.display())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample() -> Checkpoint {
+        let mut rng = Rng::new(11);
+        Checkpoint {
+            fingerprint: Fingerprint {
+                shards: 7,
+                rows: 420,
+                dims_a: 48,
+                dims_b: 48,
+                chunk_rows: 60,
+            },
+            records: vec![
+                PassRecord {
+                    pass_index: 1,
+                    kind: PassKind::Power,
+                    r: 4,
+                    input_crc: 0xdead_beef,
+                    outputs: vec![Mat::randn(48, 4, &mut rng), Mat::randn(48, 4, &mut rng)],
+                },
+                PassRecord {
+                    pass_index: 2,
+                    kind: PassKind::Final,
+                    r: 4,
+                    input_crc: 0x0bad_f00d,
+                    outputs: vec![Mat::randn(4, 4, &mut rng); 3],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrips_bitwise() {
+        let ck = sample();
+        let bytes = ck.encode();
+        let back = Checkpoint::decode(&bytes).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn every_truncation_is_torn() {
+        let bytes = sample().encode();
+        for cut in 0..bytes.len() {
+            let err = Checkpoint::decode(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, CheckpointError::Torn(_)),
+                "cut {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn corruption_is_torn() {
+        let clean = sample().encode();
+        for pos in [0, 5, clean.len() / 2, clean.len() - 1] {
+            let mut bytes = clean.clone();
+            bytes[pos] ^= 0x20;
+            assert!(Checkpoint::decode(&bytes).is_err(), "byte {pos}");
+        }
+    }
+
+    #[test]
+    fn non_monotone_pass_indices_are_torn() {
+        let mut ck = sample();
+        ck.records[1].pass_index = 1; // duplicate of record 0
+        let err = Checkpoint::decode(&ck.encode()).unwrap_err();
+        assert!(matches!(err, CheckpointError::Torn(_)), "{err}");
+        assert!(err.to_string().contains("not increasing"), "{err}");
+    }
+
+    #[test]
+    fn save_is_atomic_and_loadable() {
+        let dir = std::env::temp_dir().join("rcca_ckpt_save");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("fit.ckpt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        // No tmp residue; the loaded checkpoint is bit-identical.
+        assert!(!path.with_extension("tmp").exists());
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        // Overwrite with a grown checkpoint; still atomic.
+        let mut grown = ck.clone();
+        grown.records.push(PassRecord {
+            pass_index: 3,
+            kind: PassKind::Trace,
+            r: 0,
+            input_crc: input_crc(&Mat::zeros(0, 0), &Mat::zeros(0, 0)),
+            outputs: vec![Mat::zeros(1, 2)],
+        });
+        grown.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().records.len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn input_crc_distinguishes_panels() {
+        let mut rng = Rng::new(3);
+        let qa = Mat::randn(8, 2, &mut rng);
+        let qb = Mat::randn(8, 2, &mut rng);
+        let same = input_crc(&qa, &qb);
+        assert_eq!(same, input_crc(&qa, &qb));
+        assert_ne!(same, input_crc(&qb, &qa), "order must matter");
+        let mut qa2 = qa.clone();
+        qa2.data[0] += 1e-9;
+        assert_ne!(same, input_crc(&qa2, &qb), "any bit change must show");
+    }
+
+    #[test]
+    fn missing_file_is_io_not_torn() {
+        let err = Checkpoint::load(Path::new("/nonexistent/rcca/fit.ckpt")).unwrap_err();
+        assert!(matches!(err, CheckpointError::Io(_)), "{err}");
+    }
+}

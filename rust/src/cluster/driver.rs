@@ -9,14 +9,26 @@
 //! that shard's retry budget and the shard is re-dispatched with the
 //! failing worker excluded; a worker that dies (connection drop or
 //! heartbeat timeout) has its whole partition redistributed over the
-//! survivors mid-pass.
+//! surviving *holders* of each shard mid-pass.
+//!
+//! Elasticity: with [`ClusterConfig::listen`] set, an acceptor admits
+//! workers that dial in mid-job (`repro worker --join`); the partition is
+//! recomputed at every pass start as a pure function of (membership,
+//! holdings), so new capacity absorbs shards on the next round and any
+//! join timing yields the same bits. With [`ClusterConfig::checkpoint`]
+//! set, each completed pass's reduced output is persisted atomically
+//! ([`super::checkpoint`]); a restarted driver replays the completed
+//! prefix from [`ClusterConfig::resume`] without spending new network
+//! rounds, and rejects stale or torn files closed.
 //!
 //! Determinism: partials are buffered and reduced in shard-index order, so
 //! a cluster fit is bit-for-bit reproducible regardless of worker count,
-//! scheduling, or crash/recovery history — and bit-identical to the
-//! in-process [`crate::coordinator::ShardedPass`] with one pool worker
-//! (whose FIFO pool reduces in the same shard order).
+//! scheduling, join timing, or crash/recovery history — and bit-identical
+//! to the in-process [`crate::coordinator::ShardedPass`] with one pool
+//! worker (whose FIFO pool reduces in the same shard order).
 
+use super::chaos::ChaosPlan;
+use super::checkpoint::{self, Checkpoint, CheckpointError, Fingerprint, PassRecord};
 use super::membership::{ClusterLedger, Membership};
 use super::proto::{Msg, SHARD_NONE};
 use super::transport::{self, Conn};
@@ -27,11 +39,69 @@ use crate::runtime::mat_to_f32;
 use crate::telemetry;
 use crate::util::json::Json;
 use crate::util::timer::Timer;
-use std::collections::BTreeMap;
-use std::net::{TcpStream, ToSocketAddrs};
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
+
+/// Aborts naming a shard the job does not have before the sender is
+/// buried for protocol abuse (each one is also charged to its failure
+/// count, so abusers surface in the ledger long before burial).
+const BOGUS_ABORT_LIMIT: u64 = 3;
+
+/// Why the driver could not run (or resume) a cluster fit. Typed so the
+/// CLI can distinguish "retry later" (connect exhaustion) from "operator
+/// must intervene" (stale/torn checkpoint — both fail closed).
+#[derive(Debug)]
+pub enum ClusterError {
+    /// Dialing a worker burned the whole deterministic backoff schedule.
+    ConnectExhausted {
+        addr: String,
+        attempts: usize,
+        last: String,
+    },
+    /// The `--resume` checkpoint belongs to a different fit (dataset
+    /// shape, chunking, or replayed inputs disagree).
+    StaleCheckpoint(String),
+    /// The `--resume` checkpoint is truncated or corrupted.
+    TornCheckpoint(String),
+    /// Everything else (handshake, protocol, membership).
+    Other(String),
+}
+
+impl fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClusterError::ConnectExhausted {
+                addr,
+                attempts,
+                last,
+            } => write!(f, "connect to {addr} exhausted {attempts} attempts: {last}"),
+            ClusterError::StaleCheckpoint(d) => {
+                write!(f, "stale checkpoint (refusing to resume): {d}")
+            }
+            ClusterError::TornCheckpoint(d) => {
+                write!(f, "torn checkpoint (refusing to resume): {d}")
+            }
+            ClusterError::Other(d) => write!(f, "{d}"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+impl From<CheckpointError> for ClusterError {
+    fn from(e: CheckpointError) -> ClusterError {
+        match e {
+            CheckpointError::Torn(d) => ClusterError::TornCheckpoint(d),
+            CheckpointError::Stale(d) => ClusterError::StaleCheckpoint(d),
+            CheckpointError::Io(d) => ClusterError::Other(format!("checkpoint io: {d}")),
+        }
+    }
+}
 
 /// Driver tunables; `Default` suits local clusters and tests.
 #[derive(Debug, Clone)]
@@ -49,8 +119,12 @@ pub struct ClusterConfig {
     /// exceed the worst-case single-shard compute time — workers answer
     /// control traffic between shard tasks, not between chunks.
     pub heartbeat_timeout: Duration,
-    /// Bound on connect + handshake per worker.
+    /// Bound on each connect try + the handshake per worker.
     pub connect_timeout: Duration,
+    /// Dial tries per worker before [`ClusterError::ConnectExhausted`]
+    /// (deterministic jitter-free backoff between tries; see
+    /// [`transport::backoff_schedule`]).
+    pub connect_attempts: usize,
     /// Out-of-core streaming on the workers (broadcast in
     /// [`Msg::AssignShards`]; perf-only — results are bitwise identical
     /// for every setting, and workers that cache their shards ignore it):
@@ -58,6 +132,20 @@ pub struct ClusterConfig {
     pub prefetch_depth: usize,
     /// Reader threads each worker feeds its prefetch queue with.
     pub io_threads: usize,
+    /// Replica ownership factor: each shard is placed in the local store
+    /// of this many workers (workers started with `--mirror-from` pull
+    /// what they are missing). 1 = no replication.
+    pub replication: usize,
+    /// Persist a checkpoint here after every completed pass.
+    pub checkpoint: Option<PathBuf>,
+    /// Resume from this checkpoint: completed passes replay from disk
+    /// (consuming no network rounds); stale/torn files are rejected.
+    pub resume: Option<PathBuf>,
+    /// Accept mid-job worker joins on this address (`host:port`, port 0
+    /// for ephemeral — see [`ClusterPass::listen_addr`]).
+    pub listen: Option<String>,
+    /// Driver-side fault injection (die-after-pass, torn-checkpoint).
+    pub chaos: ChaosPlan,
 }
 
 impl Default for ClusterConfig {
@@ -69,14 +157,36 @@ impl Default for ClusterConfig {
             heartbeat_interval: Duration::from_secs(1),
             heartbeat_timeout: Duration::from_secs(10),
             connect_timeout: Duration::from_secs(10),
+            connect_attempts: 4,
             prefetch_depth: stream.prefetch_depth,
             io_threads: stream.io_threads,
+            replication: 1,
+            checkpoint: None,
+            resume: None,
+            listen: None,
+            chaos: ChaosPlan::none(),
         }
     }
 }
 
 /// What a reader thread forwards: messages from, or the death of, worker i.
 type Inbound = (usize, Result<Msg, String>);
+
+/// A worker admitted by the join acceptor, handshake already complete.
+struct JoinedWorker {
+    writer: TcpStream,
+    conn: Conn,
+    addr: String,
+    have: Vec<u32>,
+}
+
+/// Why a (re)partition could not be broadcast.
+enum RepartitionError {
+    /// No live worker holds this shard — fail, don't misroute.
+    Orphan(usize),
+    /// Sending AssignShards to this worker failed (it is dead).
+    Send(usize, String),
+}
 
 /// Immutable context of the pass currently executing.
 struct PassCtx<'a> {
@@ -91,13 +201,23 @@ struct PassCtx<'a> {
 /// [`PassEngine`], so RandomizedCCA and Horst run unchanged on a cluster.
 pub struct ClusterPass {
     writers: Vec<TcpStream>,
+    /// Kept alive so mid-job joiners get reader threads feeding the same
+    /// channel (it also means `rx` never disconnects while we live).
+    tx: mpsc::Sender<Inbound>,
     rx: mpsc::Receiver<Inbound>,
+    join_rx: Option<mpsc::Receiver<JoinedWorker>>,
+    listen_addr: Option<SocketAddr>,
     members: Membership,
     ledger: Arc<ClusterLedger>,
     /// Last pass_id each worker's round counter has charged.
     rounds_counted: Vec<u64>,
     last_seen: Vec<Instant>,
     pinged: Vec<bool>,
+    /// Aborts naming nonexistent shards, per worker (protocol abuse).
+    bogus_aborts: Vec<u64>,
+    /// Last (shards, replicas) broadcast per worker — AssignShards is
+    /// resent only when a repartition actually changes a worker's view.
+    last_assign: Vec<Option<(Vec<u32>, Vec<u32>)>>,
     shards: usize,
     rows: usize,
     dims_a: usize,
@@ -107,24 +227,76 @@ pub struct ClusterPass {
     pass_id: u64,
     passes: usize,
     traces: Option<(f64, f64)>,
+    /// Grows by one record per completed pass when persistence is on.
+    checkpoint: Option<Checkpoint>,
+    /// Records still to replay before any live pass runs.
+    resume: VecDeque<PassRecord>,
 }
 
 impl ClusterPass {
     /// Connect to every worker, handshake, validate that they all serve
-    /// the same dataset, and broadcast the initial shard partition.
-    pub fn connect(addrs: &[String], config: ClusterConfig) -> Result<ClusterPass, String> {
+    /// the same dataset, load/validate any resume checkpoint (fail
+    /// closed), start the join acceptor, and broadcast the initial shard
+    /// partition + replica plan.
+    pub fn connect(addrs: &[String], config: ClusterConfig) -> Result<ClusterPass, ClusterError> {
         if addrs.is_empty() {
-            return Err("a cluster needs at least one worker address".to_string());
+            return Err(ClusterError::Other(
+                "a cluster needs at least one worker address".to_string(),
+            ));
         }
         let (tx, rx) = mpsc::channel::<Inbound>();
         let mut writers = Vec::with_capacity(addrs.len());
-        let info = match ClusterPass::connect_all(addrs, &config, &tx, &mut writers) {
-            Ok(info) => info,
+        let mut haves: Vec<Vec<u32>> = Vec::new();
+        let setup = ClusterPass::connect_all(addrs, &config, &tx, &mut writers, &mut haves)
+            .and_then(|info| {
+                let fp = Fingerprint {
+                    shards: info.0,
+                    rows: info.1,
+                    dims_a: info.2,
+                    dims_b: info.3,
+                    chunk_rows: config.chunk_rows as u64,
+                };
+                let mut resume = VecDeque::new();
+                let mut ck = config.checkpoint.as_ref().map(|_| Checkpoint::new(fp));
+                if let Some(path) = &config.resume {
+                    let loaded = Checkpoint::load(path)?;
+                    if loaded.fingerprint != fp {
+                        return Err(ClusterError::StaleCheckpoint(format!(
+                            "fingerprint mismatch: checkpoint {:?} vs cluster {fp:?}",
+                            loaded.fingerprint
+                        )));
+                    }
+                    resume = loaded.records.iter().cloned().collect();
+                    if let Some(ck) = &mut ck {
+                        ck.records = loaded.records;
+                    }
+                }
+                let mut join_rx = None;
+                let mut listen_addr = None;
+                if let Some(spec) = &config.listen {
+                    let listener = TcpListener::bind(spec).map_err(|e| {
+                        ClusterError::Other(format!("driver listen {spec}: {e}"))
+                    })?;
+                    listen_addr = Some(listener.local_addr().map_err(|e| {
+                        ClusterError::Other(format!("driver listen {spec}: {e}"))
+                    })?);
+                    let (jtx, jrx) = mpsc::channel();
+                    let timeout = config.connect_timeout;
+                    std::thread::Builder::new()
+                        .name("cluster-join".to_string())
+                        .spawn(move || ClusterPass::accept_joiners(listener, info, timeout, jtx))
+                        .map_err(|e| ClusterError::Other(format!("spawn acceptor: {e}")))?;
+                    join_rx = Some(jrx);
+                }
+                Ok((info, resume, ck, join_rx, listen_addr))
+            });
+        let (info, resume, ck, join_rx, listen_addr) = match setup {
+            Ok(x) => x,
             Err(e) => {
-                // Workers are single-connection: every stream already
-                // established must be shut down (which also unblocks its
-                // reader thread) or those workers stay wedged on a zombie
-                // connection that no ClusterPass Drop will ever close.
+                // Workers are effectively single-driver: every stream
+                // already established must be shut down (which also
+                // unblocks its reader thread) or those workers stay wedged
+                // on a zombie connection no ClusterPass Drop will close.
                 for w in &writers {
                     let _ = w.shutdown(std::net::Shutdown::Both);
                 }
@@ -133,15 +305,23 @@ impl ClusterPass {
         };
         let (shards, rows, dims_a, dims_b) = info;
         let mut members = Membership::new(addrs.len());
-        members.assign_round_robin(shards as usize);
+        for (w, have) in haves.iter().enumerate() {
+            members.set_holds(w, have, shards as usize);
+        }
+        let n = addrs.len();
         let mut pass = ClusterPass {
             writers,
+            tx,
             rx,
+            join_rx,
+            listen_addr,
             members,
             ledger: Arc::new(ClusterLedger::new(addrs)),
-            rounds_counted: vec![0; addrs.len()],
-            last_seen: vec![Instant::now(); addrs.len()],
-            pinged: vec![false; addrs.len()],
+            rounds_counted: vec![0; n],
+            last_seen: vec![Instant::now(); n],
+            pinged: vec![false; n],
+            bogus_aborts: vec![0; n],
+            last_assign: vec![None; n],
             shards: shards as usize,
             rows: rows as usize,
             dims_a: dims_a as usize,
@@ -151,98 +331,190 @@ impl ClusterPass {
             pass_id: 0,
             passes: 0,
             traces: None,
+            checkpoint: ck,
+            resume: resume.clone(),
         };
-        for w in 0..pass.writers.len() {
-            let assigned: Vec<u32> = pass.members.assigned(w).iter().map(|&s| s as u32).collect();
-            let msg = Msg::AssignShards {
-                chunk_rows: pass.config.chunk_rows as u32,
-                prefetch_depth: pass.config.prefetch_depth as u32,
-                io_threads: pass.config.io_threads as u32,
-                shards: assigned,
-            };
-            // On failure `pass` drops here, shutting every connection down.
-            transport::send(&mut pass.writers[w], &msg)
-                .map_err(|e| format!("assign shards to worker {w}: {e}"))?;
+        if !resume.is_empty() {
+            pass.ledger.record_event(
+                "resume",
+                format!(
+                    "loaded checkpoint with {} completed passes",
+                    resume.len()
+                ),
+            );
+        }
+        // On failure `pass` drops here, shutting every connection down.
+        match pass.repartition() {
+            Ok(()) => {}
+            Err(RepartitionError::Orphan(s)) => {
+                return Err(ClusterError::Other(format!("no live worker holds shard {s}")))
+            }
+            Err(RepartitionError::Send(w, e)) => {
+                return Err(ClusterError::Other(format!(
+                    "assign shards to worker {}: {e}",
+                    pass.addr(w)
+                )))
+            }
         }
         Ok(pass)
     }
 
-    /// Dial, handshake, and spawn a reader thread for every worker,
-    /// appending each established write half to `writers` as it goes (so
-    /// a mid-list failure leaves the caller holding every stream that
-    /// needs closing). Returns the validated common store shape.
+    /// Dial (with deterministic backoff), handshake, and spawn a reader
+    /// thread for every worker, appending each established write half to
+    /// `writers` as it goes (so a mid-list failure leaves the caller
+    /// holding every stream that needs closing). Returns the validated
+    /// common store shape; each worker's reported holdings land in
+    /// `haves`.
     fn connect_all(
         addrs: &[String],
         config: &ClusterConfig,
         tx: &mpsc::Sender<Inbound>,
         writers: &mut Vec<TcpStream>,
-    ) -> Result<(u64, u64, u64, u64), String> {
+        haves: &mut Vec<Vec<u32>>,
+    ) -> Result<(u64, u64, u64, u64), ClusterError> {
+        let oops = |d: String| ClusterError::Other(d);
         let mut info: Option<(u64, u64, u64, u64)> = None;
         for (i, addr) in addrs.iter().enumerate() {
-            let sock = addr
-                .to_socket_addrs()
-                .map_err(|e| format!("worker address '{addr}': {e}"))?
-                .next()
-                .ok_or_else(|| format!("worker address '{addr}' resolves to nothing"))?;
-            let stream = TcpStream::connect_timeout(&sock, config.connect_timeout)
-                .map_err(|e| format!("connect {addr}: {e}"))?;
+            let stream = transport::connect_with_backoff(
+                addr,
+                config.connect_attempts,
+                config.connect_timeout,
+            )
+            .map_err(|(attempts, last)| ClusterError::ConnectExhausted {
+                addr: addr.clone(),
+                attempts,
+                last,
+            })?;
             let _ = stream.set_nodelay(true);
             let read_half = stream
                 .try_clone()
-                .map_err(|e| format!("clone stream for {addr}: {e}"))?;
+                .map_err(|e| oops(format!("clone stream for {addr}: {e}")))?;
             let mut writer = stream;
             transport::send(&mut writer, &Msg::HelloDriver)
-                .map_err(|e| format!("hello to {addr}: {e}"))?;
+                .map_err(|e| oops(format!("hello to {addr}: {e}")))?;
             let mut conn = Conn::new(read_half);
             let hello = conn
                 .recv(Some(config.connect_timeout))
-                .map_err(|e| format!("handshake with {addr}: {e}"))?;
+                .map_err(|e| oops(format!("handshake with {addr}: {e}")))?;
             let this = match hello {
                 Msg::HelloWorker {
                     shards,
                     rows,
                     dims_a,
                     dims_b,
-                } => (shards, rows, dims_a, dims_b),
+                    have,
+                } => {
+                    haves.push(have);
+                    (shards, rows, dims_a, dims_b)
+                }
                 other => {
-                    return Err(format!("worker {addr} answered the handshake with {other:?}"))
+                    return Err(oops(format!(
+                        "worker {addr} answered the handshake with {other:?}"
+                    )))
                 }
             };
             match info {
                 None => info = Some(this),
                 Some(have) if have == this => {}
                 Some(have) => {
-                    return Err(format!(
+                    return Err(oops(format!(
                         "worker {addr} serves a different dataset: {this:?} vs {have:?} — every \
                          worker must point at the same shard directory (or a replica of it)"
-                    ));
+                    )));
                 }
             }
             let thread_tx = tx.clone();
             std::thread::Builder::new()
                 .name(format!("cluster-rx-{i}"))
-                .spawn(move || {
-                    loop {
-                        match conn.recv(None) {
-                            Ok(msg) => {
-                                if thread_tx.send((i, Ok(msg))).is_err() {
-                                    return; // driver gone
-                                }
-                            }
-                            Err(e) => {
-                                let _ = thread_tx.send((i, Err(e)));
-                                return;
-                            }
-                        }
-                    }
-                })
-                .map_err(|e| format!("spawn reader thread: {e}"))?;
+                .spawn(move || ClusterPass::pump(conn, i, thread_tx))
+                .map_err(|e| oops(format!("spawn reader thread: {e}")))?;
             writers.push(writer);
         }
         Ok(info.expect("at least one worker"))
     }
 
-    /// The shared per-worker ledger (rounds, shards, bytes, deaths).
+    /// Reader-thread body: forward worker `w`'s messages (or death) until
+    /// the driver goes away.
+    fn pump(mut conn: Conn, w: usize, tx: mpsc::Sender<Inbound>) {
+        loop {
+            match conn.recv(None) {
+                Ok(msg) => {
+                    if tx.send((w, Ok(msg))).is_err() {
+                        return; // driver gone
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send((w, Err(e)));
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Accept loop for mid-job joins: complete the same handshake the
+    /// dialing path uses (the driver still speaks first), validate the
+    /// dataset, and hand the connection to the driver thread for
+    /// admission at its next drain point.
+    fn accept_joiners(
+        listener: TcpListener,
+        expected: (u64, u64, u64, u64),
+        timeout: Duration,
+        jtx: mpsc::Sender<JoinedWorker>,
+    ) {
+        loop {
+            let (stream, peer) = match listener.accept() {
+                Ok(x) => x,
+                Err(_) => return,
+            };
+            match ClusterPass::handshake_joiner(stream, expected, timeout) {
+                Ok(j) => {
+                    if jtx.send(j).is_err() {
+                        return; // driver gone
+                    }
+                }
+                Err(e) => eprintln!("driver: rejected joiner {peer}: {e}"),
+            }
+        }
+    }
+
+    fn handshake_joiner(
+        stream: TcpStream,
+        expected: (u64, u64, u64, u64),
+        timeout: Duration,
+    ) -> Result<JoinedWorker, String> {
+        let peer = stream.peer_addr().map_err(|e| format!("peer_addr: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| format!("clone stream: {e}"))?;
+        let mut writer = stream;
+        transport::send(&mut writer, &Msg::HelloDriver)?;
+        let mut conn = Conn::new(read_half);
+        match conn.recv(Some(timeout))? {
+            Msg::HelloWorker {
+                shards,
+                rows,
+                dims_a,
+                dims_b,
+                have,
+            } => {
+                let this = (shards, rows, dims_a, dims_b);
+                if this != expected {
+                    return Err(format!("dataset mismatch: {this:?} vs {expected:?}"));
+                }
+                Ok(JoinedWorker {
+                    writer,
+                    conn,
+                    addr: peer.to_string(),
+                    have,
+                })
+            }
+            other => Err(format!("joiner answered the handshake with {other:?}")),
+        }
+    }
+
+    /// The shared per-worker ledger (rounds, shards, bytes, deaths, and
+    /// the join/death/resume/checkpoint audit trail).
     pub fn ledger(&self) -> Arc<ClusterLedger> {
         Arc::clone(&self.ledger)
     }
@@ -252,14 +524,136 @@ impl ClusterPass {
         self.ledger.to_json()
     }
 
-    /// Total pass rounds executed so far (== the pass ledger: one pass is
-    /// one network round).
+    /// Total *network* rounds executed so far. Replayed (resumed) passes
+    /// do not count: they consume no network round, which is exactly the
+    /// economy a checkpoint buys.
     pub fn rounds(&self) -> u64 {
-        self.pass_id
+        self.ledger.rounds.load(Ordering::Relaxed)
     }
 
-    fn addr(&self, w: usize) -> &str {
-        &self.ledger.workers[w].addr
+    /// Where the join acceptor listens, when [`ClusterConfig::listen`]
+    /// was set (resolves port 0 to the real ephemeral port).
+    pub fn listen_addr(&self) -> Option<SocketAddr> {
+        self.listen_addr
+    }
+
+    fn addr(&self, w: usize) -> String {
+        self.ledger.addr(w)
+    }
+
+    /// Admit every worker the join acceptor has queued. Safe mid-pass:
+    /// the joiner owns no shards until the next pass-start repartition,
+    /// but is immediately eligible as a reassignment target for shards it
+    /// already holds.
+    fn drain_joins(&mut self) {
+        let mut joined = Vec::new();
+        if let Some(jrx) = &self.join_rx {
+            while let Ok(j) = jrx.try_recv() {
+                joined.push(j);
+            }
+        }
+        for j in joined {
+            self.admit(j);
+        }
+    }
+
+    fn admit(&mut self, j: JoinedWorker) {
+        let w = self.writers.len();
+        let mut writer = j.writer;
+        // Configure the session (chunking fixes the arithmetic) before
+        // the worker can receive any RunPass.
+        let msg = Msg::AssignShards {
+            chunk_rows: self.config.chunk_rows as u32,
+            prefetch_depth: self.config.prefetch_depth as u32,
+            io_threads: self.config.io_threads as u32,
+            shards: Vec::new(),
+            replicas: Vec::new(),
+        };
+        if let Err(e) = transport::send(&mut writer, &msg) {
+            eprintln!("driver: joiner {} died during admission ({e}); dropped", j.addr);
+            return;
+        }
+        self.writers.push(writer);
+        let mw = self.members.add_worker();
+        debug_assert_eq!(mw, w);
+        self.members.set_holds(w, &j.have, self.shards);
+        self.ledger.add_worker(&j.addr);
+        self.rounds_counted.push(0);
+        self.last_seen.push(Instant::now());
+        self.pinged.push(false);
+        self.bogus_aborts.push(0);
+        self.last_assign.push(Some((Vec::new(), Vec::new())));
+        let thread_tx = self.tx.clone();
+        let conn = j.conn;
+        let _ = std::thread::Builder::new()
+            .name(format!("cluster-rx-{w}"))
+            .spawn(move || ClusterPass::pump(conn, w, thread_tx));
+        self.ledger.record_event(
+            "join",
+            format!("worker {} joined holding {} shards", j.addr, j.have.len()),
+        );
+        telemetry::event(
+            "cluster.join",
+            vec![("addr", j.addr.clone().into()), ("held", j.have.len().into())],
+        );
+        eprintln!("driver: worker {} joined the cluster", j.addr);
+    }
+
+    /// (Re)compute the shard partition + replica plan over the live
+    /// members and send [`Msg::AssignShards`] to every worker whose view
+    /// changed. The partition is a pure function of (membership,
+    /// holdings), so calling this at every pass start absorbs joiners
+    /// deterministically.
+    fn repartition(&mut self) -> Result<(), RepartitionError> {
+        self.members
+            .assign_round_robin(self.shards)
+            .map_err(RepartitionError::Orphan)?;
+        let replicas = if self.config.replication > 1 {
+            self.members.replica_plan(self.shards, self.config.replication)
+        } else {
+            vec![Vec::new(); self.members.len()]
+        };
+        for w in 0..self.members.len() {
+            if !self.members.is_alive(w) {
+                continue;
+            }
+            let assigned: Vec<u32> = self.members.assigned(w).iter().map(|&s| s as u32).collect();
+            let pair = (assigned, replicas[w].clone());
+            if self.last_assign[w].as_ref() == Some(&pair) {
+                continue;
+            }
+            let msg = Msg::AssignShards {
+                chunk_rows: self.config.chunk_rows as u32,
+                prefetch_depth: self.config.prefetch_depth as u32,
+                io_threads: self.config.io_threads as u32,
+                shards: pair.0.clone(),
+                replicas: pair.1.clone(),
+            };
+            transport::send(&mut self.writers[w], &msg)
+                .map_err(|e| RepartitionError::Send(w, e))?;
+            self.last_assign[w] = Some(pair);
+        }
+        Ok(())
+    }
+
+    /// Mark a worker dead outside any pass (no shards in flight yet) —
+    /// the repartition loop's failure path.
+    fn bury_quietly(&mut self, w: usize, reason: &str) {
+        if !self.members.is_alive(w) {
+            return;
+        }
+        eprintln!("driver: worker {} is down ({reason})", self.addr(w));
+        let _ = self.members.mark_dead(w);
+        let wl = self.ledger.worker(w);
+        wl.dead.store(true, Ordering::Relaxed);
+        wl.failures.fetch_add(1, Ordering::Relaxed);
+        self.metrics.add(&self.metrics.tasks_failed, 1);
+        self.ledger
+            .record_event("death", format!("worker {} died: {reason}", self.addr(w)));
+        telemetry::event(
+            "cluster.death",
+            vec![("addr", self.addr(w).into())],
+        );
     }
 
     /// Send one RunPass to worker `w` for `shard_list`. A send failure is
@@ -288,7 +682,7 @@ impl ClusterPass {
             Ok(()) => {
                 if self.rounds_counted[w] != ctx.pass_id {
                     self.rounds_counted[w] = ctx.pass_id;
-                    self.ledger.workers[w].rounds.fetch_add(1, Ordering::Relaxed);
+                    self.ledger.worker(w).rounds.fetch_add(1, Ordering::Relaxed);
                 }
                 Ok(())
             }
@@ -297,8 +691,8 @@ impl ClusterPass {
     }
 
     /// A worker died (connection drop, send failure, or heartbeat
-    /// timeout): redistribute its partition over the survivors and
-    /// re-dispatch whatever it still owed this pass.
+    /// timeout): redistribute its partition over the surviving holders
+    /// and re-dispatch whatever it still owed this pass.
     fn on_worker_down(
         &mut self,
         ctx: &PassCtx<'_>,
@@ -311,15 +705,24 @@ impl ClusterPass {
         }
         eprintln!("driver: worker {} is down ({reason}); redistributing", self.addr(w));
         let orphans = self.members.mark_dead(w);
-        self.ledger.workers[w].dead.store(true, Ordering::Relaxed);
-        self.ledger.workers[w].failures.fetch_add(1, Ordering::Relaxed);
+        let wl = self.ledger.worker(w);
+        wl.dead.store(true, Ordering::Relaxed);
+        wl.failures.fetch_add(1, Ordering::Relaxed);
         self.metrics.add(&self.metrics.tasks_failed, 1);
+        self.ledger
+            .record_event("death", format!("worker {} died: {reason}", self.addr(w)));
+        telemetry::event(
+            "cluster.death",
+            vec![("addr", self.addr(w).into()), ("pass_id", ctx.pass_id.into())],
+        );
         let mut batches: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
         for shard in orphans {
-            let target = self
-                .members
-                .reassign(shard)
-                .ok_or_else(|| anyhow::anyhow!("no live workers remain (last death: {reason})"))?;
+            let target = self.members.reassign(shard).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no live worker holds shard {shard} (last death: {reason}) — raise the \
+                     replication factor to survive this"
+                )
+            })?;
             if !progress.is_done(shard) {
                 anyhow::ensure!(
                     progress.record_failure(shard).is_some(),
@@ -364,12 +767,96 @@ impl ClusterPass {
         Ok(())
     }
 
-    /// Run one full pass: broadcast, collect with liveness tracking and
-    /// retries, reduce deterministically in shard order.
+    /// Replay the next checkpointed pass if one is queued, validating
+    /// that the replay belongs to the live fit. Consumes no network
+    /// round.
+    fn try_replay(&mut self, kind: PassKind, qa: &Mat, qb: &Mat) -> anyhow::Result<Option<Vec<Mat>>> {
+        let Some(front) = self.resume.front() else {
+            return Ok(None);
+        };
+        anyhow::ensure!(
+            front.pass_index == self.pass_id,
+            "checkpoint replay out of order: record {} at pass {}",
+            front.pass_index,
+            self.pass_id
+        );
+        let crc = checkpoint::input_crc(qa, qb);
+        anyhow::ensure!(
+            front.kind == kind && front.r as usize == qa.cols && front.input_crc == crc,
+            "stale checkpoint (refusing to resume): pass {} replay disagrees with the live fit \
+             (checkpoint {}/r={}/crc {:08x}, live {}/r={}/crc {crc:08x})",
+            self.pass_id,
+            front.kind.as_str(),
+            front.r,
+            front.input_crc,
+            kind.as_str(),
+            qa.cols,
+        );
+        let rec = self.resume.pop_front().expect("front exists");
+        self.ledger.record_event(
+            "resume",
+            format!("pass {} ({}) replayed from checkpoint", rec.pass_index, rec.kind.as_str()),
+        );
+        telemetry::event(
+            "cluster.resume",
+            vec![("pass_id", rec.pass_index.into()), ("kind", rec.kind.as_str().into())],
+        );
+        eprintln!(
+            "driver: pass {} ({}) replayed from checkpoint — no network round",
+            rec.pass_index,
+            rec.kind.as_str()
+        );
+        Ok(Some(rec.outputs))
+    }
+
+    /// Persist the pass just reduced (when persistence is on), then honor
+    /// any driver-side chaos due at this pass.
+    fn commit_pass(&mut self, kind: PassKind, r: usize, qa: &Mat, qb: &Mat, outs: &[Mat]) -> anyhow::Result<()> {
+        if let Some(ck) = &mut self.checkpoint {
+            ck.records.push(PassRecord {
+                pass_index: self.pass_id,
+                kind,
+                r: r as u32,
+                input_crc: checkpoint::input_crc(qa, qb),
+                outputs: outs.to_vec(),
+            });
+            let path = self.config.checkpoint.clone().expect("checkpoint path set");
+            ck.save(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+            if self.config.chaos.torn_checkpoint {
+                // Chaos drill: tear the file we just wrote so the next
+                // --resume exercises the fail-closed torn path.
+                let len = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                if len > 4 {
+                    let f = std::fs::OpenOptions::new().write(true).open(&path)?;
+                    f.set_len(len - 4)?;
+                }
+            }
+            self.ledger.record_event(
+                "checkpoint",
+                format!("pass {} persisted to {}", self.pass_id, path.display()),
+            );
+            telemetry::event("cluster.checkpoint", vec![("pass_id", self.pass_id.into())]);
+        }
+        if self.config.chaos.die_after_pass == Some(self.pass_id) {
+            anyhow::bail!("chaos: driver halt after pass {}", self.pass_id);
+        }
+        Ok(())
+    }
+
+    /// Run one full pass: absorb joiners, repartition, broadcast, collect
+    /// with liveness tracking and retries, reduce deterministically in
+    /// shard order, persist. Replays from the checkpoint instead when the
+    /// resume queue still has this pass.
     fn run_pass(&mut self, kind: PassKind, qa: &Mat, qb: &Mat) -> anyhow::Result<Vec<Mat>> {
+        let r = qa.cols;
+        anyhow::ensure!(qb.cols == r, "Qa/Qb column mismatch");
         self.passes += 1;
         self.pass_id += 1;
         self.metrics.add(&self.metrics.passes, 1);
+        if let Some(outs) = self.try_replay(kind, qa, qb)? {
+            self.commit_chaos_only()?;
+            return Ok(outs);
+        }
         self.ledger.rounds.fetch_add(1, Ordering::Relaxed);
         let mut round_span = telemetry::span("round");
         round_span
@@ -378,8 +865,18 @@ impl ClusterPass {
             .attr("shards", self.shards);
         let round_span_id = round_span.id();
         let mut reduce_ns = 0u64;
-        let r = qa.cols;
-        anyhow::ensure!(qb.cols == r, "Qa/Qb column mismatch");
+        // New capacity and the current holdings picture enter here — the
+        // partition for this pass is fixed before the first dispatch.
+        self.drain_joins();
+        loop {
+            match self.repartition() {
+                Ok(()) => break,
+                Err(RepartitionError::Orphan(s)) => {
+                    anyhow::bail!("no live worker holds shard {s}")
+                }
+                Err(RepartitionError::Send(w, e)) => self.bury_quietly(w, &e),
+            }
+        }
         let shapes = kind.shapes(self.dims_a, self.dims_b, r);
         let (qa32, qb32) = match kind {
             PassKind::Trace => (Vec::new(), Vec::new()),
@@ -468,7 +965,7 @@ impl ClusterPass {
                             }
                             let bytes: u64 =
                                 mats.iter().map(|m| (m.data.len() * 8) as u64).sum();
-                            let wl = &self.ledger.workers[w];
+                            let wl = self.ledger.worker(w);
                             wl.shards_completed.fetch_add(1, Ordering::Relaxed);
                             wl.partial_bytes.fetch_add(bytes, Ordering::Relaxed);
                             self.metrics.add(&self.metrics.tasks_completed, 1);
@@ -494,7 +991,7 @@ impl ClusterPass {
                             shard,
                             reason,
                         } if pass_id == ctx.pass_id => {
-                            self.ledger.workers[w].failures.fetch_add(1, Ordering::Relaxed);
+                            self.ledger.worker(w).failures.fetch_add(1, Ordering::Relaxed);
                             self.metrics.add(&self.metrics.tasks_failed, 1);
                             anyhow::ensure!(
                                 shard != SHARD_NONE,
@@ -502,11 +999,28 @@ impl ClusterPass {
                                 self.addr(w)
                             );
                             let shard = shard as usize;
-                            anyhow::ensure!(
-                                shard < self.shards,
-                                "worker {} aborted unknown shard {shard}",
-                                self.addr(w)
-                            );
+                            if shard >= self.shards {
+                                // An abort naming a shard the job does not
+                                // have is protocol abuse: charge the
+                                // sender's health instead of killing the
+                                // fit, and bury repeat offenders.
+                                self.bogus_aborts[w] += 1;
+                                eprintln!(
+                                    "driver: worker {} aborted unknown shard {shard} ({reason}); \
+                                     charged to its health ({}/{BOGUS_ABORT_LIMIT})",
+                                    self.addr(w),
+                                    self.bogus_aborts[w]
+                                );
+                                if self.bogus_aborts[w] >= BOGUS_ABORT_LIMIT {
+                                    self.on_worker_down(
+                                        &ctx,
+                                        w,
+                                        "protocol abuse: repeated aborts for unknown shards",
+                                        &mut progress,
+                                    )?;
+                                }
+                                continue;
+                            }
                             if progress.is_done(shard) {
                                 continue; // raced a successful duplicate
                             }
@@ -519,11 +1033,19 @@ impl ClusterPass {
                             let target = self
                                 .members
                                 .reassign_excluding(shard, Some(w))
-                                .ok_or_else(|| anyhow::anyhow!("no live workers remain"))?;
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!("no live worker holds shard {shard}")
+                                })?;
                             self.dispatch(&ctx, target, vec![shard as u32], &mut progress)?;
                         }
                         Msg::Heartbeat { .. } => {
-                            self.ledger.workers[w].heartbeats.fetch_add(1, Ordering::Relaxed);
+                            self.ledger.worker(w).heartbeats.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Msg::ShardsHeld { have } => {
+                            // A mirror completed (or a worker re-announced
+                            // its store): refresh the holdings picture the
+                            // reassignment routing works from.
+                            self.members.set_holds(w, &have, self.shards);
                         }
                         // Stale pass traffic (a presumed-slow worker
                         // catching up) and anything unexpected: drop.
@@ -532,6 +1054,7 @@ impl ClusterPass {
                 }
                 Ok((w, Err(e))) => self.on_worker_down(&ctx, w, &e, &mut progress)?,
                 Err(mpsc::RecvTimeoutError::Timeout) => {
+                    self.drain_joins();
                     self.check_liveness(&ctx, &mut progress)?;
                     last_liveness = Instant::now();
                 }
@@ -551,14 +1074,27 @@ impl ClusterPass {
             self.shards
         );
         telemetry::record_manual("reduce", round_span_id, reduce_ns, vec![]);
-        Ok(acc.finish())
+        let outs = acc.finish();
+        self.commit_pass(kind, r, qa, qb, &outs)?;
+        Ok(outs)
+    }
+
+    /// The chaos half of [`ClusterPass::commit_pass`] for replayed passes
+    /// (nothing new to persist, but `die-after-pass` must still fire so a
+    /// restart drill can crash at the same point twice).
+    fn commit_chaos_only(&mut self) -> anyhow::Result<()> {
+        if self.config.chaos.die_after_pass == Some(self.pass_id) {
+            anyhow::bail!("chaos: driver halt after pass {}", self.pass_id);
+        }
+        Ok(())
     }
 }
 
 impl Drop for ClusterPass {
     fn drop(&mut self) {
         // Closing both halves returns workers to accept and unblocks the
-        // reader threads (they observe EOF and exit).
+        // reader threads (they observe EOF and exit). The join acceptor
+        // thread exits on its next admission attempt.
         for w in &self.writers {
             let _ = w.shutdown(std::net::Shutdown::Both);
         }
@@ -641,7 +1177,7 @@ mod tests {
 
     /// Spawn an in-thread worker serving `dir` forever; returns its addr.
     fn spawn_worker(dir: &Path) -> SocketAddr {
-        let mut worker = Worker::bind(dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let worker = Worker::bind(dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
         let addr = worker.local_addr();
         std::thread::spawn(move || loop {
             if worker.serve_one().is_err() {
@@ -651,9 +1187,10 @@ mod tests {
         addr
     }
 
-    /// A worker that completes the handshake, then never speaks again —
-    /// the hung-process case the heartbeat timeout exists for.
-    fn spawn_silent_worker(store: &ShardStore) -> SocketAddr {
+    /// A worker that completes the handshake (claiming `have`), then
+    /// never speaks again — the hung-process case the heartbeat timeout
+    /// exists for.
+    fn spawn_silent_worker_with(store: &ShardStore, have: Vec<u32>) -> SocketAddr {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let hello = Msg::HelloWorker {
@@ -661,6 +1198,7 @@ mod tests {
             rows: store.rows as u64,
             dims_a: store.dims_a as u64,
             dims_b: store.dims_b as u64,
+            have,
         };
         std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
@@ -671,6 +1209,58 @@ mod tests {
             loop {
                 if conn.recv(None).is_err() {
                     return;
+                }
+            }
+        });
+        addr
+    }
+
+    fn spawn_silent_worker(store: &ShardStore) -> SocketAddr {
+        let have = (0..store.shards as u32).collect();
+        spawn_silent_worker_with(store, have)
+    }
+
+    /// A worker that answers every RunPass with `bogus` aborts naming a
+    /// nonexistent shard, then real aborts for its assigned shards (so
+    /// the driver reroutes them) — the protocol-abuse case.
+    fn spawn_bogus_aborter(store: &ShardStore, bogus: u64) -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hello = Msg::HelloWorker {
+            shards: store.shards as u64,
+            rows: store.rows as u64,
+            dims_a: store.dims_a as u64,
+            dims_b: store.dims_b as u64,
+            have: (0..store.shards as u32).collect(),
+        };
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut conn = Conn::new(stream);
+            let _ = conn.recv(Some(Duration::from_secs(30)));
+            let _ = conn.send(&hello);
+            loop {
+                match conn.recv(None) {
+                    Ok(Msg::RunPass { pass_id, shards, .. }) => {
+                        for _ in 0..bogus {
+                            let _ = conn.send(&Msg::Abort {
+                                pass_id,
+                                shard: 9_999,
+                                reason: "i do not even have that".to_string(),
+                            });
+                        }
+                        for s in shards {
+                            let _ = conn.send(&Msg::Abort {
+                                pass_id,
+                                shard: s,
+                                reason: "refusing honest work".to_string(),
+                            });
+                        }
+                    }
+                    Ok(Msg::Heartbeat { nonce }) => {
+                        let _ = conn.send(&Msg::Heartbeat { nonce });
+                    }
+                    Ok(_) => {}
+                    Err(_) => return,
                 }
             }
         });
@@ -800,28 +1390,182 @@ mod tests {
         let (ya_c, _) = cluster.power_pass(&qa, &qb);
         let (ya_m, _) = inmem.power_pass(&qa, &qb);
         assert!(ya_c.rel_diff(&ya_m) < 1e-5);
+        // One pass stayed one round despite the mid-pass burial + retry.
+        assert_eq!(cluster.rounds(), 1);
         let ledger = cluster.ledger_json();
         let workers = ledger.get("workers").unwrap().as_arr().unwrap();
         assert_eq!(workers[1].get("dead").unwrap().as_bool(), Some(true));
         assert_eq!(workers[0].get("dead").unwrap().as_bool(), Some(false));
+        // The audit trail recorded the death (and nothing was dropped).
+        let (events, dropped) = cluster.ledger().events();
+        assert_eq!(dropped, 0);
+        assert!(
+            events.iter().any(|e| e.kind == "death" && e.detail.contains("heartbeat")),
+            "{events:?}"
+        );
         // The survivor absorbed the whole dataset; the next pass still works.
         let (ya2, _) = cluster.power_pass(&qa, &qb);
         assert_eq!(ya2, ya_c);
     }
 
     #[test]
-    fn aborts_when_no_workers_survive() {
-        let (dir, _) = make_shards("alldead");
+    fn bogus_aborts_charge_health_not_the_fit() {
+        let (dir, whole) = make_shards("bogus");
         let store = ShardStore::open(&dir).unwrap();
-        let addrs = vec![spawn_silent_worker(&store).to_string()];
-        let mut cfg = test_config();
-        cfg.heartbeat_timeout = Duration::from_millis(300);
-        let mut cluster = ClusterPass::connect(&addrs, cfg).unwrap();
-        let mut rng = Rng::new(8);
+        let addrs = vec![
+            spawn_worker(&dir).to_string(),
+            spawn_bogus_aborter(&store, 3).to_string(),
+        ];
+        let mut cluster = ClusterPass::connect(&addrs, test_config()).unwrap();
+        let mut inmem = InMemoryPass::new(whole);
+        let mut rng = Rng::new(9);
+        let qa = Mat::randn(48, 3, &mut rng);
+        let qb = Mat::randn(48, 3, &mut rng);
+        // The abuser's unknown-shard aborts do not kill the pass; its real
+        // shards reroute to the honest worker and the result is right.
+        let (ya_c, _) = cluster.power_pass(&qa, &qb);
+        let (ya_m, _) = inmem.power_pass(&qa, &qb);
+        assert!(ya_c.rel_diff(&ya_m) < 1e-5);
+        let ledger = cluster.ledger_json();
+        let workers = ledger.get("workers").unwrap().as_arr().unwrap();
+        // Charged and buried for protocol abuse.
+        assert!(workers[1].get("failures").unwrap().as_usize().unwrap() >= 3);
+        assert_eq!(workers[1].get("dead").unwrap().as_bool(), Some(true));
+        let (events, _) = cluster.ledger().events();
+        assert!(
+            events.iter().any(|e| e.kind == "death" && e.detail.contains("protocol abuse")),
+            "{events:?}"
+        );
+    }
+
+    #[test]
+    fn worker_joins_mid_job_and_absorbs_shards() {
+        let (dir, _) = make_shards("join");
+        let addrs = vec![spawn_worker(&dir).to_string()];
+        let mut config = test_config();
+        config.listen = Some("127.0.0.1:0".to_string());
+        let mut cluster = ClusterPass::connect(&addrs, config).unwrap();
+        let gate = cluster.listen_addr().expect("listen addr").to_string();
+        let mut rng = Rng::new(4);
+        let qa = Mat::randn(48, 4, &mut rng);
+        let qb = Mat::randn(48, 4, &mut rng);
+        let (ya1, _) = cluster.power_pass(&qa, &qb);
+        // A new worker dials the driver between passes.
+        let joiner = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let handle = std::thread::spawn(move || joiner.join_driver_once(&gate, 4));
+        // Give the acceptor time to complete the handshake, then run the
+        // next pass: the joiner is admitted at the pass start.
+        std::thread::sleep(Duration::from_millis(200));
+        let (ya2, _) = cluster.power_pass(&qa, &qb);
+        assert_eq!(ya2, ya1, "a join must never change the bits");
+        let ledger = cluster.ledger_json();
+        let workers = ledger.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), 2, "{ledger}");
+        assert_eq!(workers[1].get("joined").unwrap().as_bool(), Some(true));
+        // The joiner actually worked: it was dispatched this round.
+        assert_eq!(workers[1].get("rounds").unwrap().as_usize(), Some(1));
+        assert!(workers[1].get("shards_completed").unwrap().as_usize().unwrap() > 0);
+        let (events, _) = cluster.ledger().events();
+        assert!(events.iter().any(|e| e.kind == "join"), "{events:?}");
+        drop(cluster);
+        let _ = handle.join();
+    }
+
+    #[test]
+    fn checkpoint_resume_replays_bitwise_without_rounds() {
+        let (dir, _) = make_shards("ckpt");
+        let ck_path = PathBuf::from(std::env::temp_dir()).join("rcca_driver_ckpt/fit.ckpt");
+        let _ = std::fs::remove_file(&ck_path);
+        let mut rng = Rng::new(6);
+        let qa = Mat::randn(48, 4, &mut rng);
+        let qb = Mat::randn(48, 4, &mut rng);
+        // Run 1: persist after every pass.
+        let mut config = test_config();
+        config.checkpoint = Some(ck_path.clone());
+        let addrs = vec![spawn_worker(&dir).to_string()];
+        let mut first = ClusterPass::connect(&addrs, config).unwrap();
+        let (ya1, yb1) = first.power_pass(&qa, &qb);
+        let (ca1, cb1, f1) = first.final_pass(&qa, &qb);
+        assert_eq!(first.rounds(), 2);
+        drop(first);
+        // Run 2: resume — both passes replay from disk, zero new rounds.
+        let mut config = test_config();
+        config.resume = Some(ck_path.clone());
+        let addrs = vec![spawn_worker(&dir).to_string()];
+        let mut second = ClusterPass::connect(&addrs, config).unwrap();
+        let (ya2, yb2) = second.power_pass(&qa, &qb);
+        let (ca2, cb2, f2) = second.final_pass(&qa, &qb);
+        assert_eq!((ya2, yb2), (ya1, yb1), "replay must be bitwise");
+        assert_eq!((ca2, cb2, f2), (ca1, cb1, f1));
+        assert_eq!(second.passes(), 2);
+        assert_eq!(second.rounds(), 0, "replays must consume no network rounds");
+        let (events, _) = second.ledger().events();
+        assert_eq!(events.iter().filter(|e| e.kind == "resume").count(), 3);
+        // A third (live) pass continues past the checkpointed prefix.
+        let (ta, tb) = second.gram_traces();
+        assert!(ta > 0.0 && tb > 0.0);
+        assert_eq!(second.rounds(), 1);
+        let _ = std::fs::remove_file(&ck_path);
+    }
+
+    #[test]
+    fn stale_and_torn_checkpoints_fail_closed() {
+        let (dir, _) = make_shards("ckpt_bad");
+        let ck_path = PathBuf::from(std::env::temp_dir()).join("rcca_driver_ckpt_bad/fit.ckpt");
+        let _ = std::fs::remove_file(&ck_path);
+        let mut rng = Rng::new(12);
+        let qa = Mat::randn(48, 3, &mut rng);
+        let qb = Mat::randn(48, 3, &mut rng);
+        let mut config = test_config();
+        config.checkpoint = Some(ck_path.clone());
+        let addrs = vec![spawn_worker(&dir).to_string()];
+        let mut first = ClusterPass::connect(&addrs, config).unwrap();
+        let _ = first.power_pass(&qa, &qb);
+        drop(first);
+        // Stale: the checkpoint was taken under chunk_rows 60; resuming
+        // with different chunking would change the arithmetic.
+        let mut config = test_config();
+        config.chunk_rows = 120;
+        config.resume = Some(ck_path.clone());
+        let addrs2 = vec![spawn_worker(&dir).to_string()];
+        let err = ClusterPass::connect(&addrs2, config).unwrap_err();
+        assert!(matches!(err, ClusterError::StaleCheckpoint(_)), "{err}");
+        assert!(err.to_string().contains("refusing to resume"), "{err}");
+        // Torn: truncate the file; the resume must refuse, not guess.
+        let bytes = std::fs::read(&ck_path).unwrap();
+        std::fs::write(&ck_path, &bytes[..bytes.len() - 3]).unwrap();
+        let mut config = test_config();
+        config.resume = Some(ck_path.clone());
+        let addrs3 = vec![spawn_worker(&dir).to_string()];
+        let err = ClusterPass::connect(&addrs3, config).unwrap_err();
+        assert!(matches!(err, ClusterError::TornCheckpoint(_)), "{err}");
+        // A replay whose live inputs hash differently is stale mid-fit.
+        std::fs::write(&ck_path, &bytes).unwrap();
+        let mut config = test_config();
+        config.resume = Some(ck_path.clone());
+        let addrs4 = vec![spawn_worker(&dir).to_string()];
+        let mut resumed = ClusterPass::connect(&addrs4, config).unwrap();
+        let mut rng2 = Rng::new(999);
+        let other = Mat::randn(48, 3, &mut rng2);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            resumed.power_pass(&other, &qb)
+        }));
+        assert!(res.is_err(), "wrong replay inputs must refuse, not compute");
+        let _ = std::fs::remove_file(&ck_path);
+    }
+
+    #[test]
+    fn chaos_die_after_pass_halts_the_driver() {
+        let (dir, _) = make_shards("chaos_die");
+        let mut config = test_config();
+        config.chaos = ChaosPlan::parse("die-after-pass=1").unwrap();
+        let addrs = vec![spawn_worker(&dir).to_string()];
+        let mut cluster = ClusterPass::connect(&addrs, config).unwrap();
+        let mut rng = Rng::new(13);
         let qa = Mat::randn(48, 3, &mut rng);
         let qb = Mat::randn(48, 3, &mut rng);
         let res = std::panic::catch_unwind(AssertUnwindSafe(|| cluster.power_pass(&qa, &qb)));
-        assert!(res.is_err(), "pass must abort with no live workers");
+        assert!(res.is_err(), "die-after-pass must halt after the pass");
     }
 
     #[test]
@@ -847,7 +1591,7 @@ mod tests {
             spawn_worker(&dir_b).to_string(),
         ];
         let err = ClusterPass::connect(&addrs, test_config()).unwrap_err();
-        assert!(err.contains("different dataset"), "{err}");
+        assert!(err.to_string().contains("different dataset"), "{err}");
     }
 
     #[test]
@@ -855,8 +1599,17 @@ mod tests {
         assert!(ClusterPass::connect(&[], test_config()).is_err());
         let mut cfg = test_config();
         cfg.connect_timeout = Duration::from_millis(300);
-        let err =
-            ClusterPass::connect(&["127.0.0.1:1".to_string()], cfg).unwrap_err();
-        assert!(err.contains("connect"), "{err}");
+        cfg.connect_attempts = 2;
+        let err = ClusterPass::connect(&["127.0.0.1:1".to_string()], cfg).unwrap_err();
+        // The typed exhaustion error names the address and attempt count.
+        match &err {
+            ClusterError::ConnectExhausted { addr, attempts, .. } => {
+                assert_eq!(addr, "127.0.0.1:1");
+                assert_eq!(*attempts, 2);
+            }
+            other => panic!("expected ConnectExhausted, got {other:?}"),
+        }
+        assert!(err.to_string().contains("connect"), "{err}");
+        assert!(err.to_string().contains("127.0.0.1:1"), "{err}");
     }
 }

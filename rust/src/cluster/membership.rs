@@ -1,14 +1,24 @@
 //! Driver-side cluster membership: which workers exist, which are alive,
-//! which shards each one owns, and the per-worker pass ledger.
+//! which shards each one owns *and holds*, and the per-worker pass ledger.
 //!
 //! The ledger is the cluster's observability surface — the paper's claims
 //! are *round*-count claims, so the driver records, per worker, how many
 //! pass rounds it participated in, how many shard partials it produced,
 //! and whether it died. It is `Arc`-shared with [`crate::api::Engine`] so
 //! callers can render it after a fit without reaching into the driver.
+//!
+//! Since workers can now *join* a running job, the worker list grows at
+//! run time: entries live behind a lock and are handed out as
+//! `Arc<WorkerLedger>` clones. The ledger also carries the per-job
+//! **audit trail** — join/death/resume/checkpoint events with an explicit
+//! retention policy: compaction keeps the newest `retain` events and
+//! *counts* what it dropped (`events_dropped`), mirroring the
+//! no-silent-deletion policy of [`crate::lifecycle`]'s audit ledger.
 
 use crate::util::json::{jarr, jnum, jstr, Json};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 /// Per-worker counters (atomics: the driver writes, any holder reads).
 #[derive(Debug, Default)]
@@ -22,37 +32,123 @@ pub struct WorkerLedger {
     pub partial_bytes: AtomicU64,
     /// Heartbeat echoes observed.
     pub heartbeats: AtomicU64,
-    /// Shard-task failures reported by (or charged to) this worker.
+    /// Shard-task failures reported by (or charged to) this worker —
+    /// including protocol abuse like aborting a shard the store doesn't
+    /// have.
     pub failures: AtomicU64,
     pub dead: AtomicBool,
+    /// True for workers that joined mid-job rather than at connect.
+    pub joined: AtomicBool,
 }
 
-/// The cluster-wide ledger: one entry per registered worker.
-#[derive(Debug, Default)]
+/// One audit-trail entry: a membership or recovery event, with a
+/// monotone sequence number so gaps are detectable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterEvent {
+    pub seq: u64,
+    /// `join` | `death` | `resume` | `checkpoint` | `mirror`.
+    pub kind: String,
+    pub detail: String,
+}
+
+#[derive(Debug)]
+struct EventLog {
+    events: VecDeque<ClusterEvent>,
+    next_seq: u64,
+    dropped: u64,
+    retain: usize,
+}
+
+/// The cluster-wide ledger: one entry per registered worker (including
+/// late joiners), the round counter, and the per-job audit trail.
+#[derive(Debug)]
 pub struct ClusterLedger {
-    pub workers: Vec<WorkerLedger>,
+    workers: RwLock<Vec<Arc<WorkerLedger>>>,
     /// Total pass rounds the driver has executed.
     pub rounds: AtomicU64,
+    events: Mutex<EventLog>,
 }
+
+/// Audit events kept before compaction. Compaction is never silent: the
+/// `events_dropped` counter in [`ClusterLedger::to_json`] records exactly
+/// how many were evicted.
+pub const EVENT_RETAIN: usize = 256;
 
 impl ClusterLedger {
     pub fn new(addrs: &[String]) -> ClusterLedger {
         ClusterLedger {
-            workers: addrs
-                .iter()
-                .map(|a| WorkerLedger {
-                    addr: a.clone(),
-                    ..Default::default()
-                })
-                .collect(),
+            workers: RwLock::new(
+                addrs
+                    .iter()
+                    .map(|a| {
+                        Arc::new(WorkerLedger {
+                            addr: a.clone(),
+                            ..Default::default()
+                        })
+                    })
+                    .collect(),
+            ),
             rounds: AtomicU64::new(0),
+            events: Mutex::new(EventLog {
+                events: VecDeque::new(),
+                next_seq: 1,
+                dropped: 0,
+                retain: EVENT_RETAIN,
+            }),
         }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.read().unwrap().len()
+    }
+
+    /// The shared counters of worker `w`.
+    pub fn worker(&self, w: usize) -> Arc<WorkerLedger> {
+        Arc::clone(&self.workers.read().unwrap()[w])
+    }
+
+    pub fn addr(&self, w: usize) -> String {
+        self.workers.read().unwrap()[w].addr.clone()
+    }
+
+    /// Register a worker that joined mid-job; returns its index.
+    pub fn add_worker(&self, addr: &str) -> usize {
+        let mut workers = self.workers.write().unwrap();
+        workers.push(Arc::new(WorkerLedger {
+            addr: addr.to_string(),
+            joined: AtomicBool::new(true),
+            ..Default::default()
+        }));
+        workers.len() - 1
+    }
+
+    /// Append to the audit trail, compacting (with an explicit dropped
+    /// count) past the retention horizon.
+    pub fn record_event(&self, kind: &str, detail: String) {
+        let mut log = self.events.lock().unwrap();
+        let seq = log.next_seq;
+        log.next_seq += 1;
+        log.events.push_back(ClusterEvent {
+            seq,
+            kind: kind.to_string(),
+            detail,
+        });
+        while log.retain > 0 && log.events.len() > log.retain {
+            log.events.pop_front();
+            log.dropped += 1;
+        }
+    }
+
+    /// Snapshot of the audit trail: `(retained events, dropped count)`.
+    pub fn events(&self) -> (Vec<ClusterEvent>, u64) {
+        let log = self.events.lock().unwrap();
+        (log.events.iter().cloned().collect(), log.dropped)
     }
 
     pub fn to_json(&self) -> Json {
         let g = |c: &AtomicU64| jnum(c.load(Ordering::Relaxed) as f64);
         let mut workers = Vec::new();
-        for w in &self.workers {
+        for w in self.workers.read().unwrap().iter() {
             let mut o = Json::obj();
             o.set("addr", jstr(&w.addr))
                 .set("rounds", g(&w.rounds))
@@ -60,23 +156,48 @@ impl ClusterLedger {
                 .set("partial_bytes", g(&w.partial_bytes))
                 .set("heartbeats", g(&w.heartbeats))
                 .set("failures", g(&w.failures))
-                .set("dead", Json::Bool(w.dead.load(Ordering::Relaxed)));
+                .set("dead", Json::Bool(w.dead.load(Ordering::Relaxed)))
+                .set("joined", Json::Bool(w.joined.load(Ordering::Relaxed)));
             workers.push(o);
         }
+        let (events, dropped) = self.events();
+        let recorded = self.events.lock().unwrap().next_seq - 1;
+        let mut evs = Vec::new();
+        for e in &events {
+            let mut o = Json::obj();
+            o.set("seq", jnum(e.seq as f64))
+                .set("kind", jstr(&e.kind))
+                .set("detail", jstr(&e.detail));
+            evs.push(o);
+        }
         let mut o = Json::obj();
-        o.set("rounds", g(&self.rounds)).set("workers", jarr(workers));
+        o.set("rounds", g(&self.rounds))
+            .set("workers", jarr(workers))
+            .set("events", jarr(evs))
+            .set("events_recorded", jnum(recorded as f64))
+            .set("events_dropped", jnum(dropped as f64));
         o
     }
 }
 
 /// Liveness + shard-partition state for the registered workers. One pass
-/// = one round against the *live* members; dead workers never come back
-/// (a restarted worker is a new registration in a new driver).
+/// = one round against the *live* members. Dead workers never come back
+/// (a restarted worker is a new join), but new workers can be added
+/// mid-job and absorb shards at the next partition.
+///
+/// Holder awareness: `holds[w]` is which shards worker `w` has on local
+/// disk. An empty bitmap means "holds everything" (the shared-directory
+/// deployment, and workers predating a [`set_holds`](Membership::set_holds)
+/// report). Shards are only assigned — initially or on reassignment — to
+/// live *holders*, so a death re-dispatches to a replica holder rather
+/// than to a worker that would immediately fail the open.
 pub struct Membership {
     alive: Vec<bool>,
     /// Current shard partition: `assigned[w]` are the shards worker `w`
     /// is expected to compute each round.
     assigned: Vec<Vec<usize>>,
+    /// Per-worker holdings bitmap; empty = holds all shards.
+    holds: Vec<Vec<bool>>,
     /// Round-robin cursor for reassignment targets.
     cursor: usize,
 }
@@ -86,6 +207,7 @@ impl Membership {
         Membership {
             alive: vec![true; workers],
             assigned: vec![Vec::new(); workers],
+            holds: vec![Vec::new(); workers],
             cursor: 0,
         }
     }
@@ -114,17 +236,82 @@ impl Membership {
         &self.assigned[w]
     }
 
-    /// Initial partition: shard `s` goes to worker `s % n` — interleaved,
-    /// so every worker touches the whole row range (good load balance for
-    /// row-correlated density).
-    pub fn assign_round_robin(&mut self, shards: usize) {
+    /// Register a late joiner (alive, owning nothing yet). Returns its
+    /// index. It absorbs shards at the next [`assign_round_robin`]
+    /// partition and is immediately eligible as a reassignment target for
+    /// shards it holds.
+    pub fn add_worker(&mut self) -> usize {
+        self.alive.push(true);
+        self.assigned.push(Vec::new());
+        self.holds.push(Vec::new());
+        self.alive.len() - 1
+    }
+
+    /// Record which shards worker `w` holds on local disk (`shards` is
+    /// the store's shard count). An empty `have` list genuinely means
+    /// "holds nothing".
+    pub fn set_holds(&mut self, w: usize, have: &[u32], shards: usize) {
+        let mut bits = vec![false; shards];
+        for &s in have {
+            if (s as usize) < shards {
+                bits[s as usize] = true;
+            }
+        }
+        self.holds[w] = bits;
+    }
+
+    /// Does worker `w` hold shard `s`? (Unknown holdings = holds all.)
+    pub fn holds(&self, w: usize, s: usize) -> bool {
+        self.holds[w].is_empty() || self.holds[w].get(s).copied().unwrap_or(false)
+    }
+
+    /// (Re)partition: shard `s` goes to the first live holder scanning
+    /// from worker `s % n` — interleaved, so every worker touches the
+    /// whole row range, and a freshly joined worker absorbs its share.
+    /// Errors with the first orphaned shard when no live worker holds it.
+    pub fn assign_round_robin(&mut self, shards: usize) -> Result<(), usize> {
         let n = self.alive.len().max(1);
         for a in &mut self.assigned {
             a.clear();
         }
         for s in 0..shards {
-            self.assigned[s % n].push(s);
+            let mut owner = None;
+            for step in 0..n {
+                let w = (s + step) % n;
+                if self.alive[w] && self.holds(w, s) {
+                    owner = Some(w);
+                    break;
+                }
+            }
+            match owner {
+                Some(w) => self.assigned[w].push(s),
+                None => return Err(s),
+            }
         }
+        Ok(())
+    }
+
+    /// The replica plan for factor `r`: for each shard, the first `r`
+    /// live workers scanning from its round-robin home should *hold* it.
+    /// Returns the per-worker replica lists (superset of the compute
+    /// assignment homes; workers mirror what they are missing).
+    pub fn replica_plan(&self, shards: usize, r: usize) -> Vec<Vec<u32>> {
+        let n = self.alive.len().max(1);
+        let mut plan = vec![Vec::new(); self.alive.len()];
+        for s in 0..shards {
+            let mut placed = 0;
+            for step in 0..n {
+                if placed >= r {
+                    break;
+                }
+                let w = (s + step) % n;
+                if self.alive[w] {
+                    plan[w].push(s as u32);
+                    placed += 1;
+                }
+            }
+        }
+        plan
     }
 
     /// Mark a worker dead and orphan its shards. Returns the shards that
@@ -134,17 +321,18 @@ impl Membership {
         std::mem::take(&mut self.assigned[w])
     }
 
-    /// Give `shard` to a live worker (round-robin over the survivors),
+    /// Give `shard` to a live holder (round-robin over the survivors),
     /// both for the current round and all subsequent ones. `None` when no
-    /// live workers remain.
+    /// live worker holds the shard.
     pub fn reassign(&mut self, shard: usize) -> Option<usize> {
         self.reassign_excluding(shard, None)
     }
 
     /// Like [`Membership::reassign`], but prefer a worker other than
     /// `exclude` (the one just observed failing on this shard). Falls back
-    /// to `exclude` itself when it is the only survivor — a retry there
-    /// still burns budget, so a persistent failure cannot loop forever.
+    /// to `exclude` itself when it is the only surviving holder — a retry
+    /// there still burns budget, so a persistent failure cannot loop
+    /// forever.
     pub fn reassign_excluding(&mut self, shard: usize, exclude: Option<usize>) -> Option<usize> {
         // The shard gets exactly one owner: drop any existing claim first.
         for a in &mut self.assigned {
@@ -153,14 +341,14 @@ impl Membership {
         let n = self.alive.len();
         for step in 0..n {
             let w = (self.cursor + step) % n;
-            if self.alive[w] && Some(w) != exclude {
+            if self.alive[w] && Some(w) != exclude && self.holds(w, shard) {
                 self.cursor = (w + 1) % n;
                 self.assigned[w].push(shard);
                 return Some(w);
             }
         }
         if let Some(e) = exclude {
-            if self.alive[e] {
+            if self.alive[e] && self.holds(e, shard) {
                 self.assigned[e].push(shard);
                 return Some(e);
             }
@@ -176,7 +364,7 @@ mod tests {
     #[test]
     fn round_robin_partitions_all_shards() {
         let mut m = Membership::new(3);
-        m.assign_round_robin(7);
+        m.assign_round_robin(7).unwrap();
         assert_eq!(m.assigned(0), &[0, 3, 6]);
         assert_eq!(m.assigned(1), &[1, 4]);
         assert_eq!(m.assigned(2), &[2, 5]);
@@ -187,7 +375,7 @@ mod tests {
     #[test]
     fn death_orphans_and_reassigns() {
         let mut m = Membership::new(2);
-        m.assign_round_robin(4);
+        m.assign_round_robin(4).unwrap();
         let orphans = m.mark_dead(0);
         assert_eq!(orphans, vec![0, 2]);
         assert!(!m.is_alive(0));
@@ -205,7 +393,7 @@ mod tests {
     #[test]
     fn reassign_keeps_single_ownership() {
         let mut m = Membership::new(1);
-        m.assign_round_robin(2);
+        m.assign_round_robin(2).unwrap();
         assert_eq!(m.reassign(1), Some(0));
         assert_eq!(m.assigned(0), &[0, 1]);
     }
@@ -213,7 +401,7 @@ mod tests {
     #[test]
     fn exclusion_prefers_other_workers_but_falls_back() {
         let mut m = Membership::new(2);
-        m.assign_round_robin(2);
+        m.assign_round_robin(2).unwrap();
         // Shard 0 failed on worker 0 → moves to worker 1.
         assert_eq!(m.reassign_excluding(0, Some(0)), Some(1));
         assert_eq!(m.assigned(0), &[] as &[usize]);
@@ -224,10 +412,54 @@ mod tests {
     }
 
     #[test]
+    fn joiner_absorbs_shards_at_next_partition() {
+        let mut m = Membership::new(2);
+        m.assign_round_robin(6).unwrap();
+        let w = m.add_worker();
+        assert_eq!(w, 2);
+        assert!(m.is_alive(2));
+        assert_eq!(m.assigned(2), &[] as &[usize]);
+        m.assign_round_robin(6).unwrap();
+        // The joiner owns its round-robin share of the repartition.
+        assert_eq!(m.assigned(2), &[2, 5]);
+    }
+
+    #[test]
+    fn partial_holders_route_around_missing_shards() {
+        let mut m = Membership::new(2);
+        // Worker 0 holds {0,1}, worker 1 holds {1,2}.
+        m.set_holds(0, &[0, 1], 3);
+        m.set_holds(1, &[1, 2], 3);
+        m.assign_round_robin(3).unwrap();
+        assert_eq!(m.assigned(0), &[0, 1]);
+        assert_eq!(m.assigned(1), &[2]);
+        // Shard 0's only holder dies: shard 0 has no live holder.
+        m.mark_dead(0);
+        assert_eq!(m.reassign(0), None, "no live holder must be refusal, not misroute");
+        // Shard 1 is replicated: its death-reassignment lands on worker 1.
+        assert_eq!(m.reassign(1), Some(1));
+        // A full repartition now fails on the orphaned shard 0.
+        assert_eq!(m.assign_round_robin(3), Err(0));
+    }
+
+    #[test]
+    fn replica_plan_spreads_r_holders_per_shard() {
+        let m = Membership::new(3);
+        let plan = m.replica_plan(3, 2);
+        // Shard s → workers {s, s+1} mod 3.
+        assert_eq!(plan[0], vec![0, 2]);
+        assert_eq!(plan[1], vec![0, 1]);
+        assert_eq!(plan[2], vec![1, 2]);
+        // r capped by live workers: factor 5 over 3 workers = 3 holders.
+        let all = m.replica_plan(2, 5);
+        assert_eq!(all.iter().map(|p| p.len()).sum::<usize>(), 6);
+    }
+
+    #[test]
     fn ledger_serializes() {
         let ledger = ClusterLedger::new(&["a:1".to_string(), "b:2".to_string()]);
-        ledger.workers[0].rounds.fetch_add(2, Ordering::Relaxed);
-        ledger.workers[1].dead.store(true, Ordering::Relaxed);
+        ledger.worker(0).rounds.fetch_add(2, Ordering::Relaxed);
+        ledger.worker(1).dead.store(true, Ordering::Relaxed);
         ledger.rounds.fetch_add(2, Ordering::Relaxed);
         let j = ledger.to_json();
         assert_eq!(j.get("rounds").unwrap().as_usize(), Some(2));
@@ -237,5 +469,45 @@ mod tests {
         assert_eq!(ws.len(), 2);
         assert_eq!(ws[0].get("rounds").unwrap().as_usize(), Some(2));
         assert_eq!(ws[1].get("dead").unwrap().as_bool(), Some(true));
+        assert_eq!(ws[0].get("joined").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn ledger_grows_for_joiners() {
+        let ledger = ClusterLedger::new(&["a:1".to_string()]);
+        assert_eq!(ledger.worker_count(), 1);
+        let w = ledger.add_worker("c:3");
+        assert_eq!(w, 1);
+        assert_eq!(ledger.worker_count(), 2);
+        assert_eq!(ledger.addr(1), "c:3");
+        assert!(ledger.worker(1).joined.load(Ordering::Relaxed));
+        // An Arc handle taken before growth still works after it.
+        let w0 = ledger.worker(0);
+        let _ = ledger.add_worker("d:4");
+        w0.rounds.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(ledger.worker(0).rounds.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn audit_trail_retains_with_explicit_drop_count() {
+        let ledger = ClusterLedger::new(&[]);
+        for i in 0..(EVENT_RETAIN as u64 + 40) {
+            ledger.record_event("death", format!("worker {i}"));
+        }
+        let (events, dropped) = ledger.events();
+        assert_eq!(events.len(), EVENT_RETAIN);
+        assert_eq!(dropped, 40, "compaction must count what it evicted");
+        // Newest retained; sequence numbers stay monotone across the cut.
+        assert_eq!(events[0].seq, 41);
+        assert_eq!(events.last().unwrap().seq, EVENT_RETAIN as u64 + 40);
+        let j = ledger.to_json();
+        assert_eq!(j.get("events_dropped").unwrap().as_usize(), Some(40));
+        assert_eq!(
+            j.get("events_recorded").unwrap().as_usize(),
+            Some(EVENT_RETAIN + 40)
+        );
+        let evs = j.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), EVENT_RETAIN);
+        assert_eq!(evs[0].get("kind").unwrap().as_str(), Some("death"));
     }
 }

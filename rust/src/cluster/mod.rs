@@ -31,15 +31,39 @@
 //! a cluster fit is bit-for-bit reproducible regardless of worker count,
 //! scheduling, or crash history.
 //!
+//! The cluster is **elastic and fault-tolerant** end to end:
+//!
+//! * workers can *join* a running job (`repro worker --join <driver>`):
+//!   the driver's acceptor admits them mid-fit and the next pass
+//!   repartitions so new capacity absorbs shards — with the shard-ordered
+//!   reduction keeping results bitwise-identical for any join timing;
+//! * [`proto::Msg::AssignShards`] carries **replica ownership** (factor
+//!   `R≥2` via `ClusterConfig::replication`), and workers started with
+//!   `--mirror-from` pull missing shards over the wire, so a death
+//!   re-dispatches to a replica holder instead of aborting when the dead
+//!   node held the only copy;
+//! * the driver persists a **checkpoint** ([`checkpoint`]) of the pass
+//!   ledger + committed reductions after every pass (CRC-framed,
+//!   tmp+rename atomic), and `repro fit --resume <ckpt>` replays
+//!   completed passes without new network rounds — stale or torn files
+//!   are typed, fail-closed rejections;
+//! * a deterministic **chaos harness** ([`chaos`]) drives kill/hang/
+//!   straggler/torn-checkpoint faults at declared pass indices, so tests
+//!   and CI assert bitwise equality between a chaos run and a clean one.
+//!
 //! Everything is `std`-only, like [`crate::serve`]: no tokio, no serde.
 
+pub mod chaos;
+pub mod checkpoint;
 pub mod driver;
 pub mod membership;
 pub mod proto;
 pub mod transport;
 pub mod worker;
 
-pub use driver::{ClusterConfig, ClusterPass};
+pub use chaos::ChaosPlan;
+pub use checkpoint::{Checkpoint, CheckpointError, Fingerprint, PassRecord};
+pub use driver::{ClusterConfig, ClusterError, ClusterPass};
 pub use membership::{ClusterLedger, Membership, WorkerLedger};
 pub use proto::Msg;
 pub use transport::Conn;

@@ -15,19 +15,25 @@
 //! ```
 //!
 //! Message flow: the driver opens with [`Msg::HelloDriver`]; the worker
-//! answers [`Msg::HelloWorker`] describing the shard store it serves. The
-//! driver partitions shards with [`Msg::AssignShards`], then each pass is
-//! exactly one round: a [`Msg::RunPass`] broadcast out, a stream of
-//! [`Msg::Partial`]s back (one per shard; a failed shard yields
-//! [`Msg::Abort`] instead). [`Msg::Heartbeat`] is echoed for liveness in
-//! both directions.
+//! answers [`Msg::HelloWorker`] describing the shard store it serves (and
+//! which shards it actually holds on local disk). The driver partitions
+//! shards with [`Msg::AssignShards`] — compute ownership plus replica
+//! ownership — then each pass is exactly one round: a [`Msg::RunPass`]
+//! broadcast out, a stream of [`Msg::Partial`]s back (one per shard; a
+//! failed shard yields [`Msg::Abort`] instead). [`Msg::Heartbeat`] is
+//! echoed for liveness in both directions. Workers mirror missing replica
+//! shards from a peer with [`Msg::FetchShards`]/[`Msg::ShardData`] and
+//! report their resulting holdings with [`Msg::ShardsHeld`]. The same
+//! handshake runs over a worker-dialed connection when a worker *joins* a
+//! listening driver mid-job (`repro worker --join`): the driver still
+//! speaks first.
 
 use crate::coordinator::PassKind;
 use crate::data::shards::crc32;
 use crate::linalg::Mat;
 
 pub const MAGIC: &[u8; 4] = b"RCLP";
-pub const PROTO_VERSION: u16 = 1;
+pub const PROTO_VERSION: u16 = 2;
 /// magic + version + type + len.
 pub const HEADER_BYTES: usize = 4 + 2 + 1 + 4;
 /// Hard cap on one frame's body — a corrupted length prefix must not make
@@ -44,6 +50,9 @@ const TAG_RUN_PASS: u8 = 4;
 const TAG_PARTIAL: u8 = 5;
 const TAG_HEARTBEAT: u8 = 6;
 const TAG_ABORT: u8 = 7;
+const TAG_FETCH_SHARDS: u8 = 8;
+const TAG_SHARD_DATA: u8 = 9;
+const TAG_SHARDS_HELD: u8 = 10;
 
 /// One protocol message.
 #[derive(Debug, Clone, PartialEq)]
@@ -52,12 +61,16 @@ pub enum Msg {
     /// header, so incompatible peers fail before any payload parsing).
     HelloDriver,
     /// Worker → driver reply: the shard store this worker serves. The
-    /// driver validates every worker reports the same dataset.
+    /// driver validates every worker reports the same dataset. `have`
+    /// lists the shards actually present on this worker's local disk —
+    /// a replica worker may hold only part of the store (the rest arrives
+    /// via mirroring); the driver only dispatches a shard to holders.
     HelloWorker {
         shards: u64,
         rows: u64,
         dims_a: u64,
         dims_b: u64,
+        have: Vec<u32>,
     },
     /// Driver → worker: the worker's shard partition for subsequent
     /// passes, plus the chunking the engine must use (chunking changes the
@@ -65,11 +78,16 @@ pub enum Msg {
     /// reproducible partials) and the out-of-core streaming knobs
     /// (prefetch depth / I/O threads — perf-only: they never change
     /// results, and are ignored by workers that cache their shards).
+    /// `replicas` lists the shards this worker should *hold* locally
+    /// (a superset of `shards`): a worker configured with
+    /// `--mirror-from` pulls any it is missing from a peer, so a death
+    /// never strands a shard on the dead node's disk alone.
     AssignShards {
         chunk_rows: u32,
         prefetch_depth: u32,
         io_threads: u32,
         shards: Vec<u32>,
+        replicas: Vec<u32>,
     },
     /// Driver → worker: run one pass over `shards` (normally the standing
     /// assignment; a recovery re-dispatch lists reassigned shards). `qa32`
@@ -98,6 +116,18 @@ pub enum Msg {
         shard: u32,
         reason: String,
     },
+    /// Worker → peer worker: send me these shards' raw file bytes (the
+    /// mirror pull behind `repro worker --mirror-from`).
+    FetchShards { shards: Vec<u32> },
+    /// Peer worker → worker: one shard's complete file image, exactly as
+    /// stored (CRC-trailed `RCCA` format — the receiver re-verifies
+    /// before installing, so a corrupt mirror is a typed error).
+    ShardData { shard: u32, bytes: Vec<u8> },
+    /// Worker → driver: the shards now present on this worker's local
+    /// disk (sent after acting on [`Msg::AssignShards`], i.e. after any
+    /// mirror pulls). The driver uses it to keep replica-holder routing
+    /// accurate.
+    ShardsHeld { have: Vec<u32> },
 }
 
 impl Msg {
@@ -110,6 +140,9 @@ impl Msg {
             Msg::Partial { .. } => TAG_PARTIAL,
             Msg::Heartbeat { .. } => TAG_HEARTBEAT,
             Msg::Abort { .. } => TAG_ABORT,
+            Msg::FetchShards { .. } => TAG_FETCH_SHARDS,
+            Msg::ShardData { .. } => TAG_SHARD_DATA,
+            Msg::ShardsHeld { .. } => TAG_SHARDS_HELD,
         }
     }
 }
@@ -209,6 +242,13 @@ impl<'a> Cursor<'a> {
         let bytes = self.take(n)?;
         String::from_utf8(bytes.to_vec()).map_err(|_| "string is not valid UTF-8".to_string())
     }
+    fn bytes(&mut self) -> Result<Vec<u8>, String> {
+        let n = self.u64()? as usize;
+        if n > MAX_BODY_BYTES {
+            return Err(format!("byte array of {n} bytes exceeds frame cap"));
+        }
+        Ok(self.take(n)?.to_vec())
+    }
     fn done(&self) -> Result<(), String> {
         if self.pos != self.data.len() {
             return Err(format!(
@@ -230,22 +270,26 @@ fn encode_body(msg: &Msg) -> Vec<u8> {
             rows,
             dims_a,
             dims_b,
+            have,
         } => {
             push_u64(&mut b, *shards);
             push_u64(&mut b, *rows);
             push_u64(&mut b, *dims_a);
             push_u64(&mut b, *dims_b);
+            push_u32s(&mut b, have);
         }
         Msg::AssignShards {
             chunk_rows,
             prefetch_depth,
             io_threads,
             shards,
+            replicas,
         } => {
             push_u32(&mut b, *chunk_rows);
             push_u32(&mut b, *prefetch_depth);
             push_u32(&mut b, *io_threads);
             push_u32s(&mut b, shards);
+            push_u32s(&mut b, replicas);
         }
         Msg::RunPass {
             pass_id,
@@ -286,6 +330,13 @@ fn encode_body(msg: &Msg) -> Vec<u8> {
             push_u32(&mut b, bytes.len() as u32);
             b.extend_from_slice(bytes);
         }
+        Msg::FetchShards { shards } => push_u32s(&mut b, shards),
+        Msg::ShardData { shard, bytes } => {
+            push_u32(&mut b, *shard);
+            push_u64(&mut b, bytes.len() as u64);
+            b.extend_from_slice(bytes);
+        }
+        Msg::ShardsHeld { have } => push_u32s(&mut b, have),
     }
     b
 }
@@ -299,12 +350,14 @@ fn decode_body(tag: u8, body: &[u8]) -> Result<Msg, String> {
             rows: cur.u64()?,
             dims_a: cur.u64()?,
             dims_b: cur.u64()?,
+            have: cur.u32s()?,
         },
         TAG_ASSIGN => Msg::AssignShards {
             chunk_rows: cur.u32()?,
             prefetch_depth: cur.u32()?,
             io_threads: cur.u32()?,
             shards: cur.u32s()?,
+            replicas: cur.u32s()?,
         },
         TAG_RUN_PASS => {
             let pass_id = cur.u64()?;
@@ -340,6 +393,14 @@ fn decode_body(tag: u8, body: &[u8]) -> Result<Msg, String> {
             shard: cur.u32()?,
             reason: cur.string()?,
         },
+        TAG_FETCH_SHARDS => Msg::FetchShards {
+            shards: cur.u32s()?,
+        },
+        TAG_SHARD_DATA => Msg::ShardData {
+            shard: cur.u32()?,
+            bytes: cur.bytes()?,
+        },
+        TAG_SHARDS_HELD => Msg::ShardsHeld { have: cur.u32s()? },
         other => return Err(format!("unknown message tag {other}")),
     };
     cur.done()?;
@@ -450,12 +511,14 @@ mod tests {
                 rows: 4096,
                 dims_a: 512,
                 dims_b: 256,
+                have: vec![0, 1, 4, 6],
             },
             Msg::AssignShards {
                 chunk_rows: 256,
                 prefetch_depth: 2,
                 io_threads: 1,
                 shards: vec![0, 2, 4],
+                replicas: vec![0, 1, 2, 4],
             },
             Msg::RunPass {
                 pass_id: 3,
@@ -489,6 +552,20 @@ mod tests {
                 shard: SHARD_NONE,
                 reason: "shard 3: crc mismatch".to_string(),
             },
+            Msg::FetchShards {
+                shards: vec![2, 5],
+            },
+            Msg::ShardData {
+                shard: 5,
+                bytes: vec![0xca, 0xfe, 0x00, 0x42],
+            },
+            Msg::ShardData {
+                shard: 0,
+                bytes: vec![],
+            },
+            Msg::ShardsHeld {
+                have: vec![0, 2, 5],
+            },
         ]
     }
 
@@ -515,6 +592,26 @@ mod tests {
         });
         let borrowed = encode_run_pass(12, PassKind::Final, 2, &qa, &qb, &shards);
         assert_eq!(owned, borrowed);
+    }
+
+    /// The whole-pass sentinel is a reserved shard value, not a separate
+    /// message: an `Abort` carrying [`SHARD_NONE`] must survive the wire
+    /// bit-exactly, or a pass-level failure would be misread as a
+    /// (retryable) shard failure on shard `u32::MAX`.
+    #[test]
+    fn abort_with_whole_pass_sentinel_roundtrips() {
+        let msg = Msg::Abort {
+            pass_id: 17,
+            shard: SHARD_NONE,
+            reason: "broadcast shape mismatch: got qa 3 floats".to_string(),
+        };
+        let back = decode_frame(&encode_frame(&msg)).unwrap();
+        assert_eq!(back, msg);
+        let Msg::Abort { shard, .. } = back else {
+            panic!("wrong variant");
+        };
+        assert_eq!(shard, SHARD_NONE);
+        assert_eq!(shard, u32::MAX);
     }
 
     #[test]

@@ -9,8 +9,51 @@
 
 use super::proto::{self, Msg};
 use std::io::{ErrorKind, Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
+
+/// The deterministic (jitter-free) backoff schedule for `attempts`
+/// connect tries: the delay *after* failed attempt `i` is
+/// `50ms << i`, capped at 2s. No randomness — a retried connect sequence
+/// is as reproducible as everything else in the cluster, and tests can
+/// assert the exact schedule.
+pub fn backoff_schedule(attempts: usize) -> Vec<Duration> {
+    (0..attempts.saturating_sub(1))
+        .map(|i| Duration::from_millis((50u64 << i.min(16)).min(2000)))
+        .collect()
+}
+
+/// Dial `addr` with up to `attempts` tries, sleeping the
+/// [`backoff_schedule`] delay between failures. Returns the stream or
+/// `(attempts_made, last_error)` — the caller owns the typed error (the
+/// driver wraps this in `ConnectExhausted`).
+pub fn connect_with_backoff(
+    addr: &str,
+    attempts: usize,
+    timeout: Duration,
+) -> Result<TcpStream, (usize, String)> {
+    let attempts = attempts.max(1);
+    let delays = backoff_schedule(attempts);
+    let mut last = String::new();
+    for i in 0..attempts {
+        let dial = || -> Result<TcpStream, String> {
+            let sock = addr
+                .to_socket_addrs()
+                .map_err(|e| format!("worker address '{addr}': {e}"))?
+                .next()
+                .ok_or_else(|| format!("worker address '{addr}' resolves to nothing"))?;
+            TcpStream::connect_timeout(&sock, timeout).map_err(|e| format!("connect {addr}: {e}"))
+        };
+        match dial() {
+            Ok(stream) => return Ok(stream),
+            Err(e) => last = e,
+        }
+        if let Some(delay) = delays.get(i) {
+            std::thread::sleep(*delay);
+        }
+    }
+    Err((attempts, last))
+}
 
 /// Write one message to a stream (blocking until fully written).
 pub fn send(stream: &mut TcpStream, msg: &Msg) -> Result<(), String> {
@@ -192,6 +235,44 @@ mod tests {
         tx.flush().unwrap();
         let err = conn.recv(Some(Duration::from_secs(5))).unwrap_err();
         assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_doubling() {
+        assert_eq!(backoff_schedule(1), Vec::<Duration>::new());
+        assert_eq!(
+            backoff_schedule(4),
+            vec![
+                Duration::from_millis(50),
+                Duration::from_millis(100),
+                Duration::from_millis(200),
+            ]
+        );
+        // Capped at 2s, never unbounded.
+        let long = backoff_schedule(12);
+        assert_eq!(long.len(), 11);
+        assert!(long.iter().all(|d| *d <= Duration::from_secs(2)));
+        assert_eq!(long[10], Duration::from_secs(2));
+        // Jitter-free: two computations agree exactly.
+        assert_eq!(backoff_schedule(7), backoff_schedule(7));
+    }
+
+    #[test]
+    fn connect_with_backoff_reports_attempts_and_last_error() {
+        let t = Instant::now();
+        let (attempts, last) =
+            connect_with_backoff("127.0.0.1:1", 3, Duration::from_millis(200)).unwrap_err();
+        assert_eq!(attempts, 3);
+        assert!(last.contains("connect"), "{last}");
+        // Slept the full 50+100ms schedule between the three tries.
+        assert!(t.elapsed() >= Duration::from_millis(150), "{:?}", t.elapsed());
+    }
+
+    #[test]
+    fn connect_with_backoff_succeeds_on_a_live_listener() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        assert!(connect_with_backoff(&addr, 2, Duration::from_secs(2)).is_ok());
     }
 
     #[test]

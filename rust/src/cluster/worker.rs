@@ -4,10 +4,17 @@
 //! CRC-validated [`ShardStore`] and waits for a driver. All compute goes
 //! through the shared [`ShardTaskRunner`] — the exact code the in-process
 //! coordinator runs — so a cluster fit produces the same per-shard
-//! partials as a single-process one. The worker is deliberately
-//! single-connection: a driver owns its cluster for the duration of a fit
-//! (a second driver queues in the OS accept backlog until the first
-//! disconnects).
+//! partials as a single-process one.
+//!
+//! Connections are served one thread each, but at most one of them may be
+//! a *driver* at a time (a fit owns its cluster; a second driver is
+//! refused). The other personality is the **mirror source**: a peer
+//! started with `--mirror-from <this worker>` opens a plain connection,
+//! sends [`Msg::FetchShards`], and receives raw CRC-framed shard files —
+//! that can proceed concurrently with a fit. A worker may also *dial* the
+//! driver (`repro worker --join <driver>`): the same serve loop runs over
+//! the dialed connection (the driver still speaks first), which is how new
+//! capacity enters a running job.
 //!
 //! Responsiveness: while executing a [`Msg::RunPass`], the worker polls
 //! its connection between shard tasks, echoing [`Msg::Heartbeat`]s and
@@ -15,8 +22,9 @@
 //! task — drivers must size their heartbeat timeout above the worst-case
 //! single-shard compute time.
 
+use super::chaos::ChaosPlan;
 use super::proto::{Msg, SHARD_NONE};
-use super::transport::Conn;
+use super::transport::{self, Conn};
 use crate::coordinator::{Metrics, PassKind, RunnerConfig, ShardTaskRunner};
 use crate::data::shards::ShardStore;
 use crate::data::stream::StreamConfig;
@@ -25,6 +33,7 @@ use crate::telemetry;
 use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -44,6 +53,17 @@ pub struct WorkerConfig {
     /// process (no goodbye, simulating a crash/OOM-kill) after sending
     /// this many partials. 0 disables.
     pub exit_after_partials: u64,
+    /// Pull shards this store is missing (but is asked to replicate) from
+    /// a peer worker at this address — how a replacement node with an
+    /// empty store becomes a replica holder.
+    pub mirror_from: Option<String>,
+    /// Dial this driver address and serve the dialed connection (mid-job
+    /// join). The worker keeps re-dialing when the driver goes away, so a
+    /// joiner started early simply waits for the job.
+    pub join: Option<String>,
+    /// Worker-side fault plan (kill-at-pass, drop-heartbeats,
+    /// delay-partial).
+    pub chaos: ChaosPlan,
 }
 
 impl Default for WorkerConfig {
@@ -53,6 +73,9 @@ impl Default for WorkerConfig {
             mirror_scatter: true,
             stream: StreamConfig::default(),
             exit_after_partials: 0,
+            mirror_from: None,
+            join: None,
+            chaos: ChaosPlan::none(),
         }
     }
 }
@@ -61,11 +84,19 @@ impl Default for WorkerConfig {
 pub struct Worker {
     listener: TcpListener,
     addr: SocketAddr,
+    core: Arc<WorkerCore>,
+    pub metrics: Arc<Metrics>,
+}
+
+/// State shared by every connection-serving thread.
+struct WorkerCore {
     store: ShardStore,
     engine: Arc<dyn ChunkEngine>,
     config: WorkerConfig,
-    pub metrics: Arc<Metrics>,
-    partials_sent: u64,
+    metrics: Arc<Metrics>,
+    partials_sent: AtomicU64,
+    /// A fit owns its cluster: only one connection may be a driver.
+    driver_busy: AtomicBool,
 }
 
 /// Per-connection pass-serving state.
@@ -77,19 +108,26 @@ struct Session {
 
 impl Worker {
     /// Open the shard store and claim the socket (port 0 = ephemeral; the
-    /// bound address is [`Worker::local_addr`]).
+    /// bound address is [`Worker::local_addr`]). The store may be
+    /// *partial* (shard files missing): the worker reports what it holds
+    /// in its Hello and can backfill via [`WorkerConfig::mirror_from`].
     pub fn bind(shard_dir: &Path, addr: &str, config: WorkerConfig) -> Result<Worker, String> {
         let store = ShardStore::open(shard_dir)?;
         let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
         let local = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+        let metrics = Arc::new(Metrics::new());
         Ok(Worker {
             listener,
             addr: local,
-            store,
-            engine: Arc::new(NativeEngine::new()),
-            config,
-            metrics: Arc::new(Metrics::new()),
-            partials_sent: 0,
+            core: Arc::new(WorkerCore {
+                store,
+                engine: Arc::new(NativeEngine::new()),
+                config,
+                metrics: Arc::clone(&metrics),
+                partials_sent: AtomicU64::new(0),
+                driver_busy: AtomicBool::new(false),
+            }),
+            metrics,
         })
     }
 
@@ -98,20 +136,46 @@ impl Worker {
     }
 
     pub fn store(&self) -> &ShardStore {
-        &self.store
+        &self.core.store
     }
 
-    /// Serve drivers until the process is killed (one connection at a
-    /// time; a driver disconnect returns the worker to accept).
-    pub fn run(mut self) -> ! {
+    /// Serve connections until the process is killed: one thread per
+    /// accepted connection (driver or shard-fetching peer), plus a dialer
+    /// loop when [`WorkerConfig::join`] is set.
+    pub fn run(self) -> ! {
+        if let Some(driver) = self.core.config.join.clone() {
+            let core = Arc::clone(&self.core);
+            std::thread::Builder::new()
+                .name("worker-join".to_string())
+                .spawn(move || loop {
+                    match transport::connect_with_backoff(&driver, 8, Duration::from_secs(10)) {
+                        Ok(stream) => {
+                            eprintln!("worker: dialed driver at {driver}");
+                            match core.serve_connection(stream) {
+                                Ok(()) => eprintln!("worker: driver at {driver} went away"),
+                                Err(e) => eprintln!("worker: joined connection ended: {e}"),
+                            }
+                        }
+                        Err((n, e)) => {
+                            eprintln!("worker: join {driver} failed after {n} attempts: {e}")
+                        }
+                    }
+                    std::thread::sleep(Duration::from_millis(500));
+                })
+                .expect("spawn join dialer");
+        }
         loop {
             match self.listener.accept() {
                 Ok((stream, peer)) => {
-                    eprintln!("worker: driver connected from {peer}");
-                    if let Err(e) = self.serve(stream) {
-                        eprintln!("worker: connection ended: {e}");
-                    } else {
-                        eprintln!("worker: driver disconnected");
+                    let core = Arc::clone(&self.core);
+                    let spawned = std::thread::Builder::new()
+                        .name("worker-conn".to_string())
+                        .spawn(move || match core.serve_connection(stream) {
+                            Ok(()) => eprintln!("worker: {peer} disconnected"),
+                            Err(e) => eprintln!("worker: connection from {peer} ended: {e}"),
+                        });
+                    if let Err(e) = spawned {
+                        eprintln!("worker: spawn for {peer} failed: {e}");
                     }
                 }
                 Err(e) => {
@@ -122,11 +186,43 @@ impl Worker {
         }
     }
 
-    /// Serve exactly one driver connection (test hook; [`Worker::run`]
-    /// loops over this).
-    pub fn serve_one(&mut self) -> Result<(), String> {
+    /// Accept and serve exactly one connection, inline (test hook;
+    /// [`Worker::run`] threads instead).
+    pub fn serve_one(&self) -> Result<(), String> {
         let (stream, _) = self.listener.accept().map_err(|e| format!("accept: {e}"))?;
-        self.serve(stream)
+        self.core.serve_connection(stream)
+    }
+
+    /// Dial a driver once and serve that connection until it ends (the
+    /// blocking unit of the `--join` loop; also the test hook for
+    /// mid-job joins).
+    pub fn join_driver_once(&self, driver: &str, attempts: usize) -> Result<(), String> {
+        let stream = transport::connect_with_backoff(driver, attempts, Duration::from_secs(10))
+            .map_err(|(n, e)| format!("join {driver} after {n} attempts: {e}"))?;
+        self.core.serve_connection(stream)
+    }
+}
+
+impl WorkerCore {
+    /// Dispatch on the peer's first message: a driver handshake starts a
+    /// (exclusive) fit-serving session; a shard fetch starts a mirror
+    /// session.
+    fn serve_connection(&self, stream: TcpStream) -> Result<(), String> {
+        let _ = stream.set_nodelay(true);
+        let mut conn = Conn::new(stream);
+        match conn.recv(Some(Duration::from_secs(30)))? {
+            Msg::HelloDriver => {
+                if self.driver_busy.swap(true, Ordering::SeqCst) {
+                    return Err("refused a second driver (a fit owns its cluster)".to_string());
+                }
+                eprintln!("worker: driver connected");
+                let out = self.serve_driver(&mut conn);
+                self.driver_busy.store(false, Ordering::SeqCst);
+                out
+            }
+            Msg::FetchShards { shards } => self.serve_fetch(&mut conn, shards),
+            other => Err(format!("expected HelloDriver or FetchShards, got {other:?}")),
+        }
     }
 
     fn build_session(&self, chunk_rows: usize, stream: StreamConfig) -> Session {
@@ -147,25 +243,31 @@ impl Worker {
         }
     }
 
-    fn serve(&mut self, stream: TcpStream) -> Result<(), String> {
-        let _ = stream.set_nodelay(true);
-        let mut conn = Conn::new(stream);
-        // Handshake: the driver speaks first; we answer with the store.
-        match conn.recv(Some(Duration::from_secs(30)))? {
-            Msg::HelloDriver => {}
-            other => return Err(format!("expected HelloDriver, got {other:?}")),
-        }
+    /// True unless the chaos plan has silenced heartbeats by this pass
+    /// (the hung-process drill the driver's timeout burial exists for).
+    fn echo_heartbeats(&self, last_pass: u64) -> bool {
+        self.config
+            .chaos
+            .drop_heartbeats_from
+            .is_none_or(|from| last_pass < from)
+    }
+
+    /// Serve one driver for its whole life (handshake already consumed).
+    fn serve_driver(&self, conn: &mut Conn) -> Result<(), String> {
         conn.send(&Msg::HelloWorker {
             shards: self.store.shards as u64,
             rows: self.store.rows as u64,
             dims_a: self.store.dims_a as u64,
             dims_b: self.store.dims_b as u64,
+            have: self.store.present_shards(),
         })?;
         let mut session = self.build_session(256, self.config.stream.clone());
         // Messages that arrived while a pass was executing (e.g. a
         // recovery re-dispatch of a dead peer's shards) queue here and are
         // served before blocking on the socket again.
         let mut pending: VecDeque<Msg> = VecDeque::new();
+        // Highest pass seen, for chaos gating.
+        let mut last_pass = 0u64;
         loop {
             // Idle: block until the driver speaks or hangs up. EOF here is
             // the normal end of a driver's life, not a fault.
@@ -178,12 +280,17 @@ impl Worker {
                 },
             };
             match msg {
-                Msg::Heartbeat { nonce } => conn.send(&Msg::Heartbeat { nonce })?,
+                Msg::Heartbeat { nonce } => {
+                    if self.echo_heartbeats(last_pass) {
+                        conn.send(&Msg::Heartbeat { nonce })?;
+                    }
+                }
                 Msg::AssignShards {
                     chunk_rows,
                     prefetch_depth,
                     io_threads,
                     shards,
+                    replicas,
                 } => {
                     let chunk_rows = (chunk_rows as usize).max(1);
                     let stream = StreamConfig {
@@ -201,9 +308,16 @@ impl Worker {
                         // rebuild the (stateless across passes) pipeline.
                         session = self.build_session(chunk_rows, stream);
                     }
+                    self.mirror_missing(&replicas);
+                    // Always answer with ground truth from disk: the
+                    // driver routes shard recovery by these holdings.
+                    conn.send(&Msg::ShardsHeld {
+                        have: self.store.present_shards(),
+                    })?;
                     eprintln!(
-                        "worker: assigned {} shards (chunk_rows {chunk_rows})",
-                        shards.len()
+                        "worker: assigned {} shards, replicating {} (chunk_rows {chunk_rows})",
+                        shards.len(),
+                        replicas.len()
                     );
                 }
                 Msg::RunPass {
@@ -214,8 +328,9 @@ impl Worker {
                     qb32,
                     shards,
                 } => {
+                    last_pass = last_pass.max(pass_id);
                     self.run_pass(
-                        &mut conn,
+                        conn,
                         &session,
                         &mut pending,
                         pass_id,
@@ -233,13 +348,109 @@ impl Worker {
         }
     }
 
+    /// Serve shard files to a mirroring peer: one [`Msg::ShardData`] (or
+    /// not-held [`Msg::Abort`]) per requested shard, then wait for the
+    /// next request until the peer hangs up.
+    fn serve_fetch(&self, conn: &mut Conn, first: Vec<u32>) -> Result<(), String> {
+        let mut request = first;
+        loop {
+            eprintln!("worker: serving {} shards to a mirroring peer", request.len());
+            for &s in &request {
+                let path = self.store.shard_path(s as usize);
+                let reply = if (s as usize) < self.store.shards && path.exists() {
+                    match std::fs::read(&path) {
+                        Ok(bytes) => Msg::ShardData { shard: s, bytes },
+                        Err(e) => Msg::Abort {
+                            pass_id: 0,
+                            shard: s,
+                            reason: format!("read shard {s}: {e}"),
+                        },
+                    }
+                } else {
+                    Msg::Abort {
+                        pass_id: 0,
+                        shard: s,
+                        reason: format!("shard {s} not held"),
+                    }
+                };
+                conn.send(&reply)?;
+            }
+            match conn.recv(None) {
+                Ok(Msg::FetchShards { shards }) => request = shards,
+                Ok(other) => return Err(format!("unexpected fetch-side message: {other:?}")),
+                Err(e) if e.contains("closed") => return Ok(()),
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Make this store hold every shard in `replicas`: anything missing
+    /// on disk is pulled from the `--mirror-from` peer (CRC-verified on
+    /// install, tmp+rename atomic). Mirror failure is not fatal — the
+    /// worker just keeps reporting honest holdings and the driver routes
+    /// around it.
+    fn mirror_missing(&self, replicas: &[u32]) {
+        let missing: Vec<u32> = replicas
+            .iter()
+            .copied()
+            .filter(|&s| {
+                (s as usize) < self.store.shards && !self.store.shard_path(s as usize).exists()
+            })
+            .collect();
+        if missing.is_empty() {
+            return;
+        }
+        let Some(src) = self.config.mirror_from.clone() else {
+            eprintln!(
+                "worker: asked to replicate {} shards this store is missing, but no \
+                 --mirror-from was given; holdings stay as they are",
+                missing.len()
+            );
+            return;
+        };
+        match self.pull_shards(&src, &missing) {
+            Ok(pulled) => {
+                telemetry::event(
+                    "cluster.mirror",
+                    vec![("from", src.clone().into()), ("shards", pulled.into())],
+                );
+                eprintln!("worker: mirrored {pulled}/{} shards from {src}", missing.len());
+            }
+            Err(e) => eprintln!("worker: mirror from {src} failed: {e}"),
+        }
+    }
+
+    fn pull_shards(&self, src: &str, missing: &[u32]) -> Result<usize, String> {
+        let stream = transport::connect_with_backoff(src, 4, Duration::from_secs(10))
+            .map_err(|(n, e)| format!("connect exhausted {n} attempts: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let mut conn = Conn::new(stream);
+        conn.send(&Msg::FetchShards {
+            shards: missing.to_vec(),
+        })?;
+        let mut pulled = 0usize;
+        for _ in 0..missing.len() {
+            match conn.recv(Some(Duration::from_secs(60)))? {
+                Msg::ShardData { shard, bytes } => {
+                    self.store.install_shard(shard as usize, &bytes)?;
+                    pulled += 1;
+                }
+                Msg::Abort { shard, reason, .. } => {
+                    eprintln!("worker: mirror source lacks shard {shard}: {reason}");
+                }
+                other => return Err(format!("unexpected mirror reply: {other:?}")),
+            }
+        }
+        Ok(pulled)
+    }
+
     /// Execute one RunPass: stream one Partial (or shard Abort) per
     /// requested shard, polling for control traffic between shards.
     /// Non-control messages that arrive mid-pass (a recovery re-dispatch)
     /// are parked in `pending` for the serve loop, never dropped.
     #[allow(clippy::too_many_arguments)]
     fn run_pass(
-        &mut self,
+        &self,
         conn: &mut Conn,
         session: &Session,
         pending: &mut VecDeque<Msg>,
@@ -288,7 +499,11 @@ impl Worker {
             // rest for the serve loop.
             loop {
                 match conn.poll(Duration::from_millis(1))? {
-                    Some(Msg::Heartbeat { nonce }) => conn.send(&Msg::Heartbeat { nonce })?,
+                    Some(Msg::Heartbeat { nonce }) => {
+                        if self.echo_heartbeats(pass_id) {
+                            conn.send(&Msg::Heartbeat { nonce })?;
+                        }
+                    }
                     Some(Msg::Abort { pass_id: p, .. }) if p == pass_id => {
                         eprintln!("worker: pass {pass_id} aborted by driver");
                         return Ok(());
@@ -303,21 +518,28 @@ impl Worker {
             {
                 Ok(mats) => {
                     self.metrics.add(&self.metrics.tasks_completed, 1);
+                    if self.config.chaos.delay_partial_ms > 0 {
+                        // Straggler drill: lateness must never change bits.
+                        std::thread::sleep(Duration::from_millis(
+                            self.config.chaos.delay_partial_ms,
+                        ));
+                    }
                     conn.send(&Msg::Partial {
                         pass_id,
                         shard,
                         mats,
                     })?;
-                    self.partials_sent += 1;
-                    if self.config.exit_after_partials > 0
-                        && self.partials_sent >= self.config.exit_after_partials
-                    {
+                    let sent = self.partials_sent.fetch_add(1, Ordering::Relaxed) + 1;
+                    if self.config.chaos.kill_at_pass == Some(pass_id) {
                         // Simulated crash: no goodbye, no flush beyond the
                         // partial just sent — the driver sees a dead peer.
-                        eprintln!(
-                            "worker: fault injection — exiting after {} partials",
-                            self.partials_sent
-                        );
+                        eprintln!("worker: chaos — exiting at pass {pass_id} after one partial");
+                        std::process::exit(9);
+                    }
+                    if self.config.exit_after_partials > 0
+                        && sent >= self.config.exit_after_partials
+                    {
+                        eprintln!("worker: fault injection — exiting after {sent} partials");
                         std::process::exit(9);
                     }
                 }
@@ -364,21 +586,25 @@ mod tests {
         dir
     }
 
+    fn handshake(conn: &mut Conn) -> Msg {
+        conn.send(&Msg::HelloDriver).unwrap();
+        conn.recv(Some(Duration::from_secs(10))).unwrap()
+    }
+
     /// Drive a worker by hand over a real socket: handshake, assign, one
     /// power pass, and verify the streamed partials reduce to what the
     /// shared runner computes directly.
     #[test]
     fn serves_a_scripted_driver() {
         let dir = shard_dir("scripted");
-        let mut worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
         let addr = worker.local_addr();
         let store = worker.store().clone();
         let shards = store.shards;
         let handle = std::thread::spawn(move || worker.serve_one());
 
         let mut conn = Conn::new(TcpStream::connect(addr).unwrap());
-        conn.send(&Msg::HelloDriver).unwrap();
-        let hello = conn.recv(Some(Duration::from_secs(10))).unwrap();
+        let hello = handshake(&mut conn);
         assert_eq!(
             hello,
             Msg::HelloWorker {
@@ -386,6 +612,7 @@ mod tests {
                 rows: store.rows as u64,
                 dims_a: 32,
                 dims_b: 32,
+                have: (0..shards as u32).collect(),
             }
         );
         let all: Vec<u32> = (0..shards as u32).collect();
@@ -394,8 +621,14 @@ mod tests {
             prefetch_depth: 2,
             io_threads: 1,
             shards: all.clone(),
+            replicas: vec![],
         })
         .unwrap();
+        // The worker answers every AssignShards with its holdings.
+        assert_eq!(
+            conn.recv(Some(Duration::from_secs(10))).unwrap(),
+            Msg::ShardsHeld { have: all.clone() }
+        );
         // Heartbeat while idle echoes.
         conn.send(&Msg::Heartbeat { nonce: 99 }).unwrap();
         assert_eq!(
@@ -454,7 +687,7 @@ mod tests {
     #[test]
     fn streaming_worker_partials_match_cached_bitwise() {
         let dir = shard_dir("streaming");
-        let mut worker = Worker::bind(
+        let worker = Worker::bind(
             &dir,
             "127.0.0.1:0",
             WorkerConfig {
@@ -474,16 +707,17 @@ mod tests {
         let handle = std::thread::spawn(move || worker.serve_one());
 
         let mut conn = Conn::new(TcpStream::connect(addr).unwrap());
-        conn.send(&Msg::HelloDriver).unwrap();
-        let _ = conn.recv(Some(Duration::from_secs(10))).unwrap();
+        let _ = handshake(&mut conn);
         let all: Vec<u32> = (0..shards as u32).collect();
         conn.send(&Msg::AssignShards {
             chunk_rows: 40,
             prefetch_depth: 3,
             io_threads: 2,
             shards: all.clone(),
+            replicas: vec![],
         })
         .unwrap();
+        let _held = conn.recv(Some(Duration::from_secs(10))).unwrap();
         let mut rng = Rng::new(7);
         let qa = Mat::randn(32, 4, &mut rng);
         let qb = Mat::randn(32, 4, &mut rng);
@@ -531,12 +765,11 @@ mod tests {
     #[test]
     fn rejects_mismatched_broadcast() {
         let dir = shard_dir("mismatch");
-        let mut worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
         let addr = worker.local_addr();
         let handle = std::thread::spawn(move || worker.serve_one());
         let mut conn = Conn::new(TcpStream::connect(addr).unwrap());
-        conn.send(&Msg::HelloDriver).unwrap();
-        let _ = conn.recv(Some(Duration::from_secs(10))).unwrap();
+        let _ = handshake(&mut conn);
         conn.send(&Msg::RunPass {
             pass_id: 7,
             kind: PassKind::Power,
@@ -565,12 +798,11 @@ mod tests {
     #[test]
     fn bad_shard_id_aborts_that_shard_only() {
         let dir = shard_dir("badshard");
-        let mut worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
         let addr = worker.local_addr();
         let handle = std::thread::spawn(move || worker.serve_one());
         let mut conn = Conn::new(TcpStream::connect(addr).unwrap());
-        conn.send(&Msg::HelloDriver).unwrap();
-        let _ = conn.recv(Some(Duration::from_secs(10))).unwrap();
+        let _ = handshake(&mut conn);
         conn.send(&Msg::RunPass {
             pass_id: 2,
             kind: PassKind::Trace,
@@ -593,6 +825,205 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+        drop(conn);
+        handle.join().unwrap().unwrap();
+    }
+
+    /// A partial store announces honest holdings, and `--mirror-from`
+    /// backfills exactly the replica shards it is missing — after which
+    /// its partials for those shards are bit-identical to the source's.
+    #[test]
+    fn mirror_pulls_missing_replica_shards() {
+        let src_dir = shard_dir("mirror_src");
+        // The replica starts with shard files 1 and 3 deleted.
+        let rep_dir = PathBuf::from(std::env::temp_dir()).join("rcca_worker_mirror_rep");
+        let _ = std::fs::remove_dir_all(&rep_dir);
+        std::fs::create_dir_all(&rep_dir).unwrap();
+        for entry in std::fs::read_dir(&src_dir).unwrap() {
+            let entry = entry.unwrap();
+            std::fs::copy(entry.path(), rep_dir.join(entry.file_name())).unwrap();
+        }
+        let src_store = ShardStore::open(&src_dir).unwrap();
+        let shards = src_store.shards;
+        std::fs::remove_file(rep_dir.join("shard-00001.bin")).unwrap();
+        std::fs::remove_file(rep_dir.join("shard-00003.bin")).unwrap();
+
+        // Source worker serves fetches in a loop (it dies with the test).
+        let source = Worker::bind(&src_dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let src_addr = source.local_addr().to_string();
+        std::thread::spawn(move || loop {
+            if source.serve_one().is_err() {
+                return;
+            }
+        });
+
+        let replica = Worker::bind(
+            &rep_dir,
+            "127.0.0.1:0",
+            WorkerConfig {
+                mirror_from: Some(src_addr),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rep_addr = replica.local_addr();
+        let handle = std::thread::spawn(move || replica.serve_one());
+
+        let mut conn = Conn::new(TcpStream::connect(rep_addr).unwrap());
+        match handshake(&mut conn) {
+            Msg::HelloWorker { have, .. } => {
+                assert_eq!(have, vec![0, 2, 4], "hello must report honest holdings");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        conn.send(&Msg::AssignShards {
+            chunk_rows: 40,
+            prefetch_depth: 0,
+            io_threads: 1,
+            shards: vec![0, 2, 4],
+            replicas: vec![1, 3],
+        })
+        .unwrap();
+        match conn.recv(Some(Duration::from_secs(30))).unwrap() {
+            Msg::ShardsHeld { have } => {
+                let all: Vec<u32> = (0..shards as u32).collect();
+                assert_eq!(have, all, "mirroring must backfill shards 1 and 3");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // The mirrored shards compute bit-identical partials.
+        let mut rng = Rng::new(11);
+        let qa = Mat::randn(32, 3, &mut rng);
+        let qb = Mat::randn(32, 3, &mut rng);
+        let (qa32, qb32) = (mat_to_f32(&qa), mat_to_f32(&qb));
+        conn.send(&Msg::RunPass {
+            pass_id: 1,
+            kind: PassKind::Power,
+            r: 3,
+            qa32: qa32.clone(),
+            qb32: qb32.clone(),
+            shards: vec![1, 3],
+        })
+        .unwrap();
+        let reference = ShardTaskRunner::new(
+            src_store,
+            Arc::new(NativeEngine::new()),
+            Arc::new(Metrics::new()),
+            RunnerConfig {
+                chunk_rows: 40,
+                ..Default::default()
+            },
+        );
+        for _ in 0..2 {
+            match conn.recv(Some(Duration::from_secs(30))).unwrap() {
+                Msg::Partial { shard, mats, .. } => {
+                    let want = reference
+                        .run(shard as usize, PassKind::Power, &qa32, &qb32, 3)
+                        .unwrap();
+                    assert_eq!(mats, want, "mirrored shard {shard} must be bit-identical");
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        drop(conn);
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Without a mirror source, a partial store keeps serving what it has
+    /// and keeps its holdings honest (no invented shards, no crash).
+    #[test]
+    fn partial_store_without_mirror_reports_what_it_has() {
+        let dir = shard_dir("partial_nomirror");
+        std::fs::remove_file(dir.join("shard-00002.bin")).unwrap();
+        let worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let addr = worker.local_addr();
+        let handle = std::thread::spawn(move || worker.serve_one());
+        let mut conn = Conn::new(TcpStream::connect(addr).unwrap());
+        match handshake(&mut conn) {
+            Msg::HelloWorker { have, .. } => assert_eq!(have, vec![0, 1, 3, 4]),
+            other => panic!("unexpected {other:?}"),
+        }
+        conn.send(&Msg::AssignShards {
+            chunk_rows: 40,
+            prefetch_depth: 0,
+            io_threads: 1,
+            shards: vec![0, 1, 3, 4],
+            replicas: vec![2],
+        })
+        .unwrap();
+        match conn.recv(Some(Duration::from_secs(10))).unwrap() {
+            Msg::ShardsHeld { have } => assert_eq!(have, vec![0, 1, 3, 4]),
+            other => panic!("unexpected {other:?}"),
+        }
+        drop(conn);
+        handle.join().unwrap().unwrap();
+    }
+
+    /// The fetch personality: a raw connection asking FetchShards gets the
+    /// file bytes for held shards and a typed not-held Abort otherwise.
+    #[test]
+    fn serves_shard_fetches_to_peers() {
+        let dir = shard_dir("fetch");
+        let worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let addr = worker.local_addr();
+        let want = std::fs::read(worker.store().shard_path(2)).unwrap();
+        let handle = std::thread::spawn(move || worker.serve_one());
+        let mut conn = Conn::new(TcpStream::connect(addr).unwrap());
+        conn.send(&Msg::FetchShards { shards: vec![2, 77] }).unwrap();
+        match conn.recv(Some(Duration::from_secs(10))).unwrap() {
+            Msg::ShardData { shard: 2, bytes } => assert_eq!(bytes, want),
+            other => panic!("unexpected {other:?}"),
+        }
+        match conn.recv(Some(Duration::from_secs(10))).unwrap() {
+            Msg::Abort { shard: 77, reason, .. } => {
+                assert!(reason.contains("not held"), "{reason}")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        drop(conn);
+        handle.join().unwrap().unwrap();
+    }
+
+    /// drop-heartbeats chaos: the worker goes silent (to heartbeats) from
+    /// the declared pass onward — the hung-process drill.
+    #[test]
+    fn chaos_drops_heartbeats_from_declared_pass() {
+        let dir = shard_dir("chaos_hb");
+        let worker = Worker::bind(
+            &dir,
+            "127.0.0.1:0",
+            WorkerConfig {
+                chaos: ChaosPlan::parse("drop-heartbeats=1").unwrap(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let addr = worker.local_addr();
+        let handle = std::thread::spawn(move || worker.serve_one());
+        let mut conn = Conn::new(TcpStream::connect(addr).unwrap());
+        let _ = handshake(&mut conn);
+        // Before any pass, heartbeats still echo (last pass = 0 < 1).
+        conn.send(&Msg::Heartbeat { nonce: 1 }).unwrap();
+        assert_eq!(
+            conn.recv(Some(Duration::from_secs(10))).unwrap(),
+            Msg::Heartbeat { nonce: 1 }
+        );
+        // Run pass 1 (trace needs no broadcast); from here on, silence.
+        conn.send(&Msg::RunPass {
+            pass_id: 1,
+            kind: PassKind::Trace,
+            r: 0,
+            qa32: vec![],
+            qb32: vec![],
+            shards: vec![0],
+        })
+        .unwrap();
+        match conn.recv(Some(Duration::from_secs(30))).unwrap() {
+            Msg::Partial { shard: 0, .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        conn.send(&Msg::Heartbeat { nonce: 2 }).unwrap();
+        assert_eq!(conn.poll(Duration::from_millis(300)).unwrap(), None);
         drop(conn);
         handle.join().unwrap().unwrap();
     }

@@ -74,6 +74,14 @@ impl PassProgress {
         Some(self.attempts[shard])
     }
 
+    /// Total retries consumed across the whole pass: attempts beyond each
+    /// shard's first. Zero for a clean pass; the audit trail and the
+    /// one-pass-one-round tests use this to assert a replica retry cost
+    /// exactly one extra attempt, not an extra network round.
+    pub fn total_retries(&self) -> usize {
+        self.attempts.iter().map(|&a| a - 1).sum()
+    }
+
     /// Shards that have not yet contributed.
     pub fn pending(&self) -> Vec<usize> {
         self.done
@@ -117,6 +125,21 @@ mod tests {
     fn zero_retries_aborts_on_first_failure() {
         let mut p = PassProgress::new(2, 0);
         assert_eq!(p.record_failure(1), None);
+    }
+
+    #[test]
+    fn total_retries_sums_extra_attempts() {
+        let mut p = PassProgress::new(3, 2);
+        assert_eq!(p.total_retries(), 0, "a clean pass has no retries");
+        p.record_failure(0);
+        p.record_failure(0);
+        p.record_failure(2);
+        assert_eq!(p.total_retries(), 3);
+        p.complete(0);
+        p.complete(1);
+        p.complete(2);
+        assert!(p.all_done());
+        assert_eq!(p.total_retries(), 3, "completion does not erase history");
     }
 
     #[test]

@@ -576,6 +576,33 @@ impl ShardStore {
         Ok(())
     }
 
+    /// Which shards are actually present on disk. `meta.json` fixes the
+    /// dataset's *shape*; the shard files fix this node's *holdings* — a
+    /// cluster replica target legitimately starts with a subset and
+    /// mirrors the rest over the wire.
+    pub fn present_shards(&self) -> Vec<u32> {
+        (0..self.shards)
+            .filter(|&i| self.shard_path(i).exists())
+            .map(|i| i as u32)
+            .collect()
+    }
+
+    /// Install one shard received over the wire: verify integrity first,
+    /// then write tmp+rename so a crash never leaves a torn shard under
+    /// the final name (the same idiom [`ShardWriter`] uses).
+    pub fn install_shard(&self, i: usize, bytes: &[u8]) -> Result<(), String> {
+        if i >= self.shards {
+            return Err(format!(
+                "shard index {i} out of range (store has {})",
+                self.shards
+            ));
+        }
+        verify_shard(bytes).map_err(|e| format!("shard {i}: {e}"))?;
+        let tmp = self.dir.join(format!(".shard-{i:05}.tmp"));
+        fs::write(&tmp, bytes).map_err(|e| format!("write shard {i}: {e}"))?;
+        fs::rename(&tmp, self.shard_path(i)).map_err(|e| format!("rename shard {i}: {e}"))
+    }
+
     /// Load all shards concatenated (test-scale convenience).
     pub fn load_all(&self) -> Result<TwoViewChunk, String> {
         let mut chunks = Vec::new();
@@ -772,6 +799,39 @@ mod tests {
         for i in 0..store.shards {
             assert_eq!(store.load_into(i, &mut buf).unwrap(), store.load(i).unwrap());
         }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn partial_store_reports_holdings_and_installs_shards() {
+        let (a, b) = tiny_dataset();
+        let dir = std::env::temp_dir().join("rcca_shard_partial");
+        let _ = fs::remove_dir_all(&dir);
+        let mut w = ShardWriter::create(&dir, 64).unwrap();
+        w.write_dataset(&a, &b).unwrap();
+        let store = ShardStore::open(&dir).unwrap();
+        assert_eq!(store.present_shards(), vec![0, 1, 2, 3, 4]);
+        // Drop two shard files: the store still opens (meta is intact) and
+        // reports exactly what is left.
+        let evicted = fs::read(store.shard_path(1)).unwrap();
+        fs::remove_file(store.shard_path(1)).unwrap();
+        fs::remove_file(store.shard_path(3)).unwrap();
+        let partial = ShardStore::open(&dir).unwrap();
+        assert_eq!(partial.present_shards(), vec![0, 2, 4]);
+        assert!(partial.load(1).is_err());
+        // Mirroring the missing shard back restores it bit-for-bit.
+        partial.install_shard(1, &evicted).unwrap();
+        assert_eq!(partial.present_shards(), vec![0, 1, 2, 4]);
+        assert_eq!(fs::read(partial.shard_path(1)).unwrap(), evicted);
+        partial.load(1).unwrap();
+        // Corrupt bytes are rejected before touching the final name.
+        let mut bad = evicted.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0xff;
+        let err = partial.install_shard(3, &bad).unwrap_err();
+        assert!(err.contains("crc"), "{err}");
+        assert!(!partial.shard_path(3).exists());
+        assert!(partial.install_shard(99, &evicted).is_err());
         let _ = fs::remove_dir_all(&dir);
     }
 

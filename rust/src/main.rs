@@ -19,7 +19,7 @@
 
 use rcca::api::{Backend, Cca, Engine, FittedModel, Provenance, Solver};
 use rcca::bench::Report;
-use rcca::cluster::{ClusterConfig, Worker, WorkerConfig};
+use rcca::cluster::{ChaosPlan, Checkpoint, ClusterConfig, Worker, WorkerConfig};
 use rcca::data::shards::TwoViewChunk;
 use rcca::data::synthparl::SynthParl;
 use rcca::experiments::{self, Scale, Workload};
@@ -29,7 +29,7 @@ use rcca::telemetry;
 use rcca::util::cli::{Args, Spec};
 use rcca::util::timer::Timer;
 use std::net::SocketAddr;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 fn main() {
@@ -61,6 +61,7 @@ fn usage() -> String {
        transform  offline projection through a saved model\n\
        worker     cluster worker process serving a shard directory\n\
        fit        RandomizedCCA on a worker cluster (rcca::cluster)\n\
+       cluster-ckpt inspect a driver checkpoint: fingerprint, passes, CRC status\n\
        ingest     append validated shards under a versioned snapshot manifest\n\
        daemon     drift-monitoring warm-refit loop (rcca::lifecycle)\n\
        manifest   print + validate a store's snapshot manifest\n\
@@ -123,6 +124,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "transform" => cmd_transform(rest),
         "worker" => cmd_worker(rest),
         "fit" => cmd_fit(rest),
+        "cluster-ckpt" => cmd_cluster_ckpt(rest),
         "ingest" => cmd_ingest(rest),
         "daemon" => cmd_daemon(rest),
         "manifest" => cmd_manifest(rest),
@@ -503,6 +505,15 @@ fn cmd_transform(argv: Vec<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse a `--chaos` fault plan, treating the empty string as "no faults"
+/// so the flag can be threaded through unconditionally.
+fn parse_chaos(spec: &str) -> anyhow::Result<ChaosPlan> {
+    if spec.is_empty() {
+        return Ok(ChaosPlan::none());
+    }
+    ChaosPlan::parse(spec).map_err(|e| anyhow::anyhow!("--chaos: {e}"))
+}
+
 /// `repro worker` — one cluster worker process (see `rcca::cluster`). It
 /// serves pass tasks over its local shard directory to a driver
 /// (`repro fit --cluster ...`) until killed.
@@ -516,11 +527,33 @@ fn cmd_worker(argv: Vec<String>) -> anyhow::Result<()> {
             "0",
             "fault injection: crash the process after sending N partials (0 = off; \
              used by the chaos tests and CI to exercise driver recovery)",
+        )
+        .opt(
+            "mirror-from",
+            "",
+            "peer worker (host:port) to pull missing replica shards from when an \
+             assignment names shards this store does not hold",
+        )
+        .opt(
+            "join",
+            "",
+            "driver --listen address (host:port) to dial and join a running job, \
+             in addition to accepting inbound drivers",
+        )
+        .opt(
+            "chaos",
+            "",
+            "deterministic fault plan, e.g. 'kill-at-pass=1' or 'drop-heartbeats=1' \
+             (see `repro fit --help` for the grammar)",
         );
     let args = parse(spec, &argv)?;
+    let opt = |s: &str| (!s.is_empty()).then(|| s.to_string());
     let config = WorkerConfig {
         cache_shards: !args.bool("no-cache")?,
         exit_after_partials: args.u64("exit-after-partials")?,
+        mirror_from: opt(args.str("mirror-from")),
+        join: opt(args.str("join")),
+        chaos: parse_chaos(args.str("chaos"))?,
         ..Default::default()
     };
     let worker = Worker::bind(Path::new(args.str("shards")), args.str("listen"), config)
@@ -558,6 +591,36 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
         )
         .opt("io-threads", "1", "out-of-core workers: reader threads feeding the prefetch queue")
         .opt("heartbeat-timeout-secs", "10", "silence after which a worker is declared dead")
+        .opt("connect-attempts", "4", "bounded-backoff dial attempts per worker address")
+        .opt(
+            "replication",
+            "1",
+            "shard replica factor R: with R>=2 (and workers able to --mirror-from a \
+             holder), a death re-dispatches to a replica instead of aborting",
+        )
+        .opt(
+            "checkpoint",
+            "",
+            "persist the pass ledger + committed reductions here after every pass \
+             (CRC-framed, atomic rename)",
+        )
+        .opt(
+            "resume",
+            "",
+            "resume from a checkpoint written by --checkpoint: completed passes \
+             replay bitwise without new network rounds",
+        )
+        .opt(
+            "listen",
+            "",
+            "accept workers joining mid-job (`repro worker --join`) on this address",
+        )
+        .opt(
+            "chaos",
+            "",
+            "driver-side fault plan: die-after-pass=N | torn-checkpoint \
+             (comma-separated; used by the chaos tests and CI)",
+        )
         .opt("report-dir", "reports", "where JSON twins are written")
         .opt("save", "", "write the fitted model JSON to this path")
         .opt("trace", "", "write a JSONL span trace of the driver's fit rounds to this path");
@@ -567,12 +630,19 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
     let w = Workload::generate(scale);
     let (la, lb) = w.lambdas(args.f64("nu")?);
     let addrs = rcca::cluster::parse_addrs(args.str("cluster"));
+    let path_opt = |s: &str| (!s.is_empty()).then(|| PathBuf::from(s));
     let config = ClusterConfig {
         chunk_rows: args.usize("chunk-rows")?,
         max_retries: args.usize("max-retries")?,
         prefetch_depth: args.usize("prefetch-depth")?,
         io_threads: args.usize("io-threads")?,
         heartbeat_timeout: Duration::from_secs(args.u64("heartbeat-timeout-secs")?.max(1)),
+        connect_attempts: args.usize("connect-attempts")?.max(1),
+        replication: args.usize("replication")?.max(1),
+        checkpoint: path_opt(args.str("checkpoint")),
+        resume: path_opt(args.str("resume")),
+        listen: (!args.str("listen").is_empty()).then(|| args.str("listen").to_string()),
+        chaos: parse_chaos(args.str("chaos"))?,
         ..Default::default()
     };
     let mut engine = Engine::cluster(&addrs, config)?;
@@ -649,6 +719,53 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
         r.row(&["model saved to".into(), save.into()]);
     }
     emit(&r, args.str("report-dir"))
+}
+
+/// `repro cluster-ckpt <path>` — print + validate a driver checkpoint
+/// written by `repro fit --checkpoint`. The distributed twin of
+/// `shard-info`: it decodes the fingerprint and every pass record, and
+/// exits nonzero when the file is torn or unreadable, so scripts can gate
+/// a `--resume` on checkpoint integrity first.
+fn cmd_cluster_ckpt(argv: Vec<String>) -> anyhow::Result<()> {
+    let mut argv = argv;
+    // Accept the file positionally (`repro cluster-ckpt fit.ckpt`).
+    let positional = argv.first().map(|f| !f.starts_with("--")).unwrap_or(false);
+    if positional {
+        let file = argv.remove(0);
+        argv.insert(0, format!("--file={file}"));
+    }
+    let spec = Spec::new("cluster-ckpt", "inspect a driver checkpoint")
+        .req(
+            "file",
+            "checkpoint written by `repro fit --checkpoint` (positional also accepted)",
+        );
+    let args = parse(spec, &argv)?;
+    let path = Path::new(args.str("file"));
+    let ck = Checkpoint::load(path).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let fp = &ck.fingerprint;
+    println!("checkpoint {}", path.display());
+    println!(
+        "dataset    {} shards, {} rows, d={}x{}, chunk {}",
+        fp.shards, fp.rows, fp.dims_a, fp.dims_b, fp.chunk_rows
+    );
+    println!("passes     {}", ck.records.len());
+    for rec in &ck.records {
+        let outs: Vec<String> = rec
+            .outputs
+            .iter()
+            .map(|m| format!("{}x{}", m.rows, m.cols))
+            .collect();
+        println!(
+            "  pass {:>3}  {:<5}  r={:<4}  input crc {:08x}  outputs [{}]",
+            rec.pass_index,
+            rec.kind.as_str(),
+            rec.r,
+            rec.input_crc,
+            outs.join(", ")
+        );
+    }
+    println!("status     OK");
+    Ok(())
 }
 
 /// `repro ingest` — append validated shards to a store under its snapshot

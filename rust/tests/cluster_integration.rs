@@ -10,13 +10,19 @@
 //!    shard-order reduce erases the crash from the arithmetic.
 
 use rcca::api::{Cca, Engine, FittedModel, ShardedOpts};
-use rcca::cluster::ClusterConfig;
-use rcca::data::shards::ShardWriter;
+use rcca::cca::PassEngine;
+use rcca::cluster::{ChaosPlan, ClusterConfig, ClusterPass, Worker, WorkerConfig};
+use rcca::coordinator::{ShardedPass, ShardedPassConfig};
+use rcca::data::shards::{ShardStore, ShardWriter};
 use rcca::data::synthparl::{SynthParl, SynthParlConfig};
+use rcca::linalg::Mat;
+use rcca::runtime::NativeEngine;
 use rcca::sparse::Csr;
+use rcca::util::rng::Rng;
 use std::io::{BufRead, BufReader};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// A `repro worker` child process, killed on drop.
@@ -77,7 +83,7 @@ fn make_shards(tag: &str) -> (PathBuf, Csr) {
     (dir, d.a)
 }
 
-fn fit(engine: &mut Engine) -> FittedModel {
+fn fit<E: PassEngine + ?Sized>(engine: &mut E) -> FittedModel {
     Cca::builder()
         .k(6)
         .oversample(10)
@@ -224,4 +230,218 @@ fn repro_fit_cli_reports_two_rounds() {
         "{rounds_line}"
     );
     assert!(stdout.contains("worker "), "per-worker ledger rows missing:\n{stdout}");
+}
+
+/// The full fault story in one run: a worker process kills itself mid pass
+/// 1, the driver checkpoints the pass and is halted by its own fault plan,
+/// `repro cluster-ckpt` validates what it left behind, a second driver
+/// resumes over the survivors while a replacement worker joins through the
+/// gate — and the fitted model is still bit-identical to an uninterrupted
+/// single-process fit.
+#[test]
+fn chaos_kill_join_and_driver_restart_preserve_the_model() {
+    let (dir, a_view) = make_shards("chaos_e2e");
+    let ckpt = std::env::temp_dir().join("rcca_cluster_integration_chaos_e2e.ckpt");
+    let _ = std::fs::remove_file(&ckpt);
+    let w1 = spawn_worker(&dir, &["--chaos", "kill-at-pass=1"]);
+    let w2 = spawn_worker(&dir, &[]);
+    let w3 = spawn_worker(&dir, &[]);
+
+    // Run 1: checkpoint every pass; the driver's own fault plan halts it
+    // right after committing pass 1 (the power pass).
+    let addrs = vec![w1.addr.clone(), w2.addr.clone(), w3.addr.clone()];
+    let config1 = ClusterConfig {
+        chunk_rows: 60,
+        heartbeat_timeout: Duration::from_secs(5),
+        checkpoint: Some(ckpt.clone()),
+        chaos: ChaosPlan::parse("die-after-pass=1").unwrap(),
+        ..Default::default()
+    };
+    let run1 = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut pass = ClusterPass::connect(&addrs, config1).expect("connect run 1");
+        let _ = fit(&mut pass);
+    }));
+    assert!(run1.is_err(), "die-after-pass=1 must halt the first driver");
+    assert!(ckpt.exists(), "pass 1 must be committed before the halt");
+
+    // The inspection tool vouches for the dead driver's checkpoint.
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .arg("cluster-ckpt")
+        .arg(&ckpt)
+        .output()
+        .expect("repro cluster-ckpt");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "{stdout}");
+    assert!(stdout.contains("passes     1"), "{stdout}");
+    assert!(stdout.contains("power"), "{stdout}");
+
+    // Run 2: a fresh driver resumes from the checkpoint over the two
+    // survivors and opens a join gate; a replacement worker dials in.
+    let config2 = ClusterConfig {
+        chunk_rows: 60,
+        heartbeat_timeout: Duration::from_secs(5),
+        resume: Some(ckpt.clone()),
+        listen: Some("127.0.0.1:0".to_string()),
+        ..Default::default()
+    };
+    let addrs2 = vec![w2.addr.clone(), w3.addr.clone()];
+    let mut pass = ClusterPass::connect(&addrs2, config2).expect("connect run 2");
+    let gate = pass.listen_addr().expect("join gate").to_string();
+    let _w4 = spawn_worker(&dir, &["--join", &gate]);
+    std::thread::sleep(Duration::from_millis(700));
+    let model = fit(&mut pass);
+    assert_eq!(model.passes(), 2);
+    // The power pass replayed from the checkpoint; only the final pass
+    // cost a network round.
+    assert_eq!(pass.rounds(), 1, "resume must not repeat completed rounds");
+    let ledger = pass.ledger_json();
+    let workers = ledger.get("workers").unwrap().as_arr().unwrap();
+    assert_eq!(workers.len(), 3, "the joiner must appear in the ledger");
+    assert_eq!(workers[2].get("joined").unwrap().as_bool(), Some(true));
+    drop(pass);
+
+    let reference = single_process_model(&dir);
+    let probe = a_view.slice_rows(0, 40);
+    assert_models_bitwise_equal(&model, &reference, &probe);
+
+    // Satellite check: the inspection tool fails closed on a torn file.
+    let torn = std::env::temp_dir().join("rcca_cluster_integration_chaos_e2e_torn.ckpt");
+    let bytes = std::fs::read(&ckpt).unwrap();
+    std::fs::write(&torn, &bytes[..bytes.len() - 3]).unwrap();
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .arg("cluster-ckpt")
+        .arg(&torn)
+        .output()
+        .expect("repro cluster-ckpt torn");
+    assert!(!out.status.success(), "a torn checkpoint must exit nonzero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("torn"), "{stderr}");
+}
+
+/// In-thread worker on an ephemeral port that serves drivers forever (so a
+/// restarted driver can reconnect), optionally dialing a join gate first.
+fn spawn_fleet_worker(dir: &Path, join_gate: Option<String>) -> String {
+    let worker =
+        Worker::bind(dir, "127.0.0.1:0", WorkerConfig::default()).expect("bind fleet worker");
+    let addr = worker.local_addr().to_string();
+    std::thread::spawn(move || {
+        if let Some(gate) = join_gate {
+            let _ = worker.join_driver_once(&gate, 8);
+        }
+        loop {
+            let _ = worker.serve_one();
+        }
+    });
+    addr
+}
+
+/// Scale proof: a 50-worker localhost fleet — 46 steady workers, 2 that
+/// kill themselves mid pass, 2 that join mid-job — plus one driver restart
+/// from checkpoint, is bit-identical to one pool worker on the same data.
+#[test]
+fn fifty_worker_fleet_survives_deaths_joins_and_a_driver_restart() {
+    // 70 small shards so a 50-way partition still spreads real work.
+    let d = SynthParl::generate(SynthParlConfig {
+        n: 420,
+        dims: 48,
+        topics: 4,
+        words_per_topic: 8,
+        background_words: 16,
+        mean_len: 6.0,
+        seed: 37,
+        ..Default::default()
+    });
+    let dir = std::env::temp_dir().join("rcca_cluster_integration_fleet");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut w = ShardWriter::create(&dir, 6).unwrap();
+    w.write_dataset(&d.a, &d.b).unwrap();
+    let ckpt = std::env::temp_dir().join("rcca_cluster_integration_fleet.ckpt");
+    let _ = std::fs::remove_file(&ckpt);
+
+    // 46 steady in-thread workers + 2 child processes that die mid pass 1
+    // + 2 joiners admitted through the gate below = the 50-worker fleet.
+    let mut addrs: Vec<String> = (0..46).map(|_| spawn_fleet_worker(&dir, None)).collect();
+    let chaos1 = spawn_worker(&dir, &["--chaos", "kill-at-pass=1"]);
+    let chaos2 = spawn_worker(&dir, &["--chaos", "kill-at-pass=1"]);
+    addrs.push(chaos1.addr.clone());
+    addrs.push(chaos2.addr.clone());
+
+    let mut rng = Rng::new(41);
+    let qa = Mat::randn(48, 5, &mut rng);
+    let qb = Mat::randn(48, 5, &mut rng);
+
+    // Run 1: both chaos workers die mid power pass; two fresh workers join
+    // through the gate; the driver checkpoints the pass, then "crashes"
+    // (drop = stop without goodbye).
+    let mut driver = ClusterPass::connect(
+        &addrs,
+        ClusterConfig {
+            chunk_rows: 60,
+            replication: 2,
+            heartbeat_timeout: Duration::from_secs(5),
+            checkpoint: Some(ckpt.clone()),
+            listen: Some("127.0.0.1:0".to_string()),
+            ..Default::default()
+        },
+    )
+    .expect("connect fleet");
+    let gate = driver.listen_addr().expect("gate").to_string();
+    let joiner_a = spawn_fleet_worker(&dir, Some(gate.clone()));
+    let joiner_b = spawn_fleet_worker(&dir, Some(gate));
+    std::thread::sleep(Duration::from_millis(700));
+    let (ya_1, yb_1) = driver.power_pass(&qa, &qb);
+    let ledger = driver.ledger_json();
+    let workers = ledger.get("workers").unwrap().as_arr().unwrap();
+    assert_eq!(workers.len(), 50, "46 + 2 dead + 2 joined = 50 workers");
+    let count = |key: &str| {
+        workers
+            .iter()
+            .filter(|w| w.get(key).unwrap().as_bool() == Some(true))
+            .count()
+    };
+    assert_eq!(count("dead"), 2, "both kill-at-pass workers must be buried");
+    assert_eq!(count("joined"), 2, "both joiners must be admitted");
+    drop(driver);
+
+    // Run 2: a fresh driver resumes over the survivors (the joiners are
+    // founding members now): the power pass replays from the checkpoint
+    // without a network round, the final pass runs live.
+    let mut addrs2: Vec<String> = addrs[..46].to_vec();
+    addrs2.push(joiner_a);
+    addrs2.push(joiner_b);
+    let mut driver = ClusterPass::connect(
+        &addrs2,
+        ClusterConfig {
+            chunk_rows: 60,
+            replication: 2,
+            heartbeat_timeout: Duration::from_secs(5),
+            resume: Some(ckpt.clone()),
+            ..Default::default()
+        },
+    )
+    .expect("reconnect fleet");
+    let (ya_2, yb_2) = driver.power_pass(&qa, &qb);
+    assert_eq!(ya_1, ya_2, "replayed pass must be bitwise-identical");
+    assert_eq!(yb_1, yb_2);
+    let (ca, cb, f) = driver.final_pass(&qa, &qb);
+    assert_eq!(driver.rounds(), 1, "replay costs no round; only the final pass does");
+
+    // The whole history — 50 workers, 2 deaths, 2 joins, 1 driver restart —
+    // must be invisible in the arithmetic.
+    let mut sharded = ShardedPass::new(
+        ShardStore::open(&dir).unwrap(),
+        Arc::new(NativeEngine::new()),
+        ShardedPassConfig {
+            workers: 1,
+            chunk_rows: 60,
+            ..Default::default()
+        },
+    );
+    let (ya_s, yb_s) = sharded.power_pass(&qa, &qb);
+    assert_eq!(ya_1, ya_s);
+    assert_eq!(yb_1, yb_s);
+    let (ca_s, cb_s, f_s) = sharded.final_pass(&qa, &qb);
+    assert_eq!(ca, ca_s);
+    assert_eq!(cb, cb_s);
+    assert_eq!(f, f_s);
 }
