@@ -167,6 +167,24 @@ impl Engine {
         self.ledger.as_ref().map(|l| l.to_json())
     }
 
+    /// The shared cluster ledger itself, for [`crate::telemetry`] metric
+    /// registration (it implements `MetricSource`).
+    pub fn cluster_ledger_arc(&self) -> Option<Arc<ClusterLedger>> {
+        self.ledger.clone()
+    }
+
+    /// Cluster engines export ONE merged cross-process trace (driver spans
+    /// plus the skew-corrected worker batches shipped during the fit);
+    /// other backends return None and the caller falls back to the plain
+    /// local recorder export.
+    pub fn export_merged_trace(
+        &mut self,
+        path: &Path,
+    ) -> Option<std::io::Result<(usize, u64)>> {
+        let pass = self.inner.as_any_mut()?.downcast_mut::<ClusterPass>()?;
+        Some(pass.export_merged_trace(path))
+    }
+
     /// Coordinator engine over an existing shard directory (one produced by
     /// `repro gen` or [`Engine::for_workload`]).
     pub fn sharded(shard_dir: &Path, opts: ShardedOpts) -> Result<Engine, ApiError> {
@@ -318,12 +336,15 @@ impl Engine {
                         config.chaos = crate::cluster::ChaosPlan::parse(val)
                             .map_err(ApiError::EngineSpec)?
                     }
+                    "straggler-factor" => {
+                        config.straggler_factor = val.parse().map_err(|_| bad(key))?
+                    }
                     other => {
                         return Err(ApiError::EngineSpec(format!(
                             "unknown cluster option '{other}' (expected \
                              chunk|retries|prefetch|io-threads|hb-timeout-ms|\
                              connect-timeout-ms|connect-attempts|replication|\
-                             ckpt|resume|listen|chaos)"
+                             ckpt|resume|listen|chaos|straggler-factor)"
                         )))
                     }
                 }

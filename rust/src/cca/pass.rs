@@ -28,6 +28,12 @@ pub trait PassEngine {
 
     /// Total data passes consumed so far.
     fn passes(&self) -> usize;
+
+    /// Escape hatch for engine-specific plumbing behind `dyn PassEngine`
+    /// (the cluster driver's merged-trace export). Default: not castable.
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        None
+    }
 }
 
 /// Single-node in-core implementation over CSR views.

@@ -30,19 +30,20 @@
 use super::chaos::ChaosPlan;
 use super::checkpoint::{self, Checkpoint, CheckpointError, Fingerprint, PassRecord};
 use super::membership::{ClusterLedger, Membership};
-use super::proto::{Msg, SHARD_NONE};
+use super::proto::{Msg, TraceAssign, TraceCtx, WireSpan, SHARD_NONE};
 use super::transport::{self, Conn};
 use crate::cca::pass::PassEngine;
 use crate::coordinator::{Accumulator, Metrics, PassKind, PassProgress};
 use crate::linalg::Mat;
 use crate::runtime::mat_to_f32;
 use crate::telemetry;
+use crate::telemetry::trace::TraceSpan;
 use crate::util::json::Json;
 use crate::util::timer::Timer;
 use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -146,6 +147,15 @@ pub struct ClusterConfig {
     pub listen: Option<String>,
     /// Driver-side fault injection (die-after-pass, torn-checkpoint).
     pub chaos: ChaosPlan,
+    /// Flag a worker as a straggler when its round latency exceeds the
+    /// fleet's (lower-)median by this factor. Feeds the ledger's
+    /// straggler counter and `cluster.straggler` trace events; the
+    /// offline analysis (`repro trace --stragglers`) has its own knob.
+    pub straggler_factor: f64,
+    /// After a traced pass completes, wait at most this long for the
+    /// workers' shipped span batches. Fail-open: a missing batch only
+    /// thins the merged timeline, never the fit.
+    pub trace_wait: Duration,
 }
 
 impl Default for ClusterConfig {
@@ -165,6 +175,8 @@ impl Default for ClusterConfig {
             resume: None,
             listen: None,
             chaos: ChaosPlan::none(),
+            straggler_factor: 2.0,
+            trace_wait: Duration::from_secs(2),
         }
     }
 }
@@ -195,6 +207,10 @@ struct PassCtx<'a> {
     r: usize,
     qa32: &'a [f32],
     qb32: &'a [f32],
+    /// Trace context broadcast with every RunPass of this pass (inactive
+    /// when the recorder is off). `driver_ns` is stamped per dispatch so
+    /// late re-dispatches estimate skew from their own handshake.
+    trace: TraceCtx,
 }
 
 /// Driver-side pass engine over registered worker processes. Implements
@@ -218,6 +234,21 @@ pub struct ClusterPass {
     /// Last (shards, replicas) broadcast per worker — AssignShards is
     /// resent only when a repartition actually changes a worker's view.
     last_assign: Vec<Option<(Vec<u32>, Vec<u32>)>>,
+    /// Nonzero once the recorder is live and a trace id was minted; the
+    /// repartition loop (re)sends a worker its [`TraceAssign`] whenever
+    /// `trace_sent` disagrees — covering workers connected before the
+    /// CLI installed the recorder, and joiners.
+    trace_id: u64,
+    /// Last trace id each worker's AssignShards carried.
+    trace_sent: Vec<u64>,
+    /// When this pass's RunPass reached each worker (None = not
+    /// dispatched this pass); feeds per-worker round latency.
+    dispatched_at: Vec<Option<Instant>>,
+    /// Workers still owing the current pass a [`Msg::TraceShard`].
+    trace_pending: Vec<bool>,
+    /// Skew-corrected worker spans, accumulated until the merged export.
+    remote_spans: Vec<TraceSpan>,
+    remote_dropped: u64,
     shards: usize,
     rows: usize,
     dims_a: usize,
@@ -322,6 +353,12 @@ impl ClusterPass {
             pinged: vec![false; n],
             bogus_aborts: vec![0; n],
             last_assign: vec![None; n],
+            trace_id: 0,
+            trace_sent: vec![0; n],
+            dispatched_at: vec![None; n],
+            trace_pending: vec![false; n],
+            remote_spans: Vec::new(),
+            remote_dropped: 0,
             shards: shards as usize,
             rows: rows as usize,
             dims_a: dims_a as usize,
@@ -568,6 +605,7 @@ impl ClusterPass {
             io_threads: self.config.io_threads as u32,
             shards: Vec::new(),
             replicas: Vec::new(),
+            trace: TraceAssign::default(),
         };
         if let Err(e) = transport::send(&mut writer, &msg) {
             eprintln!("driver: joiner {} died during admission ({e}); dropped", j.addr);
@@ -583,6 +621,11 @@ impl ClusterPass {
         self.pinged.push(false);
         self.bogus_aborts.push(0);
         self.last_assign.push(Some((Vec::new(), Vec::new())));
+        // A joiner's TraceAssign (trace_sent 0 ≠ a live trace id) is sent
+        // by the next pass-start repartition, before any RunPass.
+        self.trace_sent.push(0);
+        self.dispatched_at.push(None);
+        self.trace_pending.push(false);
         let thread_tx = self.tx.clone();
         let conn = j.conn;
         let _ = std::thread::Builder::new()
@@ -619,7 +662,7 @@ impl ClusterPass {
             }
             let assigned: Vec<u32> = self.members.assigned(w).iter().map(|&s| s as u32).collect();
             let pair = (assigned, replicas[w].clone());
-            if self.last_assign[w].as_ref() == Some(&pair) {
+            if self.last_assign[w].as_ref() == Some(&pair) && self.trace_sent[w] == self.trace_id {
                 continue;
             }
             let msg = Msg::AssignShards {
@@ -628,12 +671,28 @@ impl ClusterPass {
                 io_threads: self.config.io_threads as u32,
                 shards: pair.0.clone(),
                 replicas: pair.1.clone(),
+                trace: self.trace_assign(w),
             };
             transport::send(&mut self.writers[w], &msg)
                 .map_err(|e| RepartitionError::Send(w, e))?;
             self.last_assign[w] = Some(pair);
+            self.trace_sent[w] = self.trace_id;
         }
         Ok(())
+    }
+
+    /// The tracing half of a worker's AssignShards: the shared trace id
+    /// plus a disjoint span-id namespace (worker `w` allocates ids from
+    /// `(w+1) << 40` up), so merged cross-process ids never collide.
+    fn trace_assign(&self, w: usize) -> TraceAssign {
+        if self.trace_id == 0 {
+            TraceAssign::default()
+        } else {
+            TraceAssign {
+                trace_id: self.trace_id,
+                span_base: (w as u64 + 1) << 40,
+            }
+        }
     }
 
     /// Mark a worker dead outside any pass (no shards in flight yet) —
@@ -668,6 +727,16 @@ impl ClusterPass {
         if shard_list.is_empty() {
             return Ok(());
         }
+        // Stamp the driver clock at send time: the worker's receipt-side
+        // reading of the same context is the clock-skew handshake.
+        let wire_ctx = if ctx.trace.active() {
+            TraceCtx {
+                driver_ns: telemetry::now_ns(),
+                ..ctx.trace
+            }
+        } else {
+            TraceCtx::default()
+        };
         // Encoded straight from the borrowed broadcast — no owned Msg
         // copy of the (da+db)×r panels on the per-worker dispatch path.
         let frame = super::proto::encode_run_pass(
@@ -677,12 +746,22 @@ impl ClusterPass {
             ctx.qa32,
             ctx.qb32,
             &shard_list,
+            wire_ctx,
         );
         match transport::send_frame(&mut self.writers[w], &frame) {
             Ok(()) => {
                 if self.rounds_counted[w] != ctx.pass_id {
                     self.rounds_counted[w] = ctx.pass_id;
                     self.ledger.worker(w).rounds.fetch_add(1, Ordering::Relaxed);
+                }
+                // Round latency runs dispatch → last partial; the first
+                // dispatch wins so a mid-pass re-dispatch does not reset
+                // the clock.
+                if self.dispatched_at[w].is_none() {
+                    self.dispatched_at[w] = Some(Instant::now());
+                }
+                if wire_ctx.active() {
+                    self.trace_pending[w] = true;
                 }
                 Ok(())
             }
@@ -735,6 +814,22 @@ impl ClusterPass {
             }
         }
         for (target, list) in batches {
+            self.ledger.record_event(
+                "redispatch",
+                format!(
+                    "{} orphaned shards re-dispatched to worker {}",
+                    list.len(),
+                    self.addr(target)
+                ),
+            );
+            telemetry::event(
+                "cluster.redispatch",
+                vec![
+                    ("addr", self.addr(target).into()),
+                    ("shards", list.len().into()),
+                    ("pass_id", ctx.pass_id.into()),
+                ],
+            );
             self.dispatch(ctx, target, list, progress)?;
         }
         Ok(())
@@ -830,6 +925,17 @@ impl ClusterPass {
                     let f = std::fs::OpenOptions::new().write(true).open(&path)?;
                     f.set_len(len - 4)?;
                 }
+                self.ledger.record_event(
+                    "chaos",
+                    format!("tore the checkpoint written after pass {}", self.pass_id),
+                );
+                telemetry::event(
+                    "cluster.chaos",
+                    vec![
+                        ("kind", "torn-checkpoint".into()),
+                        ("pass_id", self.pass_id.into()),
+                    ],
+                );
             }
             self.ledger.record_event(
                 "checkpoint",
@@ -838,9 +944,24 @@ impl ClusterPass {
             telemetry::event("cluster.checkpoint", vec![("pass_id", self.pass_id.into())]);
         }
         if self.config.chaos.die_after_pass == Some(self.pass_id) {
+            self.record_chaos_halt();
             anyhow::bail!("chaos: driver halt after pass {}", self.pass_id);
         }
         Ok(())
+    }
+
+    fn record_chaos_halt(&self) {
+        self.ledger.record_event(
+            "chaos",
+            format!("driver halt injected after pass {}", self.pass_id),
+        );
+        telemetry::event(
+            "cluster.chaos",
+            vec![
+                ("kind", "die-after-pass".into()),
+                ("pass_id", self.pass_id.into()),
+            ],
+        );
     }
 
     /// Run one full pass: absorb joiners, repartition, broadcast, collect
@@ -858,11 +979,23 @@ impl ClusterPass {
             return Ok(outs);
         }
         self.ledger.rounds.fetch_add(1, Ordering::Relaxed);
+        // Mint a trace id the first time a pass runs with the recorder on
+        // (the CLI installs it after connect, so this cannot happen
+        // earlier); the repartition below then re-sends every worker an
+        // AssignShards carrying its TraceAssign.
+        if telemetry::enabled() {
+            if self.trace_id == 0 {
+                self.trace_id = ((std::process::id() as u64) << 16) | 1;
+            }
+        } else {
+            self.trace_id = 0;
+        }
         let mut round_span = telemetry::span("round");
         round_span
             .attr("pass_id", self.pass_id)
             .attr("kind", kind.as_str())
-            .attr("shards", self.shards);
+            .attr("shards", self.shards)
+            .attr("worker", "driver");
         let round_span_id = round_span.id();
         let mut reduce_ns = 0u64;
         // New capacity and the current holdings picture enter here — the
@@ -888,6 +1021,11 @@ impl ClusterPass {
             r,
             qa32: &qa32,
             qb32: &qb32,
+            trace: TraceCtx {
+                trace_id: self.trace_id,
+                parent_span: round_span_id,
+                driver_ns: 0, // stamped fresh at each dispatch
+            },
         };
         let mut progress = PassProgress::new(self.shards, self.config.max_retries);
         // Deterministic reduce without full buffering: partials park here
@@ -907,6 +1045,12 @@ impl ClusterPass {
         }
         for p in &mut self.pinged {
             *p = false;
+        }
+        for d in &mut self.dispatched_at {
+            *d = None;
+        }
+        for t in &mut self.trace_pending {
+            *t = false;
         }
         for w in self.members.live() {
             if !self.members.is_alive(w) {
@@ -968,6 +1112,13 @@ impl ClusterPass {
                             let wl = self.ledger.worker(w);
                             wl.shards_completed.fetch_add(1, Ordering::Relaxed);
                             wl.partial_bytes.fetch_add(bytes, Ordering::Relaxed);
+                            // Round latency: dispatch → this (latest)
+                            // partial. Every partial overwrites, so the
+                            // final value covers the worker's whole round.
+                            if let Some(t0) = self.dispatched_at[w] {
+                                wl.round_nanos
+                                    .store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            }
                             self.metrics.add(&self.metrics.tasks_completed, 1);
                             partials[shard] = Some(mats);
                             let t = Timer::start();
@@ -1047,6 +1198,16 @@ impl ClusterPass {
                             // reassignment routing works from.
                             self.members.set_holds(w, &have, self.shards);
                         }
+                        Msg::TraceShard {
+                            skew_ns,
+                            dropped,
+                            spans,
+                            ..
+                        } => {
+                            // Any pass's batch merges (a straggler's spans
+                            // from the previous round are still wanted).
+                            self.absorb_trace_shard(w, skew_ns, dropped, spans);
+                        }
                         // Stale pass traffic (a presumed-slow worker
                         // catching up) and anything unexpected: drop.
                         _ => {}
@@ -1074,9 +1235,156 @@ impl ClusterPass {
             self.shards
         );
         telemetry::record_manual("reduce", round_span_id, reduce_ns, vec![]);
+        // Close the round before the trace-shard wait: the wait is export
+        // plumbing, and folding it into the round's wall time would show
+        // up as phantom straggler-wait in the critical-path analysis.
+        drop(round_span);
+        self.collect_trace_shards();
+        self.update_stragglers();
         let outs = acc.finish();
         self.commit_pass(kind, r, qa, qb, &outs)?;
         Ok(outs)
+    }
+
+    /// Fold a worker's shipped span batch into the merged timeline:
+    /// re-express remote start times on the driver clock and stamp every
+    /// span that does not already name a worker with the sender's stable
+    /// address.
+    fn absorb_trace_shard(&mut self, w: usize, skew_ns: i64, dropped: u64, spans: Vec<WireSpan>) {
+        if w < self.trace_pending.len() {
+            self.trace_pending[w] = false;
+        }
+        let addr = self.addr(w);
+        let mut batch: Vec<TraceSpan> = spans.iter().map(wire_to_trace_span).collect();
+        telemetry::trace::apply_skew(&mut batch, skew_ns);
+        for s in &mut batch {
+            if s.attrs.get("worker").is_none() {
+                s.attrs.set("worker", Json::Str(addr.clone()));
+            }
+        }
+        self.remote_dropped += dropped;
+        self.remote_spans.append(&mut batch);
+    }
+
+    /// Bounded, fail-open wait for the TraceShard each traced worker owes
+    /// the pass that just completed. A dead or slow worker only thins the
+    /// merged timeline — the fit's outputs are already reduced.
+    fn collect_trace_shards(&mut self) {
+        if self.trace_id == 0 {
+            return;
+        }
+        let owing = |pending: &[bool], members: &Membership| {
+            pending
+                .iter()
+                .enumerate()
+                .any(|(w, &p)| p && members.is_alive(w))
+        };
+        let deadline = Instant::now() + self.config.trace_wait;
+        while owing(&self.trace_pending, &self.members) {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                let late: Vec<String> = self
+                    .trace_pending
+                    .iter()
+                    .enumerate()
+                    .filter(|&(w, &p)| p && self.members.is_alive(w))
+                    .map(|(w, _)| self.addr(w))
+                    .collect();
+                eprintln!(
+                    "driver: gave up waiting for trace shards from {}",
+                    late.join(", ")
+                );
+                break;
+            }
+            match self.rx.recv_timeout(left) {
+                Ok((w, Ok(Msg::TraceShard {
+                    skew_ns,
+                    dropped,
+                    spans,
+                    ..
+                }))) => self.absorb_trace_shard(w, skew_ns, dropped, spans),
+                Ok((w, Ok(Msg::Heartbeat { .. }))) => {
+                    self.last_seen[w] = Instant::now();
+                    self.ledger.worker(w).heartbeats.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok((w, Ok(Msg::ShardsHeld { have }))) => {
+                    self.members.set_holds(w, &have, self.shards);
+                }
+                Ok((_, Ok(_))) => {}
+                Ok((w, Err(e))) => {
+                    // Between passes a death costs no shards; stop
+                    // waiting on its batch.
+                    self.bury_quietly(w, &e);
+                    if w < self.trace_pending.len() {
+                        self.trace_pending[w] = false;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+    }
+
+    /// Per-pass straggler sweep over the round latencies just recorded: a
+    /// worker whose round ran `straggler_factor`× past the fleet's
+    /// (lower-)median is flagged in the ledger and the trace. With two
+    /// workers the lower median is the faster one, so a delayed worker in
+    /// a 2-node fleet is still caught.
+    fn update_stragglers(&mut self) {
+        let mut lats: Vec<(usize, u64)> = Vec::new();
+        for (w, d) in self.dispatched_at.iter().enumerate() {
+            if d.is_some() && self.members.is_alive(w) {
+                let ns = self.ledger.worker(w).round_nanos.load(Ordering::Relaxed);
+                if ns > 0 {
+                    lats.push((w, ns));
+                }
+            }
+        }
+        if lats.len() < 2 {
+            return;
+        }
+        let mut sorted: Vec<u64> = lats.iter().map(|&(_, ns)| ns).collect();
+        sorted.sort_unstable();
+        let median = sorted[(sorted.len() - 1) / 2].max(1);
+        let factor = self.config.straggler_factor.max(1.0);
+        for (w, ns) in lats {
+            if ns as f64 > factor * median as f64 {
+                self.ledger.stragglers.fetch_add(1, Ordering::Relaxed);
+                let addr = self.addr(w);
+                self.ledger.record_event(
+                    "straggler",
+                    format!(
+                        "worker {addr} round took {:.3}s vs fleet median {:.3}s (pass {})",
+                        ns as f64 / 1e9,
+                        median as f64 / 1e9,
+                        self.pass_id
+                    ),
+                );
+                telemetry::event(
+                    "cluster.straggler",
+                    vec![
+                        ("addr", addr.into()),
+                        ("pass_id", self.pass_id.into()),
+                        ("round_ns", ns.into()),
+                        ("median_ns", median.into()),
+                    ],
+                );
+            }
+        }
+    }
+
+    /// Drain the local recorder and write ONE merged cross-process JSONL
+    /// trace: the driver's own spans plus every worker batch shipped this
+    /// fit, already skew-corrected onto the driver clock. Returns
+    /// `(span count, total drops across all processes)`.
+    pub fn export_merged_trace(&mut self, path: &Path) -> std::io::Result<(usize, u64)> {
+        let local = telemetry::drain();
+        let mut spans: Vec<TraceSpan> = local.spans.iter().map(TraceSpan::from).collect();
+        spans.append(&mut self.remote_spans);
+        let dropped = local.dropped + self.remote_dropped;
+        self.remote_dropped = 0;
+        telemetry::trace::write_merged_jsonl(path, &mut spans, dropped)?;
+        Ok((spans.len(), dropped))
     }
 
     /// The chaos half of [`ClusterPass::commit_pass`] for replayed passes
@@ -1084,9 +1392,30 @@ impl ClusterPass {
     /// restart drill can crash at the same point twice).
     fn commit_chaos_only(&mut self) -> anyhow::Result<()> {
         if self.config.chaos.die_after_pass == Some(self.pass_id) {
+            self.record_chaos_halt();
             anyhow::bail!("chaos: driver halt after pass {}", self.pass_id);
         }
         Ok(())
+    }
+}
+
+/// A wire span as shipped by a worker, re-expressed in the JSONL trace
+/// vocabulary (`kind` strings, attrs as a JSON object).
+fn wire_to_trace_span(s: &WireSpan) -> TraceSpan {
+    let mut attrs = Json::obj();
+    for (k, v) in &s.attrs {
+        attrs.set(k, v.to_json());
+    }
+    TraceSpan {
+        kind: if s.kind == 1 { "event" } else { "span" }.to_string(),
+        id: s.id,
+        parent: s.parent,
+        name: s.name.clone(),
+        thread: s.thread,
+        start_ns: s.start_ns,
+        wall_ns: s.wall_ns,
+        cpu_ns: s.cpu_ns,
+        attrs,
     }
 }
 
@@ -1140,6 +1469,10 @@ impl PassEngine for ClusterPass {
 
     fn passes(&self) -> usize {
         self.passes
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
     }
 }
 

@@ -15,8 +15,9 @@
 //! *counts* what it dropped (`events_dropped`), mirroring the
 //! no-silent-deletion policy of [`crate::lifecycle`]'s audit ledger.
 
+use crate::telemetry::{counter, counter_vec, gauge, gauge_vec, Family, MetricSource};
 use crate::util::json::{jarr, jnum, jstr, Json};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
@@ -39,6 +40,10 @@ pub struct WorkerLedger {
     pub dead: AtomicBool,
     /// True for workers that joined mid-job rather than at connect.
     pub joined: AtomicBool,
+    /// Wall time of this worker's most recent round, dispatch → last
+    /// partial, in nanoseconds (0 until its first completed round). A
+    /// gauge, not a sum: scrapes see the current round latency.
+    pub round_nanos: AtomicU64,
 }
 
 /// One audit-trail entry: a membership or recovery event, with a
@@ -46,7 +51,8 @@ pub struct WorkerLedger {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ClusterEvent {
     pub seq: u64,
-    /// `join` | `death` | `resume` | `checkpoint` | `mirror`.
+    /// `join` | `death` | `redispatch` | `resume` | `checkpoint` |
+    /// `mirror` | `chaos` | `straggler`.
     pub kind: String,
     pub detail: String,
 }
@@ -57,6 +63,10 @@ struct EventLog {
     next_seq: u64,
     dropped: u64,
     retain: usize,
+    /// Lifetime per-kind tallies — bumped on every record and *immune* to
+    /// retention, so the audit-trail counters stay exact even after
+    /// compaction evicts the events themselves.
+    tally: BTreeMap<String, u64>,
 }
 
 /// The cluster-wide ledger: one entry per registered worker (including
@@ -66,6 +76,9 @@ pub struct ClusterLedger {
     workers: RwLock<Vec<Arc<WorkerLedger>>>,
     /// Total pass rounds the driver has executed.
     pub rounds: AtomicU64,
+    /// Rounds in which at least one worker was flagged as a straggler
+    /// (its round latency exceeded the fleet median × straggler factor).
+    pub stragglers: AtomicU64,
     events: Mutex<EventLog>,
 }
 
@@ -89,11 +102,13 @@ impl ClusterLedger {
                     .collect(),
             ),
             rounds: AtomicU64::new(0),
+            stragglers: AtomicU64::new(0),
             events: Mutex::new(EventLog {
                 events: VecDeque::new(),
                 next_seq: 1,
                 dropped: 0,
                 retain: EVENT_RETAIN,
+                tally: BTreeMap::new(),
             }),
         }
     }
@@ -128,6 +143,7 @@ impl ClusterLedger {
         let mut log = self.events.lock().unwrap();
         let seq = log.next_seq;
         log.next_seq += 1;
+        *log.tally.entry(kind.to_string()).or_insert(0) += 1;
         log.events.push_back(ClusterEvent {
             seq,
             kind: kind.to_string(),
@@ -145,6 +161,12 @@ impl ClusterLedger {
         (log.events.iter().cloned().collect(), log.dropped)
     }
 
+    /// Lifetime per-kind event counts (retention-immune).
+    pub fn event_counts(&self) -> Vec<(String, u64)> {
+        let log = self.events.lock().unwrap();
+        log.tally.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
     pub fn to_json(&self) -> Json {
         let g = |c: &AtomicU64| jnum(c.load(Ordering::Relaxed) as f64);
         let mut workers = Vec::new();
@@ -157,7 +179,11 @@ impl ClusterLedger {
                 .set("heartbeats", g(&w.heartbeats))
                 .set("failures", g(&w.failures))
                 .set("dead", Json::Bool(w.dead.load(Ordering::Relaxed)))
-                .set("joined", Json::Bool(w.joined.load(Ordering::Relaxed)));
+                .set("joined", Json::Bool(w.joined.load(Ordering::Relaxed)))
+                .set(
+                    "round_secs",
+                    jnum(w.round_nanos.load(Ordering::Relaxed) as f64 / 1e9),
+                );
             workers.push(o);
         }
         let (events, dropped) = self.events();
@@ -170,13 +196,92 @@ impl ClusterLedger {
                 .set("detail", jstr(&e.detail));
             evs.push(o);
         }
+        let mut counts = Json::obj();
+        for (k, v) in self.event_counts() {
+            counts.set(&k, jnum(v as f64));
+        }
         let mut o = Json::obj();
         o.set("rounds", g(&self.rounds))
+            .set("stragglers", g(&self.stragglers))
             .set("workers", jarr(workers))
             .set("events", jarr(evs))
+            .set("event_counts", counts)
             .set("events_recorded", jnum(recorded as f64))
             .set("events_dropped", jnum(dropped as f64));
         o
+    }
+}
+
+/// The audit trail and per-worker round latencies as a metrics source, so
+/// a long-lived driver (`repro fit --metrics-listen`) exposes cluster
+/// health on `GET /metrics?format=prom` alongside the coordinator's
+/// counters.
+impl MetricSource for ClusterLedger {
+    fn snapshot_json(&self) -> Json {
+        self.to_json()
+    }
+
+    fn prom_families(&self) -> Vec<Family> {
+        let (_, dropped) = self.events();
+        let recorded = self.events.lock().unwrap().next_seq - 1;
+        let latencies: Vec<(String, f64)> = self
+            .workers
+            .read()
+            .unwrap()
+            .iter()
+            .map(|w| {
+                (
+                    w.addr.clone(),
+                    w.round_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+                )
+            })
+            .collect();
+        let dead = self
+            .workers
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|w| w.dead.load(Ordering::Relaxed))
+            .count();
+        vec![
+            counter(
+                "rcca_cluster_rounds_total",
+                "Pass rounds the driver has executed",
+                self.rounds.load(Ordering::Relaxed),
+            ),
+            gauge(
+                "rcca_cluster_stragglers",
+                "Rounds with at least one straggling worker",
+                self.stragglers.load(Ordering::Relaxed) as f64,
+            ),
+            counter_vec(
+                "rcca_cluster_events_total",
+                "Cluster audit-trail events by kind (join, death, redispatch, checkpoint, chaos, ...)",
+                "kind",
+                &self.event_counts(),
+            ),
+            counter(
+                "rcca_cluster_events_recorded_total",
+                "Audit-trail events recorded (including compacted)",
+                recorded,
+            ),
+            counter(
+                "rcca_cluster_events_dropped_total",
+                "Audit-trail events evicted by the retention horizon",
+                dropped,
+            ),
+            gauge(
+                "rcca_cluster_workers_dead",
+                "Workers the driver has buried",
+                dead as f64,
+            ),
+            gauge_vec(
+                "rcca_cluster_worker_round_seconds",
+                "Most recent round latency per worker (dispatch to last partial)",
+                "worker",
+                &latencies,
+            ),
+        ]
     }
 }
 
@@ -486,6 +591,56 @@ mod tests {
         let _ = ledger.add_worker("d:4");
         w0.rounds.fetch_add(1, Ordering::Relaxed);
         assert_eq!(ledger.worker(0).rounds.load(Ordering::Relaxed), 1);
+    }
+
+    /// The audit trail doubles as a metrics source: per-kind tallies are
+    /// retention-immune and render in Prometheus text exposition.
+    #[test]
+    fn ledger_renders_as_prometheus_families() {
+        let ledger = ClusterLedger::new(&["a:1".to_string(), "b:2".to_string()]);
+        ledger.rounds.fetch_add(2, Ordering::Relaxed);
+        ledger.stragglers.fetch_add(1, Ordering::Relaxed);
+        ledger
+            .worker(0)
+            .round_nanos
+            .store(1_500_000_000, Ordering::Relaxed);
+        ledger.record_event("join", "c:3".to_string());
+        for i in 0..(EVENT_RETAIN as u64 + 5) {
+            ledger.record_event("death", format!("worker {i}"));
+        }
+        ledger.record_event("redispatch", "shard 3 -> b:2".to_string());
+        ledger.record_event("chaos", "delay-partial".to_string());
+        let counts = ledger.event_counts();
+        assert!(counts.contains(&("join".to_string(), 1)));
+        assert!(
+            counts.contains(&("death".to_string(), EVENT_RETAIN as u64 + 5)),
+            "tallies must survive retention compaction"
+        );
+        let text = crate::telemetry::render_families(&ledger.prom_families());
+        assert!(text.contains("rcca_cluster_rounds_total 2"), "{text}");
+        assert!(text.contains("rcca_cluster_stragglers 1"), "{text}");
+        assert!(
+            text.contains("rcca_cluster_events_total{kind=\"join\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("rcca_cluster_events_total{kind=\"redispatch\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("rcca_cluster_events_dropped_total"), "{text}");
+        assert!(
+            text.contains("rcca_cluster_worker_round_seconds{worker=\"a:1\"} 1.5"),
+            "{text}"
+        );
+        // The JSON side carries the same data additively.
+        let j = ledger.snapshot_json();
+        assert_eq!(j.get("stragglers").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            j.get("event_counts").unwrap().get("chaos").unwrap().as_usize(),
+            Some(1)
+        );
+        let ws = j.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(ws[0].get("round_secs").unwrap().as_f64(), Some(1.5));
     }
 
     #[test]

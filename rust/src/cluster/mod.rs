@@ -51,6 +51,18 @@
 //!   straggler/torn-checkpoint faults at declared pass indices, so tests
 //!   and CI assert bitwise equality between a chaos run and a clean one.
 //!
+//! The cluster is also **traced end to end**: when the driver's flight
+//! recorder is on, [`proto::Msg::AssignShards`] carries a
+//! [`proto::TraceAssign`] (shared trace id + a disjoint span-id namespace
+//! per worker) and every [`proto::Msg::RunPass`] a [`proto::TraceCtx`], so
+//! each worker's `round` span is a *true child* of the driver's. Workers
+//! ship their recorded spans back as [`proto::Msg::TraceShard`] batches
+//! that the driver skew-corrects (from the RunPass send/receive handshake)
+//! and merges into ONE cross-process timeline — `repro fit --cluster
+//! --trace out.jsonl`, analyzed offline by `repro trace --critical-path`
+//! and `--stragglers`. Context-less frames from old peers fail open to an
+//! untraced fit, never an aborted one.
+//!
 //! Everything is `std`-only, like [`crate::serve`]: no tokio, no serde.
 
 pub mod chaos;
@@ -65,7 +77,7 @@ pub use chaos::ChaosPlan;
 pub use checkpoint::{Checkpoint, CheckpointError, Fingerprint, PassRecord};
 pub use driver::{ClusterConfig, ClusterError, ClusterPass};
 pub use membership::{ClusterLedger, Membership, WorkerLedger};
-pub use proto::Msg;
+pub use proto::{Msg, TraceAssign, TraceCtx, WireSpan};
 pub use transport::Conn;
 pub use worker::{Worker, WorkerConfig};
 

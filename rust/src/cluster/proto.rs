@@ -27,10 +27,19 @@
 //! handshake runs over a worker-dialed connection when a worker *joins* a
 //! listening driver mid-job (`repro worker --join`): the driver still
 //! speaks first.
+//!
+//! Distributed tracing rides the same frames: [`Msg::AssignShards`] carries
+//! a [`TraceAssign`] (trace id + span-id namespace base) and
+//! [`Msg::RunPass`] carries a [`TraceCtx`] (trace id + driver parent span +
+//! driver monotonic send timestamp), both encoded as *trailing* optional
+//! fields so a context-less frame from an older peer decodes to the
+//! inactive default — tracing fails open to "untraced", it never aborts a
+//! fit. Workers ship their recorded spans back in a [`Msg::TraceShard`].
 
 use crate::coordinator::PassKind;
 use crate::data::shards::crc32;
 use crate::linalg::Mat;
+use crate::telemetry::AttrValue;
 
 pub const MAGIC: &[u8; 4] = b"RCLP";
 pub const PROTO_VERSION: u16 = 2;
@@ -53,6 +62,59 @@ const TAG_ABORT: u8 = 7;
 const TAG_FETCH_SHARDS: u8 = 8;
 const TAG_SHARD_DATA: u8 = 9;
 const TAG_SHARDS_HELD: u8 = 10;
+const TAG_TRACE_SHARD: u8 = 11;
+
+/// Per-pass trace context carried by [`Msg::RunPass`]: the worker opens its
+/// `round` span as a true child of `parent_span` and estimates clock skew
+/// from `driver_ns` (the driver's monotonic clock at send time). A zero
+/// `trace_id` (the default, and what a context-less frame decodes to)
+/// means "untraced".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub parent_span: u64,
+    pub driver_ns: u64,
+}
+
+impl TraceCtx {
+    pub fn active(&self) -> bool {
+        self.trace_id != 0
+    }
+}
+
+/// Trace setup carried by [`Msg::AssignShards`]: the worker (re)installs its
+/// flight recorder with span ids starting at `span_base`, a namespace the
+/// driver guarantees disjoint across the fleet — so merged cross-process
+/// span ids never collide and parent links stay unambiguous. Zero
+/// `trace_id` means "tracing off".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceAssign {
+    pub trace_id: u64,
+    pub span_base: u64,
+}
+
+impl TraceAssign {
+    pub fn active(&self) -> bool {
+        self.trace_id != 0
+    }
+}
+
+/// One recorded span or event in flight from worker to driver — the wire
+/// twin of [`crate::telemetry::SpanRecord`], with owned strings because the
+/// receiver outlives the worker's `&'static` names.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireSpan {
+    /// 0 = span, 1 = event.
+    pub kind: u8,
+    pub id: u64,
+    pub parent: u64,
+    pub name: String,
+    pub thread: u64,
+    pub start_ns: u64,
+    pub wall_ns: u64,
+    pub cpu_ns: u64,
+    pub attrs: Vec<(String, AttrValue)>,
+}
 
 /// One protocol message.
 #[derive(Debug, Clone, PartialEq)]
@@ -88,6 +150,9 @@ pub enum Msg {
         io_threads: u32,
         shards: Vec<u32>,
         replicas: Vec<u32>,
+        /// Trailing optional trace setup; default (inactive) when absent
+        /// from the frame.
+        trace: TraceAssign,
     },
     /// Driver → worker: run one pass over `shards` (normally the standing
     /// assignment; a recovery re-dispatch lists reassigned shards). `qa32`
@@ -100,6 +165,9 @@ pub enum Msg {
         qa32: Vec<f32>,
         qb32: Vec<f32>,
         shards: Vec<u32>,
+        /// Trailing optional trace context; default (inactive) when absent
+        /// from the frame.
+        ctx: TraceCtx,
     },
     /// Worker → driver: one shard's partial results (f64, exactly what the
     /// in-process shard task would have produced).
@@ -128,6 +196,18 @@ pub enum Msg {
     /// mirror pulls). The driver uses it to keep replica-holder routing
     /// accurate.
     ShardsHeld { have: Vec<u32> },
+    /// Worker → driver: the spans this worker recorded for one pass,
+    /// drained from its flight recorder after the round closes. `skew_ns`
+    /// is the worker's estimate of (its monotonic clock − the driver's),
+    /// from the RunPass send/receive handshake; the driver subtracts it
+    /// when merging timelines. `dropped` counts spans evicted by the
+    /// worker's rings before shipping.
+    TraceShard {
+        pass_id: u64,
+        skew_ns: i64,
+        dropped: u64,
+        spans: Vec<WireSpan>,
+    },
 }
 
 impl Msg {
@@ -143,6 +223,7 @@ impl Msg {
             Msg::FetchShards { .. } => TAG_FETCH_SHARDS,
             Msg::ShardData { .. } => TAG_SHARD_DATA,
             Msg::ShardsHeld { .. } => TAG_SHARDS_HELD,
+            Msg::TraceShard { .. } => TAG_TRACE_SHARD,
         }
     }
 }
@@ -173,6 +254,53 @@ fn push_mat(buf: &mut Vec<u8>, m: &Mat) {
     push_u32(buf, m.cols as u32);
     for v in &m.data {
         buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn push_str(buf: &mut Vec<u8>, s: &str) {
+    push_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+const ATTR_U64: u8 = 0;
+const ATTR_I64: u8 = 1;
+const ATTR_F64: u8 = 2;
+const ATTR_STR: u8 = 3;
+
+fn push_attr(buf: &mut Vec<u8>, v: &AttrValue) {
+    match v {
+        AttrValue::U64(x) => {
+            buf.push(ATTR_U64);
+            push_u64(buf, *x);
+        }
+        AttrValue::I64(x) => {
+            buf.push(ATTR_I64);
+            push_u64(buf, *x as u64);
+        }
+        AttrValue::F64(x) => {
+            buf.push(ATTR_F64);
+            push_u64(buf, x.to_bits());
+        }
+        AttrValue::Str(s) => {
+            buf.push(ATTR_STR);
+            push_str(buf, s);
+        }
+    }
+}
+
+fn push_wire_span(buf: &mut Vec<u8>, s: &WireSpan) {
+    buf.push(s.kind);
+    push_u64(buf, s.id);
+    push_u64(buf, s.parent);
+    push_str(buf, &s.name);
+    push_u64(buf, s.thread);
+    push_u64(buf, s.start_ns);
+    push_u64(buf, s.wall_ns);
+    push_u64(buf, s.cpu_ns);
+    push_u32(buf, s.attrs.len() as u32);
+    for (k, v) in &s.attrs {
+        push_str(buf, k);
+        push_attr(buf, v);
     }
 }
 
@@ -249,6 +377,52 @@ impl<'a> Cursor<'a> {
         }
         Ok(self.take(n)?.to_vec())
     }
+    /// True when every body byte has been consumed — the gate for trailing
+    /// optional fields: older peers simply stop the body early.
+    fn at_end(&self) -> bool {
+        self.pos == self.data.len()
+    }
+    fn attr(&mut self) -> Result<AttrValue, String> {
+        let tag = self.u8()?;
+        Ok(match tag {
+            ATTR_U64 => AttrValue::U64(self.u64()?),
+            ATTR_I64 => AttrValue::I64(self.u64()? as i64),
+            ATTR_F64 => AttrValue::F64(f64::from_bits(self.u64()?)),
+            ATTR_STR => AttrValue::Str(self.string()?),
+            other => return Err(format!("unknown attr value tag {other}")),
+        })
+    }
+    fn wire_span(&mut self) -> Result<WireSpan, String> {
+        let kind = self.u8()?;
+        if kind > 1 {
+            return Err(format!("unknown wire span kind {kind}"));
+        }
+        let id = self.u64()?;
+        let parent = self.u64()?;
+        let name = self.string()?;
+        let thread = self.u64()?;
+        let start_ns = self.u64()?;
+        let wall_ns = self.u64()?;
+        let cpu_ns = self.u64()?;
+        let nattrs = self.u32()? as usize;
+        let mut attrs = Vec::new();
+        for _ in 0..nattrs {
+            let key = self.string()?;
+            let val = self.attr()?;
+            attrs.push((key, val));
+        }
+        Ok(WireSpan {
+            kind,
+            id,
+            parent,
+            name,
+            thread,
+            start_ns,
+            wall_ns,
+            cpu_ns,
+            attrs,
+        })
+    }
     fn done(&self) -> Result<(), String> {
         if self.pos != self.data.len() {
             return Err(format!(
@@ -284,12 +458,15 @@ fn encode_body(msg: &Msg) -> Vec<u8> {
             io_threads,
             shards,
             replicas,
+            trace,
         } => {
             push_u32(&mut b, *chunk_rows);
             push_u32(&mut b, *prefetch_depth);
             push_u32(&mut b, *io_threads);
             push_u32s(&mut b, shards);
             push_u32s(&mut b, replicas);
+            push_u64(&mut b, trace.trace_id);
+            push_u64(&mut b, trace.span_base);
         }
         Msg::RunPass {
             pass_id,
@@ -298,6 +475,7 @@ fn encode_body(msg: &Msg) -> Vec<u8> {
             qa32,
             qb32,
             shards,
+            ctx,
         } => {
             push_u64(&mut b, *pass_id);
             b.push(kind.tag());
@@ -305,6 +483,9 @@ fn encode_body(msg: &Msg) -> Vec<u8> {
             push_f32s(&mut b, qa32);
             push_f32s(&mut b, qb32);
             push_u32s(&mut b, shards);
+            push_u64(&mut b, ctx.trace_id);
+            push_u64(&mut b, ctx.parent_span);
+            push_u64(&mut b, ctx.driver_ns);
         }
         Msg::Partial {
             pass_id,
@@ -337,6 +518,20 @@ fn encode_body(msg: &Msg) -> Vec<u8> {
             b.extend_from_slice(bytes);
         }
         Msg::ShardsHeld { have } => push_u32s(&mut b, have),
+        Msg::TraceShard {
+            pass_id,
+            skew_ns,
+            dropped,
+            spans,
+        } => {
+            push_u64(&mut b, *pass_id);
+            push_u64(&mut b, *skew_ns as u64);
+            push_u64(&mut b, *dropped);
+            push_u32(&mut b, spans.len() as u32);
+            for s in spans {
+                push_wire_span(&mut b, s);
+            }
+        }
     }
     b
 }
@@ -352,25 +547,57 @@ fn decode_body(tag: u8, body: &[u8]) -> Result<Msg, String> {
             dims_b: cur.u64()?,
             have: cur.u32s()?,
         },
-        TAG_ASSIGN => Msg::AssignShards {
-            chunk_rows: cur.u32()?,
-            prefetch_depth: cur.u32()?,
-            io_threads: cur.u32()?,
-            shards: cur.u32s()?,
-            replicas: cur.u32s()?,
-        },
+        TAG_ASSIGN => {
+            let chunk_rows = cur.u32()?;
+            let prefetch_depth = cur.u32()?;
+            let io_threads = cur.u32()?;
+            let shards = cur.u32s()?;
+            let replicas = cur.u32s()?;
+            // Trailing optional: a context-less frame decodes to the
+            // inactive default (tracing fails open, never aborts a fit).
+            let trace = if cur.at_end() {
+                TraceAssign::default()
+            } else {
+                TraceAssign {
+                    trace_id: cur.u64()?,
+                    span_base: cur.u64()?,
+                }
+            };
+            Msg::AssignShards {
+                chunk_rows,
+                prefetch_depth,
+                io_threads,
+                shards,
+                replicas,
+                trace,
+            }
+        }
         TAG_RUN_PASS => {
             let pass_id = cur.u64()?;
             let kind_tag = cur.u8()?;
             let kind = PassKind::from_tag(kind_tag)
                 .ok_or_else(|| format!("unknown pass kind tag {kind_tag}"))?;
+            let r = cur.u32()?;
+            let qa32 = cur.f32s()?;
+            let qb32 = cur.f32s()?;
+            let shards = cur.u32s()?;
+            let ctx = if cur.at_end() {
+                TraceCtx::default()
+            } else {
+                TraceCtx {
+                    trace_id: cur.u64()?,
+                    parent_span: cur.u64()?,
+                    driver_ns: cur.u64()?,
+                }
+            };
             Msg::RunPass {
                 pass_id,
                 kind,
-                r: cur.u32()?,
-                qa32: cur.f32s()?,
-                qb32: cur.f32s()?,
-                shards: cur.u32s()?,
+                r,
+                qa32,
+                qb32,
+                shards,
+                ctx,
             }
         }
         TAG_PARTIAL => {
@@ -401,6 +628,22 @@ fn decode_body(tag: u8, body: &[u8]) -> Result<Msg, String> {
             bytes: cur.bytes()?,
         },
         TAG_SHARDS_HELD => Msg::ShardsHeld { have: cur.u32s()? },
+        TAG_TRACE_SHARD => {
+            let pass_id = cur.u64()?;
+            let skew_ns = cur.u64()? as i64;
+            let dropped = cur.u64()?;
+            let nspans = cur.u32()? as usize;
+            let mut spans = Vec::new();
+            for _ in 0..nspans {
+                spans.push(cur.wire_span()?);
+            }
+            Msg::TraceShard {
+                pass_id,
+                skew_ns,
+                dropped,
+                spans,
+            }
+        }
         other => return Err(format!("unknown message tag {other}")),
     };
     cur.done()?;
@@ -440,6 +683,7 @@ pub fn encode_run_pass(
     qa32: &[f32],
     qb32: &[f32],
     shards: &[u32],
+    ctx: TraceCtx,
 ) -> Vec<u8> {
     let mut b = Vec::new();
     push_u64(&mut b, pass_id);
@@ -448,6 +692,9 @@ pub fn encode_run_pass(
     push_f32s(&mut b, qa32);
     push_f32s(&mut b, qb32);
     push_u32s(&mut b, shards);
+    push_u64(&mut b, ctx.trace_id);
+    push_u64(&mut b, ctx.parent_span);
+    push_u64(&mut b, ctx.driver_ns);
     finish_frame(TAG_RUN_PASS, b)
 }
 
@@ -519,6 +766,18 @@ mod tests {
                 io_threads: 1,
                 shards: vec![0, 2, 4],
                 replicas: vec![0, 1, 2, 4],
+                trace: TraceAssign::default(),
+            },
+            Msg::AssignShards {
+                chunk_rows: 64,
+                prefetch_depth: 1,
+                io_threads: 2,
+                shards: vec![1],
+                replicas: vec![1, 3],
+                trace: TraceAssign {
+                    trace_id: 0xabcd,
+                    span_base: 1 << 40,
+                },
             },
             Msg::RunPass {
                 pass_id: 3,
@@ -527,6 +786,7 @@ mod tests {
                 qa32: vec![1.5, -2.0, 0.25, 3.0],
                 qb32: vec![0.5; 6],
                 shards: vec![1, 3],
+                ctx: TraceCtx::default(),
             },
             Msg::RunPass {
                 pass_id: 4,
@@ -535,6 +795,11 @@ mod tests {
                 qa32: vec![],
                 qb32: vec![],
                 shards: vec![0],
+                ctx: TraceCtx {
+                    trace_id: 0xabcd,
+                    parent_span: 17,
+                    driver_ns: 123_456_789,
+                },
             },
             Msg::Partial {
                 pass_id: 3,
@@ -566,6 +831,46 @@ mod tests {
             Msg::ShardsHeld {
                 have: vec![0, 2, 5],
             },
+            Msg::TraceShard {
+                pass_id: 3,
+                skew_ns: -42_000,
+                dropped: 7,
+                spans: vec![
+                    WireSpan {
+                        kind: 0,
+                        id: (1 << 40) + 2,
+                        parent: 17,
+                        name: "round".to_string(),
+                        thread: 1,
+                        start_ns: 1_000,
+                        wall_ns: 2_500,
+                        cpu_ns: 2_000,
+                        attrs: vec![
+                            ("pass_id".to_string(), AttrValue::U64(3)),
+                            ("skew".to_string(), AttrValue::I64(-42_000)),
+                            ("ratio".to_string(), AttrValue::F64(0.75)),
+                            ("kind".to_string(), AttrValue::Str("power".to_string())),
+                        ],
+                    },
+                    WireSpan {
+                        kind: 1,
+                        id: 0,
+                        parent: (1 << 40) + 2,
+                        name: "cluster.chaos".to_string(),
+                        thread: 1,
+                        start_ns: 1_500,
+                        wall_ns: 0,
+                        cpu_ns: 0,
+                        attrs: vec![],
+                    },
+                ],
+            },
+            Msg::TraceShard {
+                pass_id: 9,
+                skew_ns: 0,
+                dropped: 0,
+                spans: vec![],
+            },
         ]
     }
 
@@ -582,16 +887,81 @@ mod tests {
     #[test]
     fn borrowed_run_pass_encode_matches_owned() {
         let (qa, qb, shards) = (vec![1.0f32, -2.5], vec![0.5f32; 4], vec![3u32, 9]);
-        let owned = encode_frame(&Msg::RunPass {
-            pass_id: 12,
-            kind: PassKind::Final,
-            r: 2,
-            qa32: qa.clone(),
-            qb32: qb.clone(),
-            shards: shards.clone(),
-        });
-        let borrowed = encode_run_pass(12, PassKind::Final, 2, &qa, &qb, &shards);
-        assert_eq!(owned, borrowed);
+        for ctx in [
+            TraceCtx::default(),
+            TraceCtx {
+                trace_id: 7,
+                parent_span: 99,
+                driver_ns: 1_000_000,
+            },
+        ] {
+            let owned = encode_frame(&Msg::RunPass {
+                pass_id: 12,
+                kind: PassKind::Final,
+                r: 2,
+                qa32: qa.clone(),
+                qb32: qb.clone(),
+                shards: shards.clone(),
+                ctx,
+            });
+            let borrowed = encode_run_pass(12, PassKind::Final, 2, &qa, &qb, &shards, ctx);
+            assert_eq!(owned, borrowed);
+        }
+    }
+
+    /// A context-less body (what a pre-tracing peer sends) must decode to
+    /// the *inactive* trace context — tracing fails open to untraced, it
+    /// never aborts the fit.
+    #[test]
+    fn context_less_run_pass_fails_open_to_untraced() {
+        let mut b = Vec::new();
+        push_u64(&mut b, 5);
+        b.push(PassKind::Power.tag());
+        push_u32(&mut b, 2);
+        push_f32s(&mut b, &[1.0, 2.0]);
+        push_f32s(&mut b, &[3.0]);
+        push_u32s(&mut b, &[0, 1]);
+        // No trailing TraceCtx bytes — an old frame ends here.
+        let msg = decode_body(TAG_RUN_PASS, &b).unwrap();
+        let Msg::RunPass { pass_id, ctx, .. } = msg else {
+            panic!("wrong variant");
+        };
+        assert_eq!(pass_id, 5);
+        assert_eq!(ctx, TraceCtx::default());
+        assert!(!ctx.active());
+    }
+
+    #[test]
+    fn context_less_assign_fails_open_to_untraced() {
+        let mut b = Vec::new();
+        push_u32(&mut b, 60);
+        push_u32(&mut b, 2);
+        push_u32(&mut b, 1);
+        push_u32s(&mut b, &[0, 2]);
+        push_u32s(&mut b, &[0, 1, 2]);
+        // No trailing TraceAssign bytes.
+        let msg = decode_body(TAG_ASSIGN, &b).unwrap();
+        let Msg::AssignShards { trace, shards, .. } = msg else {
+            panic!("wrong variant");
+        };
+        assert_eq!(shards, vec![0, 2]);
+        assert_eq!(trace, TraceAssign::default());
+        assert!(!trace.active());
+    }
+
+    /// A *partial* trailing context (truncated mid-field) is corruption,
+    /// not an old peer — it must still be rejected.
+    #[test]
+    fn truncated_trace_context_is_rejected() {
+        let mut b = Vec::new();
+        push_u64(&mut b, 5);
+        b.push(PassKind::Power.tag());
+        push_u32(&mut b, 1);
+        push_f32s(&mut b, &[]);
+        push_f32s(&mut b, &[]);
+        push_u32s(&mut b, &[0]);
+        push_u64(&mut b, 7); // trace_id only; parent_span/driver_ns missing
+        assert!(decode_body(TAG_RUN_PASS, &b).is_err());
     }
 
     /// The whole-pass sentinel is a reserved shard value, not a separate

@@ -23,7 +23,7 @@
 //! single-shard compute time.
 
 use super::chaos::ChaosPlan;
-use super::proto::{Msg, SHARD_NONE};
+use super::proto::{Msg, TraceCtx, WireSpan, SHARD_NONE};
 use super::transport::{self, Conn};
 use crate::coordinator::{Metrics, PassKind, RunnerConfig, ShardTaskRunner};
 use crate::data::shards::ShardStore;
@@ -268,6 +268,11 @@ impl WorkerCore {
         let mut pending: VecDeque<Msg> = VecDeque::new();
         // Highest pass seen, for chaos gating.
         let mut last_pass = 0u64;
+        // Trace id this connection installed the recorder for (0 = none).
+        // Spans are only drained and shipped when the recorder was
+        // installed *by this wire* — an in-process worker sharing a
+        // driver's recorder must never steal its spans.
+        let mut wire_trace_id = 0u64;
         loop {
             // Idle: block until the driver speaks or hangs up. EOF here is
             // the normal end of a driver's life, not a fault.
@@ -291,7 +296,35 @@ impl WorkerCore {
                     io_threads,
                     shards,
                     replicas,
+                    trace,
                 } => {
+                    if trace.trace_id != wire_trace_id {
+                        if trace.active() {
+                            if telemetry::enabled() && wire_trace_id == 0 {
+                                // The recorder belongs to someone else in
+                                // this process (in-thread worker under a
+                                // traced driver): leave it alone and stay
+                                // untraced — the driver fails open.
+                                eprintln!(
+                                    "worker: tracing requested but the recorder is already \
+                                     owned in-process; staying untraced"
+                                );
+                            } else {
+                                telemetry::install_with_base(
+                                    telemetry::DEFAULT_CAPACITY,
+                                    trace.span_base,
+                                );
+                                wire_trace_id = trace.trace_id;
+                                eprintln!(
+                                    "worker: tracing enabled (trace {:x}, span base {:x})",
+                                    trace.trace_id, trace.span_base
+                                );
+                            }
+                        } else {
+                            telemetry::disable();
+                            wire_trace_id = 0;
+                        }
+                    }
                     let chunk_rows = (chunk_rows as usize).max(1);
                     let stream = StreamConfig {
                         prefetch_depth: prefetch_depth as usize,
@@ -327,8 +360,10 @@ impl WorkerCore {
                     qa32,
                     qb32,
                     shards,
+                    ctx,
                 } => {
                     last_pass = last_pass.max(pass_id);
+                    let wire_traced = ctx.active() && ctx.trace_id == wire_trace_id;
                     self.run_pass(
                         conn,
                         &session,
@@ -339,6 +374,8 @@ impl WorkerCore {
                         &qa32,
                         &qb32,
                         &shards,
+                        ctx,
+                        wire_traced,
                     )?;
                 }
                 // Abort outside a pass is stale driver state; ignore.
@@ -448,6 +485,10 @@ impl WorkerCore {
     /// requested shard, polling for control traffic between shards.
     /// Non-control messages that arrive mid-pass (a recovery re-dispatch)
     /// are parked in `pending` for the serve loop, never dropped.
+    /// With an active wire trace context, the worker's `round` span is a
+    /// *true child* of the driver's round span, and the recorded spans are
+    /// drained and shipped back as a [`Msg::TraceShard`] when the round
+    /// closes.
     #[allow(clippy::too_many_arguments)]
     fn run_pass(
         &self,
@@ -460,11 +501,28 @@ impl WorkerCore {
         qa32: &[f32],
         qb32: &[f32],
         shards: &[u32],
+        ctx: TraceCtx,
+        wire_traced: bool,
     ) -> Result<(), String> {
         self.metrics.add(&self.metrics.passes, 1);
-        // The worker-side half of the round: same name and `pass_id` attr
-        // as the driver's span, so the two traces correlate offline.
-        let mut round_span = telemetry::span("round");
+        // Clock-skew estimate from the RunPass handshake: the driver
+        // stamped its monotonic clock at send time; ours minus theirs
+        // (receipt ≈ send + network latency, which the driver treats as
+        // part of the skew — consistent across a fit, so relative
+        // ordering survives).
+        let skew_ns = if wire_traced {
+            telemetry::now_ns() as i64 - ctx.driver_ns as i64
+        } else {
+            0
+        };
+        // The worker-side half of the round: a true child of the driver's
+        // round span when a trace context rides the wire, else a local
+        // root correlated only by the `pass_id` attr.
+        let mut round_span = if ctx.active() {
+            telemetry::span_child_of("round", ctx.parent_span)
+        } else {
+            telemetry::span("round")
+        };
         round_span
             .attr("pass_id", pass_id)
             .attr("kind", kind.as_str())
@@ -487,7 +545,8 @@ impl WorkerCore {
                     qb32.len()
                 ),
             })?;
-            return Ok(());
+            drop(round_span);
+            return self.ship_trace(conn, pass_id, skew_ns, wire_traced);
         }
         // Arm the streaming pipeline with this pass's shard order (no-op
         // for cached sessions): reads run ahead of the shard loop below.
@@ -520,6 +579,16 @@ impl WorkerCore {
                     self.metrics.add(&self.metrics.tasks_completed, 1);
                     if self.config.chaos.delay_partial_ms > 0 {
                         // Straggler drill: lateness must never change bits.
+                        telemetry::event(
+                            "cluster.chaos",
+                            vec![
+                                ("kind", telemetry::AttrValue::Str("delay_partial".into())),
+                                (
+                                    "delay_ms",
+                                    telemetry::AttrValue::U64(self.config.chaos.delay_partial_ms),
+                                ),
+                            ],
+                        );
                         std::thread::sleep(Duration::from_millis(
                             self.config.chaos.delay_partial_ms,
                         ));
@@ -553,12 +622,60 @@ impl WorkerCore {
                 }
             }
         }
-        Ok(())
+        drop(round_span);
+        self.ship_trace(conn, pass_id, skew_ns, wire_traced)
+    }
+
+    /// Drain the local flight recorder and ship the collected spans to the
+    /// driver as one `TraceShard`, tagged with this pass's clock-skew
+    /// estimate. No-op when the pass was not wire-traced: a worker whose
+    /// recorder belongs to someone else (in-process fleets share the
+    /// driver's globals) must never drain it.
+    fn ship_trace(
+        &self,
+        conn: &mut Conn,
+        pass_id: u64,
+        skew_ns: i64,
+        wire_traced: bool,
+    ) -> Result<(), String> {
+        if !wire_traced {
+            return Ok(());
+        }
+        let trace = telemetry::drain();
+        let spans: Vec<WireSpan> = trace
+            .spans
+            .iter()
+            .map(|rec| WireSpan {
+                kind: match rec.kind {
+                    telemetry::RecordKind::Span => 0,
+                    telemetry::RecordKind::Event => 1,
+                },
+                id: rec.id,
+                parent: rec.parent,
+                name: rec.name.to_string(),
+                thread: rec.thread,
+                start_ns: rec.start_ns,
+                wall_ns: rec.wall_ns,
+                cpu_ns: rec.cpu_ns,
+                attrs: rec
+                    .attrs
+                    .iter()
+                    .map(|(k, v)| (k.to_string(), v.clone()))
+                    .collect(),
+            })
+            .collect();
+        conn.send(&Msg::TraceShard {
+            pass_id,
+            skew_ns,
+            dropped: trace.dropped,
+            spans,
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::proto::TraceAssign;
     use super::*;
     use crate::coordinator::{Accumulator, PassKind};
     use crate::data::shards::ShardWriter;
@@ -622,6 +739,7 @@ mod tests {
             io_threads: 1,
             shards: all.clone(),
             replicas: vec![],
+            trace: TraceAssign::default(),
         })
         .unwrap();
         // The worker answers every AssignShards with its holdings.
@@ -647,6 +765,7 @@ mod tests {
             qa32: qa32.clone(),
             qb32: qb32.clone(),
             shards: all,
+            ctx: TraceCtx::default(),
         })
         .unwrap();
         let mut got: Vec<Option<Vec<Mat>>> = vec![None; shards];
@@ -715,6 +834,7 @@ mod tests {
             io_threads: 2,
             shards: all.clone(),
             replicas: vec![],
+            trace: TraceAssign::default(),
         })
         .unwrap();
         let _held = conn.recv(Some(Duration::from_secs(10))).unwrap();
@@ -729,6 +849,7 @@ mod tests {
             qa32: qa32.clone(),
             qb32: qb32.clone(),
             shards: all,
+            ctx: TraceCtx::default(),
         })
         .unwrap();
         let mut got: Vec<Option<Vec<Mat>>> = vec![None; shards];
@@ -777,6 +898,7 @@ mod tests {
             qa32: vec![0.0; 3], // wrong: store wants 32*4
             qb32: vec![0.0; 3],
             shards: vec![0],
+            ctx: TraceCtx::default(),
         })
         .unwrap();
         match conn.recv(Some(Duration::from_secs(10))).unwrap() {
@@ -810,6 +932,7 @@ mod tests {
             qa32: vec![],
             qb32: vec![],
             shards: vec![999, 0],
+            ctx: TraceCtx::default(),
         })
         .unwrap();
         match conn.recv(Some(Duration::from_secs(10))).unwrap() {
@@ -882,6 +1005,7 @@ mod tests {
             io_threads: 1,
             shards: vec![0, 2, 4],
             replicas: vec![1, 3],
+            trace: TraceAssign::default(),
         })
         .unwrap();
         match conn.recv(Some(Duration::from_secs(30))).unwrap() {
@@ -903,6 +1027,7 @@ mod tests {
             qa32: qa32.clone(),
             qb32: qb32.clone(),
             shards: vec![1, 3],
+            ctx: TraceCtx::default(),
         })
         .unwrap();
         let reference = ShardTaskRunner::new(
@@ -949,6 +1074,7 @@ mod tests {
             io_threads: 1,
             shards: vec![0, 1, 3, 4],
             replicas: vec![2],
+            trace: TraceAssign::default(),
         })
         .unwrap();
         match conn.recv(Some(Duration::from_secs(10))).unwrap() {
@@ -1016,6 +1142,7 @@ mod tests {
             qa32: vec![],
             qb32: vec![],
             shards: vec![0],
+            ctx: TraceCtx::default(),
         })
         .unwrap();
         match conn.recv(Some(Duration::from_secs(30))).unwrap() {
@@ -1024,6 +1151,85 @@ mod tests {
         }
         conn.send(&Msg::Heartbeat { nonce: 2 }).unwrap();
         assert_eq!(conn.poll(Duration::from_millis(300)).unwrap(), None);
+        drop(conn);
+        handle.join().unwrap().unwrap();
+    }
+
+    /// A wire-traced pass installs the recorder at the assigned span base,
+    /// parents its `round` span under the driver's span id, and ships one
+    /// `TraceShard` after the partials. Assertions are containment-style:
+    /// the recorder is process-global, so spans from parallel tests may
+    /// ride along in the drained batch.
+    #[test]
+    fn traced_pass_ships_a_trace_shard_with_child_spans() {
+        let dir = shard_dir("traced");
+        let worker = Worker::bind(&dir, "127.0.0.1:0", WorkerConfig::default()).unwrap();
+        let addr = worker.local_addr();
+        let shards = worker.store().shards;
+        let handle = std::thread::spawn(move || worker.serve_one());
+
+        let mut conn = Conn::new(TcpStream::connect(addr).unwrap());
+        let _ = handshake(&mut conn);
+        let all: Vec<u32> = (0..shards as u32).collect();
+        conn.send(&Msg::AssignShards {
+            chunk_rows: 40,
+            prefetch_depth: 0,
+            io_threads: 1,
+            shards: all.clone(),
+            replicas: vec![],
+            trace: TraceAssign {
+                trace_id: 0x77,
+                span_base: 1 << 40,
+            },
+        })
+        .unwrap();
+        let _held = conn.recv(Some(Duration::from_secs(10))).unwrap();
+        let mut rng = Rng::new(5);
+        let qa = Mat::randn(32, 4, &mut rng);
+        let qb = Mat::randn(32, 4, &mut rng);
+        conn.send(&Msg::RunPass {
+            pass_id: 3,
+            kind: PassKind::Power,
+            r: 4,
+            qa32: mat_to_f32(&qa),
+            qb32: mat_to_f32(&qb),
+            shards: all,
+            ctx: TraceCtx {
+                trace_id: 0x77,
+                parent_span: 42,
+                driver_ns: 5_000,
+            },
+        })
+        .unwrap();
+        let mut partials = 0usize;
+        let (shard_pass, skew_ns, spans) = loop {
+            match conn.recv(Some(Duration::from_secs(30))).unwrap() {
+                Msg::Partial { .. } => partials += 1,
+                Msg::TraceShard {
+                    pass_id,
+                    skew_ns,
+                    spans,
+                    ..
+                } => break (pass_id, skew_ns, spans),
+                other => panic!("unexpected {other:?}"),
+            }
+        };
+        assert_eq!(partials, shards, "trace shard arrives after every partial");
+        assert_eq!(shard_pass, 3);
+        // Worker clock read after the driver stamped 5_000ns past the
+        // epoch: the handshake skew estimate must come out positive.
+        assert!(skew_ns > 0, "skew {skew_ns} should be positive here");
+        let round = spans
+            .iter()
+            .find(|s| s.kind == 0 && s.name == "round" && s.parent == 42)
+            .expect("round span parented under the driver's span id");
+        assert!(round.id >= 1 << 40, "span ids come from the assigned base");
+        let tasks = spans
+            .iter()
+            .filter(|s| s.name == "shard_task" && s.parent == round.id)
+            .count();
+        assert_eq!(tasks, shards, "every shard_task is a child of the round");
+        telemetry::disable();
         drop(conn);
         handle.join().unwrap().unwrap();
     }

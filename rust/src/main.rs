@@ -30,6 +30,7 @@ use rcca::util::cli::{Args, Spec};
 use rcca::util::timer::Timer;
 use std::net::SocketAddr;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -307,6 +308,54 @@ fn export_trace(path: &str) -> anyhow::Result<()> {
     telemetry::disable();
     println!("trace: {spans} spans ({dropped} dropped) -> {path}");
     Ok(())
+}
+
+/// Serve `GET /metrics` (JSON, or Prometheus text with `?format=prom`)
+/// from a background thread for the life of the process — just enough
+/// HTTP for scrapers and the CI smokes, without the full `rcca::serve`
+/// model-server stack. Returns the bound address (so `--metrics-listen
+/// 127.0.0.1:0` works in tests).
+fn serve_metrics(
+    listen: &str,
+    registry: Arc<telemetry::MetricsRegistry>,
+) -> anyhow::Result<SocketAddr> {
+    let listener = std::net::TcpListener::bind(listen)
+        .map_err(|e| anyhow::anyhow!("--metrics-listen {listen}: {e}"))?;
+    let addr = listener.local_addr()?;
+    println!("metrics listening at {addr}");
+    std::thread::Builder::new()
+        .name("fit-metrics".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(mut stream) = stream else { continue };
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+                let mut line = String::new();
+                {
+                    use std::io::BufRead;
+                    let mut reader = std::io::BufReader::new(&mut stream);
+                    if reader.read_line(&mut line).is_err() {
+                        continue;
+                    }
+                }
+                let target = line.split_whitespace().nth(1).unwrap_or("/");
+                let (status, ctype, body) = if target.starts_with("/metrics") {
+                    if target.contains("format=prom") {
+                        ("200 OK", "text/plain; version=0.0.4", registry.render_prom())
+                    } else {
+                        ("200 OK", "application/json", registry.render_json().to_string())
+                    }
+                } else {
+                    ("404 Not Found", "text/plain", "not found\n".to_string())
+                };
+                use std::io::Write;
+                let _ = write!(
+                    stream,
+                    "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                    body.len()
+                );
+            }
+        })?;
+    Ok(addr)
 }
 
 fn cmd_horst(argv: Vec<String>) -> anyhow::Result<()> {
@@ -623,7 +672,30 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
         )
         .opt("report-dir", "reports", "where JSON twins are written")
         .opt("save", "", "write the fitted model JSON to this path")
-        .opt("trace", "", "write a JSONL span trace of the driver's fit rounds to this path");
+        .opt(
+            "trace",
+            "",
+            "write ONE merged cross-process JSONL span trace of the fit (driver rounds \
+             with every worker's round/shard_task spans parented under them)",
+        )
+        .opt(
+            "straggler-factor",
+            "2.0",
+            "flag a worker as a straggler when its round latency exceeds the fleet \
+             median by this factor (ledger event + rcca_cluster_stragglers gauge)",
+        )
+        .opt(
+            "metrics-listen",
+            "",
+            "serve GET /metrics for the cluster ledger on this address during the fit \
+             (JSON; append ?format=prom for Prometheus text)",
+        )
+        .opt(
+            "metrics-linger-secs",
+            "0",
+            "keep the --metrics-listen endpoint up this long after the fit report, so \
+             external scrapers (CI smokes) can read the final gauges",
+        );
     let args = parse(spec, &argv)?;
     let scale = scale_from(&args)?;
     let k = scale.k;
@@ -643,6 +715,7 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
         resume: path_opt(args.str("resume")),
         listen: (!args.str("listen").is_empty()).then(|| args.str("listen").to_string()),
         chaos: parse_chaos(args.str("chaos"))?,
+        straggler_factor: args.f64("straggler-factor")?,
         ..Default::default()
     };
     let mut engine = Engine::cluster(&addrs, config)?;
@@ -659,6 +732,16 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
     if !trace_path.is_empty() {
         telemetry::install_default();
     }
+    let metrics_listen = args.str("metrics-listen");
+    let metrics_addr = if metrics_listen.is_empty() {
+        None
+    } else {
+        let registry = Arc::new(telemetry::MetricsRegistry::new());
+        if let Some(ledger) = engine.cluster_ledger_arc() {
+            registry.register("cluster", ledger);
+        }
+        Some(serve_metrics(metrics_listen, registry)?)
+    };
     let t = Timer::start();
     let model = Cca::builder()
         .k(k)
@@ -670,7 +753,18 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
     let fit_secs = t.secs();
     // Evaluation drives more cluster rounds; keep the trace fit-only (one
     // `round` span per fit pass), mirroring the ledger snapshot below.
-    export_trace(trace_path)?;
+    if !trace_path.is_empty() {
+        match engine.export_merged_trace(Path::new(trace_path)) {
+            Some(res) => {
+                let (spans, dropped) = res?;
+                telemetry::disable();
+                println!("trace: {spans} merged spans ({dropped} dropped) -> {trace_path}");
+            }
+            // Non-cluster engines have no remote shards to merge; fall back
+            // to the plain driver-local export.
+            None => export_trace(trace_path)?,
+        }
+    }
     // The claim under test: every fit pass was exactly one network round.
     // The rounds figure comes from the DRIVER's ledger (its RunPass round
     // counter), not from the model's pass ledger, so the two rows below
@@ -690,6 +784,12 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
     r.row(&["k / p / q".into(), format!("{k} / {} / {}", args.str("p"), args.str("q"))]);
     r.row(&["fit time (s)".into(), format!("{fit_secs:.2}")]);
     r.row(&["cluster rounds (fit)".into(), fit_rounds.to_string()]);
+    let stragglers = fit_ledger
+        .as_ref()
+        .and_then(|l| l.get("stragglers"))
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0);
+    r.row(&["stragglers (fit)".into(), stragglers.to_string()]);
     r.row(&["data passes (fit)".into(), model.passes().to_string()]);
     r.row(&["train objective".into(), format!("{:.4}", train.sum_corr)]);
     r.row(&["test objective".into(), format!("{:.4}", test.sum_corr)]);
@@ -718,7 +818,18 @@ fn cmd_fit(argv: Vec<String>) -> anyhow::Result<()> {
         model.save(Path::new(save))?;
         r.row(&["model saved to".into(), save.into()]);
     }
-    emit(&r, args.str("report-dir"))
+    emit(&r, args.str("report-dir"))?;
+    // Hold the metrics endpoint open after the report so out-of-process
+    // scrapers (the CI trace smoke) can read the final straggler/event
+    // gauges before the driver exits.
+    let linger = args.u64("metrics-linger-secs")?;
+    if let Some(addr) = metrics_addr {
+        if linger > 0 {
+            eprintln!("metrics: lingering {linger}s for scrapes on {addr}");
+            std::thread::sleep(Duration::from_secs(linger));
+        }
+    }
+    Ok(())
 }
 
 /// `repro cluster-ckpt <path>` — print + validate a driver checkpoint
@@ -1156,10 +1267,12 @@ fn cmd_bench_check(argv: Vec<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `repro trace <file>` — pretty-print a JSONL span trace written by the
-/// `--trace` flag on `rcca`/`fit`/`daemon`: an indented span tree with
-/// wall + thread-CPU timings, optionally filtered by span name and
-/// truncated to the newest N spans.
+/// `repro trace <file>` — pretty-print or analyze a JSONL span trace
+/// written by the `--trace` flag on `rcca`/`fit`/`daemon`. Default: an
+/// indented span tree with wall + thread-CPU timings, optionally filtered
+/// by span name and truncated to the newest N spans. `--critical-path`
+/// and `--stragglers` switch to the cross-process cluster analyses over a
+/// merged `fit --cluster --trace` timeline.
 fn cmd_trace(argv: Vec<String>) -> anyhow::Result<()> {
     let mut argv = argv;
     // Accept the file positionally (`repro trace trace.jsonl`).
@@ -1168,16 +1281,41 @@ fn cmd_trace(argv: Vec<String>) -> anyhow::Result<()> {
         let file = argv.remove(0);
         argv.insert(0, format!("--file={file}"));
     }
-    let spec = Spec::new("trace", "pretty-print a JSONL span trace")
+    let spec = Spec::new("trace", "pretty-print / analyze a JSONL span trace")
         .req("file", "trace file written by --trace (positional also accepted)")
         .opt("last", "0", "show only the newest N spans (0 = all)")
-        .opt("name", "", "keep spans whose name contains this substring (plus ancestors)");
+        .opt("name", "", "keep spans whose name contains this substring (plus ancestors)")
+        .switch(
+            "critical-path",
+            "per-pass wall-time attribution (compute/decode/io-prefetch/network/\
+             straggler-wait per worker) + the longest dependency chain",
+        )
+        .switch(
+            "stragglers",
+            "rank workers by shard_task p50 latency and flag those above the fleet \
+             median x --straggler-factor",
+        )
+        .opt("straggler-factor", "2.0", "straggler threshold multiplier over the fleet median");
     let args = parse(spec, &argv)?;
     let path = Path::new(args.str("file"));
     let trace = telemetry::trace::read_jsonl(path).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let name = args.str("name");
-    let filter = if name.is_empty() { None } else { Some(name) };
-    print!("{}", telemetry::trace::render_tree(&trace, args.usize("last")?, filter));
+    let critical = args.bool("critical-path")?;
+    let straggle = args.bool("stragglers")?;
+    if critical {
+        print!("{}", telemetry::trace::critical_path_report(&trace));
+    }
+    if straggle {
+        let factor = args.f64("straggler-factor")?;
+        // The report's last line is the machine-scrapable verdict
+        // ("stragglers: <addrs>" / "no stragglers") the CI smoke greps.
+        let (report, _flagged) = telemetry::trace::stragglers_report(&trace, factor);
+        print!("{report}");
+    }
+    if !critical && !straggle {
+        let name = args.str("name");
+        let filter = if name.is_empty() { None } else { Some(name) };
+        print!("{}", telemetry::trace::render_tree(&trace, args.usize("last")?, filter));
+    }
     println!("({} spans, {} dropped)", trace.spans.len(), trace.dropped);
     Ok(())
 }

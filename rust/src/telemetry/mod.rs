@@ -18,20 +18,27 @@
 //!
 //! Span vocabulary used across the system (names are stable — CI greps
 //! them): `fit` (api), `pass`/`shard_task`/`load`/`decode`/`engine`/
-//! `reduce` (coordinator), `round` (cluster driver and worker, correlated
-//! by the `pass_id` attr carried in the wire protocol), `request`/`parse`/
-//! `handle`/`write` (serve), `tick`/`refit` (lifecycle daemon, linked to
-//! the audit ledger via the `episode` attr).
+//! `reduce` (coordinator), `round` (cluster driver and worker — since the
+//! distributed-tracing PR the worker's `round` is a *true child* of the
+//! driver's, linked by the `TraceCtx` carried in the wire protocol, and
+//! both are tagged with a `worker` attr: `"driver"` or the worker's
+//! address), `request`/`parse`/`handle`/`write` (serve), `tick`/`refit`
+//! (lifecycle daemon, linked to the audit ledger via the `episode` attr).
+//! Cluster lifecycle events (`cluster.join`, `cluster.death`,
+//! `cluster.redispatch`, `cluster.checkpoint`, `cluster.resume`,
+//! `cluster.mirror`, `cluster.chaos`, `cluster.straggler`) appear in the
+//! merged timeline as instantaneous events.
 
 pub mod recorder;
 pub mod registry;
 pub mod trace;
 
 pub use recorder::{
-    disable, drain, enabled, event, export_jsonl, install, install_default, record_manual, span,
-    span_child_of, AttrValue, RecordKind, Span, SpanRecord, Trace, DEFAULT_CAPACITY,
+    disable, drain, enabled, event, export_jsonl, install, install_default, install_with_base,
+    now_ns, record_manual, span, span_child_of, AttrValue, RecordKind, Span, SpanRecord, Trace,
+    DEFAULT_CAPACITY,
 };
 pub use registry::{
-    counter, gauge, gauge_vec, histogram, histogram_vec, parse_prom, render_families, Family,
-    FamilyKind, HistogramSnapshot, MetricSource, MetricsRegistry, Sample,
+    counter, counter_vec, gauge, gauge_vec, histogram, histogram_vec, parse_prom,
+    render_families, Family, FamilyKind, HistogramSnapshot, MetricSource, MetricsRegistry, Sample,
 };

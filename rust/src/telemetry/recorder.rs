@@ -277,6 +277,23 @@ pub fn install_default() {
     install(DEFAULT_CAPACITY);
 }
 
+/// [`install`], then start span ids at `base` instead of continuing the
+/// process counter. A cluster driver hands each worker a disjoint id
+/// namespace (e.g. `(worker_index + 1) << 40`) so spans merged across
+/// processes never collide and cross-process parent links stay exact.
+pub fn install_with_base(capacity: usize, base: u64) {
+    install(capacity);
+    NEXT_SPAN_ID.store(base.max(1), Ordering::Relaxed);
+}
+
+/// Nanoseconds since the recorder epoch on this process's monotonic clock —
+/// the timestamp basis of every recorded span. Exposed so the cluster
+/// layer can stamp RunPass frames (driver) and estimate clock skew against
+/// them (worker).
+pub fn now_ns() -> u64 {
+    Instant::now().duration_since(epoch()).as_nanos() as u64
+}
+
 /// Stop recording. Already-buffered spans stay drainable.
 pub fn disable() {
     ENABLED.store(false, Ordering::Relaxed);
@@ -567,6 +584,11 @@ mod tests {
         }
         let mut s = span("never");
         s.attr("k", 1u64);
+        if enabled() {
+            // A parallel test installed the recorder mid-flight; the span
+            // may legitimately be live now. Nothing to assert.
+            return;
+        }
         assert_eq!(s.id(), 0);
     }
 }

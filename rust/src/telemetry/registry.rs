@@ -105,6 +105,24 @@ pub fn gauge_vec(name: &str, help: &str, label: &str, values: &[(String, f64)]) 
     }
 }
 
+/// Counter family with one sample per `(label value, count)` pair — e.g.
+/// the cluster audit trail's per-kind event tallies.
+pub fn counter_vec(name: &str, help: &str, label: &str, values: &[(String, u64)]) -> Family {
+    Family {
+        name: name.to_string(),
+        help: help.to_string(),
+        kind: FamilyKind::Counter,
+        samples: values
+            .iter()
+            .map(|(lv, v)| Sample {
+                suffix: "",
+                labels: vec![(label.to_string(), lv.clone())],
+                value: *v as f64,
+            })
+            .collect(),
+    }
+}
+
 /// A histogram flattened for export: cumulative `(le, count)` pairs ending
 /// with the `+Inf` bucket, plus exact sum/count and the derived mean.
 #[derive(Debug, Clone)]

@@ -1,7 +1,11 @@
-//! Reading exported JSONL traces back: filter, and render a span tree with
-//! wall/CPU timings — the library half of the `repro trace` CLI.
+//! Reading exported JSONL traces back: filter, render a span tree with
+//! wall/CPU timings, and analyze merged cross-process cluster timelines
+//! (critical-path attribution, straggler detection) — the library half of
+//! the `repro trace` CLI and of the driver's merged `--trace` export.
 
-use crate::util::json::{parse, Json};
+use crate::util::json::{jstr, parse, Json};
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write;
 use std::path::Path;
 
 /// One span/event parsed back from a JSONL trace line.
@@ -16,6 +20,93 @@ pub struct TraceSpan {
     pub wall_ns: u64,
     pub cpu_ns: u64,
     pub attrs: Json,
+}
+
+impl TraceSpan {
+    /// One JSONL line in the same fixed field order as
+    /// [`crate::telemetry::SpanRecord::to_jsonl`]. Unlike the recorder's
+    /// `&'static` names, merged-trace names crossed a wire, so they are
+    /// escaped as real JSON strings.
+    pub fn to_jsonl(&self) -> String {
+        format!(
+            "{{\"kind\":{},\"id\":{},\"parent\":{},\"name\":{},\"thread\":{},\
+             \"start_ns\":{},\"wall_ns\":{},\"cpu_ns\":{},\"attrs\":{}}}",
+            jstr(&self.kind).to_string_compact(),
+            self.id,
+            self.parent,
+            jstr(&self.name).to_string_compact(),
+            self.thread,
+            self.start_ns,
+            self.wall_ns,
+            self.cpu_ns,
+            self.attrs.to_string_compact()
+        )
+    }
+
+    fn attr_str(&self, key: &str) -> Option<&str> {
+        self.attrs.get(key).and_then(|v| v.as_str())
+    }
+}
+
+impl From<&crate::telemetry::SpanRecord> for TraceSpan {
+    fn from(rec: &crate::telemetry::SpanRecord) -> TraceSpan {
+        let mut attrs = Json::obj();
+        for (k, v) in &rec.attrs {
+            attrs.set(k, v.to_json());
+        }
+        TraceSpan {
+            kind: match rec.kind {
+                crate::telemetry::RecordKind::Span => "span".to_string(),
+                crate::telemetry::RecordKind::Event => "event".to_string(),
+            },
+            id: rec.id,
+            parent: rec.parent,
+            name: rec.name.to_string(),
+            thread: rec.thread,
+            start_ns: rec.start_ns,
+            wall_ns: rec.wall_ns,
+            cpu_ns: rec.cpu_ns,
+            attrs,
+        }
+    }
+}
+
+/// Shift a batch of spans from a remote clock onto the local timeline:
+/// `skew_ns` is (remote monotonic − local monotonic), estimated from the
+/// RunPass send/receive handshake, so subtracting it re-expresses remote
+/// start times on the driver's clock (clamped at 0).
+pub fn apply_skew(spans: &mut [TraceSpan], skew_ns: i64) {
+    for s in spans.iter_mut() {
+        s.start_ns = (s.start_ns as i64 - skew_ns).max(0) as u64;
+    }
+}
+
+/// Write one merged JSONL trace: spans sorted by corrected start time, the
+/// same footer contract as `recorder::Trace::write_jsonl` (the drop count
+/// here totals local and every shipped worker batch).
+pub fn write_merged_jsonl(
+    path: &Path,
+    spans: &mut Vec<TraceSpan>,
+    dropped: u64,
+) -> std::io::Result<()> {
+    spans.sort_by_key(|s| (s.start_ns, s.id));
+    let mut out = String::new();
+    for s in spans.iter() {
+        out.push_str(&s.to_jsonl());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{{\"kind\":\"trace\",\"spans\":{},\"dropped\":{}}}\n",
+        spans.len(),
+        dropped
+    ));
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(out.as_bytes())
 }
 
 /// A parsed trace file: spans in file order plus the footer's drop count.
@@ -139,15 +230,21 @@ pub fn render_tree(trace: &TraceFile, last: usize, name_filter: Option<&str>) ->
         let cut = spans.len() - last;
         spans.drain(..cut);
     }
-    let ids: std::collections::BTreeSet<u64> = spans.iter().map(|s| s.id).collect();
-    let mut children: std::collections::BTreeMap<u64, Vec<&TraceSpan>> =
-        std::collections::BTreeMap::new();
+    let ids: BTreeSet<u64> = spans.iter().map(|s| s.id).collect();
+    let mut children: BTreeMap<u64, Vec<&TraceSpan>> = BTreeMap::new();
     let mut roots: Vec<&TraceSpan> = Vec::new();
+    // Orphans — spans whose parent id is absent from the file (ring-evicted
+    // or filtered away) — group under an explicit `<dropped ancestor>`
+    // placeholder per missing id instead of silently re-rooting, so the
+    // rendering never lies about parentage.
+    let mut orphans: BTreeMap<u64, Vec<&TraceSpan>> = BTreeMap::new();
     for s in &spans {
-        if s.parent != 0 && ids.contains(&s.parent) {
+        if s.parent == 0 {
+            roots.push(s);
+        } else if ids.contains(&s.parent) {
             children.entry(s.parent).or_default().push(s);
         } else {
-            roots.push(s);
+            orphans.entry(s.parent).or_default().push(s);
         }
     }
     let mut out = String::new();
@@ -161,6 +258,19 @@ pub fn render_tree(trace: &TraceFile, last: usize, name_filter: Option<&str>) ->
             }
         }
     }
+    for (missing, kids) in &orphans {
+        out.push_str(&format!("<dropped ancestor> [{missing}]\n"));
+        let mut stack: Vec<(&TraceSpan, usize)> =
+            kids.iter().rev().map(|s| (*s, 1)).collect();
+        while let Some((s, depth)) = stack.pop() {
+            render_line(s, depth, &mut out);
+            if let Some(kids) = children.get(&s.id) {
+                for k in kids.iter().rev() {
+                    stack.push((k, depth + 1));
+                }
+            }
+        }
+    }
     if trace.dropped > 0 {
         out.push_str(&format!(
             "({} older spans dropped by the flight recorder ring)\n",
@@ -168,6 +278,295 @@ pub fn render_tree(trace: &TraceFile, last: usize, name_filter: Option<&str>) ->
         ));
     }
     out
+}
+
+fn pct(part: u64, whole: u64) -> f64 {
+    if whole == 0 {
+        0.0
+    } else {
+        part as f64 * 100.0 / whole as f64
+    }
+}
+
+/// Wall time a worker's round spent in each category. The five categories
+/// partition the *driver* round wall exactly: network and straggler-wait
+/// are residuals, so `total()` always equals the driver round wall and the
+/// attribution is 100% by construction (the ≥95% contract with margin).
+#[derive(Debug, Clone, Default)]
+pub struct RoundAttribution {
+    pub worker: String,
+    pub round_wall_ns: u64,
+    pub compute_ns: u64,
+    pub decode_ns: u64,
+    pub io_ns: u64,
+    pub network_ns: u64,
+    pub straggler_wait_ns: u64,
+}
+
+impl RoundAttribution {
+    pub fn total(&self) -> u64 {
+        self.compute_ns + self.decode_ns + self.io_ns + self.network_ns + self.straggler_wait_ns
+    }
+}
+
+/// One driver round with its per-worker attribution and critical path.
+#[derive(Debug)]
+pub struct RoundAnalysis {
+    pub pass_id: u64,
+    pub round_span: u64,
+    pub wall_ns: u64,
+    pub workers: Vec<RoundAttribution>,
+    /// `name [id] wall` triples from the driver round down the slowest
+    /// dependency chain.
+    pub critical_path: Vec<(String, u64, u64)>,
+}
+
+fn children_map(trace: &TraceFile) -> BTreeMap<u64, Vec<&TraceSpan>> {
+    let mut map: BTreeMap<u64, Vec<&TraceSpan>> = BTreeMap::new();
+    for s in &trace.spans {
+        if s.kind == "span" && s.parent != 0 {
+            map.entry(s.parent).or_default().push(s);
+        }
+    }
+    for kids in map.values_mut() {
+        kids.sort_by_key(|s| (s.start_ns, s.id));
+    }
+    map
+}
+
+/// Sum `wall_ns` over every descendant of `root` named `name`.
+fn subtree_sum(children: &BTreeMap<u64, Vec<&TraceSpan>>, root: u64, name: &str) -> u64 {
+    let mut total = 0u64;
+    let mut stack = vec![root];
+    while let Some(id) = stack.pop() {
+        if let Some(kids) = children.get(&id) {
+            for k in kids {
+                if k.name == name {
+                    total += k.wall_ns;
+                }
+                stack.push(k.id);
+            }
+        }
+    }
+    total
+}
+
+/// Analyze a merged cluster trace: every driver `round` span (tagged
+/// `worker="driver"`), its workers' child `round` spans, and the category
+/// attribution of each worker's share of the round wall.
+pub fn analyze_rounds(trace: &TraceFile) -> Vec<RoundAnalysis> {
+    let children = children_map(trace);
+    let mut out = Vec::new();
+    let mut driver_rounds: Vec<&TraceSpan> = trace
+        .spans
+        .iter()
+        .filter(|s| s.kind == "span" && s.name == "round" && s.attr_str("worker") == Some("driver"))
+        .collect();
+    driver_rounds.sort_by_key(|s| (s.start_ns, s.id));
+    for round in driver_rounds {
+        let pass_id = round
+            .attrs
+            .get("pass_id")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u64;
+        let mut workers = Vec::new();
+        let mut worker_rounds: Vec<&TraceSpan> = children
+            .get(&round.id)
+            .map(|kids| {
+                kids.iter()
+                    .filter(|k| k.name == "round")
+                    .copied()
+                    .collect()
+            })
+            .unwrap_or_default();
+        worker_rounds.sort_by_key(|s| (s.start_ns, s.id));
+        for wr in &worker_rounds {
+            let compute = subtree_sum(&children, wr.id, "engine");
+            let decode = subtree_sum(&children, wr.id, "decode");
+            let io = subtree_sum(&children, wr.id, "load");
+            let network = wr.wall_ns.saturating_sub(compute + decode + io);
+            let straggler_wait = round.wall_ns.saturating_sub(wr.wall_ns);
+            workers.push(RoundAttribution {
+                worker: wr.attr_str("worker").unwrap_or("?").to_string(),
+                round_wall_ns: wr.wall_ns,
+                compute_ns: compute.min(wr.wall_ns),
+                decode_ns: decode,
+                io_ns: io,
+                network_ns: network,
+                straggler_wait_ns: straggler_wait,
+            });
+        }
+        // Critical path: driver round → slowest worker round → its slowest
+        // shard_task → that task's slowest stage.
+        let mut critical_path = vec![("round".to_string(), round.id, round.wall_ns)];
+        let mut cur = worker_rounds.iter().max_by_key(|w| w.wall_ns).copied();
+        while let Some(node) = cur {
+            critical_path.push((
+                match node.attr_str("worker") {
+                    Some(w) if node.name == "round" => format!("round@{w}"),
+                    _ => node.name.clone(),
+                },
+                node.id,
+                node.wall_ns,
+            ));
+            cur = children
+                .get(&node.id)
+                .and_then(|kids| kids.iter().max_by_key(|k| k.wall_ns).copied());
+        }
+        out.push(RoundAnalysis {
+            pass_id,
+            round_span: round.id,
+            wall_ns: round.wall_ns,
+            workers,
+            critical_path,
+        });
+    }
+    out
+}
+
+/// `repro trace --critical-path`: per-round, per-worker wall-time
+/// attribution plus the longest dependency chain.
+pub fn critical_path_report(trace: &TraceFile) -> String {
+    let rounds = analyze_rounds(trace);
+    if rounds.is_empty() {
+        return "no cluster rounds in trace (need a merged --trace from a cluster fit)\n"
+            .to_string();
+    }
+    let mut out = String::new();
+    for r in &rounds {
+        out.push_str(&format!(
+            "pass {} round [{}] wall={}\n",
+            r.pass_id,
+            r.round_span,
+            fmt_ns(r.wall_ns)
+        ));
+        for w in &r.workers {
+            out.push_str(&format!(
+                "  worker {:<22} wall={:<10} compute {:5.1}% | decode {:5.1}% | \
+                 io-prefetch {:5.1}% | network {:5.1}% | straggler-wait {:5.1}% \
+                 (attributed {:.1}%)\n",
+                w.worker,
+                fmt_ns(w.round_wall_ns),
+                pct(w.compute_ns, r.wall_ns),
+                pct(w.decode_ns, r.wall_ns),
+                pct(w.io_ns, r.wall_ns),
+                pct(w.network_ns, r.wall_ns),
+                pct(w.straggler_wait_ns, r.wall_ns),
+                pct(w.total(), r.wall_ns),
+            ));
+        }
+        out.push_str("  critical path:");
+        for (i, (name, id, wall)) in r.critical_path.iter().enumerate() {
+            if i > 0 {
+                out.push_str(" ->");
+            }
+            out.push_str(&format!(" {name} [{id}] {}", fmt_ns(*wall)));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Per-worker shard_task latency profile for straggler detection.
+#[derive(Debug)]
+pub struct WorkerLatency {
+    pub worker: String,
+    pub tasks: usize,
+    pub p50_ns: u64,
+    pub max_ns: u64,
+    pub straggler: bool,
+}
+
+/// `repro trace --stragglers`: flag workers whose shard_task p50 exceeds
+/// the fleet median by `factor`. The fleet median is the *lower* median of
+/// per-worker p50s, so with two workers the slower one is compared against
+/// the faster — a delayed worker in a 2-node fleet is still caught.
+pub fn stragglers(trace: &TraceFile, factor: f64) -> Vec<WorkerLatency> {
+    let children = children_map(trace);
+    // shard_task spans belong to the worker named on their ancestor round.
+    let mut per_worker: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+    for s in &trace.spans {
+        if s.kind == "span" && s.name == "round" {
+            if let Some(worker) = s.attr_str("worker") {
+                if worker == "driver" {
+                    continue;
+                }
+                let mut stack = vec![s.id];
+                while let Some(id) = stack.pop() {
+                    if let Some(kids) = children.get(&id) {
+                        for k in kids {
+                            if k.name == "shard_task" {
+                                per_worker
+                                    .entry(worker.to_string())
+                                    .or_default()
+                                    .push(k.wall_ns);
+                            }
+                            stack.push(k.id);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut latencies: Vec<WorkerLatency> = per_worker
+        .into_iter()
+        .map(|(worker, mut walls)| {
+            walls.sort_unstable();
+            let p50 = walls[(walls.len() - 1) / 2];
+            WorkerLatency {
+                worker,
+                tasks: walls.len(),
+                p50_ns: p50,
+                max_ns: *walls.last().unwrap(),
+                straggler: false,
+            }
+        })
+        .collect();
+    if latencies.is_empty() {
+        return latencies;
+    }
+    let mut p50s: Vec<u64> = latencies.iter().map(|l| l.p50_ns).collect();
+    p50s.sort_unstable();
+    let fleet_median = p50s[(p50s.len() - 1) / 2];
+    for l in latencies.iter_mut() {
+        l.straggler = l.p50_ns as f64 > fleet_median as f64 * factor;
+    }
+    latencies
+}
+
+/// Render [`stragglers`] as the `--stragglers` report; the second return
+/// is the flagged worker list (what the CI smoke asserts on).
+pub fn stragglers_report(trace: &TraceFile, factor: f64) -> (String, Vec<String>) {
+    let latencies = stragglers(trace, factor);
+    if latencies.is_empty() {
+        return (
+            "no worker shard_task spans in trace (need a merged --trace from a cluster fit)\n"
+                .to_string(),
+            Vec::new(),
+        );
+    }
+    let mut out = String::new();
+    let mut flagged = Vec::new();
+    out.push_str(&format!("straggler factor: {factor}\n"));
+    for l in &latencies {
+        out.push_str(&format!(
+            "worker {:<22} tasks={:<4} p50={:<10} max={:<10}{}\n",
+            l.worker,
+            l.tasks,
+            fmt_ns(l.p50_ns),
+            fmt_ns(l.max_ns),
+            if l.straggler { " STRAGGLER" } else { "" }
+        ));
+        if l.straggler {
+            flagged.push(l.worker.clone());
+        }
+    }
+    if flagged.is_empty() {
+        out.push_str("no stragglers\n");
+    } else {
+        out.push_str(&format!("stragglers: {}\n", flagged.join(", ")));
+    }
+    (out, flagged)
 }
 
 #[cfg(test)]
@@ -214,6 +613,146 @@ mod tests {
         assert!(filtered.contains("shard_task [3]"), "{filtered}");
         assert!(!filtered.contains("\"pass\""), "{filtered}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Spans whose parent id is absent must group under an explicit
+    /// `<dropped ancestor>` placeholder, not silently re-root.
+    #[test]
+    fn missing_parents_get_a_dropped_ancestor_placeholder() {
+        let trace = TraceFile {
+            spans: vec![
+                TraceSpan::from(&rec(1, 0, "fit", 0)),
+                // Parent 99 was ring-evicted and is not in the file.
+                TraceSpan::from(&rec(7, 99, "shard_task", 5)),
+                TraceSpan::from(&rec(8, 7, "engine", 6)),
+            ],
+            dropped: 0,
+        };
+        let tree = render_tree(&trace, 0, None);
+        assert!(tree.contains("<dropped ancestor> [99]"), "{tree}");
+        let placeholder_at = tree.find("<dropped ancestor> [99]").unwrap();
+        let task_at = tree.find("  shard_task [7]").unwrap();
+        let engine_at = tree.find("    engine [8]").unwrap();
+        assert!(placeholder_at < task_at && task_at < engine_at, "{tree}");
+        // The true root is untouched.
+        assert!(tree.contains("fit [1]"), "{tree}");
+    }
+
+    /// Clock-skew correction is pure arithmetic: given fixed handshake
+    /// timestamps the merged timeline is deterministic.
+    #[test]
+    fn skew_correction_is_deterministic() {
+        let mk = |id, start| TraceSpan {
+            kind: "span".to_string(),
+            id,
+            parent: 0,
+            name: "round".to_string(),
+            thread: 1,
+            start_ns: start,
+            wall_ns: 10,
+            cpu_ns: 0,
+            attrs: Json::obj(),
+        };
+        // Worker clock runs 1500ns ahead of the driver's.
+        let mut remote = vec![mk(2, 2000), mk(3, 1000)];
+        apply_skew(&mut remote, 1500);
+        assert_eq!(remote[0].start_ns, 500);
+        assert_eq!(remote[1].start_ns, 0, "clamped at the epoch, never wraps");
+        // A worker clock *behind* the driver's shifts forward.
+        let mut behind = vec![mk(4, 100)];
+        apply_skew(&mut behind, -400);
+        assert_eq!(behind[0].start_ns, 500);
+        // Merged output is sorted by corrected start, bitwise-stable.
+        let dir = std::env::temp_dir().join("rcca_trace_skew_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("merged.jsonl");
+        let mut all: Vec<TraceSpan> = remote.into_iter().chain(behind).collect();
+        write_merged_jsonl(&path, &mut all, 3).unwrap();
+        let first = std::fs::read(&path).unwrap();
+        let mut again: Vec<TraceSpan> = all.clone();
+        write_merged_jsonl(&path, &mut again, 3).unwrap();
+        assert_eq!(first, std::fs::read(&path).unwrap());
+        let back = read_jsonl(&path).unwrap();
+        assert_eq!(back.dropped, 3);
+        let starts: Vec<u64> = back.spans.iter().map(|s| s.start_ns).collect();
+        assert_eq!(starts, vec![0, 500, 500], "sorted by corrected start");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Build a synthetic 2-worker merged round and check both analyses:
+    /// category attribution partitions the driver round wall, and the
+    /// delayed worker is flagged as the straggler.
+    #[test]
+    fn critical_path_and_stragglers_on_a_synthetic_round() {
+        let span = |id, parent, name: &str, start, wall, worker: Option<&str>| {
+            let mut attrs = Json::obj();
+            if let Some(w) = worker {
+                attrs.set("worker", jstr(w));
+            }
+            if name == "round" && worker == Some("driver") {
+                attrs.set("pass_id", Json::Num(1.0));
+            }
+            TraceSpan {
+                kind: "span".to_string(),
+                id,
+                parent,
+                name: name.to_string(),
+                thread: 1,
+                start_ns: start,
+                wall_ns: wall,
+                cpu_ns: 0,
+                attrs,
+            }
+        };
+        let trace = TraceFile {
+            spans: vec![
+                span(1, 0, "round", 0, 1000, Some("driver")),
+                // Fast worker: 400ns round, one task (engine 150 + load 50).
+                span(10, 1, "round", 10, 400, Some("127.0.0.1:7001")),
+                span(11, 10, "shard_task", 20, 250, None),
+                span(12, 11, "load", 20, 50, None),
+                span(13, 11, "engine", 80, 150, None),
+                // Slow worker: 900ns round, delayed task.
+                span(20, 1, "round", 10, 900, Some("127.0.0.1:7002")),
+                span(21, 20, "shard_task", 20, 850, None),
+                span(22, 21, "load", 20, 60, None),
+                span(23, 21, "decode", 90, 40, None),
+                span(24, 21, "engine", 140, 200, None),
+            ],
+            dropped: 0,
+        };
+        let rounds = analyze_rounds(&trace);
+        assert_eq!(rounds.len(), 1);
+        let r = &rounds[0];
+        assert_eq!(r.pass_id, 1);
+        assert_eq!(r.wall_ns, 1000);
+        assert_eq!(r.workers.len(), 2);
+        for w in &r.workers {
+            assert_eq!(
+                w.total(),
+                r.wall_ns,
+                "categories must partition the driver round wall for {}",
+                w.worker
+            );
+        }
+        let slow = r.workers.iter().find(|w| w.worker.ends_with("7002")).unwrap();
+        assert_eq!(slow.compute_ns, 200);
+        assert_eq!(slow.decode_ns, 40);
+        assert_eq!(slow.io_ns, 60);
+        assert_eq!(slow.straggler_wait_ns, 100, "1000 - 900");
+        assert_eq!(slow.network_ns, 600, "900 - (200+40+60)");
+        // The critical path runs through the slow worker.
+        let chain: Vec<&str> = r.critical_path.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(chain, vec!["round", "round@127.0.0.1:7002", "shard_task", "engine"]);
+        let report = critical_path_report(&trace);
+        assert!(report.contains("attributed 100.0%"), "{report}");
+        // Straggler detection: slow p50 850 > 2.0 x fast p50 250.
+        let (sreport, flagged) = stragglers_report(&trace, 2.0);
+        assert_eq!(flagged, vec!["127.0.0.1:7002".to_string()], "{sreport}");
+        assert!(sreport.contains("STRAGGLER"), "{sreport}");
+        // A forgiving factor flags nobody.
+        let (_, none) = stragglers_report(&trace, 4.0);
+        assert!(none.is_empty());
     }
 
     #[test]

@@ -18,6 +18,7 @@ use rcca::data::synthparl::{SynthParl, SynthParlConfig};
 use rcca::linalg::Mat;
 use rcca::runtime::NativeEngine;
 use rcca::sparse::Csr;
+use rcca::telemetry::trace::TraceSpan;
 use rcca::util::rng::Rng;
 use std::io::{BufRead, BufReader};
 use std::path::{Path, PathBuf};
@@ -316,6 +317,201 @@ fn chaos_kill_join_and_driver_restart_preserve_the_model() {
     assert!(!out.status.success(), "a torn checkpoint must exit nonzero");
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(stderr.contains("torn"), "{stderr}");
+}
+
+/// Shard the CLI's own `--tiny` workload so `repro fit` accepts the
+/// cluster (it validates worker data against the scale flags).
+fn gen_tiny_shards(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rcca_cluster_integration_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["gen", "--tiny", "--rows-per-shard", "200"])
+        .arg("--out")
+        .arg(&dir)
+        .output()
+        .expect("repro gen");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    dir
+}
+
+/// Run `repro fit --trace` against the given workers and return the
+/// parsed merged trace, the fit's stdout, and the trace file's path.
+fn traced_cli_fit(
+    workers: &[&WorkerProc],
+    tag: &str,
+) -> (rcca::telemetry::trace::TraceFile, String, PathBuf) {
+    let addrs: Vec<&str> = workers.iter().map(|w| w.addr.as_str()).collect();
+    let trace_path = std::env::temp_dir().join(format!("rcca_cluster_integration_{tag}.jsonl"));
+    let _ = std::fs::remove_file(&trace_path);
+    let report_dir = std::env::temp_dir().join(format!("rcca_cluster_integration_{tag}_reports"));
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["fit", "--tiny", "--p", "16", "--chunk-rows", "64"])
+        .arg("--cluster")
+        .arg(addrs.join(","))
+        .arg("--trace")
+        .arg(&trace_path)
+        .arg("--report-dir")
+        .arg(&report_dir)
+        .output()
+        .expect("repro fit --trace");
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(
+        stdout.contains("merged spans"),
+        "cluster fit must report a merged trace export:\n{stdout}"
+    );
+    let trace = rcca::telemetry::trace::read_jsonl(&trace_path).expect("read merged trace");
+    (trace, stdout, trace_path)
+}
+
+fn worker_of(s: &TraceSpan) -> Option<&str> {
+    s.attrs.get("worker").and_then(|v| v.as_str())
+}
+
+fn assert_unique_span_ids(trace: &rcca::telemetry::trace::TraceFile) {
+    let mut ids: Vec<u64> = trace
+        .spans
+        .iter()
+        .filter(|s| s.kind == "span")
+        .map(|s| s.id)
+        .collect();
+    let n = ids.len();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "merged trace must not duplicate span ids");
+}
+
+/// Tentpole proof: a traced 2-worker fit exports ONE merged timeline where
+/// every worker `round` span is a *true child* of the driver round of the
+/// same pass, with its `shard_task` spans nested under it, and both worker
+/// processes named by stable identity.
+#[test]
+fn traced_cluster_fit_merges_worker_spans_under_driver_rounds() {
+    let dir = gen_tiny_shards("trace");
+    let w1 = spawn_worker(&dir, &[]);
+    let w2 = spawn_worker(&dir, &[]);
+    let (trace, _stdout, trace_path) = traced_cli_fit(&[&w1, &w2], "trace");
+    assert_unique_span_ids(&trace);
+
+    let rounds: Vec<&TraceSpan> = trace
+        .spans
+        .iter()
+        .filter(|s| s.kind == "span" && s.name == "round")
+        .collect();
+    let driver_rounds: Vec<&TraceSpan> = rounds
+        .iter()
+        .copied()
+        .filter(|s| worker_of(s) == Some("driver"))
+        .collect();
+    let remote_rounds: Vec<&TraceSpan> = rounds
+        .iter()
+        .copied()
+        .filter(|s| worker_of(s) != Some("driver"))
+        .collect();
+    // q=1 fit = one power round + one final round, trace fit-only.
+    assert_eq!(driver_rounds.len(), 2, "driver rounds: {rounds:?}");
+    assert_eq!(remote_rounds.len(), 4, "2 workers x 2 passes: {remote_rounds:?}");
+    for r in &remote_rounds {
+        assert!(
+            r.id >= 1 << 40,
+            "remote span ids must live in a per-worker namespace: {}",
+            r.id
+        );
+        let parent = driver_rounds
+            .iter()
+            .find(|d| d.id == r.parent)
+            .unwrap_or_else(|| panic!("worker round {} not parented under a driver round", r.id));
+        assert_eq!(
+            parent.attrs.get("pass_id").and_then(|v| v.as_usize()),
+            r.attrs.get("pass_id").and_then(|v| v.as_usize()),
+            "worker round must nest under the driver round of the SAME pass"
+        );
+        let tasks = trace
+            .spans
+            .iter()
+            .filter(|s| s.kind == "span" && s.name == "shard_task" && s.parent == r.id)
+            .count();
+        let declared = r.attrs.get("shards").and_then(|v| v.as_usize()).unwrap_or(0);
+        assert_eq!(tasks, declared, "every shard_task must be a child of its worker round");
+    }
+    for addr in [&w1.addr, &w2.addr] {
+        assert!(
+            remote_rounds.iter().any(|r| worker_of(r) == Some(addr)),
+            "worker {addr} missing from the merged trace"
+        );
+    }
+
+    // The offline analyses accept the merged file end to end.
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .arg("trace")
+        .arg(&trace_path)
+        .arg("--critical-path")
+        .output()
+        .expect("repro trace --critical-path");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let crit = String::from_utf8_lossy(&out.stdout);
+    assert!(crit.contains("pass"), "critical-path report looks empty:\n{crit}");
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .arg("trace")
+        .arg(&trace_path)
+        .arg("--stragglers")
+        .output()
+        .expect("repro trace --stragglers");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let strag = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(
+        strag.contains("straggler factor:") && strag.contains("stragglers"),
+        "stragglers report missing:\n{strag}"
+    );
+}
+
+/// Mid-pass worker death under tracing: the fit still completes, the
+/// driver's bounded trace wait fails open on the dead worker's unshipped
+/// batch, and the survivor's spans appear exactly once (no duplicate ids,
+/// every shipped round still a true child of a driver round).
+#[test]
+fn traced_fit_survives_mid_pass_worker_death_without_duplicate_spans() {
+    let dir = gen_tiny_shards("trace_crash");
+    // The tiny workload shards into few large shards; dying after the 1st
+    // partial is mid pass 1.
+    let w1 = spawn_worker(&dir, &["--exit-after-partials", "1"]);
+    let w2 = spawn_worker(&dir, &[]);
+    let (trace, stdout, _path) = traced_cli_fit(&[&w1, &w2], "trace_crash");
+    assert!(
+        stdout.contains("DEAD"),
+        "the crashed worker must be buried in the ledger:\n{stdout}"
+    );
+    assert_unique_span_ids(&trace);
+
+    let driver_ids: Vec<u64> = trace
+        .spans
+        .iter()
+        .filter(|s| s.kind == "span" && s.name == "round" && worker_of(s) == Some("driver"))
+        .map(|s| s.id)
+        .collect();
+    assert_eq!(driver_ids.len(), 2, "fit must still be two driver rounds");
+    let survivor_rounds: Vec<&TraceSpan> = trace
+        .spans
+        .iter()
+        .filter(|s| {
+            s.kind == "span" && s.name == "round" && worker_of(s) == Some(w2.addr.as_str())
+        })
+        .collect();
+    // The survivor ran pass 1 at least twice (its own dispatch + the dead
+    // worker's re-dispatched shards) and pass 2 once; each execution is
+    // its own span, each shipped exactly once.
+    assert!(
+        survivor_rounds.len() >= 3,
+        "survivor must re-run the dead worker's shards: {survivor_rounds:?}"
+    );
+    for r in &survivor_rounds {
+        assert!(
+            driver_ids.contains(&r.parent),
+            "survivor round {} must stay parented under a driver round",
+            r.id
+        );
+    }
 }
 
 /// In-thread worker on an ephemeral port that serves drivers forever (so a
