@@ -60,7 +60,9 @@ fn main() {
     model.save(&model_path).expect("save bench model");
 
     let cfg = ServerConfig {
-        threads: 4,
+        // Two more threads than concurrent clients, so the auto transform
+        // concurrency cap (threads - 2) never 429s the bench loop.
+        threads: 6,
         queue_capacity: 256,
         max_batch_rows: 128,
         read_timeout: Duration::from_secs(10),
@@ -156,7 +158,7 @@ fn main() {
         .set("requests", jnum(total as f64))
         .set("failed", jnum(failed as f64))
         .set("client_threads", jnum(CLIENT_THREADS as f64))
-        .set("server_threads", jnum(4.0))
+        .set("server_threads", jnum(6.0))
         .set("wall_secs", jnum(secs))
         .set("requests_per_sec", jnum(rps))
         .set("latency_p50_ms", jnum(p50 * 1e3))

@@ -2,13 +2,12 @@
 //! plan of *when* to misbehave, shared by tests, CI drills, and the
 //! `--chaos` flags on `repro worker` and `repro fit`.
 //!
-//! Chaos here is never random at run time: every fault fires at an exact,
-//! pre-declared point (a pass index, a fixed delay), so a chaos run is as
-//! reproducible as a clean one — which is what lets CI assert *bitwise*
-//! equality between a fit that survived injected failures and an
-//! uninterrupted reference fit. The `seed` key exists so future
-//! probabilistic extensions stay deterministic; today it only labels the
-//! plan.
+//! Every fault fires at an exact, pre-declared point (a pass index, a
+//! fixed delay), so a chaos run is as reproducible as a clean one — which
+//! is what lets CI assert *bitwise* equality between a fit that survived
+//! injected failures and an uninterrupted reference fit. The `seed` key
+//! exists so future probabilistic extensions stay deterministic; today it
+//! only labels the plan.
 //!
 //! Spec grammar (comma-separated `key[=value]` pairs):
 //!
@@ -31,9 +30,9 @@
 //! Unknown keys and malformed values are typed errors, not silent no-ops:
 //! a chaos drill that never fires is worse than one that fails loudly.
 
-/// A parsed, validated chaos plan. `Default` injects nothing.
+/// A parsed, validated cluster chaos plan. `Default` injects nothing.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
-pub struct ChaosPlan {
+pub struct ClusterPlan {
     /// Worker: crash (exit 9) after sending the first partial of this pass.
     pub kill_at_pass: Option<u64>,
     /// Worker: stop echoing heartbeats from this pass onward.
@@ -49,21 +48,21 @@ pub struct ChaosPlan {
     pub seed: u64,
 }
 
-impl ChaosPlan {
+impl ClusterPlan {
     /// No faults at all — the plan every config defaults to.
-    pub fn none() -> ChaosPlan {
-        ChaosPlan::default()
+    pub fn none() -> ClusterPlan {
+        ClusterPlan::default()
     }
 
     /// True when the plan injects nothing.
     pub fn is_empty(&self) -> bool {
-        *self == ChaosPlan::default()
+        *self == ClusterPlan::default()
     }
 
     /// Parse a `key=value,key,...` spec. The empty string is the empty
     /// plan, so CLI flags can default to `""`.
-    pub fn parse(spec: &str) -> Result<ChaosPlan, String> {
-        let mut plan = ChaosPlan::default();
+    pub fn parse(spec: &str) -> Result<ClusterPlan, String> {
+        let mut plan = ClusterPlan::default();
         for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
             let (key, val) = match part.split_once('=') {
                 Some((k, v)) => (k, Some(v)),
@@ -106,14 +105,14 @@ mod tests {
 
     #[test]
     fn empty_spec_is_the_empty_plan() {
-        let plan = ChaosPlan::parse("").unwrap();
+        let plan = ClusterPlan::parse("").unwrap();
         assert!(plan.is_empty());
-        assert_eq!(plan, ChaosPlan::none());
+        assert_eq!(plan, ClusterPlan::none());
     }
 
     #[test]
     fn full_spec_parses() {
-        let plan = ChaosPlan::parse(
+        let plan = ClusterPlan::parse(
             "kill-at-pass=1,drop-heartbeats=2,delay-partial=15,die-after-pass=1,\
              torn-checkpoint,seed=42",
         )
@@ -129,21 +128,29 @@ mod tests {
 
     #[test]
     fn whitespace_and_empty_parts_are_tolerated() {
-        let plan = ChaosPlan::parse(" kill-at-pass=3 , ,seed=7 ").unwrap();
+        let plan = ClusterPlan::parse(" kill-at-pass=3 , ,seed=7 ").unwrap();
         assert_eq!(plan.kill_at_pass, Some(3));
         assert_eq!(plan.seed, 7);
     }
 
     #[test]
     fn unknown_key_is_a_typed_error() {
-        let err = ChaosPlan::parse("explode-now=1").unwrap_err();
+        let err = ClusterPlan::parse("explode-now=1").unwrap_err();
         assert!(err.contains("unknown chaos key 'explode-now'"), "{err}");
     }
 
     #[test]
     fn bad_values_are_typed_errors() {
-        assert!(ChaosPlan::parse("kill-at-pass").unwrap_err().contains("needs"));
-        assert!(ChaosPlan::parse("kill-at-pass=x").unwrap_err().contains("bad value"));
-        assert!(ChaosPlan::parse("torn-checkpoint=1").unwrap_err().contains("no value"));
+        assert!(ClusterPlan::parse("kill-at-pass").unwrap_err().contains("needs"));
+        assert!(ClusterPlan::parse("kill-at-pass=x").unwrap_err().contains("bad value"));
+        assert!(ClusterPlan::parse("torn-checkpoint=1").unwrap_err().contains("no value"));
+    }
+
+    #[test]
+    fn cluster_alias_still_resolves() {
+        // `crate::cluster::ChaosPlan` is the historical name; the alias
+        // must keep existing call sites (engine specs, CLI) compiling.
+        let plan = crate::cluster::ChaosPlan::parse("delay-partial=5").unwrap();
+        assert_eq!(plan.delay_partial_ms, 5);
     }
 }

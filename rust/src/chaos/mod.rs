@@ -1,0 +1,32 @@
+//! # `rcca::chaos` — crate-wide deterministic fault injection.
+//!
+//! One place for every fault plan in the system. Chaos here is never
+//! random at run time: each fault fires at an exact, pre-declared point
+//! (a pass index, a request ordinal, a fixed delay), so a chaos run is as
+//! reproducible as a clean one — which is what lets tests and CI assert
+//! *bitwise* equality between work that survived injected failures and an
+//! uninterrupted reference, and *exact* status-code semantics on the
+//! serving side.
+//!
+//! Two plan families share the same `key[=value],key,...` spec grammar:
+//!
+//! * [`ClusterPlan`] (`repro worker --chaos`, `repro fit --chaos`) —
+//!   fit-side faults: worker kills, dropped heartbeats, straggler delays,
+//!   driver halts, torn checkpoints. Grown in the cluster subsystem
+//!   (PR 8) and hoisted here unchanged; `crate::cluster::ChaosPlan`
+//!   remains as an alias for existing call sites.
+//! * [`ServePlan`] (`repro serve --chaos`) — serve-side faults: stalled
+//!   request reads, torn response writes, batcher stalls and injected
+//!   batcher failures, corrupt-model reloads, and handler panics. Each
+//!   fault carries a *finite budget* (a count), so a chaos'd server is
+//!   guaranteed to recover once the budgets drain — the property the
+//!   overload soak test and the CI serve-chaos smoke assert.
+//!
+//! Unknown keys and malformed values are typed errors, not silent no-ops:
+//! a chaos drill that never fires is worse than one that fails loudly.
+
+pub mod cluster;
+pub mod serve;
+
+pub use cluster::ClusterPlan;
+pub use serve::{ServeChaos, ServePlan};

@@ -1,0 +1,290 @@
+//! Deterministic fault injection for the serving path (`repro serve
+//! --chaos`): every fault has a *finite budget*, consumed atomically in
+//! arrival order, so a chaos'd server provably recovers once the budgets
+//! drain — the property the overload soak test and the CI serve-chaos
+//! smoke pin (breaker closes again, `/healthz` returns to `ok`).
+//!
+//! Spec grammar (comma-separated `key=value` pairs). Delay faults take
+//! `COUNTxMS` (fire COUNT times, MS milliseconds each); count faults take
+//! a plain `COUNT`:
+//!
+//! ```text
+//! stall-read=NxMS     stall MS after reading each of the first N
+//!                     requests (a stuck parse/read path — burns the
+//!                     request's deadline budget before dispatch)
+//! torn-write=N        tear the first N responses: write half the status
+//!                     line, then hard-close the socket
+//! batcher-stall=NxMS  the batch worker sleeps MS before running each of
+//!                     the first N batches (drives deadline expiry at the
+//!                     batcher wait)
+//! batcher-fail=N      the batch worker answers the first N batches with
+//!                     an injected internal error (drives the circuit
+//!                     breaker open, then half-open recovery)
+//! corrupt-reload=N    the next N /admin/reload attempts fail as if the
+//!                     on-disk document were corrupt (healthz degrades;
+//!                     the pinned generation keeps serving)
+//! worker-panic=N      panic mid-handler on the first N transform
+//!                     requests (the pool contains it; the client sees a
+//!                     closed connection, never a hung one)
+//! seed=N              label for the plan (reserved for future use)
+//! ```
+//!
+//! Unknown keys and malformed values are typed errors, not silent no-ops.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// A parsed, validated serve chaos plan. `Default` injects nothing.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ServePlan {
+    /// Stall (count, millis) after reading each of the first `count`
+    /// requests, before dispatch.
+    pub stall_read: Option<(u64, u64)>,
+    /// Tear the first N responses (half a status line, then close).
+    pub torn_write: u64,
+    /// Batch worker sleeps (count, millis) before the first `count` batches.
+    pub batcher_stall: Option<(u64, u64)>,
+    /// Batch worker fails the first N batches with an injected error.
+    pub batcher_fail: u64,
+    /// Fail the next N reload attempts as if the document were corrupt.
+    pub corrupt_reload: u64,
+    /// Panic mid-handler on the first N transform requests.
+    pub worker_panic: u64,
+    /// Plan label; reserved so future probabilistic faults stay seeded.
+    pub seed: u64,
+}
+
+impl ServePlan {
+    /// No faults at all — the plan every config defaults to.
+    pub fn none() -> ServePlan {
+        ServePlan::default()
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        *self == ServePlan::default()
+    }
+
+    /// Parse a `key=value,...` spec. The empty string is the empty plan,
+    /// so CLI flags can default to `""`.
+    pub fn parse(spec: &str) -> Result<ServePlan, String> {
+        let mut plan = ServePlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = match part.split_once('=') {
+                Some((k, v)) => (k, Some(v)),
+                None => (part, None),
+            };
+            let raw = |field: &str| -> Result<&str, String> {
+                val.ok_or_else(|| format!("chaos key '{field}' needs =<value>"))
+            };
+            let count = |field: &str| -> Result<u64, String> {
+                raw(field)?.parse::<u64>().map_err(|_| {
+                    format!(
+                        "chaos key '{field}' has a bad value '{}' (expected a count)",
+                        val.unwrap_or("")
+                    )
+                })
+            };
+            // Delay faults: COUNTxMS, both parts required.
+            let count_ms = |field: &str| -> Result<(u64, u64), String> {
+                let v = raw(field)?;
+                let (n, ms) = v.split_once('x').ok_or_else(|| {
+                    format!("chaos key '{field}' takes COUNTxMS (e.g. {field}=2x400), got '{v}'")
+                })?;
+                let parse = |s: &str| {
+                    s.parse::<u64>()
+                        .map_err(|_| format!("chaos key '{field}' has a bad value '{v}'"))
+                };
+                Ok((parse(n)?, parse(ms)?))
+            };
+            match key {
+                "stall-read" => plan.stall_read = Some(count_ms(key)?),
+                "torn-write" => plan.torn_write = count(key)?,
+                "batcher-stall" => plan.batcher_stall = Some(count_ms(key)?),
+                "batcher-fail" => plan.batcher_fail = count(key)?,
+                "corrupt-reload" => plan.corrupt_reload = count(key)?,
+                "worker-panic" => plan.worker_panic = count(key)?,
+                "seed" => plan.seed = count(key)?,
+                other => {
+                    return Err(format!(
+                        "unknown serve chaos key '{other}' (expected stall-read|torn-write|\
+                         batcher-stall|batcher-fail|corrupt-reload|worker-panic|seed)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Runtime state for a [`ServePlan`]: per-fault budgets consumed atomically
+/// in arrival order. Cheap to probe on the hot path — an empty plan is one
+/// relaxed load per injection point.
+#[derive(Debug)]
+pub struct ServeChaos {
+    plan: ServePlan,
+    stall_read_left: AtomicU64,
+    torn_write_left: AtomicU64,
+    batcher_stall_left: AtomicU64,
+    batcher_fail_left: AtomicU64,
+    corrupt_reload_left: AtomicU64,
+    worker_panic_left: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl ServeChaos {
+    pub fn new(plan: ServePlan) -> ServeChaos {
+        ServeChaos {
+            stall_read_left: AtomicU64::new(plan.stall_read.map_or(0, |(n, _)| n)),
+            torn_write_left: AtomicU64::new(plan.torn_write),
+            batcher_stall_left: AtomicU64::new(plan.batcher_stall.map_or(0, |(n, _)| n)),
+            batcher_fail_left: AtomicU64::new(plan.batcher_fail),
+            corrupt_reload_left: AtomicU64::new(plan.corrupt_reload),
+            worker_panic_left: AtomicU64::new(plan.worker_panic),
+            injected: AtomicU64::new(0),
+            plan,
+        }
+    }
+
+    pub fn plan(&self) -> &ServePlan {
+        &self.plan
+    }
+
+    /// Total faults injected so far (observability; exported on the prom
+    /// metrics surface as `rcca_serve_chaos_injections_total`).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Consume one unit of `budget` if any remains. Lock-free; over-decrement
+    /// races are resolved by compare-exchange so exactly `n` faults fire.
+    fn take(&self, budget: &AtomicU64) -> bool {
+        let mut left = budget.load(Ordering::Relaxed);
+        while left > 0 {
+            match budget.compare_exchange_weak(left, left - 1, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
+                Err(now) => left = now,
+            }
+        }
+        false
+    }
+
+    /// Stall to apply after reading a request, if the budget allows.
+    pub fn stall_read(&self) -> Option<Duration> {
+        let (_, ms) = self.plan.stall_read?;
+        self.take(&self.stall_read_left)
+            .then(|| Duration::from_millis(ms))
+    }
+
+    /// True when this response should be torn mid-write.
+    pub fn torn_write(&self) -> bool {
+        self.take(&self.torn_write_left)
+    }
+
+    /// Stall to apply before running a batch, if the budget allows.
+    pub fn batcher_stall(&self) -> Option<Duration> {
+        let (_, ms) = self.plan.batcher_stall?;
+        self.take(&self.batcher_stall_left)
+            .then(|| Duration::from_millis(ms))
+    }
+
+    /// True when this batch should fail with an injected error.
+    pub fn batcher_fail(&self) -> bool {
+        self.take(&self.batcher_fail_left)
+    }
+
+    /// True when this reload attempt should fail as if corrupt.
+    pub fn corrupt_reload(&self) -> bool {
+        self.take(&self.corrupt_reload_left)
+    }
+
+    /// True when this transform handler should panic.
+    pub fn worker_panic(&self) -> bool {
+        self.take(&self.worker_panic_left)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_the_empty_plan() {
+        let plan = ServePlan::parse("").unwrap();
+        assert!(plan.is_empty());
+        assert_eq!(plan, ServePlan::none());
+    }
+
+    #[test]
+    fn full_spec_parses() {
+        let plan = ServePlan::parse(
+            "stall-read=2x500,torn-write=1,batcher-stall=3x250,batcher-fail=3,\
+             corrupt-reload=1,worker-panic=2,seed=9",
+        )
+        .unwrap();
+        assert_eq!(plan.stall_read, Some((2, 500)));
+        assert_eq!(plan.torn_write, 1);
+        assert_eq!(plan.batcher_stall, Some((3, 250)));
+        assert_eq!(plan.batcher_fail, 3);
+        assert_eq!(plan.corrupt_reload, 1);
+        assert_eq!(plan.worker_panic, 2);
+        assert_eq!(plan.seed, 9);
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn delay_faults_require_countxms() {
+        let err = ServePlan::parse("batcher-stall=400").unwrap_err();
+        assert!(err.contains("COUNTxMS"), "{err}");
+        let err = ServePlan::parse("stall-read=ax4").unwrap_err();
+        assert!(err.contains("bad value"), "{err}");
+    }
+
+    #[test]
+    fn unknown_key_is_a_typed_error() {
+        let err = ServePlan::parse("explode=1").unwrap_err();
+        assert!(err.contains("unknown serve chaos key 'explode'"), "{err}");
+        assert!(ServePlan::parse("torn-write").unwrap_err().contains("needs"));
+        assert!(ServePlan::parse("torn-write=x").unwrap_err().contains("bad value"));
+    }
+
+    #[test]
+    fn budgets_drain_exactly() {
+        let chaos = ServeChaos::new(ServePlan::parse("batcher-fail=2,batcher-stall=1x50").unwrap());
+        assert!(chaos.batcher_fail());
+        assert!(chaos.batcher_fail());
+        assert!(!chaos.batcher_fail());
+        assert_eq!(chaos.batcher_stall(), Some(Duration::from_millis(50)));
+        assert_eq!(chaos.batcher_stall(), None);
+        // Faults with zero budget never fire.
+        assert!(!chaos.worker_panic());
+        assert_eq!(chaos.stall_read(), None);
+        assert_eq!(chaos.injected(), 3);
+    }
+
+    #[test]
+    fn concurrent_takes_fire_exactly_n_times() {
+        let chaos =
+            std::sync::Arc::new(ServeChaos::new(ServePlan::parse("worker-panic=100").unwrap()));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = std::sync::Arc::clone(&chaos);
+            handles.push(std::thread::spawn(move || {
+                let mut fired = 0u64;
+                for _ in 0..100 {
+                    if c.worker_panic() {
+                        fired += 1;
+                    }
+                }
+                fired
+            }));
+        }
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 100);
+        assert_eq!(chaos.injected(), 100);
+    }
+}

@@ -27,7 +27,7 @@
 //! to the in-process [`crate::coordinator::ShardedPass`] with one pool
 //! worker (whose FIFO pool reduces in the same shard order).
 
-use super::chaos::ChaosPlan;
+use crate::chaos::ClusterPlan as ChaosPlan;
 use super::checkpoint::{self, Checkpoint, CheckpointError, Fingerprint, PassRecord};
 use super::membership::{ClusterLedger, Membership};
 use super::proto::{Msg, TraceAssign, TraceCtx, WireSpan, SHARD_NONE};

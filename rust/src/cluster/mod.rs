@@ -47,9 +47,10 @@
 //!   tmp+rename atomic), and `repro fit --resume <ckpt>` replays
 //!   completed passes without new network rounds — stale or torn files
 //!   are typed, fail-closed rejections;
-//! * a deterministic **chaos harness** ([`chaos`]) drives kill/hang/
-//!   straggler/torn-checkpoint faults at declared pass indices, so tests
-//!   and CI assert bitwise equality between a chaos run and a clean one.
+//! * a deterministic **chaos harness** ([`crate::chaos::ClusterPlan`],
+//!   re-exported here as [`ChaosPlan`]) drives kill/hang/straggler/
+//!   torn-checkpoint faults at declared pass indices, so tests and CI
+//!   assert bitwise equality between a chaos run and a clean one.
 //!
 //! The cluster is also **traced end to end**: when the driver's flight
 //! recorder is on, [`proto::Msg::AssignShards`] carries a
@@ -65,7 +66,6 @@
 //!
 //! Everything is `std`-only, like [`crate::serve`]: no tokio, no serde.
 
-pub mod chaos;
 pub mod checkpoint;
 pub mod driver;
 pub mod membership;
@@ -73,7 +73,10 @@ pub mod proto;
 pub mod transport;
 pub mod worker;
 
-pub use chaos::ChaosPlan;
+/// Historical name for the cluster fault plan, hoisted to
+/// [`crate::chaos`] when serve-side chaos arrived; existing call sites
+/// keep compiling through this alias.
+pub use crate::chaos::ClusterPlan as ChaosPlan;
 pub use checkpoint::{Checkpoint, CheckpointError, Fingerprint, PassRecord};
 pub use driver::{ClusterConfig, ClusterError, ClusterPass};
 pub use membership::{ClusterLedger, Membership, WorkerLedger};

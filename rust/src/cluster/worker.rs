@@ -22,7 +22,7 @@
 //! task — drivers must size their heartbeat timeout above the worst-case
 //! single-shard compute time.
 
-use super::chaos::ChaosPlan;
+use crate::chaos::ClusterPlan as ChaosPlan;
 use super::proto::{Msg, TraceCtx, WireSpan, SHARD_NONE};
 use super::transport::{self, Conn};
 use crate::coordinator::{Metrics, PassKind, RunnerConfig, ShardTaskRunner};

@@ -29,6 +29,12 @@
 //!   round, with heartbeat-based failure detection and mid-pass shard
 //!   redistribution; workers run the same shard-task code as the
 //!   in-process coordinator, so results are bit-reproducible.
+//! * [`chaos`] — crate-wide deterministic fault injection: declarative
+//!   plans for the fit side (worker kills, torn checkpoints; `repro
+//!   worker --chaos`) and the serve side (stalled reads, torn writes,
+//!   batcher stalls, corrupt reloads, handler panics; `repro serve
+//!   --chaos`), every fault fired at a pre-declared point with a finite
+//!   budget so chaos runs stay reproducible and always recover.
 //! * [`telemetry`] — the observability substrate under all of the above:
 //!   structured tracing spans recorded into a per-thread flight recorder
 //!   (JSONL export, `repro trace` viewer) and a unified `MetricsRegistry`
@@ -45,6 +51,7 @@
 pub mod api;
 pub mod bench;
 pub mod cca;
+pub mod chaos;
 pub mod cluster;
 pub mod coordinator;
 pub mod data;

@@ -463,9 +463,41 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             "8",
             "connection-handler threads (each open keep-alive connection pins one)",
         )
-        .opt("queue", "128", "pending-connection bound; 503 beyond it")
+        .opt("queue", "128", "pending-connection bound; 429 + Retry-After beyond it")
         .opt("max-batch-rows", "256", "row budget per fused transform batch")
-        .opt("read-timeout-secs", "30", "idle keep-alive read timeout (s)");
+        .opt("read-timeout-secs", "30", "idle keep-alive read timeout (s)")
+        .opt(
+            "default-deadline-ms",
+            "10000",
+            "time budget for requests without an x-rcca-deadline-ms header",
+        )
+        .opt(
+            "max-deadline-ms",
+            "60000",
+            "ceiling on any request's budget (also bounds the header read)",
+        )
+        .opt(
+            "transform-inflight",
+            "0",
+            "concurrent /v1/transform cap before 429 shedding (0 = threads-2)",
+        )
+        .opt(
+            "breaker-threshold",
+            "3",
+            "consecutive batcher failures that open the circuit breaker",
+        )
+        .opt(
+            "breaker-cooldown-ms",
+            "1000",
+            "how long the breaker stays open before a half-open probe",
+        )
+        .opt(
+            "chaos",
+            "",
+            "deterministic serve fault plan, e.g. \
+             'batcher-stall=2x400,torn-write=1,worker-panic=1,corrupt-reload=1,batcher-fail=3' \
+             (counts are finite budgets: the server provably recovers)",
+        );
     let args = parse(spec, &argv)?;
     let threads = args.usize("threads")?;
     let queue = args.usize("queue")?;
@@ -474,11 +506,23 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         threads > 0 && queue > 0 && max_batch_rows > 0,
         "--threads/--queue/--max-batch-rows must be positive"
     );
+    let chaos_spec = args.str("chaos");
+    let chaos = if chaos_spec.is_empty() {
+        rcca::chaos::ServePlan::none()
+    } else {
+        rcca::chaos::ServePlan::parse(chaos_spec).map_err(|e| anyhow::anyhow!("--chaos: {e}"))?
+    };
     let cfg = ServerConfig {
         threads,
         queue_capacity: queue,
         max_batch_rows,
         read_timeout: Duration::from_secs(args.u64("read-timeout-secs")?.max(1)),
+        default_deadline: Duration::from_millis(args.u64("default-deadline-ms")?.max(1)),
+        max_deadline: Duration::from_millis(args.u64("max-deadline-ms")?.max(1)),
+        transform_inflight: args.usize("transform-inflight")?,
+        breaker_threshold: args.u64("breaker-threshold")?.max(1) as u32,
+        breaker_cooldown: Duration::from_millis(args.u64("breaker-cooldown-ms")?),
+        chaos,
         ..Default::default()
     };
     let server = Server::bind(Path::new(args.str("model")), args.str("addr"), cfg)?;
@@ -493,6 +537,9 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         "endpoints: GET /healthz | GET /v1/model | GET /metrics[?format=prom] | \
          POST /v1/transform | POST /admin/reload"
     );
+    if !chaos_spec.is_empty() {
+        println!("chaos plan active: {chaos_spec}");
+    }
     server.run();
     Ok(())
 }

@@ -23,7 +23,8 @@
 use super::metrics::ServeMetrics;
 use super::proto::View;
 use super::registry::ModelRegistry;
-use super::ServeError;
+use super::{Deadline, ServeError};
+use crate::chaos::ServeChaos;
 use crate::linalg::Mat;
 use crate::sparse::Csr;
 use std::collections::VecDeque;
@@ -39,6 +40,10 @@ struct Pending {
     view: View,
     rows: Csr,
     tx: mpsc::Sender<BatchResult>,
+    /// The submitting request's budget: requests whose deadline expires
+    /// while queued are answered 504 at drain time instead of being
+    /// projected for a caller who already gave up.
+    deadline: Option<Deadline>,
 }
 
 struct Shared {
@@ -61,6 +66,19 @@ impl Batcher {
         metrics: Arc<ServeMetrics>,
         max_batch_rows: usize,
     ) -> Batcher {
+        Batcher::start_with_chaos(registry, metrics, max_batch_rows, None)
+    }
+
+    /// [`Batcher::start`] with an optional chaos plan: `batcher-stall`
+    /// sleeps before a batch runs (driving deadline expiry at the batch
+    /// wait) and `batcher-fail` answers a batch with an injected internal
+    /// error (driving the circuit breaker).
+    pub fn start_with_chaos(
+        registry: Arc<ModelRegistry>,
+        metrics: Arc<ServeMetrics>,
+        max_batch_rows: usize,
+        chaos: Option<Arc<ServeChaos>>,
+    ) -> Batcher {
         assert!(max_batch_rows > 0);
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
@@ -71,7 +89,7 @@ impl Batcher {
         let worker_shared = Arc::clone(&shared);
         let worker = std::thread::Builder::new()
             .name("rcca-batcher".to_string())
-            .spawn(move || batch_loop(&worker_shared, &registry, &metrics))
+            .spawn(move || batch_loop(&worker_shared, &registry, &metrics, chaos.as_deref()))
             .expect("spawn batcher");
         Batcher {
             shared,
@@ -80,12 +98,18 @@ impl Batcher {
     }
 
     /// Enqueue a request's rows; the returned receiver yields the projected
-    /// rows once the batch containing them runs.
-    pub fn submit(&self, view: View, rows: Csr) -> mpsc::Receiver<BatchResult> {
+    /// rows once the batch containing them runs. A `deadline` lets the
+    /// worker skip rows whose requester has already timed out.
+    pub fn submit(
+        &self,
+        view: View,
+        rows: Csr,
+        deadline: Option<Deadline>,
+    ) -> mpsc::Receiver<BatchResult> {
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
-            q.push_back(Pending { view, rows, tx });
+            q.push_back(Pending { view, rows, tx, deadline });
         }
         self.shared.wake.notify_one();
         rx
@@ -115,7 +139,12 @@ struct BatchWorkspace {
     proj: Vec<f64>,
 }
 
-fn batch_loop(shared: &Shared, registry: &ModelRegistry, metrics: &ServeMetrics) {
+fn batch_loop(
+    shared: &Shared,
+    registry: &ModelRegistry,
+    metrics: &ServeMetrics,
+    chaos: Option<&ServeChaos>,
+) {
     let mut ws = BatchWorkspace {
         stacked: Csr::empty(),
         proj: Vec::new(),
@@ -143,7 +172,16 @@ fn batch_loop(shared: &Shared, registry: &ModelRegistry, metrics: &ServeMetrics)
             }
             batch
         };
-        run_batch(batch, registry, metrics, &mut ws);
+        if let Some(c) = chaos {
+            // Stall the worker *after* draining: the waiting requests burn
+            // their budgets against a batch that is provably in flight —
+            // exactly the stalled-batcher failure the 504 path must absorb.
+            if let Some(stall) = c.batcher_stall() {
+                std::thread::sleep(stall);
+            }
+            metrics.chaos_injected.store(c.injected(), Ordering::Relaxed);
+        }
+        run_batch(batch, registry, metrics, chaos, &mut ws);
     }
 }
 
@@ -154,8 +192,33 @@ fn run_batch(
     batch: Vec<Pending>,
     registry: &ModelRegistry,
     metrics: &ServeMetrics,
+    chaos: Option<&ServeChaos>,
     ws: &mut BatchWorkspace,
 ) {
+    // Answer expired requests first (504), and don't spend kernel time on
+    // rows nobody is waiting for. The handler counts its own shed_deadline
+    // when it sees the error, so no double counting here.
+    let (batch, expired): (Vec<Pending>, Vec<Pending>) = batch
+        .into_iter()
+        .partition(|p| !p.deadline.is_some_and(|d| d.expired()));
+    for p in expired {
+        let deadline = p.deadline.expect("partition keeps only deadline-carrying expired");
+        let _ = p.tx.send(Err(deadline.to_error()));
+    }
+    if batch.is_empty() {
+        return;
+    }
+    if let Some(c) = chaos {
+        if c.batcher_fail() {
+            metrics.chaos_injected.store(c.injected(), Ordering::Relaxed);
+            for p in batch {
+                let _ = p.tx.send(Err(ServeError::Internal(
+                    "injected batcher failure (chaos)".to_string(),
+                )));
+            }
+            return;
+        }
+    }
     let snap = registry.snapshot();
     for view in [View::A, View::B] {
         let group: Vec<&Pending> = batch.iter().filter(|p| p.view == view).collect();
@@ -256,7 +319,7 @@ mod tests {
         // f64 dot products in the same order).
         for i in 0..20 {
             let row = chunk.a.slice_rows(i, i + 1);
-            let rx = batcher.submit(View::A, row);
+            let rx = batcher.submit(View::A, row, None);
             let (got, generation) = rx.recv().unwrap().unwrap();
             assert_eq!(generation, 1);
             assert_eq!((got.rows, got.cols), (1, 3));
@@ -264,7 +327,7 @@ mod tests {
         }
         // View B goes through xb.
         let want_b = model.transform_b(&chunk.b).unwrap();
-        let rx = batcher.submit(View::B, chunk.b.slice_rows(0, 5));
+        let rx = batcher.submit(View::B, chunk.b.slice_rows(0, 5), None);
         let (got, _) = rx.recv().unwrap().unwrap();
         assert_eq!(got.data, want_b.data[..5 * 3].to_vec());
         assert!(metrics.batches.load(std::sync::atomic::Ordering::Relaxed) >= 1);
@@ -290,7 +353,7 @@ mod tests {
             let want = want.clone();
             handles.push(std::thread::spawn(move || {
                 for i in (t * 30)..(t * 30 + 30) {
-                    let rx = batcher.submit(View::A, chunk.a.slice_rows(i, i + 1));
+                    let rx = batcher.submit(View::A, chunk.a.slice_rows(i, i + 1), None);
                     let (got, _) = rx.recv().unwrap().unwrap();
                     assert_eq!(got.row(0), want.row(i));
                 }
@@ -324,7 +387,7 @@ mod tests {
             indices: vec![90],
             values: vec![1.0],
         };
-        let rx = batcher.submit(View::A, wide);
+        let rx = batcher.submit(View::A, wide, None);
         let err = rx.recv().unwrap().unwrap_err();
         assert!(
             matches!(err, ServeError::Dimension { expected: 48, got: 96 }),
@@ -341,7 +404,7 @@ mod tests {
         let reg = registry_for(&chunk, &dir.join("m.json"));
         let batcher = Batcher::start(Arc::clone(&reg), Arc::new(ServeMetrics::new()), 64);
         let rxs: Vec<_> = (0..10)
-            .map(|i| batcher.submit(View::A, chunk.a.slice_rows(i, i + 1)))
+            .map(|i| batcher.submit(View::A, chunk.a.slice_rows(i, i + 1), None))
             .collect();
         drop(batcher); // shutdown must answer everything already queued
         for rx in rxs {

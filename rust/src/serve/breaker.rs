@@ -1,0 +1,200 @@
+//! Circuit breaker for the transform path: consecutive batcher failures
+//! open it, a cooldown later exactly one half-open probe is admitted, and
+//! the probe's outcome decides between closing (recovered) and re-opening
+//! (still sick). While open, transforms fast-fail with a typed 503 instead
+//! of queuing work a broken batcher will never answer — the queue stays
+//! empty, `/healthz` says `degraded`, and recovery is automatic.
+//!
+//! Only *infrastructure* failures trip it (batcher errors, injected
+//! faults, deadline-expired batches are NOT counted — a slow client is not
+//! a sick server). Request-shaped errors (400/404/413/422) never touch it.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Tunables for [`CircuitBreaker`]. Defaults are deliberately twitchy
+/// (3 failures, 1s cooldown): the cost of a false open is one probe
+/// round-trip, the cost of a missed open is a queue full of doomed work.
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerConfig {
+    /// Consecutive transform failures that open the breaker.
+    pub failure_threshold: u32,
+    /// How long the breaker stays open before admitting a half-open probe.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig { failure_threshold: 3, cooldown: Duration::from_secs(1) }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    /// Healthy; tracks the consecutive-failure run length.
+    Closed { consecutive_failures: u32 },
+    /// Tripped at `since`; rejecting until the cooldown elapses.
+    Open { since: Instant },
+    /// One probe is in flight; its outcome decides the next state.
+    HalfOpen,
+}
+
+/// What the breaker says about an arriving transform request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Breaker closed — proceed normally.
+    Admit,
+    /// Breaker half-open and this request won the probe slot: proceed, and
+    /// the recorded outcome decides whether the breaker closes or re-opens.
+    Probe,
+    /// Breaker open (or half-open with the probe slot taken) — fast-fail.
+    Reject,
+}
+
+/// See the module docs. All transitions happen under one short mutex;
+/// the lock is held for a state match, never across I/O.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    config: BreakerConfig,
+    state: Mutex<State>,
+}
+
+impl CircuitBreaker {
+    pub fn new(config: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            config,
+            state: Mutex::new(State::Closed { consecutive_failures: 0 }),
+        }
+    }
+
+    /// Gate an arriving transform. `Open → HalfOpen` happens here, lazily,
+    /// once the cooldown has elapsed — exactly one caller gets `Probe`.
+    pub fn admit(&self) -> Admission {
+        let mut state = self.state.lock().unwrap();
+        match *state {
+            State::Closed { .. } => Admission::Admit,
+            State::Open { since } => {
+                if since.elapsed() >= self.config.cooldown {
+                    *state = State::HalfOpen;
+                    Admission::Probe
+                } else {
+                    Admission::Reject
+                }
+            }
+            State::HalfOpen => Admission::Reject,
+        }
+    }
+
+    /// A transform completed. Resets the failure run; a successful
+    /// half-open probe closes the breaker.
+    pub fn record_success(&self) {
+        let mut state = self.state.lock().unwrap();
+        *state = State::Closed { consecutive_failures: 0 };
+    }
+
+    /// A transform failed for infrastructure reasons. Extends the failure
+    /// run (opening at the threshold); a failed half-open probe re-opens
+    /// immediately and restarts the cooldown.
+    pub fn record_failure(&self) {
+        let mut state = self.state.lock().unwrap();
+        *state = match *state {
+            State::Closed { consecutive_failures } => {
+                let run = consecutive_failures + 1;
+                if run >= self.config.failure_threshold {
+                    State::Open { since: Instant::now() }
+                } else {
+                    State::Closed { consecutive_failures: run }
+                }
+            }
+            State::HalfOpen | State::Open { .. } => State::Open { since: Instant::now() },
+        };
+    }
+
+    /// True when the breaker is anything but closed — feeds the
+    /// `degraded` healthz state and the `rcca_serve_degraded` gauge.
+    pub fn is_degraded(&self) -> bool {
+        !matches!(*self.state.lock().unwrap(), State::Closed { .. })
+    }
+
+    /// Stable name for health bodies and logs: `closed|open|half-open`.
+    pub fn state_name(&self) -> &'static str {
+        match *self.state.lock().unwrap() {
+            State::Closed { .. } => "closed",
+            State::Open { .. } => "open",
+            State::HalfOpen => "half-open",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breaker(threshold: u32, cooldown_ms: u64) -> CircuitBreaker {
+        CircuitBreaker::new(BreakerConfig {
+            failure_threshold: threshold,
+            cooldown: Duration::from_millis(cooldown_ms),
+        })
+    }
+
+    #[test]
+    fn opens_after_threshold_consecutive_failures() {
+        let b = breaker(3, 1_000);
+        assert_eq!(b.admit(), Admission::Admit);
+        b.record_failure();
+        b.record_failure();
+        assert_eq!(b.admit(), Admission::Admit);
+        assert!(!b.is_degraded());
+        b.record_failure();
+        assert_eq!(b.admit(), Admission::Reject);
+        assert!(b.is_degraded());
+        assert_eq!(b.state_name(), "open");
+    }
+
+    #[test]
+    fn success_resets_the_failure_run() {
+        let b = breaker(3, 1_000);
+        b.record_failure();
+        b.record_failure();
+        b.record_success();
+        b.record_failure();
+        b.record_failure();
+        // Two fresh failures after the reset: still closed.
+        assert_eq!(b.admit(), Admission::Admit);
+    }
+
+    #[test]
+    fn half_open_admits_exactly_one_probe_and_success_closes() {
+        let b = breaker(1, 0);
+        b.record_failure();
+        // Zero cooldown: the first admit becomes the probe...
+        assert_eq!(b.admit(), Admission::Probe);
+        // ...and everyone else is rejected while it's in flight.
+        assert_eq!(b.admit(), Admission::Reject);
+        assert_eq!(b.state_name(), "half-open");
+        b.record_success();
+        assert_eq!(b.admit(), Admission::Admit);
+        assert!(!b.is_degraded());
+    }
+
+    #[test]
+    fn failed_probe_reopens() {
+        let b = breaker(1, 0);
+        b.record_failure();
+        assert_eq!(b.admit(), Admission::Probe);
+        b.record_failure();
+        assert_eq!(b.state_name(), "open");
+        // Cooldown is zero, so the next admit probes again — the breaker
+        // keeps probing until the batcher actually recovers.
+        assert_eq!(b.admit(), Admission::Probe);
+    }
+
+    #[test]
+    fn open_rejects_until_cooldown_elapses() {
+        let b = breaker(1, 50);
+        b.record_failure();
+        assert_eq!(b.admit(), Admission::Reject);
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(b.admit(), Admission::Probe);
+    }
+}

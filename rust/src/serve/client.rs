@@ -2,10 +2,77 @@
 //! the in-process load generator (`benches/bench_serve.rs`), the
 //! integration tests, and operational smoke probes all reuse this instead
 //! of shelling out to curl.
+//!
+//! Every socket operation is bounded — connect, read, and write all carry
+//! timeouts — so a stalled or torn server surfaces as an `Err` instead of
+//! a hung caller. [`RetryPolicy`] layers bounded retries on top: transport
+//! errors and retryable statuses (429/503) back off with seeded jitter,
+//! honoring the server's `Retry-After` when it advertises one.
 
+use crate::util::rng::Rng;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
+
+/// A parsed response, including the overload-control metadata a plain
+/// `(status, body)` tuple drops.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub body: String,
+    /// The server's `Retry-After` header in seconds, when present (429s
+    /// from the model server always carry one).
+    pub retry_after: Option<u64>,
+}
+
+/// Bounded-retry configuration for [`HttpClient::one_shot_retry`] and
+/// friends. Retries cover transport errors and the retryable statuses
+/// (429, 503) — never 4xx client errors or 504, where a retry with the
+/// same budget would just burn another deadline.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (so `1` disables retries).
+    pub attempts: u32,
+    /// Base backoff before the second attempt; doubles per retry.
+    pub base_backoff: Duration,
+    /// Ceiling for any single backoff, including `Retry-After` waits.
+    pub max_backoff: Duration,
+    /// Per-attempt socket budget (connect, read, and write timeouts).
+    pub request_timeout: Duration,
+    /// Seed for the backoff jitter — deterministic for tests.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 4,
+            base_backoff: Duration::from_millis(100),
+            max_backoff: Duration::from_secs(2),
+            request_timeout: Duration::from_secs(10),
+            seed: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The wait before attempt `attempt + 1`: the server's `Retry-After`
+    /// when advertised, else exponential backoff with jitter in
+    /// `[0.5, 1.0]×` (decorrelates synchronized retry herds), both capped
+    /// at `max_backoff`.
+    fn backoff(&self, attempt: u32, retry_after: Option<u64>, rng: &mut Rng) -> Duration {
+        if let Some(secs) = retry_after {
+            return Duration::from_secs(secs).min(self.max_backoff);
+        }
+        let exp = self.base_backoff.saturating_mul(1u32 << attempt.min(16));
+        let jittered = exp.mul_f64(0.5 + 0.5 * rng.f64());
+        jittered.min(self.max_backoff)
+    }
+}
+
+fn retryable_status(status: u16) -> bool {
+    matches!(status, 429 | 503)
+}
 
 /// A keep-alive connection to the server.
 pub struct HttpClient {
@@ -14,10 +81,21 @@ pub struct HttpClient {
 }
 
 impl HttpClient {
+    /// Connect with the default 10s budget on connect, read, and write.
     pub fn connect(addr: SocketAddr) -> std::io::Result<HttpClient> {
-        let stream = TcpStream::connect(addr)?;
+        HttpClient::connect_with_timeout(addr, Duration::from_secs(10))
+    }
+
+    /// Connect with an explicit per-operation budget. Nothing this client
+    /// does afterwards can block longer than `timeout` per socket call.
+    pub fn connect_with_timeout(
+        addr: SocketAddr,
+        timeout: Duration,
+    ) -> std::io::Result<HttpClient> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
         stream.set_nodelay(true)?;
-        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
         let reader = BufReader::new(stream.try_clone()?);
         Ok(HttpClient {
             reader,
@@ -34,11 +112,31 @@ impl HttpClient {
         path: &str,
         body: Option<&str>,
     ) -> std::io::Result<(u16, String)> {
+        self.request_full(method, path, body, &[])
+            .map(|r| (r.status, r.body))
+    }
+
+    /// [`HttpClient::request`] with extra request headers (e.g.
+    /// `x-rcca-deadline-ms`) and the full [`Response`] back.
+    pub fn request_full(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        extra_headers: &[(&str, String)],
+    ) -> std::io::Result<Response> {
         let body = body.unwrap_or("");
-        let head = format!(
-            "{method} {path} HTTP/1.1\r\nhost: rcca\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n",
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: rcca\r\ncontent-type: application/json\r\ncontent-length: {}\r\n",
             body.len()
         );
+        for (name, value) in extra_headers {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
         self.writer.write_all(head.as_bytes())?;
         self.writer.write_all(body.as_bytes())?;
         self.writer.flush()?;
@@ -68,7 +166,7 @@ impl HttpClient {
         Ok(line)
     }
 
-    fn read_response(&mut self) -> std::io::Result<(u16, String)> {
+    fn read_response(&mut self) -> std::io::Result<Response> {
         let status_line = self.read_line()?;
         // "HTTP/1.1 200 OK"
         let status = status_line
@@ -82,27 +180,35 @@ impl HttpClient {
                 )
             })?;
         let mut content_length = 0usize;
+        let mut retry_after = None;
         loop {
             let line = self.read_line()?;
             if line.is_empty() {
                 break;
             }
             if let Some((name, value)) = line.split_once(':') {
-                if name.trim().eq_ignore_ascii_case("content-length") {
+                let name = name.trim();
+                if name.eq_ignore_ascii_case("content-length") {
                     content_length = value.trim().parse().map_err(|_| {
                         std::io::Error::new(
                             std::io::ErrorKind::InvalidData,
                             format!("bad content-length '{value}'"),
                         )
                     })?;
+                } else if name.eq_ignore_ascii_case("retry-after") {
+                    retry_after = value.trim().parse::<u64>().ok();
                 }
             }
         }
         let mut body = vec![0u8; content_length];
         self.reader.read_exact(&mut body)?;
-        String::from_utf8(body)
-            .map(|b| (status, b))
-            .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "non-utf8 body"))
+        let body = String::from_utf8(body)
+            .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "non-utf8 body"))?;
+        Ok(Response {
+            status,
+            body,
+            retry_after,
+        })
     }
 }
 
@@ -114,4 +220,109 @@ pub fn one_shot(
     body: Option<&str>,
 ) -> std::io::Result<(u16, String)> {
     HttpClient::connect(addr)?.request(method, path, body)
+}
+
+/// One-shot with bounded retries: reconnects per attempt (a torn or
+/// half-dead connection never leaks into the next try), backs off with
+/// seeded jitter between attempts, and honors the server's `Retry-After`
+/// on 429/503. Returns the last response or the last transport error once
+/// attempts are exhausted — never hangs, never retries forever.
+pub fn one_shot_retry(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    extra_headers: &[(&str, String)],
+    policy: &RetryPolicy,
+) -> std::io::Result<Response> {
+    let mut rng = Rng::new(policy.seed);
+    let attempts = policy.attempts.max(1);
+    let mut last_err = None;
+    for attempt in 0..attempts {
+        let outcome = HttpClient::connect_with_timeout(addr, policy.request_timeout)
+            .and_then(|mut c| c.request_full(method, path, body, extra_headers));
+        let retry_after = match outcome {
+            Ok(resp) if retryable_status(resp.status) && attempt + 1 < attempts => {
+                resp.retry_after
+            }
+            Ok(resp) => return Ok(resp),
+            Err(e) => {
+                if attempt + 1 == attempts {
+                    return Err(e);
+                }
+                last_err = Some(e);
+                None
+            }
+        };
+        std::thread::sleep(policy.backoff(attempt, retry_after, &mut rng));
+    }
+    // Unreachable: the loop always returns on its final attempt, but the
+    // compiler can't see that through the arithmetic.
+    Err(last_err.unwrap_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::Other, "retries exhausted")
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_honors_retry_after_and_caps_it() {
+        let p = RetryPolicy {
+            max_backoff: Duration::from_secs(2),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(7);
+        assert_eq!(p.backoff(0, Some(1), &mut rng), Duration::from_secs(1));
+        // An absurd Retry-After is capped, not obeyed.
+        assert_eq!(p.backoff(0, Some(600), &mut rng), Duration::from_secs(2));
+    }
+
+    #[test]
+    fn backoff_grows_but_stays_jittered_and_capped() {
+        let p = RetryPolicy {
+            base_backoff: Duration::from_millis(100),
+            max_backoff: Duration::from_secs(2),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(42);
+        for attempt in 0..6 {
+            let exp = Duration::from_millis(100).saturating_mul(1 << attempt);
+            let b = p.backoff(attempt, None, &mut rng);
+            // Jitter keeps the wait in [exp/2, exp], then the cap applies.
+            assert!(b >= (exp / 2).min(Duration::from_secs(2)), "attempt {attempt}: {b:?}");
+            assert!(b <= exp.min(Duration::from_secs(2)), "attempt {attempt}: {b:?}");
+        }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_for_a_seed() {
+        let p = RetryPolicy::default();
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for attempt in 0..4 {
+            assert_eq!(p.backoff(attempt, None, &mut a), p.backoff(attempt, None, &mut b));
+        }
+    }
+
+    #[test]
+    fn retryable_statuses_are_exactly_429_and_503() {
+        assert!(retryable_status(429));
+        assert!(retryable_status(503));
+        for s in [200, 400, 404, 409, 413, 422, 500, 504] {
+            assert!(!retryable_status(s), "{s}");
+        }
+    }
+
+    #[test]
+    fn connect_timeout_bounds_a_dead_endpoint() {
+        // RFC 5737 TEST-NET-1 address: routes nowhere, so the connect must
+        // fail by timeout rather than hang.
+        let addr: SocketAddr = "192.0.2.1:9".parse().unwrap();
+        let started = std::time::Instant::now();
+        let r = HttpClient::connect_with_timeout(addr, Duration::from_millis(200));
+        assert!(r.is_err());
+        assert!(started.elapsed() < Duration::from_secs(5));
+    }
 }

@@ -4,8 +4,14 @@
 //! no TLS, no multipart; anything outside the subset is a typed
 //! [`HttpError`] so the connection handler can answer 400 instead of
 //! panicking or hanging.
+//!
+//! Reads are *deadline-aware*: [`read_request_deadline`] arms a budget the
+//! instant the first byte of a request arrives (idle keep-alive wait costs
+//! nothing) and checks it on every byte of the head and every chunk of the
+//! body, so a trickling peer burns its own budget, not a worker thread.
 
 use std::io::{BufRead, Read, Write};
+use std::time::{Duration, Instant};
 
 /// Hard cap on one header line (request line included) — a malformed or
 /// hostile peer cannot make `read_line` buffer without bound.
@@ -24,6 +30,10 @@ pub struct Request {
     pub body: Vec<u8>,
     /// Whether the connection should stay open after the response.
     pub keep_alive: bool,
+    /// When the first byte of this request arrived — the anchor every
+    /// later deadline check measures from, so queue wait and batch wait
+    /// count against the same budget as the read itself.
+    pub received: Instant,
 }
 
 impl Request {
@@ -54,6 +64,9 @@ pub enum HttpError {
     Malformed(String),
     /// Declared body exceeds the configured cap — answer 413 and close.
     BodyTooLarge { declared: usize, limit: usize },
+    /// The read budget expired mid-request (slow loris, trickled body) —
+    /// answer 504 and close.
+    Deadline { elapsed: Duration, budget: Duration },
     /// Transport failure (including read timeout on an idle keep-alive).
     Io(std::io::Error),
 }
@@ -65,6 +78,12 @@ impl std::fmt::Display for HttpError {
             HttpError::BodyTooLarge { declared, limit } => {
                 write!(f, "body of {declared} bytes exceeds limit {limit}")
             }
+            HttpError::Deadline { elapsed, budget } => write!(
+                f,
+                "request read exceeded its {}ms budget after {}ms",
+                budget.as_millis(),
+                elapsed.as_millis()
+            ),
             HttpError::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -78,14 +97,71 @@ impl From<std::io::Error> for HttpError {
     }
 }
 
-fn read_line(reader: &mut dyn BufRead) -> Result<Option<String>, HttpError> {
+/// A read budget anchored at the request's first byte. Checked per byte
+/// on the head and per chunk on the body; an `Instant::now` per byte is
+/// tens of nanoseconds against a syscall-amortized `BufReader` — noise.
+#[derive(Debug, Clone, Copy)]
+struct ReadDeadline {
+    started: Instant,
+    budget: Duration,
+}
+
+impl ReadDeadline {
+    fn check(self) -> Result<(), HttpError> {
+        let elapsed = self.started.elapsed();
+        // `>=` so a zero budget is deterministically "already expired" even
+        // on a coarse clock.
+        if elapsed >= self.budget {
+            Err(HttpError::Deadline { elapsed, budget: self.budget })
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Type a failed socket read: a timeout after the budget is spent IS
+    /// the deadline firing (the socket timeout is just the clock that
+    /// noticed — the peer went silent mid-request), so it surfaces as
+    /// [`HttpError::Deadline`] and earns a 504; everything else stays Io.
+    fn classify(self, e: std::io::Error) -> HttpError {
+        if matches!(
+            e.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ) {
+            if let Err(expired) = self.check() {
+                return expired;
+            }
+        }
+        HttpError::Io(e)
+    }
+}
+
+/// `reader.read` with deadline-aware error typing (see
+/// [`ReadDeadline::classify`]).
+fn deadline_read(
+    reader: &mut dyn BufRead,
+    buf: &mut [u8],
+    deadline: Option<ReadDeadline>,
+) -> Result<usize, HttpError> {
+    reader.read(buf).map_err(|e| match deadline {
+        Some(d) => d.classify(e),
+        None => HttpError::Io(e),
+    })
+}
+
+fn read_line(
+    reader: &mut dyn BufRead,
+    deadline: Option<ReadDeadline>,
+) -> Result<Option<String>, HttpError> {
     let mut line = String::new();
     let mut chunk = [0u8; 1];
     // Byte-at-a-time via BufRead is fine: the underlying BufReader amortizes
     // syscalls, and it lets us enforce MAX_LINE_BYTES without over-reading
     // past the request.
     loop {
-        match reader.read(&mut chunk)? {
+        if let Some(d) = deadline {
+            d.check()?;
+        }
+        match deadline_read(reader, &mut chunk, deadline)? {
             0 => {
                 if line.is_empty() {
                     return Ok(None); // clean EOF
@@ -112,10 +188,32 @@ fn read_line(reader: &mut dyn BufRead) -> Result<Option<String>, HttpError> {
     }
 }
 
-/// Read one request off the wire. `max_body` bounds the accepted
+/// Read one request off the wire with no read budget (the socket read
+/// timeout is the only stall bound). `max_body` bounds the accepted
 /// `Content-Length`.
 pub fn read_request(reader: &mut dyn BufRead, max_body: usize) -> Result<ReadOutcome, HttpError> {
-    let request_line = match read_line(reader)? {
+    read_request_deadline(reader, max_body, None)
+}
+
+/// Read one request off the wire, arming `budget` the moment its first
+/// byte arrives. The wait *before* that byte (an idle keep-alive) is
+/// unbudgeted — it is bounded by the socket read timeout instead — so a
+/// connection can sit idle without accruing deadline debt, but once a
+/// request starts, head and body must land within the budget or the read
+/// fails with [`HttpError::Deadline`].
+pub fn read_request_deadline(
+    reader: &mut dyn BufRead,
+    max_body: usize,
+    budget: Option<Duration>,
+) -> Result<ReadOutcome, HttpError> {
+    // Wait for the first byte without consuming it: EOF here is the clean
+    // end of a keep-alive connection, not an error.
+    if reader.fill_buf()?.is_empty() {
+        return Ok(ReadOutcome::Closed);
+    }
+    let received = Instant::now();
+    let deadline = budget.map(|b| ReadDeadline { started: received, budget: b });
+    let request_line = match read_line(reader, deadline)? {
         None => return Ok(ReadOutcome::Closed),
         Some(l) => l,
     };
@@ -147,7 +245,7 @@ pub fn read_request(reader: &mut dyn BufRead, max_body: usize) -> Result<ReadOut
 
     let mut headers = Vec::new();
     loop {
-        let line = read_line(reader)?
+        let line = read_line(reader, deadline)?
             .ok_or_else(|| HttpError::Malformed("EOF inside headers".to_string()))?;
         if line.is_empty() {
             break;
@@ -183,7 +281,26 @@ pub fn read_request(reader: &mut dyn BufRead, max_body: usize) -> Result<ReadOut
     }
 
     let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body)?;
+    // Body read with a deadline check after every successful `read` call
+    // (not `read_exact`, which would restart the socket timeout on each
+    // dripped byte): a peer trickling the body cannot outlive its budget
+    // by more than one socket-timeout-bounded read call, and EOF mid-body
+    // is a typed error rather than a stall.
+    let mut filled = 0usize;
+    while filled < content_length {
+        if let Some(d) = deadline {
+            d.check()?;
+        }
+        let end = (filled + 8192).min(content_length);
+        let n = deadline_read(reader, &mut body[filled..end], deadline)?;
+        if n == 0 {
+            return Err(HttpError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed inside the request body",
+            )));
+        }
+        filled += n;
+    }
 
     let connection = headers
         .iter()
@@ -201,6 +318,7 @@ pub fn read_request(reader: &mut dyn BufRead, max_body: usize) -> Result<ReadOut
         headers,
         body,
         keep_alive,
+        received,
     }))
 }
 
@@ -213,8 +331,10 @@ pub fn status_reason(status: u16) -> &'static str {
         409 => "Conflict",
         413 => "Payload Too Large",
         422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
 }
@@ -225,15 +345,23 @@ fn write_response(
     content_type: &str,
     body: &str,
     keep_alive: bool,
+    extra_headers: &[(&str, String)],
 ) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
         status,
         status_reason(status),
         content_type,
         body.len(),
         if keep_alive { "keep-alive" } else { "close" }
     );
+    for (name, value) in extra_headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     w.write_all(head.as_bytes())?;
     w.write_all(body.as_bytes())?;
     w.flush()
@@ -247,7 +375,19 @@ pub fn write_json_response(
     body: &str,
     keep_alive: bool,
 ) -> std::io::Result<()> {
-    write_response(w, status, "application/json", body, keep_alive)
+    write_response(w, status, "application/json", body, keep_alive, &[])
+}
+
+/// [`write_json_response`] plus extra response headers — how overload
+/// answers carry `Retry-After`.
+pub fn write_json_response_headers(
+    w: &mut dyn Write,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+    extra_headers: &[(&str, String)],
+) -> std::io::Result<()> {
+    write_response(w, status, "application/json", body, keep_alive, extra_headers)
 }
 
 /// Write a plain-text response — the Prometheus exposition content type
@@ -258,7 +398,7 @@ pub fn write_text_response(
     body: &str,
     keep_alive: bool,
 ) -> std::io::Result<()> {
-    write_response(w, status, "text/plain; version=0.0.4", body, keep_alive)
+    write_response(w, status, "text/plain; version=0.0.4", body, keep_alive, &[])
 }
 
 #[cfg(test)]
@@ -381,6 +521,54 @@ mod tests {
         assert!(text.contains("content-type: text/plain; version=0.0.4\r\n"));
         assert!(text.contains("content-length: 10\r\n"));
         assert!(text.ends_with("rcca_up 1\n"));
+    }
+
+    #[test]
+    fn zero_budget_read_fails_with_deadline() {
+        // The budget arms at the first byte; with a zero budget every
+        // subsequent per-byte check is already expired.
+        let raw = "GET /healthz HTTP/1.1\r\n\r\n";
+        let mut r = BufReader::new(raw.as_bytes());
+        let err = read_request_deadline(&mut r, 1024, Some(Duration::ZERO)).unwrap_err();
+        assert!(matches!(err, HttpError::Deadline { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn generous_budget_read_succeeds_and_anchors_received() {
+        let raw = "POST /v1/transform HTTP/1.1\r\ncontent-length: 4\r\n\r\nabcd";
+        let mut r = BufReader::new(raw.as_bytes());
+        let before = Instant::now();
+        let req = match read_request_deadline(&mut r, 1024, Some(Duration::from_secs(5))).unwrap() {
+            ReadOutcome::Request(x) => x,
+            ReadOutcome::Closed => panic!("expected a request"),
+        };
+        assert_eq!(req.body, b"abcd");
+        assert!(req.received >= before);
+        // EOF afterwards is still the clean keep-alive close.
+        assert!(matches!(
+            read_request_deadline(&mut r, 1024, Some(Duration::from_secs(5))).unwrap(),
+            ReadOutcome::Closed
+        ));
+    }
+
+    #[test]
+    fn extra_headers_ride_the_response_head() {
+        let mut out = Vec::new();
+        write_json_response_headers(
+            &mut out,
+            429,
+            "{}",
+            false,
+            &[("retry-after", "3".to_string())],
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("retry-after: 3\r\n"), "{text}");
+        // Extra headers land before the blank line that ends the head.
+        let head_end = text.find("\r\n\r\n").unwrap();
+        assert!(text.find("retry-after").unwrap() < head_end);
+        assert_eq!(status_reason(504), "Gateway Timeout");
     }
 
     #[test]

@@ -189,8 +189,22 @@ pub struct ServeMetrics {
     pub connections: AtomicU64,
     /// Connections currently open (gauge).
     pub connections_active: AtomicU64,
-    /// Connections turned away with 503 because the worker queue was full.
+    /// Connections turned away because the worker queue was full (the
+    /// legacy name; kept accumulating alongside the labeled shed counters).
     pub rejected_overload: AtomicU64,
+    /// Requests shed because their deadline expired (504).
+    pub shed_deadline: AtomicU64,
+    /// Connections shed because the accept queue was full (429).
+    pub shed_queue: AtomicU64,
+    /// Transforms fast-failed because the circuit breaker was open (503).
+    pub shed_breaker: AtomicU64,
+    /// Transforms shed at the per-endpoint concurrency cap (429).
+    pub shed_concurrency: AtomicU64,
+    /// 1 while the server is degraded (breaker not closed, or the last
+    /// reload failed); 0 when healthy. Gauge, stored not accumulated.
+    pub degraded: AtomicU64,
+    /// Faults injected by the serve chaos plan (0 without `--chaos`).
+    pub chaos_injected: AtomicU64,
     /// Rows projected through the model (across all batches).
     pub rows_transformed: AtomicU64,
     /// Fused batch projections issued by the batcher.
@@ -224,6 +238,12 @@ impl ServeMetrics {
             connections: AtomicU64::new(0),
             connections_active: AtomicU64::new(0),
             rejected_overload: AtomicU64::new(0),
+            shed_deadline: AtomicU64::new(0),
+            shed_queue: AtomicU64::new(0),
+            shed_breaker: AtomicU64::new(0),
+            shed_concurrency: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            chaos_injected: AtomicU64::new(0),
             rows_transformed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             reloads: AtomicU64::new(0),
@@ -310,8 +330,18 @@ impl MetricSource for ServeMetrics {
             ),
             telemetry::counter(
                 "rcca_serve_rejected_overload_total",
-                "Connections turned away with 503",
+                "Connections turned away at the accept queue (legacy name for shed{reason=\"queue\"})",
                 c(&self.rejected_overload),
+            ),
+            telemetry::gauge(
+                "rcca_serve_degraded",
+                "1 while the breaker is not closed or the last reload failed",
+                c(&self.degraded) as f64,
+            ),
+            telemetry::counter(
+                "rcca_serve_chaos_injections_total",
+                "Faults injected by the serve chaos plan (0 without --chaos)",
+                c(&self.chaos_injected),
             ),
             telemetry::counter(
                 "rcca_serve_rows_transformed_total",
@@ -371,6 +401,28 @@ impl MetricSource for ServeMetrics {
             "Exact mean rows per fused batch (sum/count)",
             rows.mean(),
         ));
+        // Shed accounting, labeled by what shed the work: the overload
+        // contract's observable half (429 queue/concurrency, 503 breaker,
+        // 504 deadline). Prom-only: the JSON snapshot shape is frozen.
+        fams.push(Family {
+            name: "rcca_serve_shed_total".to_string(),
+            help: "Requests shed, by reason (deadline=504, queue/concurrency=429, breaker=503)"
+                .to_string(),
+            kind: FamilyKind::Counter,
+            samples: [
+                ("deadline", &self.shed_deadline),
+                ("queue", &self.shed_queue),
+                ("breaker", &self.shed_breaker),
+                ("concurrency", &self.shed_concurrency),
+            ]
+            .iter()
+            .map(|(reason, counter)| Sample {
+                suffix: "",
+                labels: vec![("reason".to_string(), (*reason).to_string())],
+                value: counter.load(Ordering::Relaxed) as f64,
+            })
+            .collect(),
+        });
         // Per-endpoint SLO surface: request counts plus p50/p99/mean
         // latency gauges, labeled by endpoint.
         let table = &self.endpoints.endpoints;
@@ -531,12 +583,31 @@ mod tests {
     }
 
     #[test]
+    fn shed_counters_export_as_labeled_family_with_degraded_gauge() {
+        let m = ServeMetrics::new();
+        m.add(&m.shed_deadline, 3);
+        m.add(&m.shed_breaker, 1);
+        m.degraded.store(1, Ordering::Relaxed);
+        let mut prom = String::new();
+        crate::telemetry::render_families(&m.prom_families(), &mut prom);
+        assert!(prom.contains("rcca_serve_shed_total{reason=\"deadline\"} 3"), "{prom}");
+        assert!(prom.contains("rcca_serve_shed_total{reason=\"queue\"} 0"), "{prom}");
+        assert!(prom.contains("rcca_serve_shed_total{reason=\"breaker\"} 1"), "{prom}");
+        assert!(prom.contains("rcca_serve_shed_total{reason=\"concurrency\"} 0"), "{prom}");
+        assert!(prom.contains("rcca_serve_degraded 1"), "{prom}");
+        assert!(prom.contains("rcca_serve_chaos_injections_total 0"), "{prom}");
+    }
+
+    #[test]
     fn json_snapshot_shape_is_frozen() {
-        // The prom-only additions (endpoint SLOs, per-direction drift) must
-        // never leak into the legacy JSON snapshot: scrapers and the serve
-        // integration tests depend on this exact key set.
+        // The prom-only additions (endpoint SLOs, per-direction drift,
+        // shed/degraded/chaos accounting) must never leak into the legacy
+        // JSON snapshot: scrapers and the serve integration tests depend on
+        // this exact key set.
         let m = ServeMetrics::new();
         m.set_drift_per_direction(&[0.1, 0.2]);
+        m.add(&m.shed_deadline, 2);
+        m.degraded.store(1, Ordering::Relaxed);
         let s = m.snapshot();
         let keys: Vec<&str> = match &s {
             Json::Obj(o) => o.keys().map(|k| k.as_str()).collect(),

@@ -9,24 +9,50 @@
 //! |-----------------------|--------|---------------------------------------------|
 //! | `/v1/transform`       | POST   | sparse rows in → canonical projections out  |
 //! | `/v1/model`           | GET    | solver, k, correlations, passes, generation |
-//! | `/healthz`            | GET    | liveness + current model generation         |
+//! | `/healthz`            | GET    | `ok` / `degraded` / `draining` + generation |
 //! | `/metrics`            | GET    | counters + latency/batch histograms (JSON;  |
 //! |                       |        | `?format=prom` for Prometheus text)         |
 //! | `/admin/reload`       | POST   | atomic hot-swap from the model path         |
 //!
 //! Architecture: the accept loop hands each connection to the existing
-//! [`Pool`] (bounded queue → natural backpressure; a full queue turns
-//! connections away with 503 instead of stalling accepts). Handlers parse
-//! with the hand-rolled [`http`] codec, validate with [`proto`], and push
+//! [`Pool`] (bounded queue → natural backpressure). Handlers parse with
+//! the hand-rolled [`http`] codec, validate with [`proto`], and push
 //! transform rows into the [`batcher::Batcher`], which fuses concurrent
 //! requests into one panel-kernel projection per view against an atomic
 //! [`registry::ModelRegistry`] snapshot — a `POST /admin/reload` swaps the
 //! `Arc<FittedModel>` without stalling in-flight work.
 //!
+//! ## The overload contract
+//!
+//! Every request carries a time budget — the `x-rcca-deadline-ms` header,
+//! clamped to [`ServerConfig::max_deadline`], or
+//! [`ServerConfig::default_deadline`] — anchored at its first byte and
+//! enforced at every stage: header/body read, queue wait, batcher wait,
+//! and response write. The status code tells the client what to do next:
+//!
+//! * **429 + `Retry-After`** — retryable overload: the accept queue was
+//!   full, or the transform concurrency cap was hit. The server is
+//!   healthy, just busy; come back after the advertised delay (computed
+//!   from live queue depth and measured drain rate).
+//! * **503** — hard failure: the circuit [`breaker`] is open after
+//!   consecutive batcher failures (fast-fail, don't queue work a broken
+//!   batcher can't answer), or the server is draining for shutdown.
+//! * **504** — the request's own deadline expired (body with
+//!   `elapsed_ms`/`budget_ms`); a retry needs a bigger budget, not a
+//!   later arrival.
+//!
+//! The transform concurrency cap is deliberately below the thread count,
+//! so `/healthz` and `/metrics` keep answering while `/v1/transform`
+//! sheds. `/healthz` reports `degraded` while the breaker is not closed
+//! or the last reload failed (the pinned generation keeps serving), and
+//! `draining` during shutdown. Deterministic fault injection for all of
+//! this lives in [`crate::chaos::ServePlan`] (`repro serve --chaos`).
+//!
 //! Everything is `std`-only, in keeping with the offline build (see
 //! `Cargo.toml`): no tokio, no hyper, no serde.
 
 pub mod batcher;
+pub mod breaker;
 pub mod client;
 pub mod http;
 pub mod metrics;
@@ -34,12 +60,14 @@ pub mod proto;
 pub mod registry;
 
 pub use batcher::Batcher;
-pub use client::HttpClient;
+pub use breaker::{Admission, BreakerConfig, CircuitBreaker};
+pub use client::{HttpClient, Response, RetryPolicy};
 pub use metrics::ServeMetrics;
 pub use proto::View;
 pub use registry::ModelRegistry;
 
 use crate::api::ApiError;
+use crate::chaos::{ServeChaos, ServePlan};
 use crate::telemetry::{self, MetricsRegistry};
 use crate::util::json::{jnum, jstr, Json};
 use crate::util::pool::Pool;
@@ -47,7 +75,7 @@ use std::fmt;
 use std::io::{BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -67,8 +95,19 @@ pub enum ServeError {
     Dimension { expected: usize, got: usize },
     /// Reload failed; the old model keeps serving → 409.
     Reload(String),
-    /// Worker queue full → 503.
-    Overloaded,
+    /// Retryable overload (queue full, concurrency cap) → 429 with a
+    /// `Retry-After` header derived from live queue depth and drain rate.
+    Overloaded {
+        reason: &'static str,
+        retry_after_secs: u64,
+    },
+    /// The request's time budget expired → 504 with elapsed/budget in the
+    /// body so the client can size its next attempt.
+    DeadlineExceeded { elapsed_ms: u64, budget_ms: u64 },
+    /// Circuit breaker open after consecutive batcher failures → 503.
+    BreakerOpen,
+    /// Server is draining for shutdown → 503.
+    Draining,
     /// Startup / model-layer failure → 500.
     Model(String),
     /// Anything else on the server side → 500.
@@ -84,20 +123,46 @@ impl ServeError {
             ServeError::PayloadTooLarge { .. } => 413,
             ServeError::Dimension { .. } => 422,
             ServeError::Reload(_) => 409,
-            ServeError::Overloaded => 503,
+            ServeError::Overloaded { .. } => 429,
+            ServeError::DeadlineExceeded { .. } => 504,
+            ServeError::BreakerOpen | ServeError::Draining => 503,
             ServeError::Model(_) | ServeError::Internal(_) => 500,
         }
     }
 
-    /// JSON error body: `{"error": {"status": 422, "message": "..."}}`.
+    /// JSON error body: `{"error": {"status": 422, "message": "..."}}`,
+    /// plus machine-readable detail for the overload statuses
+    /// (`retry_after_secs` on 429, `elapsed_ms`/`budget_ms` on 504).
     pub fn to_body(&self) -> String {
         let mut inner = Json::obj();
         inner
             .set("status", jnum(self.status() as f64))
             .set("message", jstr(&self.to_string()));
+        match self {
+            ServeError::Overloaded { retry_after_secs, .. } => {
+                inner.set("retry_after_secs", jnum(*retry_after_secs as f64));
+            }
+            ServeError::DeadlineExceeded { elapsed_ms, budget_ms } => {
+                inner
+                    .set("elapsed_ms", jnum(*elapsed_ms as f64))
+                    .set("budget_ms", jnum(*budget_ms as f64));
+            }
+            _ => {}
+        }
         let mut o = Json::obj();
         o.set("error", inner);
         o.to_string_compact()
+    }
+
+    /// Response headers this error carries beyond the standard set —
+    /// `Retry-After` on every 429, nothing otherwise.
+    pub fn extra_headers(&self) -> Vec<(&'static str, String)> {
+        match self {
+            ServeError::Overloaded { retry_after_secs, .. } => {
+                vec![("retry-after", retry_after_secs.to_string())]
+            }
+            _ => Vec::new(),
+        }
     }
 }
 
@@ -117,7 +182,18 @@ impl fmt::Display for ServeError {
                 "dimension mismatch: model expects width {expected}, request has {got}"
             ),
             ServeError::Reload(m) => write!(f, "reload rejected: {m}"),
-            ServeError::Overloaded => write!(f, "server overloaded, try again"),
+            ServeError::Overloaded { reason, retry_after_secs } => write!(
+                f,
+                "overloaded ({reason}), retry after {retry_after_secs}s"
+            ),
+            ServeError::DeadlineExceeded { elapsed_ms, budget_ms } => write!(
+                f,
+                "deadline exceeded: {elapsed_ms}ms elapsed of a {budget_ms}ms budget"
+            ),
+            ServeError::BreakerOpen => {
+                write!(f, "circuit breaker open: transforms are failing fast")
+            }
+            ServeError::Draining => write!(f, "server is draining for shutdown"),
             ServeError::Model(m) => write!(f, "model: {m}"),
             ServeError::Internal(m) => write!(f, "internal: {m}"),
         }
@@ -132,6 +208,58 @@ impl From<ApiError> for ServeError {
     }
 }
 
+/// A request's time budget, anchored at the instant its first byte
+/// arrived. One `Deadline` travels with the request through every stage —
+/// read, queue wait, batcher wait, response write — so the stages share a
+/// single budget instead of each getting its own.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    start: Instant,
+    budget: Duration,
+}
+
+impl Deadline {
+    pub fn new(start: Instant, budget: Duration) -> Deadline {
+        Deadline { start, budget }
+    }
+
+    /// A deadline starting now — for tests and offline callers that have
+    /// no wire-anchored receive instant.
+    pub fn starting_now(budget: Duration) -> Deadline {
+        Deadline::new(Instant::now(), budget)
+    }
+
+    pub fn budget(&self) -> Duration {
+        self.budget
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Time left, or `None` once the budget is spent.
+    pub fn remaining(&self) -> Option<Duration> {
+        let rem = self.budget.saturating_sub(self.start.elapsed());
+        if rem.is_zero() {
+            None
+        } else {
+            Some(rem)
+        }
+    }
+
+    pub fn expired(&self) -> bool {
+        self.remaining().is_none()
+    }
+
+    /// The 504 this deadline produces when it expires.
+    pub fn to_error(&self) -> ServeError {
+        ServeError::DeadlineExceeded {
+            elapsed_ms: self.elapsed().as_millis() as u64,
+            budget_ms: self.budget.as_millis() as u64,
+        }
+    }
+}
+
 /// Server tunables; `Default` suits tests and small deployments.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -141,7 +269,7 @@ pub struct ServerConfig {
     /// steady keep-alive clients, with headroom for health probes and
     /// `/admin/reload` — excess connections wait in the bounded queue.
     pub threads: usize,
-    /// Bounded pending-connection queue; beyond it, accepts answer 503.
+    /// Bounded pending-connection queue; beyond it, accepts answer 429.
     pub queue_capacity: usize,
     /// Row budget per fused transform batch.
     pub max_batch_rows: usize,
@@ -150,6 +278,21 @@ pub struct ServerConfig {
     /// Socket read timeout — bounds how long an idle keep-alive connection
     /// can pin a worker.
     pub read_timeout: Duration,
+    /// Time budget for requests that carry no `x-rcca-deadline-ms` header.
+    pub default_deadline: Duration,
+    /// Hard ceiling on the budget a client may request via the header
+    /// (also the read budget while the header is still unparsed).
+    pub max_deadline: Duration,
+    /// Concurrent `/v1/transform` requests admitted before shedding 429.
+    /// `0` = auto: `threads - 2` (min 1), keeping workers free for
+    /// `/healthz` and `/metrics` under transform saturation.
+    pub transform_inflight: usize,
+    /// Consecutive batcher failures that open the circuit breaker.
+    pub breaker_threshold: u32,
+    /// How long the breaker stays open before a half-open probe.
+    pub breaker_cooldown: Duration,
+    /// Deterministic fault plan (`ServePlan::none()` serves cleanly).
+    pub chaos: ServePlan,
 }
 
 impl Default for ServerConfig {
@@ -160,6 +303,24 @@ impl Default for ServerConfig {
             max_batch_rows: 256,
             max_body_bytes: 8 * 1024 * 1024,
             read_timeout: Duration::from_secs(30),
+            default_deadline: Duration::from_secs(10),
+            max_deadline: Duration::from_secs(60),
+            transform_inflight: 0,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_secs(1),
+            chaos: ServePlan::none(),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// The effective transform concurrency cap (resolves the `0 = auto`
+    /// sentinel).
+    fn resolved_transform_inflight(&self) -> usize {
+        if self.transform_inflight > 0 {
+            self.transform_inflight
+        } else {
+            self.threads.saturating_sub(2).max(1)
         }
     }
 }
@@ -173,7 +334,83 @@ struct Ctx {
     /// own instance, so tests and co-located daemons stay independent).
     telemetry: Arc<MetricsRegistry>,
     shutdown: Arc<AtomicBool>,
+    breaker: CircuitBreaker,
+    chaos: Arc<ServeChaos>,
     max_body_bytes: usize,
+    default_deadline: Duration,
+    max_deadline: Duration,
+    threads: usize,
+    /// Live `/v1/transform` requests past admission (gauge for the cap).
+    transform_inflight: AtomicUsize,
+    transform_cap: usize,
+}
+
+impl Ctx {
+    /// Recompute the degraded gauge and mirror the chaos injection count —
+    /// called after every breaker/reload interaction so the Prometheus
+    /// surface tracks the health state machine without a scraper loop.
+    fn refresh_health(&self) {
+        let degraded = self.breaker.is_degraded() || self.registry.reload_failed();
+        self.metrics.degraded.store(u64::from(degraded), Ordering::Relaxed);
+        self.metrics
+            .chaos_injected
+            .store(self.chaos.injected(), Ordering::Relaxed);
+    }
+
+    /// Seconds a 429'd client should wait: queue depth over measured drain
+    /// rate (`threads / mean_latency`), clamped to [1, 30]. With no
+    /// latency history yet, assume a fast server and say 1.
+    fn retry_after_secs(&self, queued: usize) -> u64 {
+        let mean_us = self.metrics.latency_us.mean();
+        if mean_us <= 0.0 {
+            return 1;
+        }
+        let drain_secs = queued as f64 * (mean_us / 1e6) / self.threads.max(1) as f64;
+        (drain_secs.ceil() as u64).clamp(1, 30)
+    }
+}
+
+/// RAII decrement for the `connections_active` gauge — chaos-injected
+/// handler panics unwind through here (the pool contains them), and the
+/// gauge must not drift when they do.
+struct ActiveGuard<'a>(&'a Ctx);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0
+            .metrics
+            .connections_active
+            .fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// RAII slot under the transform concurrency cap.
+struct InflightGuard<'a>(&'a Ctx);
+
+impl<'a> InflightGuard<'a> {
+    fn acquire(ctx: &'a Ctx) -> Option<InflightGuard<'a>> {
+        let mut cur = ctx.transform_inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= ctx.transform_cap {
+                return None;
+            }
+            match ctx.transform_inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(InflightGuard(ctx)),
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.transform_inflight.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 /// The model server. `bind` loads the model and claims the socket; `run`
@@ -217,10 +454,12 @@ impl Server {
         let local = listener
             .local_addr()
             .map_err(|e| ServeError::Internal(format!("local_addr: {e}")))?;
-        let batcher = Batcher::start(
+        let chaos = Arc::new(ServeChaos::new(cfg.chaos.clone()));
+        let batcher = Batcher::start_with_chaos(
             Arc::clone(&registry),
             Arc::clone(&metrics),
             cfg.max_batch_rows,
+            Some(Arc::clone(&chaos)),
         );
         let pool = Pool::new(cfg.threads, cfg.queue_capacity);
         let telemetry_registry = Arc::new(MetricsRegistry::new());
@@ -235,7 +474,17 @@ impl Server {
                 metrics,
                 telemetry: telemetry_registry,
                 shutdown: Arc::new(AtomicBool::new(false)),
+                breaker: CircuitBreaker::new(BreakerConfig {
+                    failure_threshold: cfg.breaker_threshold,
+                    cooldown: cfg.breaker_cooldown,
+                }),
+                chaos,
                 max_body_bytes: cfg.max_body_bytes,
+                default_deadline: cfg.default_deadline,
+                max_deadline: cfg.max_deadline.max(cfg.default_deadline),
+                threads: cfg.threads,
+                transform_inflight: AtomicUsize::new(0),
+                transform_cap: cfg.resolved_transform_inflight(),
             }),
             cfg,
         })
@@ -299,14 +548,27 @@ impl Server {
             let _ = stream.set_read_timeout(Some(cfg.read_timeout));
             // Shed load before queueing: a full pending queue means every
             // worker is busy AND the backlog is at capacity — turn the
-            // connection away with 503 rather than stall the accept loop.
+            // connection away rather than stall the accept loop. This is
+            // the *retryable* overload (429 + Retry-After): the server is
+            // healthy, the client should come back once the queue drains.
             // (Racy against workers draining the queue, but the race only
             // ever errs toward accepting, and `submit` stays bounded.)
-            if pool.queued() >= pool.capacity() {
+            let queued = pool.queued();
+            if queued >= pool.capacity() {
                 ctx.metrics.add(&ctx.metrics.rejected_overload, 1);
+                ctx.metrics.add(&ctx.metrics.shed_queue, 1);
                 let mut s = stream;
-                let err = ServeError::Overloaded;
-                let _ = http::write_json_response(&mut s, err.status(), &err.to_body(), false);
+                let err = ServeError::Overloaded {
+                    reason: "queue",
+                    retry_after_secs: ctx.retry_after_secs(queued),
+                };
+                let _ = http::write_json_response_headers(
+                    &mut s,
+                    err.status(),
+                    &err.to_body(),
+                    false,
+                    &err.extra_headers(),
+                );
                 continue;
             }
             let conn_ctx = Arc::clone(&ctx);
@@ -322,11 +584,29 @@ impl Server {
 /// error forces a close, or shutdown is requested.
 fn handle_connection(stream: TcpStream, ctx: &Arc<Ctx>) {
     ctx.metrics.add(&ctx.metrics.connections_active, 1);
+    // RAII, not a trailing fetch_sub: a chaos worker-panic unwinds through
+    // this frame (the pool's catch_unwind contains it) and the gauge must
+    // still come back down.
+    let _active = ActiveGuard(ctx);
     serve_connection(stream, ctx);
-    // Gauge decrement (no fetch_sub wrapper on ServeMetrics::add).
-    ctx.metrics
-        .connections_active
-        .fetch_sub(1, Ordering::Relaxed);
+}
+
+/// Derive the request's deadline: the `x-rcca-deadline-ms` header (clamped
+/// to `[1ms, max_deadline]`) or the configured default, anchored at the
+/// instant the request's first byte arrived.
+fn request_deadline(req: &http::Request, ctx: &Ctx) -> Result<Deadline, ServeError> {
+    let budget = match req.header("x-rcca-deadline-ms") {
+        None => ctx.default_deadline,
+        Some(raw) => {
+            let ms = raw.trim().parse::<u64>().map_err(|_| {
+                ServeError::BadRequest(format!(
+                    "x-rcca-deadline-ms must be a positive integer, got '{raw}'"
+                ))
+            })?;
+            Duration::from_millis(ms.max(1)).min(ctx.max_deadline)
+        }
+    };
+    Ok(Deadline::new(req.received, budget))
 }
 
 fn serve_connection(stream: TcpStream, ctx: &Arc<Ctx>) {
@@ -337,12 +617,29 @@ fn serve_connection(stream: TcpStream, ctx: &Arc<Ctx>) {
     let mut writer = stream;
     loop {
         let read_started = Instant::now();
-        let request = match http::read_request(&mut reader, ctx.max_body_bytes) {
+        // The read budget is the deadline ceiling: the header that could
+        // narrow it is exactly what is still being read. The per-request
+        // deadline re-checks against the real budget right after parse.
+        let request = match http::read_request_deadline(
+            &mut reader,
+            ctx.max_body_bytes,
+            Some(ctx.max_deadline),
+        ) {
             Ok(http::ReadOutcome::Closed) => return,
             Ok(http::ReadOutcome::Request(r)) => r,
             Err(http::HttpError::Io(_)) => {
                 // Timeouts and resets on idle keep-alive connections are the
                 // normal end of a connection's life, not a server fault.
+                return;
+            }
+            Err(http::HttpError::Deadline { elapsed, budget }) => {
+                // Slow loris: the head or body trickled past the ceiling.
+                ctx.metrics.add(&ctx.metrics.shed_deadline, 1);
+                let err = ServeError::DeadlineExceeded {
+                    elapsed_ms: elapsed.as_millis() as u64,
+                    budget_ms: budget.as_millis() as u64,
+                };
+                respond_error(&mut writer, ctx, &err, false);
                 return;
             }
             Err(http::HttpError::BodyTooLarge { declared, limit }) => {
@@ -367,6 +664,12 @@ fn serve_connection(stream: TcpStream, ctx: &Arc<Ctx>) {
                 return;
             }
         };
+        // Chaos: a stalled parse/read path. Sleeps *after* the read so the
+        // request's own budget burns — downstream stages must then shed it.
+        if let Some(stall) = ctx.chaos.stall_read() {
+            std::thread::sleep(stall);
+            ctx.refresh_health();
+        }
         let started = Instant::now();
         let keep_alive = request.keep_alive && !ctx.shutdown.load(Ordering::SeqCst);
         ctx.metrics.add(&ctx.metrics.requests_total, 1);
@@ -382,10 +685,36 @@ fn serve_connection(stream: TcpStream, ctx: &Arc<Ctx>) {
             read_started.elapsed().as_nanos() as u64,
             vec![],
         );
-        let reply = {
-            let _handle_span = telemetry::span("handle");
-            dispatch(&request, ctx)
+        let reply = match request_deadline(&request, ctx) {
+            Err(e) => Err(e),
+            Ok(deadline) if deadline.expired() => {
+                // The budget died during read or the chaos stall — shed
+                // before dispatch rather than do work nobody waits for.
+                ctx.metrics.add(&ctx.metrics.shed_deadline, 1);
+                Err(deadline.to_error())
+            }
+            Ok(deadline) => {
+                let _handle_span = telemetry::span("handle");
+                dispatch(&request, ctx, deadline)
+            }
         };
+        // Bound the response write by what's left of the budget (with a
+        // small floor so error bodies still make it out).
+        let write_budget = request_deadline(&request, ctx)
+            .ok()
+            .and_then(|d| d.remaining())
+            .unwrap_or(Duration::from_millis(100))
+            .max(Duration::from_millis(10));
+        let _ = writer.set_write_timeout(Some(write_budget));
+        // Chaos: tear the response — half a status line, then a hard close.
+        // The client must see a transport error, never a hung read.
+        if ctx.chaos.torn_write() {
+            ctx.refresh_health();
+            let _ = writer.write_all(b"HTTP/1.1 20");
+            let _ = writer.flush();
+            let _ = writer.shutdown(std::net::Shutdown::Both);
+            return;
+        }
         let write_ok = {
             let _write_span = telemetry::span("write");
             match reply {
@@ -400,11 +729,12 @@ fn serve_connection(stream: TcpStream, ctx: &Arc<Ctx>) {
                 Err(err) => {
                     ctx.metrics.add(&ctx.metrics.requests_failed, 1);
                     req_span.attr("status", err.status() as u64);
-                    http::write_json_response(
+                    http::write_json_response_headers(
                         &mut writer,
                         err.status(),
                         &err.to_body(),
                         keep_alive,
+                        &err.extra_headers(),
                     )
                     .is_ok()
                 }
@@ -425,7 +755,13 @@ fn serve_connection(stream: TcpStream, ctx: &Arc<Ctx>) {
 fn respond_error(writer: &mut TcpStream, ctx: &Arc<Ctx>, err: &ServeError, keep_alive: bool) {
     ctx.metrics.add(&ctx.metrics.requests_total, 1);
     ctx.metrics.add(&ctx.metrics.requests_failed, 1);
-    let _ = http::write_json_response(writer, err.status(), &err.to_body(), keep_alive);
+    let _ = http::write_json_response_headers(
+        writer,
+        err.status(),
+        &err.to_body(),
+        keep_alive,
+        &err.extra_headers(),
+    );
     let _ = writer.flush();
 }
 
@@ -458,16 +794,32 @@ fn endpoint_name(target: &str) -> &'static str {
 }
 
 /// Route a parsed request to its endpoint; `Ok` is a 200 body.
-fn dispatch(req: &http::Request, ctx: &Arc<Ctx>) -> Result<Reply, ServeError> {
+fn dispatch(req: &http::Request, ctx: &Arc<Ctx>, deadline: Deadline) -> Result<Reply, ServeError> {
     let (path, query) = match req.path.split_once('?') {
         Some((p, q)) => (p, q),
         None => (req.path.as_str(), ""),
     };
     match (req.method.as_str(), path) {
         ("GET", "/healthz") => {
+            // The health state machine: ok → degraded (breaker not closed,
+            // or last reload failed — pinned generation still serving) →
+            // draining (shutdown in progress). Never a lying "ok".
+            ctx.refresh_health();
+            let status = if ctx.shutdown.load(Ordering::SeqCst) {
+                "draining"
+            } else if ctx.breaker.is_degraded() || ctx.registry.reload_failed() {
+                "degraded"
+            } else {
+                "ok"
+            };
             let mut o = Json::obj();
-            o.set("status", jstr("ok"))
-                .set("generation", jnum(ctx.registry.generation() as f64));
+            o.set("status", jstr(status))
+                .set("generation", jnum(ctx.registry.generation() as f64))
+                .set("breaker", jstr(ctx.breaker.state_name()))
+                .set(
+                    "reload_failed",
+                    jnum(u64::from(ctx.registry.reload_failed()) as f64),
+                );
             Ok(Reply::Json(o.to_string_compact()))
         }
         ("GET", "/v1/model") => Ok(Reply::Json(ctx.registry.metadata().to_string_compact())),
@@ -479,6 +831,7 @@ fn dispatch(req: &http::Request, ctx: &Arc<Ctx>) -> Result<Reply, ServeError> {
                 Ok(Reply::Json(o.to_string_compact()))
             }
             Some("prom") => {
+                ctx.refresh_health();
                 let mut text = ctx.telemetry.render_prom();
                 telemetry::render_families(
                     &[
@@ -492,6 +845,11 @@ fn dispatch(req: &http::Request, ctx: &Arc<Ctx>) -> Result<Reply, ServeError> {
                             "Rows waiting in the transform batcher",
                             ctx.batcher.queued() as f64,
                         ),
+                        telemetry::gauge(
+                            "rcca_serve_transform_inflight",
+                            "Transform requests past admission right now",
+                            ctx.transform_inflight.load(Ordering::Relaxed) as f64,
+                        ),
                     ],
                     &mut text,
                 );
@@ -501,12 +859,21 @@ fn dispatch(req: &http::Request, ctx: &Arc<Ctx>) -> Result<Reply, ServeError> {
                 "unknown metrics format '{other}'"
             ))),
         },
-        ("POST", "/v1/transform") => transform(req, ctx).map(Reply::Json),
+        ("POST", "/v1/transform") => transform(req, ctx, deadline).map(Reply::Json),
         ("POST", "/admin/reload") => {
-            let snap = ctx
-                .registry
-                .reload()
-                .map_err(|e| ServeError::Reload(e.to_string()))?;
+            // Chaos: the document on disk is "corrupt". The registry pins
+            // the serving generation and flags itself degraded — exactly
+            // what a real failed hot-swap does.
+            if ctx.chaos.corrupt_reload() {
+                ctx.registry.mark_reload_failed();
+                ctx.refresh_health();
+                return Err(ServeError::Reload(
+                    "injected corrupt model document (chaos)".to_string(),
+                ));
+            }
+            let outcome = ctx.registry.reload();
+            ctx.refresh_health();
+            let snap = outcome.map_err(|e| ServeError::Reload(e.to_string()))?;
             ctx.metrics.add(&ctx.metrics.reloads, 1);
             let mut o = Json::obj();
             o.set("status", jstr("reloaded"))
@@ -526,7 +893,10 @@ fn dispatch(req: &http::Request, ctx: &Arc<Ctx>) -> Result<Reply, ServeError> {
     }
 }
 
-fn transform(req: &http::Request, ctx: &Arc<Ctx>) -> Result<String, ServeError> {
+fn transform(req: &http::Request, ctx: &Arc<Ctx>, deadline: Deadline) -> Result<String, ServeError> {
+    // Request-shaped errors (400/422) resolve before any admission
+    // machinery runs: a garbage body must not consume a breaker probe or a
+    // concurrency slot.
     let text = req.body_str().map_err(|e| ServeError::BadRequest(e.to_string()))?;
     let doc = crate::util::json::parse(text)
         .map_err(|e| ServeError::BadRequest(format!("body is not JSON: {e}")))?;
@@ -534,16 +904,99 @@ fn transform(req: &http::Request, ctx: &Arc<Ctx>) -> Result<String, ServeError> 
     // between here and the batch, the batcher re-checks and answers 422.
     let snap = ctx.registry.snapshot();
     let parsed = proto::parse_transform(&doc, snap.model.da(), snap.model.db())?;
-    let rx = ctx.batcher.submit(parsed.view, parsed.rows);
-    let (proj, generation) = match rx.recv_timeout(Duration::from_secs(60)) {
-        Ok(result) => result?,
+    // Chaos: a handler crash mid-request. The pool's catch_unwind contains
+    // it; the client sees a closed connection, never a hung one, and the
+    // RAII guards unwind the gauges.
+    if ctx.chaos.worker_panic() {
+        ctx.refresh_health();
+        panic!("injected transform worker panic (chaos)");
+    }
+    // Admission, stage 1 — concurrency cap (429, retryable): keeps workers
+    // free for /healthz and /metrics while transforms saturate.
+    let Some(_slot) = InflightGuard::acquire(ctx) else {
+        ctx.metrics.add(&ctx.metrics.shed_concurrency, 1);
+        return Err(ServeError::Overloaded {
+            reason: "concurrency",
+            retry_after_secs: ctx.retry_after_secs(ctx.transform_cap),
+        });
+    };
+    // Admission, stage 2 — circuit breaker (503, not retryable-soon):
+    // while open, fail fast instead of queueing work a broken batcher
+    // cannot answer. One half-open probe at a time rides through, and a
+    // probe MUST resolve the half-open state on every exit path below —
+    // an unreported probe would wedge the breaker rejecting forever.
+    let is_probe = match ctx.breaker.admit() {
+        Admission::Reject => {
+            ctx.metrics.add(&ctx.metrics.shed_breaker, 1);
+            ctx.refresh_health();
+            return Err(ServeError::BreakerOpen);
+        }
+        Admission::Probe => true,
+        Admission::Admit => false,
+    };
+    // Admission, stage 3 — the request's own deadline, which may have died
+    // waiting in the accept queue (504).
+    let Some(wait_budget) = deadline.remaining() else {
+        if is_probe {
+            // The probe never ran: re-open (restarting the cooldown) so a
+            // later request probes with a live budget.
+            ctx.breaker.record_failure();
+        }
+        ctx.metrics.add(&ctx.metrics.shed_deadline, 1);
+        ctx.refresh_health();
+        return Err(deadline.to_error());
+    };
+    let rx = ctx.batcher.submit(parsed.view, parsed.rows, Some(deadline));
+    let (proj, generation) = match rx.recv_timeout(wait_budget) {
+        Ok(Ok(result)) => {
+            ctx.breaker.record_success();
+            ctx.refresh_health();
+            result
+        }
+        Ok(Err(e)) => {
+            match &e {
+                // Infrastructure failures feed the breaker; a client that
+                // out-waited its own budget (504) or mis-sized its rows
+                // against a fresh model (422) is not a sick server — but
+                // any answer at all is proof of a live batcher, which is
+                // what a half-open probe exists to establish.
+                ServeError::Internal(_) | ServeError::Model(_) => {
+                    ctx.breaker.record_failure();
+                }
+                ServeError::DeadlineExceeded { .. } => {
+                    ctx.metrics.add(&ctx.metrics.shed_deadline, 1);
+                    if is_probe {
+                        ctx.breaker.record_success();
+                    }
+                }
+                _ => {
+                    if is_probe {
+                        ctx.breaker.record_success();
+                    }
+                }
+            }
+            ctx.refresh_health();
+            return Err(e);
+        }
         Err(mpsc::RecvTimeoutError::Timeout) => {
-            return Err(ServeError::Internal("batcher timed out".to_string()))
+            // The batcher outlived this request's budget (stall, overload):
+            // answer 504 now; the batcher drops the reply into a dead
+            // channel later. Not a breaker failure for normal requests —
+            // consecutive *errors*, not slow batches, open it — but an
+            // unanswered probe cannot prove recovery, so it re-opens.
+            if is_probe {
+                ctx.breaker.record_failure();
+            }
+            ctx.metrics.add(&ctx.metrics.shed_deadline, 1);
+            ctx.refresh_health();
+            return Err(deadline.to_error());
         }
         Err(mpsc::RecvTimeoutError::Disconnected) => {
+            ctx.breaker.record_failure();
+            ctx.refresh_health();
             return Err(ServeError::Internal(
                 "batcher dropped the request".to_string(),
-            ))
+            ));
         }
     };
     Ok(proto::projection_document(parsed.view, &proj, Some(generation)).to_string_compact())

@@ -13,6 +13,7 @@
 use crate::api::{ApiError, FittedModel};
 use crate::util::json::{jarr, jnum, jstr, Json};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// The model currently being served plus its swap generation (1-based,
@@ -27,6 +28,10 @@ pub struct Snapshot {
 pub struct ModelRegistry {
     path: PathBuf,
     current: RwLock<Snapshot>,
+    /// Whether the most recent reload attempt failed. A failed hot-swap
+    /// never stops serving (the pinned generation keeps answering), but it
+    /// must surface: `/healthz` reports `degraded` until a reload succeeds.
+    reload_failed: AtomicBool,
 }
 
 impl ModelRegistry {
@@ -39,6 +44,7 @@ impl ModelRegistry {
                 model: Arc::new(model),
                 generation: 1,
             }),
+            reload_failed: AtomicBool::new(false),
         })
     }
 
@@ -59,13 +65,32 @@ impl ModelRegistry {
     /// Re-read the model document and swap it in. The parse/validate work
     /// happens outside the write lock, so readers only block for the
     /// pointer swap itself; on any error the registry keeps serving the old
-    /// model.
+    /// model (and flags itself degraded until a later reload succeeds).
     pub fn reload(&self) -> Result<Snapshot, ApiError> {
-        let fresh = Arc::new(FittedModel::load(&self.path)?);
+        let fresh = match FittedModel::load(&self.path) {
+            Ok(m) => Arc::new(m),
+            Err(e) => {
+                self.reload_failed.store(true, Ordering::SeqCst);
+                return Err(e);
+            }
+        };
         let mut cur = self.current.write().unwrap();
         cur.model = fresh;
         cur.generation += 1;
+        self.reload_failed.store(false, Ordering::SeqCst);
         Ok(cur.clone())
+    }
+
+    /// True when the most recent reload attempt failed and the registry is
+    /// still serving the pinned generation.
+    pub fn reload_failed(&self) -> bool {
+        self.reload_failed.load(Ordering::SeqCst)
+    }
+
+    /// Record an externally-failed reload (e.g. an injected corrupt-model
+    /// fault that never reached the loader).
+    pub fn mark_reload_failed(&self) {
+        self.reload_failed.store(true, Ordering::SeqCst);
     }
 
     /// Metadata document for `GET /v1/model`.
@@ -157,16 +182,29 @@ mod tests {
         fit_and_save(33, &path);
         let reg = ModelRegistry::open(&path).unwrap();
 
+        assert!(!reg.reload_failed());
+        let original = std::fs::read(&path).unwrap();
         std::fs::write(&path, "{ not json").unwrap();
         let err = reg.reload().unwrap_err();
         assert!(matches!(err, ApiError::Model(_)), "{err}");
-        // Still generation 1, still serving the original model.
+        // Still generation 1, still serving the original model — but the
+        // failure is remembered until a reload succeeds.
         assert_eq!(reg.generation(), 1);
         assert_eq!(reg.snapshot().model.k(), 3);
+        assert!(reg.reload_failed());
+
+        // A healthy document clears the flag.
+        std::fs::write(&path, &original).unwrap();
+        reg.reload().unwrap();
+        assert_eq!(reg.generation(), 2);
+        assert!(!reg.reload_failed());
+        reg.mark_reload_failed();
+        assert!(reg.reload_failed());
 
         std::fs::remove_file(&path).unwrap();
         assert!(matches!(reg.reload().unwrap_err(), ApiError::Io(_)));
-        assert_eq!(reg.generation(), 1);
+        assert_eq!(reg.generation(), 2);
+        assert!(reg.reload_failed());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

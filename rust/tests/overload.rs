@@ -1,0 +1,416 @@
+//! Overload soak: one server under a deterministic chaos plan, driven by
+//! deadline-carrying clients. Every injected fault has a finite budget, so
+//! the contract is checkable end-to-end:
+//!
+//! * every request either succeeds or gets a *typed* overload answer
+//!   (429 retryable / 503 hard / 504 deadline) — never a hang;
+//! * 2xx transform bodies are bitwise equal to an unchaosed reference
+//!   server's answers (chaos degrades availability, never correctness);
+//! * the circuit breaker opens on consecutive batcher failures, answers
+//!   503 while open, and recovers through a half-open probe;
+//! * `/healthz` walks ok → degraded → ok, and a failed hot-swap keeps the
+//!   pinned generation serving;
+//! * the shed counters and chaos-injection count land in the Prometheus
+//!   rendering with exactly the injected totals.
+
+use rcca::chaos::ServePlan;
+use rcca::serve::client::{one_shot, one_shot_retry, HttpClient, Response, RetryPolicy};
+use rcca::serve::{Server, ServerConfig, ServerHandle, ServeMetrics};
+use rcca::util::json::parse;
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Handcrafted `rcca-model-v1` document (k=1, da=2, db=2): projections are
+/// exact dot products, cheap to serve, and identical across servers — the
+/// right substrate for bitwise-equality checks.
+fn write_model(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("rcca_overload_models");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(
+        &path,
+        r#"{"format":"rcca-model-v1","solver":"randomized","k":1,"da":2,"db":2,"lambda_a":0.1,"lambda_b":0.1,"passes":2,"init_passes":0,"sigma":[0.5],"xa":[0.3,0.4],"xb":[0.1,0.2]}"#,
+    )
+    .unwrap();
+    path
+}
+
+struct Rig {
+    handle: ServerHandle,
+    metrics: Arc<ServeMetrics>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl Rig {
+    fn start(name: &str, cfg: ServerConfig) -> Rig {
+        let path = write_model(name);
+        let server = Server::bind(&path, "127.0.0.1:0", cfg).unwrap();
+        let handle = server.handle();
+        let metrics = server.metrics();
+        let thread = Some(std::thread::spawn(move || server.run()));
+        Rig {
+            handle,
+            metrics,
+            thread,
+        }
+    }
+
+    fn addr(&self) -> SocketAddr {
+        self.handle.addr()
+    }
+}
+
+impl Drop for Rig {
+    fn drop(&mut self) {
+        self.handle.shutdown();
+        if let Some(t) = self.thread.take() {
+            t.join().unwrap();
+        }
+    }
+}
+
+/// One request with a deadline header, no retries.
+fn shot(addr: SocketAddr, body: &str, deadline_ms: u64) -> std::io::Result<Response> {
+    HttpClient::connect(addr)?.request_full(
+        "POST",
+        "/v1/transform",
+        Some(body),
+        &[("x-rcca-deadline-ms", deadline_ms.to_string())],
+    )
+}
+
+fn transform_body(i: usize) -> String {
+    // Integer-valued f64s so formatting is identical on every run.
+    let view = if i % 3 == 0 { "b" } else { "a" };
+    format!(
+        r#"{{"view":"{view}","rows":[{{"indices":[0,1],"values":[{}.0,{}.0]}}]}}"#,
+        i,
+        2 * i
+    )
+}
+
+fn healthz(addr: SocketAddr) -> (String, String) {
+    let (status, body) = one_shot(addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let doc = parse(&body).unwrap();
+    (
+        doc.get("status").unwrap().as_str().unwrap().to_string(),
+        doc.get("breaker").unwrap().as_str().unwrap().to_string(),
+    )
+}
+
+/// Value of a Prometheus sample line (exact name + label match).
+fn prom_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find(|l| l.starts_with(name) && l.as_bytes().get(name.len()).map_or(true, |b| *b == b' '))
+        .unwrap_or_else(|| panic!("no sample '{name}' in:\n{text}"))
+        .rsplit(' ')
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap()
+}
+
+#[test]
+fn chaos_soak_sheds_typed_recovers_and_answers_bitwise_clean() {
+    // Reference server: identical model, no chaos.
+    let clean = Rig::start("clean", ServerConfig::default());
+
+    let chaotic = Rig::start(
+        "chaotic",
+        ServerConfig {
+            threads: 4,
+            // Every fault is a finite budget: 2 handler panics, 2 batcher
+            // stalls of 400ms, 3 injected batcher failures, 1 corrupted
+            // hot-swap. Once spent, the server MUST be indistinguishable
+            // from a clean one.
+            chaos: ServePlan::parse(
+                "worker-panic=2,batcher-stall=2x400,batcher-fail=3,corrupt-reload=1",
+            )
+            .unwrap(),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(200),
+            default_deadline: Duration::from_secs(2),
+            ..Default::default()
+        },
+    );
+    let addr = chaotic.addr();
+    let soak_started = Instant::now();
+
+    // Phase 1 — worker panics: the first two transforms hit injected
+    // handler panics. The pool contains them; the client sees a transport
+    // error (closed connection), never a hung read.
+    for i in 0..2 {
+        let err = shot(addr, &transform_body(1), 2_000).unwrap_err();
+        assert!(
+            matches!(
+                err.kind(),
+                std::io::ErrorKind::UnexpectedEof | std::io::ErrorKind::ConnectionReset
+            ),
+            "panic {i}: expected a closed connection, got {err:?}"
+        );
+    }
+    // And the gauges unwound with the panic: nothing leaks.
+    assert_eq!(
+        chaotic
+            .metrics
+            .connections_active
+            .load(std::sync::atomic::Ordering::Relaxed),
+        0
+    );
+
+    // Phase 2 — batcher stalls vs deadlines: two 400ms stalls against
+    // 150ms budgets. Both requests must come back as 504 with the budget
+    // in the body, within ~the stall, not hang for it.
+    for i in 0..2 {
+        let resp = shot(addr, &transform_body(1), 150).unwrap();
+        assert_eq!(resp.status, 504, "stall {i}: {}", resp.body);
+        let doc = parse(&resp.body).unwrap();
+        let err = doc.get("error").unwrap();
+        assert_eq!(err.get("budget_ms").unwrap().as_usize(), Some(150));
+        assert!(err.get("elapsed_ms").unwrap().as_usize().unwrap() >= 150);
+    }
+
+    // Phase 3 — consecutive batcher failures open the breaker. The three
+    // failing requests themselves answer 500 (a real infrastructure
+    // error, honestly reported)...
+    for i in 0..3 {
+        let resp = shot(addr, &transform_body(1), 2_000).unwrap();
+        assert_eq!(resp.status, 500, "fail {i}: {}", resp.body);
+        assert!(resp.body.contains("chaos"), "{}", resp.body);
+    }
+    // ...and the breaker is now open: transforms fast-fail 503 without
+    // touching the batcher, while healthz says degraded.
+    let resp = shot(addr, &transform_body(1), 2_000).unwrap();
+    assert_eq!(resp.status, 503, "{}", resp.body);
+    assert_eq!(healthz(addr), ("degraded".to_string(), "open".to_string()));
+    // Non-transform endpoints keep answering normally throughout.
+    let (status, _) = one_shot(addr, "GET", "/v1/model", None).unwrap();
+    assert_eq!(status, 200);
+
+    // Phase 4 — recovery: after the cooldown, one half-open probe rides
+    // through, succeeds (the failure budget is spent), and closes the
+    // breaker. A retrying client crosses this window on its own.
+    std::thread::sleep(Duration::from_millis(250));
+    let resp = one_shot_retry(
+        addr,
+        "POST",
+        "/v1/transform",
+        Some(&transform_body(1)),
+        &[("x-rcca-deadline-ms", "2000".to_string())],
+        &RetryPolicy {
+            attempts: 5,
+            base_backoff: Duration::from_millis(100),
+            max_backoff: Duration::from_millis(500),
+            request_timeout: Duration::from_secs(5),
+            seed: 7,
+        },
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert_eq!(healthz(addr), ("ok".to_string(), "closed".to_string()));
+
+    // Phase 5 — bitwise equivalence: with every serving fault spent, the
+    // chaosed server's 200s match the clean server's byte for byte.
+    for i in 0..16 {
+        let body = transform_body(i);
+        let want = shot(clean.addr(), &body, 2_000).unwrap();
+        let got = shot(addr, &body, 2_000).unwrap();
+        assert_eq!(want.status, 200, "clean {i}: {}", want.body);
+        assert_eq!(got.status, 200, "chaotic {i}: {}", got.body);
+        assert_eq!(got.body, want.body, "request {i} diverged under chaos");
+    }
+
+    // Phase 6 — failed hot-swap: the injected corrupt reload answers 409,
+    // healthz degrades, but the pinned generation keeps serving bitwise
+    // clean. A real reload then clears the flag and bumps the generation.
+    let (status, body) = one_shot(addr, "POST", "/admin/reload", None).unwrap();
+    assert_eq!(status, 409, "{body}");
+    assert!(body.contains("chaos"), "{body}");
+    assert_eq!(healthz(addr).0, "degraded");
+    let body = transform_body(3);
+    let want = shot(clean.addr(), &body, 2_000).unwrap();
+    let got = shot(addr, &body, 2_000).unwrap();
+    assert_eq!((got.status, got.body), (want.status, want.body));
+    let (status, body) = one_shot(addr, "POST", "/admin/reload", None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(parse(&body).unwrap().get("generation").unwrap().as_usize(), Some(2));
+    assert_eq!(healthz(addr), ("ok".to_string(), "closed".to_string()));
+
+    // The whole soak is bounded: no phase ever sat on an unbounded wait.
+    assert!(
+        soak_started.elapsed() < Duration::from_secs(30),
+        "soak took {:?}",
+        soak_started.elapsed()
+    );
+
+    // Telemetry: shed counters are labeled by reason, and the injection
+    // counter equals the plan's total budget (2+2+3+1) — proof every
+    // fault fired and none re-fired.
+    let (status, prom) = one_shot(addr, "GET", "/metrics?format=prom", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(prom_value(&prom, "rcca_serve_shed_total{reason=\"deadline\"}") >= 2.0);
+    assert!(prom_value(&prom, "rcca_serve_shed_total{reason=\"breaker\"}") >= 1.0);
+    assert_eq!(prom_value(&prom, "rcca_serve_chaos_injections_total"), 8.0);
+    assert_eq!(prom_value(&prom, "rcca_serve_degraded"), 0.0);
+}
+
+#[test]
+fn concurrency_cap_sheds_429_and_retry_after_crosses_it() {
+    let rig = Rig::start(
+        "inflight",
+        ServerConfig {
+            threads: 4,
+            // One transform slot; one 600ms batcher stall to pin it.
+            transform_inflight: 1,
+            chaos: ServePlan::parse("batcher-stall=1x600").unwrap(),
+            default_deadline: Duration::from_secs(3),
+            ..Default::default()
+        },
+    );
+    let addr = rig.addr();
+
+    // Client A occupies the only slot for ~600ms (stalled batch).
+    let a = std::thread::spawn(move || shot(addr, &transform_body(1), 3_000).unwrap());
+    std::thread::sleep(Duration::from_millis(150));
+
+    // Client B, no retries: the cap sheds it with a 429 + Retry-After.
+    let resp = shot(addr, &transform_body(2), 3_000).unwrap();
+    assert_eq!(resp.status, 429, "{}", resp.body);
+    assert!(resp.retry_after.is_some(), "429 must carry Retry-After");
+    let doc = parse(&resp.body).unwrap();
+    assert!(doc.get("error").unwrap().get("retry_after_secs").is_some());
+
+    // Client C, with retries honoring Retry-After: it lands once the slot
+    // frees — the advertised delay is an instruction that works.
+    let resp = one_shot_retry(
+        addr,
+        "POST",
+        "/v1/transform",
+        Some(&transform_body(4)),
+        &[],
+        &RetryPolicy {
+            attempts: 6,
+            base_backoff: Duration::from_millis(100),
+            max_backoff: Duration::from_secs(1),
+            request_timeout: Duration::from_secs(5),
+            seed: 3,
+        },
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+
+    let a = a.join().unwrap();
+    assert_eq!(a.status, 200, "pinned client must still finish: {}", a.body);
+    assert!(
+        rig.metrics
+            .shed_concurrency
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= 1
+    );
+}
+
+#[test]
+fn full_accept_queue_sheds_429_with_retry_after_not_a_stall() {
+    let rig = Rig::start(
+        "queue",
+        ServerConfig {
+            // One worker, one queue slot: the third concurrent connection
+            // must be turned away at accept time.
+            threads: 1,
+            queue_capacity: 1,
+            chaos: ServePlan::parse("batcher-stall=1x700").unwrap(),
+            default_deadline: Duration::from_secs(3),
+            ..Default::default()
+        },
+    );
+    let addr = rig.addr();
+
+    // A pins the only worker inside a stalled transform...
+    let a = std::thread::spawn(move || shot(addr, &transform_body(1), 3_000).unwrap());
+    std::thread::sleep(Duration::from_millis(150));
+    // ...B occupies the one queue slot (connects, then waits its turn)...
+    let b = std::thread::spawn(move || one_shot(addr, "GET", "/healthz", None).unwrap());
+    std::thread::sleep(Duration::from_millis(150));
+
+    // ...so C is shed at the accept loop: immediate 429 + Retry-After,
+    // written before any worker is involved.
+    let started = Instant::now();
+    let resp = HttpClient::connect(addr)
+        .unwrap()
+        .request_full("GET", "/healthz", None, &[])
+        .unwrap();
+    assert_eq!(resp.status, 429, "{}", resp.body);
+    assert!(resp.retry_after.is_some());
+    assert!(
+        started.elapsed() < Duration::from_secs(1),
+        "queue shed must not wait on a worker, took {:?}",
+        started.elapsed()
+    );
+
+    assert_eq!(a.join().unwrap().status, 200);
+    assert_eq!(b.join().unwrap().0, 200);
+    assert!(
+        rig.metrics
+            .shed_queue
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= 1
+    );
+}
+
+#[test]
+fn torn_write_chaos_surfaces_as_transport_error_then_full_recovery() {
+    let rig = Rig::start(
+        "torn",
+        ServerConfig {
+            chaos: ServePlan::parse("torn-write=1").unwrap(),
+            ..Default::default()
+        },
+    );
+    let addr = rig.addr();
+
+    // The first request's response is torn mid-status-line and the socket
+    // hard-closed: the client must see a transport error, not a hang and
+    // not a parseable (wrong) response.
+    let err = shot(addr, &transform_body(1), 2_000).unwrap_err();
+    assert!(
+        matches!(
+            err.kind(),
+            std::io::ErrorKind::UnexpectedEof
+                | std::io::ErrorKind::ConnectionReset
+                | std::io::ErrorKind::InvalidData
+        ),
+        "{err:?}"
+    );
+
+    // Budget spent: the very next request is whole.
+    let resp = shot(addr, &transform_body(1), 2_000).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+}
+
+#[test]
+fn stall_read_chaos_burns_the_budget_into_a_504() {
+    let rig = Rig::start(
+        "stallread",
+        ServerConfig {
+            chaos: ServePlan::parse("stall-read=1x500").unwrap(),
+            default_deadline: Duration::from_secs(2),
+            ..Default::default()
+        },
+    );
+    let addr = rig.addr();
+
+    // The injected 500ms read stall consumes a 200ms budget: the request
+    // is shed 504 *before* dispatch (no work done for a dead deadline).
+    let resp = shot(addr, &transform_body(1), 200).unwrap();
+    assert_eq!(resp.status, 504, "{}", resp.body);
+    let err = parse(&resp.body).unwrap().get("error").unwrap().clone();
+    assert_eq!(err.get("budget_ms").unwrap().as_usize(), Some(200));
+
+    // Budget spent → clean 200.
+    let resp = shot(addr, &transform_body(1), 2_000).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+}

@@ -456,3 +456,209 @@ fn cli_shard_info_reports_health_and_gates_on_corruption() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("CORRUPT") || text.contains("MISMATCH"), "{text}");
 }
+
+// ---------------------------------------------------------------------------
+// Hostile HTTP input against a live server: every malformed, trickled, or
+// torn request must end in a typed error response (or a clean close) within
+// a bounded time — never a hung worker. Each test finishes by proving the
+// server still answers a healthy request.
+
+mod hostile_serve {
+    use super::model_doc;
+    use rcca::serve::{Server, ServerConfig, ServerHandle};
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::thread::JoinHandle;
+    use std::time::{Duration, Instant};
+
+    /// A server with tight budgets (600ms deadline ceiling, 1s socket read
+    /// timeout, 4KB body cap) over the handcrafted 2x2 model — small enough
+    /// that every hostile outcome lands within a couple of seconds.
+    fn start(name: &str) -> (ServerHandle, JoinHandle<()>) {
+        let dir = std::env::temp_dir().join("rcca_rejection_hostile");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{name}.json"));
+        std::fs::write(&path, model_doc("rcca-model-v1", "[0.3,0.4]")).unwrap();
+        let cfg = ServerConfig {
+            threads: 3,
+            max_body_bytes: 4096,
+            read_timeout: Duration::from_secs(1),
+            default_deadline: Duration::from_millis(400),
+            max_deadline: Duration::from_millis(600),
+            ..Default::default()
+        };
+        let server = Server::bind(&path, "127.0.0.1:0", cfg).unwrap();
+        let handle = server.handle();
+        let thread = std::thread::spawn(move || server.run());
+        (handle, thread)
+    }
+
+    fn raw_connect(h: &ServerHandle) -> TcpStream {
+        let s = TcpStream::connect(h.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.set_nodelay(true).unwrap();
+        s
+    }
+
+    /// Drain whatever the server sends until it closes the connection (or
+    /// the client-side 5s timeout proves it hung, failing the caller's
+    /// bounded-time assertion).
+    fn read_all(s: &mut TcpStream) -> String {
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        String::from_utf8_lossy(&buf).into_owned()
+    }
+
+    /// The server is still healthy: a fresh connection gets a 200 healthz.
+    fn assert_alive(h: &ServerHandle) {
+        let (status, body) = rcca::serve::client::one_shot(h.addr(), "GET", "/healthz", None)
+            .expect("server must accept a fresh connection after hostile input");
+        assert_eq!(status, 200, "{body}");
+    }
+
+    fn stop(h: ServerHandle, t: JoinHandle<()>) {
+        h.shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn slow_loris_headers_answer_504_within_the_budget() {
+        let (h, t) = start("loris_head");
+        let mut s = raw_connect(&h);
+        let started = Instant::now();
+        // Drip a prefix of the request head one byte at a time, then go
+        // silent with the request unfinished: the 600ms budget expires
+        // while the server waits, and the next socket-timeout tick turns
+        // into the 504. (Going silent — rather than dripping until the
+        // reply lands — avoids racing a write against the server's close,
+        // which could RST away the response before we read it.)
+        for b in b"POST /v1/transform HTTP/1.1\r\nconte" {
+            s.write_all(&[*b]).unwrap();
+            std::thread::sleep(Duration::from_millis(12));
+        }
+        let reply = read_all(&mut s);
+        assert!(
+            reply.starts_with("HTTP/1.1 504"),
+            "expected a 504 for a trickled head, got: {reply:?}"
+        );
+        assert!(reply.contains("budget_ms"), "{reply}");
+        assert!(
+            started.elapsed() < Duration::from_secs(5),
+            "loris must be shed within the budget, took {:?}",
+            started.elapsed()
+        );
+        assert_alive(&h);
+        stop(h, t);
+    }
+
+    #[test]
+    fn slow_loris_body_answers_504_within_the_budget() {
+        let (h, t) = start("loris_body");
+        let mut s = raw_connect(&h);
+        let started = Instant::now();
+        s.write_all(
+            b"POST /v1/transform HTTP/1.1\r\ncontent-type: application/json\r\ncontent-length: 100\r\n\r\n",
+        )
+        .unwrap();
+        // Trickle a fraction of the declared 100-byte body, then go silent
+        // (see the head-loris test for why silence, not endless dripping).
+        for _ in 0..10 {
+            s.write_all(b"x").unwrap();
+            std::thread::sleep(Duration::from_millis(12));
+        }
+        let reply = read_all(&mut s);
+        assert!(
+            reply.starts_with("HTTP/1.1 504"),
+            "expected a 504 for a trickled body, got: {reply:?}"
+        );
+        assert!(
+            started.elapsed() < Duration::from_secs(5),
+            "body loris must be shed within the budget, took {:?}",
+            started.elapsed()
+        );
+        assert_alive(&h);
+        stop(h, t);
+    }
+
+    #[test]
+    fn oversized_declared_body_is_413_and_close() {
+        let (h, t) = start("oversize");
+        let mut s = raw_connect(&h);
+        // Declare far beyond the 4KB cap; never send a byte of body — the
+        // rejection must come from the declaration alone.
+        s.write_all(
+            b"POST /v1/transform HTTP/1.1\r\ncontent-type: application/json\r\ncontent-length: 100000\r\n\r\n",
+        )
+        .unwrap();
+        let reply = read_all(&mut s);
+        assert!(reply.starts_with("HTTP/1.1 413"), "{reply:?}");
+        assert!(reply.contains("100000"), "{reply}");
+        assert_alive(&h);
+        stop(h, t);
+    }
+
+    #[test]
+    fn content_length_mismatch_is_typed_not_hung() {
+        let (h, t) = start("mismatch");
+        // Under-declare: 5 bytes of a 50-byte JSON body. The server parses
+        // the 5-byte prefix (not JSON → 400) and the trailing garbage can
+        // at worst produce another 400 before the connection dies.
+        let mut s = raw_connect(&h);
+        let body = br#"{"view":"a","rows":[{"indices":[0],"values":[1.0]}]}"#;
+        let head = format!(
+            "POST /v1/transform HTTP/1.1\r\ncontent-type: application/json\r\ncontent-length: 5\r\n\r\n"
+        );
+        s.write_all(head.as_bytes()).unwrap();
+        s.write_all(body).unwrap();
+        let started = Instant::now();
+        let reply = read_all(&mut s);
+        assert!(reply.starts_with("HTTP/1.1 400"), "{reply:?}");
+        assert!(started.elapsed() < Duration::from_secs(5));
+        assert_alive(&h);
+        stop(h, t);
+    }
+
+    #[test]
+    fn mid_body_disconnect_closes_cleanly_and_frees_the_worker() {
+        let (h, t) = start("disconnect");
+        for round in 0..3 {
+            let mut s = raw_connect(&h);
+            s.write_all(
+                b"POST /v1/transform HTTP/1.1\r\ncontent-type: application/json\r\ncontent-length: 50\r\n\r\n",
+            )
+            .unwrap();
+            s.write_all(b"{\"view\"").unwrap();
+            // Half-close the write side: the server's body read sees EOF
+            // (a typed error), not a stall until the socket timeout.
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            let started = Instant::now();
+            let reply = read_all(&mut s);
+            // No response is owed to a peer that hung up mid-request; what
+            // matters is the bounded close and the free worker.
+            assert!(
+                reply.is_empty() || reply.starts_with("HTTP/1.1"),
+                "round {round}: {reply:?}"
+            );
+            assert!(
+                started.elapsed() < Duration::from_secs(3),
+                "round {round}: close must be prompt, took {:?}",
+                started.elapsed()
+            );
+        }
+        // Three abandoned requests on a 3-thread server: if any worker
+        // were hung, this healthz would be queued behind it.
+        assert_alive(&h);
+        stop(h, t);
+    }
+
+    #[test]
+    fn garbage_request_line_is_400_and_close() {
+        let (h, t) = start("garbage");
+        let mut s = raw_connect(&h);
+        s.write_all(b"\x00\x01\x02 utter nonsense\r\n\r\n").unwrap();
+        let reply = read_all(&mut s);
+        assert!(reply.starts_with("HTTP/1.1 400"), "{reply:?}");
+        assert_alive(&h);
+        stop(h, t);
+    }
+}
